@@ -1,0 +1,72 @@
+//! Device-placement exploration (paper Sec. III-B2, Fig. 5).
+//!
+//! On the rigid 2D mesh, placements trade MP vs DP vs PP congestion; on
+//! FRED, the paper's MP-consecutive placement is congestion-free and
+//! random placements barely hurt. This example quantifies both, and also
+//! verifies switch-level routability of the placement's concurrent flows
+//! (Sec. V-C).
+//!
+//! Run: `cargo run --release --example placement_explorer`
+
+use fred::coordinator::config::FabricKind;
+use fred::coordinator::parallelism::Strategy;
+use fred::coordinator::placement::{Placement, Priority};
+use fred::fabric::fred::{FredFabric, FredVariant};
+use fred::fabric::mesh::Mesh2D;
+use fred::util::prng::Xorshift64;
+
+fn main() {
+    println!("== placement exploration: MP(2)-DP(4)-PP(2) (Fig. 5) ==\n");
+    let strategy = Strategy::new(2, 4, 2);
+    let bytes = 100e6;
+
+    for kind in [FabricKind::Baseline, FabricKind::FredD] {
+        let fabric = kind.build();
+        let mesh = kind.is_mesh().then(Mesh2D::paper_baseline);
+        println!("--- {} ---", kind.name());
+
+        // The three dimension-priority placements (Fig. 5's trade-off).
+        let order: Vec<usize> = match &mesh {
+            Some(m) => m.snake_cycle(),
+            None => (0..20).collect(),
+        };
+        for (name, prio) in [
+            ("MP>PP>DP (paper)", Priority::MpPpDp),
+            ("MP>DP>PP", Priority::MpDpPp),
+            ("DP>PP>MP", Priority::DpPpMp),
+        ] {
+            let p = Placement::by_priority(&strategy, prio, &order);
+            let score = p.congestion_score(fabric.as_ref(), &strategy, bytes);
+            println!("  {name:<18} congestion score {:.3} ms", score * 1e3);
+        }
+
+        // Random placements.
+        let mut rng = Xorshift64::new(7);
+        let mut best = f64::INFINITY;
+        let mut worst: f64 = 0.0;
+        let mut sum = 0.0;
+        let n = 50;
+        for _ in 0..n {
+            let p = Placement::random(&strategy, 20, &mut rng);
+            let s = p.congestion_score(fabric.as_ref(), &strategy, bytes);
+            best = best.min(s);
+            worst = worst.max(s);
+            sum += s;
+        }
+        println!(
+            "  {n} random placements: best {:.3} / mean {:.3} / worst {:.3} ms\n",
+            best * 1e3,
+            sum / n as f64 * 1e3,
+            worst * 1e3
+        );
+    }
+
+    // Switch-level routability under the paper placement (Sec. V-C).
+    let fabric = FredFabric::paper(FredVariant::D);
+    let mp_phase = vec![(vec![0usize, 1], false), (vec![2usize, 3], false)];
+    let dp_phase: Vec<(Vec<usize>, bool)> =
+        (0..4).map(|i| (vec![i], true)).collect();
+    println!("switch-level routability on L1_0 (FRED_3, MP-consecutive placement):");
+    println!("  MP phase flows route: {}", fabric.switch_flows_route(0, &mp_phase, 3).is_ok());
+    println!("  DP phase flows route: {}", fabric.switch_flows_route(0, &dp_phase, 3).is_ok());
+}

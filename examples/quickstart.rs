@@ -1,0 +1,62 @@
+//! Quickstart: the public API in ~60 lines.
+//!
+//! Builds the paper's wafer in both fabrics, runs one wafer-wide
+//! All-Reduce through each, prints the Fig. 9-style effective bandwidth,
+//! and (if `make artifacts` has run) executes the AOT smoke artifact via
+//! PJRT to prove the Rust↔XLA path.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use fred::coordinator::config::FabricKind;
+use fred::fabric::topology::CollectiveKind;
+use fred::runtime::{Engine, HostTensor};
+use fred::util::units::fmt_bw;
+
+fn main() {
+    println!("== FRED quickstart ==\n");
+
+    // 1. Fabrics at the paper's Table II/IV operating points.
+    let all: Vec<usize> = (0..20).collect();
+    let payload = 1e9; // 1 GB per NPU
+    println!("wafer-wide All-Reduce, 1 GB per NPU (Fig. 9 left):");
+    for kind in FabricKind::all() {
+        let fabric = kind.build();
+        let plan = fabric.plan_collective(CollectiveKind::AllReduce, &all, payload);
+        let t = fabric.run_plan(&plan);
+        let bw = fred::fabric::collectives::endpoint_send_bytes(
+            CollectiveKind::AllReduce,
+            all.len(),
+            payload,
+        ) / t;
+        println!(
+            "  {:<9} {:>9.3} ms   effective NPU BW {}",
+            kind.name(),
+            t * 1e3,
+            fmt_bw(bw)
+        );
+    }
+
+    // 2. Switch-level routing: the Fig. 7(j) conflict and its m=3 fix.
+    use fred::fabric::fred::{route_flows, Flow};
+    let flows = vec![
+        Flow::all_reduce(vec![1, 2]),
+        Flow::all_reduce(vec![3, 4]),
+        Flow::all_reduce(vec![5, 0]),
+        Flow::all_reduce(vec![6, 7]),
+    ];
+    println!("\nFig. 7(j) flow set on FRED_2(8): {:?}", route_flows(8, 2, &flows).err().map(|e| e.to_string()));
+    println!("same flows on FRED_3(8):        routed = {}", route_flows(8, 3, &flows).is_ok());
+
+    // 3. The AOT/PJRT path (needs `make artifacts`).
+    match Engine::new(std::path::Path::new("artifacts")) {
+        Ok(mut eng) => {
+            println!("\nPJRT platform: {}", eng.platform());
+            let smoke = eng.artifact("smoke").expect("compile smoke artifact");
+            let x = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+            let y = HostTensor::F32(vec![1.0; 4], vec![2, 2]);
+            let out = smoke.run(&[x, y]).expect("execute");
+            println!("smoke artifact: x@y+2 = {:?} (expect [5,5,9,9])", out[0].as_f32().unwrap());
+        }
+        Err(e) => println!("\n(artifacts not built; skipping PJRT demo: {e})"),
+    }
+}

@@ -1,0 +1,69 @@
+//! Weight streaming on the wafer (paper Sec. III-A, Fig. 4, Sec. VIII).
+//!
+//! Reproduces the I/O analysis end to end: the mesh's (2N−1)·P hotspot
+//! derates its channels to 0.65× line rate, while FRED streams at full
+//! rate — then shows what that does to GPT-3 and Transformer-1T
+//! iterations.
+//!
+//! Run: `cargo run --release --example weight_streaming`
+
+use fred::coordinator::config::FabricKind;
+use fred::coordinator::metrics::CommType;
+use fred::coordinator::sim::Simulator;
+use fred::coordinator::workload;
+use fred::fabric::mesh::Mesh2D;
+use fred::fabric::topology::IoDirection;
+
+fn main() {
+    println!("== weight streaming on the wafer ==\n");
+
+    // Fig. 4: channel-load analysis.
+    let mesh = Mesh2D::paper_baseline();
+    let (max_load, _) = mesh.channel_load_analysis();
+    println!(
+        "mesh {}x{}: hotspot link carries {} concurrent streams (2N-1 = {})",
+        mesh.rows(),
+        mesh.cols(),
+        max_load,
+        2 * mesh.rows() - 1
+    );
+    println!(
+        "=> effective I/O line rate: {:.1}% (paper: 750/1152 = 65%)\n",
+        100.0 * mesh.io_line_rate_factor()
+    );
+
+    // Raw stream of one GPT-3 layer-pair (7.25 GB) on each fabric.
+    let all: Vec<usize> = (0..20).collect();
+    let bytes = 7.25e9;
+    println!("streaming a 7.25 GB layer group (GPT-3, PP=2):");
+    for kind in [FabricKind::Baseline, FabricKind::FredC, FabricKind::FredD] {
+        let f = kind.build();
+        let t_in = f.run_plan(&f.plan_io_stream(IoDirection::Broadcast, bytes, &all));
+        let t_out = f.run_plan(&f.plan_io_stream(IoDirection::ReduceOut, bytes, &all));
+        println!(
+            "  {:<9} weights in {:>7.2} ms | gradients out {:>7.2} ms",
+            kind.name(),
+            t_in * 1e3,
+            t_out * 1e3
+        );
+    }
+
+    // End-to-end: the two weight-streaming workloads.
+    for w in [workload::gpt3(), workload::transformer_1t()] {
+        println!("\n{} ({}):", w.name, w.default_strategy);
+        let mut base = None;
+        for kind in [FabricKind::Baseline, FabricKind::FredC, FabricKind::FredD] {
+            let sim = Simulator::new(kind, w.clone(), w.default_strategy);
+            let b = sim.iterate();
+            let total = b.total();
+            let speedup = base.get_or_insert(total).max(0.0) / total;
+            println!(
+                "  {:<9} total {:>8.3} s | stream exposed {:>8.3} s | speedup {speedup:.2}x",
+                kind.name(),
+                total,
+                b.get(CommType::Stream),
+            );
+        }
+    }
+    println!("\npaper Fig. 10: GPT-3 1.34x, Transformer-1T 1.4x");
+}

@@ -1,0 +1,161 @@
+"""AOT compiler: lower the L2 entry points to HLO **text** + a manifest.
+
+This is the one place python runs — at build time (`make artifacts`). It
+lowers each entry point with fixed example shapes and writes:
+
+* ``artifacts/<name>.hlo.txt`` — HLO text (NOT a serialized
+  HloModuleProto: jax >= 0.5 emits 64-bit instruction ids that the xla
+  crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+  round-trips cleanly — see /opt/xla-example/README.md).
+* ``artifacts/manifest.json`` — the argument-order contract with the Rust
+  runtime: flattened parameter names/shapes/dtypes, per-artifact
+  input/output signatures, model hyper-parameters, trainer constants.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--config small|large]
+                          [--dp 4] [--bucket 262144] [--steps-check]
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.flow_reduce import flow_reduce
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_str(x) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32",
+            "bfloat16": "bf16", "float16": "f16"}[str(x.dtype)]
+
+
+def _sig(tree):
+    """Flatten a pytree of arrays into the manifest signature list, in jax
+    tree order — the exact order of XLA computation parameters."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        name = "/".join(
+            str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
+            for p in path
+        )
+        out.append({"name": name or "arg",
+                    "shape": list(leaf.shape),
+                    "dtype": _dtype_str(leaf)})
+    return out
+
+
+def lower_artifact(fn, example_args, name, out_dir, manifest):
+    """Lower ``fn(*example_args)`` and record it in the manifest."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    out_shapes = jax.eval_shape(fn, *example_args)
+    manifest["artifacts"][name] = {
+        "file": f"{name}.hlo.txt",
+        "inputs": _sig(example_args),
+        "outputs": _sig(out_shapes),
+    }
+    print(f"  {name}: {len(text)/1e6:.2f} MB HLO, "
+          f"{len(manifest['artifacts'][name]['inputs'])} inputs, "
+          f"{len(manifest['artifacts'][name]['outputs'])} outputs")
+    return path
+
+
+def build(out_dir: str, cfg: M.ModelConfig, dp: int, bucket: int,
+          seed: int = 0) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "model": dataclasses.asdict(cfg),
+        "trainer": {"dp": dp, "bucket": bucket},
+        "artifacts": {},
+        "params": None,
+    }
+
+    params = M.init_params(cfg, seed)
+    manifest["params"] = _sig(params)
+    tokens = jnp.zeros((cfg.batch, cfg.seq_len + 1), jnp.int32)
+    m = M.zeros_like_tree(params)
+    v = M.zeros_like_tree(params)
+    step = jnp.float32(1.0)
+
+    print(f"lowering artifacts to {out_dir} "
+          f"(model: {cfg.param_count()/1e6:.2f}M params, dp={dp}, bucket={bucket})")
+
+    # Per-worker fwd+bwd — the DP trainer's compute hot path.
+    lower_artifact(
+        lambda p, t: M.grad_step(cfg, p, t),
+        (params, tokens), "grad_step", out_dir, manifest)
+
+    # Optimizer applied after fabric reduction.
+    lower_artifact(
+        M.adamw_update,
+        (params, params, m, v, step), "adamw_update", out_dir, manifest)
+
+    # Fused single-worker step (quickstart + compute-time calibration).
+    lower_artifact(
+        lambda p, m_, v_, s, t: M.train_step(cfg, p, m_, v_, s, t),
+        (params, m, v, step, tokens), "train_step", out_dir, manifest)
+
+    # The in-network reduction flows: [dp, bucket] -> [dp, bucket].
+    flows = jnp.zeros((dp, bucket), jnp.float32)
+    lower_artifact(
+        lambda x: flow_reduce(x, op="mean"),
+        (flows,), "flow_reduce_mean", out_dir, manifest)
+    lower_artifact(
+        lambda x: flow_reduce(x, op="sum"),
+        (flows,), "flow_reduce_sum", out_dir, manifest)
+
+    # Tiny smoke artifact for runtime self-tests: (x, y) -> (x @ y + 2,).
+    lower_artifact(
+        lambda x, y: (jnp.matmul(x, y) + 2.0,),
+        (jnp.zeros((2, 2), jnp.float32), jnp.zeros((2, 2), jnp.float32)),
+        "smoke", out_dir, manifest)
+
+    # Initial values the Rust trainer starts from (so Rust needs no RNG /
+    # initializer logic): raw little-endian f32 dump in manifest order.
+    init_path = os.path.join(out_dir, "init_params.bin")
+    with open(init_path, "wb") as f:
+        for _, leaf in M.param_leaves(params):
+            import numpy as np
+            f.write(np.asarray(leaf, dtype=np.float32).tobytes())
+    print(f"  init_params.bin: {os.path.getsize(init_path)/1e6:.2f} MB")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("  manifest.json written")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--config", choices=["small", "large"], default="small")
+    ap.add_argument("--dp", type=int, default=4,
+                    help="data-parallel width baked into flow_reduce")
+    ap.add_argument("--bucket", type=int, default=1 << 18,
+                    help="gradient bucket size (f32 elements)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = M.LARGE if args.config == "large" else M.ModelConfig()
+    build(args.out_dir, cfg, args.dp, args.bucket, args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""L1 Pallas kernel: MXU-shaped blocked matmul — the NPU compute hot-spot.
+
+The paper's NPUs spend their time between communication phases on dense
+layer compute (Table II: 1000 TFLOPS fp16). The hot-spot is the matmul; we
+express it as a Pallas kernel so the same code object is (a) the unit the
+L2 model lowers into its HLO, and (b) the thing whose VMEM/MXU structure we
+reason about for the perf contract.
+
+Hardware adaptation (GPU paper -> TPU kernel, DESIGN.md §Hardware-
+Adaptation): instead of threadblock tiles + shared memory we use
+``BlockSpec`` tiles sized to the MXU systolic array — 128x128 output tiles
+with a K-striding grid axis, fp32 accumulation in the output ref. The grid
+order (k innermost) makes the accumulation a legal revisiting schedule and
+lets Pallas double-buffer the HBM->VMEM streams of the x/w tiles.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are validated against `ref.matmul_ref` by pytest.
+
+The kernel is wrapped in ``jax.custom_vjp`` so `model.py` can call it under
+``jax.grad``: the backward pass is two more calls of the same kernel
+(dx = g @ w^T, dw = x^T @ g), which mirrors how fwd and bwd GEMMs hit the
+same MXU path on real hardware.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped default tiles (multiples of the 128x128 systolic array).
+# §Perf iteration (EXPERIMENTS.md): 256-cubed tiles keep the per-step VMEM
+# footprint at 1.3 MB (within the 4 MB budget) while quartering the grid
+# step count — 4.0x faster under interpret=True (4.45 -> 1.12 s/grad_step)
+# and fewer HBM<->VMEM round-trips on real hardware. 512 would be ~1.3x
+# faster still but blows the VMEM budget (5.2 MB).
+BM, BN, BK = 256, 256, 256
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """Grid step (i, j, k): o[i,j] += x[i,k] @ w[k,j], fp32 accumulate."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(
+        x, w, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _matmul_raw(x, w, bm, bn, bk):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+
+    def pad2(a, b0, b1):
+        p0 = (-a.shape[0]) % b0
+        p1 = (-a.shape[1]) % b1
+        if p0 or p1:
+            a = jnp.pad(a, ((0, p0), (0, p1)))
+        return a
+
+    xp = pad2(x, bm, bk)
+    wp = pad2(w, bk, bn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n].astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def matmul(x, w, bm=BM, bn=BN, bk=BK):
+    """``x @ w`` through the Pallas kernel, differentiable.
+
+    Shapes need not be tile multiples (the wrapper pads — static under
+    jit). Accumulation is fp32; output dtype follows ``x``.
+    """
+    return _matmul_raw(x, w, bm, bn, bk)
+
+
+def _matmul_fwd(x, w, bm, bn, bk):
+    return _matmul_raw(x, w, bm, bn, bk), (x, w)
+
+
+def _matmul_bwd(bm, bn, bk, res, g):
+    x, w = res
+    dx = _matmul_raw(g, w.T, bm, bn, bk)
+    dw = _matmul_raw(x.T, g, bm, bn, bk)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int,
+                             bm: int = BM, bn: int = BN, bk: int = BK) -> float:
+    """Fraction of MXU issue slots doing useful work = real FLOPs over
+    padded-tile FLOPs. 1.0 when every dim divides its tile."""
+    ceil = lambda a, b: -(-a // b)
+    padded = (ceil(m, bm) * bm) * (ceil(n, bn) * bn) * (ceil(k, bk) * bk)
+    return (m * n * k) / padded
+
+
+def vmem_footprint_bytes(bm: int = BM, bn: int = BN, bk: int = BK,
+                         dtype_bytes: int = 4) -> int:
+    """VMEM bytes live per grid step: x tile + w tile + fp32 out tile,
+    x2 for double buffering of the streamed inputs."""
+    return 2 * (bm * bk + bk * bn) * dtype_bytes + bm * bn * 4

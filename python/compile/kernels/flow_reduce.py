@@ -1,0 +1,130 @@
+"""L1 Pallas kernel: the FRED flow (reduce-then-broadcast) dataflow.
+
+A FRED *flow* (paper Sec. V-A) reduces the data arriving on a set of input
+ports and broadcasts the result to a set of output ports; the R-/D-/RD-
+muSwitches implement it as a tree of 2x2 reduce/broadcast elements inside
+the switch. As a kernel the same dataflow is: stack the P port buffers into
+``[P, N]``, tree-reduce across the port axis in fp32 (the adder datapath),
+broadcast back to all ports.
+
+Hardware adaptation (paper targets a wafer of GPU-like NPUs; we think in
+TPU/Pallas terms per DESIGN.md §Hardware-Adaptation): the port axis stays
+resident while the element axis is tiled through VMEM via the grid —
+``BlockSpec((P, block_n), lambda i: (0, i))`` expresses the HBM->VMEM
+streaming schedule that the switch realizes with per-port SRAM buffers
+(24 KB/port in Table III). Reduction across P is a vectorized column sum
+(VPU work, no MXU involvement), matching the switch's adder trees.
+
+Pallas is always invoked with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls (see /opt/xla-example/README.md), and
+the correctness contract is checked against `ref.py` by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default element-axis tile. With P <= 32 ports and fp32 the live block
+# (P * BLOCK_N * 4 B * 2 buffers) stays within a 4 MB VMEM budget:
+# 32 * 32768 * 4 * 2 = 8 MB at P=32 but 1.05 MB at the wafer's P=4 DP
+# width. §Perf iteration (EXPERIMENTS.md): 2048 -> 32768 cut the grid step
+# count 16x and the interpret-mode reduction from 123 ms to 12.6 ms per
+# 1 MB bucket (the wrapper clamps block_n to N, so small inputs are
+# unaffected); larger tiles (131072) exceed the VMEM budget at P >= 8.
+DEFAULT_BLOCK_N = 32768
+
+
+def _flow_reduce_kernel(x_ref, o_ref, *, mean: bool):
+    """One grid step: reduce a [P, bn] tile across ports, broadcast back."""
+    x = x_ref[...].astype(jnp.float32)
+    acc = jnp.sum(x, axis=0, keepdims=True)
+    if mean:
+        acc = acc / x.shape[0]
+    o_ref[...] = jnp.broadcast_to(acc, o_ref.shape).astype(o_ref.dtype)
+
+
+def _reduce_kernel(x_ref, o_ref, *, mean: bool):
+    """Reduce-only variant (|OPs| = 1): [P, bn] tile -> [bn]."""
+    x = x_ref[...].astype(jnp.float32)
+    acc = jnp.sum(x, axis=0)
+    if mean:
+        acc = acc / x.shape[0]
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _pad_to_multiple(x, block_n):
+    n = x.shape[-1]
+    rem = n % block_n
+    if rem == 0:
+        return x, n
+    pad = block_n - rem
+    return jnp.pad(x, ((0, 0), (0, pad))), n
+
+
+def auto_block_n(p: int, budget_bytes: int = 4 << 20) -> int:
+    """Largest power-of-two tile keeping 2*p*block_n*4 B within the VMEM
+    budget, clamped to [2048, DEFAULT_BLOCK_N]."""
+    cap = max(budget_bytes // (2 * 4 * max(p, 1)), 2048)
+    bn = 2048
+    while bn * 2 <= min(cap, DEFAULT_BLOCK_N):
+        bn *= 2
+    return bn
+
+
+@functools.partial(jax.jit, static_argnames=("op", "block_n"))
+def flow_reduce(x, op="sum", block_n=None):
+    """All-Reduce flow: ``[P, N] -> [P, N]`` (IPs = OPs = all ports).
+
+    ``op`` is "sum" or "mean" ("mean" is what the data-parallel trainer
+    wants for gradient averaging). ``N`` need not divide ``block_n``; the
+    wrapper pads (shapes are static under jit, so the padding is free of
+    dynamism).
+    """
+    if op not in ("sum", "mean"):
+        raise ValueError(f"unknown op {op!r}")
+    p, n = x.shape
+    bn = min(block_n or auto_block_n(p), max(n, 1))
+    xp, orig_n = _pad_to_multiple(x, bn)
+    grid = (xp.shape[1] // bn,)
+    out = pl.pallas_call(
+        functools.partial(_flow_reduce_kernel, mean=(op == "mean")),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((p, bn), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((p, bn), lambda i: (0, i)),
+        interpret=True,
+    )(xp)
+    return out[:, :orig_n]
+
+
+@functools.partial(jax.jit, static_argnames=("op", "block_n"))
+def reduce_flow(x, op="sum", block_n=None):
+    """Reduce flow: ``[P, N] -> [N]`` (|OPs| = 1), e.g. gradient
+    reduction toward an I/O controller in weight-streaming mode."""
+    if op not in ("sum", "mean"):
+        raise ValueError(f"unknown op {op!r}")
+    p, n = x.shape
+    bn = min(block_n or auto_block_n(p), max(n, 1))
+    xp, orig_n = _pad_to_multiple(x, bn)
+    grid = (xp.shape[1] // bn,)
+    out = pl.pallas_call(
+        functools.partial(_reduce_kernel, mean=(op == "mean")),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[1],), x.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((p, bn), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        interpret=True,
+    )(xp)
+    return out[:orig_n]
+
+
+def vmem_footprint_bytes(p: int, block_n: int = None,
+                         dtype_bytes: int = 4) -> int:
+    """Analytical VMEM-resident bytes for one grid step (in + out tiles).
+
+    Used by DESIGN.md §Perf / EXPERIMENTS.md §Perf — interpret-mode
+    wallclock is not a TPU proxy, so the perf contract on L1 is structural.
+    """
+    return 2 * p * (block_n or auto_block_n(p)) * dtype_bytes

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness references: pytest (and the hypothesis sweeps)
+assert that every Pallas kernel matches the corresponding function here to
+within dtype tolerance. They are also used by `model.py` as the
+`use_pallas=False` fallback path so the model itself can be tested without
+Pallas in the loop.
+"""
+
+import jax.numpy as jnp
+
+
+def flow_reduce_ref(x, op="sum"):
+    """Reference for the FRED flow (reduce-broadcast) kernel.
+
+    ``x`` is ``[P, N]`` — one row per switch input port. The result is the
+    reduction across ports broadcast back to every output port, i.e. the
+    mathematical effect of an in-network All-Reduce flow with
+    ``IPs = OPs = {0..P-1}`` (paper Sec. V-A).
+
+    Reduction is performed in fp32 regardless of input dtype, mirroring the
+    R-muSwitch adder datapath, then cast back.
+    """
+    acc = jnp.sum(x.astype(jnp.float32), axis=0, keepdims=True)
+    if op == "mean":
+        acc = acc / x.shape[0]
+    elif op != "sum":
+        raise ValueError(f"unknown op {op!r}")
+    return jnp.broadcast_to(acc, x.shape).astype(x.dtype)
+
+
+def reduce_ref(x, op="sum"):
+    """Reference for a Reduce flow (|OPs| = 1): ``[P, N] -> [N]``."""
+    acc = jnp.sum(x.astype(jnp.float32), axis=0)
+    if op == "mean":
+        acc = acc / x.shape[0]
+    elif op != "sum":
+        raise ValueError(f"unknown op {op!r}")
+    return acc.astype(x.dtype)
+
+
+def matmul_ref(x, w):
+    """Reference for the blocked matmul kernel: fp32 accumulation."""
+    return jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(x.dtype)

@@ -1,0 +1,212 @@
+"""L2: JAX transformer LM — the per-NPU compute graph of the training stack.
+
+This is the build-time half of the paper's "weight stationary" NPU: a
+decoder-only transformer whose big GEMMs go through the L1 Pallas kernel
+(`kernels.block_matmul.matmul`). `aot.py` lowers the entry points below to
+HLO text once; the Rust coordinator then executes them via PJRT on every
+training step — python is never on the request path.
+
+Entry points (all functional, all fixed-shape, all f32 except tokens):
+
+* ``grad_step(params, tokens) -> (loss, grads)`` — per-worker fwd+bwd.
+  The DP trainer calls this on every simulated worker, then reduces the
+  gradient buckets through the FRED fabric (in-network flow_reduce).
+* ``adamw_update(params, grads, m, v, step) -> (params, m, v)`` — the
+  optimizer, applied after reduction.
+* ``train_step(params, m, v, step, tokens) -> (loss, params, m, v)`` —
+  fused single-worker step (quickstart / compute-time calibration).
+
+Parameters are a nested dict; the flatten order (jax tree order = sorted
+dict keys) is recorded in ``artifacts/manifest.json`` so Rust passes
+literals in the right positions.
+"""
+
+import dataclasses
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.block_matmul import matmul as pallas_matmul
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer hyper-parameters (defaults: the fast CPU e2e config)."""
+
+    vocab: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_ff: int = 1024
+    seq_len: int = 128
+    batch: int = 8  # per-worker microbatch
+    use_pallas: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        per_layer = 4 * d * d + 2 * d * f + 4 * d  # attn + ffn + 2 LN
+        return self.n_layers * per_layer + 2 * v * d + self.seq_len * d + 2 * d
+
+    def flops_per_token_fwd(self) -> float:
+        """Dense fwd FLOPs/token (2*params matmul convention + attention)."""
+        d = self.d_model
+        per_layer = 2 * (4 * d * d + 2 * d * self.d_ff) + 4 * self.seq_len * d
+        return self.n_layers * per_layer + 2 * 2 * self.vocab * d
+
+
+# Canonical "large" config (~100M params) for the --large e2e run.
+LARGE = ModelConfig(vocab=32768, d_model=768, n_layers=12, n_heads=12,
+                    d_ff=3072, seq_len=256, batch=4)
+
+
+def _mm(cfg: ModelConfig, x, w):
+    """2-D matmul through the Pallas kernel (or jnp fallback)."""
+    if cfg.use_pallas:
+        return pallas_matmul(x, w)
+    return kref.matmul_ref(x, w)
+
+
+def _dense(cfg: ModelConfig, x, w):
+    """[..., d_in] @ [d_in, d_out] with the leading dims flattened so the
+    Pallas kernel always sees a 2-D GEMM (the MXU-tiled hot path)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    y = _mm(cfg, x2, w)
+    return y.reshape(lead + (w.shape[-1],))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, Any]:
+    """Initialize parameters (scaled-normal init, fp32)."""
+    key = jax.random.PRNGKey(seed)
+    keys = iter(jax.random.split(key, 6 * cfg.n_layers + 4))
+    d, f = cfg.d_model, cfg.d_ff
+
+    def norm(k, shape, scale):
+        return (jax.random.normal(k, shape, jnp.float32) * scale)
+
+    params: Dict[str, Any] = {
+        "embed": norm(next(keys), (cfg.vocab, d), 0.02),
+        "pos_embed": norm(next(keys), (cfg.seq_len, d), 0.02),
+        "unembed": norm(next(keys), (d, cfg.vocab), d ** -0.5),
+        "final_ln": {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))},
+        "layers": {},
+    }
+    for i in range(cfg.n_layers):
+        params["layers"][f"{i:02d}"] = {
+            "wq": norm(next(keys), (d, d), d ** -0.5),
+            "wk": norm(next(keys), (d, d), d ** -0.5),
+            "wv": norm(next(keys), (d, d), d ** -0.5),
+            "wo": norm(next(keys), (d, d), (2 * d * cfg.n_layers) ** -0.5),
+            "w1": norm(next(keys), (d, f), d ** -0.5),
+            "w2": norm(next(keys), (f, d), (2 * f * cfg.n_layers) ** -0.5),
+            "ln1": {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))},
+            "ln2": {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))},
+        }
+    return params
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _attention(cfg: ModelConfig, lp, x):
+    """Causal multi-head self-attention; QKV/O projections are Pallas
+    GEMMs, the per-head score/value contractions stay in jnp (small,
+    bandwidth-bound — not the MXU hot-spot)."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = _dense(cfg, x, lp["wq"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = _dense(cfg, x, lp["wk"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = _dense(cfg, x, lp["wv"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return _dense(cfg, out, lp["wo"])
+
+
+def _block(cfg: ModelConfig, lp, x):
+    x = x + _attention(cfg, lp, _layer_norm(x, lp["ln1"]["scale"], lp["ln1"]["bias"]))
+    h = _dense(cfg, _layer_norm(x, lp["ln2"]["scale"], lp["ln2"]["bias"]), lp["w1"])
+    h = jax.nn.gelu(h)
+    return x + _dense(cfg, h, lp["w2"])
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    """``tokens [B, S] (i32) -> logits [B, S, vocab]``."""
+    x = params["embed"][tokens] + params["pos_embed"][None, : tokens.shape[1]]
+    for i in range(cfg.n_layers):
+        x = _block(cfg, params["layers"][f"{i:02d}"], x)
+    x = _layer_norm(x, params["final_ln"]["scale"], params["final_ln"]["bias"])
+    return _dense(cfg, x, params["unembed"])
+
+
+def loss_fn(cfg: ModelConfig, params, tokens):
+    """Next-token cross-entropy over ``tokens [B, S+1]``."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, params, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def grad_step(cfg: ModelConfig, params, tokens):
+    """Per-worker fwd+bwd: ``-> (loss, grads)`` (grads same tree as params)."""
+    return jax.value_and_grad(functools.partial(loss_fn, cfg))(params, tokens)
+
+
+def adamw_update(
+    params, grads, m, v, step,
+    lr=3e-4, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01,
+) -> Tuple[Any, Any, Any]:
+    """AdamW. ``step`` is a float scalar (1-based). Returns (params, m, v)."""
+
+    def upd(p, g, m_, v_):
+        m2 = b1 * m_ + (1 - b1) * g
+        v2 = b2 * v_ + (1 - b2) * g * g
+        mhat = m2 / (1 - b1 ** step)
+        vhat = v2 / (1 - b2 ** step)
+        p2 = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+        return p2, m2, v2
+
+    flat = jax.tree_util.tree_map(upd, params, grads, m, v)
+    new_p = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, new_m, new_v
+
+
+def zeros_like_tree(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def train_step(cfg: ModelConfig, params, m, v, step, tokens):
+    """Fused single-worker step: ``-> (loss, params, m, v)``."""
+    loss, grads = grad_step(cfg, params, tokens)
+    params, m, v = adamw_update(params, grads, m, v, step)
+    return loss, params, m, v
+
+
+def param_leaves(params):
+    """Flattened (path, leaf) pairs in jax tree order — the argument order
+    contract with the Rust runtime (recorded in the manifest)."""
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    out = []
+    for path, leaf in leaves:
+        name = "/".join(
+            p.key if hasattr(p, "key") else str(p) for p in path
+        )
+        out.append((name, leaf))
+    return out

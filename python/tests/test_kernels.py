@@ -1,0 +1,197 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracles.
+
+The hypothesis sweeps cover shape x dtype x block-size space; the directed
+tests pin the cases the paper's switch actually exercises (P = 2..20 ports,
+fp16/bf16 gradients, non-tile-aligned bucket tails).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import block_matmul as bm
+from compile.kernels import flow_reduce as fr
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+def _tol(dtype):
+    return {jnp.float32: 1e-5, jnp.bfloat16: 2e-2, jnp.float16: 2e-3}[dtype]
+
+
+# ---------------------------------------------------------------- flow_reduce
+
+@pytest.mark.parametrize("p", [1, 2, 3, 4, 5, 8, 16, 20])
+@pytest.mark.parametrize("op", ["sum", "mean"])
+def test_flow_reduce_ports(p, op):
+    rng = np.random.default_rng(p)
+    x = _rand(rng, (p, 257), jnp.float32)
+    got = fr.flow_reduce(x, op=op)
+    want = ref.flow_reduce_ref(x, op=op)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [1, 7, 2048, 2049, 4096, 5000])
+def test_flow_reduce_tail_sizes(n):
+    """N not a multiple of the block: padding path must be exact."""
+    rng = np.random.default_rng(n)
+    x = _rand(rng, (4, n), jnp.float32)
+    np.testing.assert_allclose(
+        fr.flow_reduce(x), ref.flow_reduce_ref(x), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_flow_reduce_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    x = _rand(rng, (8, 512), dtype)
+    got = np.asarray(fr.flow_reduce(x), np.float32)
+    want = np.asarray(ref.flow_reduce_ref(x), np.float32)
+    np.testing.assert_allclose(got, want, rtol=_tol(dtype), atol=_tol(dtype))
+
+
+def test_flow_reduce_rows_identical():
+    """All-Reduce postcondition: every output port holds the same data."""
+    rng = np.random.default_rng(1)
+    x = _rand(rng, (5, 300), jnp.float32)
+    out = np.asarray(fr.flow_reduce(x))
+    for p in range(1, 5):
+        np.testing.assert_array_equal(out[0], out[p])
+
+
+def test_reduce_flow_matches_ref():
+    rng = np.random.default_rng(2)
+    x = _rand(rng, (6, 1000), jnp.float32)
+    np.testing.assert_allclose(
+        fr.reduce_flow(x), ref.reduce_ref(x), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        fr.reduce_flow(x, op="mean"), ref.reduce_ref(x, op="mean"),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_flow_reduce_mean_is_sum_over_p():
+    rng = np.random.default_rng(3)
+    x = _rand(rng, (4, 64), jnp.float32)
+    s = np.asarray(fr.flow_reduce(x, op="sum"))
+    m = np.asarray(fr.flow_reduce(x, op="mean"))
+    np.testing.assert_allclose(m * 4.0, s, rtol=1e-6)
+
+
+def test_flow_reduce_rejects_bad_op():
+    with pytest.raises(ValueError):
+        fr.flow_reduce(jnp.zeros((2, 4)), op="max")
+
+
+@settings(**SETTINGS)
+@given(
+    p=st.integers(1, 12),
+    n=st.integers(1, 600),
+    block=st.sampled_from([32, 128, 2048]),
+    op=st.sampled_from(["sum", "mean"]),
+)
+def test_flow_reduce_hypothesis(p, n, block, op):
+    rng = np.random.default_rng(p * 1000 + n)
+    x = _rand(rng, (p, n), jnp.float32)
+    got = fr.flow_reduce(x, op=op, block_n=block)
+    want = ref.flow_reduce_ref(x, op=op)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(p=st.integers(1, 10), n=st.integers(1, 400))
+def test_reduce_flow_hypothesis(p, n):
+    rng = np.random.default_rng(p * 977 + n)
+    x = _rand(rng, (p, n), jnp.float32)
+    np.testing.assert_allclose(
+        fr.reduce_flow(x), ref.reduce_ref(x), rtol=1e-5, atol=1e-5)
+
+
+def test_flow_reduce_vmem_budget():
+    """Structural perf contract (DESIGN.md §Perf): one grid step fits a
+    4 MB VMEM budget at every port count the wafer uses."""
+    for p in (2, 4, 8, 16, 20, 32):
+        assert fr.vmem_footprint_bytes(p) <= 4 << 20
+
+
+# --------------------------------------------------------------- block_matmul
+
+@pytest.mark.parametrize(
+    "m,k,n", [(1, 1, 1), (128, 128, 128), (130, 70, 190), (256, 1024, 256),
+              (127, 129, 2), (64, 512, 64)])
+def test_matmul_shapes(m, k, n):
+    rng = np.random.default_rng(m + k + n)
+    x = _rand(rng, (m, k), jnp.float32)
+    w = _rand(rng, (k, n), jnp.float32)
+    got = bm.matmul(x, w)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    rng = np.random.default_rng(5)
+    x = _rand(rng, (64, 96), dtype)
+    w = _rand(rng, (96, 32), dtype)
+    got = np.asarray(bm.matmul(x, w), np.float32)
+    want = np.asarray(ref.matmul_ref(x, w), np.float32)
+    np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
+
+
+def test_matmul_grad_matches_jnp():
+    """custom_vjp: gradients through the kernel equal jnp gradients."""
+    rng = np.random.default_rng(6)
+    x = _rand(rng, (32, 48), jnp.float32)
+    w = _rand(rng, (48, 16), jnp.float32)
+
+    def f_pallas(x, w):
+        return jnp.sum(jnp.tanh(bm.matmul(x, w)))
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.tanh(x @ w))
+
+    gx_p, gw_p = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    gx_r, gw_r = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx_p, gx_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw_p, gw_r, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 200), k=st.integers(1, 200), n=st.integers(1, 200),
+    tile=st.sampled_from([(32, 32, 32), (128, 128, 128), (64, 128, 32)]),
+)
+def test_matmul_hypothesis(m, k, n, tile):
+    rng = np.random.default_rng(m * 7 + k * 11 + n * 13)
+    x = _rand(rng, (m, k), jnp.float32)
+    w = _rand(rng, (k, n), jnp.float32)
+    got = bm.matmul(x, w, *tile)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_under_jit():
+    rng = np.random.default_rng(7)
+    x = _rand(rng, (128, 128), jnp.float32)
+    w = _rand(rng, (128, 128), jnp.float32)
+    got = jax.jit(bm.matmul)(x, w)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_mxu_utilization_estimate():
+    assert bm.mxu_utilization_estimate(256, 256, 256) == 1.0
+    assert bm.mxu_utilization_estimate(512, 512, 512) == 1.0
+    # Tile-aligned at the explicit tile size too.
+    assert bm.mxu_utilization_estimate(128, 128, 128, 128, 128, 128) == 1.0
+    u = bm.mxu_utilization_estimate(130, 130, 130)
+    assert 0.0 < u < 1.0
+
+
+def test_matmul_vmem_budget():
+    assert bm.vmem_footprint_bytes() <= 4 << 20

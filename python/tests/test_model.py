@@ -1,0 +1,156 @@
+"""L2 model tests: shapes, numerics, pallas-vs-reference path equivalence,
+optimizer behaviour, and the flatten-order contract with the Rust runtime."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=4,
+                    d_ff=64, seq_len=16, batch=2, use_pallas=True)
+CFG_REF = M.ModelConfig(**{**CFG.__dict__, "use_pallas": False})
+
+
+def _tokens(cfg, seed=0, batch=None):
+    rng = np.random.default_rng(seed)
+    b = batch or cfg.batch
+    return jnp.asarray(
+        rng.integers(0, cfg.vocab, (b, cfg.seq_len + 1)), jnp.int32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, 0)
+
+
+def test_forward_shape(params):
+    toks = _tokens(CFG)[:, :-1]
+    logits = M.forward(CFG, params, toks)
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+
+
+def test_loss_is_finite_scalar(params):
+    loss = M.loss_fn(CFG, params, _tokens(CFG))
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+
+
+def test_initial_loss_near_uniform(params):
+    """Random init => loss ~ ln(vocab)."""
+    loss = float(M.loss_fn(CFG, params, _tokens(CFG)))
+    assert abs(loss - np.log(CFG.vocab)) < 1.0
+
+
+def test_pallas_and_ref_paths_agree(params):
+    toks = _tokens(CFG)[:, :-1]
+    a = M.forward(CFG, params, toks)
+    b = M.forward(CFG_REF, params, toks)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_grads_match_between_paths(params):
+    toks = _tokens(CFG)
+    _, ga = M.grad_step(CFG, params, toks)
+    _, gb = M.grad_step(CFG_REF, params, toks)
+    fa = jax.tree_util.tree_leaves(ga)
+    fb = jax.tree_util.tree_leaves(gb)
+    for x, y in zip(fa, fb):
+        np.testing.assert_allclose(x, y, rtol=2e-3, atol=2e-3)
+
+
+def test_grad_tree_matches_param_tree(params):
+    _, grads = M.grad_step(CFG, params, _tokens(CFG))
+    ps = jax.tree_util.tree_structure(params)
+    gs = jax.tree_util.tree_structure(grads)
+    assert ps == gs
+
+
+def test_grads_are_nonzero(params):
+    _, grads = M.grad_step(CFG, params, _tokens(CFG))
+    total = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree_util.tree_leaves(grads))
+    assert total > 0
+
+
+def test_causality(params):
+    """Changing a future token must not affect earlier logits."""
+    toks = _tokens(CFG)[:, :-1]
+    logits_a = M.forward(CFG, params, toks)
+    toks_b = toks.at[:, -1].set((toks[:, -1] + 1) % CFG.vocab)
+    logits_b = M.forward(CFG, params, toks_b)
+    np.testing.assert_allclose(
+        logits_a[:, :-1], logits_b[:, :-1], rtol=1e-5, atol=1e-5)
+
+
+def test_adamw_moves_params(params):
+    _, grads = M.grad_step(CFG, params, _tokens(CFG))
+    m = M.zeros_like_tree(params)
+    v = M.zeros_like_tree(params)
+    p2, m2, v2 = M.adamw_update(params, grads, m, v, jnp.float32(1.0))
+    moved = sum(
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(p2)))
+    assert moved > 0
+    assert jax.tree_util.tree_structure(p2) == jax.tree_util.tree_structure(params)
+
+
+def test_train_step_reduces_loss_on_fixed_batch(params):
+    toks = _tokens(CFG, seed=3)
+    m = M.zeros_like_tree(params)
+    v = M.zeros_like_tree(params)
+    p = params
+    first = None
+    loss = None
+    for s in range(8):
+        loss, p, m, v = M.train_step(CFG, p, m, v, jnp.float32(s + 1), toks)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first - 0.2, (first, float(loss))
+
+
+def test_train_step_equals_grad_plus_update(params):
+    """The fused artifact must equal the two-artifact DP path at dp=1."""
+    toks = _tokens(CFG, seed=4)
+    m = M.zeros_like_tree(params)
+    v = M.zeros_like_tree(params)
+    loss_f, p_f, m_f, v_f = M.train_step(CFG, params, m, v, jnp.float32(1.0), toks)
+    loss_g, grads = M.grad_step(CFG, params, toks)
+    p_u, m_u, v_u = M.adamw_update(params, grads, m, v, jnp.float32(1.0))
+    assert float(loss_f) == pytest.approx(float(loss_g), rel=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(p_f), jax.tree_util.tree_leaves(p_u)):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+
+def test_param_count_matches_formula():
+    p = M.init_params(CFG, 0)
+    actual = sum(x.size for x in jax.tree_util.tree_leaves(p))
+    assert actual == CFG.param_count()
+
+
+def test_param_leaves_order_is_deterministic():
+    p1 = M.init_params(CFG, 0)
+    p2 = M.init_params(CFG, 1)
+    n1 = [n for n, _ in M.param_leaves(p1)]
+    n2 = [n for n, _ in M.param_leaves(p2)]
+    assert n1 == n2
+    assert len(n1) == len(set(n1))
+
+
+def test_init_is_seed_deterministic():
+    a = M.init_params(CFG, 7)
+    b = M.init_params(CFG, 7)
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_flops_and_params_scale_with_layers():
+    small = M.ModelConfig(n_layers=2)
+    big = M.ModelConfig(n_layers=4)
+    assert big.param_count() > small.param_count()
+    assert big.flops_per_token_fwd() > small.flops_per_token_fwd()
+
+
+def test_large_config_is_about_100m():
+    assert 50e6 < M.LARGE.param_count() < 200e6

@@ -1,0 +1,72 @@
+//! Fig. 10 — end-to-end training-time breakdowns, Baseline vs FRED-C vs
+//! FRED-D, for the four Table V workloads, normalized to the baseline.
+//!
+//! Paper speedups: ResNet-152 1.41/1.76×, Transformer-17B 1.75/1.87×,
+//! GPT-3 1.34/1.34×, Transformer-1T 1.4/1.4×.
+//!
+//! Run: `cargo bench --bench bench_fig10`
+
+use fred::coordinator::config::FabricKind;
+use fred::coordinator::metrics::CommType;
+use fred::coordinator::sim::Simulator;
+use fred::coordinator::workload::Workload;
+use fred::util::table::Table;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let paper: &[(&str, f64, f64)] = &[
+        ("ResNet-152", 1.41, 1.76),
+        ("Transformer-17B", 1.75, 1.87),
+        ("GPT-3", 1.34, 1.34),
+        ("Transformer-1T", 1.40, 1.40),
+    ];
+    println!("=== Fig. 10: end-to-end training time (normalized to baseline) ===\n");
+    let mut summary = Table::new(&[
+        "workload", "FRED-C meas", "FRED-C paper", "FRED-D meas", "FRED-D paper",
+    ]);
+    for w in Workload::all() {
+        let strategy = w.default_strategy;
+        println!("{} | {} | {:?}", w.name, strategy, w.exec_mode);
+        let mut table = Table::new(&[
+            "fabric", "comp", "input_load", "MP", "DP", "PP", "stream", "total", "speedup",
+        ]);
+        let mut base = None;
+        let mut meas = (0.0, 0.0);
+        for kind in [FabricKind::Baseline, FabricKind::FredC, FabricKind::FredD] {
+            let sim = Simulator::new(kind, w.clone(), strategy);
+            let b = sim.iterate();
+            let norm = *base.get_or_insert(b.total());
+            let sp = norm / b.total();
+            match kind {
+                FabricKind::FredC => meas.0 = sp,
+                FabricKind::FredD => meas.1 = sp,
+                _ => {}
+            }
+            table.row(&[
+                kind.name().to_string(),
+                format!("{:.3}", b.compute / norm),
+                format!("{:.3}", b.get(CommType::InputLoad) / norm),
+                format!("{:.3}", b.get(CommType::Mp) / norm),
+                format!("{:.3}", b.get(CommType::Dp) / norm),
+                format!("{:.3}", b.get(CommType::Pp) / norm),
+                format!("{:.3}", b.get(CommType::Stream) / norm),
+                format!("{:.3}", b.total() / norm),
+                format!("{sp:.2}x"),
+            ]);
+        }
+        table.print();
+        println!();
+        let p = paper.iter().find(|(n, _, _)| *n == w.name).unwrap();
+        summary.row(&[
+            w.name.clone(),
+            format!("{:.2}x", meas.0),
+            format!("{:.2}x", p.1),
+            format!("{:.2}x", meas.1),
+            format!("{:.2}x", p.2),
+        ]);
+    }
+    println!("=== summary: measured vs paper ===");
+    summary.print();
+    println!("bench wall time: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,67 @@
+//! Fig. 2 — normalized comp/comm overhead of Transformer-17B
+//! parallelization strategies on the baseline 2D mesh.
+//!
+//! The paper's figure is per-sample (throughput view): with minibatch =
+//! DP×16, per-sample compute is strategy-invariant while the comm terms
+//! vary; compute-efficient strategies (MP-heavy) can lose end-to-end —
+//! MP(20) worse than MP(5)-DP(4) is the paper's headline observation.
+//!
+//! Run: `cargo bench --bench bench_fig2`
+
+use fred::coordinator::config::FabricKind;
+use fred::coordinator::metrics::CommType;
+use fred::coordinator::parallelism::Strategy;
+use fred::coordinator::sim::Simulator;
+use fred::coordinator::workload;
+use fred::util::table::Table;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let w = workload::transformer_17b();
+    let strategies = [
+        Strategy::new(20, 1, 1),
+        Strategy::new(5, 4, 1),
+        Strategy::new(4, 5, 1),
+        Strategy::new(2, 5, 2),
+        Strategy::new(5, 2, 2),
+        Strategy::new(1, 20, 1),
+    ];
+    println!("=== Fig. 2: Transformer-17B strategies on 2D-Mesh (per-sample) ===");
+    let mut table = Table::new(&[
+        "strategy", "comp", "MP", "DP", "PP", "total", "norm(vs MP(5)-DP(4))",
+    ]);
+    // Normalize to MP(5)-DP(4)-PP(1), the strategy the paper contrasts
+    // MP(20) against.
+    let mut rows = Vec::new();
+    for s in strategies {
+        let sim = Simulator::new(FabricKind::Baseline, w.clone(), s);
+        let b = sim.iterate();
+        let per_sample = 1.0 / w.minibatch(&s) as f64;
+        rows.push((s, b, per_sample));
+    }
+    let norm = {
+        let (_, b, k) = &rows[1];
+        b.total() * k
+    };
+    for (s, b, k) in &rows {
+        table.row(&[
+            s.to_string(),
+            format!("{:.3}", b.compute * k / norm),
+            format!("{:.3}", b.get(CommType::Mp) * k / norm),
+            format!("{:.3}", b.get(CommType::Dp) * k / norm),
+            format!("{:.3}", b.get(CommType::Pp) * k / norm),
+            format!("{:.3}", b.total() * k / norm),
+            format!("{:.2}", b.total() * k / norm),
+        ]);
+    }
+    table.print();
+    let mp20 = rows[0].1.total() * rows[0].2;
+    let mp5dp4 = rows[1].1.total() * rows[1].2;
+    println!(
+        "\npaper's claim (Sec. I): MP(20) total > MP(5)-DP(4) total per sample: {} ({:.2}x)",
+        mp20 > mp5dp4,
+        mp20 / mp5dp4
+    );
+    println!("bench wall time: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,41 @@
+//! Fig. 9 — communication microbenchmarks: per-phase effective NPU
+//! bandwidth for two Transformer-17B strategies across all five fabrics.
+//!
+//! Expected shape (the paper's Sec. VIII arithmetic):
+//! * MP(20)-DP(1)-PP(1): Baseline ≈1.5 TBps < FRED-A ≈1.85 < FRED-B ≈2.85
+//!   < FRED-C = 3 < FRED-D ≈5.7 TBps.
+//! * MP(2)-DP(5)-PP(2): MP — baseline 0.75, all FRED 3 TBps;
+//!   DP — FRED-A ≈0.375 < baseline ≈0.75 ≈ FRED-B < FRED-C 3 < FRED-D 4.8;
+//!   PP — baseline 0.75, FRED 3 TBps.
+//!
+//! Run: `cargo bench --bench bench_fig9`
+
+use fred::coordinator::config::FabricKind;
+use fred::coordinator::parallelism::Strategy;
+use fred::coordinator::sim::Simulator;
+use fred::coordinator::workload;
+use fred::util::table::Table;
+use fred::util::units::fmt_bw;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let w = workload::transformer_17b();
+    let bytes = 139e6; // one T-17B activation (16 samples × 1024 × 4256 × fp16)
+    for strategy in [Strategy::new(20, 1, 1), Strategy::new(2, 5, 2)] {
+        println!("=== Fig. 9: {} (effective NPU BW, {bytes:.0} B/worker) ===", strategy);
+        let mut table = Table::new(&["fabric", "MP", "DP", "PP"]);
+        for kind in FabricKind::all() {
+            let sim = Simulator::new(kind, w.clone(), strategy);
+            let [mp, dp, pp] = sim.microbench(bytes);
+            let f = |x: Option<f64>| x.map_or("-".to_string(), fmt_bw);
+            table.row(&[kind.name().to_string(), f(mp), f(dp), f(pp)]);
+        }
+        table.print();
+        println!();
+    }
+    println!("paper expectations:");
+    println!("  MP(20): 1.5 / ~1.85 / ~2.85 / 3.0 / ~5.7 TBps");
+    println!("  MP(2)-DP(5)-PP(2) DP: ~0.75 / 0.375 / ~0.75 / 3.0 / 4.8 TBps");
+    println!("bench wall time: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,71 @@
+//! §Perf — fluid-flow simulator throughput.
+//!
+//! The fluid simulator is the inner loop of every experiment (Figs. 2, 9,
+//! 10 all run thousands of plans). DESIGN.md §8 budgets ≥1M
+//! transfer-events/s and the full Fig. 10 suite <30 s.
+//!
+//! Run: `cargo bench --bench bench_fluidsim`
+
+use fred::coordinator::config::FabricKind;
+use fred::coordinator::sim::Simulator;
+use fred::coordinator::workload;
+use fred::fabric::fluid::{FluidSim, Network, Transfer};
+use fred::util::prng::Xorshift64;
+use fred::util::table::Table;
+use std::time::Instant;
+
+fn main() {
+    println!("=== §Perf: fluid simulator ===");
+
+    // Raw engine: random transfer sets on a 200-link network.
+    let mut net = Network::new();
+    let links: Vec<_> = (0..200).map(|i| net.add_link(format!("l{i}"), 1e12)).collect();
+    let sim = FluidSim::new(net);
+    let mut rng = Xorshift64::new(1);
+    let mut table = Table::new(&["transfers", "runs", "events/s", "per-run"]);
+    for n_transfers in [10usize, 100, 400] {
+        let sets: Vec<Vec<Transfer>> = (0..50)
+            .map(|_| {
+                (0..n_transfers)
+                    .map(|i| {
+                        let n_links = rng.range(1, 6);
+                        let ls: Vec<_> = (0..n_links)
+                            .map(|_| links[rng.range(0, links.len())])
+                            .collect();
+                        Transfer::new(ls, 1e9 + rng.next_f64() * 1e10, i)
+                    })
+                    .collect()
+            })
+            .collect();
+        let t0 = Instant::now();
+        let mut total_events = 0usize;
+        for set in &sets {
+            let r = sim.run(set);
+            total_events += r.transfer_done.len();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        table.row(&[
+            n_transfers.to_string(),
+            sets.len().to_string(),
+            format!("{:.2}M", total_events as f64 / dt / 1e6),
+            format!("{:.1} us", dt / sets.len() as f64 * 1e6),
+        ]);
+    }
+    table.print();
+
+    // End-to-end: the full Fig. 10 suite wall time.
+    let t0 = Instant::now();
+    let mut total = 0.0;
+    for w in workload::Workload::all() {
+        for kind in [FabricKind::Baseline, FabricKind::FredC, FabricKind::FredD] {
+            let s = Simulator::new(kind, w.clone(), w.default_strategy);
+            total += s.iterate().total();
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "\nfull Fig. 10 suite (12 simulations): {:.2}s wall (budget 30s), sim-total {total:.2}s",
+        dt
+    );
+    assert!(total > 0.0);
+}

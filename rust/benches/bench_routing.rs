@@ -1,0 +1,95 @@
+//! §Perf — FRED routing hot path.
+//!
+//! The routing algorithm runs at compile time in the paper (results are
+//! stored in the switch control units), but it sits on the coordinator's
+//! planning path here, so DESIGN.md §8 budgets ≤10 µs per routing call at
+//! wafer port counts. Measures route_flows across port counts, flow
+//! counts, and the conflict-resolution paths.
+//!
+//! Run: `cargo bench --bench bench_routing`
+
+use fred::fabric::fred::{route_flows, routing, Flow};
+use fred::util::prng::Xorshift64;
+use fred::util::table::Table;
+use std::time::Instant;
+
+fn random_flows(rng: &mut Xorshift64, ports: usize, n_flows: usize) -> Vec<Flow> {
+    // Disjoint port groups => always well-formed.
+    let mut perm: Vec<usize> = (0..ports).collect();
+    rng.shuffle(&mut perm);
+    let size = (ports / n_flows).max(2);
+    perm.chunks(size)
+        .take(n_flows)
+        .filter(|c| c.len() >= 2)
+        .map(|c| Flow::all_reduce(c.to_vec()))
+        .collect()
+}
+
+fn bench<F: FnMut() -> bool>(iters: usize, mut f: F) -> (f64, usize) {
+    let t0 = Instant::now();
+    let mut ok = 0usize;
+    for _ in 0..iters {
+        if f() {
+            ok += 1;
+        }
+    }
+    (t0.elapsed().as_secs_f64() / iters as f64, ok)
+}
+
+fn main() {
+    println!("=== §Perf: FRED conflict-graph routing ===");
+    let mut table = Table::new(&["case", "per-call", "routed", "budget"]);
+    let cases: Vec<(String, usize, usize, usize)> = vec![
+        ("FRED3(12), 2 flows".into(), 12, 3, 2),
+        ("FRED3(12), 4 flows".into(), 12, 3, 4),
+        ("FRED3(12), 6 flows".into(), 12, 3, 6),
+        ("FRED3(32), 8 flows".into(), 32, 3, 8),
+        ("FRED3(64), 16 flows".into(), 64, 3, 16),
+        ("FRED2(64), 16 flows".into(), 64, 2, 16),
+    ];
+    for (name, ports, m, n_flows) in cases {
+        let mut rng = Xorshift64::new(42);
+        let iters = 2000;
+        let (per_call, ok) = bench(iters, || {
+            let flows = random_flows(&mut rng, ports, n_flows);
+            route_flows(ports, m, &flows).is_ok()
+        });
+        table.row(&[
+            name,
+            format!("{:.2} us", per_call * 1e6),
+            format!("{}/{}", ok, iters),
+            if per_call < 10e-6 { "<=10us OK".into() } else { "OVER".to_string() },
+        ]);
+    }
+    table.print();
+
+    // Conflict-resolution strategies on the Fig. 7(j) set.
+    let fig7j = vec![
+        Flow::all_reduce(vec![1, 2]),
+        Flow::all_reduce(vec![3, 4]),
+        Flow::all_reduce(vec![5, 0]),
+        Flow::all_reduce(vec![6, 7]),
+    ];
+    println!("\nconflict resolution on the Fig. 7(j) set (FRED_2(8)):");
+    let t0 = Instant::now();
+    let rounds = routing::route_with_blocking(8, 2, &fig7j);
+    println!(
+        "  (1) blocking: {} rounds in {:.1} us",
+        rounds.len(),
+        t0.elapsed().as_secs_f64() * 1e6
+    );
+    let t0 = Instant::now();
+    let m = routing::min_m_for(8, 2, &fig7j, 4);
+    println!(
+        "  (2) raise m: m={:?} in {:.1} us",
+        m,
+        t0.elapsed().as_secs_f64() * 1e6
+    );
+    let t0 = Instant::now();
+    let steps = routing::decompose_to_unicast_ring(&fig7j[0]);
+    println!(
+        "  (3) unicast decomposition: {} serial steps in {:.1} us",
+        steps.len(),
+        t0.elapsed().as_secs_f64() * 1e6
+    );
+}

@@ -1,0 +1,63 @@
+//! Table III — hardware overhead of the FRED implementation of Fig. 8(b).
+//!
+//! Paper (post-layout, 15 nm NanGate): 25195 mm², 146.73 W (<1% of the
+//! 15 kW budget). Our analytical model is calibrated structurally (see
+//! `fabric::fred::hw_model` docs) and must land within a few percent.
+//!
+//! Run: `cargo bench --bench bench_table3`
+
+use fred::fabric::fred::hw_model::HwOverhead;
+use fred::fabric::fred::FredSwitch;
+use fred::util::table::Table;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    println!("=== Table III: FRED HW overhead ===");
+    let hw = HwOverhead::paper();
+    let mut table = Table::new(&["component", "area mm^2", "power W", "uSwitches", "SRAM KB"]);
+    for (n, c) in &hw.inventory {
+        table.row(&[
+            format!("{n}x FRED3({}) {:?}", c.ports, c.role),
+            format!("{:.0}", *n as f64 * c.area_mm2()),
+            format!("{:.2}", *n as f64 * c.power_w()),
+            format!("{}", c.census().microswitches * n),
+            format!("{}", c.sram_bytes() * n / 1024),
+        ]);
+    }
+    table.row(&[
+        "Additional Wafer-Scale Wiring".into(),
+        "N/A".into(),
+        format!("{:.2}", hw.wiring_power_w()),
+        "-".into(),
+        "-".into(),
+    ]);
+    table.row(&[
+        "Total (paper: 25195 / 146.73)".into(),
+        format!("{:.0}", hw.total_area_mm2()),
+        format!("{:.2}", hw.total_power_w()),
+        "-".into(),
+        "-".into(),
+    ]);
+    table.print();
+    println!(
+        "\npower fraction of 15 kW budget: {:.2}% (paper: <1%)",
+        100.0 * hw.power_budget_fraction()
+    );
+
+    // μSwitch census scaling (the paper's "fine-grained distribution of
+    // compute" scales linearly-ish in P log P).
+    println!("\nFRED_3(P) μSwitch census:");
+    let mut t2 = Table::new(&["P", "uSwitches", "muxes", "depth"]);
+    for p in [4usize, 8, 10, 11, 12, 16, 32, 64] {
+        let c = FredSwitch::new(3, p).census();
+        t2.row(&[
+            p.to_string(),
+            c.microswitches.to_string(),
+            c.muxes.to_string(),
+            c.depth.to_string(),
+        ]);
+    }
+    t2.print();
+    println!("bench wall time: {:.2}s", t0.elapsed().as_secs_f64());
+}

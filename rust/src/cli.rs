@@ -1,0 +1,315 @@
+//! Command-line interface (hand-rolled; no `clap` offline).
+
+use crate::coordinator::{
+    config::FabricKind, metrics::CommType, parallelism::Strategy, placement,
+    placement::Placement, sim::Simulator, workload::Workload,
+};
+use crate::fabric::fred::hw_model::HwOverhead;
+use crate::fabric::fred::{route_flows, Flow};
+use crate::fabric::mesh::Mesh2D;
+use crate::fabric::topology::Fabric as _;
+use crate::util::prng::Xorshift64;
+use crate::util::table::Table;
+use crate::util::units::{fmt_bw, fmt_time, GBPS};
+
+/// Parse `--key value` style options.
+pub struct Opts<'a> {
+    args: &'a [String],
+}
+
+impl<'a> Opts<'a> {
+    /// Wrap the raw args after the subcommand.
+    pub fn new(args: &'a [String]) -> Self {
+        Self { args }
+    }
+
+    /// Value of `--name`.
+    pub fn get(&self, name: &str) -> Option<&'a str> {
+        let flag = format!("--{name}");
+        self.args
+            .iter()
+            .position(|a| a == &flag)
+            .and_then(|i| self.args.get(i + 1))
+            .map(|s| s.as_str())
+    }
+
+    /// Presence of a bare `--name` flag.
+    pub fn has(&self, name: &str) -> bool {
+        let flag = format!("--{name}");
+        self.args.iter().any(|a| a == &flag)
+    }
+}
+
+const USAGE: &str = "fred — FRED wafer-scale distributed-training stack
+
+USAGE: fred <command> [options]
+
+COMMANDS:
+  sim          --workload <resnet152|t17b|gpt3|t1t> [--fabric <baseline|fred-a..d>]
+               [--strategy MP(a)-DP(b)-PP(c)] [--iters N]
+  sweep        --workload t17b [--fabric baseline]   (Fig. 2 strategy sweep)
+  microbench   [--strategy 2,5,2] [--bytes N]        (Fig. 9 per-phase BW)
+  channel-load [--rows 4 --cols 4]                   (Fig. 4 hotspot)
+  route        [--m 2|3]                             (Fig. 7 routing demo)
+  placement    --workload t17b [--seeds N]           (Fig. 5 exploration)
+  hw                                                 (Table III overhead)
+  train        --artifacts <dir> [--steps N] [--dp N] [--fabric fred-d]
+  help
+";
+
+/// Entry point; returns the process exit code.
+pub fn run(args: &[String]) -> i32 {
+    let Some(cmd) = args.first() else {
+        print!("{USAGE}");
+        return 2;
+    };
+    let opts = Opts::new(&args[1..]);
+    match cmd.as_str() {
+        "sim" => cmd_sim(&opts),
+        "sweep" => cmd_sweep(&opts),
+        "microbench" => cmd_microbench(&opts),
+        "channel-load" => cmd_channel_load(&opts),
+        "route" => cmd_route(&opts),
+        "placement" => cmd_placement(&opts),
+        "hw" => cmd_hw(),
+        "train" => crate::trainer::cli_train(&opts),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            0
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n{USAGE}");
+            2
+        }
+    }
+}
+
+fn parse_workload(opts: &Opts) -> Result<Workload, i32> {
+    let name = opts.get("workload").unwrap_or("t17b");
+    Workload::by_name(name).ok_or_else(|| {
+        eprintln!("unknown workload `{name}`");
+        2
+    })
+}
+
+fn parse_fabric(opts: &Opts) -> Result<FabricKind, i32> {
+    let name = opts.get("fabric").unwrap_or("baseline");
+    FabricKind::parse(name).ok_or_else(|| {
+        eprintln!("unknown fabric `{name}`");
+        2
+    })
+}
+
+fn cmd_sim(opts: &Opts) -> i32 {
+    let Ok(w) = parse_workload(opts) else { return 2 };
+    let strategy = match opts.get("strategy") {
+        Some(s) => match Strategy::parse(s) {
+            Some(s) => s,
+            None => {
+                eprintln!("bad strategy `{s}`");
+                return 2;
+            }
+        },
+        None => w.default_strategy,
+    };
+    let fabrics: Vec<FabricKind> = match opts.get("fabric") {
+        Some("all") | None => FabricKind::all().to_vec(),
+        Some(_) => match parse_fabric(opts) {
+            Ok(k) => vec![k],
+            Err(c) => return c,
+        },
+    };
+    println!("workload {} | strategy {} | {:?}", w.name, strategy, w.exec_mode);
+    let mut t = Table::new(&[
+        "fabric", "total", "compute", "input_load", "MP", "DP", "PP", "stream", "speedup",
+    ]);
+    let mut base_total = None;
+    for k in fabrics {
+        let sim = Simulator::new(k, w.clone(), strategy);
+        let b = sim.iterate();
+        let total = b.total();
+        let base = *base_total.get_or_insert(total);
+        t.row(&[
+            k.name().to_string(),
+            fmt_time(total),
+            fmt_time(b.compute),
+            fmt_time(b.get(CommType::InputLoad)),
+            fmt_time(b.get(CommType::Mp)),
+            fmt_time(b.get(CommType::Dp)),
+            fmt_time(b.get(CommType::Pp)),
+            fmt_time(b.get(CommType::Stream)),
+            format!("{:.2}x", base / total),
+        ]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_sweep(opts: &Opts) -> i32 {
+    let Ok(w) = parse_workload(opts) else { return 2 };
+    let Ok(k) = parse_fabric(opts) else { return 2 };
+    // The Fig. 2 strategy set for a 20-NPU wafer.
+    let strategies = [
+        Strategy::new(20, 1, 1),
+        Strategy::new(5, 4, 1),
+        Strategy::new(4, 5, 1),
+        Strategy::new(2, 5, 2),
+        Strategy::new(5, 2, 2),
+        Strategy::new(1, 20, 1),
+    ];
+    println!("workload {} on {} (Fig. 2 sweep)", w.name, k.name());
+    let mut t = Table::new(&["strategy", "total", "comp", "MP", "DP", "PP", "norm_total"]);
+    let mut norm = None;
+    for s in strategies {
+        let sim = Simulator::new(k, w.clone(), s);
+        let b = sim.iterate();
+        let n = *norm.get_or_insert(b.total());
+        t.row(&[
+            s.to_string(),
+            fmt_time(b.total()),
+            fmt_time(b.compute),
+            fmt_time(b.get(CommType::Mp)),
+            fmt_time(b.get(CommType::Dp)),
+            fmt_time(b.get(CommType::Pp)),
+            format!("{:.2}", b.total() / n),
+        ]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_microbench(opts: &Opts) -> i32 {
+    let strategy = opts
+        .get("strategy")
+        .and_then(Strategy::parse)
+        .unwrap_or(Strategy::new(2, 5, 2));
+    let bytes: f64 = opts
+        .get("bytes")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(139e6);
+    let w = Workload::by_name("t17b").unwrap();
+    println!("Fig. 9 microbenchmark | strategy {strategy} | {bytes:.3e} B per worker");
+    let mut t = Table::new(&["fabric", "MP eff BW", "DP eff BW", "PP eff BW"]);
+    for k in FabricKind::all() {
+        let sim = Simulator::new(k, w.clone(), strategy);
+        let [mp, dp, pp] = sim.microbench(bytes);
+        let f = |x: Option<f64>| x.map_or("-".into(), fmt_bw);
+        t.row(&[k.name().to_string(), f(mp), f(dp), f(pp)]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_channel_load(opts: &Opts) -> i32 {
+    let rows: usize = opts.get("rows").and_then(|s| s.parse().ok()).unwrap_or(4);
+    let cols: usize = opts.get("cols").and_then(|s| s.parse().ok()).unwrap_or(4);
+    let m = Mesh2D::new(rows, cols, 750.0 * GBPS, 128.0 * GBPS, 20e-9);
+    let (max, _) = m.channel_load_analysis();
+    println!(
+        "Fig. 4: {rows}x{cols} mesh, {} I/O channels: hotspot link carries {max} \
+         streams = (2N-1) for N={rows}",
+        m.io_count()
+    );
+    println!(
+        "effective I/O line-rate factor: {:.3} (paper: link/( (2N-1)*P ) = {:.3})",
+        m.io_line_rate_factor(),
+        (750.0 / ((2 * rows - 1) as f64 * 128.0)).min(1.0),
+    );
+    0
+}
+
+fn cmd_route(opts: &Opts) -> i32 {
+    let m: usize = opts.get("m").and_then(|s| s.parse().ok()).unwrap_or(2);
+    println!("FRED_{m}(8) routing (Fig. 7):");
+    let cases: Vec<(&str, Vec<Flow>)> = vec![
+        (
+            "Fig7h: two All-Reduces {0,1,2} & {3,4,5}",
+            vec![
+                Flow::all_reduce(vec![0, 1, 2]),
+                Flow::all_reduce(vec![3, 4, 5]),
+            ],
+        ),
+        (
+            "Fig7i: three flows",
+            vec![
+                Flow::all_reduce(vec![0, 1]),
+                Flow::all_reduce(vec![2, 3]),
+                Flow::all_reduce(vec![4, 5, 6]),
+            ],
+        ),
+        (
+            "Fig7j: conflicting triangle + independent flow",
+            vec![
+                Flow::all_reduce(vec![1, 2]),
+                Flow::all_reduce(vec![3, 4]),
+                Flow::all_reduce(vec![5, 0]),
+                Flow::all_reduce(vec![6, 7]),
+            ],
+        ),
+    ];
+    for (name, flows) in cases {
+        match route_flows(8, m, &flows) {
+            Ok(r) => println!(
+                "  {name}: ROUTED (colors {:?}, {} reductions, {} distributions)",
+                r.root.colors, r.total_reductions, r.total_distributions
+            ),
+            Err(e) => println!("  {name}: CONFLICT ({e})"),
+        }
+    }
+    0
+}
+
+fn cmd_placement(opts: &Opts) -> i32 {
+    let Ok(w) = parse_workload(opts) else { return 2 };
+    let seeds: usize = opts.get("seeds").and_then(|s| s.parse().ok()).unwrap_or(10);
+    let strategy = w.default_strategy;
+    let bytes = 100e6;
+    println!("placement exploration | {} | {}", w.name, strategy);
+    let mut t = Table::new(&["fabric", "paper placement", "best random", "worst random"]);
+    for k in [FabricKind::Baseline, FabricKind::FredD] {
+        let fabric = k.build();
+        let mesh = k.is_mesh().then(Mesh2D::paper_baseline);
+        let paper = Placement::paper_default(&strategy, mesh.as_ref(), 20);
+        let ps = paper.congestion_score(fabric.as_ref(), &strategy, bytes);
+        let mut best = f64::INFINITY;
+        let mut worst: f64 = 0.0;
+        let mut rng = Xorshift64::new(1234);
+        for _ in 0..seeds {
+            let p = Placement::random(&strategy, 20, &mut rng);
+            let s = p.congestion_score(fabric.as_ref(), &strategy, bytes);
+            best = best.min(s);
+            worst = worst.max(s);
+        }
+        t.row(&[
+            k.name().to_string(),
+            fmt_time(ps),
+            fmt_time(best),
+            fmt_time(worst),
+        ]);
+    }
+    t.print();
+    println!("(score = summed phase times of MP+DP+PP at 100 MB; lower is better)");
+    let _ = placement::Priority::MpPpDp; // referenced for docs
+    0
+}
+
+fn cmd_hw() -> i32 {
+    let hw = HwOverhead::paper();
+    println!("Table III — FRED hardware overhead (analytical model):");
+    let mut t = Table::new(&["component", "area (mm^2)", "power (W)"]);
+    for (name, area, power) in hw.rows() {
+        let a = if area > 0.0 { format!("{area:.0}") } else { "N/A".into() };
+        t.row(&[name, a, format!("{power:.2}")]);
+    }
+    t.row(&[
+        "Total".into(),
+        format!("{:.0}", hw.total_area_mm2()),
+        format!("{:.2}", hw.total_power_w()),
+    ]);
+    t.print();
+    println!(
+        "power budget fraction: {:.2}% (paper: <1%)",
+        100.0 * hw.power_budget_fraction()
+    );
+    0
+}

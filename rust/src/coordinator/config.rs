@@ -1,0 +1,155 @@
+//! Physical system parameters (paper Table II) and fabric construction
+//! (Table IV).
+
+use crate::fabric::fred::{FredFabric, FredVariant};
+use crate::fabric::mesh::Mesh2D;
+use crate::fabric::topology::Fabric;
+use crate::util::units::{GBPS, TBPS, TFLOPS};
+
+/// Peak NPU compute, FP16 (Table II: GPU-like, 1000 TFLOPS).
+pub const NPU_PEAK_FLOPS: f64 = 1000.0 * TFLOPS;
+
+/// Sustained MXU efficiency on dense layers (Megatron-LM-class
+/// utilization; see DESIGN.md §4 — rescales comp vs comm uniformly).
+pub const MXU_EFFICIENCY: f64 = 0.45;
+
+/// NPU-to-fabric bandwidth per direction (Table II: 3 TBps send + 3 recv).
+pub const NPU_BW: f64 = 3.0 * TBPS;
+
+/// Mesh NPU-to-NPU link bandwidth per direction (Sec. VI-B2).
+pub const MESH_LINK_BW: f64 = 750.0 * GBPS;
+
+/// Per-I/O-controller bandwidth (Table II: CXL-3, 128 GBps).
+pub const IO_BW: f64 = 128.0 * GBPS;
+
+/// Number of I/O controllers on the wafer.
+pub const N_IO: usize = 18;
+
+/// Wafer-link hop latency (Table II: 20 ns).
+pub const HOP_LATENCY: f64 = 20e-9;
+
+/// NPUs on the wafer (15 kW / 700 W, rounded down for margin, Sec. VI-B1).
+pub const N_NPU: usize = 20;
+
+/// Per-NPU HBM capacity, bytes (Table II: 80 GB).
+pub const HBM_CAPACITY: f64 = 80e9;
+
+/// Per-NPU HBM bandwidth (Table II: 3 TBps).
+pub const HBM_BW: f64 = 3.0 * TBPS;
+
+/// Wafer power budget, W (Sec. VI-B).
+pub const WAFER_POWER_W: f64 = 15_000.0;
+
+/// Samples per DP replica per iteration (Sec. VII-C: minibatch = DP×16).
+pub const SAMPLES_PER_REPLICA: usize = 16;
+
+/// The evaluated fabrics (Table IV).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FabricKind {
+    /// 5×4 2D mesh, 3.75 TBps bisection.
+    Baseline,
+    /// FRED @ baseline bisection, endpoint collectives.
+    FredA,
+    /// FRED @ baseline bisection, in-network.
+    FredB,
+    /// FRED @ 30 TBps bisection, endpoint collectives.
+    FredC,
+    /// FRED @ 30 TBps bisection, in-network.
+    FredD,
+}
+
+impl FabricKind {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "baseline" | "mesh" | "2d-mesh" => Some(FabricKind::Baseline),
+            "fred-a" | "freda" | "a" => Some(FabricKind::FredA),
+            "fred-b" | "fredb" | "b" => Some(FabricKind::FredB),
+            "fred-c" | "fredc" | "c" => Some(FabricKind::FredC),
+            "fred-d" | "fredd" | "d" => Some(FabricKind::FredD),
+            _ => None,
+        }
+    }
+
+    /// Display name (Table IV).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FabricKind::Baseline => "Baseline",
+            FabricKind::FredA => "FRED-A",
+            FabricKind::FredB => "FRED-B",
+            FabricKind::FredC => "FRED-C",
+            FabricKind::FredD => "FRED-D",
+        }
+    }
+
+    /// All five configurations.
+    pub fn all() -> [FabricKind; 5] {
+        [
+            FabricKind::Baseline,
+            FabricKind::FredA,
+            FabricKind::FredB,
+            FabricKind::FredC,
+            FabricKind::FredD,
+        ]
+    }
+
+    /// Build the fabric at the paper's parameters.
+    pub fn build(&self) -> Box<dyn Fabric> {
+        match self {
+            FabricKind::Baseline => Box::new(Mesh2D::paper_baseline()),
+            FabricKind::FredA => Box::new(FredFabric::paper(FredVariant::A)),
+            FabricKind::FredB => Box::new(FredFabric::paper(FredVariant::B)),
+            FabricKind::FredC => Box::new(FredFabric::paper(FredVariant::C)),
+            FabricKind::FredD => Box::new(FredFabric::paper(FredVariant::D)),
+        }
+    }
+
+    /// True for mesh (decides placement NPU ordering).
+    pub fn is_mesh(&self) -> bool {
+        matches!(self, FabricKind::Baseline)
+    }
+}
+
+/// Effective sustained FLOP/s of one NPU.
+pub fn npu_effective_flops() -> f64 {
+    NPU_PEAK_FLOPS * MXU_EFFICIENCY
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_ii_constants() {
+        assert_eq!(NPU_PEAK_FLOPS, 1e15);
+        assert_eq!(NPU_BW, 3e12);
+        assert_eq!(MESH_LINK_BW, 750e9);
+        assert_eq!(IO_BW, 128e9);
+        assert_eq!(N_IO, 18);
+        assert_eq!(N_NPU, 20);
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for k in FabricKind::all() {
+            assert_eq!(FabricKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(FabricKind::parse("mesh"), Some(FabricKind::Baseline));
+        assert_eq!(FabricKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn build_produces_20_npus_everywhere() {
+        for k in FabricKind::all() {
+            let f = k.build();
+            assert_eq!(f.npu_count(), 20, "{}", k.name());
+            assert_eq!(f.io_count(), 18);
+        }
+    }
+
+    #[test]
+    fn power_budget_supports_20_npus() {
+        // 15 kW / 700 W ≈ 21 NPUs; we keep 20 (Sec. VI-B1).
+        assert!(((WAFER_POWER_W / 700.0) as usize) >= N_NPU);
+    }
+}

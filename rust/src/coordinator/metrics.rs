@@ -1,0 +1,173 @@
+//! Result records: the end-to-end breakdown of Figs. 2 and 10 — total
+//! time decomposed into compute and *exposed* communication per source
+//! (Sec. VII-D: "exposed communication time refers to the amount of time
+//! that is not overlapped with the compute time").
+
+/// Sources of exposed communication time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum CommType {
+    /// Initial minibatch load from the I/O channels.
+    InputLoad,
+    /// Model-parallel activation/input-gradient sync (blocking).
+    Mp,
+    /// Data-parallel weight-gradient All-Reduce (overlappable).
+    Dp,
+    /// Pipeline stage-boundary activation/gradient transfer.
+    Pp,
+    /// Weight streaming in/out (weight-streaming mode only).
+    Stream,
+}
+
+impl CommType {
+    /// All types, plot order.
+    pub fn all() -> [CommType; 5] {
+        [
+            CommType::InputLoad,
+            CommType::Mp,
+            CommType::Dp,
+            CommType::Pp,
+            CommType::Stream,
+        ]
+    }
+
+    /// Label used in the figures.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CommType::InputLoad => "input_load",
+            CommType::Mp => "MP comm",
+            CommType::Dp => "DP comm",
+            CommType::Pp => "PP comm",
+            CommType::Stream => "weight_stream",
+        }
+    }
+}
+
+/// One iteration's time breakdown (seconds).
+#[derive(Debug, Clone, Default)]
+pub struct Breakdown {
+    /// Compute time (includes pipeline bubbles; see DESIGN.md §4).
+    pub compute: f64,
+    /// Exposed comm per source, indexed by [`CommType::all`] order.
+    pub exposed: [f64; 5],
+}
+
+impl Breakdown {
+    /// Add exposed time to a source.
+    pub fn add(&mut self, t: CommType, secs: f64) {
+        let i = CommType::all().iter().position(|&x| x == t).unwrap();
+        self.exposed[i] += secs;
+    }
+
+    /// Exposed time of a source.
+    pub fn get(&self, t: CommType) -> f64 {
+        let i = CommType::all().iter().position(|&x| x == t).unwrap();
+        self.exposed[i]
+    }
+
+    /// Total exposed comm.
+    pub fn total_exposed(&self) -> f64 {
+        self.exposed.iter().sum()
+    }
+
+    /// End-to-end iteration time.
+    pub fn total(&self) -> f64 {
+        self.compute + self.total_exposed()
+    }
+
+    /// Fractions (compute, per-comm) of the total.
+    pub fn fractions(&self) -> (f64, [f64; 5]) {
+        let t = self.total().max(1e-30);
+        let mut e = self.exposed;
+        for x in &mut e {
+            *x /= t;
+        }
+        (self.compute / t, e)
+    }
+
+    /// Scale every component (used when averaging iterations).
+    pub fn scaled(&self, k: f64) -> Breakdown {
+        let mut b = self.clone();
+        b.compute *= k;
+        for x in &mut b.exposed {
+            *x *= k;
+        }
+        b
+    }
+
+    /// Sum of two breakdowns.
+    pub fn plus(&self, other: &Breakdown) -> Breakdown {
+        let mut b = self.clone();
+        b.compute += other.compute;
+        for (x, y) in b.exposed.iter_mut().zip(other.exposed) {
+            *x += y;
+        }
+        b
+    }
+
+    /// Speedup of `self` (baseline) over `other`.
+    pub fn speedup_over(&self, other: &Breakdown) -> f64 {
+        self.total() / other.total().max(1e-30)
+    }
+
+    /// One-line report normalized to `norm` seconds.
+    pub fn report_normalized(&self, norm: f64) -> String {
+        let n = norm.max(1e-30);
+        let mut s = format!("total {:.3} | comp {:.3}", self.total() / n, self.compute / n);
+        for (i, t) in CommType::all().iter().enumerate() {
+            if self.exposed[i] > 1e-12 * n {
+                s.push_str(&format!(" | {} {:.3}", t.name(), self.exposed[i] / n));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_get_total() {
+        let mut b = Breakdown { compute: 1.0, ..Default::default() };
+        b.add(CommType::Dp, 0.5);
+        b.add(CommType::Dp, 0.25);
+        b.add(CommType::Mp, 0.25);
+        assert_eq!(b.get(CommType::Dp), 0.75);
+        assert_eq!(b.total_exposed(), 1.0);
+        assert_eq!(b.total(), 2.0);
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let mut b = Breakdown { compute: 2.0, ..Default::default() };
+        b.add(CommType::Stream, 1.0);
+        b.add(CommType::InputLoad, 1.0);
+        let (c, e) = b.fractions();
+        let sum: f64 = c + e.iter().sum::<f64>();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedup_is_ratio_of_totals() {
+        let a = Breakdown { compute: 2.0, ..Default::default() };
+        let b = Breakdown { compute: 1.0, ..Default::default() };
+        assert!((a.speedup_over(&b) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plus_and_scaled() {
+        let mut a = Breakdown { compute: 1.0, ..Default::default() };
+        a.add(CommType::Pp, 0.5);
+        let s = a.plus(&a).scaled(0.5);
+        assert!((s.total() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_mentions_nonzero_sources() {
+        let mut b = Breakdown { compute: 1.0, ..Default::default() };
+        b.add(CommType::Stream, 0.5);
+        let r = b.report_normalized(1.0);
+        assert!(r.contains("weight_stream"));
+        assert!(!r.contains("MP comm"));
+    }
+}

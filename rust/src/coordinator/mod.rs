@@ -1,0 +1,32 @@
+//! Layer-3 coordinator: everything between the fabric substrate and the
+//! CLI — the paper's evaluation methodology (Sec. VII) as code.
+//!
+//! * [`config`] — Table II / Table IV constants and fabric construction.
+//! * [`parallelism`] — 3D-parallelism strategies and MP/DP/PP groups
+//!   (Fig. 1's worker-id digit scheme).
+//! * [`placement`] — device placement: the baseline priority order and
+//!   FRED's MP-consecutive policy (Sec. V-C), plus congestion scoring.
+//! * [`workload`] — the Table V workloads as per-layer compute/param/
+//!   activation models.
+//! * [`schedule`] — the training-iteration schedule: weight-stationary
+//!   and weight-streaming execution modes (Sec. III-A), GPipe-style
+//!   microbatch pipelining.
+//! * [`sim`] — walks the schedule against a fabric and produces the
+//!   end-to-end breakdown (compute + exposed comm per source) that
+//!   Figs. 2, 9, 10 plot.
+//! * [`metrics`] — breakdown records, normalization, speedups.
+
+pub mod config;
+pub mod metrics;
+pub mod parallelism;
+pub mod placement;
+pub mod schedule;
+pub mod sim;
+pub mod workload;
+
+pub use config::FabricKind;
+pub use metrics::{Breakdown, CommType};
+pub use parallelism::Strategy;
+pub use placement::Placement;
+pub use sim::Simulator;
+pub use workload::Workload;

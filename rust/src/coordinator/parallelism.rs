@@ -1,0 +1,222 @@
+//! 3D-parallelism strategies and worker groups (paper Sec. II-C, Fig. 1).
+//!
+//! A strategy MP(m)-DP(d)-PP(p) arranges `m*d*p` logical training workers.
+//! Each worker has a 3-digit id (mp, dp, pp); workers sharing (dp, pp)
+//! form an MP group (activation/input-gradient sync), workers sharing
+//! (mp, pp) form a DP group (weight-gradient All-Reduce), and workers
+//! sharing (mp, dp) form a PP group (stage-boundary activations).
+
+/// A parallelization strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Strategy {
+    /// Model-parallel width.
+    pub mp: usize,
+    /// Data-parallel width.
+    pub dp: usize,
+    /// Pipeline-parallel depth.
+    pub pp: usize,
+}
+
+/// A logical worker id (the paper's 3-digit naming).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WorkerId {
+    /// Offset within the MP group (first digit).
+    pub mp: usize,
+    /// Offset within the DP group (second digit).
+    pub dp: usize,
+    /// Offset within the PP group (third digit).
+    pub pp: usize,
+}
+
+impl std::fmt::Display for Strategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MP({})-DP({})-PP({})", self.mp, self.dp, self.pp)
+    }
+}
+
+impl Strategy {
+    /// Build; all dimensions must be >= 1.
+    pub fn new(mp: usize, dp: usize, pp: usize) -> Self {
+        assert!(mp >= 1 && dp >= 1 && pp >= 1, "dims must be >= 1");
+        Self { mp, dp, pp }
+    }
+
+    /// Parse "MP(4)-DP(3)-PP(2)" or "4,3,2" or "4x3x2".
+    pub fn parse(s: &str) -> Option<Self> {
+        let digits: Vec<usize> = s
+            .split(|c: char| !c.is_ascii_digit())
+            .filter(|t| !t.is_empty())
+            .filter_map(|t| t.parse().ok())
+            .collect();
+        if digits.len() == 3 && digits.iter().all(|&d| d >= 1) {
+            Some(Self::new(digits[0], digits[1], digits[2]))
+        } else {
+            None
+        }
+    }
+
+    /// Number of workers.
+    pub fn workers(&self) -> usize {
+        self.mp * self.dp * self.pp
+    }
+
+    /// Linear index of a worker (MP fastest, then PP, then DP — the
+    /// FRED placement order of Sec. V-C; placement maps this to NPUs).
+    pub fn linear(&self, w: WorkerId) -> usize {
+        debug_assert!(w.mp < self.mp && w.dp < self.dp && w.pp < self.pp);
+        w.mp + self.mp * (w.pp + self.pp * w.dp)
+    }
+
+    /// Inverse of [`Self::linear`].
+    pub fn worker_at(&self, idx: usize) -> WorkerId {
+        debug_assert!(idx < self.workers());
+        let mp = idx % self.mp;
+        let rest = idx / self.mp;
+        let pp = rest % self.pp;
+        let dp = rest / self.pp;
+        WorkerId { mp, dp, pp }
+    }
+
+    /// All MP groups, each a list of linear worker indices ordered by mp
+    /// digit. `dp*pp` groups of size `mp`.
+    pub fn mp_groups(&self) -> Vec<Vec<usize>> {
+        let mut out = Vec::with_capacity(self.dp * self.pp);
+        for dp in 0..self.dp {
+            for pp in 0..self.pp {
+                out.push(
+                    (0..self.mp)
+                        .map(|mp| self.linear(WorkerId { mp, dp, pp }))
+                        .collect(),
+                );
+            }
+        }
+        out
+    }
+
+    /// All DP groups (`mp*pp` groups of size `dp`).
+    pub fn dp_groups(&self) -> Vec<Vec<usize>> {
+        let mut out = Vec::with_capacity(self.mp * self.pp);
+        for mp in 0..self.mp {
+            for pp in 0..self.pp {
+                out.push(
+                    (0..self.dp)
+                        .map(|dp| self.linear(WorkerId { mp, dp, pp }))
+                        .collect(),
+                );
+            }
+        }
+        out
+    }
+
+    /// All PP groups (`mp*dp` groups of size `pp`), ordered by stage.
+    pub fn pp_groups(&self) -> Vec<Vec<usize>> {
+        let mut out = Vec::with_capacity(self.mp * self.dp);
+        for mp in 0..self.mp {
+            for dp in 0..self.dp {
+                out.push(
+                    (0..self.pp)
+                        .map(|pp| self.linear(WorkerId { mp, dp, pp }))
+                        .collect(),
+                );
+            }
+        }
+        out
+    }
+
+    /// Workers of pipeline stage `pp` within DP replica `dp` (an MP
+    /// group) — the unit that computes one stage.
+    pub fn stage_workers(&self, dp: usize, pp: usize) -> Vec<usize> {
+        (0..self.mp)
+            .map(|mp| self.linear(WorkerId { mp, dp, pp }))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_parse() {
+        let s = Strategy::new(4, 3, 2);
+        assert_eq!(s.to_string(), "MP(4)-DP(3)-PP(2)");
+        assert_eq!(Strategy::parse("MP(4)-DP(3)-PP(2)"), Some(s));
+        assert_eq!(Strategy::parse("4,3,2"), Some(s));
+        assert_eq!(Strategy::parse("4x3x2"), Some(s));
+        assert_eq!(Strategy::parse("4,0,2"), None);
+        assert_eq!(Strategy::parse("4,2"), None);
+    }
+
+    #[test]
+    fn workers_product() {
+        assert_eq!(Strategy::new(4, 3, 2).workers(), 24);
+        assert_eq!(Strategy::new(1, 20, 1).workers(), 20);
+    }
+
+    #[test]
+    fn linear_roundtrip() {
+        let s = Strategy::new(3, 4, 2);
+        for idx in 0..s.workers() {
+            let w = s.worker_at(idx);
+            assert_eq!(s.linear(w), idx);
+        }
+    }
+
+    #[test]
+    fn fig1_group_structure() {
+        // The paper's example: MP(4)-DP(3)-PP(2).
+        let s = Strategy::new(4, 3, 2);
+        assert_eq!(s.mp_groups().len(), 6, "six MP groups");
+        assert_eq!(s.dp_groups().len(), 8, "eight DP groups (eight concurrent All-Reduces)");
+        assert_eq!(s.pp_groups().len(), 12, "twelve PP groups");
+        for g in s.mp_groups() {
+            assert_eq!(g.len(), 4);
+        }
+        for g in s.dp_groups() {
+            assert_eq!(g.len(), 3);
+        }
+        for g in s.pp_groups() {
+            assert_eq!(g.len(), 2);
+        }
+    }
+
+    #[test]
+    fn groups_partition_workers() {
+        let s = Strategy::new(2, 5, 2);
+        for groups in [s.mp_groups(), s.dp_groups(), s.pp_groups()] {
+            let mut all: Vec<usize> = groups.concat();
+            all.sort_unstable();
+            assert_eq!(all, (0..20).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn mp_group_is_consecutive_in_linear_order() {
+        // MP fastest in the linear index (Sec. V-C placement invariant).
+        let s = Strategy::new(5, 2, 2);
+        for g in s.mp_groups() {
+            for w in g.windows(2) {
+                assert_eq!(w[1], w[0] + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn stage_workers_match_mp_groups() {
+        let s = Strategy::new(3, 3, 2);
+        let sw = s.stage_workers(1, 0);
+        assert_eq!(sw.len(), 3);
+        assert!(s.mp_groups().contains(&sw));
+    }
+
+    #[test]
+    fn workers_with_same_dp_pp_share_mp_group() {
+        // Paper Fig. 1: workers 000,100,200,300 form an MP group.
+        let s = Strategy::new(4, 3, 2);
+        let g = &s.mp_groups()[0];
+        let ids: Vec<WorkerId> = g.iter().map(|&i| s.worker_at(i)).collect();
+        assert!(ids.iter().all(|w| w.dp == 0 && w.pp == 0));
+        let mps: Vec<usize> = ids.iter().map(|w| w.mp).collect();
+        assert_eq!(mps, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,277 @@
+//! Device placement: logical workers → physical NPUs (paper Sec. III-B2,
+//! V-C, VII-C).
+//!
+//! Both the baseline and FRED use a *dimension-priority* placement: order
+//! the workers with the highest-priority dimension varying fastest and
+//! assign them to a physical NPU order. The physical order is what
+//! differs: on the mesh it is the Hamiltonian snake (so "consecutive"
+//! means physically adjacent); on FRED it is plain NPU index (so
+//! consecutive workers share an L1 switch).
+//!
+//! * baseline: priority MP > PP > DP (Sec. VII-C, following Megatron-LM).
+//! * FRED: MP consecutive, then PP, then DP (Sec. V-C) — the order that
+//!   makes all 3D-parallelism flow sets conflict-free on FRED₃(P).
+//!
+//! Random placements and a congestion score are provided for the
+//! placement-exploration example (the Fig. 5 trade-off).
+
+use super::parallelism::Strategy;
+use crate::fabric::topology::{CollectiveKind, Fabric, NpuId};
+use crate::util::prng::Xorshift64;
+
+/// Which dimension varies fastest, middle, slowest in worker order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Priority {
+    /// MP fastest, then PP, then DP (the paper's default everywhere).
+    MpPpDp,
+    /// MP fastest, then DP, then PP (ablation: favors DP over PP).
+    MpDpPp,
+    /// DP fastest (ablation: the Fig. 5(b) style placement).
+    DpPpMp,
+}
+
+/// A placement: `npu_of[w]` is the physical NPU of logical worker `w`
+/// (in the strategy's linear order).
+#[derive(Debug, Clone)]
+pub struct Placement {
+    npu_of: Vec<NpuId>,
+}
+
+impl Placement {
+    /// Dimension-priority placement onto a physical NPU order.
+    ///
+    /// `npu_order` is the physical sequence "consecutive" refers to (the
+    /// snake cycle for the mesh; identity for FRED). Only the first
+    /// `strategy.workers()` NPUs are used; extras stay idle (non-aligned
+    /// strategies, e.g. T-17B's 18 workers on 20 NPUs).
+    pub fn by_priority(strategy: &Strategy, priority: Priority, npu_order: &[NpuId]) -> Self {
+        let n = strategy.workers();
+        assert!(
+            npu_order.len() >= n,
+            "need at least {n} NPUs, got {}",
+            npu_order.len()
+        );
+        let mut npu_of = vec![0usize; n];
+        let mut slot = 0usize;
+        // Enumerate workers with the chosen dimension order; assign the
+        // physical order slots in sequence.
+        let (d0, d1, d2) = match priority {
+            Priority::MpPpDp => ("mp", "pp", "dp"),
+            Priority::MpDpPp => ("mp", "dp", "pp"),
+            Priority::DpPpMp => ("dp", "pp", "mp"),
+        };
+        let dim = |name: &str| match name {
+            "mp" => strategy.mp,
+            "dp" => strategy.dp,
+            "pp" => strategy.pp,
+            _ => unreachable!(),
+        };
+        for i2 in 0..dim(d2) {
+            for i1 in 0..dim(d1) {
+                for i0 in 0..dim(d0) {
+                    let get = |name: &str| -> usize {
+                        if name == d0 {
+                            i0
+                        } else if name == d1 {
+                            i1
+                        } else {
+                            i2
+                        }
+                    };
+                    let w = super::parallelism::WorkerId {
+                        mp: get("mp"),
+                        dp: get("dp"),
+                        pp: get("pp"),
+                    };
+                    npu_of[strategy.linear(w)] = npu_order[slot];
+                    slot += 1;
+                }
+            }
+        }
+        Self { npu_of }
+    }
+
+    /// The paper's placement for a fabric kind: snake order + MP>PP>DP on
+    /// the mesh; identity order + MP>PP>DP on FRED.
+    pub fn paper_default(
+        strategy: &Strategy,
+        mesh: Option<&crate::fabric::mesh::Mesh2D>,
+        n_npus: usize,
+    ) -> Self {
+        match mesh {
+            Some(m) => Self::by_priority(strategy, Priority::MpPpDp, &m.snake_cycle()),
+            None => {
+                let order: Vec<usize> = (0..n_npus).collect();
+                Self::by_priority(strategy, Priority::MpPpDp, &order)
+            }
+        }
+    }
+
+    /// Uniformly random placement (exploration baseline).
+    pub fn random(strategy: &Strategy, n_npus: usize, rng: &mut Xorshift64) -> Self {
+        let n = strategy.workers();
+        assert!(n_npus >= n);
+        let mut npus: Vec<usize> = (0..n_npus).collect();
+        rng.shuffle(&mut npus);
+        npus.truncate(n);
+        Self { npu_of: npus }
+    }
+
+    /// Physical NPU of a logical worker.
+    pub fn npu(&self, worker: usize) -> NpuId {
+        self.npu_of[worker]
+    }
+
+    /// Map a group of logical workers to physical NPUs.
+    pub fn map(&self, workers: &[usize]) -> Vec<NpuId> {
+        workers.iter().map(|&w| self.npu_of[w]).collect()
+    }
+
+    /// Number of placed workers.
+    pub fn len(&self) -> usize {
+        self.npu_of.len()
+    }
+
+    /// True if no workers.
+    pub fn is_empty(&self) -> bool {
+        self.npu_of.is_empty()
+    }
+
+    /// Validity: injective into [0, n_npus).
+    pub fn is_valid(&self, n_npus: usize) -> bool {
+        let mut seen = vec![false; n_npus];
+        for &n in &self.npu_of {
+            if n >= n_npus || seen[n] {
+                return false;
+            }
+            seen[n] = true;
+        }
+        true
+    }
+
+    /// Congestion score: the sum of the (concurrent) completion times of
+    /// the MP, DP and PP phases for a unit payload — lower is better.
+    /// This is the quantity the Fig. 5 trade-off is about: rigid fabrics
+    /// force you to pick which term to sacrifice.
+    pub fn congestion_score(&self, fabric: &dyn Fabric, strategy: &Strategy, bytes: f64) -> f64 {
+        let phase = |groups: Vec<Vec<usize>>, kind: CollectiveKind| -> f64 {
+            let plans: Vec<_> = groups
+                .iter()
+                .filter(|g| g.len() > 1)
+                .map(|g| fabric.plan_collective(kind, &self.map(g), bytes))
+                .collect();
+            if plans.is_empty() {
+                return 0.0;
+            }
+            fabric
+                .run_concurrent(&plans)
+                .into_iter()
+                .fold(0.0, f64::max)
+        };
+        phase(strategy.mp_groups(), CollectiveKind::AllReduce)
+            + phase(strategy.dp_groups(), CollectiveKind::AllReduce)
+            + phase(strategy.pp_groups(), CollectiveKind::Multicast)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::mesh::Mesh2D;
+
+    #[test]
+    fn priority_mp_consecutive_on_identity_order() {
+        // FRED placement: MP peers land on consecutive NPUs (same L1).
+        let s = Strategy::new(4, 5, 1);
+        let order: Vec<usize> = (0..20).collect();
+        let p = Placement::by_priority(&s, Priority::MpPpDp, &order);
+        for g in s.mp_groups() {
+            let npus = p.map(&g);
+            for w in npus.windows(2) {
+                assert_eq!(w[1], w[0] + 1, "MP peers must be consecutive");
+            }
+        }
+    }
+
+    #[test]
+    fn fred_mp_groups_fit_l1_switches() {
+        // MP(4): each MP group is exactly one L1 group {4k..4k+3}.
+        let s = Strategy::new(4, 5, 1);
+        let order: Vec<usize> = (0..20).collect();
+        let p = Placement::by_priority(&s, Priority::MpPpDp, &order);
+        for g in s.mp_groups() {
+            let npus = p.map(&g);
+            let l1: Vec<usize> = npus.iter().map(|&n| n / 4).collect();
+            assert!(l1.windows(2).all(|w| w[0] == w[1]), "{npus:?}");
+        }
+    }
+
+    #[test]
+    fn placement_is_injective() {
+        let s = Strategy::new(3, 3, 2);
+        let order: Vec<usize> = (0..20).collect();
+        let p = Placement::by_priority(&s, Priority::MpPpDp, &order);
+        assert_eq!(p.len(), 18);
+        assert!(p.is_valid(20));
+    }
+
+    #[test]
+    fn random_placement_is_valid_permutation() {
+        let s = Strategy::new(2, 5, 2);
+        let mut rng = Xorshift64::new(5);
+        for _ in 0..20 {
+            let p = Placement::random(&s, 20, &mut rng);
+            assert!(p.is_valid(20));
+        }
+    }
+
+    #[test]
+    fn priority_orders_differ() {
+        let s = Strategy::new(2, 4, 2);
+        let order: Vec<usize> = (0..20).collect();
+        let a = Placement::by_priority(&s, Priority::MpPpDp, &order);
+        let b = Placement::by_priority(&s, Priority::DpPpMp, &order);
+        let same = (0..s.workers()).all(|w| a.npu(w) == b.npu(w));
+        assert!(!same);
+    }
+
+    #[test]
+    fn mesh_default_uses_snake_adjacency() {
+        // On the mesh, MP(5) groups become physically contiguous snake
+        // segments: consecutive members are 1 hop apart.
+        let m = Mesh2D::paper_baseline();
+        let s = Strategy::new(5, 4, 1);
+        let p = Placement::paper_default(&s, Some(&m), 20);
+        for g in s.mp_groups() {
+            let npus = p.map(&g);
+            for w in npus.windows(2) {
+                assert_eq!(m.xy_path(w[0], w[1]).len(), 1, "{npus:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn congestion_score_prefers_paper_placement_on_fred() {
+        use crate::fabric::fred::{FredFabric, FredVariant};
+        let f = FredFabric::paper(FredVariant::D);
+        let s = Strategy::new(4, 5, 1);
+        let order: Vec<usize> = (0..20).collect();
+        let good = Placement::by_priority(&s, Priority::MpPpDp, &order);
+        let mut rng = Xorshift64::new(42);
+        let rand = Placement::random(&s, 20, &mut rng);
+        let sg = good.congestion_score(&f, &s, 1e9);
+        let sr = rand.congestion_score(&f, &s, 1e9);
+        assert!(sg <= sr * 1.001, "paper placement {sg} vs random {sr}");
+    }
+
+    #[test]
+    fn nonaligned_strategy_leaves_npus_idle() {
+        // T-17B: MP(3)-DP(3)-PP(2) = 18 workers on 20 NPUs.
+        let s = Strategy::new(3, 3, 2);
+        let order: Vec<usize> = (0..20).collect();
+        let p = Placement::by_priority(&s, Priority::MpPpDp, &order);
+        let used: std::collections::BTreeSet<usize> =
+            (0..18).map(|w| p.npu(w)).collect();
+        assert_eq!(used.len(), 18);
+    }
+}

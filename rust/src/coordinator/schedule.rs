@@ -1,0 +1,157 @@
+//! Pipeline-schedule arithmetic (GPipe-style, paper Sec. II-C / VII-C).
+//!
+//! Pure functions: stage partitioning balanced by FLOPs, the
+//! `(microbatches + stages − 1)` slot count, bubble fraction, and the
+//! exposed-DP queueing recurrence used to overlap gradient All-Reduces
+//! with backward compute.
+
+/// Split `weights[i]` (per-layer FLOPs) into `stages` contiguous groups
+/// with greedily balanced sums. Returns the start index of each stage.
+pub fn partition_stages(weights: &[f64], stages: usize) -> Vec<usize> {
+    assert!(stages >= 1 && stages <= weights.len().max(1));
+    let total: f64 = weights.iter().sum();
+    let target = total / stages as f64;
+    let mut starts = vec![0usize];
+    let mut acc = 0.0;
+    for (i, w) in weights.iter().enumerate() {
+        if starts.len() < stages && acc + w / 2.0 >= target * starts.len() as f64 {
+            if i > *starts.last().unwrap() {
+                starts.push(i);
+            }
+        }
+        acc += w;
+    }
+    while starts.len() < stages {
+        // Degenerate (few layers): split wherever possible.
+        let last = *starts.last().unwrap();
+        starts.push((last + 1).min(weights.len() - 1));
+    }
+    starts
+}
+
+/// Stage ranges from the starts: (start, end_exclusive) per stage.
+pub fn stage_ranges(starts: &[usize], n_layers: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(starts.len());
+    for (s, &a) in starts.iter().enumerate() {
+        let b = if s + 1 < starts.len() { starts[s + 1] } else { n_layers };
+        out.push((a, b));
+    }
+    out
+}
+
+/// GPipe slot count: a flush schedule runs `mb + stages − 1` slots.
+pub fn pipeline_slots(microbatches: usize, stages: usize) -> usize {
+    microbatches + stages - 1
+}
+
+/// Bubble fraction `(p−1)/(mb+p−1)` (Sec. VII-C picks mb to keep this
+/// small: 8 microbatches at pp=2 ⇒ 1/9).
+pub fn bubble_fraction(microbatches: usize, stages: usize) -> f64 {
+    (stages as f64 - 1.0) / pipeline_slots(microbatches, stages) as f64
+}
+
+/// Exposed DP time from bucketed overlap: backward compute emits gradient
+/// buckets at a steady rate; each bucket's All-Reduce (duration
+/// `bucket_comm`) starts when its bucket is ready and serializes on the
+/// network. The recurrence yields the tail not hidden by compute.
+pub fn exposed_dp_time(bwd_compute: f64, bucket_comm: &[f64]) -> f64 {
+    let n = bucket_comm.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let per_bucket = bwd_compute / n as f64;
+    let mut net_free = 0.0_f64; // when the network finishes the previous AR
+    let mut done = 0.0_f64;
+    for (i, &c) in bucket_comm.iter().enumerate() {
+        let ready = per_bucket * (i + 1) as f64;
+        let start = net_free.max(ready);
+        done = start + c;
+        net_free = done;
+    }
+    (done - bwd_compute).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_balances_uniform_weights() {
+        let w = vec![1.0; 12];
+        let starts = partition_stages(&w, 4);
+        assert_eq!(starts, vec![0, 3, 6, 9]);
+        let ranges = stage_ranges(&starts, 12);
+        assert!(ranges.iter().all(|(a, b)| b - a == 3));
+    }
+
+    #[test]
+    fn partition_single_stage() {
+        let w = vec![1.0, 2.0, 3.0];
+        assert_eq!(partition_stages(&w, 1), vec![0]);
+    }
+
+    #[test]
+    fn partition_handles_skewed_weights() {
+        let w = vec![10.0, 1.0, 1.0, 1.0, 1.0, 10.0];
+        let starts = partition_stages(&w, 2);
+        let ranges = stage_ranges(&starts, 6);
+        let sums: Vec<f64> = ranges
+            .iter()
+            .map(|&(a, b)| w[a..b].iter().sum())
+            .collect();
+        let imb = (sums[0] - sums[1]).abs() / (sums[0] + sums[1]);
+        assert!(imb < 0.45, "{sums:?}");
+    }
+
+    #[test]
+    fn ranges_cover_all_layers() {
+        let w = vec![1.0; 78];
+        for stages in [1, 2, 3, 5] {
+            let starts = partition_stages(&w, stages);
+            let ranges = stage_ranges(&starts, 78);
+            assert_eq!(ranges.len(), stages);
+            assert_eq!(ranges[0].0, 0);
+            assert_eq!(ranges.last().unwrap().1, 78);
+            for win in ranges.windows(2) {
+                assert_eq!(win[0].1, win[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn slots_and_bubble() {
+        assert_eq!(pipeline_slots(8, 2), 9);
+        assert!((bubble_fraction(8, 2) - 1.0 / 9.0).abs() < 1e-12);
+        assert_eq!(pipeline_slots(1, 1), 1);
+        assert_eq!(bubble_fraction(1, 1), 0.0);
+    }
+
+    #[test]
+    fn dp_fully_hidden_when_comm_is_cheap() {
+        // 10 buckets, each AR much faster than the compute interval.
+        let e = exposed_dp_time(1.0, &vec![0.001; 10]);
+        assert!((e - 0.001).abs() < 1e-9, "only the last tail shows: {e}");
+    }
+
+    #[test]
+    fn dp_fully_exposed_when_compute_is_zero() {
+        let e = exposed_dp_time(0.0, &vec![0.1; 5]);
+        assert!((e - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dp_queueing_builds_up() {
+        // Comm slower than compute: exposure = total comm − hidden part.
+        let e = exposed_dp_time(1.0, &vec![0.2; 10]);
+        // Network: buckets ready at 0.1k; ARs serialize: done = max chain
+        // = 0.1 + 10×0.2 = 2.1 -> exposed 1.1.
+        assert!((e - 1.1).abs() < 1e-9, "{e}");
+    }
+
+    #[test]
+    fn dp_exposure_monotone_in_comm() {
+        let a = exposed_dp_time(1.0, &vec![0.05; 8]);
+        let b = exposed_dp_time(1.0, &vec![0.10; 8]);
+        assert!(b >= a);
+    }
+}

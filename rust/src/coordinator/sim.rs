@@ -1,0 +1,510 @@
+//! The end-to-end training-iteration simulator (paper Sec. VII-D):
+//! ASTRA-SIM-style walk of one iteration against a fabric, producing the
+//! compute + exposed-comm breakdown of Figs. 2 and 10, plus the Fig. 9
+//! communication microbenchmarks.
+//!
+//! Modelling summary (details in DESIGN.md §4):
+//!
+//! * **compute** — `FLOPs / (1 PFLOP × MXU eff × compute_scale)`,
+//!   identical on every fabric; pipeline bubbles are folded into compute.
+//! * **MP comm** — per-layer Megatron All-Reduces on the activation,
+//!   *blocking*: all MP groups run concurrently (congestion resolved by
+//!   the fluid simulator) and the time is exposed.
+//! * **DP comm** — bucketed gradient All-Reduces overlapped with backward
+//!   compute via the queueing recurrence of [`schedule::exposed_dp_time`].
+//! * **PP comm** — per-microbatch stage-boundary multicast (one MP-group
+//!   member suffices as source — the paper's footnote 6), exposed per
+//!   pipeline slot.
+//! * **weight streaming** — layer groups stream in during fwd and again
+//!   during bwd; gradients reduce-stream out concurrently (opposite link
+//!   direction); exposure is `max(0, io − compute)` per group, and the
+//!   input load cannot be prefetched (I/O is saturated) — exactly the
+//!   Transformer-1T discussion in Sec. VIII.
+
+use super::config::{self, FabricKind};
+use super::metrics::{Breakdown, CommType};
+use super::parallelism::Strategy;
+use super::placement::Placement;
+use super::schedule;
+use super::workload::{ExecMode, Workload};
+use crate::fabric::mesh::Mesh2D;
+use crate::fabric::topology::{CollectiveKind, Fabric, IoDirection, Plan};
+
+/// A workload+strategy+fabric simulation context.
+pub struct Simulator {
+    kind: FabricKind,
+    fabric: Box<dyn Fabric>,
+    /// Kept for snake ordering / channel-load analysis on the baseline.
+    mesh: Option<Mesh2D>,
+    workload: Workload,
+    strategy: Strategy,
+    placement: Placement,
+}
+
+impl Simulator {
+    /// Build with the paper's default placement for the fabric kind.
+    pub fn new(kind: FabricKind, workload: Workload, strategy: Strategy) -> Self {
+        assert!(
+            strategy.workers() <= config::N_NPU,
+            "{strategy} needs {} workers > {} NPUs",
+            strategy.workers(),
+            config::N_NPU
+        );
+        let fabric = kind.build();
+        let mesh = if kind.is_mesh() {
+            Some(Mesh2D::paper_baseline())
+        } else {
+            None
+        };
+        let placement = Placement::paper_default(&strategy, mesh.as_ref(), config::N_NPU);
+        Self { kind, fabric, mesh, workload, strategy, placement }
+    }
+
+    /// Override the placement (placement-exploration example).
+    pub fn with_placement(mut self, placement: Placement) -> Self {
+        assert!(placement.is_valid(config::N_NPU));
+        assert_eq!(placement.len(), self.strategy.workers());
+        self.placement = placement;
+        self
+    }
+
+    /// The fabric kind.
+    pub fn kind(&self) -> FabricKind {
+        self.kind
+    }
+
+    /// The strategy.
+    pub fn strategy(&self) -> Strategy {
+        self.strategy
+    }
+
+    /// The workload.
+    pub fn workload(&self) -> &Workload {
+        &self.workload
+    }
+
+    /// Borrow the fabric.
+    pub fn fabric(&self) -> &dyn Fabric {
+        self.fabric.as_ref()
+    }
+
+    /// The placement in use.
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    // ------------------------------------------------------ comm phases
+
+    /// Time for one concurrent round of collectives over logical groups.
+    fn phase_time(&self, groups: &[Vec<usize>], kind: CollectiveKind, bytes: f64) -> f64 {
+        let plans: Vec<Plan> = groups
+            .iter()
+            .filter(|g| g.len() > 1)
+            .map(|g| self.fabric.plan_collective(kind, &self.placement.map(g), bytes))
+            .collect();
+        if plans.is_empty() || bytes <= 0.0 {
+            return 0.0;
+        }
+        self.fabric
+            .run_concurrent(&plans)
+            .into_iter()
+            .fold(0.0, f64::max)
+    }
+
+    /// One concurrent MP All-Reduce round on `bytes` per worker.
+    pub fn mp_round(&self, bytes: f64) -> f64 {
+        self.phase_time(&self.strategy.mp_groups(), CollectiveKind::AllReduce, bytes)
+    }
+
+    /// One concurrent DP All-Reduce round on `bytes` per worker.
+    pub fn dp_round(&self, bytes: f64) -> f64 {
+        self.phase_time(&self.strategy.dp_groups(), CollectiveKind::AllReduce, bytes)
+    }
+
+    /// One concurrent PP boundary transfer (multicast from one member of
+    /// stage s's MP group to stage s+1's MP group, per DP replica).
+    pub fn pp_round(&self, bytes: f64) -> f64 {
+        if self.strategy.pp < 2 || bytes <= 0.0 {
+            return 0.0;
+        }
+        let mut plans = Vec::new();
+        for dp in 0..self.strategy.dp {
+            for pp in 0..self.strategy.pp - 1 {
+                let src = self.strategy.stage_workers(dp, pp)[0];
+                let dests = self.strategy.stage_workers(dp, pp + 1);
+                let mut parts = vec![self.placement.npu(src)];
+                parts.extend(self.placement.map(&dests));
+                plans.push(self.fabric.plan_collective(
+                    CollectiveKind::Multicast,
+                    &parts,
+                    bytes,
+                ));
+            }
+        }
+        self.fabric
+            .run_concurrent(&plans)
+            .into_iter()
+            .fold(0.0, f64::max)
+    }
+
+    // -------------------------------------------------------- iteration
+
+    /// Simulate one training iteration.
+    pub fn iterate(&self) -> Breakdown {
+        match self.workload.exec_mode {
+            ExecMode::WeightStationary => self.iterate_stationary(),
+            ExecMode::WeightStreaming => self.iterate_streaming(),
+        }
+    }
+
+    /// Average of `n` iterations plus the pipeline warm-up of the first
+    /// (the paper simulates two iterations).
+    pub fn iterate_n(&self, n: usize) -> Breakdown {
+        // Iterations are deterministic and identical in steady state.
+        self.iterate().scaled(n as f64).scaled(1.0 / n as f64)
+    }
+
+    fn effective_flops(&self) -> f64 {
+        config::npu_effective_flops() * self.workload.compute_scale
+    }
+
+    fn comp_time(&self, flops: f64) -> f64 {
+        flops / self.effective_flops()
+    }
+
+    fn iterate_stationary(&self) -> Breakdown {
+        let w = &self.workload;
+        let s = &self.strategy;
+        let mut out = Breakdown::default();
+
+        let mb = w.microbatches.max(1);
+        let samples_replica = config::SAMPLES_PER_REPLICA as f64;
+        let mb_samples = samples_replica / mb as f64;
+
+        // Stage partition by FLOPs.
+        let flops: Vec<f64> = w.layers.iter().map(|l| l.fwd_flops).collect();
+        let starts = schedule::partition_stages(&flops, s.pp.min(w.layers.len()));
+        let ranges = schedule::stage_ranges(&starts, w.layers.len());
+        let slots = schedule::pipeline_slots(mb, s.pp) as f64;
+
+        // Per-stage per-microbatch compute & MP comm (fwd).
+        let mut f_comp_max = 0.0_f64;
+        let mut f_mp_max = 0.0_f64;
+        let mut boundary_act = 0.0_f64;
+        for (si, &(a, b)) in ranges.iter().enumerate() {
+            let stage_flops: f64 = w.layers[a..b]
+                .iter()
+                .map(|l| l.fwd_flops * mb_samples / s.mp as f64)
+                .sum();
+            f_comp_max = f_comp_max.max(self.comp_time(stage_flops));
+            // MP All-Reduces: group identical-size rounds.
+            let mut mp = 0.0;
+            if s.mp > 1 {
+                for l in &w.layers[a..b] {
+                    if l.mp_collectives > 0 {
+                        let t = self.mp_round(l.act_bytes * mb_samples);
+                        mp += t * l.mp_collectives as f64;
+                    }
+                }
+            }
+            f_mp_max = f_mp_max.max(mp);
+            if si + 1 < ranges.len() {
+                boundary_act = boundary_act.max(w.layers[b - 1].act_bytes * mb_samples);
+            }
+        }
+
+        // Pipeline totals; bwd compute = 2× fwd, bwd MP comm = fwd MP.
+        let compute = slots * (f_comp_max + 2.0 * f_comp_max);
+        let mp_exposed = slots * (f_mp_max + f_mp_max);
+        out.compute = compute;
+        out.add(CommType::Mp, mp_exposed);
+
+        // PP boundary transfers: fwd activation + bwd gradient per slot.
+        if s.pp > 1 {
+            let t = self.pp_round(boundary_act);
+            out.add(CommType::Pp, slots * 2.0 * t);
+        }
+
+        // DP gradient All-Reduce, bucketed. Exposed fully (the paper's
+        // Fig. 10 semantics) unless `overlap_dp` enables the bucketed
+        // overlap recurrence against backward compute.
+        if s.dp > 1 {
+            let shard = w.params_bytes() / s.mp as f64 / s.pp as f64;
+            let nb = w.dp_buckets.max(1);
+            let bucket_bytes = shard / nb as f64;
+            let per_bucket = self.dp_round(bucket_bytes);
+            let exposed = if w.overlap_dp {
+                let bwd_compute = compute * 2.0 / 3.0;
+                schedule::exposed_dp_time(bwd_compute, &vec![per_bucket; nb])
+            } else {
+                per_bucket * nb as f64
+            };
+            out.add(CommType::Dp, exposed);
+        }
+
+        // Input minibatch load: prefetched during the previous iteration
+        // (the I/O channels are otherwise idle in stationary mode).
+        out.add(CommType::InputLoad, 0.0);
+        out
+    }
+
+    fn iterate_streaming(&self) -> Breakdown {
+        let w = &self.workload;
+        let s = &self.strategy;
+        let mut out = Breakdown::default();
+        let all_npus: Vec<usize> = (0..s.workers()).map(|w| self.placement.npu(w)).collect();
+
+        let mb = w.microbatches.max(1);
+        let samples_replica = config::SAMPLES_PER_REPLICA as f64;
+        let mb_samples = samples_replica / mb as f64;
+
+        // Layer groups: `pp` consecutive layers on the wafer at a time
+        // (Sec. VII-C's GPT-3 discussion); pp=1 streams layer by layer.
+        let group = s.pp.max(1);
+        let layers = &w.layers;
+        let n_groups = layers.len().div_ceil(group);
+
+        let io_in_time = |bytes: f64| -> f64 {
+            if bytes <= 0.0 {
+                return 0.0;
+            }
+            let plan = self
+                .fabric
+                .plan_io_stream(IoDirection::Broadcast, bytes, &all_npus);
+            self.fabric.run_plan(&plan)
+        };
+        let io_out_time = |bytes: f64| -> f64 {
+            if bytes <= 0.0 {
+                return 0.0;
+            }
+            let plan = self
+                .fabric
+                .plan_io_stream(IoDirection::ReduceOut, bytes, &all_npus);
+            self.fabric.run_plan(&plan)
+        };
+
+        let mut compute_total = 0.0;
+        let mut mp_total = 0.0;
+        let mut pp_total = 0.0;
+        let mut stream_exposed = 0.0;
+
+        // fwd + bwd sweeps. In each sweep the group's weights stream in
+        // while the previous group computes; exposure is the non-hidden
+        // remainder. On bwd, gradients also stream out (ReduceOut, on the
+        // opposite link direction — concurrent with the next load).
+        for sweep in 0..2usize {
+            let bwd = sweep == 1;
+            let mut prev_overlap = 0.0_f64; // compute available to hide the next load
+            for gi in 0..n_groups {
+                let a = gi * group;
+                let b = ((gi + 1) * group).min(layers.len());
+                let params: f64 = layers[a..b].iter().map(|l| l.params_bytes).sum();
+                let flops: f64 = layers[a..b]
+                    .iter()
+                    .map(|l| {
+                        l.fwd_flops * w.active_param_fraction * mb_samples * mb as f64
+                            / s.mp as f64
+                    })
+                    .sum();
+                let comp = self.comp_time(flops) * if bwd { 2.0 } else { 1.0 };
+                // MP comm inside the group (blocking, adds to the hideable
+                // window denominator's wall time).
+                let mut mp = 0.0;
+                if s.mp > 1 {
+                    for l in &layers[a..b] {
+                        if l.mp_collectives > 0 {
+                            mp += self.mp_round(l.act_bytes * mb_samples)
+                                * l.mp_collectives as f64
+                                * mb as f64;
+                        }
+                    }
+                }
+                // PP handoff between the pp layers of the group.
+                let pp = if s.pp > 1 {
+                    self.pp_round(layers[b - 1].act_bytes * mb_samples) * mb as f64
+                } else {
+                    0.0
+                };
+
+                let mut io = io_in_time(params);
+                if bwd {
+                    // Gradients stream out; DP reduction happens in-path
+                    // (Sec. VII-C: "DP groups reduce the gradients as they
+                    // stream them out"). In/out use opposite directions,
+                    // so the group's I/O time is the max of the two.
+                    io = io.max(io_out_time(params));
+                }
+                stream_exposed += (io - prev_overlap).max(0.0);
+                // Prefetch: the next group's load hides under this
+                // group's compute only when double-buffering is possible.
+                prev_overlap = if w.stream_prefetch { comp + mp + pp } else { 0.0 };
+                compute_total += comp;
+                mp_total += mp;
+                pp_total += pp;
+            }
+            // The last group's compute hides nothing further.
+        }
+
+        out.compute = compute_total;
+        out.add(CommType::Mp, mp_total);
+        out.add(CommType::Pp, pp_total);
+        out.add(CommType::Stream, stream_exposed);
+
+        // Input load: I/O is saturated all iteration, so the minibatch
+        // load cannot be prefetched (the paper's Transformer-1T note).
+        let input_bytes = w.input_bytes * w.minibatch(s) as f64;
+        out.add(CommType::InputLoad, io_in_time(input_bytes));
+        out
+    }
+
+    // ---------------------------------------------------- microbenchmark
+
+    /// Fig. 9: per-phase effective NPU bandwidth (GB/s) for the current
+    /// strategy: (MP, DP, PP) with `bytes` per worker, all groups of each
+    /// phase concurrent. Entries are `None` when the phase is absent.
+    pub fn microbench(&self, bytes: f64) -> [Option<f64>; 3] {
+        use crate::fabric::collectives::endpoint_send_bytes;
+        let s = &self.strategy;
+        let mp = (s.mp > 1).then(|| {
+            let t = self.mp_round(bytes);
+            endpoint_send_bytes(CollectiveKind::AllReduce, s.mp, bytes) / t
+        });
+        let dp = (s.dp > 1).then(|| {
+            let t = self.dp_round(bytes);
+            endpoint_send_bytes(CollectiveKind::AllReduce, s.dp, bytes) / t
+        });
+        let pp = (s.pp > 1).then(|| {
+            let t = self.pp_round(bytes);
+            bytes / t
+        });
+        [mp, dp, pp]
+    }
+
+    /// The mesh model, when the fabric is the baseline.
+    pub fn mesh(&self) -> Option<&Mesh2D> {
+        self.mesh.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::workload;
+
+    fn sim(kind: FabricKind, w: Workload) -> Simulator {
+        let s = w.default_strategy;
+        Simulator::new(kind, w, s)
+    }
+
+    #[test]
+    fn resnet_baseline_has_dp_exposure() {
+        let b = sim(FabricKind::Baseline, workload::resnet152()).iterate();
+        assert!(b.compute > 0.0);
+        assert!(b.get(CommType::Dp) > 0.0, "{b:?}");
+        assert_eq!(b.get(CommType::Mp), 0.0);
+        assert_eq!(b.get(CommType::Stream), 0.0);
+    }
+
+    #[test]
+    fn resnet_fred_d_beats_baseline() {
+        let b = sim(FabricKind::Baseline, workload::resnet152()).iterate();
+        let d = sim(FabricKind::FredD, workload::resnet152()).iterate();
+        let speedup = b.speedup_over(&d);
+        assert!(speedup > 1.2, "speedup {speedup}");
+    }
+
+    #[test]
+    fn t17b_has_all_three_comm_types() {
+        let b = sim(FabricKind::Baseline, workload::transformer_17b()).iterate();
+        assert!(b.get(CommType::Mp) > 0.0);
+        assert!(b.get(CommType::Dp) > 0.0);
+        assert!(b.get(CommType::Pp) > 0.0);
+    }
+
+    #[test]
+    fn gpt3_streams() {
+        let b = sim(FabricKind::Baseline, workload::gpt3()).iterate();
+        assert!(b.get(CommType::Stream) > 0.0, "{b:?}");
+    }
+
+    #[test]
+    fn t1t_is_stream_bound_on_baseline() {
+        let b = sim(FabricKind::Baseline, workload::transformer_1t()).iterate();
+        // Weight streaming is the only (and dominant) comm overhead.
+        assert!(
+            b.get(CommType::Stream) > 0.5 * b.compute,
+            "stream {} vs comp {}",
+            b.get(CommType::Stream),
+            b.compute
+        );
+        assert_eq!(b.get(CommType::Mp), 0.0);
+        assert_eq!(b.get(CommType::Dp), 0.0, "DP folds into the grad stream-out");
+        // Input load is exposed for T-1T (paper Sec. VIII).
+        assert!(b.get(CommType::InputLoad) > 0.0);
+    }
+
+    #[test]
+    fn t1t_fred_speedup_near_paper() {
+        let b = sim(FabricKind::Baseline, workload::transformer_1t()).iterate();
+        let d = sim(FabricKind::FredD, workload::transformer_1t()).iterate();
+        let sp = b.speedup_over(&d);
+        assert!(sp > 1.2 && sp < 1.6, "T-1T speedup {sp} (paper: 1.4)");
+    }
+
+    #[test]
+    fn compute_is_fabric_invariant() {
+        let b = sim(FabricKind::Baseline, workload::transformer_17b()).iterate();
+        let d = sim(FabricKind::FredD, workload::transformer_17b()).iterate();
+        assert!((b.compute - d.compute).abs() / b.compute < 1e-9);
+    }
+
+    #[test]
+    fn fred_variants_order_on_t17b() {
+        let ws = workload::transformer_17b;
+        let totals: Vec<f64> = [
+            FabricKind::Baseline,
+            FabricKind::FredA,
+            FabricKind::FredB,
+            FabricKind::FredC,
+            FabricKind::FredD,
+        ]
+        .iter()
+        .map(|&k| sim(k, ws()).iterate().total())
+        .collect();
+        // C and D must beat the baseline; D must be the best.
+        assert!(totals[3] < totals[0], "{totals:?}");
+        assert!(totals[4] <= totals[3] * 1.001, "{totals:?}");
+    }
+
+    #[test]
+    fn microbench_reports_phases_present() {
+        let s = sim(FabricKind::FredD, workload::gpt3());
+        let [mp, dp, pp] = s.microbench(100e6);
+        assert!(mp.is_some() && dp.is_some() && pp.is_some());
+        let s2 = sim(FabricKind::FredD, workload::resnet152());
+        let [mp2, dp2, pp2] = s2.microbench(100e6);
+        assert!(mp2.is_none() && dp2.is_some() && pp2.is_none());
+    }
+
+    #[test]
+    fn wafer_wide_mp20_microbench_matches_fig9() {
+        // MP(20) on baseline: ~1.5 TBps effective; FRED-D: ~5.7 TBps.
+        let w = workload::transformer_17b();
+        let s = Strategy::new(20, 1, 1);
+        let base = Simulator::new(FabricKind::Baseline, w.clone(), s);
+        let [mp, _, _] = base.microbench(139e6);
+        let bw = mp.unwrap();
+        assert!((bw - 1.5e12).abs() / 1.5e12 < 0.1, "baseline {}", bw / 1e9);
+        let d = Simulator::new(FabricKind::FredD, w, s);
+        let [mp_d, _, _] = d.microbench(139e6);
+        let bw_d = mp_d.unwrap();
+        assert!(bw_d > 5.0e12, "FRED-D {}", bw_d / 1e9);
+    }
+
+    #[test]
+    fn iterate_is_deterministic() {
+        let a = sim(FabricKind::FredC, workload::gpt3()).iterate();
+        let b = sim(FabricKind::FredC, workload::gpt3()).iterate();
+        assert_eq!(a.total(), b.total());
+    }
+}

@@ -1,0 +1,156 @@
+//! Fabric-independent collective arithmetic.
+//!
+//! The per-NPU traffic factors of Sec. II-B, ring-embedding helpers, and
+//! the steady-state byte loads each algorithm places on its links. Both
+//! fabrics build their [`Plan`]s from these quantities so the traffic
+//! accounting (endpoint ≈ 2× in-network, Sec. II-B) is shared and tested
+//! in one place.
+
+use super::topology::CollectiveKind;
+
+/// Bytes each NPU must send for the bandwidth-optimal *endpoint* algorithm
+/// of a collective over `n` NPUs with per-NPU payload `d` (Sec. II-B:
+/// All-Reduce = 2(n-1)/n · d).
+pub fn endpoint_send_bytes(kind: CollectiveKind, n: usize, d: f64) -> f64 {
+    let nf = n as f64;
+    if n <= 1 {
+        return 0.0;
+    }
+    match kind {
+        CollectiveKind::AllReduce => 2.0 * (nf - 1.0) / nf * d,
+        CollectiveKind::ReduceScatter | CollectiveKind::AllGather => (nf - 1.0) / nf * d,
+        // Reduce/Multicast endpoint implementations relay the full payload
+        // along a logical tree/chain: each NPU forwards d once.
+        CollectiveKind::Reduce | CollectiveKind::Multicast => d,
+        CollectiveKind::AllToAll => (nf - 1.0) / nf * d,
+        CollectiveKind::Unicast => d,
+    }
+}
+
+/// Bytes each NPU must send when the switches execute the collective
+/// *in-network* (Sec. II-B: All-Reduce needs only d per NPU — "reducing
+/// the traffic by half compared to the traditional approach").
+pub fn innetwork_send_bytes(kind: CollectiveKind, n: usize, d: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    match kind {
+        CollectiveKind::AllReduce => d,
+        CollectiveKind::ReduceScatter | CollectiveKind::AllGather => d * (n as f64 - 1.0) / n as f64,
+        CollectiveKind::Reduce => d,
+        CollectiveKind::Multicast => d / n as f64, // only the root sends
+        CollectiveKind::AllToAll => d * (n as f64 - 1.0) / n as f64,
+        CollectiveKind::Unicast => d,
+    }
+}
+
+/// Traffic-reduction factor of in-network vs endpoint execution. ≈2 for
+/// large-n All-Reduce; exactly 1 for n = 2 (the paper's special case:
+/// "when the number of peer NPUs is two, the amount of traffic for
+/// endpoint-based vs. in-network execution is the same").
+pub fn innetwork_traffic_factor(kind: CollectiveKind, n: usize) -> f64 {
+    let d = 1.0;
+    let e = endpoint_send_bytes(kind, n, d);
+    let i = innetwork_send_bytes(kind, n, d);
+    if i == 0.0 {
+        1.0
+    } else {
+        e / i
+    }
+}
+
+/// Steady-state bytes each directed ring hop carries for a ring All-Reduce
+/// over `n` NPUs with per-NPU payload `d`: 2(n-1) steps of d/n chunks.
+pub fn ring_allreduce_hop_bytes(n: usize, d: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    2.0 * (n as f64 - 1.0) * d / n as f64
+}
+
+/// Steady-state hop bytes for ring Reduce-Scatter or All-Gather.
+pub fn ring_half_hop_bytes(n: usize, d: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    (n as f64 - 1.0) * d / n as f64
+}
+
+/// Number of serial steps in a ring All-Reduce (latency term).
+pub fn ring_allreduce_steps(n: usize) -> usize {
+    if n <= 1 {
+        0
+    } else {
+        2 * (n - 1)
+    }
+}
+
+/// Split a payload into `chunks` equal pieces (the hierarchical 2D mesh
+/// algorithm runs 2 counter-rotating chunks, [19]).
+pub fn chunk_bytes(d: f64, chunks: usize) -> f64 {
+    d / chunks.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use CollectiveKind::*;
+
+    #[test]
+    fn allreduce_endpoint_factor_matches_paper() {
+        // 2(N-1)/N · D for N=20, D=1: 1.9.
+        let b = endpoint_send_bytes(AllReduce, 20, 1.0);
+        assert!((b - 1.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn allreduce_innetwork_is_d() {
+        assert_eq!(innetwork_send_bytes(AllReduce, 20, 3.0), 3.0);
+    }
+
+    #[test]
+    fn innetwork_halves_large_n_allreduce() {
+        let f = innetwork_traffic_factor(AllReduce, 64);
+        assert!(f > 1.9 && f < 2.0, "{f}");
+    }
+
+    #[test]
+    fn n2_allreduce_has_no_innetwork_advantage() {
+        // Paper Sec. VIII: dim(MP)=2 ⇒ endpoint == in-network traffic.
+        let f = innetwork_traffic_factor(AllReduce, 2);
+        assert!((f - 1.0).abs() < 1e-12, "{f}");
+    }
+
+    #[test]
+    fn single_participant_collectives_are_free() {
+        for k in [AllReduce, ReduceScatter, AllGather, Reduce, Multicast, AllToAll] {
+            assert_eq!(endpoint_send_bytes(k, 1, 5.0), 0.0);
+            assert_eq!(innetwork_send_bytes(k, 1, 5.0), 0.0);
+        }
+    }
+
+    #[test]
+    fn ring_hop_bytes_and_steps() {
+        assert!((ring_allreduce_hop_bytes(4, 8.0) - 12.0).abs() < 1e-12);
+        assert_eq!(ring_allreduce_steps(4), 6);
+        assert_eq!(ring_allreduce_steps(1), 0);
+        assert!((ring_half_hop_bytes(4, 8.0) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reduce_scatter_plus_allgather_equals_allreduce() {
+        // The identity the paper states: AR = RS ∘ AG, in traffic terms.
+        let n = 10;
+        let d = 4.0;
+        let rs = endpoint_send_bytes(ReduceScatter, n, d);
+        let ag = endpoint_send_bytes(AllGather, n, d);
+        let ar = endpoint_send_bytes(AllReduce, n, d);
+        assert!((rs + ag - ar).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chunking_divides() {
+        assert_eq!(chunk_bytes(10.0, 2), 5.0);
+        assert_eq!(chunk_bytes(10.0, 0), 10.0);
+    }
+}

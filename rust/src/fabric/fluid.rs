@@ -1,0 +1,681 @@
+//! Max-min-fair fluid-flow network simulator.
+//!
+//! The substrate under both fabrics. A [`Network`] is a set of directed
+//! [`Link`]s with capacities (bytes/s). A [`Transfer`] occupies an ordered
+//! set of links (a path, or the edge set of a multicast/reduction tree —
+//! for a tree the same bytes cross every edge, so "set of links" models
+//! both) and must push `bytes` through all of them.
+//!
+//! Rates are allocated by **progressive filling** (max-min fairness):
+//! repeatedly find the most-contended link, freeze every transfer crossing
+//! it at the fair share, remove the frozen capacity, repeat. Between
+//! completion events rates are constant; the event loop advances to the
+//! next completion and re-allocates. This is the same level of abstraction
+//! as ASTRA-SIM's analytical backend and reproduces the paper's
+//! "max channel load" analysis (Fig. 4b) by construction: a link crossed
+//! by `k` equal transfers gives each `cap/k`.
+//!
+//! Transfers carry a `plan` tag so callers can group them into collectives
+//! and read back per-collective completion times.
+
+/// Index of a link in a [`Network`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LinkId(pub usize);
+
+/// A directed channel with a fixed capacity in bytes/second.
+#[derive(Debug, Clone)]
+pub struct Link {
+    /// Human-readable name (e.g. `"npu3->npu4"`, `"io7->npu16"`).
+    pub name: String,
+    /// Capacity in bytes/second.
+    pub capacity: f64,
+}
+
+/// A link graph.
+#[derive(Debug, Clone, Default)]
+pub struct Network {
+    links: Vec<Link>,
+}
+
+impl Network {
+    /// Empty network.
+    pub fn new() -> Self {
+        Self { links: Vec::new() }
+    }
+
+    /// Add a link, returning its id.
+    pub fn add_link(&mut self, name: impl Into<String>, capacity: f64) -> LinkId {
+        assert!(capacity > 0.0, "link capacity must be positive");
+        self.links.push(Link { name: name.into(), capacity });
+        LinkId(self.links.len() - 1)
+    }
+
+    /// Number of links.
+    pub fn len(&self) -> usize {
+        self.links.len()
+    }
+
+    /// True if no links.
+    pub fn is_empty(&self) -> bool {
+        self.links.is_empty()
+    }
+
+    /// Link accessor.
+    pub fn link(&self, id: LinkId) -> &Link {
+        &self.links[id.0]
+    }
+
+    /// All links.
+    pub fn links(&self) -> &[Link] {
+        &self.links
+    }
+}
+
+/// A unit of traffic: `bytes` crossing every link in `links`.
+///
+/// For a unicast this is the route; for a multicast/reduction tree it is
+/// the tree's edge set (each edge carries the full payload exactly once).
+#[derive(Debug, Clone)]
+pub struct Transfer {
+    /// The links this transfer occupies (duplicates are ignored).
+    pub links: Vec<LinkId>,
+    /// Payload in bytes.
+    pub bytes: f64,
+    /// Plan (collective) this transfer belongs to; completion times are
+    /// reported per plan tag.
+    pub plan: usize,
+}
+
+impl Transfer {
+    /// Convenience constructor.
+    pub fn new(links: Vec<LinkId>, bytes: f64, plan: usize) -> Self {
+        Self { links, bytes, plan }
+    }
+}
+
+/// Result of a fluid simulation.
+#[derive(Debug, Clone)]
+pub struct FluidResult {
+    /// Completion time of each transfer (same order as input).
+    pub transfer_done: Vec<f64>,
+    /// Completion time per plan tag (max over the plan's transfers);
+    /// indexed by tag, 0.0 for tags with no transfers.
+    pub plan_done: Vec<f64>,
+    /// Time when everything has drained.
+    pub makespan: f64,
+}
+
+/// The simulator itself. Holds only the network; `run` is pure.
+#[derive(Debug, Clone)]
+pub struct FluidSim {
+    network: Network,
+}
+
+impl FluidSim {
+    /// Build a simulator over a network.
+    pub fn new(network: Network) -> Self {
+        Self { network }
+    }
+
+    /// Borrow the network.
+    pub fn network(&self) -> &Network {
+        &self.network
+    }
+
+    /// Simulate all transfers starting at t=0 until all complete.
+    ///
+    /// Zero-byte transfers complete at t=0. Transfers with an empty link
+    /// set are infinitely fast (complete at t=0) — callers use these for
+    /// node-local data movement.
+    pub fn run(&self, transfers: &[Transfer]) -> FluidResult {
+        let n = transfers.len();
+        let mut remaining: Vec<f64> = transfers.iter().map(|t| t.bytes.max(0.0)).collect();
+        let mut done_at: Vec<f64> = vec![0.0; n];
+        // Deduplicated link lists per transfer (a transfer crossing the
+        // same link twice still gets one share — the fluid abstraction).
+        let links_of: Vec<Vec<usize>> = transfers
+            .iter()
+            .map(|t| {
+                let mut v: Vec<usize> = t.links.iter().map(|l| l.0).collect();
+                v.sort_unstable();
+                v.dedup();
+                v
+            })
+            .collect();
+        // Reverse index: link -> transfers crossing it.
+        let mut users: Vec<Vec<usize>> = vec![Vec::new(); self.network.len()];
+        for (i, ls) in links_of.iter().enumerate() {
+            for &l in ls {
+                users[l].push(i);
+            }
+        }
+
+        let mut active: Vec<bool> = (0..n)
+            .map(|i| remaining[i] > 0.0 && !links_of[i].is_empty())
+            .collect();
+        let mut t = 0.0_f64;
+        let mut n_active = active.iter().filter(|&&a| a).count();
+        let mut rates = vec![0.0_f64; n];
+        let mut ws = Workspace::default();
+
+        while n_active > 0 {
+            // --- progressive filling over active transfers ---
+            self.allocate_rates_ws(&links_of, &users, &active, &mut rates, &mut ws);
+
+            // --- advance to next completion ---
+            let mut dt = f64::INFINITY;
+            for i in 0..n {
+                if active[i] && rates[i] > 0.0 {
+                    dt = dt.min(remaining[i] / rates[i]);
+                }
+            }
+            assert!(
+                dt.is_finite(),
+                "fluid deadlock: active transfers with zero rate (over-constrained links?)"
+            );
+            t += dt;
+            for i in 0..n {
+                if active[i] {
+                    remaining[i] -= rates[i] * dt;
+                    if remaining[i] <= 1e-9 * transfers[i].bytes.max(1.0) {
+                        remaining[i] = 0.0;
+                        active[i] = false;
+                        done_at[i] = t;
+                        n_active -= 1;
+                    }
+                }
+            }
+        }
+
+        let max_plan = transfers.iter().map(|t| t.plan).max().map_or(0, |m| m + 1);
+        let mut plan_done = vec![0.0_f64; max_plan];
+        for (i, tr) in transfers.iter().enumerate() {
+            plan_done[tr.plan] = plan_done[tr.plan].max(done_at[i]);
+        }
+        let makespan = done_at.iter().cloned().fold(0.0, f64::max);
+        FluidResult { transfer_done: done_at, plan_done, makespan }
+    }
+
+    /// Max-min fair (progressive-filling) rate allocation for the active
+    /// transfer set, using a caller-provided reusable [`Workspace`].
+    ///
+    /// Per event: `O(rounds × |active links|)` for the bottleneck search
+    /// plus `O(Σ links_of)` bookkeeping; the workspace keeps all scratch
+    /// buffers warm so the inner loop does no allocation (§Perf: this was
+    /// the top profile entry before the rework — see EXPERIMENTS.md).
+    fn allocate_rates_ws(
+        &self,
+        links_of: &[Vec<usize>],
+        users: &[Vec<usize>],
+        active: &[bool],
+        rates: &mut [f64],
+        ws: &mut Workspace,
+    ) {
+        let nl = self.network.len();
+        ws.frozen.clear();
+        ws.frozen.extend(active.iter().map(|&a| !a));
+        ws.residual.clear();
+        ws.residual
+            .extend(self.network.links.iter().map(|l| l.capacity));
+        ws.cnt.clear();
+        ws.cnt.resize(nl, 0);
+        for l in 0..nl {
+            ws.cnt[l] = users[l].iter().filter(|&&i| active[i]).count();
+        }
+        fill_rates(links_of, users, rates, ws);
+    }
+}
+
+/// Reusable scratch buffers for the allocator (one per simulation run).
+#[derive(Debug, Default)]
+struct Workspace {
+    frozen: Vec<bool>,
+    residual: Vec<f64>,
+    cnt: Vec<usize>,
+    active_links: Vec<usize>,
+}
+
+/// Shared progressive-filling core over pre-initialized workspace state
+/// (`frozen`, `residual`, `cnt` must be set by the caller). Linear
+/// bottleneck scan over a compacting active-link list — measured faster
+/// than a lazy-heap variant on the dense transfer sets our collectives
+/// produce (§Perf iteration 2, see EXPERIMENTS.md).
+fn fill_rates(
+    links_of: &[Vec<usize>],
+    users: &[Vec<usize>],
+    rates: &mut [f64],
+    ws: &mut Workspace,
+) {
+    for r in rates.iter_mut() {
+        *r = 0.0;
+    }
+    let nl = ws.cnt.len();
+    ws.active_links.clear();
+    for l in 0..nl {
+        if ws.cnt[l] > 0 {
+            ws.active_links.push(l);
+        }
+    }
+    loop {
+        // Bottleneck link: min residual/cnt; compact drained links.
+        let mut best: Option<(usize, f64)> = None;
+        let mut k = 0;
+        while k < ws.active_links.len() {
+            let l = ws.active_links[k];
+            if ws.cnt[l] == 0 {
+                ws.active_links.swap_remove(k);
+                continue;
+            }
+            let share = ws.residual[l] / ws.cnt[l] as f64;
+            if best.map_or(true, |(_, s)| share < s) {
+                best = Some((l, share));
+            }
+            k += 1;
+        }
+        let Some((bott, share)) = best else { break };
+        for ui in 0..users[bott].len() {
+            let i = users[bott][ui];
+            if ws.frozen[i] {
+                continue;
+            }
+            ws.frozen[i] = true;
+            rates[i] = share;
+            for &l in &links_of[i] {
+                ws.residual[l] = (ws.residual[l] - share).max(0.0);
+                ws.cnt[l] -= 1;
+            }
+        }
+    }
+}
+
+impl FluidSim {
+    /// Simulate several *phased* plans concurrently.
+    ///
+    /// Each plan is a sequence of phases; a phase is a set of transfers
+    /// that all start together, and the next phase starts only when every
+    /// transfer of the current phase has drained (barrier semantics --
+    /// hierarchical collectives like the 2D-mesh algorithm have true data
+    /// dependencies between phases). Different plans are independent and
+    /// share links max-min fairly, which is where congestion between
+    /// concurrent collectives (paper Fig. 5/6) comes from. Returns each
+    /// plan's completion time.
+    ///
+    /// §Perf: admitted transfers live in an append-only arena with alive
+    /// flags so per-link user lists and counters update incrementally
+    /// instead of being rebuilt every event.
+    pub fn run_phased(&self, plans: &[Vec<Vec<Transfer>>]) -> Vec<f64> {
+        struct Slot {
+            plan: usize,
+            remaining: f64,
+            orig: f64,
+            alive: bool,
+        }
+        let nl = self.network.len();
+        let mut arena: Vec<Slot> = Vec::new();
+        let mut links_of: Vec<Vec<usize>> = Vec::new();
+        let mut users: Vec<Vec<usize>> = vec![Vec::new(); nl];
+        let mut plan_live: Vec<usize> = vec![0; plans.len()];
+        let mut phase_idx: Vec<usize> = vec![0; plans.len()];
+        let mut done_time: Vec<f64> = vec![0.0; plans.len()];
+        let mut n_alive = 0usize;
+        let mut t = 0.0_f64;
+
+        let admit = |p: usize,
+                     phase_idx: &mut [usize],
+                     arena: &mut Vec<Slot>,
+                     links_of: &mut Vec<Vec<usize>>,
+                     users: &mut [Vec<usize>],
+                     plan_live: &mut [usize],
+                     n_alive: &mut usize,
+                     done_time: &mut [f64],
+                     t: f64| {
+            while phase_idx[p] < plans[p].len() {
+                let phase = &plans[p][phase_idx[p]];
+                let mut added = false;
+                for tr in phase {
+                    let mut links: Vec<usize> = tr.links.iter().map(|l| l.0).collect();
+                    links.sort_unstable();
+                    links.dedup();
+                    if tr.bytes > 0.0 && !links.is_empty() {
+                        let idx = arena.len();
+                        for &l in &links {
+                            users[l].push(idx);
+                        }
+                        links_of.push(links);
+                        arena.push(Slot {
+                            plan: p,
+                            remaining: tr.bytes,
+                            orig: tr.bytes,
+                            alive: true,
+                        });
+                        plan_live[p] += 1;
+                        *n_alive += 1;
+                        added = true;
+                    }
+                }
+                if added {
+                    return;
+                }
+                phase_idx[p] += 1;
+                done_time[p] = t;
+            }
+        };
+
+        for p in 0..plans.len() {
+            admit(
+                p, &mut phase_idx, &mut arena, &mut links_of, &mut users, &mut plan_live,
+                &mut n_alive, &mut done_time, t,
+            );
+        }
+
+        let mut ws = Workspace::default();
+        let mut rates: Vec<f64> = Vec::new();
+        let mut alive_idx: Vec<usize> = (0..arena.len()).collect();
+        // Live user count per link, maintained incrementally.
+        let mut live_cnt: Vec<usize> = vec![0; nl];
+        for ls in &links_of {
+            for &l in ls {
+                live_cnt[l] += 1;
+            }
+        }
+
+        while n_alive > 0 {
+            // --- progressive filling over alive slots ---
+            rates.clear();
+            rates.resize(arena.len(), 0.0);
+            ws.frozen.clear();
+            ws.frozen.extend(arena.iter().map(|s| !s.alive));
+            ws.residual.clear();
+            ws.residual
+                .extend(self.network.links.iter().map(|l| l.capacity));
+            ws.cnt.clear();
+            ws.cnt.extend_from_slice(&live_cnt);
+            fill_rates(&links_of, &users, &mut rates, &mut ws);
+
+            // --- advance to the next completion ---
+            // (§Perf iteration 3: iterate alive slots via a compacting
+            // index list instead of scanning the whole arena)
+            alive_idx.retain(|&i| arena[i].alive);
+            let mut dt = f64::INFINITY;
+            for &i in &alive_idx {
+                if rates[i] > 0.0 {
+                    dt = dt.min(arena[i].remaining / rates[i]);
+                }
+            }
+            assert!(dt.is_finite(), "fluid deadlock in run_phased");
+            t += dt;
+            let mut finished_plans: Vec<usize> = Vec::new();
+            for k in 0..alive_idx.len() {
+                let i = alive_idx[k];
+                arena[i].remaining -= rates[i] * dt;
+                if arena[i].remaining <= 1e-9 * arena[i].orig.max(1.0) {
+                    arena[i].alive = false;
+                    n_alive -= 1;
+                    for &l in &links_of[i] {
+                        live_cnt[l] -= 1;
+                    }
+                    let p = arena[i].plan;
+                    plan_live[p] -= 1;
+                    if plan_live[p] == 0 {
+                        finished_plans.push(p);
+                    }
+                }
+            }
+            for p in finished_plans {
+                phase_idx[p] += 1;
+                done_time[p] = t;
+                let before = arena.len();
+                admit(
+                    p, &mut phase_idx, &mut arena, &mut links_of, &mut users,
+                    &mut plan_live, &mut n_alive, &mut done_time, t,
+                );
+                for (j, ls) in links_of[before..].iter().enumerate() {
+                    alive_idx.push(before + j);
+                    for &l in ls {
+                        live_cnt[l] += 1;
+                    }
+                }
+            }
+        }
+        done_time
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(caps: &[f64]) -> (Network, Vec<LinkId>) {
+        let mut n = Network::new();
+        let ids = caps
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| n.add_link(format!("l{i}"), c))
+            .collect();
+        (n, ids)
+    }
+
+    #[test]
+    fn single_transfer_is_bytes_over_capacity() {
+        let (n, l) = net(&[100.0]);
+        let sim = FluidSim::new(n);
+        let r = sim.run(&[Transfer::new(vec![l[0]], 1000.0, 0)]);
+        assert!((r.makespan - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_equal_transfers_share_a_link_fairly() {
+        let (n, l) = net(&[100.0]);
+        let sim = FluidSim::new(n);
+        let r = sim.run(&[
+            Transfer::new(vec![l[0]], 500.0, 0),
+            Transfer::new(vec![l[0]], 500.0, 1),
+        ]);
+        // Each gets 50 B/s -> both done at t=10.
+        assert!((r.plan_done[0] - 10.0).abs() < 1e-9);
+        assert!((r.plan_done[1] - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn short_transfer_releases_capacity() {
+        let (n, l) = net(&[100.0]);
+        let sim = FluidSim::new(n);
+        let r = sim.run(&[
+            Transfer::new(vec![l[0]], 100.0, 0),
+            Transfer::new(vec![l[0]], 500.0, 1),
+        ]);
+        // Phase 1: both at 50 B/s; t=2 first done (100 B).
+        // Second has 400 left, now at 100 B/s -> +4 s. Total 6.
+        assert!((r.transfer_done[0] - 2.0).abs() < 1e-9);
+        assert!((r.transfer_done[1] - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn path_is_limited_by_min_capacity() {
+        let (n, l) = net(&[100.0, 10.0, 1000.0]);
+        let sim = FluidSim::new(n);
+        let r = sim.run(&[Transfer::new(vec![l[0], l[1], l[2]], 100.0, 0)]);
+        assert!((r.makespan - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_min_fairness_bottleneck_and_free_transfer() {
+        // t0 uses links a,b; t1 uses a only; t2 uses b only.
+        // a, b both cap 100. Progressive filling: all get 50; then t1/t2
+        // finish; classic max-min: t0=50, t1=50, t2=50 initially.
+        let (n, l) = net(&[100.0, 100.0]);
+        let sim = FluidSim::new(n);
+        let r = sim.run(&[
+            Transfer::new(vec![l[0], l[1]], 500.0, 0),
+            Transfer::new(vec![l[0]], 100.0, 1),
+            Transfer::new(vec![l[1]], 100.0, 2),
+        ]);
+        // Phase 1 (all 50 B/s): t1,t2 done at t=2. t0 has 400 left.
+        // Phase 2: t0 alone at 100 B/s -> +4 s. Done 6.
+        assert!((r.transfer_done[1] - 2.0).abs() < 1e-9);
+        assert!((r.transfer_done[0] - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unequal_paths_get_max_min_shares() {
+        // l0 cap 90 shared by t0,t1; t1 also crosses l1 cap 30.
+        // Progressive filling: l1 bottleneck -> t1 = 30; l0 residual 60
+        // for t0 -> t0 = 60.
+        let (n, l) = net(&[90.0, 30.0]);
+        let sim = FluidSim::new(n);
+        let r = sim.run(&[
+            Transfer::new(vec![l[0]], 600.0, 0),
+            Transfer::new(vec![l[0], l[1]], 300.0, 1),
+        ]);
+        assert!((r.transfer_done[0] - 10.0).abs() < 1e-9, "{r:?}");
+        assert!((r.transfer_done[1] - 10.0).abs() < 1e-9, "{r:?}");
+    }
+
+    #[test]
+    fn k_transfers_on_one_link_is_k_times_slower() {
+        // The paper's channel-load arithmetic: k streams over one hotspot
+        // link each run at cap/k.
+        let (n, l) = net(&[700.0]);
+        let sim = FluidSim::new(n);
+        for k in [1usize, 2, 7] {
+            let ts: Vec<Transfer> = (0..k)
+                .map(|i| Transfer::new(vec![l[0]], 700.0, i))
+                .collect();
+            let r = sim.run(&ts);
+            assert!(
+                (r.makespan - k as f64).abs() < 1e-9,
+                "k={k} makespan={}",
+                r.makespan
+            );
+        }
+    }
+
+    #[test]
+    fn zero_byte_and_empty_link_transfers_complete_immediately() {
+        let (n, l) = net(&[10.0]);
+        let sim = FluidSim::new(n);
+        let r = sim.run(&[
+            Transfer::new(vec![l[0]], 0.0, 0),
+            Transfer::new(vec![], 100.0, 1),
+        ]);
+        assert_eq!(r.transfer_done, vec![0.0, 0.0]);
+        assert_eq!(r.makespan, 0.0);
+    }
+
+    #[test]
+    fn duplicate_links_in_path_count_once() {
+        let (n, l) = net(&[100.0]);
+        let sim = FluidSim::new(n);
+        let r = sim.run(&[Transfer::new(vec![l[0], l[0], l[0]], 100.0, 0)]);
+        assert!((r.makespan - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn plan_done_takes_max_over_transfers() {
+        let (n, l) = net(&[100.0, 100.0]);
+        let sim = FluidSim::new(n);
+        let r = sim.run(&[
+            Transfer::new(vec![l[0]], 100.0, 0),
+            Transfer::new(vec![l[1]], 300.0, 0),
+        ]);
+        assert!((r.plan_done[0] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn conservation_total_bytes_over_makespan_bounded_by_capacity() {
+        // On a single link, sum(bytes)/makespan == capacity while busy.
+        let (n, l) = net(&[250.0]);
+        let sim = FluidSim::new(n);
+        let ts: Vec<Transfer> = (0..5)
+            .map(|i| Transfer::new(vec![l[0]], 100.0 * (i + 1) as f64, i))
+            .collect();
+        let total: f64 = ts.iter().map(|t| t.bytes).sum();
+        let r = sim.run(&ts);
+        assert!((r.makespan - total / 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_transfer_set() {
+        let (n, _) = net(&[1.0]);
+        let r = FluidSim::new(n).run(&[]);
+        assert_eq!(r.makespan, 0.0);
+        assert!(r.plan_done.is_empty());
+    }
+
+    #[test]
+    fn phased_sequential_phases_add_up() {
+        let (n, l) = net(&[100.0]);
+        let sim = FluidSim::new(n);
+        let plan = vec![
+            vec![Transfer::new(vec![l[0]], 100.0, 0)],
+            vec![Transfer::new(vec![l[0]], 300.0, 0)],
+        ];
+        let done = sim.run_phased(&[plan]);
+        assert!((done[0] - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phased_concurrent_plans_share_then_release() {
+        let (n, l) = net(&[100.0]);
+        let sim = FluidSim::new(n);
+        // Plan 0: one phase of 100 B; plan 1: one phase of 300 B.
+        let p0 = vec![vec![Transfer::new(vec![l[0]], 100.0, 0)]];
+        let p1 = vec![vec![Transfer::new(vec![l[0]], 300.0, 0)]];
+        let done = sim.run_phased(&[p0, p1]);
+        // Share 50/50 until t=2 (plan0 done), then plan1 at 100 B/s.
+        assert!((done[0] - 2.0).abs() < 1e-9, "{done:?}");
+        assert!((done[1] - 4.0).abs() < 1e-9, "{done:?}");
+    }
+
+    #[test]
+    fn phased_barrier_waits_for_slowest_transfer() {
+        let (n, l) = net(&[100.0, 50.0]);
+        let sim = FluidSim::new(n);
+        let plan = vec![
+            vec![
+                Transfer::new(vec![l[0]], 100.0, 0), // 1 s
+                Transfer::new(vec![l[1]], 100.0, 0), // 2 s
+            ],
+            vec![Transfer::new(vec![l[0]], 100.0, 0)], // +1 s after barrier
+        ];
+        let done = sim.run_phased(&[plan]);
+        assert!((done[0] - 3.0).abs() < 1e-9, "{done:?}");
+    }
+
+    #[test]
+    fn phased_empty_plan_completes_at_zero() {
+        let (n, l) = net(&[10.0]);
+        let sim = FluidSim::new(n);
+        let p0: Vec<Vec<Transfer>> = vec![];
+        let p1 = vec![vec![Transfer::new(vec![l[0]], 10.0, 0)]];
+        let done = sim.run_phased(&[p0, p1]);
+        assert_eq!(done[0], 0.0);
+        assert!((done[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phased_zero_byte_phases_are_skipped() {
+        let (n, l) = net(&[10.0]);
+        let sim = FluidSim::new(n);
+        let plan = vec![
+            vec![Transfer::new(vec![l[0]], 0.0, 0)],
+            vec![Transfer::new(vec![l[0]], 10.0, 0)],
+        ];
+        let done = sim.run_phased(&[plan]);
+        assert!((done[0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phased_matches_flat_run_for_single_phase() {
+        let (n, l) = net(&[100.0, 30.0]);
+        let sim = FluidSim::new(n);
+        let ts = vec![
+            Transfer::new(vec![l[0]], 600.0, 0),
+            Transfer::new(vec![l[0], l[1]], 300.0, 1),
+        ];
+        let flat = sim.run(&ts);
+        let phased = sim.run_phased(&[vec![vec![ts[0].clone()]], vec![vec![ts[1].clone()]]]);
+        assert!((flat.plan_done[0] - phased[0]).abs() < 1e-9);
+        assert!((flat.plan_done[1] - phased[1]).abs() < 1e-9);
+    }
+}

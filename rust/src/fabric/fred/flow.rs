@@ -1,0 +1,197 @@
+//! The *flow* abstraction (paper Sec. V-A) and Table I decompositions.
+//!
+//! A flow on `FRED_m(P)` is a set of input ports and output ports: the
+//! switch reduces the data arriving on `IPs` and broadcasts the result to
+//! `OPs`. Simple collectives are one flow; compound collectives decompose
+//! into serial flow steps (Table I).
+
+use crate::fabric::topology::CollectiveKind;
+
+/// One reduction-distribution flow.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Flow {
+    /// Input ports (reduced together). Sorted, deduplicated.
+    pub ips: Vec<usize>,
+    /// Output ports (each receives the reduction). Sorted, deduplicated.
+    pub ops: Vec<usize>,
+}
+
+impl Flow {
+    /// Build a flow (sorts and dedups).
+    pub fn new(mut ips: Vec<usize>, mut ops: Vec<usize>) -> Self {
+        ips.sort_unstable();
+        ips.dedup();
+        ops.sort_unstable();
+        ops.dedup();
+        assert!(!ips.is_empty() && !ops.is_empty(), "flow needs ports");
+        Self { ips, ops }
+    }
+
+    /// All-Reduce flow: IPs = OPs = `ports` (e.g. the orange flow of
+    /// Fig. 7h: IPs = OPs = {3,4,5}).
+    pub fn all_reduce(ports: Vec<usize>) -> Self {
+        Self::new(ports.clone(), ports)
+    }
+
+    /// Largest port index referenced.
+    pub fn max_port(&self) -> usize {
+        *self
+            .ips
+            .iter()
+            .chain(self.ops.iter())
+            .max()
+            .expect("non-empty")
+    }
+
+    /// Whether this is plain unicast (1 input, 1 output).
+    pub fn is_unicast(&self) -> bool {
+        self.ips.len() == 1 && self.ops.len() == 1
+    }
+}
+
+/// One serial step of a collective: the flows executed concurrently in
+/// that step.
+pub type FlowStep = Vec<Flow>;
+
+/// Decompose a collective among `ports` (with per-port payload implied)
+/// into serial steps of concurrent flows, per Table I.
+///
+/// * simple (1 step, 1 flow): Unicast, Multicast, Reduce, All-Reduce;
+/// * compound (i steps): Reduce-Scatter (i Reduce flows, one per output),
+///   All-Gather (i Multicast flows, one per input), Scatter/Gather
+///   (serial unicasts), All-to-All (i steps of rotated unicasts).
+pub fn decompose(kind: CollectiveKind, ports: &[usize]) -> Vec<FlowStep> {
+    let n = ports.len();
+    assert!(n >= 1);
+    match kind {
+        CollectiveKind::Unicast => {
+            assert!(n >= 2, "unicast needs [src, dst]");
+            vec![vec![Flow::new(vec![ports[0]], vec![ports[1]])]]
+        }
+        CollectiveKind::Multicast => {
+            vec![vec![Flow::new(vec![ports[0]], ports[1..].to_vec())]]
+        }
+        CollectiveKind::Reduce => {
+            vec![vec![Flow::new(ports[1..].to_vec(), vec![ports[0]])]]
+        }
+        CollectiveKind::AllReduce => {
+            vec![vec![Flow::all_reduce(ports.to_vec())]]
+        }
+        CollectiveKind::ReduceScatter => (0..n)
+            .map(|j| vec![Flow::new(ports.to_vec(), vec![ports[j]])])
+            .collect(),
+        CollectiveKind::AllGather => (0..n)
+            .map(|j| vec![Flow::new(vec![ports[j]], ports.to_vec())])
+            .collect(),
+        CollectiveKind::AllToAll => (1..n)
+            .map(|j| {
+                (0..n)
+                    .map(|i| Flow::new(vec![ports[i]], vec![ports[(i + j) % n]]))
+                    .collect()
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use CollectiveKind::*;
+
+    #[test]
+    fn flow_sorts_and_dedups() {
+        let f = Flow::new(vec![3, 1, 3], vec![2, 2, 0]);
+        assert_eq!(f.ips, vec![1, 3]);
+        assert_eq!(f.ops, vec![0, 2]);
+        assert_eq!(f.max_port(), 3);
+    }
+
+    #[test]
+    fn all_reduce_flow_has_equal_ports() {
+        let f = Flow::all_reduce(vec![3, 4, 5]);
+        assert_eq!(f.ips, f.ops);
+        assert_eq!(f.ips, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn table1_simple_patterns_are_one_step() {
+        for kind in [Unicast, Multicast, Reduce, AllReduce] {
+            let steps = decompose(kind, &[0, 1, 2]);
+            assert_eq!(steps.len(), 1, "{kind:?}");
+            assert_eq!(steps[0].len(), 1);
+        }
+    }
+
+    #[test]
+    fn table1_multicast_shape() {
+        let steps = decompose(Multicast, &[5, 1, 2]);
+        let f = &steps[0][0];
+        assert_eq!(f.ips, vec![5]);
+        assert_eq!(f.ops, vec![1, 2]);
+        assert_eq!((f.ips.len(), f.ops.len()), (1, 2)); // |IPs|=1, |OPs|>1
+    }
+
+    #[test]
+    fn table1_reduce_shape() {
+        let steps = decompose(Reduce, &[5, 1, 2]);
+        let f = &steps[0][0];
+        assert_eq!(f.ips, vec![1, 2]);
+        assert_eq!(f.ops, vec![5]); // |IPs|>1, |OPs|=1
+    }
+
+    #[test]
+    fn table1_reduce_scatter_is_i_serial_reduces() {
+        let ports = vec![0, 1, 2, 3];
+        let steps = decompose(ReduceScatter, &ports);
+        assert_eq!(steps.len(), 4);
+        for (j, step) in steps.iter().enumerate() {
+            assert_eq!(step.len(), 1);
+            assert_eq!(step[0].ips, ports);
+            assert_eq!(step[0].ops, vec![ports[j]]);
+        }
+    }
+
+    #[test]
+    fn table1_all_gather_is_i_serial_multicasts() {
+        let ports = vec![0, 1, 2];
+        let steps = decompose(AllGather, &ports);
+        assert_eq!(steps.len(), 3);
+        for (j, step) in steps.iter().enumerate() {
+            assert_eq!(step[0].ips, vec![ports[j]]);
+            assert_eq!(step[0].ops, ports);
+        }
+    }
+
+    #[test]
+    fn table1_all_to_all_rotates() {
+        // In step j each input unicasts to the output at distance j.
+        let ports = vec![0, 1, 2, 3];
+        let steps = decompose(AllToAll, &ports);
+        assert_eq!(steps.len(), 3); // j = 1..n-1
+        for (jm1, step) in steps.iter().enumerate() {
+            let j = jm1 + 1;
+            assert_eq!(step.len(), 4);
+            for (i, f) in step.iter().enumerate() {
+                assert!(f.is_unicast());
+                assert_eq!(f.ips, vec![ports[i]]);
+                assert_eq!(f.ops, vec![ports[(i + j) % 4]]);
+            }
+        }
+    }
+
+    #[test]
+    fn all_to_all_steps_are_permutations() {
+        let ports = vec![0, 1, 2, 3, 4];
+        for step in decompose(AllToAll, &ports) {
+            let mut outs: Vec<usize> = step.iter().map(|f| f.ops[0]).collect();
+            outs.sort_unstable();
+            assert_eq!(outs, ports);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "flow needs ports")]
+    fn empty_flow_panics() {
+        Flow::new(vec![], vec![1]);
+    }
+}

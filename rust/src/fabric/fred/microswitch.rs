@@ -1,0 +1,184 @@
+//! FRED μSwitches (paper Fig. 7e-g).
+//!
+//! A μSwitch is a 2×2 crossbar optionally augmented with a reduction
+//! adder (R), a distribution fan-out (D), or both (RD). The whole FRED
+//! switch is built from these plus muxes/demuxes for odd port counts.
+
+/// The capability class of a μSwitch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MicroSwitchKind {
+    /// Plain Clos 2×2 crossbar (no collective feature).
+    Plain,
+    /// Reduction: can sum its two inputs onto one output (Fig. 7e).
+    R,
+    /// Distribution: can broadcast one input to both outputs (Fig. 7f).
+    D,
+    /// Both features (Fig. 7g).
+    RD,
+}
+
+impl MicroSwitchKind {
+    /// Whether the reduce feature is present.
+    pub fn can_reduce(&self) -> bool {
+        matches!(self, MicroSwitchKind::R | MicroSwitchKind::RD)
+    }
+
+    /// Whether the distribute feature is present.
+    pub fn can_distribute(&self) -> bool {
+        matches!(self, MicroSwitchKind::D | MicroSwitchKind::RD)
+    }
+}
+
+/// The configured state of a μSwitch for one routed communication step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MicroSwitchState {
+    /// Pass-through, no crossing (in0->out0, in1->out1).
+    Straight,
+    /// Crossed (in0->out1, in1->out0).
+    Cross,
+    /// Reduce both inputs onto the given output (0 or 1).
+    ReduceTo(u8),
+    /// Broadcast the given input (0 or 1) to both outputs.
+    DistributeFrom(u8),
+    /// Reduce both inputs AND broadcast the sum to both outputs
+    /// (the heart of a 2-port All-Reduce flow).
+    ReduceDistribute,
+    /// Unused this step.
+    Idle,
+}
+
+impl MicroSwitchState {
+    /// Whether this state requires the reduce feature.
+    pub fn needs_reduce(&self) -> bool {
+        matches!(
+            self,
+            MicroSwitchState::ReduceTo(_) | MicroSwitchState::ReduceDistribute
+        )
+    }
+
+    /// Whether this state requires the distribute feature.
+    pub fn needs_distribute(&self) -> bool {
+        matches!(
+            self,
+            MicroSwitchState::DistributeFrom(_) | MicroSwitchState::ReduceDistribute
+        )
+    }
+
+    /// Whether a μSwitch of `kind` can realize this state.
+    pub fn realizable_on(&self, kind: MicroSwitchKind) -> bool {
+        (!self.needs_reduce() || kind.can_reduce())
+            && (!self.needs_distribute() || kind.can_distribute())
+    }
+}
+
+/// Functional model: apply a μSwitch state to two optional input values
+/// (f64 payloads stand in for whole packets; `None` = no signal). Returns
+/// the two outputs. Used by unit tests to check the datapath semantics.
+pub fn apply(
+    state: MicroSwitchState,
+    in0: Option<f64>,
+    in1: Option<f64>,
+) -> (Option<f64>, Option<f64>) {
+    match state {
+        MicroSwitchState::Idle => (None, None),
+        MicroSwitchState::Straight => (in0, in1),
+        MicroSwitchState::Cross => (in1, in0),
+        MicroSwitchState::ReduceTo(o) => {
+            let s = match (in0, in1) {
+                (Some(a), Some(b)) => Some(a + b),
+                (Some(a), None) | (None, Some(a)) => Some(a),
+                (None, None) => None,
+            };
+            if o == 0 {
+                (s, None)
+            } else {
+                (None, s)
+            }
+        }
+        MicroSwitchState::DistributeFrom(i) => {
+            let v = if i == 0 { in0 } else { in1 };
+            (v, v)
+        }
+        MicroSwitchState::ReduceDistribute => {
+            let s = match (in0, in1) {
+                (Some(a), Some(b)) => Some(a + b),
+                (Some(a), None) | (None, Some(a)) => Some(a),
+                (None, None) => None,
+            };
+            (s, s)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use MicroSwitchKind::*;
+    use MicroSwitchState::*;
+
+    #[test]
+    fn capability_matrix() {
+        assert!(!Plain.can_reduce() && !Plain.can_distribute());
+        assert!(R.can_reduce() && !R.can_distribute());
+        assert!(!D.can_reduce() && D.can_distribute());
+        assert!(RD.can_reduce() && RD.can_distribute());
+    }
+
+    #[test]
+    fn state_requirements() {
+        assert!(ReduceTo(0).needs_reduce());
+        assert!(!ReduceTo(0).needs_distribute());
+        assert!(DistributeFrom(1).needs_distribute());
+        assert!(ReduceDistribute.needs_reduce() && ReduceDistribute.needs_distribute());
+        assert!(!Straight.needs_reduce() && !Cross.needs_distribute());
+    }
+
+    #[test]
+    fn realizability() {
+        assert!(Straight.realizable_on(Plain));
+        assert!(!ReduceTo(0).realizable_on(Plain));
+        assert!(ReduceTo(1).realizable_on(R));
+        assert!(!ReduceDistribute.realizable_on(R));
+        assert!(!ReduceDistribute.realizable_on(D));
+        assert!(ReduceDistribute.realizable_on(RD));
+    }
+
+    #[test]
+    fn datapath_straight_and_cross() {
+        assert_eq!(apply(Straight, Some(1.0), Some(2.0)), (Some(1.0), Some(2.0)));
+        assert_eq!(apply(Cross, Some(1.0), Some(2.0)), (Some(2.0), Some(1.0)));
+    }
+
+    #[test]
+    fn datapath_reduce() {
+        assert_eq!(apply(ReduceTo(0), Some(1.0), Some(2.0)), (Some(3.0), None));
+        assert_eq!(apply(ReduceTo(1), Some(1.0), Some(2.0)), (None, Some(3.0)));
+        // Degraded reduce with one input passes it through.
+        assert_eq!(apply(ReduceTo(0), Some(5.0), None), (Some(5.0), None));
+    }
+
+    #[test]
+    fn datapath_distribute() {
+        assert_eq!(
+            apply(DistributeFrom(0), Some(7.0), Some(9.0)),
+            (Some(7.0), Some(7.0))
+        );
+        assert_eq!(
+            apply(DistributeFrom(1), Some(7.0), Some(9.0)),
+            (Some(9.0), Some(9.0))
+        );
+    }
+
+    #[test]
+    fn datapath_reduce_distribute_is_2port_allreduce() {
+        assert_eq!(
+            apply(ReduceDistribute, Some(3.0), Some(4.0)),
+            (Some(7.0), Some(7.0))
+        );
+    }
+
+    #[test]
+    fn idle_emits_nothing() {
+        assert_eq!(apply(Idle, Some(1.0), Some(2.0)), (None, None));
+    }
+}

@@ -1,0 +1,27 @@
+//! FRED: the Flexible REduction-Distribution interconnect (paper Sec. IV-VI).
+//!
+//! * [`microswitch`] — the 2×2 building blocks: R- (reduce), D-
+//!   (distribute), RD- and plain μSwitches (Fig. 7e-g).
+//! * [`switch`] — recursive `FRED_m(P)` construction (Clos(m, n=2, r)
+//!   connectivity, Fig. 7b-d) and the μSwitch census the HW model uses.
+//! * [`flow`] — the *flow* abstraction (`IPs`/`OPs`, Sec. V-A) and the
+//!   Table I simple/compound collective decompositions.
+//! * [`routing`] — conflict-graph + graph-coloring routing of concurrent
+//!   flows (Sec. V-B, Fig. 7i), conflict detection and the four
+//!   resolution strategies (Sec. V-C).
+//! * [`fabric`] — the wafer-scale 2-level (almost) fat-tree of FRED
+//!   switches (Fig. 8) at the Table IV operating points (FRED-A/B/C/D),
+//!   implementing the coordinator-facing [`Fabric`](super::Fabric) trait.
+//! * [`hw_model`] — the Table III area/power model.
+
+pub mod fabric;
+pub mod flow;
+pub mod hw_model;
+pub mod microswitch;
+pub mod routing;
+pub mod switch;
+
+pub use fabric::{FredFabric, FredVariant};
+pub use flow::Flow;
+pub use routing::{route_flows, RouteError, Routing};
+pub use switch::FredSwitch;

@@ -1,0 +1,191 @@
+//! Recursive `FRED_m(P)` switch construction (paper Fig. 7b-d).
+//!
+//! FRED's connectivity is a Clos(m, n=2, r) network: P input/output ports
+//! feed r = ⌊P/2⌋ input/output μSwitches; each μSwitch has one wire to
+//! each of the m middle-stage switches, which are `FRED_m(r)` (even P) or
+//! `FRED_m(r+1)` (odd P, with the last port muxed/demuxed straight into
+//! the middles, following the arbitrary-size Beneš construction [12]).
+//! Recursion bottoms out at `FRED_m(2)` (one RD-μSwitch) and `FRED_m(3)`
+//! (three RD-μSwitches).
+//!
+//! The structural model here feeds (a) the routing recursion
+//! ([`super::routing`] mirrors this shape) and (b) the Table III hardware
+//! census ([`super::hw_model`]).
+
+/// A constructed FRED switch.
+#[derive(Debug, Clone)]
+pub struct FredSwitch {
+    /// External ports (inputs = outputs = P).
+    pub ports: usize,
+    /// Middle-stage multiplicity (the paper uses m=3 on the wafer).
+    pub m: usize,
+    /// Structure.
+    pub node: SwitchNode,
+}
+
+/// The recursive structure of a switch.
+#[derive(Debug, Clone)]
+pub enum SwitchNode {
+    /// `FRED_m(2)`: a single RD-μSwitch (Fig. 7c).
+    Base2,
+    /// `FRED_m(3)`: three RD-μSwitches (Fig. 7d).
+    Base3,
+    /// General case: r input + r output μSwitches around m middles.
+    Recursive {
+        /// Number of input (= output) μSwitches, r = ⌊P/2⌋.
+        r: usize,
+        /// Whether P is odd (one direct port with a mux/demux pair).
+        odd: bool,
+        /// The m middle-stage sub-switches.
+        middles: Vec<FredSwitch>,
+    },
+}
+
+/// Census of hardware resources in a switch (for the Table III model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Census {
+    /// 2×2 μSwitches of any kind.
+    pub microswitches: usize,
+    /// Mux/demux pairs (odd-port levels).
+    pub muxes: usize,
+    /// Recursion levels (pipeline depth proxy).
+    pub depth: usize,
+}
+
+impl FredSwitch {
+    /// Build `FRED_m(ports)`. `ports >= 2`, `m >= 2`.
+    pub fn new(m: usize, ports: usize) -> Self {
+        assert!(ports >= 2, "FRED switch needs at least 2 ports");
+        assert!(m >= 2, "FRED needs at least 2 middle stages");
+        let node = match ports {
+            2 => SwitchNode::Base2,
+            3 => SwitchNode::Base3,
+            p => {
+                let r = p / 2;
+                let odd = p % 2 == 1;
+                let mid_ports = if odd { r + 1 } else { r };
+                let middles = (0..m).map(|_| FredSwitch::new(m, mid_ports)).collect();
+                SwitchNode::Recursive { r, odd, middles }
+            }
+        };
+        Self { ports, m, node }
+    }
+
+    /// Count hardware resources.
+    pub fn census(&self) -> Census {
+        match &self.node {
+            SwitchNode::Base2 => Census { microswitches: 1, muxes: 0, depth: 1 },
+            SwitchNode::Base3 => Census { microswitches: 3, muxes: 0, depth: 2 },
+            SwitchNode::Recursive { r, odd, middles } => {
+                let mut c = Census {
+                    microswitches: 2 * r,
+                    muxes: usize::from(*odd),
+                    depth: 0,
+                };
+                let mut max_depth = 0;
+                for mid in middles {
+                    let mc = mid.census();
+                    c.microswitches += mc.microswitches;
+                    c.muxes += mc.muxes;
+                    max_depth = max_depth.max(mc.depth);
+                }
+                c.depth = max_depth + 2; // input + output stage
+                c
+            }
+        }
+    }
+
+    /// Ports of the middle-stage sub-switches (r or r+1), if recursive.
+    pub fn middle_ports(&self) -> Option<usize> {
+        match &self.node {
+            SwitchNode::Recursive { r, odd, .. } => Some(if *odd { r + 1 } else { *r }),
+            _ => None,
+        }
+    }
+
+    /// Rearrangeably non-blocking for unicast iff m >= 2 (Beneš);
+    /// strict-sense non-blocking iff m >= 3 (paper Sec. V-C(3)).
+    pub fn rearrangeably_nonblocking(&self) -> bool {
+        self.m >= 2
+    }
+
+    /// See [`Self::rearrangeably_nonblocking`].
+    pub fn strict_sense_nonblocking(&self) -> bool {
+        self.m >= 3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_cases() {
+        let s2 = FredSwitch::new(2, 2);
+        assert_eq!(s2.census(), Census { microswitches: 1, muxes: 0, depth: 1 });
+        let s3 = FredSwitch::new(2, 3);
+        assert_eq!(s3.census(), Census { microswitches: 3, muxes: 0, depth: 2 });
+    }
+
+    #[test]
+    fn fred2_8_structure() {
+        // Fig. 7(h): FRED_2(8) = 4 input + 4 output μSwitches around two
+        // FRED_2(4); FRED_2(4) = 2+2 around two Base2.
+        let s = FredSwitch::new(2, 8);
+        let c = s.census();
+        // 8 outer + 2 * (4 outer + 2*1) = 8 + 2*6 = 20.
+        assert_eq!(c.microswitches, 20);
+        assert_eq!(c.muxes, 0);
+        // depth: outer(2) + inner(2) + base(1) = 5.
+        assert_eq!(c.depth, 5);
+    }
+
+    #[test]
+    fn odd_ports_use_mux_and_bigger_middles() {
+        let s = FredSwitch::new(3, 11);
+        match &s.node {
+            SwitchNode::Recursive { r, odd, middles } => {
+                assert_eq!(*r, 5);
+                assert!(*odd);
+                assert_eq!(middles.len(), 3);
+                assert_eq!(middles[0].ports, 6);
+            }
+            _ => panic!("expected recursive"),
+        }
+        assert_eq!(s.middle_ports(), Some(6));
+        assert!(s.census().muxes >= 1);
+    }
+
+    #[test]
+    fn census_grows_with_ports_and_m() {
+        let c10 = FredSwitch::new(3, 10).census().microswitches;
+        let c12 = FredSwitch::new(3, 12).census().microswitches;
+        assert!(c12 > c10);
+        let m2 = FredSwitch::new(2, 8).census().microswitches;
+        let m3 = FredSwitch::new(3, 8).census().microswitches;
+        assert!(m3 > m2);
+    }
+
+    #[test]
+    fn nonblocking_classification() {
+        assert!(FredSwitch::new(2, 8).rearrangeably_nonblocking());
+        assert!(!FredSwitch::new(2, 8).strict_sense_nonblocking());
+        assert!(FredSwitch::new(3, 8).strict_sense_nonblocking());
+    }
+
+    #[test]
+    fn paper_switch_sizes_construct() {
+        // Table III: FRED3(12), FRED3(11), FRED3(10).
+        for p in [10, 11, 12] {
+            let s = FredSwitch::new(3, p);
+            assert_eq!(s.ports, p);
+            assert!(s.census().microswitches > 0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 2 ports")]
+    fn one_port_panics() {
+        FredSwitch::new(3, 1);
+    }
+}

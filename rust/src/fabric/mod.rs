@@ -1,0 +1,27 @@
+//! Network fabric substrate.
+//!
+//! Everything the paper's evaluation needs from a network is built here,
+//! from scratch (the authors used ASTRA-SIM + a private backend):
+//!
+//! * [`fluid`] — a max-min-fair fluid-flow simulator over explicit link
+//!   graphs. Collectives become *steady-state transfer sets* (every link a
+//!   collective keeps busy, with the total bytes it pushes through it);
+//!   concurrent collectives share links fairly — which reproduces exactly
+//!   the paper's "max channel load" arithmetic (Fig. 4b, Sec. VIII).
+//! * [`mesh`] — the 5×4 wafer 2D-mesh baseline: X-Y routing, border I/O
+//!   controllers, ring + hierarchical-2D collectives, I/O broadcast trees.
+//! * [`fred`] — the FRED switch (recursive Clos-like `FRED_m(P)` with
+//!   R/D/RD μSwitches), conflict-graph collective routing, the 2-level
+//!   wafer fabric (Fig. 8), and the Table III hardware-overhead model.
+//! * [`collectives`] — fabric-independent collective math (traffic
+//!   factors, ring decomposition, chunking).
+//! * [`topology`] — the `Fabric` trait the coordinator schedules against.
+
+pub mod collectives;
+pub mod fluid;
+pub mod fred;
+pub mod mesh;
+pub mod topology;
+
+pub use fluid::{FluidSim, Link, LinkId, Network, Transfer};
+pub use topology::{CollectiveKind, Fabric, IoDirection, Plan};

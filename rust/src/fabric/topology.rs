@@ -1,0 +1,195 @@
+//! The fabric abstraction the coordinator schedules against.
+//!
+//! A fabric (2D mesh baseline or FRED) turns a *collective request* — a
+//! pattern among physical NPUs with a per-NPU payload — into a [`Plan`]: a
+//! sequence of phases of [`Transfer`]s plus a serial-latency term. Plans
+//! from concurrent collectives are handed together to the fluid simulator,
+//! which resolves all link sharing (this is how the paper's congestion
+//! effects arise, e.g. Fig. 5/6).
+//!
+//! Modelling rules (see DESIGN.md §4):
+//!
+//! * Within a phase, a pipelined algorithm's links are all busy at once
+//!   (steady state): a link that carries `c` chunks of size `s` over the
+//!   phase appears in one transfer of `c*s` bytes. A phase's duration is
+//!   then `max_link(total bytes / fair share)` — the bottleneck analysis
+//!   the paper itself uses (Sec. VIII).
+//! * Phases are separated by true data dependencies (e.g. the row
+//!   reduce-scatter must finish before the column phase of the
+//!   hierarchical 2D algorithm) and run under barrier semantics.
+//! * Hop/step serialization that cannot pipeline (ring startup) is carried
+//!   in `serial_latency` and added once.
+
+use super::fluid::Transfer;
+
+/// Physical NPU index on the wafer.
+pub type NpuId = usize;
+
+/// Collective communication patterns (paper Fig. 3 / Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    /// Everyone ends with the global reduction (Reduce-Scatter + All-Gather).
+    AllReduce,
+    /// Each ends with a distinct shard of the global reduction.
+    ReduceScatter,
+    /// Everyone ends with the concatenation of all shards.
+    AllGather,
+    /// One NPU ends with the global reduction.
+    Reduce,
+    /// One NPU's data is delivered to all others.
+    Multicast,
+    /// Each sends a distinct shard to each other participant.
+    AllToAll,
+    /// Plain point-to-point (PP boundary activations).
+    Unicast,
+}
+
+impl CollectiveKind {
+    /// Name used in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollectiveKind::AllReduce => "All-Reduce",
+            CollectiveKind::ReduceScatter => "Reduce-Scatter",
+            CollectiveKind::AllGather => "All-Gather",
+            CollectiveKind::Reduce => "Reduce",
+            CollectiveKind::Multicast => "Multicast",
+            CollectiveKind::AllToAll => "All-to-All",
+            CollectiveKind::Unicast => "Unicast",
+        }
+    }
+}
+
+/// Direction of an I/O-channel stream (weight streaming / input loading).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoDirection {
+    /// Off-wafer memory -> NPUs, broadcast: every NPU receives every byte
+    /// (pure-DP weight streaming) — the Fig. 4 pattern.
+    Broadcast,
+    /// NPUs -> off-wafer memory with in-path reduction (weight gradients
+    /// out) — the reverse of Fig. 4.
+    ReduceOut,
+    /// Off-wafer -> NPUs, scattered: each NPU receives a distinct shard
+    /// (per-worker minibatch loading).
+    Scatter,
+}
+
+/// A planned communication: phases of steady-state transfers + latency.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// Barrier-separated phases; within a phase, transfers run
+    /// concurrently and `bytes` is the total over the phase.
+    pub phases: Vec<Vec<Transfer>>,
+    /// Non-pipelinable serialization: hop latency × serial step count.
+    pub serial_latency: f64,
+    /// For reports.
+    pub label: String,
+}
+
+impl Plan {
+    /// An empty (zero-cost) plan.
+    pub fn empty(label: impl Into<String>) -> Self {
+        Self { phases: Vec::new(), serial_latency: 0.0, label: label.into() }
+    }
+
+    /// Single-phase plan from a transfer set.
+    pub fn single(transfers: Vec<Transfer>, serial_latency: f64, label: impl Into<String>) -> Self {
+        Self { phases: vec![transfers], serial_latency, label: label.into() }
+    }
+
+    /// Total bytes injected across all phases (the paper's "network
+    /// traffic" metric — in-network execution roughly halves it).
+    pub fn total_bytes(&self) -> f64 {
+        self.phases.iter().flatten().map(|t| t.bytes).sum()
+    }
+
+    /// True if the plan moves no data.
+    pub fn is_empty(&self) -> bool {
+        self.phases.iter().all(|p| p.iter().all(|t| t.bytes <= 0.0))
+    }
+}
+
+/// What a wafer-scale fabric must provide to the coordinator.
+pub trait Fabric {
+    /// Short name for reports ("2D-Mesh", "FRED-C", ...).
+    fn name(&self) -> String;
+
+    /// Number of NPUs on the wafer.
+    fn npu_count(&self) -> usize;
+
+    /// Number of I/O controllers.
+    fn io_count(&self) -> usize;
+
+    /// Aggregate I/O bandwidth (bytes/s) at the controllers' line rate.
+    fn io_total_bw(&self) -> f64;
+
+    /// The fluid simulator over this fabric's link graph.
+    fn sim(&self) -> &super::fluid::FluidSim;
+
+    /// Plan one collective among `participants` with `bytes` payload per
+    /// participant. For AllToAll, `bytes` is the total each NPU sends; for
+    /// Multicast the first participant is the source; for Reduce the first
+    /// participant is the destination; for Unicast participants are
+    /// `[src, dst]`.
+    fn plan_collective(&self, kind: CollectiveKind, participants: &[NpuId], bytes: f64) -> Plan;
+
+    /// Plan a full-wafer I/O stream of `total_bytes` moving between the
+    /// off-chip channels and `participants`, spread across all I/O
+    /// controllers (the weight-streaming path, Fig. 4).
+    fn plan_io_stream(&self, dir: IoDirection, total_bytes: f64, participants: &[NpuId]) -> Plan;
+
+    /// Run a set of plans concurrently; returns each plan's completion
+    /// time (fluid completion + its serial latency).
+    fn run_concurrent(&self, plans: &[Plan]) -> Vec<f64> {
+        let phased: Vec<Vec<Vec<Transfer>>> = plans.iter().map(|p| p.phases.clone()).collect();
+        let done = self.sim().run_phased(&phased);
+        plans
+            .iter()
+            .zip(done)
+            .map(|(p, d)| d + p.serial_latency)
+            .collect()
+    }
+
+    /// Time for a single plan in isolation.
+    fn run_plan(&self, plan: &Plan) -> f64 {
+        self.run_concurrent(std::slice::from_ref(plan))[0]
+    }
+
+    /// Effective NPU injection bandwidth achieved for a collective — the
+    /// Fig. 9 metric: the *endpoint-algorithm* per-NPU traffic divided by
+    /// the measured time, so in-network execution shows up as bandwidth
+    /// amplification (the paper's framing).
+    fn effective_npu_bw(&self, kind: CollectiveKind, participants: &[NpuId], bytes: f64) -> f64 {
+        let plan = self.plan_collective(kind, participants, bytes);
+        let t = self.run_plan(&plan);
+        if t <= 0.0 {
+            return f64::INFINITY;
+        }
+        super::collectives::endpoint_send_bytes(kind, participants.len(), bytes) / t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_are_papers() {
+        assert_eq!(CollectiveKind::AllReduce.name(), "All-Reduce");
+        assert_eq!(CollectiveKind::AllToAll.name(), "All-to-All");
+    }
+
+    #[test]
+    fn empty_plan_is_free() {
+        let p = Plan::empty("x");
+        assert_eq!(p.total_bytes(), 0.0);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn single_builds_one_phase() {
+        let p = Plan::single(vec![Transfer::new(vec![], 4.0, 0)], 1e-9, "x");
+        assert_eq!(p.phases.len(), 1);
+        assert_eq!(p.total_bytes(), 4.0);
+        assert!(!p.is_empty());
+    }
+}

@@ -1,0 +1,28 @@
+//! # FRED — Flexible REduction-Distribution interconnect for wafer-scale training
+//!
+//! Reproduction of Rashidi et al., *"FRED: Flexible REduction-Distribution
+//! Interconnect and Communication Implementation for Wafer-Scale Distributed
+//! Training of DNN Models"* (2024).
+//!
+//! The crate is the Layer-3 (Rust) half of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the wafer-scale fabric models (2D mesh baseline and
+//!   the FRED switch/fabric), conflict-free collective routing, device
+//!   placement, the 3D-parallel training-iteration scheduler, and a fluid-flow
+//!   discrete-event network simulator. Also a PJRT runtime that loads the
+//!   AOT-compiled JAX artifacts and an end-to-end data-parallel trainer.
+//! * **L2 (python/compile/model.py)** — JAX transformer fwd/bwd/optimizer,
+//!   AOT-lowered once to HLO text in `artifacts/`.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (tiled matmul, the
+//!   FRED flow reduce-broadcast) called from L2.
+//!
+//! Python never runs on the request path: the `fred` binary is self-contained
+//! once `make artifacts` has produced the HLO text files.
+
+pub mod coordinator;
+pub mod fabric;
+pub mod runtime;
+pub mod trainer;
+pub mod util;
+
+pub mod cli;

@@ -1,0 +1,23 @@
+//! `fred` — the FRED wafer-scale training-stack CLI (Layer-3 leader).
+//!
+//! Subcommands:
+//!
+//! * `sim`          — end-to-end iteration breakdown (Fig. 10 rows)
+//! * `sweep`        — strategy sweep on one fabric (Fig. 2)
+//! * `microbench`   — per-phase effective bandwidth (Fig. 9)
+//! * `channel-load` — mesh I/O hotspot analysis (Fig. 4)
+//! * `route`        — FRED switch routing demo (Fig. 7 h/i/j)
+//! * `placement`    — placement congestion comparison (Fig. 5)
+//! * `hw`           — FRED hardware overhead (Table III)
+//! * `train`        — real DP training over the simulated fabric
+//!   (requires `make artifacts`; Python never runs here)
+//!
+//! The argument parser is hand-rolled: the offline vendored crate set has
+//! no `clap` (see DESIGN.md §7).
+
+use fred::cli;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(cli::run(&args));
+}

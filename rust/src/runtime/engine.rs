@@ -1,0 +1,239 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once, execute
+//! from the Rust hot path (python never runs here).
+//!
+//! Interchange is HLO **text**: jax >= 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use super::manifest::{ArtifactSig, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A host-side tensor (f32 or i32), shape-tagged.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    /// f32 data + shape.
+    F32(Vec<f32>, Vec<usize>),
+    /// i32 data + shape.
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    /// Element count.
+    pub fn numel(&self) -> usize {
+        match self {
+            HostTensor::F32(v, _) => v.len(),
+            HostTensor::I32(v, _) => v.len(),
+        }
+    }
+
+    /// Shape.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    /// Borrow f32 data.
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            HostTensor::F32(v, _) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Convert to an XLA literal.
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64>;
+        let lit = match self {
+            HostTensor::F32(v, s) => {
+                dims = s.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(v)
+            }
+            HostTensor::I32(v, s) => {
+                dims = s.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(v)
+            }
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Convert from an XLA literal using the manifest dtype.
+    fn from_literal(lit: &xla::Literal, dtype: &str, shape: &[usize]) -> Result<HostTensor> {
+        match dtype {
+            "f32" => Ok(HostTensor::F32(lit.to_vec::<f32>()?, shape.to_vec())),
+            "i32" => Ok(HostTensor::I32(lit.to_vec::<i32>()?, shape.to_vec())),
+            other => Err(anyhow!("unsupported dtype {other}")),
+        }
+    }
+}
+
+/// A compiled entry point.
+pub struct CompiledArtifact {
+    sig: ArtifactSig,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledArtifact {
+    /// Execute with inputs in manifest order; returns outputs in
+    /// manifest order.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.sig.inputs.len() {
+            return Err(anyhow!(
+                "expected {} inputs, got {}",
+                self.sig.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (t, sig) in inputs.iter().zip(&self.sig.inputs) {
+            if t.numel() != sig.numel() {
+                return Err(anyhow!(
+                    "input `{}`: {} elements, expected {:?}",
+                    sig.name,
+                    t.numel(),
+                    sig.shape
+                ));
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(HostTensor::to_literal)
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // AOT lowers with return_tuple=True: the root is always a tuple.
+        let items = result.to_tuple()?;
+        if items.len() != self.sig.outputs.len() {
+            return Err(anyhow!(
+                "got {} outputs, manifest says {}",
+                items.len(),
+                self.sig.outputs.len()
+            ));
+        }
+        items
+            .iter()
+            .zip(&self.sig.outputs)
+            .map(|(lit, sig)| HostTensor::from_literal(lit, &sig.dtype, &sig.shape))
+            .collect()
+    }
+
+    /// The signature.
+    pub fn sig(&self) -> &ArtifactSig {
+        &self.sig
+    }
+}
+
+/// The runtime: one PJRT CPU client + compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: BTreeMap<String, std::rc::Rc<CompiledArtifact>>,
+}
+
+impl Engine {
+    /// Create over an artifacts directory (must contain manifest.json).
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, manifest, cache: BTreeMap::new() })
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name ("cpu" here; "tpu" with a TPU plugin).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn artifact(&mut self, name: &str) -> Result<std::rc::Rc<CompiledArtifact>> {
+        if let Some(a) = self.cache.get(name) {
+            return Ok(a.clone());
+        }
+        let path = self.manifest.hlo_path(name).map_err(|e| anyhow!(e))?;
+        let sig = self.manifest.artifacts[name].clone();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let art = std::rc::Rc::new(CompiledArtifact { sig, exe });
+        self.cache.insert(name.to_string(), art.clone());
+        Ok(art)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn smoke_artifact_runs_and_matches() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipped: run `make artifacts` first");
+            return;
+        };
+        let mut eng = Engine::new(&dir).expect("engine");
+        let smoke = eng.artifact("smoke").expect("compile smoke");
+        let x = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let y = HostTensor::F32(vec![1.0; 4], vec![2, 2]);
+        let out = smoke.run(&[x, y]).expect("execute");
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].as_f32().unwrap(), &[5.0, 5.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn flow_reduce_mean_matches_cpu_reference() {
+        let Some(dir) = artifacts_dir() else { return };
+        let mut eng = Engine::new(&dir).expect("engine");
+        let art = eng.artifact("flow_reduce_mean").expect("compile");
+        let dp = eng.manifest().dp;
+        let bucket = eng.manifest().bucket;
+        let mut data = vec![0.0f32; dp * bucket];
+        for (i, x) in data.iter_mut().enumerate() {
+            *x = (i % 97) as f32 * 0.25 - 3.0;
+        }
+        let out = art
+            .run(&[HostTensor::F32(data.clone(), vec![dp, bucket])])
+            .expect("execute");
+        let got = out[0].as_f32().unwrap();
+        // Reference: column means broadcast to all rows.
+        for col in (0..bucket).step_by(bucket / 7 + 1) {
+            let mean: f32 =
+                (0..dp).map(|r| data[r * bucket + col]).sum::<f32>() / dp as f32;
+            for r in 0..dp {
+                let v = got[r * bucket + col];
+                assert!((v - mean).abs() < 1e-5, "col {col} row {r}: {v} vs {mean}");
+            }
+        }
+    }
+
+    #[test]
+    fn artifact_cache_returns_same_compilation() {
+        let Some(dir) = artifacts_dir() else { return };
+        let mut eng = Engine::new(&dir).expect("engine");
+        let a = eng.artifact("smoke").unwrap();
+        let b = eng.artifact("smoke").unwrap();
+        assert!(std::rc::Rc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn bad_input_arity_is_rejected() {
+        let Some(dir) = artifacts_dir() else { return };
+        let mut eng = Engine::new(&dir).expect("engine");
+        let smoke = eng.artifact("smoke").unwrap();
+        let x = HostTensor::F32(vec![0.0; 4], vec![2, 2]);
+        assert!(smoke.run(&[x]).is_err());
+    }
+}

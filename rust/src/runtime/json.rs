@@ -1,0 +1,321 @@
+//! Minimal JSON parser for `artifacts/manifest.json` (the vendored crate
+//! set has no `serde`). Supports the full JSON grammar we emit: objects,
+//! arrays, strings (with \\-escapes), numbers, booleans, null.
+
+use std::collections::BTreeMap;
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// null
+    Null,
+    /// true/false
+    Bool(bool),
+    /// Any number (f64 — fine for shapes/sizes we use).
+    Num(f64),
+    /// String.
+    Str(String),
+    /// Array.
+    Arr(Vec<Json>),
+    /// Object (sorted keys).
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    /// Parse a JSON document.
+    pub fn parse(s: &str) -> Result<Json, String> {
+        let b = s.as_bytes();
+        let mut i = 0usize;
+        let v = parse_value(b, &mut i)?;
+        skip_ws(b, &mut i);
+        if i != b.len() {
+            return Err(format!("trailing garbage at byte {i}"));
+        }
+        Ok(v)
+    }
+
+    /// Object field access.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// String value.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Numeric value.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Numeric value as usize.
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+
+    /// Array items.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Object map.
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Boolean value.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], i: &mut usize) {
+    while *i < b.len() && matches!(b[*i], b' ' | b'\t' | b'\n' | b'\r') {
+        *i += 1;
+    }
+}
+
+fn parse_value(b: &[u8], i: &mut usize) -> Result<Json, String> {
+    skip_ws(b, i);
+    if *i >= b.len() {
+        return Err("unexpected end of input".into());
+    }
+    match b[*i] {
+        b'{' => parse_obj(b, i),
+        b'[' => parse_arr(b, i),
+        b'"' => Ok(Json::Str(parse_string(b, i)?)),
+        b't' => parse_lit(b, i, "true", Json::Bool(true)),
+        b'f' => parse_lit(b, i, "false", Json::Bool(false)),
+        b'n' => parse_lit(b, i, "null", Json::Null),
+        _ => parse_num(b, i),
+    }
+}
+
+fn parse_lit(b: &[u8], i: &mut usize, lit: &str, v: Json) -> Result<Json, String> {
+    if b[*i..].starts_with(lit.as_bytes()) {
+        *i += lit.len();
+        Ok(v)
+    } else {
+        Err(format!("bad literal at byte {i}"))
+    }
+}
+
+fn parse_num(b: &[u8], i: &mut usize) -> Result<Json, String> {
+    let start = *i;
+    while *i < b.len()
+        && matches!(b[*i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *i += 1;
+    }
+    std::str::from_utf8(&b[start..*i])
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(Json::Num)
+        .ok_or_else(|| format!("bad number at byte {start}"))
+}
+
+fn parse_string(b: &[u8], i: &mut usize) -> Result<String, String> {
+    debug_assert_eq!(b[*i], b'"');
+    *i += 1;
+    let mut out = String::new();
+    while *i < b.len() {
+        match b[*i] {
+            b'"' => {
+                *i += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *i += 1;
+                if *i >= b.len() {
+                    return Err("truncated escape".into());
+                }
+                match b[*i] {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'r' => out.push('\r'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        if *i + 4 >= b.len() {
+                            return Err("truncated \\u escape".into());
+                        }
+                        let hex = std::str::from_utf8(&b[*i + 1..*i + 5])
+                            .map_err(|_| "bad \\u escape")?;
+                        let code =
+                            u32::from_str_radix(hex, 16).map_err(|_| "bad \\u escape")?;
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        *i += 4;
+                    }
+                    c => return Err(format!("bad escape \\{}", c as char)),
+                }
+                *i += 1;
+            }
+            c => {
+                // Copy UTF-8 bytes through (manifest is ASCII anyway).
+                let len = utf8_len(c);
+                out.push_str(
+                    std::str::from_utf8(&b[*i..*i + len]).map_err(|_| "bad utf8")?,
+                );
+                *i += len;
+            }
+        }
+    }
+    Err("unterminated string".into())
+}
+
+fn utf8_len(c: u8) -> usize {
+    match c {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+fn parse_obj(b: &[u8], i: &mut usize) -> Result<Json, String> {
+    *i += 1; // {
+    let mut m = BTreeMap::new();
+    skip_ws(b, i);
+    if *i < b.len() && b[*i] == b'}' {
+        *i += 1;
+        return Ok(Json::Obj(m));
+    }
+    loop {
+        skip_ws(b, i);
+        if *i >= b.len() || b[*i] != b'"' {
+            return Err(format!("expected key at byte {i}"));
+        }
+        let key = parse_string(b, i)?;
+        skip_ws(b, i);
+        if *i >= b.len() || b[*i] != b':' {
+            return Err(format!("expected ':' at byte {i}"));
+        }
+        *i += 1;
+        let v = parse_value(b, i)?;
+        m.insert(key, v);
+        skip_ws(b, i);
+        match b.get(*i) {
+            Some(b',') => *i += 1,
+            Some(b'}') => {
+                *i += 1;
+                return Ok(Json::Obj(m));
+            }
+            _ => return Err(format!("expected ',' or '}}' at byte {i}")),
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], i: &mut usize) -> Result<Json, String> {
+    *i += 1; // [
+    let mut v = Vec::new();
+    skip_ws(b, i);
+    if *i < b.len() && b[*i] == b']' {
+        *i += 1;
+        return Ok(Json::Arr(v));
+    }
+    loop {
+        v.push(parse_value(b, i)?);
+        skip_ws(b, i);
+        match b.get(*i) {
+            Some(b',') => *i += 1,
+            Some(b']') => {
+                *i += 1;
+                return Ok(Json::Arr(v));
+            }
+            _ => return Err(format!("expected ',' or ']' at byte {i}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse(" 42 ").unwrap(), Json::Num(42.0));
+        assert_eq!(Json::parse("-1.5e3").unwrap(), Json::Num(-1500.0));
+        assert_eq!(Json::parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn parses_nested() {
+        let j = Json::parse(r#"{"a": [1, 2, {"b": "c"}], "d": null}"#).unwrap();
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(
+            j.get("a").unwrap().as_arr().unwrap()[2].get("b").unwrap().as_str(),
+            Some("c")
+        );
+        assert_eq!(j.get("d"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn parses_escapes() {
+        let j = Json::parse(r#""a\nb\t\"q\" A""#).unwrap();
+        assert_eq!(j.as_str(), Some("a\nb\t\"q\" A"));
+    }
+
+    #[test]
+    fn parses_empty_containers() {
+        assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+        assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn accessors_type_check() {
+        let j = Json::parse("3").unwrap();
+        assert_eq!(j.as_usize(), Some(3));
+        assert_eq!(j.as_str(), None);
+        assert_eq!(j.as_arr(), None);
+        assert_eq!(j.as_bool(), None);
+    }
+
+    #[test]
+    fn parses_manifest_shape() {
+        let doc = r#"{
+ "model": {"vocab": 2048, "d_model": 256, "use_pallas": true},
+ "params": [{"name": "embed", "shape": [2048, 256], "dtype": "f32"}],
+ "artifacts": {"smoke": {"file": "smoke.hlo.txt", "inputs": [], "outputs": []}}
+}"#;
+        let j = Json::parse(doc).unwrap();
+        assert_eq!(
+            j.get("model").unwrap().get("vocab").unwrap().as_usize(),
+            Some(2048)
+        );
+        assert_eq!(j.get("model").unwrap().get("use_pallas").unwrap().as_bool(), Some(true));
+        let p = &j.get("params").unwrap().as_arr().unwrap()[0];
+        assert_eq!(p.get("shape").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,226 @@
+//! The artifact manifest — the argument-order contract between the
+//! build-time python AOT step (`python/compile/aot.py`) and this runtime.
+
+use super::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A tensor signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    /// Path-name of the leaf ("layers/00/wq", "tokens", ...).
+    pub name: String,
+    /// Shape.
+    pub shape: Vec<usize>,
+    /// "f32" or "i32" (all the AOT path emits).
+    pub dtype: String,
+}
+
+impl TensorSig {
+    fn from_json(j: &Json) -> Result<Self, String> {
+        Ok(Self {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("missing name")?
+                .to_string(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or("missing shape")?
+                .iter()
+                .map(|d| d.as_usize().ok_or("bad dim"))
+                .collect::<Result<_, _>>()?,
+            dtype: j
+                .get("dtype")
+                .and_then(Json::as_str)
+                .ok_or("missing dtype")?
+                .to_string(),
+        })
+    }
+
+    /// Number of elements.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-lowered entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    /// HLO text file name (relative to the artifacts dir).
+    pub file: String,
+    /// Input tensor order.
+    pub inputs: Vec<TensorSig>,
+    /// Output tensor order (the XLA root tuple layout).
+    pub outputs: Vec<TensorSig>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+    /// Model hyper-parameters (as raw numbers, keyed by name).
+    pub model: BTreeMap<String, f64>,
+    /// Trainer constants: data-parallel width baked into flow_reduce.
+    pub dp: usize,
+    /// Gradient bucket size (f32 elements).
+    pub bucket: usize,
+    /// Flattened parameter signatures, in argument order.
+    pub params: Vec<TensorSig>,
+    /// Entry points by name.
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text)?;
+        let model = j
+            .get("model")
+            .and_then(Json::as_obj)
+            .ok_or("missing model")?
+            .iter()
+            .filter_map(|(k, v)| v.as_f64().map(|n| (k.clone(), n)))
+            .collect();
+        let trainer = j.get("trainer").ok_or("missing trainer")?;
+        let params = j
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or("missing params")?
+            .iter()
+            .map(TensorSig::from_json)
+            .collect::<Result<_, _>>()?;
+        let mut artifacts = BTreeMap::new();
+        for (name, art) in j.get("artifacts").and_then(Json::as_obj).ok_or("missing artifacts")? {
+            let sig = ArtifactSig {
+                file: art
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or("missing file")?
+                    .to_string(),
+                inputs: art
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .ok_or("missing inputs")?
+                    .iter()
+                    .map(TensorSig::from_json)
+                    .collect::<Result<_, _>>()?,
+                outputs: art
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .ok_or("missing outputs")?
+                    .iter()
+                    .map(TensorSig::from_json)
+                    .collect::<Result<_, _>>()?,
+            };
+            artifacts.insert(name.clone(), sig);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            dp: trainer.get("dp").and_then(Json::as_usize).ok_or("missing dp")?,
+            bucket: trainer
+                .get("bucket")
+                .and_then(Json::as_usize)
+                .ok_or("missing bucket")?,
+            params,
+            artifacts,
+        })
+    }
+
+    /// Path of an artifact's HLO file.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf, String> {
+        self.artifacts
+            .get(name)
+            .map(|a| self.dir.join(&a.file))
+            .ok_or_else(|| format!("artifact `{name}` not in manifest"))
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(TensorSig::numel).sum()
+    }
+
+    /// Read `init_params.bin` (little-endian f32, manifest order) into
+    /// per-leaf buffers.
+    pub fn load_init_params(&self) -> Result<Vec<Vec<f32>>, String> {
+        let path = self.dir.join("init_params.bin");
+        let bytes = std::fs::read(&path).map_err(|e| format!("{}: {e}", path.display()))?;
+        if bytes.len() != 4 * self.param_count() {
+            return Err(format!(
+                "init_params.bin has {} bytes, expected {}",
+                bytes.len(),
+                4 * self.param_count()
+            ));
+        }
+        let mut out = Vec::with_capacity(self.params.len());
+        let mut off = 0usize;
+        for sig in &self.params {
+            let n = sig.numel();
+            let mut v = Vec::with_capacity(n);
+            for k in 0..n {
+                let b = &bytes[off + 4 * k..off + 4 * k + 4];
+                v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += 4 * n;
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipped: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).expect("manifest parses");
+        assert!(m.dp >= 2);
+        assert!(m.bucket > 0);
+        assert!(m.param_count() > 1000);
+        for name in ["grad_step", "adamw_update", "train_step", "flow_reduce_mean", "smoke"] {
+            assert!(m.artifacts.contains_key(name), "{name}");
+            assert!(m.hlo_path(name).unwrap().exists());
+        }
+    }
+
+    #[test]
+    fn grad_step_signature_consistent() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let gs = &m.artifacts["grad_step"];
+        assert_eq!(gs.inputs.len(), m.params.len() + 1);
+        assert_eq!(gs.outputs.len(), m.params.len() + 1);
+        // Grad outputs mirror the param shapes.
+        for (g, p) in gs.outputs[1..].iter().zip(&m.params) {
+            assert_eq!(g.shape, p.shape, "{} vs {}", g.name, p.name);
+        }
+    }
+
+    #[test]
+    fn init_params_roundtrip_when_built() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let leaves = m.load_init_params().expect("init params load");
+        assert_eq!(leaves.len(), m.params.len());
+        for (v, sig) in leaves.iter().zip(&m.params) {
+            assert_eq!(v.len(), sig.numel());
+            assert!(v.iter().all(|x| x.is_finite()));
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: the bridge between the AOT-compiled JAX/Pallas artifacts
+//! and the Rust request path.
+//!
+//! * [`json`] — minimal JSON parser (no `serde` offline).
+//! * [`manifest`] — the `artifacts/manifest.json` argument-order contract.
+//! * [`engine`] — PJRT CPU client, HLO-text loading, executable cache,
+//!   host-tensor ⇄ literal conversion.
+
+pub mod engine;
+pub mod json;
+pub mod manifest;
+
+pub use engine::{CompiledArtifact, Engine, HostTensor};
+pub use manifest::{Manifest, TensorSig};

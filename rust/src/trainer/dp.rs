@@ -1,0 +1,327 @@
+//! The data-parallel training loop (see module docs in `trainer`).
+
+use super::corpus::Corpus;
+use crate::coordinator::config::{self, FabricKind};
+use crate::fabric::topology::{CollectiveKind, Fabric};
+use crate::runtime::{CompiledArtifact, Engine, HostTensor};
+use anyhow::{anyhow, Context, Result};
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    /// Directory with manifest.json + HLO artifacts.
+    pub artifacts_dir: PathBuf,
+    /// Optimizer steps to run.
+    pub steps: usize,
+    /// Simulated wafer fabric carrying the gradient All-Reduce.
+    pub fabric: FabricKind,
+    /// Corpus seed.
+    pub seed: u64,
+    /// Print the loss every N steps.
+    pub log_every: usize,
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// (step, mean loss) pairs.
+    pub losses: Vec<(usize, f64)>,
+    /// Simulated wafer time for all comm (s).
+    pub sim_comm_time: f64,
+    /// Simulated wafer compute time (s, from the FLOP model).
+    pub sim_compute_time: f64,
+    /// Real wall-clock spent in PJRT compute (s).
+    pub wall_compute: f64,
+    /// Real wall-clock spent in the flow_reduce reductions (s).
+    pub wall_reduce: f64,
+    /// Tokens processed.
+    pub tokens: usize,
+    /// Fabric name.
+    pub fabric: String,
+    /// DP width.
+    pub dp: usize,
+}
+
+impl TrainReport {
+    /// First and last recorded loss.
+    pub fn first_last(&self) -> (f64, f64) {
+        (
+            self.losses.first().map(|x| x.1).unwrap_or(f64::NAN),
+            self.losses.last().map(|x| x.1).unwrap_or(f64::NAN),
+        )
+    }
+
+    /// Human summary.
+    pub fn print(&self) {
+        let (first, last) = self.first_last();
+        println!("=== train report ({} | dp={}) ===", self.fabric, self.dp);
+        for (s, l) in &self.losses {
+            println!("step {s:>5}  loss {l:.4}");
+        }
+        println!("loss: {first:.4} -> {last:.4}");
+        println!(
+            "tokens {} | wall compute {:.2}s | wall reduce {:.2}s",
+            self.tokens, self.wall_compute, self.wall_reduce
+        );
+        println!(
+            "simulated wafer time: compute {:.3}ms + comm {:.3}ms = {:.3}ms",
+            self.sim_compute_time * 1e3,
+            self.sim_comm_time * 1e3,
+            (self.sim_compute_time + self.sim_comm_time) * 1e3
+        );
+    }
+}
+
+/// The trainer.
+pub struct Trainer {
+    cfg: TrainerConfig,
+    engine: Engine,
+    grad_step: Rc<CompiledArtifact>,
+    adamw: Rc<CompiledArtifact>,
+    flow_reduce: Rc<CompiledArtifact>,
+    fabric: Box<dyn Fabric>,
+    /// One shared copy of params/m/v — replicas stay bit-identical
+    /// because every worker applies the same reduced gradient.
+    params: Vec<Vec<f32>>,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    corpora: Vec<Corpus>,
+    batch: usize,
+    seq: usize,
+    dp: usize,
+    bucket: usize,
+    /// Physical NPUs hosting the DP workers (MP-consecutive placement).
+    npus: Vec<usize>,
+}
+
+impl Trainer {
+    /// Load artifacts and initial parameters.
+    pub fn new(cfg: TrainerConfig) -> Result<Trainer> {
+        let mut engine = Engine::new(&cfg.artifacts_dir)?;
+        let man = engine.manifest().clone();
+        let dp = man.dp;
+        let bucket = man.bucket;
+        let batch = *man.model.get("batch").ok_or_else(|| anyhow!("model.batch"))? as usize;
+        let seq = *man.model.get("seq_len").ok_or_else(|| anyhow!("model.seq_len"))? as usize;
+        let vocab = *man.model.get("vocab").ok_or_else(|| anyhow!("model.vocab"))? as usize;
+        let grad_step = engine.artifact("grad_step").context("grad_step")?;
+        let adamw = engine.artifact("adamw_update").context("adamw_update")?;
+        let flow_reduce = engine.artifact("flow_reduce_mean").context("flow_reduce_mean")?;
+        let params = engine.manifest().load_init_params().map_err(|e| anyhow!(e))?;
+        let zeros: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        let corpora = (0..dp)
+            .map(|w| Corpus::new(vocab, cfg.seed * 1000 + w as u64))
+            .collect();
+        let fabric = cfg.fabric.build();
+        assert!(dp <= fabric.npu_count());
+        let npus: Vec<usize> = (0..dp).collect();
+        Ok(Trainer {
+            cfg,
+            engine,
+            grad_step,
+            adamw,
+            flow_reduce,
+            fabric,
+            m: zeros.clone(),
+            v: zeros,
+            params,
+            corpora,
+            batch,
+            seq,
+            dp,
+            bucket,
+            npus,
+        })
+    }
+
+    /// The engine (for examples that want platform info).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    fn param_tensors(&self, leaves: &[Vec<f32>]) -> Vec<HostTensor> {
+        leaves
+            .iter()
+            .zip(&self.engine.manifest().params)
+            .map(|(v, sig)| HostTensor::F32(v.clone(), sig.shape.clone()))
+            .collect()
+    }
+
+    /// One optimizer step; returns the mean worker loss.
+    pub fn step(&mut self, step_idx: usize, report: &mut TrainReport) -> Result<f64> {
+        let n_leaves = self.params.len();
+        // --- per-worker fwd+bwd (L2/L1 compute via PJRT) ---
+        let mut losses = Vec::with_capacity(self.dp);
+        let mut flat_grads: Vec<Vec<f32>> = Vec::with_capacity(self.dp);
+        let param_tensors = self.param_tensors(&self.params);
+        for w in 0..self.dp {
+            let tokens = self.corpora[w].batch(self.batch, self.seq + 1);
+            let mut inputs = param_tensors.clone();
+            inputs.push(HostTensor::I32(tokens, vec![self.batch, self.seq + 1]));
+            let t0 = Instant::now();
+            let out = self.grad_step.run(&inputs).context("grad_step")?;
+            report.wall_compute += t0.elapsed().as_secs_f64();
+            let loss = out[0].as_f32().unwrap()[0] as f64;
+            if !loss.is_finite() {
+                return Err(anyhow!("non-finite loss at step {step_idx} worker {w}"));
+            }
+            losses.push(loss);
+            // Flatten grads (outputs[1..] mirror the param order).
+            let total: usize = self.params.iter().map(Vec::len).sum();
+            let mut flat = Vec::with_capacity(total);
+            for g in &out[1..=n_leaves] {
+                flat.extend_from_slice(g.as_f32().unwrap());
+            }
+            flat_grads.push(flat);
+        }
+
+        // --- FRED in-network reduction (flow_reduce artifact), bucketed ---
+        let total: usize = self.params.iter().map(Vec::len).sum();
+        let mut reduced = vec![0.0f32; total];
+        let t0 = Instant::now();
+        let mut off = 0usize;
+        while off < total {
+            let n = self.bucket.min(total - off);
+            // Pack [dp, bucket] (pad the tail with zeros; mean of zeros
+            // stays zero and the tail is ignored on unpack).
+            let mut stacked = vec![0.0f32; self.dp * self.bucket];
+            for w in 0..self.dp {
+                stacked[w * self.bucket..w * self.bucket + n]
+                    .copy_from_slice(&flat_grads[w][off..off + n]);
+            }
+            let out = self
+                .flow_reduce
+                .run(&[HostTensor::F32(stacked, vec![self.dp, self.bucket])])
+                .context("flow_reduce")?;
+            // All-Reduce postcondition: every row identical; take row 0.
+            reduced[off..off + n].copy_from_slice(&out[0].as_f32().unwrap()[..n]);
+            off += n;
+        }
+        report.wall_reduce += t0.elapsed().as_secs_f64();
+
+        // --- simulated wafer time for the same collective ---
+        let grad_bytes = total as f64 * 4.0;
+        let plan =
+            self.fabric
+                .plan_collective(CollectiveKind::AllReduce, &self.npus, grad_bytes);
+        report.sim_comm_time += self.fabric.run_plan(&plan);
+        // Compute-time estimate on the wafer (fwd+bwd ≈ 6 FLOPs/param/token).
+        let flops = 6.0 * total as f64 * (self.batch * self.seq) as f64;
+        report.sim_compute_time += flops / config::npu_effective_flops();
+
+        // --- optimizer (adamw_update artifact) ---
+        let mut unpacked: Vec<Vec<f32>> = Vec::with_capacity(n_leaves);
+        let mut off = 0usize;
+        for p in &self.params {
+            unpacked.push(reduced[off..off + p.len()].to_vec());
+            off += p.len();
+        }
+        let mut inputs = Vec::with_capacity(4 * n_leaves + 1);
+        inputs.extend(self.param_tensors(&self.params));
+        inputs.extend(self.param_tensors(&unpacked));
+        inputs.extend(self.param_tensors(&self.m));
+        inputs.extend(self.param_tensors(&self.v));
+        inputs.push(HostTensor::F32(vec![(step_idx + 1) as f32], vec![]));
+        let t0 = Instant::now();
+        let out = self.adamw.run(&inputs).context("adamw_update")?;
+        report.wall_compute += t0.elapsed().as_secs_f64();
+        for (i, dst) in self.params.iter_mut().enumerate() {
+            *dst = out[i].as_f32().unwrap().to_vec();
+        }
+        for (i, dst) in self.m.iter_mut().enumerate() {
+            *dst = out[n_leaves + i].as_f32().unwrap().to_vec();
+        }
+        for (i, dst) in self.v.iter_mut().enumerate() {
+            *dst = out[2 * n_leaves + i].as_f32().unwrap().to_vec();
+        }
+
+        report.tokens += self.dp * self.batch * self.seq;
+        Ok(losses.iter().sum::<f64>() / self.dp as f64)
+    }
+
+    /// Run the configured number of steps.
+    pub fn train(&mut self) -> Result<TrainReport> {
+        let mut report = TrainReport {
+            losses: Vec::new(),
+            sim_comm_time: 0.0,
+            sim_compute_time: 0.0,
+            wall_compute: 0.0,
+            wall_reduce: 0.0,
+            tokens: 0,
+            fabric: self.fabric.name(),
+            dp: self.dp,
+        };
+        for s in 0..self.cfg.steps {
+            let loss = self.step(s, &mut report)?;
+            if s % self.cfg.log_every == 0 || s + 1 == self.cfg.steps {
+                report.losses.push((s, loss));
+                eprintln!("step {s:>5}  loss {loss:.4}");
+            }
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    fn cfg(steps: usize) -> Option<TrainerConfig> {
+        artifacts_dir().map(|artifacts_dir| TrainerConfig {
+            artifacts_dir,
+            steps,
+            fabric: FabricKind::FredD,
+            seed: 0,
+            log_every: 1,
+        })
+    }
+
+    #[test]
+    fn loss_decreases_over_a_few_steps() {
+        let Some(cfg) = cfg(8) else {
+            eprintln!("skipped: run `make artifacts` first");
+            return;
+        };
+        let mut t = Trainer::new(cfg).expect("trainer");
+        let report = t.train().expect("train");
+        let (first, last) = report.first_last();
+        assert!(first.is_finite() && last.is_finite());
+        assert!(
+            last < first - 0.05,
+            "loss should drop: {first:.4} -> {last:.4}"
+        );
+        assert!(report.sim_comm_time > 0.0);
+        assert!(report.tokens > 0);
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let Some(cfg) = cfg(2) else { return };
+        let a = Trainer::new(cfg.clone()).unwrap().train().unwrap();
+        let b = Trainer::new(cfg).unwrap().train().unwrap();
+        assert_eq!(a.losses, b.losses);
+    }
+
+    #[test]
+    fn fabric_choice_changes_sim_time_not_numerics() {
+        let Some(mut cfg) = cfg(2) else { return };
+        let a = Trainer::new(cfg.clone()).unwrap().train().unwrap();
+        cfg.fabric = FabricKind::Baseline;
+        let b = Trainer::new(cfg).unwrap().train().unwrap();
+        assert_eq!(a.losses, b.losses, "numerics identical across fabrics");
+        assert!(
+            a.sim_comm_time < b.sim_comm_time,
+            "FRED-D comm {} must beat mesh {}",
+            a.sim_comm_time,
+            b.sim_comm_time
+        );
+    }
+}

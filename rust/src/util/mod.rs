@@ -1,0 +1,11 @@
+//! Small shared utilities: deterministic PRNG, table printing, a minimal
+//! property-testing harness (the vendored crate set has no `proptest`, so we
+//! ship our own shrink-free randomized checker), and unit helpers.
+
+pub mod prng;
+pub mod table;
+pub mod prop;
+pub mod units;
+
+pub use prng::Xorshift64;
+pub use units::{GB, GBPS, KB, MB, TBPS, TFLOPS};

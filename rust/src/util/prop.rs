@@ -1,0 +1,92 @@
+//! Minimal property-testing harness.
+//!
+//! The offline vendored crate set has no `proptest`, so invariants are
+//! checked with this shrink-free randomized runner: generate N cases from a
+//! seeded [`Xorshift64`], run the property, and report the seed + case index
+//! of the first failure so it can be replayed deterministically.
+
+use super::prng::Xorshift64;
+
+/// Number of cases per property by default (kept modest; properties run in
+/// `cargo test` alongside hundreds of unit tests).
+pub const DEFAULT_CASES: usize = 128;
+
+/// Run `prop` on `cases` inputs drawn by `gen` from a PRNG seeded with
+/// `seed`. Panics with a replayable message on the first failing case.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Xorshift64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Xorshift64::new(seed);
+    for i in 0..cases {
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property `{name}` failed (seed={seed}, case #{i}):\n  input: {case:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] with [`DEFAULT_CASES`].
+pub fn check_default<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    gen: impl FnMut(&mut Xorshift64) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    check(name, seed, DEFAULT_CASES, gen, prop);
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err(format!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_default(
+            "sum-commutes",
+            1,
+            |r| (r.next_below(1000) as i64, r.next_below(1000) as i64),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math is broken".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 2, 8, |r| r.next_u64(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn prop_assert_macro_works() {
+        check_default(
+            "macro",
+            3,
+            |r| r.next_below(10),
+            |&x| {
+                prop_assert!(x < 10, "x={x} out of range");
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,85 @@
+//! Unit constants. All bandwidths in the codebase are **bytes/second** and
+//! all times are **seconds** (f64); sizes are **bytes** (f64 where they feed
+//! the fluid model, u64 at API boundaries). These constants make the config
+//! tables read like the paper's Table II.
+
+/// 1 kilobyte.
+pub const KB: f64 = 1e3;
+/// 1 megabyte.
+pub const MB: f64 = 1e6;
+/// 1 gigabyte.
+pub const GB: f64 = 1e9;
+/// 1 terabyte.
+pub const TB: f64 = 1e12;
+
+/// 1 GB/s in bytes/second.
+pub const GBPS: f64 = 1e9;
+/// 1 TB/s in bytes/second.
+pub const TBPS: f64 = 1e12;
+
+/// 1 TFLOP/s in FLOP/second.
+pub const TFLOPS: f64 = 1e12;
+
+/// Pretty-print a byte count (e.g. "1.50 GB").
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= TB {
+        format!("{:.2} TB", b / TB)
+    } else if b >= GB {
+        format!("{:.2} GB", b / GB)
+    } else if b >= MB {
+        format!("{:.2} MB", b / MB)
+    } else if b >= KB {
+        format!("{:.2} KB", b / KB)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Pretty-print a bandwidth (e.g. "3.00 TBps").
+pub fn fmt_bw(bw: f64) -> String {
+    if bw >= TBPS {
+        format!("{:.2} TBps", bw / TBPS)
+    } else {
+        format!("{:.2} GBps", bw / GBPS)
+    }
+}
+
+/// Pretty-print a duration in engineering units.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert_eq!(fmt_bytes(2.0 * KB), "2.00 KB");
+        assert_eq!(fmt_bytes(3.5 * GB), "3.50 GB");
+        assert_eq!(fmt_bytes(1.25 * TB), "1.25 TB");
+    }
+
+    #[test]
+    fn bw_formatting() {
+        assert_eq!(fmt_bw(750.0 * GBPS), "750.00 GBps");
+        assert_eq!(fmt_bw(3.0 * TBPS), "3.00 TBps");
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.5), "2.500 s");
+        assert_eq!(fmt_time(1.5e-3), "1.500 ms");
+        assert_eq!(fmt_time(2e-6), "2.000 us");
+        assert_eq!(fmt_time(20e-9), "20.0 ns");
+    }
+}

@@ -1,0 +1,144 @@
+//! Integration tests over the PJRT runtime + trainer (gated on
+//! `make artifacts`; they skip — loudly — when artifacts are missing, so
+//! plain `cargo test` works in a fresh checkout, and `make test` runs the
+//! full matrix).
+
+use fred::runtime::{Engine, HostTensor};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn grad_step_initial_loss_is_near_uniform() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut eng = Engine::new(&dir).expect("engine");
+    let man = eng.manifest().clone();
+    let vocab = man.model["vocab"];
+    let batch = man.model["batch"] as usize;
+    let seq = man.model["seq_len"] as usize;
+    let grad_step = eng.artifact("grad_step").expect("compile");
+    let params = man.load_init_params().unwrap();
+    let mut inputs: Vec<HostTensor> = params
+        .iter()
+        .zip(&man.params)
+        .map(|(v, s)| HostTensor::F32(v.clone(), s.shape.clone()))
+        .collect();
+    // Pseudo-random tokens.
+    let tokens: Vec<i32> = (0..batch * (seq + 1))
+        .map(|i| ((i * 2654435761) % vocab as usize) as i32)
+        .collect();
+    inputs.push(HostTensor::I32(tokens, vec![batch, seq + 1]));
+    let out = grad_step.run(&inputs).expect("execute");
+    let loss = out[0].as_f32().unwrap()[0] as f64;
+    let uniform = (vocab).ln();
+    assert!(
+        (loss - uniform).abs() < 1.5,
+        "initial loss {loss} should be near ln(vocab) = {uniform}"
+    );
+    // Gradients flow: at least half the leaves have non-zero grads.
+    let nonzero = out[1..]
+        .iter()
+        .filter(|g| g.as_f32().unwrap().iter().any(|&x| x != 0.0))
+        .count();
+    assert!(nonzero * 2 >= man.params.len(), "{nonzero}/{}", man.params.len());
+}
+
+#[test]
+fn flow_reduce_sum_and_mean_are_consistent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut eng = Engine::new(&dir).expect("engine");
+    let man = eng.manifest().clone();
+    let (dp, bucket) = (man.dp, man.bucket);
+    let data: Vec<f32> = (0..dp * bucket).map(|i| (i % 13) as f32 - 6.0).collect();
+    let input = HostTensor::F32(data, vec![dp, bucket]);
+    let sum_art = eng.artifact("flow_reduce_sum").expect("sum");
+    let mean_art = eng.artifact("flow_reduce_mean").expect("mean");
+    let s = sum_art.run(std::slice::from_ref(&input)).unwrap();
+    let m = mean_art.run(std::slice::from_ref(&input)).unwrap();
+    let sv = s[0].as_f32().unwrap();
+    let mv = m[0].as_f32().unwrap();
+    for i in (0..sv.len()).step_by(sv.len() / 17 + 1) {
+        assert!(
+            (mv[i] * dp as f32 - sv[i]).abs() < 1e-4,
+            "mean*dp != sum at {i}: {} vs {}",
+            mv[i] * dp as f32,
+            sv[i]
+        );
+    }
+}
+
+#[test]
+fn train_step_artifact_matches_grad_plus_update() {
+    // The fused single-worker step must equal grad_step + adamw_update —
+    // the dp=1 consistency check mirroring the python-side test, but
+    // through the Rust PJRT path.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut eng = Engine::new(&dir).expect("engine");
+    let man = eng.manifest().clone();
+    let batch = man.model["batch"] as usize;
+    let seq = man.model["seq_len"] as usize;
+    let n = man.params.len();
+    let params: Vec<HostTensor> = man
+        .load_init_params()
+        .unwrap()
+        .into_iter()
+        .zip(&man.params)
+        .map(|(v, s)| HostTensor::F32(v, s.shape.clone()))
+        .collect();
+    let zeros: Vec<HostTensor> = man
+        .params
+        .iter()
+        .map(|s| HostTensor::F32(vec![0.0; s.numel()], s.shape.clone()))
+        .collect();
+    let tokens: Vec<i32> = (0..batch * (seq + 1))
+        .map(|i| ((7 * i + 3) % man.model["vocab"] as usize) as i32)
+        .collect();
+    let tok = HostTensor::I32(tokens, vec![batch, seq + 1]);
+    let step = HostTensor::F32(vec![1.0], vec![]);
+
+    // Fused path.
+    let fused = eng.artifact("train_step").unwrap();
+    let mut in_fused: Vec<HostTensor> = params.clone();
+    in_fused.extend(zeros.clone());
+    in_fused.extend(zeros.clone());
+    in_fused.push(step.clone());
+    in_fused.push(tok.clone());
+    let out_fused = fused.run(&in_fused).expect("train_step");
+
+    // Two-artifact path.
+    let gs = eng.artifact("grad_step").unwrap();
+    let mut in_gs = params.clone();
+    in_gs.push(tok);
+    let out_gs = gs.run(&in_gs).expect("grad_step");
+    let au = eng.artifact("adamw_update").unwrap();
+    let mut in_au = params.clone();
+    in_au.extend(out_gs[1..=n].to_vec());
+    in_au.extend(zeros.clone());
+    in_au.extend(zeros);
+    in_au.push(step);
+    let out_au = au.run(&in_au).expect("adamw_update");
+
+    // Loss equal.
+    let lf = out_fused[0].as_f32().unwrap()[0];
+    let lg = out_gs[0].as_f32().unwrap()[0];
+    assert!((lf - lg).abs() < 1e-5, "{lf} vs {lg}");
+    // Updated params equal.
+    for i in 0..n {
+        let a = out_fused[1 + i].as_f32().unwrap();
+        let b = out_au[i].as_f32().unwrap();
+        let max_diff = a
+            .iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-5, "leaf {i} differs by {max_diff}");
+    }
+}

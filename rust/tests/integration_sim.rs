@@ -1,0 +1,235 @@
+//! Integration tests: the paper's headline quantities, end to end.
+//!
+//! These are the acceptance criteria of the reproduction (DESIGN.md §3):
+//! Fig. 9 effective bandwidths, Fig. 10 speedups, Fig. 4 hotspots,
+//! Table III totals — all within documented tolerance of the paper.
+
+use fred::coordinator::config::FabricKind;
+use fred::coordinator::metrics::CommType;
+use fred::coordinator::parallelism::Strategy;
+use fred::coordinator::sim::Simulator;
+use fred::coordinator::workload::{self, Workload};
+use fred::fabric::fred::hw_model::HwOverhead;
+use fred::fabric::mesh::Mesh2D;
+use fred::fabric::topology::Fabric;
+
+fn speedup(w: &Workload, kind: FabricKind) -> f64 {
+    let base = Simulator::new(FabricKind::Baseline, w.clone(), w.default_strategy).iterate();
+    let other = Simulator::new(kind, w.clone(), w.default_strategy).iterate();
+    base.speedup_over(&other)
+}
+
+// ---- Fig. 10: end-to-end speedups (tolerance ±0.15 on the factor) ----
+
+#[test]
+fn fig10_resnet152_speedups() {
+    let w = workload::resnet152();
+    let c = speedup(&w, FabricKind::FredC);
+    let d = speedup(&w, FabricKind::FredD);
+    assert!((c - 1.41).abs() < 0.15, "FRED-C {c:.2} vs paper 1.41");
+    assert!((d - 1.76).abs() < 0.15, "FRED-D {d:.2} vs paper 1.76");
+}
+
+#[test]
+fn fig10_t17b_speedups() {
+    let w = workload::transformer_17b();
+    let c = speedup(&w, FabricKind::FredC);
+    let d = speedup(&w, FabricKind::FredD);
+    assert!((c - 1.75).abs() < 0.15, "FRED-C {c:.2} vs paper 1.75");
+    assert!((d - 1.87).abs() < 0.15, "FRED-D {d:.2} vs paper 1.87");
+}
+
+#[test]
+fn fig10_gpt3_speedups() {
+    let w = workload::gpt3();
+    let c = speedup(&w, FabricKind::FredC);
+    let d = speedup(&w, FabricKind::FredD);
+    assert!((c - 1.34).abs() < 0.12, "FRED-C {c:.2} vs paper 1.34");
+    assert!((d - 1.34).abs() < 0.12, "FRED-D {d:.2} vs paper 1.34");
+}
+
+#[test]
+fn fig10_t1t_speedups() {
+    let w = workload::transformer_1t();
+    let c = speedup(&w, FabricKind::FredC);
+    let d = speedup(&w, FabricKind::FredD);
+    assert!((c - 1.40).abs() < 0.12, "FRED-C {c:.2} vs paper 1.4");
+    assert!((d - 1.40).abs() < 0.12, "FRED-D {d:.2} vs paper 1.4");
+}
+
+#[test]
+fn fig10_average_speedup_matches_abstract() {
+    // Abstract: average improvements 1.76/1.87/1.34/1.4 for FRED(-D).
+    let targets = [1.76, 1.87, 1.34, 1.40];
+    let mut sum = 0.0;
+    for (w, t) in Workload::all().iter().zip(targets) {
+        let d = speedup(w, FabricKind::FredD);
+        sum += (d - t).abs() / t;
+    }
+    assert!(sum / 4.0 < 0.06, "mean relative error {:.3}", sum / 4.0);
+}
+
+// ---- Fig. 9: microbenchmark effective bandwidths ----
+
+#[test]
+fn fig9_wafer_wide_allreduce_ladder() {
+    let w = workload::transformer_17b();
+    let s = Strategy::new(20, 1, 1);
+    let expect = [
+        (FabricKind::Baseline, 1.5e12, 0.07),
+        (FabricKind::FredA, 1.83e12, 0.08), // paper's arithmetic gives ~1.78-1.85
+        (FabricKind::FredB, 2.85e12, 0.07),
+        (FabricKind::FredC, 3.0e12, 0.05),
+        (FabricKind::FredD, 5.7e12, 0.07),
+    ];
+    for (kind, want, tol) in expect {
+        let sim = Simulator::new(kind, w.clone(), s);
+        let [mp, _, _] = sim.microbench(139e6);
+        let bw = mp.unwrap();
+        assert!(
+            (bw - want).abs() / want < tol,
+            "{}: {:.0} GBps vs {:.0}",
+            kind.name(),
+            bw / 1e9,
+            want / 1e9
+        );
+    }
+}
+
+#[test]
+fn fig9_dp_phase_ladder_for_gpt3_strategy() {
+    let w = workload::transformer_17b();
+    let s = Strategy::new(2, 5, 2);
+    let dp_of = |kind: FabricKind| -> f64 {
+        let sim = Simulator::new(kind, w.clone(), s);
+        sim.microbench(139e6)[1].unwrap()
+    };
+    let base = dp_of(FabricKind::Baseline);
+    let a = dp_of(FabricKind::FredA);
+    let b = dp_of(FabricKind::FredB);
+    let c = dp_of(FabricKind::FredC);
+    let d = dp_of(FabricKind::FredD);
+    // Paper: FRED-A ≈ 375 GBps, worse than the paper's 750 GBps baseline
+    // figure (our fluid model additionally surfaces the congestion
+    // between the 4 concurrent DP rings, pushing the measured baseline
+    // below 750 — the paper's per-ring analysis ignores that sharing);
+    // FRED-B ~ baseline; FRED-C 3 TBps; FRED-D ≈ 4.8 TBps.
+    assert!((a - 375e9).abs() / 375e9 < 0.05, "FRED-A {}", a / 1e9);
+    assert!(a < 750e9, "FRED-A must lose to the paper's 750 GBps baseline");
+    assert!(base <= 750e9 * 1.05, "baseline {} bounded by 1 link", base / 1e9);
+    assert!((b / base - 1.0).abs() < 1.1, "FRED-B {} ~ baseline {}", b / 1e9, base / 1e9);
+    assert!((c - 3e12).abs() / 3e12 < 0.05, "FRED-C {}", c / 1e9);
+    assert!((d - 4.8e12).abs() / 4.8e12 < 0.05, "FRED-D {}", d / 1e9);
+}
+
+#[test]
+fn fig9_mp_and_pp_all_fred_variants_hit_npu_rate() {
+    let w = workload::transformer_17b();
+    let s = Strategy::new(2, 5, 2);
+    for kind in [FabricKind::FredA, FabricKind::FredB, FabricKind::FredC, FabricKind::FredD] {
+        let sim = Simulator::new(kind, w.clone(), s);
+        let [mp, _, pp] = sim.microbench(139e6);
+        let mp = mp.unwrap();
+        let pp = pp.unwrap();
+        assert!((mp - 3e12).abs() / 3e12 < 0.05, "{} MP {}", kind.name(), mp / 1e9);
+        assert!((pp - 3e12).abs() / 3e12 < 0.05, "{} PP {}", kind.name(), pp / 1e9);
+    }
+}
+
+// ---- Fig. 4 / GPT-3 streaming derate ----
+
+#[test]
+fn fig4_hotspot_and_streaming_factor() {
+    let m44 = Mesh2D::new(4, 4, 750e9, 128e9, 20e-9);
+    assert_eq!(m44.channel_load_analysis().0, 7, "4x4 hotspot = 7P");
+    let m = Mesh2D::paper_baseline();
+    assert_eq!(m.channel_load_analysis().0, 9);
+    let f = m.io_line_rate_factor();
+    assert!((f - 0.651).abs() < 0.005, "derate {f} vs paper 0.65");
+}
+
+// ---- Table III ----
+
+#[test]
+fn table3_totals() {
+    let hw = HwOverhead::paper();
+    assert!((hw.total_area_mm2() - 25195.0).abs() / 25195.0 < 0.02);
+    assert!((hw.total_power_w() - 146.73).abs() / 146.73 < 0.06);
+    assert!(hw.power_budget_fraction() <= 0.0101);
+}
+
+// ---- Fig. 2 ----
+
+#[test]
+fn fig2_mp20_loses_to_mp5_dp4_per_sample() {
+    // The paper's Sec. I observation on the mesh.
+    let w = workload::transformer_17b();
+    let per_sample = |s: Strategy| -> f64 {
+        let sim = Simulator::new(FabricKind::Baseline, w.clone(), s);
+        sim.iterate().total() / w.minibatch(&s) as f64
+    };
+    let mp20 = per_sample(Strategy::new(20, 1, 1));
+    let mp5dp4 = per_sample(Strategy::new(5, 4, 1));
+    assert!(mp20 > mp5dp4, "MP(20) {mp20} must lose to MP(5)-DP(4) {mp5dp4}");
+}
+
+#[test]
+fn fig2_comm_fraction_varies_across_strategies() {
+    let w = workload::transformer_17b();
+    let frac = |s: Strategy| -> f64 {
+        let b = Simulator::new(FabricKind::Baseline, w.clone(), s).iterate();
+        b.total_exposed() / b.total()
+    };
+    let hi = frac(Strategy::new(20, 1, 1));
+    let lo = frac(Strategy::new(1, 20, 1));
+    assert!(hi > 0.5, "MP(20) should be comm-dominated: {hi}");
+    assert!(lo < 0.25, "DP(20) should be compute-dominated: {lo}");
+}
+
+// ---- Cross-cutting sanity ----
+
+#[test]
+fn all_workload_fabric_combinations_run() {
+    for w in Workload::all() {
+        for kind in FabricKind::all() {
+            let b = Simulator::new(kind, w.clone(), w.default_strategy).iterate();
+            assert!(b.total().is_finite() && b.total() > 0.0, "{} {}", w.name, kind.name());
+            assert!(b.compute > 0.0);
+        }
+    }
+}
+
+#[test]
+fn fred_d_never_loses_to_baseline() {
+    for w in Workload::all() {
+        let s = speedup(&w, FabricKind::FredD);
+        assert!(s >= 1.0, "{}: {s}", w.name);
+    }
+}
+
+#[test]
+fn nonstandard_strategies_run_everywhere() {
+    // Non-aligned sizes (Sec. III-B3): MP(5)-DP(3), MP(3)-DP(2)-PP(3)...
+    let w = workload::transformer_17b();
+    for s in [
+        Strategy::new(5, 3, 1),
+        Strategy::new(3, 2, 3),
+        Strategy::new(7, 2, 1),
+        Strategy::new(1, 1, 1),
+    ] {
+        for kind in [FabricKind::Baseline, FabricKind::FredD] {
+            let b = Simulator::new(kind, w.clone(), s).iterate();
+            assert!(b.total().is_finite(), "{s} on {}", kind.name());
+        }
+    }
+}
+
+#[test]
+fn two_iterations_scale_exactly() {
+    // The paper runs 2 iterations; steady-state iterations are identical.
+    let w = workload::gpt3();
+    let sim = Simulator::new(FabricKind::FredD, w.clone(), w.default_strategy);
+    let one = sim.iterate();
+    let avg = sim.iterate_n(2);
+    assert!((one.total() - avg.total()).abs() < 1e-12);
+}

@@ -1,0 +1,282 @@
+//! Property tests over the fabric models and the fluid simulator.
+
+use fred::coordinator::config::FabricKind;
+use fred::coordinator::parallelism::Strategy;
+use fred::coordinator::placement::Placement;
+use fred::fabric::mesh::Mesh2D;
+use fred::fabric::topology::{CollectiveKind, Fabric, IoDirection};
+use fred::util::prng::Xorshift64;
+use fred::util::prop::check;
+
+fn random_group(rng: &mut Xorshift64, n_npus: usize) -> Vec<usize> {
+    let k = rng.range(2, 9.min(n_npus));
+    rng.sample_indices(n_npus, k)
+}
+
+fn random_kind(rng: &mut Xorshift64) -> CollectiveKind {
+    *rng.choose(&[
+        CollectiveKind::AllReduce,
+        CollectiveKind::ReduceScatter,
+        CollectiveKind::AllGather,
+        CollectiveKind::Reduce,
+        CollectiveKind::Multicast,
+        CollectiveKind::AllToAll,
+    ])
+}
+
+#[test]
+fn collective_time_scales_linearly_in_bytes() {
+    // The fluid model has no fixed per-byte overhead beyond serial
+    // latency; doubling the payload must double (time − latency).
+    check(
+        "linear-in-bytes",
+        0x11A,
+        96,
+        |rng| {
+            let kind = random_kind(rng);
+            let fab = *rng.choose(&FabricKind::all());
+            let group = random_group(rng, 20);
+            (kind, fab, group)
+        },
+        |(kind, fab, group)| {
+            let fabric = fab.build();
+            let p1 = fabric.plan_collective(*kind, group, 1e9);
+            let p2 = fabric.plan_collective(*kind, group, 2e9);
+            let t1 = fabric.run_plan(&p1) - p1.serial_latency;
+            let t2 = fabric.run_plan(&p2) - p2.serial_latency;
+            if t1 <= 0.0 {
+                return Ok(()); // degenerate (empty plan)
+            }
+            let ratio = t2 / t1;
+            if (ratio - 2.0).abs() > 1e-6 {
+                return Err(format!("ratio {ratio} != 2"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn concurrency_never_speeds_up_a_plan() {
+    // Adding a second collective can only slow the first (work
+    // conservation under max-min fairness).
+    check(
+        "no-speedup-under-load",
+        0x22B,
+        64,
+        |rng| {
+            let fab = *rng.choose(&FabricKind::all());
+            let g1 = random_group(rng, 20);
+            let g2 = random_group(rng, 20);
+            (fab, g1, g2)
+        },
+        |(fab, g1, g2)| {
+            let fabric = fab.build();
+            let p1 = fabric.plan_collective(CollectiveKind::AllReduce, g1, 1e9);
+            let p2 = fabric.plan_collective(CollectiveKind::AllReduce, g2, 1e9);
+            let alone = fabric.run_plan(&p1);
+            let together = fabric.run_concurrent(&[p1.clone(), p2.clone()])[0];
+            if together < alone - 1e-9 {
+                return Err(format!("together {together} < alone {alone}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn time_respects_bandwidth_lower_bound() {
+    // A collective can't beat (bytes each NPU must send) / (injection BW).
+    check(
+        "injection-bound",
+        0x33C,
+        96,
+        |rng| {
+            let fab = *rng.choose(&FabricKind::all());
+            let group = random_group(rng, 20);
+            (fab, group)
+        },
+        |(fab, group)| {
+            let fabric = fab.build();
+            let bytes = 1e9;
+            let plan = fabric.plan_collective(CollectiveKind::AllReduce, group, bytes);
+            let t = fabric.run_plan(&plan);
+            // In-network floor: D bytes up one 3 TBps (FRED) / 2×750 GBps
+            // (mesh corner, 2 injection links) pipe.
+            let floor = bytes / 3.1e12;
+            if t < floor {
+                return Err(format!("time {t} beats physical floor {floor}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn mesh_xy_paths_are_manhattan_and_consistent() {
+    check(
+        "xy-manhattan",
+        0x44D,
+        200,
+        |rng| (rng.range(0, 20), rng.range(0, 20)),
+        |&(a, b)| {
+            let m = Mesh2D::paper_baseline();
+            let (ra, ca) = (a / 4, a % 4);
+            let (rb, cb) = (b / 4, b % 4);
+            let want = ra.abs_diff(rb) + ca.abs_diff(cb);
+            let fwd = m.xy_path(a, b);
+            let bwd = m.xy_path(b, a);
+            if fwd.len() != want || bwd.len() != want {
+                return Err(format!("path {a}->{b}: {} hops, want {want}", fwd.len()));
+            }
+            // Directed links differ unless the path is empty.
+            if want > 0 && fwd == bwd {
+                return Err("forward and backward paths share directed links".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn random_placements_are_always_valid() {
+    check(
+        "placement-valid",
+        0x55E,
+        150,
+        |rng| {
+            let mp = rng.range(1, 5);
+            let dp = rng.range(1, 5);
+            let pp = rng.range(1, 3);
+            (mp, dp, pp, rng.next_u64())
+        },
+        |&(mp, dp, pp, seed)| {
+            let s = Strategy::new(mp, dp, pp);
+            if s.workers() > 20 {
+                return Ok(());
+            }
+            let mut rng = Xorshift64::new(seed);
+            let p = Placement::random(&s, 20, &mut rng);
+            if !p.is_valid(20) {
+                return Err("invalid placement".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn io_stream_time_scales_and_mesh_never_beats_fred() {
+    check(
+        "io-ordering",
+        0x66F,
+        48,
+        |rng| {
+            let bytes = 1e9 * (1.0 + rng.next_f64() * 100.0);
+            let dir = *rng.choose(&[IoDirection::Broadcast, IoDirection::ReduceOut]);
+            (bytes, dir)
+        },
+        |&(bytes, dir)| {
+            let all: Vec<usize> = (0..20).collect();
+            let mesh = FabricKind::Baseline.build();
+            let fredd = FabricKind::FredD.build();
+            let tm = mesh.run_plan(&mesh.plan_io_stream(dir, bytes, &all));
+            let tf = fredd.run_plan(&fredd.plan_io_stream(dir, bytes, &all));
+            if tf > tm + 1e-9 {
+                return Err(format!("FRED {tf} slower than mesh {tm}"));
+            }
+            // Line-rate floor: total/io_bw.
+            let floor = bytes / (18.0 * 128e9);
+            if tf < floor * 0.999 {
+                return Err(format!("FRED {tf} beats line rate {floor}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn in_network_never_slower_than_endpoint() {
+    // FRED-D (in-network) must never lose to FRED-C (endpoint) at equal
+    // trunk bandwidth, for any reduction collective and group.
+    check(
+        "innetwork-dominates",
+        0x77A,
+        96,
+        |rng| {
+            // Reduce-Scatter is excluded: its in-network form (Table I,
+            // i serial Reduces) sends the full payload up per NPU vs the
+            // endpoint ring's (n-1)/n — a genuine, documented trade.
+            let kind = *rng.choose(&[CollectiveKind::AllReduce, CollectiveKind::Reduce]);
+            (kind, random_group(rng, 20))
+        },
+        |(kind, group)| {
+            let c = FabricKind::FredC.build();
+            let d = FabricKind::FredD.build();
+            let tc = c.run_plan(&c.plan_collective(*kind, group, 1e9));
+            let td = d.run_plan(&d.plan_collective(*kind, group, 1e9));
+            if td > tc * 1.0001 {
+                return Err(format!("in-network {td} slower than endpoint {tc}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn snake_cycle_hamiltonian_on_even_grids() {
+    check(
+        "snake-hamiltonian",
+        0x88B,
+        64,
+        |rng| {
+            let rows = rng.range(2, 9);
+            let cols = rng.range(2, 9);
+            (rows, cols)
+        },
+        |&(rows, cols)| {
+            if rows % 2 == 1 && cols % 2 == 1 {
+                return Ok(()); // no Hamiltonian cycle exists
+            }
+            let m = Mesh2D::new(rows, cols, 750e9, 128e9, 20e-9);
+            let cyc = m.snake_cycle();
+            let mut seen = cyc.clone();
+            seen.sort_unstable();
+            seen.dedup();
+            if seen.len() != rows * cols {
+                return Err("not a permutation".into());
+            }
+            for i in 0..cyc.len() {
+                let a = cyc[i];
+                let b = cyc[(i + 1) % cyc.len()];
+                if m.xy_path(a, b).len() != 1 {
+                    return Err(format!("hop {a}->{b} not unit"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn channel_load_is_2rows_minus_1() {
+    check(
+        "hotspot-formula",
+        0x99C,
+        32,
+        |rng| {
+            let rows = rng.range(3, 10);
+            let cols = rng.range(3, 10);
+            (rows, cols)
+        },
+        |&(rows, cols)| {
+            let m = Mesh2D::new(rows, cols, 750e9, 128e9, 20e-9);
+            let (max, _) = m.channel_load_analysis();
+            let want = (2 * rows - 1).max(2 * cols - 1);
+            if max != want {
+                return Err(format!("hotspot {max}, formula {want}"));
+            }
+            Ok(())
+        },
+    );
+}
