@@ -1,0 +1,42 @@
+//! Strategy/topology co-exploration beyond the paper wafer.
+//!
+//! The paper fixes one 20-NPU wafer and a handful of strategies; the
+//! sweep engine crosses fabric kind × wafer shape × MP/DP/PP
+//! factorization × workload and ranks the result. This example asks the
+//! question the paper could not: does FRED's advantage survive scaling
+//! the wafer to 8×8 = 64 NPUs, and which strategy wins there?
+//!
+//! Run: `cargo run --release --example strategy_sweep`
+
+use fred::coordinator::config::FabricKind;
+use fred::coordinator::sweep::{run_sweep, SweepConfig, WaferDims};
+use fred::coordinator::workload;
+
+fn main() {
+    println!("== strategy/topology sweep: Transformer-17B, 5x4 vs 8x8 ==\n");
+    let cfg = SweepConfig {
+        workloads: vec![workload::transformer_17b()],
+        wafers: vec![WaferDims::PAPER, WaferDims { n_l1: 8, per_l1: 8 }],
+        fabrics: vec![FabricKind::Baseline, FabricKind::FredA, FabricKind::FredD],
+        strategies: None,
+        max_strategies: 8,
+        bench_bytes: 100e6,
+    };
+    let report = run_sweep(&cfg);
+    print!("{}", report.render_table(16));
+    if report.truncated_strategies > 0 {
+        println!("({} strategies beyond the cap not shown)", report.truncated_strategies);
+    }
+    for (fast, slow) in [
+        (FabricKind::FredD, FabricKind::Baseline),
+        (FabricKind::FredD, FabricKind::FredA),
+    ] {
+        let (wins, cmps) = report.count_orderings(fast, slow);
+        println!(
+            "{} faster than {} on {wins}/{cmps} matched (workload, wafer, strategy) points",
+            fast.name(),
+            slow.name()
+        );
+    }
+    println!("\nmachine-readable: `fred sweep --models t17b --wafers 5x4,8x8 --json`");
+}

@@ -1,0 +1,91 @@
+//! §Perf — strategy/topology sweep-engine hot path.
+//!
+//! A sweep is thousands of *small* fluid simulations (one iterate +
+//! microbench per point), so its throughput is the product of the fluid
+//! engine's event rate and the per-point plan-construction overhead.
+//! Budget: the default CLI sweep (t17b, 5×4, all fabrics, 12 strategies)
+//! must finish in seconds, and points/s must not regress silently.
+//!
+//! Run: `cargo bench --bench bench_sweep`
+
+use fred::coordinator::config::FabricKind;
+use fred::coordinator::sweep::{factorizations, run_sweep, SweepConfig, WaferDims};
+use fred::coordinator::workload;
+use fred::util::table::Table;
+use std::time::Instant;
+
+fn cfg(
+    workloads: Vec<fred::coordinator::workload::Workload>,
+    wafers: Vec<WaferDims>,
+    fabrics: Vec<FabricKind>,
+    max_strategies: usize,
+) -> SweepConfig {
+    SweepConfig {
+        workloads,
+        wafers,
+        fabrics,
+        strategies: None,
+        max_strategies,
+        bench_bytes: 100e6,
+    }
+}
+
+fn main() {
+    println!("=== §Perf: strategy/topology sweep engine ===");
+
+    // Enumeration is cheap; record it once for the log.
+    let t0 = Instant::now();
+    let total: usize = (1..=256).map(|n| factorizations(n).len()).sum();
+    println!(
+        "factorizations(1..=256): {total} strategies in {:.2} ms\n",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    let cases: Vec<(&str, SweepConfig)> = vec![
+        (
+            "resnet152 | 5x4 | all 5 fabrics | 12 strat",
+            cfg(
+                vec![workload::resnet152()],
+                vec![WaferDims::PAPER],
+                FabricKind::all().to_vec(),
+                12,
+            ),
+        ),
+        (
+            "t17b      | 5x4 | all 5 fabrics |  6 strat",
+            cfg(
+                vec![workload::transformer_17b()],
+                vec![WaferDims::PAPER],
+                FabricKind::all().to_vec(),
+                6,
+            ),
+        ),
+        (
+            "resnet152 | 8x8 | mesh + fred-d |  6 strat",
+            cfg(
+                vec![workload::resnet152()],
+                vec![WaferDims { n_l1: 8, per_l1: 8 }],
+                vec![FabricKind::Baseline, FabricKind::FredD],
+                6,
+            ),
+        ),
+    ];
+
+    let mut table = Table::new(&["sweep", "points", "feasible", "wall", "points/s"]);
+    for (name, cfg) in cases {
+        let t0 = Instant::now();
+        let report = run_sweep(&cfg);
+        let dt = t0.elapsed().as_secs_f64();
+        let n = report.points.len();
+        let feasible = report.points.iter().filter(|p| p.outcome.is_ok()).count();
+        table.row(&[
+            name.to_string(),
+            n.to_string(),
+            feasible.to_string(),
+            format!("{:.2} s", dt),
+            format!("{:.1}", n as f64 / dt),
+        ]);
+        assert!(feasible > 0, "{name}: no feasible points");
+    }
+    table.print();
+}

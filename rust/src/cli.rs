@@ -2,7 +2,8 @@
 
 use crate::coordinator::{
     config::FabricKind, metrics::CommType, parallelism::Strategy, placement,
-    placement::Placement, sim::Simulator, workload::Workload,
+    placement::Placement, sim::Simulator, sweep, sweep::SweepConfig, sweep::WaferDims,
+    workload::Workload,
 };
 use crate::fabric::fred::hw_model::HwOverhead;
 use crate::fabric::fred::{route_flows, Flow};
@@ -47,7 +48,15 @@ USAGE: fred <command> [options]
 COMMANDS:
   sim          --workload <resnet152|t17b|gpt3|t1t> [--fabric <baseline|fred-a..d>]
                [--strategy MP(a)-DP(b)-PP(c)] [--iters N]
-  sweep        --workload t17b [--fabric baseline]   (Fig. 2 strategy sweep)
+  sweep        [--models <m1,m2|all>] [--wafers 5x4,8x8] [--fabrics all|fred-a,fred-d]
+               [--strategies auto|\"20,1,1;2,5,2\"] [--max-strategies N]
+               [--top N] [--bytes N] [--json]
+               Strategy/topology sweep engine: enumerates fabric x wafer x
+               MP/DP/PP factorization x workload, runs each point end to
+               end, and ranks by per-sample iteration time. Emits a ranked
+               table plus machine-readable JSON (only JSON with --json).
+               Defaults: t17b on the 5x4 paper wafer, all five fabrics,
+               auto strategies (subsumes the paper's Fig. 2 sweep).
   microbench   [--strategy 2,5,2] [--bytes N]        (Fig. 9 per-phase BW)
   channel-load [--rows 4 --cols 4]                   (Fig. 4 hotspot)
   route        [--m 2|3]                             (Fig. 7 routing demo)
@@ -145,36 +154,127 @@ fn cmd_sim(opts: &Opts) -> i32 {
     0
 }
 
+/// Split a comma-separated option value into trimmed, non-empty items.
+fn comma_list(s: &str) -> Vec<&str> {
+    s.split(',').map(str::trim).filter(|t| !t.is_empty()).collect()
+}
+
 fn cmd_sweep(opts: &Opts) -> i32 {
-    let Ok(w) = parse_workload(opts) else { return 2 };
-    let Ok(k) = parse_fabric(opts) else { return 2 };
-    // The Fig. 2 strategy set for a 20-NPU wafer.
-    let strategies = [
-        Strategy::new(20, 1, 1),
-        Strategy::new(5, 4, 1),
-        Strategy::new(4, 5, 1),
-        Strategy::new(2, 5, 2),
-        Strategy::new(5, 2, 2),
-        Strategy::new(1, 20, 1),
-    ];
-    println!("workload {} on {} (Fig. 2 sweep)", w.name, k.name());
-    let mut t = Table::new(&["strategy", "total", "comp", "MP", "DP", "PP", "norm_total"]);
-    let mut norm = None;
-    for s in strategies {
-        let sim = Simulator::new(k, w.clone(), s);
-        let b = sim.iterate();
-        let n = *norm.get_or_insert(b.total());
-        t.row(&[
-            s.to_string(),
-            fmt_time(b.total()),
-            fmt_time(b.compute),
-            fmt_time(b.get(CommType::Mp)),
-            fmt_time(b.get(CommType::Dp)),
-            fmt_time(b.get(CommType::Pp)),
-            format!("{:.2}", b.total() / n),
-        ]);
+    // Workloads: --models a,b | all (--workload kept as an alias).
+    let models = opts.get("models").or_else(|| opts.get("workload")).unwrap_or("t17b");
+    let workloads: Vec<Workload> = if models == "all" {
+        Workload::all()
+    } else {
+        let mut ws = Vec::new();
+        for name in comma_list(models) {
+            match Workload::by_name(name) {
+                Some(w) => ws.push(w),
+                None => {
+                    eprintln!("unknown workload `{name}`");
+                    return 2;
+                }
+            }
+        }
+        ws
+    };
+    // Wafers: --wafers 5x4,8x8 (n_l1 x per_l1; both dims >= 2).
+    let mut wafers = Vec::new();
+    for spec in comma_list(opts.get("wafers").unwrap_or("5x4")) {
+        match WaferDims::parse(spec) {
+            Some(wd) => wafers.push(wd),
+            None => {
+                eprintln!("bad wafer `{spec}` (expected RxC with R,C >= 2, e.g. 8x8)");
+                return 2;
+            }
+        }
     }
-    t.print();
+    // Fabrics: --fabrics all | baseline,fred-a,...
+    let fabrics_arg = opts.get("fabrics").or_else(|| opts.get("fabric")).unwrap_or("all");
+    let fabrics: Vec<FabricKind> = if fabrics_arg == "all" {
+        FabricKind::all().to_vec()
+    } else {
+        let mut ks = Vec::new();
+        for name in comma_list(fabrics_arg) {
+            match FabricKind::parse(name) {
+                Some(k) => ks.push(k),
+                None => {
+                    eprintln!("unknown fabric `{name}`");
+                    return 2;
+                }
+            }
+        }
+        ks
+    };
+    // Strategies: auto (all factorizations) or a ';'-separated list.
+    let strategies = match opts.get("strategies") {
+        None | Some("auto") => None,
+        Some(list) => {
+            let mut ss = Vec::new();
+            for spec in list.split(';').map(str::trim).filter(|t| !t.is_empty()) {
+                match Strategy::parse(spec) {
+                    Some(s) => ss.push(s),
+                    None => {
+                        eprintln!("bad strategy `{spec}`");
+                        return 2;
+                    }
+                }
+            }
+            Some(ss)
+        }
+    };
+    let max_strategies: usize = opts
+        .get("max-strategies")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12);
+    let top: usize = opts.get("top").and_then(|s| s.parse().ok()).unwrap_or(20);
+    let bench_bytes: f64 = opts.get("bytes").and_then(|s| s.parse().ok()).unwrap_or(100e6);
+    let json_only = opts.has("json");
+
+    let cfg = SweepConfig {
+        workloads,
+        wafers,
+        fabrics: fabrics.clone(),
+        strategies,
+        max_strategies,
+        bench_bytes,
+    };
+    let report = sweep::run_sweep(&cfg);
+
+    if json_only {
+        println!("{}", report.to_json().render());
+        return 0;
+    }
+    let n_points = report.points.len();
+    let feasible = report.points.iter().filter(|p| p.outcome.is_ok()).count();
+    println!(
+        "strategy/topology sweep: {n_points} points ({feasible} feasible), ranked by \
+         per-sample iteration time"
+    );
+    if report.truncated_strategies > 0 {
+        println!(
+            "(note: {} auto-enumerated strategies dropped by --max-strategies {max_strategies})",
+            report.truncated_strategies
+        );
+    }
+    print!("{}", report.render_table(top));
+    // The paper's headline orderings, where both sides were swept.
+    for (fast, slow) in [
+        (FabricKind::FredD, FabricKind::FredA),
+        (FabricKind::FredD, FabricKind::Baseline),
+    ] {
+        if fabrics.contains(&fast) && fabrics.contains(&slow) {
+            let (wins, cmps) = report.count_orderings(fast, slow);
+            if cmps > 0 {
+                println!(
+                    "{} faster than {} on {wins}/{cmps} matched points",
+                    fast.name(),
+                    slow.name()
+                );
+            }
+        }
+    }
+    println!("\nJSON:");
+    println!("{}", report.to_json().render());
     0
 }
 

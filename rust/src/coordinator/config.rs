@@ -104,6 +104,29 @@ impl FabricKind {
         }
     }
 
+    /// The FRED variant behind a FRED kind (`None` for the mesh).
+    pub fn fred_variant(&self) -> Option<FredVariant> {
+        match self {
+            FabricKind::Baseline => None,
+            FabricKind::FredA => Some(FredVariant::A),
+            FabricKind::FredB => Some(FredVariant::B),
+            FabricKind::FredC => Some(FredVariant::C),
+            FabricKind::FredD => Some(FredVariant::D),
+        }
+    }
+
+    /// Build the fabric scaled to an `n_l1 × per_l1` wafer (rows × cols
+    /// for the mesh; L1 groups × NPUs-per-group for FRED) at the paper's
+    /// per-component operating points. Both fabrics bond
+    /// `2·(n_l1 + per_l1)` I/O controllers, so I/O comparisons stay
+    /// apples-to-apples across kinds (18 at the paper's 5×4).
+    pub fn build_sized(&self, n_l1: usize, per_l1: usize) -> Box<dyn Fabric> {
+        match self.fred_variant() {
+            None => Box::new(Mesh2D::with_dims(n_l1, per_l1)),
+            Some(v) => Box::new(FredFabric::sized(v, n_l1, per_l1)),
+        }
+    }
+
     /// True for mesh (decides placement NPU ordering).
     pub fn is_mesh(&self) -> bool {
         matches!(self, FabricKind::Baseline)
@@ -144,6 +167,24 @@ mod tests {
             let f = k.build();
             assert_eq!(f.npu_count(), 20, "{}", k.name());
             assert_eq!(f.io_count(), 18);
+        }
+    }
+
+    #[test]
+    fn build_sized_matches_build_at_paper_dims() {
+        for k in FabricKind::all() {
+            let f = k.build_sized(5, 4);
+            assert_eq!(f.npu_count(), 20, "{}", k.name());
+            assert_eq!(f.io_count(), 18, "{}", k.name());
+        }
+    }
+
+    #[test]
+    fn build_sized_scales_both_fabric_families() {
+        for k in [FabricKind::Baseline, FabricKind::FredD] {
+            let f = k.build_sized(8, 8);
+            assert_eq!(f.npu_count(), 64, "{}", k.name());
+            assert_eq!(f.io_count(), 32, "{}", k.name());
         }
     }
 

@@ -15,6 +15,8 @@
 //!   end-to-end breakdown (compute + exposed comm per source) that
 //!   Figs. 2, 9, 10 plot.
 //! * [`metrics`] — breakdown records, normalization, speedups.
+//! * [`sweep`] — the strategy/topology sweep engine: cross-product of
+//!   fabric × wafer shape × strategy × workload, ranked.
 
 pub mod config;
 pub mod metrics;
@@ -22,6 +24,7 @@ pub mod parallelism;
 pub mod placement;
 pub mod schedule;
 pub mod sim;
+pub mod sweep;
 pub mod workload;
 
 pub use config::FabricKind;
@@ -29,4 +32,5 @@ pub use metrics::{Breakdown, CommType};
 pub use parallelism::Strategy;
 pub use placement::Placement;
 pub use sim::Simulator;
+pub use sweep::{SweepConfig, SweepReport, WaferDims};
 pub use workload::Workload;

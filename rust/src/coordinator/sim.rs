@@ -27,6 +27,7 @@ use super::parallelism::Strategy;
 use super::placement::Placement;
 use super::schedule;
 use super::workload::{ExecMode, Workload};
+use crate::fabric::fluid::FluidError;
 use crate::fabric::mesh::Mesh2D;
 use crate::fabric::topology::{CollectiveKind, Fabric, IoDirection, Plan};
 
@@ -42,27 +43,39 @@ pub struct Simulator {
 }
 
 impl Simulator {
-    /// Build with the paper's default placement for the fabric kind.
+    /// Build with the paper's default placement for the fabric kind, on
+    /// the paper's 20-NPU wafer.
     pub fn new(kind: FabricKind, workload: Workload, strategy: Strategy) -> Self {
+        let fabric = kind.build();
+        let mesh = kind.is_mesh().then(Mesh2D::paper_baseline);
+        Self::with_fabric(kind, fabric, mesh, workload, strategy)
+    }
+
+    /// Build against an arbitrary fabric instance (the sweep engine's
+    /// scaled wafers). `mesh` must be the matching mesh model when `kind`
+    /// is the baseline — it supplies the snake ordering for placement;
+    /// FRED fabrics pass `None` and place in NPU-index order (Sec. V-C).
+    pub fn with_fabric(
+        kind: FabricKind,
+        fabric: Box<dyn Fabric>,
+        mesh: Option<Mesh2D>,
+        workload: Workload,
+        strategy: Strategy,
+    ) -> Self {
+        let n_npus = fabric.npu_count();
         assert!(
-            strategy.workers() <= config::N_NPU,
+            strategy.workers() <= n_npus,
             "{strategy} needs {} workers > {} NPUs",
             strategy.workers(),
-            config::N_NPU
+            n_npus
         );
-        let fabric = kind.build();
-        let mesh = if kind.is_mesh() {
-            Some(Mesh2D::paper_baseline())
-        } else {
-            None
-        };
-        let placement = Placement::paper_default(&strategy, mesh.as_ref(), config::N_NPU);
+        let placement = Placement::paper_default(&strategy, mesh.as_ref(), n_npus);
         Self { kind, fabric, mesh, workload, strategy, placement }
     }
 
     /// Override the placement (placement-exploration example).
     pub fn with_placement(mut self, placement: Placement) -> Self {
-        assert!(placement.is_valid(config::N_NPU));
+        assert!(placement.is_valid(self.fabric.npu_count()));
         assert_eq!(placement.len(), self.strategy.workers());
         self.placement = placement;
         self
@@ -96,36 +109,57 @@ impl Simulator {
     // ------------------------------------------------------ comm phases
 
     /// Time for one concurrent round of collectives over logical groups.
-    fn phase_time(&self, groups: &[Vec<usize>], kind: CollectiveKind, bytes: f64) -> f64 {
+    fn try_phase_time(
+        &self,
+        groups: &[Vec<usize>],
+        kind: CollectiveKind,
+        bytes: f64,
+    ) -> Result<f64, FluidError> {
         let plans: Vec<Plan> = groups
             .iter()
             .filter(|g| g.len() > 1)
             .map(|g| self.fabric.plan_collective(kind, &self.placement.map(g), bytes))
             .collect();
         if plans.is_empty() || bytes <= 0.0 {
-            return 0.0;
+            return Ok(0.0);
         }
-        self.fabric
-            .run_concurrent(&plans)
+        Ok(self
+            .fabric
+            .try_run_concurrent(&plans)?
             .into_iter()
-            .fold(0.0, f64::max)
+            .fold(0.0, f64::max))
     }
 
     /// One concurrent MP All-Reduce round on `bytes` per worker.
     pub fn mp_round(&self, bytes: f64) -> f64 {
-        self.phase_time(&self.strategy.mp_groups(), CollectiveKind::AllReduce, bytes)
+        self.try_mp_round(bytes).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible form of [`Self::mp_round`].
+    pub fn try_mp_round(&self, bytes: f64) -> Result<f64, FluidError> {
+        self.try_phase_time(&self.strategy.mp_groups(), CollectiveKind::AllReduce, bytes)
     }
 
     /// One concurrent DP All-Reduce round on `bytes` per worker.
     pub fn dp_round(&self, bytes: f64) -> f64 {
-        self.phase_time(&self.strategy.dp_groups(), CollectiveKind::AllReduce, bytes)
+        self.try_dp_round(bytes).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible form of [`Self::dp_round`].
+    pub fn try_dp_round(&self, bytes: f64) -> Result<f64, FluidError> {
+        self.try_phase_time(&self.strategy.dp_groups(), CollectiveKind::AllReduce, bytes)
     }
 
     /// One concurrent PP boundary transfer (multicast from one member of
     /// stage s's MP group to stage s+1's MP group, per DP replica).
     pub fn pp_round(&self, bytes: f64) -> f64 {
+        self.try_pp_round(bytes).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible form of [`Self::pp_round`].
+    pub fn try_pp_round(&self, bytes: f64) -> Result<f64, FluidError> {
         if self.strategy.pp < 2 || bytes <= 0.0 {
-            return 0.0;
+            return Ok(0.0);
         }
         let mut plans = Vec::new();
         for dp in 0..self.strategy.dp {
@@ -141,19 +175,28 @@ impl Simulator {
                 ));
             }
         }
-        self.fabric
-            .run_concurrent(&plans)
+        Ok(self
+            .fabric
+            .try_run_concurrent(&plans)?
             .into_iter()
-            .fold(0.0, f64::max)
+            .fold(0.0, f64::max))
     }
 
     // -------------------------------------------------------- iteration
 
-    /// Simulate one training iteration.
+    /// Simulate one training iteration. Panicking convenience over
+    /// [`Self::try_iterate`] for known-feasible configurations.
     pub fn iterate(&self) -> Breakdown {
+        self.try_iterate().unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Simulate one training iteration; infeasible fabric/strategy
+    /// combinations (degenerate sweep points) surface as a typed error
+    /// instead of aborting the caller.
+    pub fn try_iterate(&self) -> Result<Breakdown, FluidError> {
         match self.workload.exec_mode {
-            ExecMode::WeightStationary => self.iterate_stationary(),
-            ExecMode::WeightStreaming => self.iterate_streaming(),
+            ExecMode::WeightStationary => self.try_iterate_stationary(),
+            ExecMode::WeightStreaming => self.try_iterate_streaming(),
         }
     }
 
@@ -172,7 +215,7 @@ impl Simulator {
         flops / self.effective_flops()
     }
 
-    fn iterate_stationary(&self) -> Breakdown {
+    fn try_iterate_stationary(&self) -> Result<Breakdown, FluidError> {
         let w = &self.workload;
         let s = &self.strategy;
         let mut out = Breakdown::default();
@@ -202,7 +245,7 @@ impl Simulator {
             if s.mp > 1 {
                 for l in &w.layers[a..b] {
                     if l.mp_collectives > 0 {
-                        let t = self.mp_round(l.act_bytes * mb_samples);
+                        let t = self.try_mp_round(l.act_bytes * mb_samples)?;
                         mp += t * l.mp_collectives as f64;
                     }
                 }
@@ -221,7 +264,7 @@ impl Simulator {
 
         // PP boundary transfers: fwd activation + bwd gradient per slot.
         if s.pp > 1 {
-            let t = self.pp_round(boundary_act);
+            let t = self.try_pp_round(boundary_act)?;
             out.add(CommType::Pp, slots * 2.0 * t);
         }
 
@@ -232,7 +275,7 @@ impl Simulator {
             let shard = w.params_bytes() / s.mp as f64 / s.pp as f64;
             let nb = w.dp_buckets.max(1);
             let bucket_bytes = shard / nb as f64;
-            let per_bucket = self.dp_round(bucket_bytes);
+            let per_bucket = self.try_dp_round(bucket_bytes)?;
             let exposed = if w.overlap_dp {
                 let bwd_compute = compute * 2.0 / 3.0;
                 schedule::exposed_dp_time(bwd_compute, &vec![per_bucket; nb])
@@ -245,10 +288,10 @@ impl Simulator {
         // Input minibatch load: prefetched during the previous iteration
         // (the I/O channels are otherwise idle in stationary mode).
         out.add(CommType::InputLoad, 0.0);
-        out
+        Ok(out)
     }
 
-    fn iterate_streaming(&self) -> Breakdown {
+    fn try_iterate_streaming(&self) -> Result<Breakdown, FluidError> {
         let w = &self.workload;
         let s = &self.strategy;
         let mut out = Breakdown::default();
@@ -264,23 +307,23 @@ impl Simulator {
         let layers = &w.layers;
         let n_groups = layers.len().div_ceil(group);
 
-        let io_in_time = |bytes: f64| -> f64 {
+        let io_in_time = |bytes: f64| -> Result<f64, FluidError> {
             if bytes <= 0.0 {
-                return 0.0;
+                return Ok(0.0);
             }
             let plan = self
                 .fabric
                 .plan_io_stream(IoDirection::Broadcast, bytes, &all_npus);
-            self.fabric.run_plan(&plan)
+            self.fabric.try_run_plan(&plan)
         };
-        let io_out_time = |bytes: f64| -> f64 {
+        let io_out_time = |bytes: f64| -> Result<f64, FluidError> {
             if bytes <= 0.0 {
-                return 0.0;
+                return Ok(0.0);
             }
             let plan = self
                 .fabric
                 .plan_io_stream(IoDirection::ReduceOut, bytes, &all_npus);
-            self.fabric.run_plan(&plan)
+            self.fabric.try_run_plan(&plan)
         };
 
         let mut compute_total = 0.0;
@@ -313,7 +356,7 @@ impl Simulator {
                 if s.mp > 1 {
                     for l in &layers[a..b] {
                         if l.mp_collectives > 0 {
-                            mp += self.mp_round(l.act_bytes * mb_samples)
+                            mp += self.try_mp_round(l.act_bytes * mb_samples)?
                                 * l.mp_collectives as f64
                                 * mb as f64;
                         }
@@ -321,18 +364,18 @@ impl Simulator {
                 }
                 // PP handoff between the pp layers of the group.
                 let pp = if s.pp > 1 {
-                    self.pp_round(layers[b - 1].act_bytes * mb_samples) * mb as f64
+                    self.try_pp_round(layers[b - 1].act_bytes * mb_samples)? * mb as f64
                 } else {
                     0.0
                 };
 
-                let mut io = io_in_time(params);
+                let mut io = io_in_time(params)?;
                 if bwd {
                     // Gradients stream out; DP reduction happens in-path
                     // (Sec. VII-C: "DP groups reduce the gradients as they
                     // stream them out"). In/out use opposite directions,
                     // so the group's I/O time is the max of the two.
-                    io = io.max(io_out_time(params));
+                    io = io.max(io_out_time(params)?);
                 }
                 stream_exposed += (io - prev_overlap).max(0.0);
                 // Prefetch: the next group's load hides under this
@@ -353,8 +396,8 @@ impl Simulator {
         // Input load: I/O is saturated all iteration, so the minibatch
         // load cannot be prefetched (the paper's Transformer-1T note).
         let input_bytes = w.input_bytes * w.minibatch(s) as f64;
-        out.add(CommType::InputLoad, io_in_time(input_bytes));
-        out
+        out.add(CommType::InputLoad, io_in_time(input_bytes)?);
+        Ok(out)
     }
 
     // ---------------------------------------------------- microbenchmark
@@ -363,21 +406,32 @@ impl Simulator {
     /// strategy: (MP, DP, PP) with `bytes` per worker, all groups of each
     /// phase concurrent. Entries are `None` when the phase is absent.
     pub fn microbench(&self, bytes: f64) -> [Option<f64>; 3] {
+        self.try_microbench(bytes).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible form of [`Self::microbench`].
+    pub fn try_microbench(&self, bytes: f64) -> Result<[Option<f64>; 3], FluidError> {
         use crate::fabric::collectives::endpoint_send_bytes;
         let s = &self.strategy;
-        let mp = (s.mp > 1).then(|| {
-            let t = self.mp_round(bytes);
-            endpoint_send_bytes(CollectiveKind::AllReduce, s.mp, bytes) / t
-        });
-        let dp = (s.dp > 1).then(|| {
-            let t = self.dp_round(bytes);
-            endpoint_send_bytes(CollectiveKind::AllReduce, s.dp, bytes) / t
-        });
-        let pp = (s.pp > 1).then(|| {
-            let t = self.pp_round(bytes);
-            bytes / t
-        });
-        [mp, dp, pp]
+        let mp = if s.mp > 1 {
+            let t = self.try_mp_round(bytes)?;
+            Some(endpoint_send_bytes(CollectiveKind::AllReduce, s.mp, bytes) / t)
+        } else {
+            None
+        };
+        let dp = if s.dp > 1 {
+            let t = self.try_dp_round(bytes)?;
+            Some(endpoint_send_bytes(CollectiveKind::AllReduce, s.dp, bytes) / t)
+        } else {
+            None
+        };
+        let pp = if s.pp > 1 {
+            let t = self.try_pp_round(bytes)?;
+            Some(bytes / t)
+        } else {
+            None
+        };
+        Ok([mp, dp, pp])
     }
 
     /// The mesh model, when the fabric is the baseline.
@@ -499,6 +553,31 @@ mod tests {
         let [mp_d, _, _] = d.microbench(139e6);
         let bw_d = mp_d.unwrap();
         assert!(bw_d > 5.0e12, "FRED-D {}", bw_d / 1e9);
+    }
+
+    #[test]
+    fn with_fabric_runs_beyond_the_paper_wafer() {
+        // 8×8 wafer, 64 workers — the scaled path the sweep engine uses.
+        let w = workload::transformer_17b();
+        let s = Strategy::new(4, 16, 1);
+        let fred = Simulator::with_fabric(
+            FabricKind::FredD,
+            FabricKind::FredD.build_sized(8, 8),
+            None,
+            w.clone(),
+            s,
+        );
+        let bd = fred.try_iterate().expect("feasible");
+        assert!(bd.total().is_finite() && bd.total() > 0.0);
+        let mesh = Simulator::with_fabric(
+            FabricKind::Baseline,
+            FabricKind::Baseline.build_sized(8, 8),
+            Some(Mesh2D::with_dims(8, 8)),
+            w,
+            s,
+        );
+        let bm = mesh.try_iterate().expect("feasible");
+        assert!(bm.total() >= bd.total(), "mesh {} vs FRED-D {}", bm.total(), bd.total());
     }
 
     #[test]

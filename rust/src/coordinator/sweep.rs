@@ -1,0 +1,469 @@
+//! Strategy/topology sweep engine — co-exploration beyond the paper wafer.
+//!
+//! The paper evaluates one 20-NPU wafer (Fig. 8) under a handful of
+//! hand-picked strategies; the real value of a fabric model is sweeping
+//! the *cross-product* of design choices the way WATOS/LIBRA-style
+//! co-exploration frameworks do. This module enumerates
+//!
+//! * **fabric kinds** — the 2D-mesh baseline and FRED-A/B/C/D (Table IV),
+//! * **wafer shapes** — `n_l1 × per_l1` (mesh rows × cols; FRED L1 groups
+//!   × NPUs per group), scaled via [`FabricKind::build_sized`] with
+//!   validated trunk/μSwitch sizing,
+//! * **parallelization strategies** — every `MP·DP·PP` factorization of
+//!   the wafer's NPU count (capped, deterministically, by
+//!   [`SweepConfig::max_strategies`]),
+//! * **workloads** — any subset of the four Table V models,
+//!
+//! runs each point through [`Simulator::try_iterate`], and ranks the
+//! feasible points by **per-sample iteration time** (the throughput view
+//! of Fig. 2 — minibatch scales with DP, so ranking raw iteration time
+//! would reward small-DP points). Each point also records the Fig. 9
+//! effective-NPU-bandwidth metric for its dominant comm phase. Infeasible
+//! points (fluid deadlocks on degenerate shapes) degrade to typed errors
+//! and rank last instead of aborting the sweep.
+//!
+//! Output is a ranked [`Table`](crate::util::table::Table) and a
+//! machine-readable [`Json`] document (`fred sweep --json`); determinism
+//! and the trunk-bandwidth monotonicity invariant (FRED-C/D never slower
+//! than A/B on the same point) are property-tested in
+//! `tests/prop_sweep.rs`.
+
+use super::config::FabricKind;
+use super::metrics::{Breakdown, CommType};
+use super::parallelism::Strategy;
+use super::sim::Simulator;
+use super::workload::Workload;
+use crate::fabric::mesh::Mesh2D;
+use crate::fabric::topology::Fabric;
+use crate::runtime::json::Json;
+use crate::util::table::Table;
+use crate::util::units::{fmt_bw, fmt_time};
+
+/// A wafer shape: `n_l1` rows / L1 groups × `per_l1` columns / NPUs per
+/// group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct WaferDims {
+    /// Mesh rows / FRED L1 switch count.
+    pub n_l1: usize,
+    /// Mesh columns / NPUs per L1 switch.
+    pub per_l1: usize,
+}
+
+impl WaferDims {
+    /// The paper's 5×4 wafer.
+    pub const PAPER: WaferDims = WaferDims { n_l1: 5, per_l1: 4 };
+
+    /// Total NPUs.
+    pub fn npus(&self) -> usize {
+        self.n_l1 * self.per_l1
+    }
+
+    /// Parse `"5x4"` / `"8X8"`. Both dimensions must be >= 2 (the mesh
+    /// construction needs a 2D wafer).
+    pub fn parse(s: &str) -> Option<Self> {
+        let (a, b) = s.split_once(|c| c == 'x' || c == 'X')?;
+        let n_l1: usize = a.trim().parse().ok()?;
+        let per_l1: usize = b.trim().parse().ok()?;
+        (n_l1 >= 2 && per_l1 >= 2).then_some(Self { n_l1, per_l1 })
+    }
+}
+
+impl std::fmt::Display for WaferDims {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}", self.n_l1, self.per_l1)
+    }
+}
+
+/// Every `MP(m)-DP(d)-PP(p)` factorization with `m·d·p == n_npus`,
+/// ordered by (pp, mp) so truncation keeps the pp=1 spectrum first —
+/// 18 strategies for the paper's 20 NPUs, 28 for an 8×8 wafer.
+pub fn factorizations(n_npus: usize) -> Vec<Strategy> {
+    let mut out = Vec::new();
+    for mp in 1..=n_npus {
+        if n_npus % mp != 0 {
+            continue;
+        }
+        let rest = n_npus / mp;
+        for pp in 1..=rest {
+            if rest % pp != 0 {
+                continue;
+            }
+            out.push(Strategy::new(mp, rest / pp, pp));
+        }
+    }
+    out.sort_by_key(|s| (s.pp, s.mp));
+    out
+}
+
+/// What to sweep.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Workloads (Table V models) to evaluate.
+    pub workloads: Vec<Workload>,
+    /// Wafer shapes.
+    pub wafers: Vec<WaferDims>,
+    /// Fabric kinds.
+    pub fabrics: Vec<FabricKind>,
+    /// Explicit strategies, or `None` to enumerate all factorizations of
+    /// each wafer's NPU count (strategies that need more workers than a
+    /// wafer has are skipped on that wafer).
+    pub strategies: Option<Vec<Strategy>>,
+    /// Cap on auto-enumerated strategies per wafer (truncation is
+    /// deterministic and reported, never silent).
+    pub max_strategies: usize,
+    /// Per-worker payload for the effective-bandwidth microbenchmark.
+    pub bench_bytes: f64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            workloads: Workload::all(),
+            wafers: vec![WaferDims::PAPER],
+            fabrics: FabricKind::all().to_vec(),
+            strategies: None,
+            max_strategies: 12,
+            bench_bytes: 100e6,
+        }
+    }
+}
+
+/// Metrics of one feasible sweep point.
+#[derive(Debug, Clone)]
+pub struct SweepMetrics {
+    /// Full iteration breakdown.
+    pub breakdown: Breakdown,
+    /// Iteration time divided by the strategy's minibatch — the ranking
+    /// key (throughput view).
+    pub per_sample: f64,
+    /// Best per-phase effective NPU bandwidth (Fig. 9 metric), bytes/s.
+    pub effective_bw: f64,
+}
+
+/// One evaluated point of the cross-product.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// Workload name.
+    pub workload: String,
+    /// Wafer shape.
+    pub wafer: WaferDims,
+    /// Fabric kind.
+    pub fabric: FabricKind,
+    /// Strategy.
+    pub strategy: Strategy,
+    /// Metrics, or the typed-error string for infeasible points.
+    pub outcome: Result<SweepMetrics, String>,
+}
+
+/// A completed sweep: points ranked fastest-per-sample first (infeasible
+/// points last), plus bookkeeping for any strategy-cap truncation.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    /// Ranked points.
+    pub points: Vec<SweepPoint>,
+    /// Auto-enumerated strategies dropped by [`SweepConfig::max_strategies`].
+    pub truncated_strategies: usize,
+}
+
+/// Evaluate one point of the cross-product. `fabric`/`mesh` are clones
+/// of the per-(kind, wafer) prototypes built once in [`run_sweep`].
+fn run_point(
+    kind: FabricKind,
+    wafer: WaferDims,
+    fabric: Box<dyn Fabric>,
+    mesh: Option<Mesh2D>,
+    workload: &Workload,
+    strategy: Strategy,
+    bench_bytes: f64,
+) -> SweepPoint {
+    let sim = Simulator::with_fabric(kind, fabric, mesh, workload.clone(), strategy);
+    let outcome = match sim.try_iterate() {
+        Ok(breakdown) => {
+            let per_sample =
+                breakdown.total() / workload.minibatch(&strategy).max(1) as f64;
+            let effective_bw = sim
+                .try_microbench(bench_bytes)
+                .map(|phases| phases.iter().flatten().copied().fold(0.0, f64::max))
+                .unwrap_or(0.0);
+            Ok(SweepMetrics { breakdown, per_sample, effective_bw })
+        }
+        Err(e) => Err(e.to_string()),
+    };
+    SweepPoint { workload: workload.name.clone(), wafer, fabric, strategy, outcome }
+}
+
+/// Run the whole cross-product and rank the results.
+pub fn run_sweep(cfg: &SweepConfig) -> SweepReport {
+    let mut points = Vec::new();
+    let mut truncated = 0usize;
+    for &wafer in &cfg.wafers {
+        let strategies: Vec<Strategy> = match &cfg.strategies {
+            Some(list) => list
+                .iter()
+                .copied()
+                .filter(|s| s.workers() <= wafer.npus())
+                .collect(),
+            None => {
+                let mut all = factorizations(wafer.npus());
+                if all.len() > cfg.max_strategies {
+                    truncated += all.len() - cfg.max_strategies;
+                    all.truncate(cfg.max_strategies);
+                }
+                all
+            }
+        };
+        for &kind in &cfg.fabrics {
+            // One prototype per (kind, wafer); points clone it (cheaper
+            // than re-deriving the link graph workloads × strategies
+            // times).
+            let proto = kind.build_sized(wafer.n_l1, wafer.per_l1);
+            let mesh_proto = kind
+                .is_mesh()
+                .then(|| Mesh2D::with_dims(wafer.n_l1, wafer.per_l1));
+            for workload in &cfg.workloads {
+                for &strategy in &strategies {
+                    points.push(run_point(
+                        kind,
+                        wafer,
+                        proto.clone_box(),
+                        mesh_proto.clone(),
+                        workload,
+                        strategy,
+                        cfg.bench_bytes,
+                    ));
+                }
+            }
+        }
+    }
+    rank(&mut points);
+    SweepReport { points, truncated_strategies: truncated }
+}
+
+/// Rank: feasible before infeasible, then per-sample time ascending, with
+/// a total deterministic tie-break.
+fn rank(points: &mut [SweepPoint]) {
+    points.sort_by(|a, b| {
+        let key = |p: &SweepPoint| match &p.outcome {
+            Ok(m) => (0u8, m.per_sample),
+            Err(_) => (1u8, f64::INFINITY),
+        };
+        let (fa, ta) = key(a);
+        let (fb, tb) = key(b);
+        fa.cmp(&fb)
+            .then(ta.total_cmp(&tb))
+            .then_with(|| a.workload.cmp(&b.workload))
+            .then_with(|| a.wafer.cmp(&b.wafer))
+            .then_with(|| a.fabric.name().cmp(b.fabric.name()))
+            .then_with(|| a.strategy.to_string().cmp(&b.strategy.to_string()))
+    });
+}
+
+impl SweepReport {
+    /// Count, over matched (workload, wafer, strategy) points present for
+    /// both kinds, how often `faster` strictly beats and never loses to
+    /// `slower` — the Fig. 9/10 ordering checks (e.g. FRED-D vs FRED-A).
+    /// Returns `(strict_wins, comparisons)`.
+    pub fn count_orderings(&self, faster: FabricKind, slower: FabricKind) -> (usize, usize) {
+        let mut fast: std::collections::HashMap<(&str, WaferDims, Strategy), f64> =
+            std::collections::HashMap::new();
+        for q in self.points.iter().filter(|q| q.fabric == faster) {
+            if let Ok(m) = &q.outcome {
+                fast.insert((q.workload.as_str(), q.wafer, q.strategy), m.breakdown.total());
+            }
+        }
+        let mut wins = 0usize;
+        let mut comparisons = 0usize;
+        for p in self.points.iter().filter(|p| p.fabric == slower) {
+            let Ok(m) = &p.outcome else { continue };
+            let ts = m.breakdown.total();
+            let Some(&tf) = fast.get(&(p.workload.as_str(), p.wafer, p.strategy)) else {
+                continue;
+            };
+            comparisons += 1;
+            if tf < ts * (1.0 - 1e-9) {
+                wins += 1;
+            }
+        }
+        (wins, comparisons)
+    }
+
+    /// Render the top `top` points as a fixed-width table.
+    pub fn render_table(&self, top: usize) -> String {
+        let mut t = Table::new(&[
+            "rank", "workload", "wafer", "fabric", "strategy", "iter", "per-sample",
+            "eff BW", "status",
+        ]);
+        for (i, p) in self.points.iter().take(top).enumerate() {
+            match &p.outcome {
+                Ok(m) => t.row(&[
+                    format!("{}", i + 1),
+                    p.workload.clone(),
+                    p.wafer.to_string(),
+                    p.fabric.name().to_string(),
+                    p.strategy.to_string(),
+                    fmt_time(m.breakdown.total()),
+                    fmt_time(m.per_sample),
+                    fmt_bw(m.effective_bw),
+                    "ok".to_string(),
+                ]),
+                Err(e) => t.row(&[
+                    format!("{}", i + 1),
+                    p.workload.clone(),
+                    p.wafer.to_string(),
+                    p.fabric.name().to_string(),
+                    p.strategy.to_string(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    format!("infeasible: {e}"),
+                ]),
+            };
+        }
+        t.render()
+    }
+
+    /// Machine-readable form (`fred sweep --json`): ranked points with
+    /// the full exposed-comm breakdown per point.
+    pub fn to_json(&self) -> Json {
+        let points: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                let mut fields = vec![
+                    ("workload", Json::Str(p.workload.clone())),
+                    ("wafer", Json::Str(p.wafer.to_string())),
+                    ("n_npus", Json::Num(p.wafer.npus() as f64)),
+                    ("fabric", Json::Str(p.fabric.name().to_string())),
+                    ("strategy", Json::Str(p.strategy.to_string())),
+                    ("mp", Json::Num(p.strategy.mp as f64)),
+                    ("dp", Json::Num(p.strategy.dp as f64)),
+                    ("pp", Json::Num(p.strategy.pp as f64)),
+                    ("ok", Json::Bool(p.outcome.is_ok())),
+                ];
+                match &p.outcome {
+                    Ok(m) => {
+                        fields.push(("total_s", Json::Num(m.breakdown.total())));
+                        fields.push(("per_sample_s", Json::Num(m.per_sample)));
+                        fields.push(("compute_s", Json::Num(m.breakdown.compute)));
+                        fields.push(("effective_npu_bw", Json::Num(m.effective_bw)));
+                        let comm: Vec<(&str, Json)> = CommType::all()
+                            .iter()
+                            .map(|&c| (c.name(), Json::Num(m.breakdown.get(c))))
+                            .collect();
+                        fields.push(("exposed_comm_s", Json::obj(comm)));
+                    }
+                    Err(e) => fields.push(("error", Json::Str(e.clone()))),
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        Json::obj(vec![
+            ("points", Json::Arr(points)),
+            (
+                "truncated_strategies",
+                Json::Num(self.truncated_strategies as f64),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::workload;
+
+    fn tiny_cfg() -> SweepConfig {
+        SweepConfig {
+            workloads: vec![workload::resnet152()],
+            wafers: vec![WaferDims::PAPER],
+            fabrics: vec![FabricKind::FredA, FabricKind::FredD],
+            strategies: Some(vec![Strategy::new(1, 20, 1), Strategy::new(4, 5, 1)]),
+            max_strategies: 12,
+            bench_bytes: 100e6,
+        }
+    }
+
+    #[test]
+    fn wafer_dims_parse_and_display() {
+        assert_eq!(WaferDims::parse("5x4"), Some(WaferDims::PAPER));
+        assert_eq!(WaferDims::parse(" 8 X 8 "), Some(WaferDims { n_l1: 8, per_l1: 8 }));
+        assert_eq!(WaferDims::parse("1x4"), None, "mesh needs >= 2 per dim");
+        assert_eq!(WaferDims::parse("5"), None);
+        assert_eq!(WaferDims::parse("axb"), None);
+        assert_eq!(WaferDims::PAPER.to_string(), "5x4");
+        assert_eq!(WaferDims::PAPER.npus(), 20);
+    }
+
+    #[test]
+    fn factorizations_cover_and_multiply_out() {
+        let fs = factorizations(20);
+        assert_eq!(fs.len(), 18, "d3(20) ordered factorizations");
+        for s in &fs {
+            assert_eq!(s.workers(), 20, "{s}");
+        }
+        // Deterministic order: pp=1 spectrum first.
+        assert_eq!(fs[0], Strategy::new(1, 20, 1));
+        assert!(fs.windows(2).all(|w| (w[0].pp, w[0].mp) <= (w[1].pp, w[1].mp)));
+        // The paper's Table V strategies are all enumerated.
+        for s in [Strategy::new(1, 20, 1), Strategy::new(2, 5, 2), Strategy::new(20, 1, 1)] {
+            assert!(fs.contains(&s), "{s}");
+        }
+    }
+
+    #[test]
+    fn sweep_ranks_feasible_points_by_per_sample_time() {
+        let report = run_sweep(&tiny_cfg());
+        assert_eq!(report.points.len(), 4);
+        assert!(report.points.iter().all(|p| p.outcome.is_ok()));
+        let ps: Vec<f64> = report
+            .points
+            .iter()
+            .map(|p| p.outcome.as_ref().unwrap().per_sample)
+            .collect();
+        assert!(ps.windows(2).all(|w| w[0] <= w[1]), "{ps:?}");
+    }
+
+    #[test]
+    fn sweep_reproduces_fred_d_over_a_on_paper_wafer() {
+        let report = run_sweep(&tiny_cfg());
+        let (wins, comparisons) = report.count_orderings(FabricKind::FredD, FabricKind::FredA);
+        assert_eq!(comparisons, 2);
+        assert!(wins >= 1, "FRED-D must strictly beat FRED-A somewhere");
+    }
+
+    #[test]
+    fn sweep_json_is_parseable_and_complete() {
+        let report = run_sweep(&tiny_cfg());
+        let text = report.to_json().render();
+        let back = Json::parse(&text).expect("sweep JSON parses");
+        let points = back.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 4);
+        for p in points {
+            assert_eq!(p.get("ok").unwrap().as_bool(), Some(true));
+            assert!(p.get("total_s").unwrap().as_f64().unwrap() > 0.0);
+            assert!(p.get("per_sample_s").unwrap().as_f64().unwrap() > 0.0);
+            assert!(p.get("exposed_comm_s").is_some());
+        }
+    }
+
+    #[test]
+    fn auto_strategies_truncate_deterministically() {
+        let mut cfg = tiny_cfg();
+        cfg.strategies = None;
+        cfg.max_strategies = 3;
+        cfg.fabrics = vec![FabricKind::FredD];
+        let report = run_sweep(&cfg);
+        assert_eq!(report.points.len(), 3);
+        assert_eq!(report.truncated_strategies, 18 - 3);
+    }
+
+    #[test]
+    fn render_table_shows_top_points() {
+        let report = run_sweep(&tiny_cfg());
+        let table = report.render_table(2);
+        assert!(table.contains("per-sample"));
+        assert!(table.contains("FRED-D") || table.contains("FRED-A"));
+        // 2 rows + header + separator.
+        assert_eq!(table.lines().count(), 4);
+    }
+}

@@ -18,6 +18,39 @@
 //! Transfers carry a `plan` tag so callers can group them into collectives
 //! and read back per-collective completion times.
 
+/// Why a fluid simulation could not make progress.
+///
+/// The allocator guarantees positive rates for every active transfer on
+/// any well-formed network, so a deadlock indicates an over-constrained
+/// transfer set (e.g. a degenerate topology handing the same saturated
+/// link to every flow, or float pathology at extreme capacity ratios).
+/// Sweep points on infeasible configurations surface this as a typed
+/// error instead of aborting the whole sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FluidError {
+    /// Active transfers remained but every one had zero allocated rate.
+    Deadlock {
+        /// Number of transfers still active at the stall.
+        active: usize,
+        /// Simulation time at which progress stopped.
+        at: f64,
+    },
+}
+
+impl std::fmt::Display for FluidError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FluidError::Deadlock { active, at } => write!(
+                f,
+                "fluid deadlock: {active} active transfer(s) with zero rate at t={at} \
+                 (over-constrained links?)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FluidError {}
+
 /// Index of a link in a [`Network`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct LinkId(pub usize);
@@ -124,10 +157,19 @@ impl FluidSim {
 
     /// Simulate all transfers starting at t=0 until all complete.
     ///
+    /// Panicking convenience over [`Self::try_run`] for callers on
+    /// known-feasible configurations (all the paper topologies).
+    pub fn run(&self, transfers: &[Transfer]) -> FluidResult {
+        self.try_run(transfers).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Simulate all transfers starting at t=0 until all complete, or
+    /// report a [`FluidError`] if the transfer set cannot drain.
+    ///
     /// Zero-byte transfers complete at t=0. Transfers with an empty link
     /// set are infinitely fast (complete at t=0) — callers use these for
     /// node-local data movement.
-    pub fn run(&self, transfers: &[Transfer]) -> FluidResult {
+    pub fn try_run(&self, transfers: &[Transfer]) -> Result<FluidResult, FluidError> {
         let n = transfers.len();
         let mut remaining: Vec<f64> = transfers.iter().map(|t| t.bytes.max(0.0)).collect();
         let mut done_at: Vec<f64> = vec![0.0; n];
@@ -169,10 +211,9 @@ impl FluidSim {
                     dt = dt.min(remaining[i] / rates[i]);
                 }
             }
-            assert!(
-                dt.is_finite(),
-                "fluid deadlock: active transfers with zero rate (over-constrained links?)"
-            );
+            if !dt.is_finite() {
+                return Err(FluidError::Deadlock { active: n_active, at: t });
+            }
             t += dt;
             for i in 0..n {
                 if active[i] {
@@ -193,7 +234,7 @@ impl FluidSim {
             plan_done[tr.plan] = plan_done[tr.plan].max(done_at[i]);
         }
         let makespan = done_at.iter().cloned().fold(0.0, f64::max);
-        FluidResult { transfer_done: done_at, plan_done, makespan }
+        Ok(FluidResult { transfer_done: done_at, plan_done, makespan })
     }
 
     /// Max-min fair (progressive-filling) rate allocation for the active
@@ -303,7 +344,17 @@ impl FluidSim {
     /// §Perf: admitted transfers live in an append-only arena with alive
     /// flags so per-link user lists and counters update incrementally
     /// instead of being rebuilt every event.
+    ///
+    /// Panicking convenience over [`Self::try_run_phased`] for callers on
+    /// known-feasible configurations.
     pub fn run_phased(&self, plans: &[Vec<Vec<Transfer>>]) -> Vec<f64> {
+        self.try_run_phased(plans).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Phased simulation returning a typed [`FluidError`] when the
+    /// admitted transfer set cannot drain (see [`Self::run_phased`] for
+    /// semantics).
+    pub fn try_run_phased(&self, plans: &[Vec<Vec<Transfer>>]) -> Result<Vec<f64>, FluidError> {
         struct Slot {
             plan: usize,
             remaining: f64,
@@ -402,7 +453,9 @@ impl FluidSim {
                     dt = dt.min(arena[i].remaining / rates[i]);
                 }
             }
-            assert!(dt.is_finite(), "fluid deadlock in run_phased");
+            if !dt.is_finite() {
+                return Err(FluidError::Deadlock { active: n_alive, at: t });
+            }
             t += dt;
             let mut finished_plans: Vec<usize> = Vec::new();
             for k in 0..alive_idx.len() {
@@ -437,7 +490,7 @@ impl FluidSim {
                 }
             }
         }
-        done_time
+        Ok(done_time)
     }
 }
 
@@ -663,6 +716,28 @@ mod tests {
         ];
         let done = sim.run_phased(&[plan]);
         assert!((done[0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn try_run_matches_run_on_feasible_sets() {
+        let (n, l) = net(&[100.0, 30.0]);
+        let sim = FluidSim::new(n);
+        let ts = vec![
+            Transfer::new(vec![l[0]], 600.0, 0),
+            Transfer::new(vec![l[0], l[1]], 300.0, 1),
+        ];
+        let a = sim.run(&ts);
+        let b = sim.try_run(&ts).expect("feasible");
+        assert_eq!(a.transfer_done, b.transfer_done);
+        assert_eq!(a.makespan, b.makespan);
+    }
+
+    #[test]
+    fn fluid_error_is_descriptive() {
+        let e = FluidError::Deadlock { active: 3, at: 1.5 };
+        let msg = e.to_string();
+        assert!(msg.contains("fluid deadlock"), "{msg}");
+        assert!(msg.contains('3'), "{msg}");
     }
 
     #[test]

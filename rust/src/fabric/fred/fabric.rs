@@ -32,7 +32,31 @@ use super::super::fluid::{FluidSim, LinkId, Network, Transfer};
 use super::super::topology::{CollectiveKind, Fabric, IoDirection, NpuId, Plan};
 use super::flow::Flow;
 use super::routing::{route_flows, RouteError};
+use super::switch::{Census, FredSwitch};
 use crate::util::units::{GBPS, TBPS};
+
+/// Per-direction link bandwidth of the *equivalent 2D mesh* used to match
+/// FRED-A/B bisection when scaling the wafer (Table II: 750 GBps).
+const EQUIV_MESH_LINK_BW: f64 = 750.0 * GBPS;
+
+/// Bisection bandwidth of the equivalent `n_l1 × per_l1` 2D mesh: the
+/// minimum over the *balanced* straight cuts. A vertical cut (equal
+/// column halves, needs even `c`) crosses `r` links; a horizontal cut
+/// needs even `r` and crosses `c`. For 5×4 only the vertical cut
+/// balances: 5 links × 750 GBps = 3.75 TBps, Table IV's baseline figure.
+/// Odd×odd has no perfectly balanced straight cut; `min(r, c)` is the
+/// standard approximation. Symmetric in its arguments, so transposed
+/// wafer specs (8x4 vs 4x8) get identical FRED-A/B trunks.
+fn mesh_equivalent_bisection(n_l1: usize, per_l1: usize, link_bw: f64) -> f64 {
+    let (r, c) = (n_l1, per_l1);
+    let cut_links = match (r % 2 == 0, c % 2 == 0) {
+        (true, true) => r.min(c),
+        (false, true) => r,
+        (true, false) => c,
+        (false, false) => r.min(c),
+    };
+    cut_links as f64 * link_bw
+}
 
 /// Table IV operating points.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -48,11 +72,34 @@ pub enum FredVariant {
 }
 
 impl FredVariant {
-    /// Trunk (L1↔L2) bandwidth per direction.
+    /// Trunk (L1↔L2) bandwidth per direction at the paper's 5×4 wafer
+    /// (Table IV). Equal to [`Self::trunk_bw`] at `n_l1 = 5, per_l1 = 4,
+    /// npu_bw = 3 TBps`.
     pub fn l1_l2_bw(&self) -> f64 {
         match self {
             FredVariant::A | FredVariant::B => 1.5 * TBPS,
             FredVariant::C | FredVariant::D => 12.0 * TBPS,
+        }
+    }
+
+    /// Trunk (L1↔L2) bandwidth per direction for an arbitrary wafer.
+    ///
+    /// * A/B hold the *baseline-equal bisection* invariant (Table IV): the
+    ///   `n_l1` trunks' aggregate halves to the equivalent mesh's
+    ///   bisection, so `trunk = 2·bisection / n_l1`.
+    /// * C/D are a *full fat-tree*: every NPU of an L1 group can drive its
+    ///   full injection rate through the trunk, so `trunk = per_l1 ×
+    ///   npu_bw`.
+    ///
+    /// At the paper's 5×4 / 3 TBps operating point this reproduces
+    /// Table IV's 1.5 / 12 TBps exactly (asserted in tests).
+    pub fn trunk_bw(&self, n_l1: usize, per_l1: usize, npu_bw: f64) -> f64 {
+        match self {
+            FredVariant::A | FredVariant::B => {
+                2.0 * mesh_equivalent_bisection(n_l1, per_l1, EQUIV_MESH_LINK_BW)
+                    / n_l1 as f64
+            }
+            FredVariant::C | FredVariant::D => per_l1 as f64 * npu_bw,
         }
     }
 
@@ -98,6 +145,7 @@ pub struct FredFabric {
     io: Vec<FredIo>,
     npu_bw: f64,
     io_bw: f64,
+    trunk_bw: f64,
     hop_latency: f64,
     sim: FluidSim,
 }
@@ -109,8 +157,33 @@ impl FredFabric {
         Self::new(variant, 5, 4, 18, 3.0 * TBPS, 128.0 * GBPS, 20e-9)
     }
 
+    /// A scaled wafer at the paper's per-component operating points
+    /// (3 TBps NPUs, 128 GBps CXL-3 controllers, 20 ns hops) with
+    /// `2·(n_l1 + per_l1)` border-equivalent I/O controllers — the same
+    /// count the equivalent mesh would bond (18 at 5×4). Every L1
+    /// switch's `FRED_3(P)` model is constructed once here, so a shape
+    /// whose μSwitch sizing cannot build fails at construction time, not
+    /// mid-sweep.
+    pub fn sized(variant: FredVariant, n_l1: usize, per_l1: usize) -> Self {
+        let n_io = 2 * (n_l1 + per_l1);
+        let fabric = Self::new(variant, n_l1, per_l1, n_io, 3.0 * TBPS, 128.0 * GBPS, 20e-9);
+        for g in 0..n_l1 {
+            // Panics here (not mid-sweep) if the shape cannot build its
+            // L1 switch model.
+            let _census = fabric.l1_switch_census(g, 3);
+        }
+        fabric
+    }
+
     /// General construction: `n_l1` leaf switches × `per_l1` NPUs each,
-    /// `n_io` controllers distributed round-robin across leaves.
+    /// `n_io` controllers distributed round-robin across leaves. Trunk
+    /// bandwidth follows [`FredVariant::trunk_bw`] for the given shape.
+    ///
+    /// Degenerate shapes are supported and exercised in tests: `n_io = 0`
+    /// (no off-wafer channels — I/O plans come back empty), `n_l1 = 1`
+    /// (single switch, trunks idle) and `per_l1 = 1` (inter-switch rank
+    /// rings only). `n_l1 = 0` or `per_l1 = 0` have no physical meaning
+    /// and are rejected up front instead of indexing out of bounds later.
     pub fn new(
         variant: FredVariant,
         n_l1: usize,
@@ -120,6 +193,11 @@ impl FredFabric {
         io_bw: f64,
         hop_latency: f64,
     ) -> Self {
+        assert!(
+            n_l1 >= 1 && per_l1 >= 1,
+            "FRED fabric needs at least 1 L1 group with 1 NPU (got {n_l1}x{per_l1})"
+        );
+        let trunk_bw = variant.trunk_bw(n_l1, per_l1, npu_bw);
         let n = n_l1 * per_l1;
         let mut net = Network::new();
         let mut groups = Vec::with_capacity(n_l1);
@@ -138,8 +216,8 @@ impl FredFabric {
         let mut l1_up = Vec::with_capacity(n_l1);
         let mut l1_down = Vec::with_capacity(n_l1);
         for g in 0..n_l1 {
-            l1_up.push(net.add_link(format!("L1_{g}->L2"), variant.l1_l2_bw()));
-            l1_down.push(net.add_link(format!("L2->L1_{g}"), variant.l1_l2_bw()));
+            l1_up.push(net.add_link(format!("L1_{g}->L2"), trunk_bw));
+            l1_down.push(net.add_link(format!("L2->L1_{g}"), trunk_bw));
         }
         let mut io = Vec::with_capacity(n_io);
         for k in 0..n_io {
@@ -161,6 +239,7 @@ impl FredFabric {
             io,
             npu_bw,
             io_bw,
+            trunk_bw,
             hop_latency,
             sim: FluidSim::new(net),
         }
@@ -186,10 +265,45 @@ impl FredFabric {
         self.npu_l1[npu]
     }
 
+    /// Trunk (L1↔L2) bandwidth per direction of this instance.
+    pub fn trunk_bw(&self) -> f64 {
+        self.trunk_bw
+    }
+
     /// Bisection bandwidth (cut between L1 level and L2): half the L1
-    /// trunks' aggregate, matching Table IV's 3.75 / 30 TBps.
+    /// trunks' aggregate, matching Table IV's 3.75 / 30 TBps at 5×4.
     pub fn bisection_bw(&self) -> f64 {
-        self.groups.len() as f64 * self.variant.l1_l2_bw() / 2.0
+        self.groups.len() as f64 * self.trunk_bw / 2.0
+    }
+
+    /// Trunk-port equivalents of an L1 switch. The paper's L1 chiplets
+    /// are provisioned for the full fat-tree port count on every variant
+    /// (Table III uses the same FRED₃(12) chiplets for A-D; A/B just
+    /// clock the trunk ports at lower rate), so the *port* model is
+    /// `per_l1`, widened further if the trunk bandwidth ever exceeds
+    /// `per_l1` NPU-rate lanes. 4 at the paper's 5×4 for all variants —
+    /// identical to the previously hardcoded figure.
+    pub fn trunk_port_equivalents(&self) -> usize {
+        let per_l1 = self.groups.first().map_or(1, Vec::len);
+        let bw_lanes = (self.trunk_bw / self.npu_bw).ceil() as usize;
+        per_l1.max(bw_lanes).max(1)
+    }
+
+    /// Port count of the L1 switch model serving group `l1`: NPU ports +
+    /// trunk-port equivalents + bonded I/O controllers.
+    pub fn l1_switch_ports(&self, l1: usize) -> usize {
+        let n_io = self.io.iter().filter(|io| io.l1 == l1).count();
+        self.groups[l1].len() + self.trunk_port_equivalents() + n_io
+    }
+
+    /// Construct the `FRED_m(P)` model of group `l1`'s switch and return
+    /// its hardware census. [`Self::sized`] runs this for every L1 at
+    /// construction time (the sweep engine's μSwitch-sizing validation);
+    /// it is also the per-chiplet input to Table III-style overhead
+    /// accounting on scaled wafers. Tiny groups clamp to the 2-port
+    /// minimum switch.
+    pub fn l1_switch_census(&self, l1: usize, m: usize) -> Census {
+        FredSwitch::new(m, self.l1_switch_ports(l1).max(2)).census()
     }
 
     /// Group `participants` by L1 switch; returns (l1 index, members).
@@ -355,8 +469,9 @@ impl FredFabric {
         let n_io = self.io.iter().filter(|io| io.l1 == l1).count();
         // Paper's L1 switch: NPU ports + trunk ports + I/O ports. The
         // logical switch of Fig. 8(a) has 12 TBps of trunk = 4 trunk port
-        // equivalents at NPU rate.
-        let trunk_ports = 4usize;
+        // equivalents at NPU rate; scaled wafers derive theirs from the
+        // actual trunk bandwidth.
+        let trunk_ports = self.trunk_port_equivalents();
         let ports = per_l1 + trunk_ports + n_io;
         let mut flows = Vec::new();
         let mut next_trunk = per_l1;
@@ -405,6 +520,10 @@ impl Fabric for FredFabric {
 
     fn sim(&self) -> &FluidSim {
         &self.sim
+    }
+
+    fn clone_box(&self) -> Box<dyn Fabric> {
+        Box::new(self.clone())
     }
 
     fn plan_collective(&self, kind: CollectiveKind, participants: &[NpuId], bytes: f64) -> Plan {
@@ -827,6 +946,120 @@ mod tests {
             (vec![3], true),
         ];
         f.switch_flows_route(0, &dp, 3).expect("DP phase routes");
+    }
+
+    // ---- scaled / degenerate shapes (sweep-engine hardening) ----
+
+    #[test]
+    fn sized_reproduces_paper_trunks_at_5x4() {
+        for v in FredVariant::all() {
+            let f = FredFabric::sized(v, 5, 4);
+            assert_eq!(f.npu_count(), 20);
+            assert_eq!(f.io_count(), 18);
+            assert!(
+                (f.trunk_bw() - v.l1_l2_bw()).abs() < 1.0,
+                "{v:?}: {} vs {}",
+                f.trunk_bw(),
+                v.l1_l2_bw()
+            );
+        }
+    }
+
+    #[test]
+    fn scaled_wafer_beyond_paper_builds_and_runs() {
+        // 8×8 = 64 NPUs: C/D trunks scale to per_l1 × 3 TBps = 24 TBps,
+        // A/B to 2×(8×750 GBps)/8 = 1.5 TBps.
+        let d = FredFabric::sized(FredVariant::D, 8, 8);
+        assert_eq!(d.npu_count(), 64);
+        assert!((d.trunk_bw() - 24.0 * TBPS).abs() < 1.0);
+        let a = FredFabric::sized(FredVariant::A, 8, 8);
+        assert!((a.trunk_bw() - 1.5 * TBPS).abs() < 1.0);
+        let all: Vec<usize> = (0..64).collect();
+        for f in [&a, &d] {
+            let t = f.run_plan(&f.plan_collective(AllReduce, &all, 1e9));
+            assert!(t.is_finite() && t > 0.0);
+        }
+        // D still hits the in-network rate on the bigger wafer.
+        let bw = d.effective_npu_bw(AllReduce, &all, 1e9);
+        assert!(bw > 5.0e12, "scaled FRED-D {} GBps", bw / 1e9);
+    }
+
+    #[test]
+    fn zero_io_controllers_degrade_gracefully() {
+        let f = FredFabric::new(FredVariant::D, 5, 4, 0, 3.0 * TBPS, 128.0 * GBPS, 20e-9);
+        assert_eq!(f.io_count(), 0);
+        assert_eq!(f.io_total_bw(), 0.0);
+        let all = all20();
+        // I/O plans are empty (no channels), not a panic.
+        for dir in [IoDirection::Broadcast, IoDirection::ReduceOut, IoDirection::Scatter] {
+            let p = f.plan_io_stream(dir, 1e9, &all);
+            assert!(p.is_empty(), "{dir:?}");
+        }
+        // On-wafer collectives are unaffected.
+        let t = f.run_plan(&f.plan_collective(AllReduce, &all, 1e9));
+        assert!(t.is_finite() && t > 0.0);
+    }
+
+    #[test]
+    fn single_l1_group_keeps_trunks_idle() {
+        let f = FredFabric::new(FredVariant::D, 1, 4, 4, 3.0 * TBPS, 128.0 * GBPS, 20e-9);
+        assert_eq!(f.npu_count(), 4);
+        assert_eq!(f.groups().len(), 1);
+        let parts: Vec<usize> = (0..4).collect();
+        let plan = f.plan_collective(AllReduce, &parts, 1e9);
+        // No transfer may cross a trunk: the single switch resolves it.
+        let trunk = f.l1_up[0];
+        for t in plan.phases.iter().flatten() {
+            assert!(!t.links.contains(&trunk), "{:?}", t.links);
+        }
+        let t = f.run_plan(&plan);
+        assert!(t.is_finite() && t > 0.0);
+    }
+
+    #[test]
+    fn per_l1_of_one_builds_inter_rings_only() {
+        // 4 switches × 1 NPU: every collective is a cross-L1 rank ring;
+        // no empty intra rings may be emitted.
+        for v in [FredVariant::A, FredVariant::D] {
+            let f = FredFabric::new(v, 4, 1, 4, 3.0 * TBPS, 128.0 * GBPS, 20e-9);
+            assert_eq!(f.npu_count(), 4);
+            let parts: Vec<usize> = (0..4).collect();
+            let plan = f.plan_collective(AllReduce, &parts, 1e9);
+            assert!(!plan.is_empty());
+            for t in plan.phases.iter().flatten() {
+                assert!(t.bytes > 0.0, "empty transfer in {v:?} plan");
+                assert!(!t.links.is_empty());
+            }
+            let t = f.run_plan(&plan);
+            assert!(t.is_finite() && t > 0.0, "{v:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 1 L1 group")]
+    fn zero_l1_groups_rejected_up_front() {
+        // Previously `k % n_l1` in the I/O loop div-by-zero-panicked with
+        // an unhelpful message; now the constructor rejects the shape.
+        FredFabric::new(FredVariant::D, 0, 4, 18, 3.0 * TBPS, 128.0 * GBPS, 20e-9);
+    }
+
+    #[test]
+    fn l1_switch_census_validates_scaled_sizing() {
+        let d = FredFabric::paper(FredVariant::D);
+        // Paper L1_0: 4 NPU + 4 trunk-equivalent + 4 I/O = 12 ports.
+        assert_eq!(d.l1_switch_ports(0), 12);
+        assert_eq!(d.trunk_port_equivalents(), 4);
+        let c = d.l1_switch_census(0, 3);
+        assert!(c.microswitches > 0 && c.depth > 0);
+        // Scaled 8×8: 8 NPU + 8 trunk-equivalent + io share.
+        let big = FredFabric::sized(FredVariant::D, 8, 8);
+        assert_eq!(big.trunk_port_equivalents(), 8);
+        for g in 0..8 {
+            assert!(big.l1_switch_census(g, 3).microswitches > 0);
+        }
+        // A-variant trunks never round down to zero ports.
+        let a = FredFabric::sized(FredVariant::A, 5, 4);
+        assert!(a.trunk_port_equivalents() >= 1);
     }
 
     #[test]

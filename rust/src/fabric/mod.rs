@@ -23,5 +23,5 @@ pub mod fred;
 pub mod mesh;
 pub mod topology;
 
-pub use fluid::{FluidSim, Link, LinkId, Network, Transfer};
+pub use fluid::{FluidError, FluidSim, Link, LinkId, Network, Transfer};
 pub use topology::{CollectiveKind, Fabric, IoDirection, Plan};

@@ -20,7 +20,7 @@
 //! * Hop/step serialization that cannot pipeline (ring startup) is carried
 //!   in `serial_latency` and added once.
 
-use super::fluid::Transfer;
+use super::fluid::{FluidError, Transfer};
 
 /// Physical NPU index on the wafer.
 pub type NpuId = usize;
@@ -125,6 +125,12 @@ pub trait Fabric {
     /// The fluid simulator over this fabric's link graph.
     fn sim(&self) -> &super::fluid::FluidSim;
 
+    /// Clone into a boxed trait object. Fabrics are immutable link-graph
+    /// models, so cloning is cheaper than re-deriving the topology — the
+    /// sweep engine builds one prototype per (kind, wafer) and clones it
+    /// per point.
+    fn clone_box(&self) -> Box<dyn Fabric>;
+
     /// Plan one collective among `participants` with `bytes` payload per
     /// participant. For AllToAll, `bytes` is the total each NPU sends; for
     /// Multicast the first participant is the source; for Reduce the first
@@ -138,20 +144,33 @@ pub trait Fabric {
     fn plan_io_stream(&self, dir: IoDirection, total_bytes: f64, participants: &[NpuId]) -> Plan;
 
     /// Run a set of plans concurrently; returns each plan's completion
-    /// time (fluid completion + its serial latency).
+    /// time (fluid completion + its serial latency). Panicking
+    /// convenience over [`Fabric::try_run_concurrent`].
     fn run_concurrent(&self, plans: &[Plan]) -> Vec<f64> {
+        self.try_run_concurrent(plans).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible form of [`Fabric::run_concurrent`]: infeasible transfer
+    /// sets (degenerate sweep points) come back as a typed [`FluidError`]
+    /// instead of aborting.
+    fn try_run_concurrent(&self, plans: &[Plan]) -> Result<Vec<f64>, FluidError> {
         let phased: Vec<Vec<Vec<Transfer>>> = plans.iter().map(|p| p.phases.clone()).collect();
-        let done = self.sim().run_phased(&phased);
-        plans
+        let done = self.sim().try_run_phased(&phased)?;
+        Ok(plans
             .iter()
             .zip(done)
             .map(|(p, d)| d + p.serial_latency)
-            .collect()
+            .collect())
     }
 
     /// Time for a single plan in isolation.
     fn run_plan(&self, plan: &Plan) -> f64 {
         self.run_concurrent(std::slice::from_ref(plan))[0]
+    }
+
+    /// Fallible form of [`Fabric::run_plan`].
+    fn try_run_plan(&self, plan: &Plan) -> Result<f64, FluidError> {
+        Ok(self.try_run_concurrent(std::slice::from_ref(plan))?[0])
     }
 
     /// Effective NPU injection bandwidth achieved for a collective — the

@@ -3,7 +3,8 @@
 //! Subcommands:
 //!
 //! * `sim`          — end-to-end iteration breakdown (Fig. 10 rows)
-//! * `sweep`        — strategy sweep on one fabric (Fig. 2)
+//! * `sweep`        — strategy/topology sweep engine: fabric × wafer ×
+//!   MP/DP/PP factorization × workload, ranked (subsumes Fig. 2)
 //! * `microbench`   — per-phase effective bandwidth (Fig. 9)
 //! * `channel-load` — mesh I/O hotspot analysis (Fig. 4)
 //! * `route`        — FRED switch routing demo (Fig. 7 h/i/j)

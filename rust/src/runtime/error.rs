@@ -1,0 +1,38 @@
+//! Error type for the runtime surface when the `pjrt` feature is off.
+//!
+//! The real engine ([`super::engine`] with `--features pjrt`) reports
+//! through `anyhow`; the offline stub cannot depend on it (the vendored
+//! crate set has none), so the stub API and the stub trainer use this
+//! minimal string-carrying error instead. Both formats render the same
+//! way at the CLI (`{e:#}` just falls back to `Display`).
+
+/// A runtime error with a human-readable message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RuntimeError(String);
+
+impl RuntimeError {
+    /// Wrap a message.
+    pub fn new(msg: impl Into<String>) -> Self {
+        Self(msg.into())
+    }
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_message() {
+        let e = RuntimeError::new("nope");
+        assert_eq!(e.to_string(), "nope");
+        assert_eq!(format!("{e:#}"), "nope");
+    }
+}

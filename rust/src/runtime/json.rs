@@ -1,6 +1,7 @@
-//! Minimal JSON parser for `artifacts/manifest.json` (the vendored crate
-//! set has no `serde`). Supports the full JSON grammar we emit: objects,
-//! arrays, strings (with \\-escapes), numbers, booleans, null.
+//! Minimal JSON codec (the vendored crate set has no `serde`): a parser
+//! for `artifacts/manifest.json` and a writer for machine-readable CLI
+//! output (`fred sweep --json`). Supports the full JSON grammar we emit:
+//! objects, arrays, strings (with \\-escapes), numbers, booleans, null.
 
 use std::collections::BTreeMap;
 
@@ -86,6 +87,80 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Build an object from `(key, value)` pairs (later duplicates win).
+    pub fn obj(entries: Vec<(&str, Json)>) -> Json {
+        Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Serialize to compact JSON text; [`Json::parse`] round-trips it.
+    /// Non-finite numbers (which JSON cannot represent) render as `null`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.render())
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 fn skip_ws(b: &[u8], i: &mut usize) {
@@ -300,6 +375,39 @@ mod tests {
         assert_eq!(j.as_str(), None);
         assert_eq!(j.as_arr(), None);
         assert_eq!(j.as_bool(), None);
+    }
+
+    #[test]
+    fn render_round_trips_through_parse() {
+        let doc = Json::obj(vec![
+            ("name", Json::Str("fred \"sweep\"\n".into())),
+            ("n", Json::Num(20.0)),
+            ("t", Json::Num(1.25e-3)),
+            ("ok", Json::Bool(true)),
+            ("none", Json::Null),
+            (
+                "arr",
+                Json::Arr(vec![Json::Num(1.0), Json::Num(2.5), Json::Str("x".into())]),
+            ),
+        ]);
+        let text = doc.render();
+        let back = Json::parse(&text).expect("rendered JSON parses");
+        assert_eq!(back, doc);
+    }
+
+    #[test]
+    fn render_whole_numbers_without_fraction() {
+        assert_eq!(Json::Num(20.0).render(), "20");
+        assert_eq!(Json::Num(-3.0).render(), "-3");
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+    }
+
+    #[test]
+    fn obj_builder_and_display() {
+        let j = Json::obj(vec![("b", Json::Num(2.0)), ("a", Json::Num(1.0))]);
+        // BTreeMap: keys sorted on render.
+        assert_eq!(j.to_string(), r#"{"a":1,"b":2}"#);
     }
 
     #[test]

@@ -1,14 +1,25 @@
 //! PJRT runtime: the bridge between the AOT-compiled JAX/Pallas artifacts
 //! and the Rust request path.
 //!
-//! * [`json`] — minimal JSON parser (no `serde` offline).
+//! * [`json`] — minimal JSON codec (no `serde` offline): parser + writer.
 //! * [`manifest`] — the `artifacts/manifest.json` argument-order contract.
 //! * [`engine`] — PJRT CPU client, HLO-text loading, executable cache,
-//!   host-tensor ⇄ literal conversion.
+//!   host-tensor ⇄ literal conversion. The real engine needs the vendored
+//!   `xla` bindings and is gated behind the `pjrt` feature; the default
+//!   build uses an API-identical offline stub (`engine_stub.rs`) so the
+//!   rest of the stack compiles and fails gracefully at run time.
+//! * [`error`] — the stub-side error type.
 
-pub mod engine;
+pub mod error;
 pub mod json;
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
+pub mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
+pub mod engine;
+
 pub use engine::{CompiledArtifact, Engine, HostTensor};
+pub use error::RuntimeError;
 pub use manifest::{Manifest, TensorSig};

@@ -1,79 +1,13 @@
 //! The data-parallel training loop (see module docs in `trainer`).
 
 use super::corpus::Corpus;
-use crate::coordinator::config::{self, FabricKind};
+use super::report::{TrainReport, TrainerConfig};
+use crate::coordinator::config;
 use crate::fabric::topology::{CollectiveKind, Fabric};
 use crate::runtime::{CompiledArtifact, Engine, HostTensor};
 use anyhow::{anyhow, Context, Result};
-use std::path::PathBuf;
 use std::rc::Rc;
 use std::time::Instant;
-
-/// Trainer configuration.
-#[derive(Debug, Clone)]
-pub struct TrainerConfig {
-    /// Directory with manifest.json + HLO artifacts.
-    pub artifacts_dir: PathBuf,
-    /// Optimizer steps to run.
-    pub steps: usize,
-    /// Simulated wafer fabric carrying the gradient All-Reduce.
-    pub fabric: FabricKind,
-    /// Corpus seed.
-    pub seed: u64,
-    /// Print the loss every N steps.
-    pub log_every: usize,
-}
-
-/// Result of a training run.
-#[derive(Debug, Clone)]
-pub struct TrainReport {
-    /// (step, mean loss) pairs.
-    pub losses: Vec<(usize, f64)>,
-    /// Simulated wafer time for all comm (s).
-    pub sim_comm_time: f64,
-    /// Simulated wafer compute time (s, from the FLOP model).
-    pub sim_compute_time: f64,
-    /// Real wall-clock spent in PJRT compute (s).
-    pub wall_compute: f64,
-    /// Real wall-clock spent in the flow_reduce reductions (s).
-    pub wall_reduce: f64,
-    /// Tokens processed.
-    pub tokens: usize,
-    /// Fabric name.
-    pub fabric: String,
-    /// DP width.
-    pub dp: usize,
-}
-
-impl TrainReport {
-    /// First and last recorded loss.
-    pub fn first_last(&self) -> (f64, f64) {
-        (
-            self.losses.first().map(|x| x.1).unwrap_or(f64::NAN),
-            self.losses.last().map(|x| x.1).unwrap_or(f64::NAN),
-        )
-    }
-
-    /// Human summary.
-    pub fn print(&self) {
-        let (first, last) = self.first_last();
-        println!("=== train report ({} | dp={}) ===", self.fabric, self.dp);
-        for (s, l) in &self.losses {
-            println!("step {s:>5}  loss {l:.4}");
-        }
-        println!("loss: {first:.4} -> {last:.4}");
-        println!(
-            "tokens {} | wall compute {:.2}s | wall reduce {:.2}s",
-            self.tokens, self.wall_compute, self.wall_reduce
-        );
-        println!(
-            "simulated wafer time: compute {:.3}ms + comm {:.3}ms = {:.3}ms",
-            self.sim_compute_time * 1e3,
-            self.sim_comm_time * 1e3,
-            (self.sim_compute_time + self.sim_comm_time) * 1e3
-        );
-    }
-}
 
 /// The trainer.
 pub struct Trainer {
@@ -268,6 +202,8 @@ impl Trainer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::config::FabricKind;
+    use std::path::PathBuf;
 
     fn artifacts_dir() -> Option<PathBuf> {
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");

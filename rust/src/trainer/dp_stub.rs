@@ -1,0 +1,57 @@
+//! Offline stub of the data-parallel trainer.
+//!
+//! The real trainer (`dp.rs`, `--features pjrt`) executes AOT artifacts
+//! through the PJRT engine; without the vendored `xla` bindings it cannot
+//! exist, so this stub keeps the public surface (`Trainer::new` →
+//! `train`) compiling and reports how to enable the real path. The
+//! simulated-wafer half of the trainer (fabric timing) lives in the
+//! coordinator and stays fully functional — see `fred sweep` / `fred sim`.
+
+use super::report::{TrainReport, TrainerConfig};
+use crate::runtime::{Engine, RuntimeError};
+
+/// The trainer handle. Uninhabited: [`Trainer::new`] never succeeds
+/// without the `pjrt` feature, so the method bodies are unreachable.
+pub enum Trainer {}
+
+impl Trainer {
+    /// Load artifacts and initial parameters. Always fails in the stub
+    /// with an actionable message.
+    pub fn new(cfg: TrainerConfig) -> Result<Trainer, RuntimeError> {
+        let _ = cfg;
+        Err(RuntimeError::new(
+            "PJRT trainer not compiled in: vendor the `xla`/`anyhow` crates and wire up the \
+             `pjrt` feature (see rust/Cargo.toml [features])",
+        ))
+    }
+
+    /// The engine (for examples that want platform info).
+    pub fn engine(&self) -> &Engine {
+        match *self {}
+    }
+
+    /// Run the configured number of steps.
+    pub fn train(&mut self) -> Result<TrainReport, RuntimeError> {
+        match *self {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::FabricKind;
+    use std::path::PathBuf;
+
+    #[test]
+    fn stub_trainer_fails_with_actionable_message() {
+        let cfg = TrainerConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            steps: 1,
+            fabric: FabricKind::FredD,
+            seed: 0,
+            log_every: 1,
+        };
+        let err = Trainer::new(cfg).err().expect("stub must fail");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

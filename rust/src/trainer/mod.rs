@@ -17,9 +17,16 @@
 //! Python never runs here; everything executes from `artifacts/`.
 
 pub mod corpus;
+pub mod report;
+
+#[cfg(feature = "pjrt")]
+pub mod dp;
+#[cfg(not(feature = "pjrt"))]
+#[path = "dp_stub.rs"]
 pub mod dp;
 
-pub use dp::{TrainReport, Trainer, TrainerConfig};
+pub use dp::Trainer;
+pub use report::{TrainReport, TrainerConfig};
 
 use crate::cli::Opts;
 use crate::coordinator::config::FabricKind;

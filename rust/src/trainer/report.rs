@@ -1,0 +1,95 @@
+//! Trainer configuration and result records, shared by the real
+//! PJRT-backed trainer (`dp.rs`, `--features pjrt`) and the offline stub
+//! (`dp_stub.rs`) so the CLI and examples compile identically either way.
+
+use crate::coordinator::config::FabricKind;
+use std::path::PathBuf;
+
+/// Trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    /// Directory with manifest.json + HLO artifacts.
+    pub artifacts_dir: PathBuf,
+    /// Optimizer steps to run.
+    pub steps: usize,
+    /// Simulated wafer fabric carrying the gradient All-Reduce.
+    pub fabric: FabricKind,
+    /// Corpus seed.
+    pub seed: u64,
+    /// Print the loss every N steps.
+    pub log_every: usize,
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// (step, mean loss) pairs.
+    pub losses: Vec<(usize, f64)>,
+    /// Simulated wafer time for all comm (s).
+    pub sim_comm_time: f64,
+    /// Simulated wafer compute time (s, from the FLOP model).
+    pub sim_compute_time: f64,
+    /// Real wall-clock spent in PJRT compute (s).
+    pub wall_compute: f64,
+    /// Real wall-clock spent in the flow_reduce reductions (s).
+    pub wall_reduce: f64,
+    /// Tokens processed.
+    pub tokens: usize,
+    /// Fabric name.
+    pub fabric: String,
+    /// DP width.
+    pub dp: usize,
+}
+
+impl TrainReport {
+    /// First and last recorded loss.
+    pub fn first_last(&self) -> (f64, f64) {
+        (
+            self.losses.first().map(|x| x.1).unwrap_or(f64::NAN),
+            self.losses.last().map(|x| x.1).unwrap_or(f64::NAN),
+        )
+    }
+
+    /// Human summary.
+    pub fn print(&self) {
+        let (first, last) = self.first_last();
+        println!("=== train report ({} | dp={}) ===", self.fabric, self.dp);
+        for (s, l) in &self.losses {
+            println!("step {s:>5}  loss {l:.4}");
+        }
+        println!("loss: {first:.4} -> {last:.4}");
+        println!(
+            "tokens {} | wall compute {:.2}s | wall reduce {:.2}s",
+            self.tokens, self.wall_compute, self.wall_reduce
+        );
+        println!(
+            "simulated wafer time: compute {:.3}ms + comm {:.3}ms = {:.3}ms",
+            self.sim_compute_time * 1e3,
+            self.sim_comm_time * 1e3,
+            (self.sim_compute_time + self.sim_comm_time) * 1e3
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_last_handles_empty_and_filled() {
+        let mut r = TrainReport {
+            losses: Vec::new(),
+            sim_comm_time: 0.0,
+            sim_compute_time: 0.0,
+            wall_compute: 0.0,
+            wall_reduce: 0.0,
+            tokens: 0,
+            fabric: "FRED-D".into(),
+            dp: 4,
+        };
+        let (f, l) = r.first_last();
+        assert!(f.is_nan() && l.is_nan());
+        r.losses = vec![(0, 5.0), (10, 2.0)];
+        assert_eq!(r.first_last(), (5.0, 2.0));
+    }
+}

@@ -1,0 +1,147 @@
+//! Property/invariant tests over the strategy/topology sweep engine:
+//! exact-cover strategy enumeration, run-to-run determinism, and the
+//! trunk-bandwidth monotonicity the Table IV ladder implies (FRED-C/D —
+//! fat trunks — never slower than FRED-A/B on the same point).
+
+use fred::coordinator::config::FabricKind;
+use fred::coordinator::sweep::{factorizations, run_sweep, SweepConfig, SweepReport, WaferDims};
+use fred::coordinator::workload;
+use fred::util::prop::check;
+use std::collections::BTreeMap;
+
+fn small_cfg(fabrics: Vec<FabricKind>, max_strategies: usize) -> SweepConfig {
+    SweepConfig {
+        workloads: vec![workload::resnet152(), workload::transformer_17b()],
+        wafers: vec![WaferDims::PAPER],
+        fabrics,
+        strategies: None,
+        max_strategies,
+        bench_bytes: 100e6,
+    }
+}
+
+#[test]
+fn factorizations_are_exact_covers() {
+    check(
+        "factorizations-cover",
+        0x5EED,
+        64,
+        |rng| rng.range(1, 129),
+        |&n| {
+            let fs = factorizations(n);
+            for s in &fs {
+                if s.workers() != n {
+                    return Err(format!("{s} multiplies to {} not {n}", s.workers()));
+                }
+            }
+            // Every ordered divisor triple appears exactly once.
+            let mut count = 0usize;
+            for mp in 1..=n {
+                if n % mp != 0 {
+                    continue;
+                }
+                let rest = n / mp;
+                for pp in 1..=rest {
+                    if rest % pp == 0 {
+                        count += 1;
+                    }
+                }
+            }
+            if fs.len() != count {
+                return Err(format!("{} strategies, expected {count}", fs.len()));
+            }
+            let mut dedup = fs.clone();
+            dedup.sort_by_key(|s| (s.mp, s.dp, s.pp));
+            dedup.dedup();
+            if dedup.len() != fs.len() {
+                return Err("duplicate strategies".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sweep_is_deterministic_across_runs() {
+    let cfg = small_cfg(vec![FabricKind::FredA, FabricKind::FredD], 6);
+    let sig = |r: &SweepReport| -> Vec<(String, String, String, String)> {
+        r.points
+            .iter()
+            .map(|p| {
+                (
+                    p.workload.clone(),
+                    p.fabric.name().to_string(),
+                    p.strategy.to_string(),
+                    match &p.outcome {
+                        Ok(m) => format!(
+                            "{:e}|{:e}|{:e}",
+                            m.breakdown.total(),
+                            m.per_sample,
+                            m.effective_bw
+                        ),
+                        Err(e) => e.clone(),
+                    },
+                )
+            })
+            .collect()
+    };
+    let a = run_sweep(&cfg);
+    let b = run_sweep(&cfg);
+    assert_eq!(sig(&a), sig(&b), "sweep must be bit-deterministic");
+    assert!(!a.points.is_empty());
+}
+
+#[test]
+fn sweep_is_monotone_in_trunk_bandwidth() {
+    // Table IV pairs at equal collective mode: C vs A (endpoint), D vs B
+    // (in-network) differ only in trunk bandwidth (1.5 -> 12 TBps), so
+    // the fat-trunk side must never be slower on the same point.
+    let cfg = small_cfg(FabricKind::all().to_vec(), 6);
+    let report = run_sweep(&cfg);
+    let mut totals: BTreeMap<(String, String, String), f64> = BTreeMap::new();
+    for p in &report.points {
+        let m = p
+            .outcome
+            .as_ref()
+            .unwrap_or_else(|e| panic!("paper-wafer point infeasible: {e}"));
+        totals.insert(
+            (p.workload.clone(), p.strategy.to_string(), p.fabric.name().to_string()),
+            m.breakdown.total(),
+        );
+    }
+    let mut compared = 0usize;
+    for ((w, s, fabric), &thin) in &totals {
+        let fat_kind = match fabric.as_str() {
+            "FRED-A" => "FRED-C",
+            "FRED-B" => "FRED-D",
+            _ => continue,
+        };
+        let fat = totals[&(w.clone(), s.clone(), fat_kind.to_string())];
+        assert!(
+            fat <= thin * 1.01 + 1e-12,
+            "{w} {s}: {fat_kind} ({fat}) slower than {fabric} ({thin})"
+        );
+        compared += 1;
+    }
+    assert!(compared >= 12, "expected >= 12 matched pairs, got {compared}");
+}
+
+#[test]
+fn infeasible_strategies_are_skipped_not_fatal() {
+    // A strategy needing more workers than the wafer has is filtered out,
+    // not a panic.
+    let cfg = SweepConfig {
+        workloads: vec![workload::resnet152()],
+        wafers: vec![WaferDims::PAPER],
+        fabrics: vec![FabricKind::FredD],
+        strategies: Some(vec![
+            fred::coordinator::parallelism::Strategy::new(1, 64, 1), // > 20 NPUs
+            fred::coordinator::parallelism::Strategy::new(1, 20, 1),
+        ]),
+        max_strategies: 12,
+        bench_bytes: 100e6,
+    };
+    let report = run_sweep(&cfg);
+    assert_eq!(report.points.len(), 1, "oversized strategy skipped");
+    assert!(report.points[0].outcome.is_ok());
+}

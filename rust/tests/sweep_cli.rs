@@ -1,0 +1,118 @@
+//! Integration tests for the `fred sweep` CLI: the machine-readable JSON
+//! contract, the ranking invariant, and the paper's FRED-D > FRED-A
+//! ordering on the 5×4 wafer — all through the real binary.
+
+use fred::runtime::json::Json;
+use std::collections::BTreeMap;
+use std::process::Command;
+
+fn run_sweep_json(args: &[&str]) -> Json {
+    let out = Command::new(env!("CARGO_BIN_EXE_fred"))
+        .arg("sweep")
+        .args(args)
+        .arg("--json")
+        .output()
+        .expect("spawn fred sweep");
+    assert!(
+        out.status.success(),
+        "sweep failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8(out.stdout).expect("utf8 stdout");
+    Json::parse(stdout.trim()).expect("stdout is a single JSON document")
+}
+
+#[test]
+fn sweep_cli_emits_ranked_parseable_json() {
+    let json = run_sweep_json(&[
+        "--models",
+        "resnet152",
+        "--wafers",
+        "5x4",
+        "--fabrics",
+        "fred-a,fred-d",
+        "--max-strategies",
+        "6",
+    ]);
+    let points = json.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), 12, "6 strategies x 2 fabrics");
+    let mut last = 0.0_f64;
+    for p in points {
+        assert_eq!(p.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(p.get("wafer").and_then(Json::as_str), Some("5x4"));
+        assert_eq!(p.get("n_npus").and_then(Json::as_usize), Some(20));
+        let per_sample = p.get("per_sample_s").unwrap().as_f64().unwrap();
+        assert!(per_sample > 0.0);
+        assert!(per_sample >= last, "points must be ranked ascending");
+        last = per_sample;
+        assert!(p.get("total_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(p.get("exposed_comm_s").is_some());
+        assert!(p.get("effective_npu_bw").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    // The paper's ordering: FRED-D never slower, strictly faster on at
+    // least one matched strategy (e.g. the cross-L1 DP(20) point).
+    let mut totals: BTreeMap<(String, String), f64> = BTreeMap::new();
+    for p in points {
+        let strategy = p.get("strategy").unwrap().as_str().unwrap().to_string();
+        let fabric = p.get("fabric").unwrap().as_str().unwrap().to_string();
+        totals.insert((strategy, fabric), p.get("total_s").unwrap().as_f64().unwrap());
+    }
+    let mut strict_wins = 0usize;
+    let mut matched = 0usize;
+    for ((strategy, fabric), &ta) in &totals {
+        if fabric != "FRED-A" {
+            continue;
+        }
+        let td = totals[&(strategy.clone(), "FRED-D".to_string())];
+        matched += 1;
+        assert!(td <= ta * 1.0001, "{strategy}: FRED-D {td} slower than FRED-A {ta}");
+        if td < ta * 0.999 {
+            strict_wins += 1;
+        }
+    }
+    assert_eq!(matched, 6);
+    assert!(strict_wins >= 1, "FRED-D must strictly beat FRED-A somewhere");
+}
+
+#[test]
+fn sweep_cli_scales_beyond_the_paper_wafer() {
+    let json = run_sweep_json(&[
+        "--models",
+        "resnet152",
+        "--wafers",
+        "4x4,8x8",
+        "--fabrics",
+        "fred-d",
+        "--max-strategies",
+        "3",
+    ]);
+    let points = json.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), 6, "3 strategies x 2 wafers");
+    let mut npus: Vec<usize> = points
+        .iter()
+        .map(|p| p.get("n_npus").unwrap().as_usize().unwrap())
+        .collect();
+    npus.sort_unstable();
+    npus.dedup();
+    assert_eq!(npus, vec![16, 64], "both wafer sizes evaluated");
+    for p in points {
+        assert_eq!(p.get("ok").and_then(Json::as_bool), Some(true));
+    }
+}
+
+#[test]
+fn sweep_cli_rejects_bad_input_with_usage_errors() {
+    for args in [
+        vec!["sweep", "--models", "nope"],
+        vec!["sweep", "--wafers", "1x4"],
+        vec!["sweep", "--fabrics", "warp-drive"],
+        vec!["sweep", "--strategies", "0,0,0"],
+    ] {
+        let out = Command::new(env!("CARGO_BIN_EXE_fred"))
+            .args(&args)
+            .output()
+            .expect("spawn fred");
+        assert_eq!(out.status.code(), Some(2), "{args:?} must exit 2");
+    }
+}
