@@ -16,8 +16,21 @@ cargo build --release
 echo "== cargo build --release --benches =="
 cargo build --release --benches
 
+echo "== cargo build --release --examples =="
+cargo build --release --examples
+
 echo "== cargo test -q =="
 cargo test -q
+
+echo "== multi-wafer sweep smoke =="
+# The scale-out path end to end through the real binary: a 4-wafer fleet,
+# JSON to stdout and --out, and the two outputs must agree byte for byte.
+target/release/fred sweep --wafers 4 --models resnet152 --max-strategies 6 \
+    --json --out /tmp/sweep.json > /tmp/sweep.stdout.json
+cmp /tmp/sweep.json /tmp/sweep.stdout.json
+test -s /tmp/sweep.json
+grep -q '"schema_version":2' /tmp/sweep.json
+rm -f /tmp/sweep.json /tmp/sweep.stdout.json
 
 if command -v rustfmt >/dev/null 2>&1; then
     echo "== cargo fmt --check =="

@@ -1,16 +1,22 @@
 //! Strategy/topology co-exploration beyond the paper wafer.
 //!
 //! The paper fixes one 20-NPU wafer and a handful of strategies; the
-//! sweep engine crosses fabric kind × wafer shape × MP/DP/PP
-//! factorization × workload and ranks the result. This example asks the
-//! question the paper could not: does FRED's advantage survive scaling
-//! the wafer to 8×8 = 64 NPUs, and which strategy wins there?
+//! sweep engine crosses fabric kind × wafer shape × fleet size ×
+//! MP/DP/PP factorization × workload and ranks the result. This example
+//! asks two questions the paper could not:
+//!
+//! 1. does FRED's advantage survive scaling the wafer to 8×8 = 64 NPUs,
+//!    and which strategy wins there?
+//! 2. what does a *fleet* of paper wafers buy — 1..16 wafers over an
+//!    off-wafer CXL fabric (DP across wafers, MP/PP within), and how
+//!    sensitive is the win to the cross-wafer egress bandwidth?
 //!
 //! Run: `cargo run --release --example strategy_sweep`
 
 use fred::coordinator::config::FabricKind;
 use fred::coordinator::sweep::{run_sweep, SweepConfig, WaferDims};
 use fred::coordinator::workload;
+use fred::util::units::{fmt_time, GBPS};
 
 fn main() {
     println!("== strategy/topology sweep: Transformer-17B, 5x4 vs 8x8 ==\n");
@@ -21,6 +27,7 @@ fn main() {
         strategies: None,
         max_strategies: 8,
         bench_bytes: 100e6,
+        ..SweepConfig::default()
     };
     let report = run_sweep(&cfg);
     print!("{}", report.render_table(16));
@@ -38,5 +45,36 @@ fn main() {
             slow.name()
         );
     }
-    println!("\nmachine-readable: `fred sweep --models t17b --wafers 5x4,8x8 --json`");
+
+    // ---------------------------------------------- multi-wafer fleets
+    println!("\n== multi-wafer scale-out: GPT-3 on 1..16 paper wafers ==\n");
+    let fleet_cfg = SweepConfig {
+        workloads: vec![workload::gpt3()],
+        wafers: vec![WaferDims::PAPER],
+        wafer_counts: vec![1, 2, 4, 8, 16],
+        // Sweep the egress operating point too: half vs full CXL bonding.
+        xwafer_bws: vec![1152.0 * GBPS, 2304.0 * GBPS],
+        fabrics: vec![FabricKind::FredD],
+        strategies: None,
+        max_strategies: 4,
+        bench_bytes: 100e6,
+        ..SweepConfig::default()
+    };
+    let fleet = run_sweep(&fleet_cfg);
+    print!("{}", fleet.render_table(12));
+    // The scale-out story in one line: best per-sample time per fleet size.
+    for wafers in [1usize, 2, 4, 8, 16] {
+        let best = fleet
+            .points
+            .iter()
+            .filter(|p| p.wafers == wafers)
+            .filter_map(|p| p.outcome.as_ref().ok())
+            .map(|m| m.per_sample)
+            .fold(f64::INFINITY, f64::min);
+        println!("best per-sample @ {wafers:>2} wafer(s): {}", fmt_time(best));
+    }
+    println!(
+        "\nmachine-readable: `fred sweep --models gpt3 --wafers 1,2,4,8,16 \
+         --fabrics fred-d --xwafer-bw 1152,2304 --json --out sweep.json`"
+    );
 }

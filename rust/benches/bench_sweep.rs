@@ -6,6 +6,13 @@
 //! Budget: the default CLI sweep (t17b, 5×4, all fabrics, 12 strategies)
 //! must finish in seconds, and points/s must not regress silently.
 //!
+//! The sweep executor shards points over `std::thread::scope` workers, so
+//! the second section compares a forced single-thread run against the
+//! auto thread count on the same (multi-wafer) cross-product and asserts
+//! the outputs are byte-identical — the determinism contract of
+//! `run_sweep`. (The `FRED_SWEEP_THREADS` env var overrides both sides;
+//! unset it for meaningful speedup numbers.)
+//!
 //! Run: `cargo bench --bench bench_sweep`
 
 use fred::coordinator::config::FabricKind;
@@ -27,6 +34,7 @@ fn cfg(
         strategies: None,
         max_strategies,
         bench_bytes: 100e6,
+        ..SweepConfig::default()
     }
 }
 
@@ -88,4 +96,53 @@ fn main() {
         assert!(feasible > 0, "{name}: no feasible points");
     }
     table.print();
+
+    // ------------------------------------------------ threaded executor
+    println!("\n=== §Perf: threaded sweep executor (multi-wafer cross-product) ===");
+    let mut base = cfg(
+        vec![workload::resnet152(), workload::transformer_17b()],
+        vec![WaferDims::PAPER],
+        FabricKind::all().to_vec(),
+        8,
+    );
+    base.wafer_counts = vec![1, 2, 4, 8];
+
+    let mut seq_cfg = base.clone();
+    seq_cfg.threads = 1;
+    let t0 = Instant::now();
+    let seq = run_sweep(&seq_cfg);
+    let dt_seq = t0.elapsed().as_secs_f64();
+
+    let mut par_cfg = base.clone();
+    par_cfg.threads = 0; // auto: one worker per core
+    let t0 = Instant::now();
+    let par = run_sweep(&par_cfg);
+    let dt_par = t0.elapsed().as_secs_f64();
+
+    let n = seq.points.len();
+    assert_eq!(n, par.points.len());
+    assert_eq!(
+        seq.to_json().render(),
+        par.to_json().render(),
+        "threaded sweep must be byte-identical to the sequential run"
+    );
+
+    let mut t = Table::new(&["executor", "points", "wall", "points/s"]);
+    t.row(&[
+        "1 thread".into(),
+        n.to_string(),
+        format!("{dt_seq:.2} s"),
+        format!("{:.1}", n as f64 / dt_seq),
+    ]);
+    t.row(&[
+        "auto threads".into(),
+        n.to_string(),
+        format!("{dt_par:.2} s"),
+        format!("{:.1}", n as f64 / dt_par),
+    ]);
+    t.print();
+    println!(
+        "speedup: {:.2}x (outputs byte-identical; FRED_SWEEP_THREADS overrides both)",
+        dt_seq / dt_par
+    );
 }

@@ -8,6 +8,7 @@ use crate::coordinator::{
 use crate::fabric::fred::hw_model::HwOverhead;
 use crate::fabric::fred::{route_flows, Flow};
 use crate::fabric::mesh::Mesh2D;
+use crate::fabric::scaleout;
 use crate::fabric::topology::Fabric as _;
 use crate::util::prng::Xorshift64;
 use crate::util::table::Table;
@@ -48,15 +49,33 @@ USAGE: fred <command> [options]
 COMMANDS:
   sim          --workload <resnet152|t17b|gpt3|t1t> [--fabric <baseline|fred-a..d>]
                [--strategy MP(a)-DP(b)-PP(c)] [--iters N]
-  sweep        [--models <m1,m2|all>] [--wafers 5x4,8x8] [--fabrics all|fred-a,fred-d]
+  sweep        [--models <m1,m2|all>] [--wafers 5x4,8x8,2,4] [--fabrics all|fred-a,fred-d]
                [--strategies auto|\"20,1,1;2,5,2\"] [--max-strategies N]
-               [--top N] [--bytes N] [--json]
-               Strategy/topology sweep engine: enumerates fabric x wafer x
-               MP/DP/PP factorization x workload, runs each point end to
-               end, and ranks by per-sample iteration time. Emits a ranked
-               table plus machine-readable JSON (only JSON with --json).
-               Defaults: t17b on the 5x4 paper wafer, all five fabrics,
+               [--xwafer-bw GBPS[,GBPS..]] [--threads N] [--top N]
+               [--bytes N] [--json] [--out FILE]
+               Strategy/topology sweep engine: enumerates fabric x wafer
+               shape x fleet size x MP/DP/PP factorization x workload,
+               runs each point end to end, and ranks by per-sample
+               iteration time. Emits a ranked table plus machine-readable
+               JSON (only JSON with --json; --out FILE writes the same
+               JSON document to FILE). Points are evaluated on --threads
+               workers (default: one per core; FRED_SWEEP_THREADS
+               overrides) with output identical at any thread count.
+               Defaults: t17b on one 5x4 paper wafer, all five fabrics,
                auto strategies (subsumes the paper's Fig. 2 sweep).
+
+               ## Multi-wafer
+               `--wafers` mixes wafer *shapes* (RxC, e.g. 8x8) and fleet
+               *sizes* (bare integers, e.g. 2,4,16). Fleet sizes add a
+               scale-out axis: N identical wafers joined by an off-wafer
+               CXL-style fabric, DP across wafers and MP/PP within, with
+               the gradient All-Reduce priced hierarchically (on-wafer
+               reduce-scatter -> cross-wafer all-reduce -> on-wafer
+               all-gather). `--xwafer-bw` sets the per-wafer egress
+               bandwidth in GB/s (default 2304 = 18 CXL-3 controllers);
+               give several values to sweep the egress operating point.
+               Example: fred sweep --wafers 1,2,4,8,16 --models gpt3
+                        --fabrics fred-d --xwafer-bw 1152,2304 --json
   microbench   [--strategy 2,5,2] [--bytes N]        (Fig. 9 per-phase BW)
   channel-load [--rows 4 --cols 4]                   (Fig. 4 hotspot)
   route        [--m 2|3]                             (Fig. 7 routing demo)
@@ -177,16 +196,58 @@ fn cmd_sweep(opts: &Opts) -> i32 {
         }
         ws
     };
-    // Wafers: --wafers 5x4,8x8 (n_l1 x per_l1; both dims >= 2).
+    // Wafers: --wafers 5x4,8x8,2,4 — RxC items are wafer *shapes*
+    // (n_l1 x per_l1; both dims >= 2), bare integers are fleet *sizes*
+    // (wafer counts for the scale-out axis).
     let mut wafers = Vec::new();
+    let mut wafer_counts = Vec::new();
     for spec in comma_list(opts.get("wafers").unwrap_or("5x4")) {
-        match WaferDims::parse(spec) {
-            Some(wd) => wafers.push(wd),
-            None => {
-                eprintln!("bad wafer `{spec}` (expected RxC with R,C >= 2, e.g. 8x8)");
-                return 2;
+        if spec.contains(|c| c == 'x' || c == 'X') {
+            match WaferDims::parse(spec) {
+                Some(wd) => wafers.push(wd),
+                None => {
+                    eprintln!("bad wafer `{spec}` (expected RxC with R,C >= 2, e.g. 8x8)");
+                    return 2;
+                }
+            }
+        } else {
+            // Bare decimal digits only — `usize::parse` alone would also
+            // accept a leading `+`, which the shape branch rejects.
+            match spec.parse::<usize>() {
+                Ok(n) if n >= 1 && spec.bytes().all(|c| c.is_ascii_digit()) => {
+                    wafer_counts.push(n)
+                }
+                _ => {
+                    eprintln!(
+                        "bad wafer count `{spec}` (expected a fleet size >= 1, or a \
+                         shape RxC, e.g. 8x8)"
+                    );
+                    return 2;
+                }
             }
         }
+    }
+    if wafers.is_empty() {
+        wafers.push(WaferDims::PAPER);
+    }
+    if wafer_counts.is_empty() {
+        wafer_counts.push(1);
+    }
+    // Cross-wafer egress bandwidths, GB/s on the CLI.
+    let mut xwafer_bws = Vec::new();
+    if let Some(list) = opts.get("xwafer-bw") {
+        for t in comma_list(list) {
+            match t.parse::<f64>() {
+                Ok(v) if v > 0.0 && v.is_finite() => xwafer_bws.push(v * GBPS),
+                _ => {
+                    eprintln!("bad --xwafer-bw `{t}` (GB/s, > 0)");
+                    return 2;
+                }
+            }
+        }
+    }
+    if xwafer_bws.is_empty() {
+        xwafer_bws.push(scaleout::DEFAULT_EGRESS_BW);
     }
     // Fabrics: --fabrics all | baseline,fred-a,...
     let fabrics_arg = opts.get("fabrics").or_else(|| opts.get("fabric")).unwrap_or("all");
@@ -228,20 +289,44 @@ fn cmd_sweep(opts: &Opts) -> i32 {
         .unwrap_or(12);
     let top: usize = opts.get("top").and_then(|s| s.parse().ok()).unwrap_or(20);
     let bench_bytes: f64 = opts.get("bytes").and_then(|s| s.parse().ok()).unwrap_or(100e6);
+    let threads: usize = match opts.get("threads") {
+        None => 0,
+        Some(t) => match t.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                eprintln!("bad --threads `{t}` (expected an integer >= 1)");
+                return 2;
+            }
+        },
+    };
     let json_only = opts.has("json");
+    let out_path = opts.get("out");
 
     let cfg = SweepConfig {
         workloads,
         wafers,
+        wafer_counts,
+        xwafer_bws,
         fabrics: fabrics.clone(),
         strategies,
         max_strategies,
         bench_bytes,
+        threads,
     };
     let report = sweep::run_sweep(&cfg);
+    let json_text = report.to_json().render();
+
+    // --out FILE: the same JSON document that --json prints, newline-
+    // terminated so the file is byte-identical to the --json stdout.
+    if let Some(path) = out_path {
+        if let Err(e) = std::fs::write(path, format!("{json_text}\n")) {
+            eprintln!("cannot write --out `{path}`: {e}");
+            return 2;
+        }
+    }
 
     if json_only {
-        println!("{}", report.to_json().render());
+        println!("{json_text}");
         return 0;
     }
     let n_points = report.points.len();
@@ -274,7 +359,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
         }
     }
     println!("\nJSON:");
-    println!("{}", report.to_json().render());
+    println!("{json_text}");
     0
 }
 

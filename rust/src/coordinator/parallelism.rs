@@ -132,6 +132,53 @@ impl Strategy {
     }
 }
 
+/// A strategy with the scale-out wafer dimension: the fleet replicates
+/// the per-wafer MP/DP/PP arrangement `wafers` times, with the wafer
+/// dimension acting as additional data parallelism (DP across wafers,
+/// MP/PP within — the Hecaton-style hierarchical split the off-wafer
+/// bandwidth dictates). A 1-wafer scaled strategy is exactly its local
+/// strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ScaledStrategy {
+    /// Wafer count (the scale-out DP factor), >= 1.
+    pub wafers: usize,
+    /// The per-wafer strategy.
+    pub local: Strategy,
+}
+
+impl ScaledStrategy {
+    /// Build; `wafers` must be >= 1.
+    pub fn new(wafers: usize, local: Strategy) -> Self {
+        assert!(wafers >= 1, "need at least one wafer");
+        Self { wafers, local }
+    }
+
+    /// The single-wafer embedding of a local strategy.
+    pub fn single(local: Strategy) -> Self {
+        Self::new(1, local)
+    }
+
+    /// Workers across the whole fleet: `wafers · mp · dp · pp`.
+    pub fn total_workers(&self) -> usize {
+        self.wafers * self.local.workers()
+    }
+
+    /// Global data-parallel width: wafer DP × on-wafer DP.
+    pub fn global_dp(&self) -> usize {
+        self.wafers * self.local.dp
+    }
+}
+
+impl std::fmt::Display for ScaledStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.wafers == 1 {
+            write!(f, "{}", self.local)
+        } else {
+            write!(f, "{}W x {}", self.wafers, self.local)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,6 +254,24 @@ mod tests {
         let sw = s.stage_workers(1, 0);
         assert_eq!(sw.len(), 3);
         assert!(s.mp_groups().contains(&sw));
+    }
+
+    #[test]
+    fn scaled_strategy_totals_and_display() {
+        let local = Strategy::new(4, 5, 1);
+        let s = ScaledStrategy::new(4, local);
+        assert_eq!(s.total_workers(), 80, "4 wafers x 20 NPUs");
+        assert_eq!(s.global_dp(), 20, "wafer DP multiplies on-wafer DP");
+        assert_eq!(s.to_string(), "4W x MP(4)-DP(5)-PP(1)");
+        let one = ScaledStrategy::single(local);
+        assert_eq!(one.to_string(), local.to_string(), "1-wafer displays as local");
+        assert_eq!(one.total_workers(), local.workers());
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one wafer")]
+    fn scaled_strategy_rejects_zero_wafers() {
+        let _ = ScaledStrategy::new(0, Strategy::new(1, 20, 1));
     }
 
     #[test]

@@ -29,6 +29,7 @@ use super::schedule;
 use super::workload::{ExecMode, Workload};
 use crate::fabric::fluid::FluidError;
 use crate::fabric::mesh::Mesh2D;
+use crate::fabric::scaleout::ScaleOut;
 use crate::fabric::topology::{CollectiveKind, Fabric, IoDirection, Plan};
 
 /// A workload+strategy+fabric simulation context.
@@ -40,6 +41,9 @@ pub struct Simulator {
     workload: Workload,
     strategy: Strategy,
     placement: Placement,
+    /// Multi-wafer scale-out context (DP across wafers); the default
+    /// single-wafer wrapper prices identically to the bare fabric.
+    scaleout: ScaleOut,
 }
 
 impl Simulator {
@@ -70,7 +74,15 @@ impl Simulator {
             n_npus
         );
         let placement = Placement::paper_default(&strategy, mesh.as_ref(), n_npus);
-        Self { kind, fabric, mesh, workload, strategy, placement }
+        Self {
+            kind,
+            fabric,
+            mesh,
+            workload,
+            strategy,
+            placement,
+            scaleout: ScaleOut::single(),
+        }
     }
 
     /// Override the placement (placement-exploration example).
@@ -79,6 +91,26 @@ impl Simulator {
         assert_eq!(placement.len(), self.strategy.workers());
         self.placement = placement;
         self
+    }
+
+    /// Scale the simulation out to a multi-wafer fleet: the wafer
+    /// replicates `wafers` times with DP across wafers; cross-wafer
+    /// gradient reduction is priced hierarchically over the scale-out
+    /// fabric. A 1-wafer [`ScaleOut`] leaves every path untouched.
+    pub fn with_scaleout(mut self, scaleout: ScaleOut) -> Self {
+        self.scaleout = scaleout;
+        self
+    }
+
+    /// The scale-out context.
+    pub fn scaleout(&self) -> ScaleOut {
+        self.scaleout
+    }
+
+    /// Samples per iteration across the whole fleet (minibatch scales
+    /// with the *global* DP width: on-wafer DP × wafers).
+    pub fn global_minibatch(&self) -> usize {
+        self.workload.minibatch(&self.strategy) * self.scaleout.wafers
     }
 
     /// The fabric kind.
@@ -148,6 +180,27 @@ impl Simulator {
     /// Fallible form of [`Self::dp_round`].
     pub fn try_dp_round(&self, bytes: f64) -> Result<f64, FluidError> {
         self.try_phase_time(&self.strategy.dp_groups(), CollectiveKind::AllReduce, bytes)
+    }
+
+    /// One hierarchical DP All-Reduce round across the fleet: on-wafer
+    /// reduce-scatter, cross-wafer all-reduce on each wafer's distinct
+    /// reduced shards (one bucket per DP group), on-wafer all-gather. On
+    /// a single wafer this is exactly [`Self::try_dp_round`].
+    pub fn try_hier_dp_round(&self, bytes: f64) -> Result<f64, FluidError> {
+        if self.scaleout.is_single() {
+            return self.try_dp_round(bytes);
+        }
+        if bytes <= 0.0 {
+            return Ok(0.0);
+        }
+        let groups: Vec<Vec<usize>> = self
+            .strategy
+            .dp_groups()
+            .iter()
+            .map(|g| self.placement.map(g))
+            .collect();
+        self.scaleout
+            .hierarchical_allreduce(self.fabric.as_ref(), &groups, bytes)
     }
 
     /// One concurrent PP boundary transfer (multicast from one member of
@@ -271,11 +324,11 @@ impl Simulator {
         // DP gradient All-Reduce, bucketed. Exposed fully (the paper's
         // Fig. 10 semantics) unless `overlap_dp` enables the bucketed
         // overlap recurrence against backward compute.
-        if s.dp > 1 {
+        if s.dp > 1 || !self.scaleout.is_single() {
             let shard = w.params_bytes() / s.mp as f64 / s.pp as f64;
             let nb = w.dp_buckets.max(1);
             let bucket_bytes = shard / nb as f64;
-            let per_bucket = self.try_dp_round(bucket_bytes)?;
+            let per_bucket = self.try_hier_dp_round(bucket_bytes)?;
             let exposed = if w.overlap_dp {
                 let bwd_compute = compute * 2.0 / 3.0;
                 schedule::exposed_dp_time(bwd_compute, &vec![per_bucket; nb])
@@ -393,8 +446,22 @@ impl Simulator {
         out.add(CommType::Pp, pp_total);
         out.add(CommType::Stream, stream_exposed);
 
+        // Cross-wafer gradient reduction: on-wafer DP folds into the
+        // gradient stream-out above, but with DP across wafers each
+        // wafer's reduced gradients (the full model, whatever the
+        // on-wafer MP sharding) must also be all-reduced over the
+        // off-wafer fabric before the optimizer step.
+        if !self.scaleout.is_single() {
+            out.add(
+                CommType::Dp,
+                self.scaleout.cross_allreduce_time(w.params_bytes()),
+            );
+        }
+
         // Input load: I/O is saturated all iteration, so the minibatch
         // load cannot be prefetched (the paper's Transformer-1T note).
+        // Each wafer loads its own DP replicas' samples, so the per-wafer
+        // load is scale-out invariant.
         let input_bytes = w.input_bytes * w.minibatch(s) as f64;
         out.add(CommType::InputLoad, io_in_time(input_bytes)?);
         Ok(out)
@@ -585,5 +652,64 @@ mod tests {
         let a = sim(FabricKind::FredC, workload::gpt3()).iterate();
         let b = sim(FabricKind::FredC, workload::gpt3()).iterate();
         assert_eq!(a.total(), b.total());
+    }
+
+    #[test]
+    fn single_wafer_scaleout_is_the_identity() {
+        use crate::fabric::scaleout::ScaleOut;
+        for w in [workload::resnet152(), workload::transformer_17b(), workload::transformer_1t()]
+        {
+            let bare = sim(FabricKind::FredD, w.clone()).iterate();
+            let wrapped = sim(FabricKind::FredD, w.clone())
+                .with_scaleout(ScaleOut::single())
+                .iterate();
+            assert_eq!(bare.total(), wrapped.total(), "{}", w.name);
+            assert_eq!(bare.exposed, wrapped.exposed, "{}", w.name);
+        }
+    }
+
+    #[test]
+    fn multi_wafer_adds_dp_exposure_and_scales_minibatch() {
+        use crate::fabric::scaleout::ScaleOut;
+        let w = workload::resnet152();
+        let one = sim(FabricKind::FredD, w.clone());
+        let four = sim(FabricKind::FredD, w.clone()).with_scaleout(ScaleOut::with_wafers(4));
+        assert_eq!(four.global_minibatch(), 4 * one.global_minibatch());
+        let b1 = one.iterate();
+        let b4 = four.iterate();
+        assert!(b4.get(CommType::Dp) > b1.get(CommType::Dp), "cross-wafer DP costs more");
+        assert_eq!(b1.compute, b4.compute, "compute is per-wafer, DP replicates it");
+        // Per-sample the fleet still wins: 4x the samples for a sub-4x
+        // iteration-time increase.
+        let ps1 = b1.total() / one.global_minibatch() as f64;
+        let ps4 = b4.total() / four.global_minibatch() as f64;
+        assert!(ps4 < ps1, "scale-out must improve throughput per sample");
+    }
+
+    #[test]
+    fn streaming_workload_pays_cross_wafer_gradient_reduction() {
+        use crate::fabric::scaleout::ScaleOut;
+        let w = workload::transformer_1t();
+        let b1 = sim(FabricKind::FredD, w.clone()).iterate();
+        assert_eq!(b1.get(CommType::Dp), 0.0, "single wafer folds DP into stream-out");
+        let b2 = sim(FabricKind::FredD, w.clone())
+            .with_scaleout(ScaleOut::with_wafers(2))
+            .iterate();
+        assert!(b2.get(CommType::Dp) > 0.0, "fleet exposes the off-wafer all-reduce");
+    }
+
+    #[test]
+    fn hier_dp_round_is_monotone_in_egress_bw() {
+        use crate::fabric::scaleout::{ScaleOut, DEFAULT_XWAFER_LATENCY};
+        let w = workload::transformer_17b();
+        let s = Strategy::new(2, 5, 2);
+        let mut last = f64::INFINITY;
+        for bw in [0.5e12, 1e12, 4e12, 16e12] {
+            let sim = Simulator::new(FabricKind::FredD, w.clone(), s)
+                .with_scaleout(ScaleOut::new(4, bw, DEFAULT_XWAFER_LATENCY));
+            let t = sim.try_hier_dp_round(100e6).expect("feasible");
+            assert!(t <= last, "hier DP round must not slow down with more egress BW");
+            last = t;
+        }
     }
 }

@@ -9,6 +9,9 @@
 //! * **wafer shapes** — `n_l1 × per_l1` (mesh rows × cols; FRED L1 groups
 //!   × NPUs per group), scaled via [`FabricKind::build_sized`] with
 //!   validated trunk/μSwitch sizing,
+//! * **fleet sizes** — 1..N wafers over the off-wafer scale-out fabric
+//!   ([`ScaleOut`]: DP across wafers, MP/PP within), optionally crossed
+//!   with several cross-wafer egress bandwidths,
 //! * **parallelization strategies** — every `MP·DP·PP` factorization of
 //!   the wafer's NPU count (capped, deterministically, by
 //!   [`SweepConfig::max_strategies`]),
@@ -16,28 +19,47 @@
 //!
 //! runs each point through [`Simulator::try_iterate`], and ranks the
 //! feasible points by **per-sample iteration time** (the throughput view
-//! of Fig. 2 — minibatch scales with DP, so ranking raw iteration time
-//! would reward small-DP points). Each point also records the Fig. 9
-//! effective-NPU-bandwidth metric for its dominant comm phase. Infeasible
-//! points (fluid deadlocks on degenerate shapes) degrade to typed errors
-//! and rank last instead of aborting the sweep.
+//! of Fig. 2 — minibatch scales with *global* DP, so ranking raw
+//! iteration time would reward small-DP points). Each point also records
+//! the Fig. 9 effective-NPU-bandwidth metric for its dominant comm phase.
+//! Infeasible points (fluid deadlocks on degenerate shapes) degrade to
+//! typed errors and rank last instead of aborting the sweep.
+//!
+//! Point evaluation is embarrassingly parallel, so [`run_sweep`] shards
+//! the cross-product over `std::thread::scope` workers (std only — no
+//! rayon offline). Each point is a pure function of its spec, points are
+//! reassembled in spec order before ranking, and the rank comparator has
+//! a total tie-break — so the output is **byte-identical for every
+//! thread count** (`--threads 1` / `FRED_SWEEP_THREADS=1` force the
+//! sequential path; property-tested in `tests/prop_sweep.rs` and through
+//! the binary in `tests/sweep_cli.rs`).
 //!
 //! Output is a ranked [`Table`](crate::util::table::Table) and a
-//! machine-readable [`Json`] document (`fred sweep --json`); determinism
-//! and the trunk-bandwidth monotonicity invariant (FRED-C/D never slower
-//! than A/B on the same point) are property-tested in
-//! `tests/prop_sweep.rs`.
+//! machine-readable [`Json`] document (`fred sweep --json`, versioned by
+//! [`SCHEMA_VERSION`]); determinism, the trunk-bandwidth monotonicity
+//! invariant (FRED-C/D never slower than A/B on the same point), and the
+//! scale-out invariants live in `tests/prop_sweep.rs` and
+//! `tests/prop_scaleout.rs`.
 
 use super::config::FabricKind;
 use super::metrics::{Breakdown, CommType};
-use super::parallelism::Strategy;
+use super::parallelism::{ScaledStrategy, Strategy};
 use super::sim::Simulator;
 use super::workload::Workload;
 use crate::fabric::mesh::Mesh2D;
+use crate::fabric::scaleout::{ScaleOut, DEFAULT_EGRESS_BW, DEFAULT_XWAFER_LATENCY};
 use crate::fabric::topology::Fabric;
 use crate::runtime::json::Json;
 use crate::util::table::Table;
 use crate::util::units::{fmt_bw, fmt_time};
+use std::collections::HashMap;
+
+/// Version of the `fred sweep --json` document contract. Bump on any
+/// breaking change to field names or semantics (golden-file test:
+/// `tests/sweep_cli.rs`). v2 added `schema_version` itself plus the
+/// scale-out fields (`wafers`, `xwafer_bw`, `total_npus`, `global_dp`,
+/// `scaled_strategy`).
+pub const SCHEMA_VERSION: f64 = 2.0;
 
 /// A wafer shape: `n_l1` rows / L1 groups × `per_l1` columns / NPUs per
 /// group.
@@ -58,12 +80,21 @@ impl WaferDims {
         self.n_l1 * self.per_l1
     }
 
-    /// Parse `"5x4"` / `"8X8"`. Both dimensions must be >= 2 (the mesh
-    /// construction needs a 2D wafer).
+    /// Parse `"5x4"` / `"8X8"`. Each side must be a bare decimal number
+    /// (no signs — `usize::parse` would accept a leading `+`), and both
+    /// dimensions must be >= 2: zero/one-wide wafers are degenerate (the
+    /// mesh construction needs a 2D wafer).
     pub fn parse(s: &str) -> Option<Self> {
         let (a, b) = s.split_once(|c| c == 'x' || c == 'X')?;
-        let n_l1: usize = a.trim().parse().ok()?;
-        let per_l1: usize = b.trim().parse().ok()?;
+        let dim = |t: &str| -> Option<usize> {
+            let t = t.trim();
+            if t.is_empty() || !t.bytes().all(|c| c.is_ascii_digit()) {
+                return None;
+            }
+            t.parse().ok()
+        };
+        let n_l1 = dim(a)?;
+        let per_l1 = dim(b)?;
         (n_l1 >= 2 && per_l1 >= 2).then_some(Self { n_l1, per_l1 })
     }
 }
@@ -95,6 +126,23 @@ pub fn factorizations(n_npus: usize) -> Vec<Strategy> {
     out
 }
 
+/// Pair a local strategy list with a fleet size. This is the shared core
+/// of [`scaleout_factorizations`] *and* of [`run_sweep`]'s cross-product
+/// enumeration, so the engine's strategy space and the property-tested
+/// public API cannot drift apart.
+fn scale_strategies(wafers: usize, locals: &[Strategy]) -> Vec<ScaledStrategy> {
+    locals.iter().map(|&s| ScaledStrategy::new(wafers, s)).collect()
+}
+
+/// The wafer-dimensioned strategy space of a fleet: every `MP·DP·PP`
+/// factorization of the per-wafer NPU count, each replicated `wafers`
+/// times with DP across wafers — so `wafers · mp · dp · pp` exactly
+/// covers the fleet's total NPU count (property-tested in
+/// `tests/prop_scaleout.rs`).
+pub fn scaleout_factorizations(wafers: usize, npus_per_wafer: usize) -> Vec<ScaledStrategy> {
+    scale_strategies(wafers, &factorizations(npus_per_wafer))
+}
+
 /// What to sweep.
 #[derive(Debug, Clone)]
 pub struct SweepConfig {
@@ -102,6 +150,14 @@ pub struct SweepConfig {
     pub workloads: Vec<Workload>,
     /// Wafer shapes.
     pub wafers: Vec<WaferDims>,
+    /// Fleet sizes: wafer counts for the scale-out axis (1 = the bare
+    /// single-wafer fabric, priced identically to no scale-out at all).
+    pub wafer_counts: Vec<usize>,
+    /// Per-wafer cross-wafer egress bandwidths (bytes/s) to sweep. An
+    /// empty list falls back to [`DEFAULT_EGRESS_BW`]. Single-wafer
+    /// fleets never use egress bandwidth, so they are evaluated once (at
+    /// the first listed value) rather than duplicated per bandwidth.
+    pub xwafer_bws: Vec<f64>,
     /// Fabric kinds.
     pub fabrics: Vec<FabricKind>,
     /// Explicit strategies, or `None` to enumerate all factorizations of
@@ -113,6 +169,10 @@ pub struct SweepConfig {
     pub max_strategies: usize,
     /// Per-worker payload for the effective-bandwidth microbenchmark.
     pub bench_bytes: f64,
+    /// Worker threads for point evaluation; 0 = auto (one per available
+    /// core). The `FRED_SWEEP_THREADS` environment variable overrides
+    /// either setting (see [`resolve_threads`]).
+    pub threads: usize,
 }
 
 impl Default for SweepConfig {
@@ -120,12 +180,34 @@ impl Default for SweepConfig {
         Self {
             workloads: Workload::all(),
             wafers: vec![WaferDims::PAPER],
+            wafer_counts: vec![1],
+            xwafer_bws: vec![DEFAULT_EGRESS_BW],
             fabrics: FabricKind::all().to_vec(),
             strategies: None,
             max_strategies: 12,
             bench_bytes: 100e6,
+            threads: 0,
         }
     }
+}
+
+/// Effective worker-thread count for a sweep: the `FRED_SWEEP_THREADS`
+/// environment variable (when set to a positive integer) overrides
+/// everything, then an explicit `requested >= 1`, then one thread per
+/// available core. Thread count never changes sweep *output* — only
+/// wall-clock time.
+pub fn resolve_threads(requested: usize) -> usize {
+    if let Ok(v) = std::env::var("FRED_SWEEP_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    if requested >= 1 {
+        return requested;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 /// Metrics of one feasible sweep point.
@@ -133,8 +215,8 @@ impl Default for SweepConfig {
 pub struct SweepMetrics {
     /// Full iteration breakdown.
     pub breakdown: Breakdown,
-    /// Iteration time divided by the strategy's minibatch — the ranking
-    /// key (throughput view).
+    /// Iteration time divided by the fleet's global minibatch — the
+    /// ranking key (throughput view).
     pub per_sample: f64,
     /// Best per-phase effective NPU bandwidth (Fig. 9 metric), bytes/s.
     pub effective_bw: f64,
@@ -147,12 +229,23 @@ pub struct SweepPoint {
     pub workload: String,
     /// Wafer shape.
     pub wafer: WaferDims,
+    /// Fleet size (wafer count; 1 = single wafer).
+    pub wafers: usize,
+    /// Cross-wafer egress bandwidth (bytes/s) this point was priced at.
+    pub xwafer_bw: f64,
     /// Fabric kind.
     pub fabric: FabricKind,
-    /// Strategy.
+    /// Per-wafer strategy (the wafer dimension is `wafers`).
     pub strategy: Strategy,
     /// Metrics, or the typed-error string for infeasible points.
     pub outcome: Result<SweepMetrics, String>,
+}
+
+impl SweepPoint {
+    /// The full wafer-dimensioned strategy of this point.
+    pub fn scaled_strategy(&self) -> ScaledStrategy {
+        ScaledStrategy::new(self.wafers, self.strategy)
+    }
 }
 
 /// A completed sweep: points ranked fastest-per-sample first (infeasible
@@ -165,39 +258,79 @@ pub struct SweepReport {
     pub truncated_strategies: usize,
 }
 
-/// Evaluate one point of the cross-product. `fabric`/`mesh` are clones
-/// of the per-(kind, wafer) prototypes built once in [`run_sweep`].
-fn run_point(
+/// One point of the cross-product, by value (cheap `Copy` data only —
+/// the spec list is shared read-only across sweep worker threads).
+#[derive(Debug, Clone, Copy)]
+struct PointSpec {
     kind: FabricKind,
     wafer: WaferDims,
-    fabric: Box<dyn Fabric>,
-    mesh: Option<Mesh2D>,
-    workload: &Workload,
+    wafers: usize,
+    xwafer_bw: f64,
+    workload_idx: usize,
     strategy: Strategy,
-    bench_bytes: f64,
-) -> SweepPoint {
-    let sim = Simulator::with_fabric(kind, fabric, mesh, workload.clone(), strategy);
+}
+
+/// Per-thread prototype cache: fabrics are immutable link-graph models,
+/// so each worker derives one per (kind, shape) it encounters and clones
+/// it per point (cheaper than re-deriving the link graph per point).
+type ProtoCache = HashMap<(FabricKind, WaferDims), (Box<dyn Fabric>, Option<Mesh2D>)>;
+
+/// Evaluate one point of the cross-product.
+fn eval_point(cfg: &SweepConfig, spec: &PointSpec, cache: &mut ProtoCache) -> SweepPoint {
+    let (proto, mesh_proto) = cache.entry((spec.kind, spec.wafer)).or_insert_with(|| {
+        (
+            spec.kind.build_sized(spec.wafer.n_l1, spec.wafer.per_l1),
+            spec.kind
+                .is_mesh()
+                .then(|| Mesh2D::with_dims(spec.wafer.n_l1, spec.wafer.per_l1)),
+        )
+    });
+    let workload = &cfg.workloads[spec.workload_idx];
+    let scale = ScaleOut::new(spec.wafers, spec.xwafer_bw, DEFAULT_XWAFER_LATENCY);
+    let sim = Simulator::with_fabric(
+        spec.kind,
+        proto.clone_box(),
+        mesh_proto.clone(),
+        workload.clone(),
+        spec.strategy,
+    )
+    .with_scaleout(scale);
     let outcome = match sim.try_iterate() {
         Ok(breakdown) => {
-            let per_sample =
-                breakdown.total() / workload.minibatch(&strategy).max(1) as f64;
+            let per_sample = breakdown.total() / sim.global_minibatch().max(1) as f64;
             let effective_bw = sim
-                .try_microbench(bench_bytes)
+                .try_microbench(cfg.bench_bytes)
                 .map(|phases| phases.iter().flatten().copied().fold(0.0, f64::max))
                 .unwrap_or(0.0);
             Ok(SweepMetrics { breakdown, per_sample, effective_bw })
         }
         Err(e) => Err(e.to_string()),
     };
-    SweepPoint { workload: workload.name.clone(), wafer, fabric, strategy, outcome }
+    SweepPoint {
+        workload: workload.name.clone(),
+        wafer: spec.wafer,
+        wafers: spec.wafers,
+        xwafer_bw: spec.xwafer_bw,
+        fabric: spec.kind,
+        strategy: spec.strategy,
+        outcome,
+    }
 }
 
-/// Run the whole cross-product and rank the results.
+/// Run the whole cross-product and rank the results. Points are
+/// evaluated on [`resolve_threads`] worker threads; the output is
+/// identical for every thread count.
 pub fn run_sweep(cfg: &SweepConfig) -> SweepReport {
-    let mut points = Vec::new();
+    // Enumerate the cross-product deterministically.
+    let xwafer_bws: Vec<f64> = if cfg.xwafer_bws.is_empty() {
+        vec![DEFAULT_EGRESS_BW]
+    } else {
+        cfg.xwafer_bws.clone()
+    };
+    let mut specs: Vec<PointSpec> = Vec::new();
     let mut truncated = 0usize;
     for &wafer in &cfg.wafers {
-        let strategies: Vec<Strategy> = match &cfg.strategies {
+        let locals: Vec<Strategy> = match &cfg.strategies {
             Some(list) => list
                 .iter()
                 .copied()
@@ -212,29 +345,56 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepReport {
                 all
             }
         };
-        for &kind in &cfg.fabrics {
-            // One prototype per (kind, wafer); points clone it (cheaper
-            // than re-deriving the link graph workloads × strategies
-            // times).
-            let proto = kind.build_sized(wafer.n_l1, wafer.per_l1);
-            let mesh_proto = kind
-                .is_mesh()
-                .then(|| Mesh2D::with_dims(wafer.n_l1, wafer.per_l1));
-            for workload in &cfg.workloads {
-                for &strategy in &strategies {
-                    points.push(run_point(
-                        kind,
-                        wafer,
-                        proto.clone_box(),
-                        mesh_proto.clone(),
-                        workload,
-                        strategy,
-                        cfg.bench_bytes,
-                    ));
+        for &wafers in &cfg.wafer_counts {
+            // A single-wafer fleet never touches the egress fabric:
+            // evaluate it once instead of once per bandwidth.
+            let bws = if wafers == 1 { &xwafer_bws[..1] } else { &xwafer_bws[..] };
+            for &xwafer_bw in bws {
+                for &kind in &cfg.fabrics {
+                    for workload_idx in 0..cfg.workloads.len() {
+                        for scaled in scale_strategies(wafers, &locals) {
+                            specs.push(PointSpec {
+                                kind,
+                                wafer,
+                                wafers: scaled.wafers,
+                                xwafer_bw,
+                                workload_idx,
+                                strategy: scaled.local,
+                            });
+                        }
+                    }
                 }
             }
         }
     }
+
+    // Shard over scoped threads; chunks preserve spec order on
+    // reassembly, so threading cannot perturb the result.
+    let threads = resolve_threads(cfg.threads).min(specs.len().max(1));
+    let chunk = specs.len().div_ceil(threads).max(1);
+    let mut points: Vec<SweepPoint> = if threads <= 1 {
+        let mut cache = ProtoCache::new();
+        specs.iter().map(|s| eval_point(cfg, s, &mut cache)).collect()
+    } else {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = specs
+                .chunks(chunk)
+                .map(|shard| {
+                    scope.spawn(move || {
+                        let mut cache = ProtoCache::new();
+                        shard
+                            .iter()
+                            .map(|s| eval_point(cfg, s, &mut cache))
+                            .collect::<Vec<SweepPoint>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("sweep worker panicked"))
+                .collect()
+        })
+    };
     rank(&mut points);
     SweepReport { points, truncated_strategies: truncated }
 }
@@ -253,22 +413,29 @@ fn rank(points: &mut [SweepPoint]) {
             .then(ta.total_cmp(&tb))
             .then_with(|| a.workload.cmp(&b.workload))
             .then_with(|| a.wafer.cmp(&b.wafer))
+            .then_with(|| a.wafers.cmp(&b.wafers))
+            .then_with(|| a.xwafer_bw.total_cmp(&b.xwafer_bw))
             .then_with(|| a.fabric.name().cmp(b.fabric.name()))
             .then_with(|| a.strategy.to_string().cmp(&b.strategy.to_string()))
     });
 }
 
 impl SweepReport {
-    /// Count, over matched (workload, wafer, strategy) points present for
-    /// both kinds, how often `faster` strictly beats and never loses to
-    /// `slower` — the Fig. 9/10 ordering checks (e.g. FRED-D vs FRED-A).
-    /// Returns `(strict_wins, comparisons)`.
+    /// Count, over matched (workload, wafer, fleet, strategy) points
+    /// present for both kinds, how often `faster` strictly beats and
+    /// never loses to `slower` — the Fig. 9/10 ordering checks (e.g.
+    /// FRED-D vs FRED-A). Returns `(strict_wins, comparisons)`.
     pub fn count_orderings(&self, faster: FabricKind, slower: FabricKind) -> (usize, usize) {
-        let mut fast: std::collections::HashMap<(&str, WaferDims, Strategy), f64> =
-            std::collections::HashMap::new();
+        // f64 is not Hash; the bandwidth's bit pattern is (bandwidths come
+        // from a finite config list, so bitwise equality is the right
+        // match).
+        let mut fast: HashMap<(&str, WaferDims, usize, u64, Strategy), f64> = HashMap::new();
         for q in self.points.iter().filter(|q| q.fabric == faster) {
             if let Ok(m) = &q.outcome {
-                fast.insert((q.workload.as_str(), q.wafer, q.strategy), m.breakdown.total());
+                fast.insert(
+                    (q.workload.as_str(), q.wafer, q.wafers, q.xwafer_bw.to_bits(), q.strategy),
+                    m.breakdown.total(),
+                );
             }
         }
         let mut wins = 0usize;
@@ -276,7 +443,13 @@ impl SweepReport {
         for p in self.points.iter().filter(|p| p.fabric == slower) {
             let Ok(m) = &p.outcome else { continue };
             let ts = m.breakdown.total();
-            let Some(&tf) = fast.get(&(p.workload.as_str(), p.wafer, p.strategy)) else {
+            let Some(&tf) = fast.get(&(
+                p.workload.as_str(),
+                p.wafer,
+                p.wafers,
+                p.xwafer_bw.to_bits(),
+                p.strategy,
+            )) else {
                 continue;
             };
             comparisons += 1;
@@ -290,15 +463,21 @@ impl SweepReport {
     /// Render the top `top` points as a fixed-width table.
     pub fn render_table(&self, top: usize) -> String {
         let mut t = Table::new(&[
-            "rank", "workload", "wafer", "fabric", "strategy", "iter", "per-sample",
-            "eff BW", "status",
+            "rank", "workload", "wafer", "fleet", "fabric", "strategy", "iter",
+            "per-sample", "eff BW", "status",
         ]);
         for (i, p) in self.points.iter().take(top).enumerate() {
+            let fleet = if p.wafers == 1 {
+                "1".to_string()
+            } else {
+                format!("{} @ {}", p.wafers, fmt_bw(p.xwafer_bw))
+            };
             match &p.outcome {
                 Ok(m) => t.row(&[
                     format!("{}", i + 1),
                     p.workload.clone(),
                     p.wafer.to_string(),
+                    fleet,
                     p.fabric.name().to_string(),
                     p.strategy.to_string(),
                     fmt_time(m.breakdown.total()),
@@ -310,6 +489,7 @@ impl SweepReport {
                     format!("{}", i + 1),
                     p.workload.clone(),
                     p.wafer.to_string(),
+                    fleet,
                     p.fabric.name().to_string(),
                     p.strategy.to_string(),
                     "-".into(),
@@ -323,7 +503,8 @@ impl SweepReport {
     }
 
     /// Machine-readable form (`fred sweep --json`): ranked points with
-    /// the full exposed-comm breakdown per point.
+    /// the full exposed-comm breakdown per point, under the
+    /// [`SCHEMA_VERSION`] contract.
     pub fn to_json(&self) -> Json {
         let points: Vec<Json> = self
             .points
@@ -333,11 +514,25 @@ impl SweepReport {
                     ("workload", Json::Str(p.workload.clone())),
                     ("wafer", Json::Str(p.wafer.to_string())),
                     ("n_npus", Json::Num(p.wafer.npus() as f64)),
+                    ("wafers", Json::Num(p.wafers as f64)),
+                    ("xwafer_bw", Json::Num(p.xwafer_bw)),
+                    (
+                        "total_npus",
+                        Json::Num((p.wafer.npus() * p.wafers) as f64),
+                    ),
                     ("fabric", Json::Str(p.fabric.name().to_string())),
                     ("strategy", Json::Str(p.strategy.to_string())),
+                    (
+                        "scaled_strategy",
+                        Json::Str(p.scaled_strategy().to_string()),
+                    ),
                     ("mp", Json::Num(p.strategy.mp as f64)),
                     ("dp", Json::Num(p.strategy.dp as f64)),
                     ("pp", Json::Num(p.strategy.pp as f64)),
+                    (
+                        "global_dp",
+                        Json::Num(p.scaled_strategy().global_dp() as f64),
+                    ),
                     ("ok", Json::Bool(p.outcome.is_ok())),
                 ];
                 match &p.outcome {
@@ -358,6 +553,7 @@ impl SweepReport {
             })
             .collect();
         Json::obj(vec![
+            ("schema_version", Json::Num(SCHEMA_VERSION)),
             ("points", Json::Arr(points)),
             (
                 "truncated_strategies",
@@ -378,8 +574,8 @@ mod tests {
             wafers: vec![WaferDims::PAPER],
             fabrics: vec![FabricKind::FredA, FabricKind::FredD],
             strategies: Some(vec![Strategy::new(1, 20, 1), Strategy::new(4, 5, 1)]),
-            max_strategies: 12,
-            bench_bytes: 100e6,
+            threads: 1,
+            ..SweepConfig::default()
         }
     }
 
@@ -395,6 +591,22 @@ mod tests {
     }
 
     #[test]
+    fn wafer_dims_parse_rejects_zero_and_malformed_dims() {
+        // Zero/one dims are degenerate wafers, not shapes ("01" is the
+        // value 1, so it is rejected too).
+        for bad in ["0x4", "4x0", "0x0", "1x1", "01x4"] {
+            assert_eq!(WaferDims::parse(bad), None, "{bad} must be rejected");
+        }
+        // Leading zeros on a value >= 2 are still a valid number.
+        assert_eq!(WaferDims::parse("05x04"), Some(WaferDims::PAPER));
+        // Signs, empties, and non-digit garbage are all rejected (plain
+        // `usize::parse` would have accepted the leading `+`).
+        for bad in ["+5x4", "5x+4", "-5x4", "x4", "5x", "x", "", " x ", "5xx4", "5x4x3"] {
+            assert_eq!(WaferDims::parse(bad), None, "{bad} must be rejected");
+        }
+    }
+
+    #[test]
     fn factorizations_cover_and_multiply_out() {
         let fs = factorizations(20);
         assert_eq!(fs.len(), 18, "d3(20) ordered factorizations");
@@ -407,6 +619,16 @@ mod tests {
         // The paper's Table V strategies are all enumerated.
         for s in [Strategy::new(1, 20, 1), Strategy::new(2, 5, 2), Strategy::new(20, 1, 1)] {
             assert!(fs.contains(&s), "{s}");
+        }
+    }
+
+    #[test]
+    fn scaleout_factorizations_carry_the_wafer_dimension() {
+        let fs = scaleout_factorizations(4, 20);
+        assert_eq!(fs.len(), 18, "same spectrum as the single wafer");
+        for s in &fs {
+            assert_eq!(s.wafers, 4);
+            assert_eq!(s.total_workers(), 80, "{s}");
         }
     }
 
@@ -436,6 +658,10 @@ mod tests {
         let report = run_sweep(&tiny_cfg());
         let text = report.to_json().render();
         let back = Json::parse(&text).expect("sweep JSON parses");
+        assert_eq!(
+            back.get("schema_version").and_then(Json::as_f64),
+            Some(SCHEMA_VERSION)
+        );
         let points = back.get("points").unwrap().as_arr().unwrap();
         assert_eq!(points.len(), 4);
         for p in points {
@@ -443,6 +669,9 @@ mod tests {
             assert!(p.get("total_s").unwrap().as_f64().unwrap() > 0.0);
             assert!(p.get("per_sample_s").unwrap().as_f64().unwrap() > 0.0);
             assert!(p.get("exposed_comm_s").is_some());
+            assert_eq!(p.get("wafers").and_then(Json::as_usize), Some(1));
+            assert_eq!(p.get("total_npus").and_then(Json::as_usize), Some(20));
+            assert!(p.get("xwafer_bw").unwrap().as_f64().unwrap() > 0.0);
         }
     }
 
@@ -465,5 +694,74 @@ mod tests {
         assert!(table.contains("FRED-D") || table.contains("FRED-A"));
         // 2 rows + header + separator.
         assert_eq!(table.lines().count(), 4);
+    }
+
+    #[test]
+    fn wafer_count_axis_multiplies_the_cross_product() {
+        let mut cfg = tiny_cfg();
+        cfg.wafer_counts = vec![1, 4];
+        let report = run_sweep(&cfg);
+        assert_eq!(report.points.len(), 8, "2 strategies x 2 fabrics x 2 fleets");
+        let mut fleets: Vec<usize> = report.points.iter().map(|p| p.wafers).collect();
+        fleets.sort_unstable();
+        fleets.dedup();
+        assert_eq!(fleets, vec![1, 4]);
+        for p in &report.points {
+            assert!(p.outcome.is_ok(), "{}W point infeasible", p.wafers);
+            // Fleet-global strategy covers wafers x 20 NPUs.
+            assert_eq!(p.scaled_strategy().total_workers(), 20 * p.wafers);
+        }
+    }
+
+    #[test]
+    fn single_wafer_points_are_not_duplicated_across_egress_bandwidths() {
+        let mut cfg = tiny_cfg();
+        cfg.wafer_counts = vec![1, 2];
+        cfg.xwafer_bws = vec![1e12, 4e12];
+        let report = run_sweep(&cfg);
+        // 2 strategies x 2 fabrics x (1-wafer once + 2-wafer per bandwidth).
+        assert_eq!(report.points.len(), 4 + 8);
+        assert_eq!(report.points.iter().filter(|p| p.wafers == 1).count(), 4);
+        assert_eq!(report.points.iter().filter(|p| p.wafers == 2).count(), 8);
+        // And the 2-wafer points really cover both bandwidths.
+        let mut bws: Vec<u64> = report
+            .points
+            .iter()
+            .filter(|p| p.wafers == 2)
+            .map(|p| p.xwafer_bw.to_bits())
+            .collect();
+        bws.sort_unstable();
+        bws.dedup();
+        assert_eq!(bws.len(), 2);
+    }
+
+    #[test]
+    fn run_sweep_auto_space_matches_scaleout_factorizations() {
+        // The engine's wafer-dimensioned enumeration and the public
+        // helper must agree (they share scale_strategies; this pins it).
+        let mut cfg = tiny_cfg();
+        cfg.strategies = None;
+        cfg.max_strategies = usize::MAX;
+        cfg.wafer_counts = vec![3];
+        cfg.fabrics = vec![FabricKind::FredD];
+        let report = run_sweep(&cfg);
+        let mut from_sweep: Vec<String> =
+            report.points.iter().map(|p| p.scaled_strategy().to_string()).collect();
+        from_sweep.sort();
+        let mut from_helper: Vec<String> =
+            scaleout_factorizations(3, 20).iter().map(|s| s.to_string()).collect();
+        from_helper.sort();
+        assert_eq!(from_sweep, from_helper);
+    }
+
+    #[test]
+    fn threaded_sweep_matches_sequential_output_exactly() {
+        let mut cfg = tiny_cfg();
+        cfg.wafer_counts = vec![1, 2];
+        cfg.threads = 1;
+        let seq = run_sweep(&cfg).to_json().render();
+        cfg.threads = 3;
+        let par = run_sweep(&cfg).to_json().render();
+        assert_eq!(seq, par, "thread count must not change sweep output");
     }
 }

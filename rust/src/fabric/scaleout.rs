@@ -1,0 +1,242 @@
+//! Multi-wafer scale-out fabric (beyond the paper: Hecaton-style
+//! hierarchical fleets).
+//!
+//! FRED (Sec. VI) models a single wafer, but its target workloads (GPT-3,
+//! Transformer-1T) train on fleets of wafers. This module composes N
+//! single-wafer fabrics ([`Mesh2D`](super::mesh::Mesh2D) or
+//! [`FredFabric`](super::fred::FredFabric)) over an off-wafer CXL-style
+//! interconnect characterized by two numbers: the per-wafer egress
+//! bandwidth (every byte leaving a wafer funnels through its bonded I/O
+//! controllers) and the per-hop cross-wafer latency.
+//!
+//! The parallelization split follows the scale-out literature (Hecaton,
+//! arXiv 2407.05784): **DP across wafers, MP/PP within a wafer** — the
+//! low-bandwidth off-wafer fabric only ever carries the weight-gradient
+//! All-Reduce, which decomposes hierarchically:
+//!
+//! 1. **Reduce-Scatter within each wafer** (full on-wafer bandwidth, the
+//!    per-wafer fabric's own collective plan),
+//! 2. **All-Reduce across wafers** on the locally-reduced shards (a ring
+//!    over the wafers' egress links, priced analytically — the off-wafer
+//!    fabric has no internal structure worth a link-level model),
+//! 3. **All-Gather within each wafer** (full on-wafer bandwidth again).
+//!
+//! A 1-wafer [`ScaleOut`] is *defined* to price exactly like the bare
+//! single-wafer fabric (it plans a plain All-Reduce, not RS + AG), so
+//! scale-out is a strict superset of the paper's model — property-tested
+//! in `tests/prop_scaleout.rs` along with monotonicity in the egress
+//! bandwidth.
+
+use super::fluid::FluidError;
+use super::topology::{CollectiveKind, Fabric, NpuId, Plan};
+use crate::util::units::GBPS;
+
+/// Default per-wafer egress bandwidth: all 18 CXL-3 I/O controllers of
+/// the paper wafer bonded to the off-wafer fabric (18 × 128 GBps).
+pub const DEFAULT_EGRESS_BW: f64 = 18.0 * 128.0 * GBPS;
+
+/// Default cross-wafer hop latency. Off-wafer CXL switching is an order
+/// of magnitude slower than the 20 ns on-wafer hop (Table II).
+pub const DEFAULT_XWAFER_LATENCY: f64 = 500e-9;
+
+/// The scale-out wrapper: N identical wafers over a CXL-style egress
+/// fabric. Wafer count 1 degenerates to the bare single-wafer model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScaleOut {
+    /// Number of wafers in the fleet (>= 1).
+    pub wafers: usize,
+    /// Per-wafer egress bandwidth onto the off-wafer fabric, bytes/s.
+    pub egress_bw: f64,
+    /// Per-step cross-wafer latency, seconds.
+    pub latency: f64,
+}
+
+impl ScaleOut {
+    /// Build a fleet; `wafers >= 1` and `egress_bw > 0` are required.
+    pub fn new(wafers: usize, egress_bw: f64, latency: f64) -> Self {
+        assert!(wafers >= 1, "scale-out needs at least one wafer");
+        assert!(
+            egress_bw > 0.0 && egress_bw.is_finite(),
+            "egress bandwidth must be positive and finite, got {egress_bw}"
+        );
+        assert!(
+            latency >= 0.0 && latency.is_finite(),
+            "cross-wafer latency must be non-negative, got {latency}"
+        );
+        Self { wafers, egress_bw, latency }
+    }
+
+    /// The bare single-wafer configuration (identity wrapper).
+    pub fn single() -> Self {
+        Self::new(1, DEFAULT_EGRESS_BW, DEFAULT_XWAFER_LATENCY)
+    }
+
+    /// A fleet of `wafers` at the default egress operating point.
+    pub fn with_wafers(wafers: usize) -> Self {
+        Self::new(wafers, DEFAULT_EGRESS_BW, DEFAULT_XWAFER_LATENCY)
+    }
+
+    /// True when no cross-wafer communication exists.
+    pub fn is_single(&self) -> bool {
+        self.wafers <= 1
+    }
+
+    /// Time for the cross-wafer All-Reduce step on `wafer_bytes` distinct
+    /// reduced bytes held per wafer: a bandwidth-optimal ring over the
+    /// wafers' egress links moves `2·(W-1)/W · wafer_bytes` through each
+    /// wafer's egress, plus `2·(W-1)` serial latency steps.
+    pub fn cross_allreduce_time(&self, wafer_bytes: f64) -> f64 {
+        if self.wafers <= 1 || wafer_bytes <= 0.0 {
+            return 0.0;
+        }
+        let w = self.wafers as f64;
+        2.0 * (w - 1.0) / w * wafer_bytes / self.egress_bw
+            + 2.0 * (w - 1.0) * self.latency
+    }
+
+    /// Hierarchical All-Reduce over concurrent on-wafer `groups` (each a
+    /// list of physical NPU ids on one wafer, replicated on every wafer
+    /// of the fleet) with `bytes` per member: on-wafer Reduce-Scatter,
+    /// cross-wafer All-Reduce on the `groups.len() · bytes` distinct
+    /// reduced bytes each wafer then holds, on-wafer All-Gather.
+    ///
+    /// With `wafers == 1` this plans a plain on-wafer All-Reduce instead,
+    /// so the single-wafer fleet prices identically to the bare fabric.
+    pub fn hierarchical_allreduce(
+        &self,
+        fabric: &dyn Fabric,
+        groups: &[Vec<NpuId>],
+        bytes: f64,
+    ) -> Result<f64, FluidError> {
+        if bytes <= 0.0 || groups.is_empty() {
+            return Ok(0.0);
+        }
+        let phase = |kind: CollectiveKind| -> Result<f64, FluidError> {
+            let plans: Vec<Plan> = groups
+                .iter()
+                .filter(|g| g.len() > 1)
+                .map(|g| fabric.plan_collective(kind, g, bytes))
+                .collect();
+            if plans.is_empty() {
+                return Ok(0.0);
+            }
+            Ok(fabric
+                .try_run_concurrent(&plans)?
+                .into_iter()
+                .fold(0.0, f64::max))
+        };
+        if self.is_single() {
+            return phase(CollectiveKind::AllReduce);
+        }
+        let rs = phase(CollectiveKind::ReduceScatter)?;
+        let ag = phase(CollectiveKind::AllGather)?;
+        let cross = self.cross_allreduce_time(groups.len() as f64 * bytes);
+        Ok(rs + cross + ag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::FabricKind;
+
+    #[test]
+    fn single_wafer_has_no_cross_traffic() {
+        let s = ScaleOut::single();
+        assert!(s.is_single());
+        assert_eq!(s.cross_allreduce_time(1e9), 0.0);
+    }
+
+    #[test]
+    fn cross_time_matches_ring_formula() {
+        let s = ScaleOut::new(4, 1e12, 0.0);
+        // 2*(4-1)/4 * 1e12 bytes / 1e12 B/s = 1.5 s.
+        assert!((s.cross_allreduce_time(1e12) - 1.5).abs() < 1e-12);
+        // Latency term: 2*(W-1) steps.
+        let l = ScaleOut::new(4, 1e12, 1e-6);
+        let dt = l.cross_allreduce_time(1e12) - s.cross_allreduce_time(1e12);
+        assert!((dt - 6e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn cross_time_is_monotone_in_egress_bw() {
+        let mut last = f64::INFINITY;
+        for bw in [0.5e12, 1e12, 2e12, 8e12] {
+            let t = ScaleOut::new(8, bw, DEFAULT_XWAFER_LATENCY).cross_allreduce_time(5e9);
+            assert!(t <= last, "cross time must not increase with bandwidth");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn zero_bytes_and_zero_groups_are_free() {
+        let s = ScaleOut::with_wafers(4);
+        let fabric = FabricKind::FredD.build();
+        assert_eq!(s.hierarchical_allreduce(fabric.as_ref(), &[], 1e9).unwrap(), 0.0);
+        let groups = vec![vec![0usize, 1, 2, 3]];
+        assert_eq!(s.hierarchical_allreduce(fabric.as_ref(), &groups, 0.0).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn one_wafer_hierarchy_equals_bare_allreduce() {
+        for kind in [FabricKind::Baseline, FabricKind::FredA, FabricKind::FredD] {
+            let fabric = kind.build();
+            let groups: Vec<Vec<NpuId>> = vec![(0..10).collect(), (10..20).collect()];
+            let plans: Vec<Plan> = groups
+                .iter()
+                .map(|g| fabric.plan_collective(CollectiveKind::AllReduce, g, 64e6))
+                .collect();
+            let bare = fabric
+                .try_run_concurrent(&plans)
+                .unwrap()
+                .into_iter()
+                .fold(0.0, f64::max);
+            let hier = ScaleOut::single()
+                .hierarchical_allreduce(fabric.as_ref(), &groups, 64e6)
+                .unwrap();
+            assert_eq!(hier, bare, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn multi_wafer_hierarchy_adds_cross_term() {
+        let fabric = FabricKind::FredD.build();
+        let groups: Vec<Vec<NpuId>> = vec![(0..20).collect()];
+        let bytes = 100e6;
+        let wide = ScaleOut::new(4, 100.0 * DEFAULT_EGRESS_BW, 0.0);
+        let narrow = ScaleOut::new(4, DEFAULT_EGRESS_BW, 0.0);
+        let t_wide = wide.hierarchical_allreduce(fabric.as_ref(), &groups, bytes).unwrap();
+        let t_narrow =
+            narrow.hierarchical_allreduce(fabric.as_ref(), &groups, bytes).unwrap();
+        assert!(t_narrow > t_wide, "narrow egress must cost more");
+        // At 100x the egress bandwidth the cross term is 100x smaller.
+        let cross_wide = wide.cross_allreduce_time(bytes);
+        let cross_narrow = narrow.cross_allreduce_time(bytes);
+        assert!((cross_narrow / cross_wide - 100.0).abs() < 1e-9);
+        assert!((t_narrow - t_wide - (cross_narrow - cross_wide)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn size_one_groups_still_pay_cross_traffic() {
+        // dp=1 on-wafer: no local RS/AG, but each wafer still holds one
+        // distinct gradient bucket per group that must cross wafers.
+        let fabric = FabricKind::FredD.build();
+        let groups: Vec<Vec<NpuId>> = (0..4).map(|i| vec![i]).collect();
+        let s = ScaleOut::new(2, DEFAULT_EGRESS_BW, 0.0);
+        let t = s.hierarchical_allreduce(fabric.as_ref(), &groups, 1e9).unwrap();
+        assert_eq!(t, s.cross_allreduce_time(4.0 * 1e9));
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one wafer")]
+    fn zero_wafers_rejected() {
+        let _ = ScaleOut::new(0, DEFAULT_EGRESS_BW, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be positive")]
+    fn zero_bandwidth_rejected() {
+        let _ = ScaleOut::new(2, 0.0, 0.0);
+    }
+}

@@ -1,0 +1,214 @@
+//! Property/invariant tests over the multi-wafer scale-out layer
+//! (`fabric/scaleout.rs`) — the three contracts ISSUE 2 locks in:
+//!
+//! 1. the hierarchical All-Reduce cost is monotonically non-increasing
+//!    in the cross-wafer egress bandwidth,
+//! 2. a 1-wafer scale-out configuration prices *identically* to the bare
+//!    single-wafer fabric (scale-out is a strict superset of the paper
+//!    model, never a perturbation of it),
+//! 3. wafer × MP × DP × PP factorizations exactly cover the fleet's
+//!    total NPU count.
+
+use fred::coordinator::config::FabricKind;
+use fred::coordinator::sim::Simulator;
+use fred::coordinator::sweep::{factorizations, scaleout_factorizations};
+use fred::coordinator::workload;
+use fred::fabric::scaleout::{ScaleOut, DEFAULT_XWAFER_LATENCY};
+use fred::fabric::topology::NpuId;
+use fred::util::prop::check;
+
+/// On-wafer DP-style groups for the paper's 20-NPU wafer: `n_groups`
+/// interleaved groups (group g takes NPUs g, g+n_groups, ...).
+fn interleaved_groups(n_groups: usize, n_npus: usize) -> Vec<Vec<NpuId>> {
+    (0..n_groups)
+        .map(|g| (g..n_npus).step_by(n_groups).collect())
+        .collect()
+}
+
+#[test]
+fn hierarchical_allreduce_is_monotone_in_xwafer_bw() {
+    check(
+        "hier-allreduce-monotone-bw",
+        0xFACADE,
+        24,
+        |rng| {
+            let wafers = *rng.choose(&[2usize, 3, 4, 8, 16]);
+            let n_groups = *rng.choose(&[1usize, 2, 4]);
+            let bytes = *rng.choose(&[1e6, 64e6, 512e6]);
+            (wafers, n_groups, bytes)
+        },
+        |&(wafers, n_groups, bytes)| {
+            let fabric = FabricKind::FredD.build();
+            let groups = interleaved_groups(n_groups, 20);
+            let mut last = f64::INFINITY;
+            for bw in [0.25e12, 0.5e12, 1e12, 2.304e12, 8e12, 64e12] {
+                let s = ScaleOut::new(wafers, bw, DEFAULT_XWAFER_LATENCY);
+                let t = s
+                    .hierarchical_allreduce(fabric.as_ref(), &groups, bytes)
+                    .map_err(|e| e.to_string())?;
+                if !(t <= last) {
+                    return Err(format!(
+                        "{wafers} wafers, {n_groups} groups, {bytes} B: cost rose \
+                         from {last} to {t} at egress {bw}"
+                    ));
+                }
+                last = t;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn full_iteration_is_monotone_in_xwafer_bw() {
+    // The only egress-dependent term of an iteration is the cross-wafer
+    // gradient All-Reduce, so end-to-end totals inherit the monotonicity
+    // — for the stationary (resnet152/t17b) and streaming (t1t) paths.
+    for w in [workload::resnet152(), workload::transformer_17b(), workload::transformer_1t()]
+    {
+        let mut last = f64::INFINITY;
+        for bw in [0.5e12, 1e12, 2.304e12, 16e12] {
+            let sim = Simulator::new(FabricKind::FredD, w.clone(), w.default_strategy)
+                .with_scaleout(ScaleOut::new(4, bw, DEFAULT_XWAFER_LATENCY));
+            let t = sim.try_iterate().expect("feasible").total();
+            assert!(
+                t <= last,
+                "{}: iteration slowed from {last} to {t} at egress {bw}",
+                w.name
+            );
+            last = t;
+        }
+    }
+}
+
+#[test]
+fn one_wafer_scaleout_prices_identically_to_bare_fabric() {
+    // Whatever the egress bandwidth/latency, a 1-wafer fleet never
+    // touches the scale-out fabric: every breakdown component matches
+    // the bare single-wafer simulation bit for bit.
+    check(
+        "one-wafer-identity",
+        0x1DEA,
+        12,
+        |rng| {
+            let kind = *rng.choose(&[FabricKind::Baseline, FabricKind::FredA, FabricKind::FredD]);
+            let bw = *rng.choose(&[0.1e12, 1e12, 9e12]);
+            let latency = *rng.choose(&[0.0, 100e-9, 5e-6]);
+            (kind, bw, latency)
+        },
+        |&(kind, bw, latency)| {
+            for w in [workload::resnet152(), workload::gpt3(), workload::transformer_1t()] {
+                let bare = Simulator::new(kind, w.clone(), w.default_strategy)
+                    .try_iterate()
+                    .map_err(|e| e.to_string())?;
+                let wrapped = Simulator::new(kind, w.clone(), w.default_strategy)
+                    .with_scaleout(ScaleOut::new(1, bw, latency))
+                    .try_iterate()
+                    .map_err(|e| e.to_string())?;
+                if bare.total() != wrapped.total() || bare.exposed != wrapped.exposed {
+                    return Err(format!(
+                        "{} on {}: bare {:?} != 1-wafer scale-out {:?}",
+                        w.name,
+                        kind.name(),
+                        bare,
+                        wrapped
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn scaleout_factorizations_exactly_cover_total_npus() {
+    check(
+        "scaleout-factorizations-cover",
+        0xC0DE,
+        96,
+        |rng| (rng.range(1, 17), rng.range(1, 65)),
+        |&(wafers, npus_per_wafer)| {
+            let fs = scaleout_factorizations(wafers, npus_per_wafer);
+            let total = wafers * npus_per_wafer;
+            for s in &fs {
+                if s.wafers != wafers {
+                    return Err(format!("{s} lost the wafer dimension"));
+                }
+                if s.total_workers() != total {
+                    return Err(format!(
+                        "{s} covers {} of {total} fleet NPUs",
+                        s.total_workers()
+                    ));
+                }
+                if s.global_dp() != wafers * s.local.dp {
+                    return Err(format!("{s}: global DP must be wafers x local DP"));
+                }
+            }
+            // Same spectrum as the per-wafer enumeration: one entry per
+            // ordered divisor triple of the per-wafer count, no dups.
+            if fs.len() != factorizations(npus_per_wafer).len() {
+                return Err(format!(
+                    "{} scaled strategies vs {} local factorizations",
+                    fs.len(),
+                    factorizations(npus_per_wafer).len()
+                ));
+            }
+            let mut dedup: Vec<(usize, usize, usize)> =
+                fs.iter().map(|s| (s.local.mp, s.local.dp, s.local.pp)).collect();
+            dedup.sort_unstable();
+            dedup.dedup();
+            if dedup.len() != fs.len() {
+                return Err("duplicate scaled strategies".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn more_wafers_never_hurt_per_sample_throughput_at_default_egress() {
+    // The scale-out pitch in one invariant: growing the fleet at the
+    // default egress operating point monotonically improves per-sample
+    // time for a DP-heavy workload (iteration time grows only by the
+    // cross-wafer term while the global minibatch scales linearly).
+    let w = workload::resnet152();
+    let mut last = f64::INFINITY;
+    for wafers in [1usize, 2, 4, 8, 16] {
+        let sim = Simulator::new(FabricKind::FredD, w.clone(), w.default_strategy)
+            .with_scaleout(ScaleOut::with_wafers(wafers));
+        let b = sim.try_iterate().expect("feasible");
+        let per_sample = b.total() / sim.global_minibatch() as f64;
+        assert!(
+            per_sample <= last,
+            "{wafers} wafers: per-sample {per_sample} worse than {last}"
+        );
+        last = per_sample;
+    }
+}
+
+#[test]
+fn cross_wafer_term_matches_ring_arithmetic_end_to_end() {
+    // White-box: for a stationary workload the multi-wafer iteration
+    // exceeds the single-wafer one by exactly the cross-wafer ring time
+    // on the full (MP/PP-sharded buckets summed) gradient volume.
+    let w = workload::transformer_17b();
+    let s = w.default_strategy;
+    let one = Simulator::new(FabricKind::FredD, w.clone(), s).iterate();
+    let scale = ScaleOut::with_wafers(4);
+    let four = Simulator::new(FabricKind::FredD, w.clone(), s)
+        .with_scaleout(scale)
+        .iterate();
+    let nb = w.dp_buckets.max(1) as f64;
+    let bucket = w.params_bytes() / s.mp as f64 / s.pp as f64 / nb;
+    let groups = (s.mp * s.pp) as f64;
+    let expected_extra = {
+        // Per bucket: RS + cross + AG replaces the plain All-Reduce; the
+        // delta is bounded below by the pure cross term alone.
+        scale.cross_allreduce_time(groups * bucket) * nb
+    };
+    let extra = four.total() - one.total();
+    assert!(
+        extra >= expected_extra * 0.99,
+        "4-wafer extra {extra} below the cross-wafer ring bound {expected_extra}"
+    );
+}

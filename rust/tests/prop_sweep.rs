@@ -17,6 +17,7 @@ fn small_cfg(fabrics: Vec<FabricKind>, max_strategies: usize) -> SweepConfig {
         strategies: None,
         max_strategies,
         bench_bytes: 100e6,
+        ..SweepConfig::default()
     }
 }
 
@@ -140,8 +141,28 @@ fn infeasible_strategies_are_skipped_not_fatal() {
         ]),
         max_strategies: 12,
         bench_bytes: 100e6,
+        ..SweepConfig::default()
     };
     let report = run_sweep(&cfg);
     assert_eq!(report.points.len(), 1, "oversized strategy skipped");
     assert!(report.points[0].outcome.is_ok());
+}
+
+#[test]
+fn thread_count_never_changes_sweep_output() {
+    // The determinism contract of the sharded executor: any thread count
+    // yields the same rendered JSON, including across the multi-wafer
+    // scale-out axis. (FRED_SWEEP_THREADS, if set, forces all runs to
+    // the same count — the assertion still holds.)
+    let mut cfg = small_cfg(vec![FabricKind::Baseline, FabricKind::FredD], 5);
+    cfg.wafer_counts = vec![1, 2, 4];
+    let mut renders = Vec::new();
+    for threads in [1usize, 2, 3, 7] {
+        cfg.threads = threads;
+        renders.push(run_sweep(&cfg).to_json().render());
+    }
+    for r in &renders[1..] {
+        assert_eq!(&renders[0], r, "sweep output must be thread-count invariant");
+    }
+    assert!(renders[0].contains("\"schema_version\":2"));
 }

@@ -106,13 +106,167 @@ fn sweep_cli_rejects_bad_input_with_usage_errors() {
     for args in [
         vec!["sweep", "--models", "nope"],
         vec!["sweep", "--wafers", "1x4"],
+        vec!["sweep", "--wafers", "0"],
+        vec!["sweep", "--wafers", "+4"],
+        vec!["sweep", "--wafers", "0x4"],
         vec!["sweep", "--fabrics", "warp-drive"],
         vec!["sweep", "--strategies", "0,0,0"],
+        vec!["sweep", "--threads", "0"],
+        vec!["sweep", "--threads", "lots"],
+        vec!["sweep", "--xwafer-bw", "-3"],
+        vec!["sweep", "--xwafer-bw", "fast"],
+        // Unwritable --out path: the sweep itself succeeds (kept tiny
+        // here) but the write must fail loudly.
+        vec![
+            "sweep",
+            "--models",
+            "resnet152",
+            "--fabrics",
+            "fred-d",
+            "--max-strategies",
+            "1",
+            "--out",
+            "/nonexistent-dir-for-sure/sweep.json",
+        ],
     ] {
         let out = Command::new(env!("CARGO_BIN_EXE_fred"))
             .args(&args)
             .output()
             .expect("spawn fred");
         assert_eq!(out.status.code(), Some(2), "{args:?} must exit 2");
+    }
+}
+
+/// Raw stdout bytes of a `fred sweep` invocation (asserting success),
+/// with any extra environment applied.
+fn run_sweep_stdout(args: &[&str], envs: &[(&str, &str)]) -> Vec<u8> {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_fred"));
+    cmd.arg("sweep").args(args);
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    let out = cmd.output().expect("spawn fred sweep");
+    assert!(
+        out.status.success(),
+        "sweep failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    out.stdout
+}
+
+#[test]
+fn threaded_sweep_is_byte_identical_to_single_thread() {
+    // The determinism wall: the same multi-wafer sweep forced onto one
+    // thread (either via --threads 1 or the FRED_SWEEP_THREADS override)
+    // must produce byte-identical JSON to a many-thread run.
+    let args = [
+        "--models",
+        "resnet152",
+        "--wafers",
+        "5x4,1,2,4",
+        "--fabrics",
+        "fred-a,fred-d",
+        "--max-strategies",
+        "4",
+        "--json",
+    ];
+    let with_threads = |n: &'static str| -> Vec<&'static str> {
+        let mut v = args.to_vec();
+        v.push("--threads");
+        v.push(n);
+        v
+    };
+    let single = run_sweep_stdout(&with_threads("1"), &[("FRED_SWEEP_THREADS", "1")]);
+    let threaded = run_sweep_stdout(&with_threads("4"), &[]);
+    assert_eq!(single, threaded, "--threads must not change output bytes");
+    // Env override wins over the flag and still matches.
+    let env_forced = run_sweep_stdout(&with_threads("8"), &[("FRED_SWEEP_THREADS", "1")]);
+    assert_eq!(single, env_forced, "FRED_SWEEP_THREADS=1 must force the same bytes");
+}
+
+#[test]
+fn sweep_out_file_is_golden_against_stdout() {
+    // The --out FILE / schema_version contract: the written file parses
+    // as JSON, carries the schema version, and is byte-identical to the
+    // --json stdout of the same invocation.
+    let path = std::env::temp_dir().join(format!("fred_sweep_golden_{}.json", std::process::id()));
+    let path_str = path.to_str().expect("utf8 temp path");
+    let stdout = run_sweep_stdout(
+        &[
+            "--models",
+            "resnet152",
+            "--wafers",
+            "2",
+            "--fabrics",
+            "fred-d",
+            "--max-strategies",
+            "3",
+            "--json",
+            "--out",
+            path_str,
+        ],
+        &[],
+    );
+    let file = std::fs::read(&path).expect("--out file written");
+    assert_eq!(file, stdout, "--out file must match --json stdout byte for byte");
+    let doc = Json::parse(String::from_utf8(file).expect("utf8").trim())
+        .expect("--out file is valid JSON");
+    assert_eq!(doc.get("schema_version").and_then(Json::as_usize), Some(2));
+    let points = doc.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), 3, "3 strategies x 1 fabric x 1 fleet size");
+    for p in points {
+        assert_eq!(p.get("wafers").and_then(Json::as_usize), Some(2));
+        assert_eq!(p.get("total_npus").and_then(Json::as_usize), Some(40));
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn sweep_cli_scales_to_sixteen_wafer_fleets() {
+    // The acceptance sweep: fleet sizes 1,2,4,8,16 end to end, with
+    // global strategy/minibatch accounting and the scale-out JSON fields.
+    let json = run_sweep_json(&[
+        "--models",
+        "gpt3",
+        "--wafers",
+        "1,2,4,8,16",
+        "--fabrics",
+        "fred-d",
+        "--max-strategies",
+        "2",
+    ]);
+    assert_eq!(json.get("schema_version").and_then(Json::as_usize), Some(2));
+    let points = json.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), 10, "2 strategies x 5 fleet sizes");
+    let mut fleets: Vec<usize> = points
+        .iter()
+        .map(|p| p.get("wafers").unwrap().as_usize().unwrap())
+        .collect();
+    fleets.sort_unstable();
+    fleets.dedup();
+    assert_eq!(fleets, vec![1, 2, 4, 8, 16]);
+    for p in points {
+        assert_eq!(p.get("ok").and_then(Json::as_bool), Some(true));
+        let wafers = p.get("wafers").unwrap().as_usize().unwrap();
+        let n_npus = p.get("n_npus").unwrap().as_usize().unwrap();
+        assert_eq!(
+            p.get("total_npus").and_then(Json::as_usize),
+            Some(wafers * n_npus),
+            "total NPUs = wafers x per-wafer NPUs"
+        );
+        let dp = p.get("dp").unwrap().as_usize().unwrap();
+        assert_eq!(
+            p.get("global_dp").and_then(Json::as_usize),
+            Some(wafers * dp),
+            "wafer dimension multiplies DP"
+        );
+        assert!(p.get("xwafer_bw").unwrap().as_f64().unwrap() > 0.0);
+        let scaled = p.get("scaled_strategy").unwrap().as_str().unwrap();
+        if wafers > 1 {
+            assert!(
+                scaled.starts_with(&format!("{wafers}W x ")),
+                "scaled strategy `{scaled}` must carry the wafer dimension"
+            );
+        }
     }
 }
