@@ -29,8 +29,20 @@ target/release/fred sweep --wafers 4 --models resnet152 --max-strategies 6 \
     --json --out /tmp/sweep.json > /tmp/sweep.stdout.json
 cmp /tmp/sweep.json /tmp/sweep.stdout.json
 test -s /tmp/sweep.json
-grep -q '"schema_version":2' /tmp/sweep.json
+grep -q '"schema_version":3' /tmp/sweep.json
 rm -f /tmp/sweep.json /tmp/sweep.stdout.json
+
+echo "== egress-fabric sweep smoke (tree topology, PP across wafers) =="
+# The link-level egress axes end to end: a CXL fat-tree interconnect with
+# pipeline stages spanning wafers, JSON to stdout and --out byte-identical.
+target/release/fred sweep --wafers 4 --models resnet152 --max-strategies 4 \
+    --xwafer-topo tree --span pp \
+    --json --out /tmp/sweep_pp.json > /tmp/sweep_pp.stdout.json
+cmp /tmp/sweep_pp.json /tmp/sweep_pp.stdout.json
+grep -q '"schema_version":3' /tmp/sweep_pp.json
+grep -q '"xwafer_topo":"tree"' /tmp/sweep_pp.json
+grep -q '"wafer_span":"pp"' /tmp/sweep_pp.json
+rm -f /tmp/sweep_pp.json /tmp/sweep_pp.stdout.json
 
 if command -v rustfmt >/dev/null 2>&1; then
     echo "== cargo fmt --check =="

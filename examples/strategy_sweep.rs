@@ -10,12 +10,17 @@
 //! 2. what does a *fleet* of paper wafers buy — 1..16 wafers over an
 //!    off-wafer CXL fabric (DP across wafers, MP/PP within), and how
 //!    sensitive is the win to the cross-wafer egress bandwidth?
+//! 3. which *egress topology* should connect the wafers — ring vs CXL
+//!    fat-tree at the same egress bandwidth — and does spanning the
+//!    pipeline across wafers (`--span pp`) beat DP across wafers?
 //!
 //! Run: `cargo run --release --example strategy_sweep`
 
 use fred::coordinator::config::FabricKind;
+use fred::coordinator::parallelism::WaferSpan;
 use fred::coordinator::sweep::{run_sweep, SweepConfig, WaferDims};
 use fred::coordinator::workload;
+use fred::fabric::egress::EgressTopo;
 use fred::util::units::{fmt_time, GBPS};
 
 fn main() {
@@ -73,8 +78,39 @@ fn main() {
             .fold(f64::INFINITY, f64::min);
         println!("best per-sample @ {wafers:>2} wafer(s): {}", fmt_time(best));
     }
+    // ------------------------------- egress topology x wafer span
+    println!("\n== egress topologies: ring vs tree vs dragonfly at 2304 GB/s, dp vs pp span ==\n");
+    let topo_cfg = SweepConfig {
+        workloads: vec![workload::gpt3()],
+        wafers: vec![WaferDims::PAPER],
+        wafer_counts: vec![8],
+        xwafer_bws: vec![2304.0 * GBPS],
+        xwafer_topos: EgressTopo::all().to_vec(),
+        wafer_spans: WaferSpan::all().to_vec(),
+        fabrics: vec![FabricKind::FredD],
+        strategies: None,
+        max_strategies: 4,
+        bench_bytes: 100e6,
+        ..SweepConfig::default()
+    };
+    let topo = run_sweep(&topo_cfg);
+    print!("{}", topo.render_table(12));
+    // Fixed egress bandwidth, so any spread below is pure topology/span.
+    for t in EgressTopo::all() {
+        for span in WaferSpan::all() {
+            let best = topo
+                .points
+                .iter()
+                .filter(|p| p.topo == t && p.span == span)
+                .filter_map(|p| p.outcome.as_ref().ok())
+                .map(|m| m.per_sample)
+                .fold(f64::INFINITY, f64::min);
+            println!("best per-sample @ {:>9} / span {}: {}", t.name(), span, fmt_time(best));
+        }
+    }
     println!(
         "\nmachine-readable: `fred sweep --models gpt3 --wafers 1,2,4,8,16 \
-         --fabrics fred-d --xwafer-bw 1152,2304 --json --out sweep.json`"
+         --fabrics fred-d --xwafer-bw 1152,2304 --xwafer-topo ring,tree,dragonfly \
+         --span dp,pp --json --out sweep.json`"
     );
 }

@@ -16,8 +16,10 @@
 //! Run: `cargo bench --bench bench_sweep`
 
 use fred::coordinator::config::FabricKind;
+use fred::coordinator::parallelism::WaferSpan;
 use fred::coordinator::sweep::{factorizations, run_sweep, SweepConfig, WaferDims};
 use fred::coordinator::workload;
+use fred::fabric::egress::EgressTopo;
 use fred::util::table::Table;
 use std::time::Instant;
 
@@ -77,6 +79,21 @@ fn main() {
                 6,
             ),
         ),
+        (
+            "gpt3 | 4W x 3 topo x 2 span | fred-d | 6 strat",
+            {
+                let mut c = cfg(
+                    vec![workload::gpt3()],
+                    vec![WaferDims::PAPER],
+                    vec![FabricKind::FredD],
+                    6,
+                );
+                c.wafer_counts = vec![4];
+                c.xwafer_topos = EgressTopo::all().to_vec();
+                c.wafer_spans = WaferSpan::all().to_vec();
+                c
+            },
+        ),
     ];
 
     let mut table = Table::new(&["sweep", "points", "feasible", "wall", "points/s"]);
@@ -98,14 +115,20 @@ fn main() {
     table.print();
 
     // ------------------------------------------------ threaded executor
-    println!("\n=== §Perf: threaded sweep executor (multi-wafer cross-product) ===");
+    // The cross-product now includes the egress axes (topology x span),
+    // so this doubles as the determinism wall for the link-level egress
+    // fabrics: byte-identical output at any thread count must survive
+    // ring/tree/dragonfly pricing and PP-across-wafers points.
+    println!("\n=== §Perf: threaded sweep executor (multi-wafer + egress axes) ===");
     let mut base = cfg(
         vec![workload::resnet152(), workload::transformer_17b()],
         vec![WaferDims::PAPER],
         FabricKind::all().to_vec(),
         8,
     );
-    base.wafer_counts = vec![1, 2, 4, 8];
+    base.wafer_counts = vec![1, 4, 8];
+    base.xwafer_topos = EgressTopo::all().to_vec();
+    base.wafer_spans = WaferSpan::all().to_vec();
 
     let mut seq_cfg = base.clone();
     seq_cfg.threads = 1;

@@ -1,10 +1,11 @@
 //! Command-line interface (hand-rolled; no `clap` offline).
 
 use crate::coordinator::{
-    config::FabricKind, metrics::CommType, parallelism::Strategy, placement,
-    placement::Placement, sim::Simulator, sweep, sweep::SweepConfig, sweep::WaferDims,
-    workload::Workload,
+    config::FabricKind, metrics::CommType, parallelism::Strategy, parallelism::WaferSpan,
+    placement, placement::Placement, sim::Simulator, sweep, sweep::SweepConfig,
+    sweep::WaferDims, workload::Workload,
 };
+use crate::fabric::egress::EgressTopo;
 use crate::fabric::fred::hw_model::HwOverhead;
 use crate::fabric::fred::{route_flows, Flow};
 use crate::fabric::mesh::Mesh2D;
@@ -51,8 +52,9 @@ COMMANDS:
                [--strategy MP(a)-DP(b)-PP(c)] [--iters N]
   sweep        [--models <m1,m2|all>] [--wafers 5x4,8x8,2,4] [--fabrics all|fred-a,fred-d]
                [--strategies auto|\"20,1,1;2,5,2\"] [--max-strategies N]
-               [--xwafer-bw GBPS[,GBPS..]] [--threads N] [--top N]
-               [--bytes N] [--json] [--out FILE]
+               [--xwafer-bw GBPS[,GBPS..]] [--xwafer-latency NS[,NS..]]
+               [--xwafer-topo ring,tree,dragonfly] [--span dp,pp]
+               [--threads N] [--top N] [--bytes N] [--json] [--out FILE]
                Strategy/topology sweep engine: enumerates fabric x wafer
                shape x fleet size x MP/DP/PP factorization x workload,
                runs each point end to end, and ranks by per-sample
@@ -67,15 +69,26 @@ COMMANDS:
                ## Multi-wafer
                `--wafers` mixes wafer *shapes* (RxC, e.g. 8x8) and fleet
                *sizes* (bare integers, e.g. 2,4,16). Fleet sizes add a
-               scale-out axis: N identical wafers joined by an off-wafer
-               CXL-style fabric, DP across wafers and MP/PP within, with
-               the gradient All-Reduce priced hierarchically (on-wafer
-               reduce-scatter -> cross-wafer all-reduce -> on-wafer
-               all-gather). `--xwafer-bw` sets the per-wafer egress
-               bandwidth in GB/s (default 2304 = 18 CXL-3 controllers);
-               give several values to sweep the egress operating point.
+               scale-out axis: N identical wafers joined by a link-level
+               egress fabric. `--xwafer-topo` picks the cross-wafer
+               interconnect itself: `ring` (bandwidth-optimal, 2(W-1)
+               latency steps), `tree` (CXL-switch fat-tree: in-network
+               reduce/multicast, O(levels) steps, oversubscribed trunks),
+               `dragonfly` (switch-less wafer groups, contended global
+               links); give several to sweep the topology. `--span`
+               chooses what the wafer dimension multiplies: `dp` (DP
+               across wafers; gradient All-Reduce priced hierarchically
+               as on-wafer reduce-scatter -> cross-wafer all-reduce ->
+               on-wafer all-gather) and/or `pp` (pipeline stages span
+               wafers; boundary activations cross the egress fabric as
+               concurrent point-to-point flows). `--xwafer-bw` sets the
+               per-wafer egress bandwidth in GB/s (default 2304 = 18
+               CXL-3 controllers); `--xwafer-latency` sets the per-hop
+               cross-wafer latency in ns (default 500); give several
+               values to sweep the egress operating point.
                Example: fred sweep --wafers 1,2,4,8,16 --models gpt3
-                        --fabrics fred-d --xwafer-bw 1152,2304 --json
+                        --fabrics fred-d --xwafer-bw 1152,2304
+                        --xwafer-topo ring,tree --span dp,pp --json
   microbench   [--strategy 2,5,2] [--bytes N]        (Fig. 9 per-phase BW)
   channel-load [--rows 4 --cols 4]                   (Fig. 4 hotspot)
   route        [--m 2|3]                             (Fig. 7 routing demo)
@@ -249,6 +262,54 @@ fn cmd_sweep(opts: &Opts) -> i32 {
     if xwafer_bws.is_empty() {
         xwafer_bws.push(scaleout::DEFAULT_EGRESS_BW);
     }
+    // Cross-wafer hop latencies, ns on the CLI.
+    let mut xwafer_latencies = Vec::new();
+    if let Some(list) = opts.get("xwafer-latency") {
+        for t in comma_list(list) {
+            match t.parse::<f64>() {
+                Ok(v) if v >= 0.0 && v.is_finite() => xwafer_latencies.push(v * 1e-9),
+                _ => {
+                    eprintln!("bad --xwafer-latency `{t}` (ns, >= 0)");
+                    return 2;
+                }
+            }
+        }
+    }
+    if xwafer_latencies.is_empty() {
+        xwafer_latencies.push(scaleout::DEFAULT_XWAFER_LATENCY);
+    }
+    // Cross-wafer egress topologies.
+    let mut xwafer_topos = Vec::new();
+    if let Some(list) = opts.get("xwafer-topo") {
+        for t in comma_list(list) {
+            match EgressTopo::parse(t) {
+                Some(topo) => xwafer_topos.push(topo),
+                None => {
+                    eprintln!("bad --xwafer-topo `{t}` (ring, tree, dragonfly)");
+                    return 2;
+                }
+            }
+        }
+    }
+    if xwafer_topos.is_empty() {
+        xwafer_topos.push(EgressTopo::Ring);
+    }
+    // Wafer-spanning axes.
+    let mut wafer_spans = Vec::new();
+    if let Some(list) = opts.get("span") {
+        for t in comma_list(list) {
+            match WaferSpan::parse(t) {
+                Some(span) => wafer_spans.push(span),
+                None => {
+                    eprintln!("bad --span `{t}` (dp, pp)");
+                    return 2;
+                }
+            }
+        }
+    }
+    if wafer_spans.is_empty() {
+        wafer_spans.push(WaferSpan::Dp);
+    }
     // Fabrics: --fabrics all | baseline,fred-a,...
     let fabrics_arg = opts.get("fabrics").or_else(|| opts.get("fabric")).unwrap_or("all");
     let fabrics: Vec<FabricKind> = if fabrics_arg == "all" {
@@ -307,6 +368,9 @@ fn cmd_sweep(opts: &Opts) -> i32 {
         wafers,
         wafer_counts,
         xwafer_bws,
+        xwafer_latencies,
+        xwafer_topos,
+        wafer_spans,
         fabrics: fabrics.clone(),
         strategies,
         max_strategies,

@@ -29,7 +29,7 @@ pub mod workload;
 
 pub use config::FabricKind;
 pub use metrics::{Breakdown, CommType};
-pub use parallelism::{ScaledStrategy, Strategy};
+pub use parallelism::{ScaledStrategy, Strategy, WaferSpan};
 pub use placement::Placement;
 pub use sim::Simulator;
 pub use sweep::{SweepConfig, SweepReport, WaferDims};

@@ -132,25 +132,75 @@ impl Strategy {
     }
 }
 
+/// Which parallelism dimension the wafer axis multiplies when a strategy
+/// spans a fleet: DP across wafers (Hecaton's split — the egress fabric
+/// carries only the weight-gradient All-Reduce) or PP across wafers
+/// (pipeline stages span wafers for models whose per-stage footprint
+/// exceeds one wafer — the egress fabric carries boundary activations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum WaferSpan {
+    /// The wafer dimension is extra data parallelism.
+    Dp,
+    /// The wafer dimension is extra pipeline depth.
+    Pp,
+}
+
+impl WaferSpan {
+    /// Every span, in CLI/report order.
+    pub fn all() -> [WaferSpan; 2] {
+        [WaferSpan::Dp, WaferSpan::Pp]
+    }
+
+    /// Name used on the CLI and in reports/JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WaferSpan::Dp => "dp",
+            WaferSpan::Pp => "pp",
+        }
+    }
+
+    /// Parse a CLI name (`dp` / `pp`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "dp" => Some(WaferSpan::Dp),
+            "pp" => Some(WaferSpan::Pp),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for WaferSpan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// A strategy with the scale-out wafer dimension: the fleet replicates
 /// the per-wafer MP/DP/PP arrangement `wafers` times, with the wafer
-/// dimension acting as additional data parallelism (DP across wafers,
-/// MP/PP within — the Hecaton-style hierarchical split the off-wafer
-/// bandwidth dictates). A 1-wafer scaled strategy is exactly its local
-/// strategy.
+/// dimension multiplying one global parallelism axis per its
+/// [`WaferSpan`] — DP across wafers (the Hecaton-style hierarchical
+/// split) or PP across wafers (stages spanning wafers). A 1-wafer scaled
+/// strategy is exactly its local strategy either way.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ScaledStrategy {
-    /// Wafer count (the scale-out DP factor), >= 1.
+    /// Wafer count (the scale-out factor on the spanned axis), >= 1.
     pub wafers: usize,
     /// The per-wafer strategy.
     pub local: Strategy,
+    /// Which axis the wafer dimension multiplies.
+    pub span: WaferSpan,
 }
 
 impl ScaledStrategy {
-    /// Build; `wafers` must be >= 1.
+    /// Build with DP across wafers (the PR 2 default); `wafers >= 1`.
     pub fn new(wafers: usize, local: Strategy) -> Self {
+        Self::with_span(wafers, local, WaferSpan::Dp)
+    }
+
+    /// Build with an explicit wafer span; `wafers >= 1`.
+    pub fn with_span(wafers: usize, local: Strategy, span: WaferSpan) -> Self {
         assert!(wafers >= 1, "need at least one wafer");
-        Self { wafers, local }
+        Self { wafers, local, span }
     }
 
     /// The single-wafer embedding of a local strategy.
@@ -163,9 +213,20 @@ impl ScaledStrategy {
         self.wafers * self.local.workers()
     }
 
-    /// Global data-parallel width: wafer DP × on-wafer DP.
+    /// Global data-parallel width (× wafers only under a DP span).
     pub fn global_dp(&self) -> usize {
-        self.wafers * self.local.dp
+        match self.span {
+            WaferSpan::Dp => self.wafers * self.local.dp,
+            WaferSpan::Pp => self.local.dp,
+        }
+    }
+
+    /// Global pipeline depth (× wafers only under a PP span).
+    pub fn global_pp(&self) -> usize {
+        match self.span {
+            WaferSpan::Dp => self.local.pp,
+            WaferSpan::Pp => self.wafers * self.local.pp,
+        }
     }
 }
 
@@ -173,6 +234,8 @@ impl std::fmt::Display for ScaledStrategy {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         if self.wafers == 1 {
             write!(f, "{}", self.local)
+        } else if self.span == WaferSpan::Pp {
+            write!(f, "{}W(pp) x {}", self.wafers, self.local)
         } else {
             write!(f, "{}W x {}", self.wafers, self.local)
         }
@@ -272,6 +335,34 @@ mod tests {
     #[should_panic(expected = "at least one wafer")]
     fn scaled_strategy_rejects_zero_wafers() {
         let _ = ScaledStrategy::new(0, Strategy::new(1, 20, 1));
+    }
+
+    #[test]
+    fn wafer_span_parse_and_names() {
+        assert_eq!(WaferSpan::parse("dp"), Some(WaferSpan::Dp));
+        assert_eq!(WaferSpan::parse(" PP "), Some(WaferSpan::Pp));
+        assert_eq!(WaferSpan::parse("mp"), None);
+        for s in WaferSpan::all() {
+            assert_eq!(WaferSpan::parse(s.name()), Some(s));
+        }
+    }
+
+    #[test]
+    fn pp_span_multiplies_pipeline_depth_not_dp() {
+        let local = Strategy::new(4, 5, 1);
+        let s = ScaledStrategy::with_span(4, local, WaferSpan::Pp);
+        assert_eq!(s.total_workers(), 80, "exact cover: wafers x mp x dp x pp");
+        assert_eq!(s.global_dp(), 5, "PP span leaves DP per-wafer");
+        assert_eq!(s.global_pp(), 4, "wafer dimension multiplies PP");
+        assert_eq!(s.to_string(), "4W(pp) x MP(4)-DP(5)-PP(1)");
+        let d = ScaledStrategy::new(4, local);
+        assert_eq!(d.global_dp(), 20);
+        assert_eq!(d.global_pp(), 1);
+        // A 1-wafer PP span is exactly the local strategy.
+        let one = ScaledStrategy::with_span(1, local, WaferSpan::Pp);
+        assert_eq!(one.to_string(), local.to_string());
+        assert_eq!(one.global_pp(), 1);
+        assert_eq!(one.global_dp(), 5);
     }
 
     #[test]

@@ -23,14 +23,15 @@
 
 use super::config::{self, FabricKind};
 use super::metrics::{Breakdown, CommType};
-use super::parallelism::Strategy;
+use super::parallelism::{ScaledStrategy, Strategy, WaferSpan};
 use super::placement::Placement;
 use super::schedule;
 use super::workload::{ExecMode, Workload};
+use crate::fabric::egress::{onwafer_phase_time, P2pFlow};
 use crate::fabric::fluid::FluidError;
 use crate::fabric::mesh::Mesh2D;
 use crate::fabric::scaleout::ScaleOut;
-use crate::fabric::topology::{CollectiveKind, Fabric, IoDirection, Plan};
+use crate::fabric::topology::{CollectiveKind, Fabric, IoDirection};
 
 /// A workload+strategy+fabric simulation context.
 pub struct Simulator {
@@ -41,9 +42,12 @@ pub struct Simulator {
     workload: Workload,
     strategy: Strategy,
     placement: Placement,
-    /// Multi-wafer scale-out context (DP across wafers); the default
-    /// single-wafer wrapper prices identically to the bare fabric.
+    /// Multi-wafer scale-out context; the default single-wafer wrapper
+    /// prices identically to the bare fabric for every egress topology.
     scaleout: ScaleOut,
+    /// Which axis the wafer dimension multiplies (DP or PP across
+    /// wafers). Irrelevant on a single wafer.
+    span: WaferSpan,
 }
 
 impl Simulator {
@@ -82,6 +86,7 @@ impl Simulator {
             strategy,
             placement,
             scaleout: ScaleOut::single(),
+            span: WaferSpan::Dp,
         }
     }
 
@@ -94,23 +99,55 @@ impl Simulator {
     }
 
     /// Scale the simulation out to a multi-wafer fleet: the wafer
-    /// replicates `wafers` times with DP across wafers; cross-wafer
-    /// gradient reduction is priced hierarchically over the scale-out
-    /// fabric. A 1-wafer [`ScaleOut`] leaves every path untouched.
+    /// replicates `wafers` times over the scale-out fabric's egress
+    /// topology. Under the default [`WaferSpan::Dp`] the cross-wafer
+    /// gradient reduction is priced hierarchically; under
+    /// [`WaferSpan::Pp`] (see [`Self::with_span`]) pipeline stages span
+    /// wafers instead. A 1-wafer [`ScaleOut`] leaves every path
+    /// untouched.
     pub fn with_scaleout(mut self, scaleout: ScaleOut) -> Self {
         self.scaleout = scaleout;
         self
     }
 
+    /// Choose which axis the wafer dimension multiplies (DP or PP across
+    /// wafers). No effect on a single wafer.
+    pub fn with_span(mut self, span: WaferSpan) -> Self {
+        self.span = span;
+        self
+    }
+
     /// The scale-out context.
-    pub fn scaleout(&self) -> ScaleOut {
-        self.scaleout
+    pub fn scaleout(&self) -> &ScaleOut {
+        &self.scaleout
+    }
+
+    /// The wafer-spanning axis.
+    pub fn span(&self) -> WaferSpan {
+        self.span
+    }
+
+    /// The fleet-wide strategy this simulator runs: the local strategy
+    /// replicated over the fleet with this simulator's wafer span. All
+    /// span-dependent dimension arithmetic (global DP/PP) lives on
+    /// [`ScaledStrategy`] so the simulator and the sweep JSON cannot
+    /// disagree.
+    pub fn scaled_strategy(&self) -> ScaledStrategy {
+        ScaledStrategy::with_span(self.scaleout.wafers(), self.strategy, self.span)
+    }
+
+    /// Global pipeline depth: × wafers under a PP span, the per-wafer
+    /// depth otherwise.
+    pub fn global_pp(&self) -> usize {
+        self.scaled_strategy().global_pp()
     }
 
     /// Samples per iteration across the whole fleet (minibatch scales
-    /// with the *global* DP width: on-wafer DP × wafers).
+    /// with the *global* DP width — on-wafer DP × wafers under a DP
+    /// span; a PP span adds no data parallelism).
     pub fn global_minibatch(&self) -> usize {
-        self.workload.minibatch(&self.strategy) * self.scaleout.wafers
+        let wafer_dp_factor = self.scaled_strategy().global_dp() / self.strategy.dp;
+        self.workload.minibatch(&self.strategy) * wafer_dp_factor
     }
 
     /// The fabric kind.
@@ -140,26 +177,18 @@ impl Simulator {
 
     // ------------------------------------------------------ comm phases
 
-    /// Time for one concurrent round of collectives over logical groups.
+    /// Time for one concurrent round of collectives over logical groups,
+    /// via the shared on-wafer phase pricer ([`onwafer_phase_time`]) so
+    /// this and [`ScaleOut::hierarchical_allreduce`] price phases
+    /// identically by construction.
     fn try_phase_time(
         &self,
         groups: &[Vec<usize>],
         kind: CollectiveKind,
         bytes: f64,
     ) -> Result<f64, FluidError> {
-        let plans: Vec<Plan> = groups
-            .iter()
-            .filter(|g| g.len() > 1)
-            .map(|g| self.fabric.plan_collective(kind, &self.placement.map(g), bytes))
-            .collect();
-        if plans.is_empty() || bytes <= 0.0 {
-            return Ok(0.0);
-        }
-        Ok(self
-            .fabric
-            .try_run_concurrent(&plans)?
-            .into_iter()
-            .fold(0.0, f64::max))
+        let mapped: Vec<Vec<usize>> = groups.iter().map(|g| self.placement.map(g)).collect();
+        onwafer_phase_time(self.fabric.as_ref(), kind, &mapped, bytes)
     }
 
     /// One concurrent MP All-Reduce round on `bytes` per worker.
@@ -204,13 +233,28 @@ impl Simulator {
     }
 
     /// One concurrent PP boundary transfer (multicast from one member of
-    /// stage s's MP group to stage s+1's MP group, per DP replica).
+    /// stage s's MP group to stage s+1's MP group, per DP replica). Under
+    /// a PP wafer span the wafer-boundary transfers additionally cross
+    /// the egress fabric.
     pub fn pp_round(&self, bytes: f64) -> f64 {
         self.try_pp_round(bytes).unwrap_or_else(|e| panic!("{e}"))
     }
 
-    /// Fallible form of [`Self::pp_round`].
+    /// Fallible form of [`Self::pp_round`]: the slower of the on-wafer
+    /// boundary round and the cross-wafer boundary round (they run in the
+    /// same pipeline slot on disjoint fabrics).
     pub fn try_pp_round(&self, bytes: f64) -> Result<f64, FluidError> {
+        if bytes <= 0.0 {
+            return Ok(0.0);
+        }
+        let on_wafer = self.try_pp_round_onwafer(bytes)?;
+        let cross = self.try_pp_round_xwafer(bytes)?;
+        Ok(on_wafer.max(cross))
+    }
+
+    /// The on-wafer stage-boundary round (every wafer runs an identical
+    /// copy, so one wafer's round prices the fleet's).
+    fn try_pp_round_onwafer(&self, bytes: f64) -> Result<f64, FluidError> {
         if self.strategy.pp < 2 || bytes <= 0.0 {
             return Ok(0.0);
         }
@@ -233,6 +277,24 @@ impl Simulator {
             .try_run_concurrent(&plans)?
             .into_iter()
             .fold(0.0, f64::max))
+    }
+
+    /// The cross-wafer stage-boundary round under a PP span: every DP
+    /// replica pushes `bytes` over each wafer boundary concurrently. The
+    /// `dp` replica flows of one boundary share that boundary's egress
+    /// path equally, which is max-min-fair equivalent to a single flow
+    /// carrying their combined payload — so each boundary is priced as
+    /// one aggregated flow, keeping the fluid transfer set small.
+    fn try_pp_round_xwafer(&self, bytes: f64) -> Result<f64, FluidError> {
+        if self.span != WaferSpan::Pp || self.scaleout.is_single() || bytes <= 0.0 {
+            return Ok(0.0);
+        }
+        let wafers = self.scaleout.wafers();
+        let replica_bytes = self.strategy.dp as f64 * bytes;
+        let flows: Vec<P2pFlow> = (0..wafers - 1)
+            .map(|w| P2pFlow::new(w, w + 1, replica_bytes))
+            .collect();
+        self.scaleout.try_boundary_p2p(&flows)
     }
 
     // -------------------------------------------------------- iteration
@@ -277,11 +339,15 @@ impl Simulator {
         let samples_replica = config::SAMPLES_PER_REPLICA as f64;
         let mb_samples = samples_replica / mb as f64;
 
-        // Stage partition by FLOPs.
+        // Stage partition by FLOPs over the *global* pipeline depth —
+        // under a PP wafer span the stages tile the whole fleet, so each
+        // wafer holds 1/wafers of the layers (the memory-capacity story)
+        // and the slot count grows with the deeper pipeline.
+        let pp_global = self.global_pp();
         let flops: Vec<f64> = w.layers.iter().map(|l| l.fwd_flops).collect();
-        let starts = schedule::partition_stages(&flops, s.pp.min(w.layers.len()));
+        let starts = schedule::partition_stages(&flops, pp_global.min(w.layers.len()));
         let ranges = schedule::stage_ranges(&starts, w.layers.len());
-        let slots = schedule::pipeline_slots(mb, s.pp) as f64;
+        let slots = schedule::pipeline_slots(mb, pp_global) as f64;
 
         // Per-stage per-microbatch compute & MP comm (fwd).
         let mut f_comp_max = 0.0_f64;
@@ -315,20 +381,28 @@ impl Simulator {
         out.compute = compute;
         out.add(CommType::Mp, mp_exposed);
 
-        // PP boundary transfers: fwd activation + bwd gradient per slot.
-        if s.pp > 1 {
+        // PP boundary transfers: fwd activation + bwd gradient per slot
+        // (under a PP span this includes the cross-wafer boundary flows).
+        if pp_global > 1 {
             let t = self.try_pp_round(boundary_act)?;
             out.add(CommType::Pp, slots * 2.0 * t);
         }
 
         // DP gradient All-Reduce, bucketed. Exposed fully (the paper's
         // Fig. 10 semantics) unless `overlap_dp` enables the bucketed
-        // overlap recurrence against backward compute.
-        if s.dp > 1 || !self.scaleout.is_single() {
-            let shard = w.params_bytes() / s.mp as f64 / s.pp as f64;
+        // overlap recurrence against backward compute. Only a DP wafer
+        // span adds cross-wafer gradient traffic; under a PP span every
+        // DP group lives within one wafer.
+        let cross_dp = self.span == WaferSpan::Dp && !self.scaleout.is_single();
+        if s.dp > 1 || cross_dp {
+            let shard = w.params_bytes() / s.mp as f64 / pp_global as f64;
             let nb = w.dp_buckets.max(1);
             let bucket_bytes = shard / nb as f64;
-            let per_bucket = self.try_hier_dp_round(bucket_bytes)?;
+            let per_bucket = if cross_dp {
+                self.try_hier_dp_round(bucket_bytes)?
+            } else {
+                self.try_dp_round(bucket_bytes)?
+            };
             let exposed = if w.overlap_dp {
                 let bwd_compute = compute * 2.0 / 3.0;
                 schedule::exposed_dp_time(bwd_compute, &vec![per_bucket; nb])
@@ -358,7 +432,6 @@ impl Simulator {
         // (Sec. VII-C's GPT-3 discussion); pp=1 streams layer by layer.
         let group = s.pp.max(1);
         let layers = &w.layers;
-        let n_groups = layers.len().div_ceil(group);
 
         let io_in_time = |bytes: f64| -> Result<f64, FluidError> {
             if bytes <= 0.0 {
@@ -379,82 +452,135 @@ impl Simulator {
             self.fabric.try_run_plan(&plan)
         };
 
-        let mut compute_total = 0.0;
-        let mut mp_total = 0.0;
-        let mut pp_total = 0.0;
-        let mut stream_exposed = 0.0;
+        // Per-wafer layer slices: under a PP wafer span the fleet tiles
+        // the layer list into `wafers` contiguous blocks that stream
+        // *concurrently* (microbatches pipeline through the blocks), so
+        // the iteration's critical path is the slowest block's sweep and
+        // no cross-wafer gradient reduction exists (each wafer owns
+        // distinct layers). A DP span — and the single wafer — streams
+        // the whole list on every wafer.
+        let wafers = self.scaleout.wafers();
+        let pp_span = self.span == WaferSpan::Pp && wafers > 1;
+        let slices: Vec<(usize, usize)> = if pp_span {
+            let per = layers.len().div_ceil(wafers);
+            (0..wafers)
+                .map(|k| (k * per, ((k + 1) * per).min(layers.len())))
+                .filter(|(a, b)| a < b)
+                .collect()
+        } else {
+            vec![(0, layers.len())]
+        };
 
-        // fwd + bwd sweeps. In each sweep the group's weights stream in
-        // while the previous group computes; exposure is the non-hidden
-        // remainder. On bwd, gradients also stream out (ReduceOut, on the
-        // opposite link direction — concurrent with the next load).
-        for sweep in 0..2usize {
-            let bwd = sweep == 1;
-            let mut prev_overlap = 0.0_f64; // compute available to hide the next load
-            for gi in 0..n_groups {
-                let a = gi * group;
-                let b = ((gi + 1) * group).min(layers.len());
-                let params: f64 = layers[a..b].iter().map(|l| l.params_bytes).sum();
-                let flops: f64 = layers[a..b]
-                    .iter()
-                    .map(|l| {
-                        l.fwd_flops * w.active_param_fraction * mb_samples * mb as f64
-                            / s.mp as f64
-                    })
-                    .sum();
-                let comp = self.comp_time(flops) * if bwd { 2.0 } else { 1.0 };
-                // MP comm inside the group (blocking, adds to the hideable
-                // window denominator's wall time).
-                let mut mp = 0.0;
-                if s.mp > 1 {
-                    for l in &layers[a..b] {
-                        if l.mp_collectives > 0 {
-                            mp += self.try_mp_round(l.act_bytes * mb_samples)?
-                                * l.mp_collectives as f64
-                                * mb as f64;
+        // One wafer's fwd + bwd sweeps over its layer slice. In each
+        // sweep the group's weights stream in while the previous group
+        // computes; exposure is the non-hidden remainder. On bwd,
+        // gradients also stream out (ReduceOut, on the opposite link
+        // direction — concurrent with the next load). Returns
+        // (compute, mp, pp, stream-exposed).
+        let sweep_slice = |lo: usize, hi: usize| -> Result<(f64, f64, f64, f64), FluidError> {
+            let n_groups = (hi - lo).div_ceil(group);
+            let mut compute_total = 0.0_f64;
+            let mut mp_total = 0.0_f64;
+            let mut pp_total = 0.0_f64;
+            let mut stream_exposed = 0.0_f64;
+            for sweep in 0..2usize {
+                let bwd = sweep == 1;
+                let mut prev_overlap = 0.0_f64; // compute hiding the next load
+                for gi in 0..n_groups {
+                    let a = lo + gi * group;
+                    let b = (a + group).min(hi);
+                    let params: f64 = layers[a..b].iter().map(|l| l.params_bytes).sum();
+                    let flops: f64 = layers[a..b]
+                        .iter()
+                        .map(|l| {
+                            l.fwd_flops * w.active_param_fraction * mb_samples * mb as f64
+                                / s.mp as f64
+                        })
+                        .sum();
+                    let comp = self.comp_time(flops) * if bwd { 2.0 } else { 1.0 };
+                    // MP comm inside the group (blocking, adds to the
+                    // hideable window denominator's wall time).
+                    let mut mp = 0.0;
+                    if s.mp > 1 {
+                        for l in &layers[a..b] {
+                            if l.mp_collectives > 0 {
+                                mp += self.try_mp_round(l.act_bytes * mb_samples)?
+                                    * l.mp_collectives as f64
+                                    * mb as f64;
+                            }
                         }
                     }
-                }
-                // PP handoff between the pp layers of the group.
-                let pp = if s.pp > 1 {
-                    self.try_pp_round(layers[b - 1].act_bytes * mb_samples)? * mb as f64
-                } else {
-                    0.0
-                };
+                    // On-wafer PP handoff between the pp layers of the
+                    // group (slice-boundary handoffs are priced over the
+                    // egress fabric below).
+                    let pp = if s.pp > 1 {
+                        self.try_pp_round_onwafer(layers[b - 1].act_bytes * mb_samples)?
+                            * mb as f64
+                    } else {
+                        0.0
+                    };
 
-                let mut io = io_in_time(params)?;
-                if bwd {
-                    // Gradients stream out; DP reduction happens in-path
-                    // (Sec. VII-C: "DP groups reduce the gradients as they
-                    // stream them out"). In/out use opposite directions,
-                    // so the group's I/O time is the max of the two.
-                    io = io.max(io_out_time(params)?);
+                    let mut io = io_in_time(params)?;
+                    if bwd {
+                        // Gradients stream out; DP reduction happens
+                        // in-path (Sec. VII-C: "DP groups reduce the
+                        // gradients as they stream them out"). In/out use
+                        // opposite directions, so the group's I/O time is
+                        // the max of the two.
+                        io = io.max(io_out_time(params)?);
+                    }
+                    stream_exposed += (io - prev_overlap).max(0.0);
+                    // Prefetch: the next group's load hides under this
+                    // group's compute only when double-buffering is
+                    // possible.
+                    prev_overlap = if w.stream_prefetch { comp + mp + pp } else { 0.0 };
+                    compute_total += comp;
+                    mp_total += mp;
+                    pp_total += pp;
                 }
-                stream_exposed += (io - prev_overlap).max(0.0);
-                // Prefetch: the next group's load hides under this
-                // group's compute only when double-buffering is possible.
-                prev_overlap = if w.stream_prefetch { comp + mp + pp } else { 0.0 };
-                compute_total += comp;
-                mp_total += mp;
-                pp_total += pp;
+                // The last group's compute hides nothing further.
             }
-            // The last group's compute hides nothing further.
+            Ok((compute_total, mp_total, pp_total, stream_exposed))
+        };
+
+        // Critical path: the slice whose sweep takes longest (the blocks
+        // pipeline, so the fleet drains at the slowest block's rate).
+        let mut best = (0.0_f64, 0.0_f64, 0.0_f64, 0.0_f64);
+        let mut best_total = f64::NEG_INFINITY;
+        for &(lo, hi) in &slices {
+            let t = sweep_slice(lo, hi)?;
+            let total = t.0 + t.1 + t.2 + t.3;
+            if total > best_total {
+                best_total = total;
+                best = t;
+            }
         }
+        out.compute = best.0;
+        out.add(CommType::Mp, best.1);
+        out.add(CommType::Pp, best.2);
+        out.add(CommType::Stream, best.3);
 
-        out.compute = compute_total;
-        out.add(CommType::Mp, mp_total);
-        out.add(CommType::Pp, pp_total);
-        out.add(CommType::Stream, stream_exposed);
-
-        // Cross-wafer gradient reduction: on-wafer DP folds into the
-        // gradient stream-out above, but with DP across wafers each
-        // wafer's reduced gradients (the full model, whatever the
-        // on-wafer MP sharding) must also be all-reduced over the
-        // off-wafer fabric before the optimizer step.
-        if !self.scaleout.is_single() {
+        if pp_span {
+            // Slice-boundary activations cross the egress fabric once per
+            // microbatch per sweep direction, all boundaries concurrent.
+            let flows: Vec<P2pFlow> = slices
+                .windows(2)
+                .enumerate()
+                .map(|(k, pair)| {
+                    P2pFlow::new(k, k + 1, layers[pair[0].1 - 1].act_bytes * mb_samples)
+                })
+                .collect();
+            let t = self.scaleout.try_boundary_p2p(&flows)?;
+            out.add(CommType::Pp, 2.0 * mb as f64 * t);
+        } else if !self.scaleout.is_single() {
+            // Cross-wafer gradient reduction (DP span): on-wafer DP folds
+            // into the gradient stream-out above, but with DP across
+            // wafers each wafer's reduced gradients (the full model,
+            // whatever the on-wafer MP sharding) must also be all-reduced
+            // over the off-wafer fabric before the optimizer step.
             out.add(
                 CommType::Dp,
-                self.scaleout.cross_allreduce_time(w.params_bytes()),
+                self.scaleout.try_cross_allreduce(w.params_bytes())?,
             );
         }
 
@@ -696,6 +822,76 @@ mod tests {
             .with_scaleout(ScaleOut::with_wafers(2))
             .iterate();
         assert!(b2.get(CommType::Dp) > 0.0, "fleet exposes the off-wafer all-reduce");
+    }
+
+    #[test]
+    fn pp_span_deepens_the_pipeline_without_scaling_minibatch() {
+        use crate::fabric::scaleout::ScaleOut;
+        let w = workload::transformer_17b();
+        let s = w.default_strategy;
+        let one = Simulator::new(FabricKind::FredD, w.clone(), s);
+        let four = Simulator::new(FabricKind::FredD, w.clone(), s)
+            .with_scaleout(ScaleOut::with_wafers(4))
+            .with_span(WaferSpan::Pp);
+        assert_eq!(four.global_pp(), 4 * s.pp, "wafer dimension multiplies PP");
+        assert_eq!(
+            four.global_minibatch(),
+            one.global_minibatch(),
+            "a PP span adds no data parallelism"
+        );
+        let b1 = one.iterate();
+        let b4 = four.iterate();
+        assert!(b4.total().is_finite() && b4.total() > 0.0);
+        // Stage boundaries now cross the egress fabric: PP exposure grows.
+        assert!(
+            b4.get(CommType::Pp) > b1.get(CommType::Pp),
+            "cross-wafer boundaries must cost: {} vs {}",
+            b4.get(CommType::Pp),
+            b1.get(CommType::Pp)
+        );
+        // But no cross-wafer DP traffic exists under a PP span, and the
+        // per-worker parameter shard shrinks with the deeper pipeline.
+        assert!(b4.get(CommType::Dp) <= b1.get(CommType::Dp));
+    }
+
+    #[test]
+    fn pp_span_on_one_wafer_is_the_identity() {
+        use crate::fabric::scaleout::ScaleOut;
+        for w in [workload::resnet152(), workload::transformer_17b(), workload::gpt3()] {
+            let bare = sim(FabricKind::FredD, w.clone()).iterate();
+            let spanned = sim(FabricKind::FredD, w.clone())
+                .with_scaleout(ScaleOut::single())
+                .with_span(WaferSpan::Pp)
+                .iterate();
+            assert_eq!(bare.total(), spanned.total(), "{}", w.name);
+            assert_eq!(bare.exposed, spanned.exposed, "{}", w.name);
+        }
+    }
+
+    #[test]
+    fn streaming_pp_span_shards_the_layer_sweep() {
+        use crate::fabric::scaleout::ScaleOut;
+        let w = workload::transformer_1t();
+        let one = sim(FabricKind::FredD, w.clone()).iterate();
+        let four = sim(FabricKind::FredD, w.clone())
+            .with_scaleout(ScaleOut::with_wafers(4))
+            .with_span(WaferSpan::Pp)
+            .iterate();
+        // Each wafer streams ~1/4 of the layers, so the exposed stream
+        // time drops, and no cross-wafer gradient All-Reduce is paid.
+        assert!(
+            four.get(CommType::Stream) < one.get(CommType::Stream),
+            "stream {} must shrink vs {}",
+            four.get(CommType::Stream),
+            one.get(CommType::Stream)
+        );
+        assert_eq!(four.get(CommType::Dp), 0.0, "PP span owns distinct layers per wafer");
+        assert!(four.compute < one.compute, "compute shards across the fleet");
+        // Contrast: the DP span pays the cross-wafer All-Reduce instead.
+        let dp4 = sim(FabricKind::FredD, w.clone())
+            .with_scaleout(ScaleOut::with_wafers(4))
+            .iterate();
+        assert!(dp4.get(CommType::Dp) > 0.0);
     }
 
     #[test]

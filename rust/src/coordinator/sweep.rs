@@ -9,9 +9,15 @@
 //! * **wafer shapes** — `n_l1 × per_l1` (mesh rows × cols; FRED L1 groups
 //!   × NPUs per group), scaled via [`FabricKind::build_sized`] with
 //!   validated trunk/μSwitch sizing,
-//! * **fleet sizes** — 1..N wafers over the off-wafer scale-out fabric
-//!   ([`ScaleOut`]: DP across wafers, MP/PP within), optionally crossed
-//!   with several cross-wafer egress bandwidths,
+//! * **fleet sizes** — 1..N wafers over the off-wafer scale-out fabric,
+//!   optionally crossed with several cross-wafer egress bandwidths and
+//!   latencies,
+//! * **egress topologies** — the cross-wafer interconnect itself
+//!   ([`EgressTopo`]: ring / CXL fat-tree / dragonfly, each a link-level
+//!   model — the LIBRA-style per-dimension topology choice),
+//! * **wafer spans** — which axis the wafer dimension multiplies
+//!   ([`WaferSpan`]: DP across wafers, or PP across wafers with boundary
+//!   activations priced over the egress fabric),
 //! * **parallelization strategies** — every `MP·DP·PP` factorization of
 //!   the wafer's NPU count (capped, deterministically, by
 //!   [`SweepConfig::max_strategies`]),
@@ -43,9 +49,10 @@
 
 use super::config::FabricKind;
 use super::metrics::{Breakdown, CommType};
-use super::parallelism::{ScaledStrategy, Strategy};
+use super::parallelism::{ScaledStrategy, Strategy, WaferSpan};
 use super::sim::Simulator;
 use super::workload::Workload;
+use crate::fabric::egress::EgressTopo;
 use crate::fabric::mesh::Mesh2D;
 use crate::fabric::scaleout::{ScaleOut, DEFAULT_EGRESS_BW, DEFAULT_XWAFER_LATENCY};
 use crate::fabric::topology::Fabric;
@@ -58,8 +65,11 @@ use std::collections::HashMap;
 /// breaking change to field names or semantics (golden-file test:
 /// `tests/sweep_cli.rs`). v2 added `schema_version` itself plus the
 /// scale-out fields (`wafers`, `xwafer_bw`, `total_npus`, `global_dp`,
-/// `scaled_strategy`).
-pub const SCHEMA_VERSION: f64 = 2.0;
+/// `scaled_strategy`); v3 added the egress axes (`xwafer_topo`,
+/// `wafer_span`, `xwafer_latency_s`, `global_pp`). This const is the
+/// single place the version lives — consumers must check it before
+/// reading point fields.
+pub const SCHEMA_VERSION: f64 = 3.0;
 
 /// A wafer shape: `n_l1` rows / L1 groups × `per_l1` columns / NPUs per
 /// group.
@@ -158,6 +168,18 @@ pub struct SweepConfig {
     /// fleets never use egress bandwidth, so they are evaluated once (at
     /// the first listed value) rather than duplicated per bandwidth.
     pub xwafer_bws: Vec<f64>,
+    /// Cross-wafer hop latencies (seconds) to sweep. An empty list falls
+    /// back to [`DEFAULT_XWAFER_LATENCY`]; single-wafer fleets are
+    /// evaluated once, like [`Self::xwafer_bws`].
+    pub xwafer_latencies: Vec<f64>,
+    /// Cross-wafer egress topologies to sweep. An empty list falls back
+    /// to [`EgressTopo::Ring`] (PR 2's model); single-wafer fleets are
+    /// evaluated once.
+    pub xwafer_topos: Vec<EgressTopo>,
+    /// Wafer-spanning axes to sweep ([`WaferSpan::Dp`] and/or
+    /// [`WaferSpan::Pp`]). An empty list falls back to DP across wafers;
+    /// single-wafer fleets are evaluated once.
+    pub wafer_spans: Vec<WaferSpan>,
     /// Fabric kinds.
     pub fabrics: Vec<FabricKind>,
     /// Explicit strategies, or `None` to enumerate all factorizations of
@@ -182,6 +204,9 @@ impl Default for SweepConfig {
             wafers: vec![WaferDims::PAPER],
             wafer_counts: vec![1],
             xwafer_bws: vec![DEFAULT_EGRESS_BW],
+            xwafer_latencies: vec![DEFAULT_XWAFER_LATENCY],
+            xwafer_topos: vec![EgressTopo::Ring],
+            wafer_spans: vec![WaferSpan::Dp],
             fabrics: FabricKind::all().to_vec(),
             strategies: None,
             max_strategies: 12,
@@ -233,6 +258,12 @@ pub struct SweepPoint {
     pub wafers: usize,
     /// Cross-wafer egress bandwidth (bytes/s) this point was priced at.
     pub xwafer_bw: f64,
+    /// Cross-wafer hop latency (seconds) this point was priced at.
+    pub xwafer_latency: f64,
+    /// Cross-wafer egress topology this point was priced over.
+    pub topo: EgressTopo,
+    /// Which axis the wafer dimension multiplies.
+    pub span: WaferSpan,
     /// Fabric kind.
     pub fabric: FabricKind,
     /// Per-wafer strategy (the wafer dimension is `wafers`).
@@ -244,7 +275,7 @@ pub struct SweepPoint {
 impl SweepPoint {
     /// The full wafer-dimensioned strategy of this point.
     pub fn scaled_strategy(&self) -> ScaledStrategy {
-        ScaledStrategy::new(self.wafers, self.strategy)
+        ScaledStrategy::with_span(self.wafers, self.strategy, self.span)
     }
 }
 
@@ -266,6 +297,9 @@ struct PointSpec {
     wafer: WaferDims,
     wafers: usize,
     xwafer_bw: f64,
+    xwafer_latency: f64,
+    topo: EgressTopo,
+    span: WaferSpan,
     workload_idx: usize,
     strategy: Strategy,
 }
@@ -286,7 +320,8 @@ fn eval_point(cfg: &SweepConfig, spec: &PointSpec, cache: &mut ProtoCache) -> Sw
         )
     });
     let workload = &cfg.workloads[spec.workload_idx];
-    let scale = ScaleOut::new(spec.wafers, spec.xwafer_bw, DEFAULT_XWAFER_LATENCY);
+    let scale =
+        ScaleOut::with_topo(spec.topo, spec.wafers, spec.xwafer_bw, spec.xwafer_latency);
     let sim = Simulator::with_fabric(
         spec.kind,
         proto.clone_box(),
@@ -294,7 +329,8 @@ fn eval_point(cfg: &SweepConfig, spec: &PointSpec, cache: &mut ProtoCache) -> Sw
         workload.clone(),
         spec.strategy,
     )
-    .with_scaleout(scale);
+    .with_scaleout(scale)
+    .with_span(spec.span);
     let outcome = match sim.try_iterate() {
         Ok(breakdown) => {
             let per_sample = breakdown.total() / sim.global_minibatch().max(1) as f64;
@@ -311,6 +347,9 @@ fn eval_point(cfg: &SweepConfig, spec: &PointSpec, cache: &mut ProtoCache) -> Sw
         wafer: spec.wafer,
         wafers: spec.wafers,
         xwafer_bw: spec.xwafer_bw,
+        xwafer_latency: spec.xwafer_latency,
+        topo: spec.topo,
+        span: spec.span,
         fabric: spec.kind,
         strategy: spec.strategy,
         outcome,
@@ -326,6 +365,21 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepReport {
         vec![DEFAULT_EGRESS_BW]
     } else {
         cfg.xwafer_bws.clone()
+    };
+    let xwafer_latencies: Vec<f64> = if cfg.xwafer_latencies.is_empty() {
+        vec![DEFAULT_XWAFER_LATENCY]
+    } else {
+        cfg.xwafer_latencies.clone()
+    };
+    let xwafer_topos: Vec<EgressTopo> = if cfg.xwafer_topos.is_empty() {
+        vec![EgressTopo::Ring]
+    } else {
+        cfg.xwafer_topos.clone()
+    };
+    let wafer_spans: Vec<WaferSpan> = if cfg.wafer_spans.is_empty() {
+        vec![WaferSpan::Dp]
+    } else {
+        cfg.wafer_spans.clone()
     };
     let mut specs: Vec<PointSpec> = Vec::new();
     let mut truncated = 0usize;
@@ -347,20 +401,34 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepReport {
         };
         for &wafers in &cfg.wafer_counts {
             // A single-wafer fleet never touches the egress fabric:
-            // evaluate it once instead of once per bandwidth.
-            let bws = if wafers == 1 { &xwafer_bws[..1] } else { &xwafer_bws[..] };
+            // evaluate it once instead of once per bandwidth / latency /
+            // topology / span.
+            let single = wafers == 1;
+            let bws = if single { &xwafer_bws[..1] } else { &xwafer_bws[..] };
+            let lats = if single { &xwafer_latencies[..1] } else { &xwafer_latencies[..] };
+            let topos = if single { &xwafer_topos[..1] } else { &xwafer_topos[..] };
+            let spans = if single { &wafer_spans[..1] } else { &wafer_spans[..] };
             for &xwafer_bw in bws {
-                for &kind in &cfg.fabrics {
-                    for workload_idx in 0..cfg.workloads.len() {
-                        for scaled in scale_strategies(wafers, &locals) {
-                            specs.push(PointSpec {
-                                kind,
-                                wafer,
-                                wafers: scaled.wafers,
-                                xwafer_bw,
-                                workload_idx,
-                                strategy: scaled.local,
-                            });
+                for &xwafer_latency in lats {
+                    for &topo in topos {
+                        for &span in spans {
+                            for &kind in &cfg.fabrics {
+                                for workload_idx in 0..cfg.workloads.len() {
+                                    for scaled in scale_strategies(wafers, &locals) {
+                                        specs.push(PointSpec {
+                                            kind,
+                                            wafer,
+                                            wafers: scaled.wafers,
+                                            xwafer_bw,
+                                            xwafer_latency,
+                                            topo,
+                                            span,
+                                            workload_idx,
+                                            strategy: scaled.local,
+                                        });
+                                    }
+                                }
+                            }
                         }
                     }
                 }
@@ -415,6 +483,9 @@ fn rank(points: &mut [SweepPoint]) {
             .then_with(|| a.wafer.cmp(&b.wafer))
             .then_with(|| a.wafers.cmp(&b.wafers))
             .then_with(|| a.xwafer_bw.total_cmp(&b.xwafer_bw))
+            .then_with(|| a.xwafer_latency.total_cmp(&b.xwafer_latency))
+            .then_with(|| a.topo.cmp(&b.topo))
+            .then_with(|| a.span.cmp(&b.span))
             .then_with(|| a.fabric.name().cmp(b.fabric.name()))
             .then_with(|| a.strategy.to_string().cmp(&b.strategy.to_string()))
     });
@@ -426,16 +497,27 @@ impl SweepReport {
     /// never loses to `slower` — the Fig. 9/10 ordering checks (e.g.
     /// FRED-D vs FRED-A). Returns `(strict_wins, comparisons)`.
     pub fn count_orderings(&self, faster: FabricKind, slower: FabricKind) -> (usize, usize) {
-        // f64 is not Hash; the bandwidth's bit pattern is (bandwidths come
-        // from a finite config list, so bitwise equality is the right
+        // f64 is not Hash; the bandwidth/latency bit patterns are (both
+        // come from finite config lists, so bitwise equality is the right
         // match).
-        let mut fast: HashMap<(&str, WaferDims, usize, u64, Strategy), f64> = HashMap::new();
+        type Key<'a> =
+            (&'a str, WaferDims, usize, u64, u64, EgressTopo, WaferSpan, Strategy);
+        fn key(p: &SweepPoint) -> Key<'_> {
+            (
+                p.workload.as_str(),
+                p.wafer,
+                p.wafers,
+                p.xwafer_bw.to_bits(),
+                p.xwafer_latency.to_bits(),
+                p.topo,
+                p.span,
+                p.strategy,
+            )
+        }
+        let mut fast: HashMap<Key, f64> = HashMap::new();
         for q in self.points.iter().filter(|q| q.fabric == faster) {
             if let Ok(m) = &q.outcome {
-                fast.insert(
-                    (q.workload.as_str(), q.wafer, q.wafers, q.xwafer_bw.to_bits(), q.strategy),
-                    m.breakdown.total(),
-                );
+                fast.insert(key(q), m.breakdown.total());
             }
         }
         let mut wins = 0usize;
@@ -443,13 +525,7 @@ impl SweepReport {
         for p in self.points.iter().filter(|p| p.fabric == slower) {
             let Ok(m) = &p.outcome else { continue };
             let ts = m.breakdown.total();
-            let Some(&tf) = fast.get(&(
-                p.workload.as_str(),
-                p.wafer,
-                p.wafers,
-                p.xwafer_bw.to_bits(),
-                p.strategy,
-            )) else {
+            let Some(&tf) = fast.get(&key(p)) else {
                 continue;
             };
             comparisons += 1;
@@ -470,7 +546,13 @@ impl SweepReport {
             let fleet = if p.wafers == 1 {
                 "1".to_string()
             } else {
-                format!("{} @ {}", p.wafers, fmt_bw(p.xwafer_bw))
+                format!(
+                    "{}{} {} @ {}",
+                    p.wafers,
+                    if p.span == WaferSpan::Pp { "(pp)" } else { "" },
+                    p.topo.name(),
+                    fmt_bw(p.xwafer_bw)
+                )
             };
             match &p.outcome {
                 Ok(m) => t.row(&[
@@ -516,6 +598,9 @@ impl SweepReport {
                     ("n_npus", Json::Num(p.wafer.npus() as f64)),
                     ("wafers", Json::Num(p.wafers as f64)),
                     ("xwafer_bw", Json::Num(p.xwafer_bw)),
+                    ("xwafer_latency_s", Json::Num(p.xwafer_latency)),
+                    ("xwafer_topo", Json::Str(p.topo.name().to_string())),
+                    ("wafer_span", Json::Str(p.span.name().to_string())),
                     (
                         "total_npus",
                         Json::Num((p.wafer.npus() * p.wafers) as f64),
@@ -532,6 +617,10 @@ impl SweepReport {
                     (
                         "global_dp",
                         Json::Num(p.scaled_strategy().global_dp() as f64),
+                    ),
+                    (
+                        "global_pp",
+                        Json::Num(p.scaled_strategy().global_pp() as f64),
                     ),
                     ("ok", Json::Bool(p.outcome.is_ok())),
                 ];
@@ -672,6 +761,10 @@ mod tests {
             assert_eq!(p.get("wafers").and_then(Json::as_usize), Some(1));
             assert_eq!(p.get("total_npus").and_then(Json::as_usize), Some(20));
             assert!(p.get("xwafer_bw").unwrap().as_f64().unwrap() > 0.0);
+            assert_eq!(p.get("xwafer_topo").and_then(Json::as_str), Some("ring"));
+            assert_eq!(p.get("wafer_span").and_then(Json::as_str), Some("dp"));
+            assert!(p.get("xwafer_latency_s").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(p.get("global_pp").unwrap().as_usize().unwrap() >= 1);
         }
     }
 
@@ -763,5 +856,101 @@ mod tests {
         cfg.threads = 3;
         let par = run_sweep(&cfg).to_json().render();
         assert_eq!(seq, par, "thread count must not change sweep output");
+    }
+
+    #[test]
+    fn egress_axes_multiply_fleet_points_only() {
+        let mut cfg = tiny_cfg();
+        cfg.wafer_counts = vec![1, 2];
+        cfg.xwafer_topos = EgressTopo::all().to_vec();
+        cfg.wafer_spans = WaferSpan::all().to_vec();
+        let report = run_sweep(&cfg);
+        // 2 strategies x 2 fabrics x (1-wafer once + 2-wafer x 3 topos x
+        // 2 spans) — single-wafer fleets are never duplicated across the
+        // egress axes.
+        assert_eq!(report.points.len(), 4 + 4 * 6);
+        assert_eq!(report.points.iter().filter(|p| p.wafers == 1).count(), 4);
+        for p in &report.points {
+            assert!(p.outcome.is_ok(), "{} {} infeasible", p.topo, p.span);
+        }
+        let mut topos: Vec<&str> = report
+            .points
+            .iter()
+            .filter(|p| p.wafers == 2)
+            .map(|p| p.topo.name())
+            .collect();
+        topos.sort_unstable();
+        topos.dedup();
+        assert_eq!(topos, vec!["dragonfly", "ring", "tree"]);
+        let pp_points = report
+            .points
+            .iter()
+            .filter(|p| p.wafers == 2 && p.span == WaferSpan::Pp)
+            .count();
+        assert_eq!(pp_points, 4 * 3, "every topo prices the PP span too");
+    }
+
+    #[test]
+    fn latency_axis_sweeps_fleets_and_never_speeds_them_up() {
+        let mut cfg = tiny_cfg();
+        cfg.wafer_counts = vec![1, 4];
+        cfg.xwafer_latencies = vec![100e-9, 10e-6];
+        let report = run_sweep(&cfg);
+        // 1-wafer points once; 4-wafer points per latency.
+        assert_eq!(report.points.len(), 4 + 8);
+        for p in report.points.iter().filter(|p| p.wafers == 4) {
+            assert!(p.outcome.is_ok());
+        }
+        // Matched 4-wafer points: higher hop latency never ranks faster.
+        for p in report.points.iter().filter(|p| p.wafers == 4) {
+            if p.xwafer_latency != 100e-9 {
+                continue;
+            }
+            let slow = report
+                .points
+                .iter()
+                .find(|q| {
+                    q.wafers == 4
+                        && q.xwafer_latency == 10e-6
+                        && q.fabric == p.fabric
+                        && q.strategy == p.strategy
+                })
+                .expect("matched high-latency point");
+            let tf = p.outcome.as_ref().unwrap().breakdown.total();
+            let ts = slow.outcome.as_ref().unwrap().breakdown.total();
+            assert!(tf <= ts, "{}: latency 100ns {tf} vs 10us {ts}", p.strategy);
+        }
+    }
+
+    #[test]
+    fn pp_span_points_cover_the_fleet_and_carry_the_span() {
+        let mut cfg = tiny_cfg();
+        cfg.wafer_counts = vec![4];
+        cfg.wafer_spans = vec![WaferSpan::Pp];
+        let report = run_sweep(&cfg);
+        assert_eq!(report.points.len(), 4);
+        for p in &report.points {
+            assert!(p.outcome.is_ok(), "{}", p.strategy);
+            let scaled = p.scaled_strategy();
+            assert_eq!(scaled.span, WaferSpan::Pp);
+            assert_eq!(scaled.total_workers(), 80, "wafer x MP x DP x PP exact cover");
+            assert_eq!(scaled.global_pp(), 4 * p.strategy.pp);
+            assert_eq!(scaled.global_dp(), p.strategy.dp);
+            assert!(scaled.to_string().starts_with("4W(pp) x "));
+        }
+    }
+
+    #[test]
+    fn threaded_sweep_with_egress_axes_is_byte_identical() {
+        let mut cfg = tiny_cfg();
+        cfg.wafer_counts = vec![1, 2, 4];
+        cfg.xwafer_topos = EgressTopo::all().to_vec();
+        cfg.wafer_spans = WaferSpan::all().to_vec();
+        cfg.xwafer_latencies = vec![DEFAULT_XWAFER_LATENCY, 2e-6];
+        cfg.threads = 1;
+        let seq = run_sweep(&cfg).to_json().render();
+        cfg.threads = 5;
+        let par = run_sweep(&cfg).to_json().render();
+        assert_eq!(seq, par, "egress axes must not break thread determinism");
     }
 }

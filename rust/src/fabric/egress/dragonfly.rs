@@ -1,0 +1,331 @@
+//! Switch-less dragonfly egress fabric (arXiv 2407.10290's proposal,
+//! adapted to the per-wafer egress-port budget).
+//!
+//! Wafers are tiled into groups of `⌈√W⌉`; wafers inside a group talk
+//! directly (all-to-all over their egress ports), and each ordered group
+//! pair shares a single global link at a fraction of one wafer's egress
+//! bandwidth. Minimal routing: one local hop inside the source group
+//! model — egress port out, ingress port in — and one global hop between
+//! groups.
+//!
+//! The cross-wafer All-Reduce is hierarchical, mirroring the on-wafer ↔
+//! off-wafer split one level up:
+//!
+//! 1. **intra-group reduce-scatter** (ring over the group's egress
+//!    ports),
+//! 2. **inter-group all-reduce** on the reduce-scatter shards, which
+//!    land on the first `m_min` positions of every group (`m_min` = the
+//!    smallest group size, so ragged fleets still run complete rings):
+//!    position-`j` wafers of every group form a ring over the global
+//!    links — all `m_min` position rings share those global links, which
+//!    the fluid simulator resolves (this is where the dragonfly's thin
+//!    global links show up as congestion),
+//! 3. **intra-group all-gather** (mirror of 1).
+//!
+//! Latency: `2·(g-1)` local steps for RS+AG plus `2·(G-1)` global ring
+//! steps — far fewer than the flat ring's `2·(W-1)` once `W` is large,
+//! at the price of contended global links.
+
+use super::super::fluid::{FluidError, FluidSim, LinkId, Network, Transfer};
+use super::{price_concurrent_p2p, validate_params, EgressFabric, EgressTopo, P2pFlow};
+
+/// Fraction of a wafer's egress bandwidth provisioned on each global
+/// (group-to-group) link.
+pub const DRAGONFLY_GLOBAL_FRACTION: f64 = 0.5;
+
+/// The switch-less dragonfly fabric.
+#[derive(Debug, Clone)]
+pub struct Dragonfly {
+    wafers: usize,
+    egress_bw: f64,
+    latency: f64,
+    /// Wafers per group (`⌈√W⌉`; the last group may be smaller).
+    group_size: usize,
+    n_groups: usize,
+    sim: FluidSim,
+    /// Per-wafer egress port (sending side of every route).
+    egress: Vec<LinkId>,
+    /// Per-wafer ingress port (receiving side of every route).
+    ingress: Vec<LinkId>,
+    /// Directed global links, indexed `[src_group * n_groups + dst_group]`
+    /// (`None` on the diagonal).
+    global: Vec<Option<LinkId>>,
+}
+
+impl Dragonfly {
+    /// Build a `wafers`-node dragonfly at `⌈√W⌉` wafers per group.
+    pub fn new(wafers: usize, egress_bw: f64, latency: f64) -> Self {
+        validate_params(wafers, egress_bw, latency);
+        let group_size = ((wafers as f64).sqrt().ceil() as usize).max(1);
+        let n_groups = wafers.div_ceil(group_size);
+        let mut net = Network::new();
+        let egress: Vec<LinkId> = (0..wafers)
+            .map(|w| net.add_link(format!("egress{w}"), egress_bw))
+            .collect();
+        let ingress: Vec<LinkId> = (0..wafers)
+            .map(|w| net.add_link(format!("ingress{w}"), egress_bw))
+            .collect();
+        let mut global: Vec<Option<LinkId>> = vec![None; n_groups * n_groups];
+        for a in 0..n_groups {
+            for b in 0..n_groups {
+                if a != b {
+                    global[a * n_groups + b] = Some(net.add_link(
+                        format!("global{a}->{b}"),
+                        egress_bw * DRAGONFLY_GLOBAL_FRACTION,
+                    ));
+                }
+            }
+        }
+        Self {
+            wafers,
+            egress_bw,
+            latency,
+            group_size,
+            n_groups,
+            sim: FluidSim::new(net),
+            egress,
+            ingress,
+            global,
+        }
+    }
+
+    /// Group of a wafer.
+    fn group(&self, w: usize) -> usize {
+        w / self.group_size
+    }
+
+    /// Members of group `a` (the last group may be ragged).
+    fn members(&self, a: usize) -> std::ops::Range<usize> {
+        let lo = a * self.group_size;
+        lo..((a + 1) * self.group_size).min(self.wafers)
+    }
+
+    /// Wafers per group, as built (`⌈√W⌉`).
+    pub fn group_size(&self) -> usize {
+        self.group_size
+    }
+
+    /// Number of groups.
+    pub fn n_groups(&self) -> usize {
+        self.n_groups
+    }
+
+    fn global_link(&self, a: usize, b: usize) -> LinkId {
+        self.global[a * self.n_groups + b].expect("no global link on the diagonal")
+    }
+
+    /// Minimal route with its hop count.
+    fn route(&self, src: usize, dst: usize) -> (Vec<LinkId>, usize) {
+        let (a, b) = (self.group(src), self.group(dst));
+        if a == b {
+            (vec![self.egress[src], self.ingress[dst]], 1)
+        } else {
+            (
+                vec![self.egress[src], self.global_link(a, b), self.ingress[dst]],
+                2,
+            )
+        }
+    }
+
+    /// One intra-group ring phase (reduce-scatter or all-gather): every
+    /// wafer of every multi-member group moves `(m-1)/m · wafer_bytes`
+    /// through its egress port towards its in-group successor's ingress.
+    fn local_ring_phase(&self, wafer_bytes: f64) -> Vec<Transfer> {
+        let mut out = Vec::new();
+        for a in 0..self.n_groups {
+            let members = self.members(a);
+            let m = members.len();
+            if m < 2 {
+                continue;
+            }
+            let bytes = (m as f64 - 1.0) / m as f64 * wafer_bytes;
+            for (j, w) in members.clone().enumerate() {
+                let next = members.start + (j + 1) % m;
+                out.push(Transfer::new(vec![self.egress[w], self.ingress[next]], bytes, 0));
+            }
+        }
+        out
+    }
+
+    /// The inter-group all-reduce phase. The reduce-scatter shards land
+    /// on the first `m_min` positions of every group (`m_min` = the
+    /// smallest group size), so every position ring spans **all** `G`
+    /// groups — on ragged fleets a larger group's extra wafers fold
+    /// their data into those shards during the reduce-scatter rather
+    /// than holding orphan shards that would never cross groups. Each
+    /// position-`j` ring moves `2·(G-1)/G` of its `wafer_bytes / m_min`
+    /// shard over the global links; all `m_min` rings share them, which
+    /// the fluid simulator resolves. The full payload therefore crosses
+    /// groups (`2·(G-1)/G · wafer_bytes` per group) whatever the
+    /// raggedness — a complete All-Reduce, never an underpriced one.
+    fn global_ring_phase(&self, wafer_bytes: f64) -> Vec<Transfer> {
+        let mut out = Vec::new();
+        if self.n_groups < 2 {
+            return out;
+        }
+        let m_min = (0..self.n_groups)
+            .map(|a| self.members(a).len())
+            .min()
+            .unwrap_or(1)
+            .max(1);
+        let shard = wafer_bytes / m_min as f64;
+        let g = self.n_groups as f64;
+        let bytes = 2.0 * (g - 1.0) / g * shard;
+        for j in 0..m_min {
+            for a in 0..self.n_groups {
+                let b = (a + 1) % self.n_groups;
+                let w = self.members(a).start + j;
+                let next = self.members(b).start + j;
+                out.push(Transfer::new(
+                    vec![self.egress[w], self.global_link(a, b), self.ingress[next]],
+                    bytes,
+                    0,
+                ));
+            }
+        }
+        out
+    }
+}
+
+impl EgressFabric for Dragonfly {
+    fn topo(&self) -> EgressTopo {
+        EgressTopo::Dragonfly
+    }
+
+    fn wafers(&self) -> usize {
+        self.wafers
+    }
+
+    fn egress_bw(&self) -> f64 {
+        self.egress_bw
+    }
+
+    fn latency(&self) -> f64 {
+        self.latency
+    }
+
+    fn try_allreduce(&self, wafer_bytes: f64) -> Result<f64, FluidError> {
+        if self.wafers <= 1 || wafer_bytes <= 0.0 {
+            return Ok(0.0);
+        }
+        let mut phases: Vec<Vec<Transfer>> = Vec::new();
+        let rs = self.local_ring_phase(wafer_bytes);
+        let global = self.global_ring_phase(wafer_bytes);
+        if !rs.is_empty() {
+            phases.push(rs.clone());
+        }
+        if !global.is_empty() {
+            phases.push(global);
+        }
+        if !rs.is_empty() {
+            phases.push(rs); // all-gather mirrors the reduce-scatter
+        }
+        if phases.is_empty() {
+            return Ok(0.0);
+        }
+        let done = self.sim.try_run_phased(&[phases])?;
+        let gmax = self.group_size.min(self.wafers) as f64;
+        let steps = 2.0 * (gmax - 1.0) + 2.0 * (self.n_groups as f64 - 1.0);
+        Ok(done[0] + steps * self.latency)
+    }
+
+    fn try_concurrent_p2p(&self, flows: &[P2pFlow]) -> Result<f64, FluidError> {
+        price_concurrent_p2p(&self.sim, self.wafers, self.latency, flows, |s, d| {
+            self.route(s, d)
+        })
+    }
+
+    fn clone_box(&self) -> Box<dyn EgressFabric> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_wafers_degenerate_to_a_ring_pair() {
+        // g = ⌈√2⌉ = 2, G = 1: RS + AG over one 2-ring = the flat ring's
+        // 2·(W-1)/W = 1 pass of the egress link, 2 latency steps.
+        let d = Dragonfly::new(2, 1e12, 1e-6);
+        assert_eq!(d.group_size(), 2);
+        assert_eq!(d.n_groups(), 1);
+        let got = d.try_allreduce(1e9).unwrap();
+        let want = 1e9 / 1e12 + 2.0 * 1e-6;
+        assert!((got - want).abs() < 1e-12, "got {got} want {want}");
+    }
+
+    #[test]
+    fn sixteen_wafers_tile_into_four_by_four() {
+        let d = Dragonfly::new(16, 1e12, 0.0);
+        assert_eq!(d.group_size(), 4);
+        assert_eq!(d.n_groups(), 4);
+        assert!(d.try_allreduce(1e9).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn global_links_are_the_large_fleet_bottleneck() {
+        // At 16 wafers the inter-group phase pushes every group's full
+        // reduced payload over half-rate global links shared by all 4
+        // position rings — slower per byte than the flat ring's egress.
+        let d = Dragonfly::new(16, 1e12, 0.0);
+        let flat = 2.0 * 15.0 / 16.0 * 1e9 / 1e12;
+        let got = d.try_allreduce(1e9).unwrap();
+        assert!(got > 0.0 && got.is_finite());
+        // Sanity bound: within a small constant of the flat ring (the
+        // hierarchy trades bandwidth for 24x fewer latency steps).
+        assert!(got < 4.0 * flat, "got {got}, flat ring {flat}");
+    }
+
+    #[test]
+    fn latency_steps_beat_the_flat_ring_at_scale() {
+        // Pure-latency regime: tiny payload, large fleet.
+        let lat = 1e-6;
+        let d = Dragonfly::new(16, 1e12, lat);
+        let d_time = d.try_allreduce(8.0).unwrap();
+        let ring_steps = 2.0 * 15.0; // flat ring: 2·(W-1)
+        let df_steps = 2.0 * 3.0 + 2.0 * 3.0; // 2·(g-1) + 2·(G-1)
+        assert!(df_steps < ring_steps);
+        assert!(d_time < ring_steps * lat, "dragonfly {d_time} vs ring floor");
+    }
+
+    #[test]
+    fn intra_group_p2p_is_one_hop_inter_group_two() {
+        let d = Dragonfly::new(16, 1e12, 1e-6);
+        let local = d.try_concurrent_p2p(&[P2pFlow::new(0, 1, 1e6)]).unwrap();
+        let remote = d.try_concurrent_p2p(&[P2pFlow::new(0, 5, 1e6)]).unwrap();
+        assert!(remote > local);
+        // One extra latency hop (1e-6) plus the half-rate global link
+        // doubling the serialization term (another 1e-6 at 1 MB).
+        assert!((remote - local - 2e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ragged_inter_group_phase_moves_the_full_payload() {
+        // W=5 tiles into groups {0,1,2},{3,4}. The inter-group phase must
+        // push each group's whole reduced contribution across groups —
+        // 2·(G-1)/G·b = b at G=2 through each half-rate global link, so
+        // b/(bw/2) — plus two intra-group ring phases at (2/3)·b/bw (max
+        // group size 3). No orphan shards may be silently skipped.
+        let d = Dragonfly::new(5, 1e12, 0.0);
+        let b = 3e9;
+        let got = d.try_allreduce(b).unwrap();
+        let global = 2.0 * (2.0 - 1.0) / 2.0 * b / (0.5 * 1e12);
+        let want = 2.0 * (2.0 / 3.0) * b / 1e12 + global;
+        assert!((got - want).abs() / want < 1e-9, "got {got} want {want}");
+    }
+
+    #[test]
+    fn ragged_fleet_sizes_build_and_price() {
+        for wafers in [3usize, 5, 7, 11, 13] {
+            let d = Dragonfly::new(wafers, 1e12, 1e-7);
+            let t = d.try_allreduce(1e9).unwrap();
+            assert!(t > 0.0 && t.is_finite(), "W={wafers}");
+            let p = d
+                .try_concurrent_p2p(&[P2pFlow::new(0, wafers - 1, 1e6)])
+                .unwrap();
+            assert!(p > 0.0, "W={wafers}");
+        }
+    }
+}

@@ -1,0 +1,341 @@
+//! Link-level cross-wafer egress fabrics.
+//!
+//! PR 2's `ScaleOut` priced the off-wafer interconnect as a single
+//! analytic ring formula; this module promotes it to a first-class
+//! modeled topology. LIBRA (arXiv 2109.11762) shows per-dimension
+//! topology/bandwidth choice in hierarchical networks is itself a
+//! first-order optimization target, and Switch-Less Dragonfly on Wafers
+//! (arXiv 2407.10290) makes the case that the scale-out interconnect
+//! deserves the same modeling fidelity as the on-wafer fabric. So each
+//! [`EgressFabric`] builds an **explicit link graph** over the wafers'
+//! bonded-I/O egress ports and prices everything over it with the same
+//! max-min-fair [`FluidSim`](crate::fabric::fluid::FluidSim) the on-wafer
+//! fabrics use:
+//!
+//! * the **cross-wafer All-Reduce** of the hierarchical DP collective
+//!   (reduce-scatter on-wafer → all-reduce across wafers → all-gather
+//!   on-wafer),
+//! * **point-to-point stage transfers** (pipeline stages spanning wafers
+//!   push boundary activations over the egress fabric), and
+//! * **concurrent flow sharing** — flows crossing the same egress link or
+//!   switch trunk contend, which the analytic formula could not express.
+//!
+//! Three implementations:
+//!
+//! * [`Ring`] — wafers on a unidirectional egress ring. Reproduces PR 2's
+//!   analytic `cross_allreduce_time` **bit for bit** (property-tested in
+//!   `tests/prop_egress.rs`), so the refactor is a strict superset of the
+//!   old model.
+//! * [`SwitchedTree`] — a CXL-switch fat-tree with configurable radix and
+//!   oversubscription: worse ring-style All-Reduce bandwidth, far better
+//!   step latency and neighbor-p2p locality.
+//! * [`Dragonfly`] — switch-less dragonfly over wafer groups: all-to-all
+//!   inside a group, single global links between groups, hierarchical
+//!   All-Reduce (group reduce-scatter → inter-group rings → all-gather).
+//!
+//! A 1-wafer instance of *every* topology is free by construction, so
+//! scale-out remains a strict superset of the paper's single-wafer model.
+
+pub mod dragonfly;
+pub mod ring;
+pub mod tree;
+
+pub use dragonfly::Dragonfly;
+pub use ring::Ring;
+pub use tree::SwitchedTree;
+
+use super::fluid::{FluidError, FluidSim, LinkId, Transfer};
+use super::topology::{CollectiveKind, Fabric, NpuId, Plan};
+use crate::util::units::GBPS;
+
+/// Default per-wafer egress bandwidth: all 18 CXL-3 I/O controllers of
+/// the paper wafer bonded to the off-wafer fabric (18 × 128 GBps).
+pub const DEFAULT_EGRESS_BW: f64 = 18.0 * 128.0 * GBPS;
+
+/// Default cross-wafer hop latency. Off-wafer CXL switching is an order
+/// of magnitude slower than the 20 ns on-wafer hop (Table II).
+pub const DEFAULT_XWAFER_LATENCY: f64 = 500e-9;
+
+/// The cross-wafer topology family — the sweep axis behind
+/// `--xwafer-topo`. Each variant builds its [`EgressFabric`] at the
+/// family's default shape parameters; the concrete types expose richer
+/// constructors (radix, oversubscription) for direct use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum EgressTopo {
+    /// Unidirectional egress ring (PR 2's analytic model, now link-level).
+    Ring,
+    /// CXL-switch fat-tree ([`SwitchedTree`]).
+    Tree,
+    /// Switch-less dragonfly over wafer groups ([`Dragonfly`]).
+    Dragonfly,
+}
+
+impl EgressTopo {
+    /// Every topology, in CLI/report order.
+    pub fn all() -> [EgressTopo; 3] {
+        [EgressTopo::Ring, EgressTopo::Tree, EgressTopo::Dragonfly]
+    }
+
+    /// Name used on the CLI and in reports/JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EgressTopo::Ring => "ring",
+            EgressTopo::Tree => "tree",
+            EgressTopo::Dragonfly => "dragonfly",
+        }
+    }
+
+    /// Parse a CLI name (`ring` / `tree` / `dragonfly`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "ring" => Some(EgressTopo::Ring),
+            "tree" | "fat-tree" | "fattree" => Some(EgressTopo::Tree),
+            "dragonfly" | "df" => Some(EgressTopo::Dragonfly),
+            _ => None,
+        }
+    }
+
+    /// Build this topology's egress fabric at its default shape.
+    pub fn build(&self, wafers: usize, egress_bw: f64, latency: f64) -> Box<dyn EgressFabric> {
+        match self {
+            EgressTopo::Ring => Box::new(Ring::new(wafers, egress_bw, latency)),
+            EgressTopo::Tree => Box::new(SwitchedTree::new(wafers, egress_bw, latency)),
+            EgressTopo::Dragonfly => Box::new(Dragonfly::new(wafers, egress_bw, latency)),
+        }
+    }
+}
+
+impl std::fmt::Display for EgressTopo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One cross-wafer point-to-point flow (wafer indices + payload bytes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct P2pFlow {
+    /// Source wafer index.
+    pub src: usize,
+    /// Destination wafer index.
+    pub dst: usize,
+    /// Payload in bytes.
+    pub bytes: f64,
+}
+
+impl P2pFlow {
+    /// Convenience constructor.
+    pub fn new(src: usize, dst: usize, bytes: f64) -> Self {
+        Self { src, dst, bytes }
+    }
+}
+
+/// What a cross-wafer egress fabric must provide: link-level pricing of
+/// the collective and point-to-point traffic that leaves a wafer.
+pub trait EgressFabric: std::fmt::Debug + Send + Sync {
+    /// Topology family of this fabric.
+    fn topo(&self) -> EgressTopo;
+
+    /// Number of wafers in the fleet (>= 1).
+    fn wafers(&self) -> usize;
+
+    /// Per-wafer egress bandwidth onto the off-wafer fabric, bytes/s.
+    fn egress_bw(&self) -> f64;
+
+    /// Per-hop cross-wafer latency, seconds.
+    fn latency(&self) -> f64;
+
+    /// True when no cross-wafer communication exists.
+    fn is_single(&self) -> bool {
+        self.wafers() <= 1
+    }
+
+    /// Time for the cross-wafer All-Reduce on `wafer_bytes` distinct
+    /// reduced bytes held per wafer, priced over the link graph. Zero for
+    /// a single wafer or non-positive payload.
+    fn try_allreduce(&self, wafer_bytes: f64) -> Result<f64, FluidError>;
+
+    /// Completion time of the slowest of `flows` running concurrently,
+    /// with link sharing resolved max-min-fairly over the egress link
+    /// graph and per-flow hop latency added. Flows with `src == dst` or
+    /// non-positive payload are free.
+    fn try_concurrent_p2p(&self, flows: &[P2pFlow]) -> Result<f64, FluidError>;
+
+    /// Clone into a boxed trait object (egress fabrics are immutable
+    /// link-graph models, like on-wafer [`Fabric`]s).
+    fn clone_box(&self) -> Box<dyn EgressFabric>;
+}
+
+impl Clone for Box<dyn EgressFabric> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+/// Shared constructor validation (the messages are load-bearing: the
+/// scale-out error-path tests match on them).
+pub(crate) fn validate_params(wafers: usize, egress_bw: f64, latency: f64) {
+    assert!(wafers >= 1, "scale-out needs at least one wafer");
+    assert!(
+        egress_bw > 0.0 && egress_bw.is_finite(),
+        "egress bandwidth must be positive and finite, got {egress_bw}"
+    );
+    assert!(
+        latency >= 0.0 && latency.is_finite(),
+        "cross-wafer latency must be non-negative, got {latency}"
+    );
+}
+
+/// Price one concurrent on-wafer collective round over logical `groups`
+/// (physical NPU ids) with `bytes` per member — the single shared
+/// implementation of the RS/AG/All-Reduce phase math used by *both*
+/// [`ScaleOut::hierarchical_allreduce`](super::scaleout::ScaleOut::hierarchical_allreduce)
+/// and `Simulator`'s phase pricing, so the two call sites price phases
+/// identically by construction.
+pub fn onwafer_phase_time(
+    fabric: &dyn Fabric,
+    kind: CollectiveKind,
+    groups: &[Vec<NpuId>],
+    bytes: f64,
+) -> Result<f64, FluidError> {
+    if bytes <= 0.0 {
+        return Ok(0.0);
+    }
+    let plans: Vec<Plan> = groups
+        .iter()
+        .filter(|g| g.len() > 1)
+        .map(|g| fabric.plan_collective(kind, g, bytes))
+        .collect();
+    if plans.is_empty() {
+        return Ok(0.0);
+    }
+    Ok(fabric
+        .try_run_concurrent(&plans)?
+        .into_iter()
+        .fold(0.0, f64::max))
+}
+
+/// Shared p2p pricing: route every flow, run the transfer set through the
+/// fluid simulator, and return the slowest per-flow completion (fluid
+/// time + that flow's hop-count × `latency`). `route` returns the link
+/// path and its hop count.
+pub(crate) fn price_concurrent_p2p(
+    sim: &FluidSim,
+    wafers: usize,
+    latency: f64,
+    flows: &[P2pFlow],
+    mut route: impl FnMut(usize, usize) -> (Vec<LinkId>, usize),
+) -> Result<f64, FluidError> {
+    let mut transfers: Vec<Transfer> = Vec::new();
+    let mut serial: Vec<f64> = Vec::new();
+    for f in flows {
+        assert!(
+            f.src < wafers && f.dst < wafers,
+            "p2p flow {}->{} outside a {wafers}-wafer fleet",
+            f.src,
+            f.dst
+        );
+        if f.bytes <= 0.0 || f.src == f.dst {
+            continue;
+        }
+        let (links, hops) = route(f.src, f.dst);
+        let tag = serial.len();
+        transfers.push(Transfer::new(links, f.bytes, tag));
+        serial.push(hops as f64 * latency);
+    }
+    if transfers.is_empty() {
+        return Ok(0.0);
+    }
+    let res = sim.try_run(&transfers)?;
+    Ok(res
+        .transfer_done
+        .iter()
+        .zip(&serial)
+        .map(|(t, l)| t + l)
+        .fold(0.0, f64::max))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topo_parse_and_names_roundtrip() {
+        for topo in EgressTopo::all() {
+            assert_eq!(EgressTopo::parse(topo.name()), Some(topo));
+            assert_eq!(topo.to_string(), topo.name());
+        }
+        assert_eq!(EgressTopo::parse(" RING "), Some(EgressTopo::Ring));
+        assert_eq!(EgressTopo::parse("fat-tree"), Some(EgressTopo::Tree));
+        assert_eq!(EgressTopo::parse("df"), Some(EgressTopo::Dragonfly));
+        assert_eq!(EgressTopo::parse("hypercube"), None);
+        assert_eq!(EgressTopo::parse(""), None);
+    }
+
+    #[test]
+    fn every_topo_builds_and_reports_its_shape() {
+        for topo in EgressTopo::all() {
+            let f = topo.build(4, 1e12, 1e-6);
+            assert_eq!(f.topo(), topo);
+            assert_eq!(f.wafers(), 4);
+            assert_eq!(f.egress_bw(), 1e12);
+            assert_eq!(f.latency(), 1e-6);
+            assert!(!f.is_single());
+            let c = f.clone_box();
+            assert_eq!(c.wafers(), 4);
+            assert_eq!(c.topo(), topo);
+        }
+    }
+
+    #[test]
+    fn single_wafer_is_free_for_every_topo() {
+        for topo in EgressTopo::all() {
+            let f = topo.build(1, DEFAULT_EGRESS_BW, DEFAULT_XWAFER_LATENCY);
+            assert!(f.is_single());
+            assert_eq!(f.try_allreduce(1e9).unwrap(), 0.0, "{topo}");
+            assert_eq!(f.try_concurrent_p2p(&[]).unwrap(), 0.0, "{topo}");
+        }
+    }
+
+    #[test]
+    fn zero_byte_flows_and_self_flows_are_free() {
+        for topo in EgressTopo::all() {
+            let f = topo.build(4, 1e12, 1e-6);
+            let t = f
+                .try_concurrent_p2p(&[P2pFlow::new(0, 0, 1e9), P2pFlow::new(1, 2, 0.0)])
+                .unwrap();
+            assert_eq!(t, 0.0, "{topo}");
+        }
+    }
+
+    #[test]
+    fn p2p_flows_on_shared_links_contend() {
+        // Two flows over the same first-hop egress link take longer than
+        // one — the congestion the analytic model could not express.
+        for topo in EgressTopo::all() {
+            let f = topo.build(4, 1e12, 0.0);
+            let one = f.try_concurrent_p2p(&[P2pFlow::new(0, 1, 1e9)]).unwrap();
+            let two = f
+                .try_concurrent_p2p(&[P2pFlow::new(0, 1, 1e9), P2pFlow::new(0, 2, 1e9)])
+                .unwrap();
+            assert!(two > one, "{topo}: sharing must cost ({two} vs {one})");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one wafer")]
+    fn zero_wafers_rejected() {
+        let _ = Ring::new(0, DEFAULT_EGRESS_BW, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be positive")]
+    fn zero_bandwidth_rejected() {
+        let _ = SwitchedTree::new(2, 0.0, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn negative_latency_rejected() {
+        let _ = Dragonfly::new(2, 1e12, -1.0);
+    }
+}

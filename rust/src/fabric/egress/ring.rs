@@ -1,0 +1,157 @@
+//! Unidirectional egress ring — PR 2's analytic model, now link-level.
+//!
+//! Every wafer owns one egress link to its clockwise neighbor at the
+//! per-wafer egress bandwidth. The bandwidth-optimal ring All-Reduce
+//! pushes `2·(W-1)/W · wafer_bytes` through each wafer's egress plus
+//! `2·(W-1)` serial latency steps; running that steady-state transfer set
+//! through the fluid simulator reproduces the analytic
+//! `cross_allreduce_time` formula **bit for bit** (a one-transfer link
+//! resolves to exactly `bytes / capacity` — property-tested in
+//! `tests/prop_egress.rs`), so the link-level refactor is a strict
+//! superset of the old model, never a perturbation of it.
+
+use super::super::fluid::{FluidError, FluidSim, LinkId, Network, Transfer};
+use super::{price_concurrent_p2p, validate_params, EgressFabric, EgressTopo, P2pFlow};
+
+/// The egress-ring fabric.
+#[derive(Debug, Clone)]
+pub struct Ring {
+    wafers: usize,
+    egress_bw: f64,
+    latency: f64,
+    sim: FluidSim,
+    /// Wafer w's egress link onto the ring (towards wafer (w+1) mod W).
+    egress: Vec<LinkId>,
+}
+
+impl Ring {
+    /// Build a `wafers`-node egress ring.
+    pub fn new(wafers: usize, egress_bw: f64, latency: f64) -> Self {
+        validate_params(wafers, egress_bw, latency);
+        let mut net = Network::new();
+        let egress: Vec<LinkId> = (0..wafers)
+            .map(|w| {
+                net.add_link(format!("egress{w}->{}", (w + 1) % wafers), egress_bw)
+            })
+            .collect();
+        Self { wafers, egress_bw, latency, sim: FluidSim::new(net), egress }
+    }
+
+    /// Clockwise route from `src` to `dst`: the egress links of `src`,
+    /// `src+1`, …, `dst-1` (mod W), plus the hop count.
+    fn route(&self, src: usize, dst: usize) -> (Vec<LinkId>, usize) {
+        let mut links = Vec::new();
+        let mut w = src;
+        while w != dst {
+            links.push(self.egress[w]);
+            w = (w + 1) % self.wafers;
+        }
+        let hops = links.len();
+        (links, hops)
+    }
+}
+
+impl EgressFabric for Ring {
+    fn topo(&self) -> EgressTopo {
+        EgressTopo::Ring
+    }
+
+    fn wafers(&self) -> usize {
+        self.wafers
+    }
+
+    fn egress_bw(&self) -> f64 {
+        self.egress_bw
+    }
+
+    fn latency(&self) -> f64 {
+        self.latency
+    }
+
+    fn try_allreduce(&self, wafer_bytes: f64) -> Result<f64, FluidError> {
+        if self.wafers <= 1 || wafer_bytes <= 0.0 {
+            return Ok(0.0);
+        }
+        let w = self.wafers as f64;
+        // Steady-state ring All-Reduce: each egress link carries
+        // 2·(W-1) chunks of wafer_bytes/W. One transfer per link, so the
+        // fluid result is exactly per_link / egress_bw.
+        let per_link = 2.0 * (w - 1.0) / w * wafer_bytes;
+        let transfers: Vec<Transfer> = self
+            .egress
+            .iter()
+            .map(|&l| Transfer::new(vec![l], per_link, 0))
+            .collect();
+        let res = self.sim.try_run(&transfers)?;
+        Ok(res.makespan + 2.0 * (w - 1.0) * self.latency)
+    }
+
+    fn try_concurrent_p2p(&self, flows: &[P2pFlow]) -> Result<f64, FluidError> {
+        price_concurrent_p2p(&self.sim, self.wafers, self.latency, flows, |s, d| {
+            self.route(s, d)
+        })
+    }
+
+    fn clone_box(&self) -> Box<dyn EgressFabric> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// PR 2's analytic formula, verbatim.
+    fn analytic(wafers: usize, bw: f64, latency: f64, bytes: f64) -> f64 {
+        if wafers <= 1 || bytes <= 0.0 {
+            return 0.0;
+        }
+        let w = wafers as f64;
+        2.0 * (w - 1.0) / w * bytes / bw + 2.0 * (w - 1.0) * latency
+    }
+
+    #[test]
+    fn allreduce_is_bit_identical_to_analytic_formula() {
+        for (wafers, bw, lat, bytes) in [
+            (2usize, 1e12, 0.0, 1e9),
+            (4, 2.304e12, 500e-9, 64e6),
+            (16, 0.5e12, 5e-6, 512e9),
+            (3, 7e11, 1e-7, 1.0),
+        ] {
+            let ring = Ring::new(wafers, bw, lat);
+            let got = ring.try_allreduce(bytes).unwrap();
+            let want = analytic(wafers, bw, lat, bytes);
+            assert_eq!(got.to_bits(), want.to_bits(), "W={wafers} bw={bw} lat={lat}");
+        }
+    }
+
+    #[test]
+    fn neighbor_p2p_costs_one_hop() {
+        let ring = Ring::new(4, 1e12, 1e-6);
+        let t = ring.try_concurrent_p2p(&[P2pFlow::new(1, 2, 1e9)]).unwrap();
+        assert!((t - (1e9 / 1e12 + 1e-6)).abs() < 1e-15, "got {t}");
+    }
+
+    #[test]
+    fn long_route_pays_more_latency_than_short() {
+        let ring = Ring::new(8, 1e12, 1e-6);
+        let near = ring.try_concurrent_p2p(&[P2pFlow::new(0, 1, 1e6)]).unwrap();
+        let far = ring.try_concurrent_p2p(&[P2pFlow::new(0, 7, 1e6)]).unwrap();
+        assert!(far > near, "7 hops must beat 1 hop ({far} vs {near})");
+    }
+
+    #[test]
+    fn disjoint_boundary_flows_do_not_contend() {
+        // Pipeline-style neighbor flows each use a distinct egress link.
+        let ring = Ring::new(4, 1e12, 0.0);
+        let alone = ring.try_concurrent_p2p(&[P2pFlow::new(0, 1, 1e9)]).unwrap();
+        let all = ring
+            .try_concurrent_p2p(&[
+                P2pFlow::new(0, 1, 1e9),
+                P2pFlow::new(1, 2, 1e9),
+                P2pFlow::new(2, 3, 1e9),
+            ])
+            .unwrap();
+        assert_eq!(alone, all, "disjoint links must not slow each other");
+    }
+}

@@ -1,0 +1,249 @@
+//! CXL-switch fat-tree egress fabric.
+//!
+//! Wafers attach to leaf CXL switches (up to `radix` per leaf); leaves
+//! attach to one spine. Every wafer has a full-rate up/down link pair;
+//! each leaf's trunk to the spine aggregates its children's bandwidth
+//! divided by the `oversub` tapering factor — the classic fat-tree
+//! oversubscription knob. The switches execute collectives in-network
+//! (reduction on the way up, multicast on the way down), so the
+//! cross-wafer All-Reduce is a two-phase tree: every up link carries the
+//! payload once, barrier, every down link carries it once.
+//!
+//! Versus the [`Ring`](super::Ring): the tree's All-Reduce moves up to
+//! `2×` the payload through a wafer's egress (the ring moves
+//! `2·(W-1)/W ≤ 2×`) but pays only `O(levels)` latency steps instead of
+//! `2·(W-1)`, and point-to-point transfers between co-leaf wafers never
+//! leave the leaf switch — so the tree wins on latency-bound and
+//! locality-friendly traffic while the ring wins on pure-bandwidth
+//! All-Reduce, exactly the LIBRA-style per-dimension tradeoff the sweep
+//! is meant to explore.
+
+use super::super::fluid::{FluidError, FluidSim, LinkId, Network, Transfer};
+use super::{price_concurrent_p2p, validate_params, EgressFabric, EgressTopo, P2pFlow};
+
+/// Default leaf-switch radix (wafers per leaf CXL switch).
+pub const DEFAULT_TREE_RADIX: usize = 8;
+
+/// Default fat-tree oversubscription (leaf trunk = children·bw / oversub).
+pub const DEFAULT_TREE_OVERSUB: f64 = 2.0;
+
+/// The CXL-switch fat-tree fabric.
+#[derive(Debug, Clone)]
+pub struct SwitchedTree {
+    wafers: usize,
+    egress_bw: f64,
+    latency: f64,
+    radix: usize,
+    oversub: f64,
+    sim: FluidSim,
+    /// Wafer -> leaf-switch up link (full egress rate).
+    up: Vec<LinkId>,
+    /// Leaf-switch -> wafer down link (full egress rate).
+    down: Vec<LinkId>,
+    /// Leaf -> spine trunks (empty when a single leaf suffices).
+    leaf_up: Vec<LinkId>,
+    /// Spine -> leaf trunks (empty when a single leaf suffices).
+    leaf_down: Vec<LinkId>,
+    /// Leaf switch of each wafer.
+    leaf_of: Vec<usize>,
+}
+
+impl SwitchedTree {
+    /// Build at the default radix/oversubscription.
+    pub fn new(wafers: usize, egress_bw: f64, latency: f64) -> Self {
+        Self::with_shape(wafers, egress_bw, latency, DEFAULT_TREE_RADIX, DEFAULT_TREE_OVERSUB)
+    }
+
+    /// Build with an explicit leaf radix and oversubscription factor.
+    pub fn with_shape(
+        wafers: usize,
+        egress_bw: f64,
+        latency: f64,
+        radix: usize,
+        oversub: f64,
+    ) -> Self {
+        validate_params(wafers, egress_bw, latency);
+        assert!(radix >= 2, "tree radix must be >= 2, got {radix}");
+        assert!(
+            oversub >= 1.0 && oversub.is_finite(),
+            "oversubscription must be >= 1, got {oversub}"
+        );
+        let n_leaves = wafers.div_ceil(radix).max(1);
+        let leaf_of: Vec<usize> = (0..wafers).map(|w| w / radix).collect();
+        let mut net = Network::new();
+        let up: Vec<LinkId> = (0..wafers)
+            .map(|w| net.add_link(format!("up{w}->leaf{}", w / radix), egress_bw))
+            .collect();
+        let down: Vec<LinkId> = (0..wafers)
+            .map(|w| net.add_link(format!("leaf{}->down{w}", w / radix), egress_bw))
+            .collect();
+        let (mut leaf_up, mut leaf_down) = (Vec::new(), Vec::new());
+        if n_leaves > 1 {
+            for l in 0..n_leaves {
+                let children = leaf_of.iter().filter(|&&x| x == l).count().max(1);
+                let trunk = children as f64 * egress_bw / oversub;
+                leaf_up.push(net.add_link(format!("leaf{l}->spine"), trunk));
+                leaf_down.push(net.add_link(format!("spine->leaf{l}"), trunk));
+            }
+        }
+        Self {
+            wafers,
+            egress_bw,
+            latency,
+            radix,
+            oversub,
+            sim: FluidSim::new(net),
+            up,
+            down,
+            leaf_up,
+            leaf_down,
+            leaf_of,
+        }
+    }
+
+    /// Leaf radix.
+    pub fn radix(&self) -> usize {
+        self.radix
+    }
+
+    /// Oversubscription factor.
+    pub fn oversub(&self) -> f64 {
+        self.oversub
+    }
+
+    /// True when the tree has a spine level.
+    fn two_level(&self) -> bool {
+        !self.leaf_up.is_empty()
+    }
+
+    /// Route from `src` to `dst` with its switch-hop count.
+    fn route(&self, src: usize, dst: usize) -> (Vec<LinkId>, usize) {
+        let (ls, ld) = (self.leaf_of[src], self.leaf_of[dst]);
+        if ls == ld {
+            (vec![self.up[src], self.down[dst]], 1)
+        } else {
+            (
+                vec![self.up[src], self.leaf_up[ls], self.leaf_down[ld], self.down[dst]],
+                3,
+            )
+        }
+    }
+}
+
+impl EgressFabric for SwitchedTree {
+    fn topo(&self) -> EgressTopo {
+        EgressTopo::Tree
+    }
+
+    fn wafers(&self) -> usize {
+        self.wafers
+    }
+
+    fn egress_bw(&self) -> f64 {
+        self.egress_bw
+    }
+
+    fn latency(&self) -> f64 {
+        self.latency
+    }
+
+    fn try_allreduce(&self, wafer_bytes: f64) -> Result<f64, FluidError> {
+        if self.wafers <= 1 || wafer_bytes <= 0.0 {
+            return Ok(0.0);
+        }
+        // Phase 1 — in-network reduction up: every wafer pushes its full
+        // payload up; each leaf trunk forwards one (reduced) copy.
+        let mut up_phase: Vec<Transfer> = self
+            .up
+            .iter()
+            .map(|&l| Transfer::new(vec![l], wafer_bytes, 0))
+            .collect();
+        for &l in &self.leaf_up {
+            up_phase.push(Transfer::new(vec![l], wafer_bytes, 0));
+        }
+        // Phase 2 — multicast down: mirrored.
+        let mut down_phase: Vec<Transfer> = self
+            .down
+            .iter()
+            .map(|&l| Transfer::new(vec![l], wafer_bytes, 0))
+            .collect();
+        for &l in &self.leaf_down {
+            down_phase.push(Transfer::new(vec![l], wafer_bytes, 0));
+        }
+        let done = self.sim.try_run_phased(&[vec![up_phase, down_phase]])?;
+        let levels = if self.two_level() { 2.0 } else { 1.0 };
+        Ok(done[0] + 2.0 * levels * self.latency)
+    }
+
+    fn try_concurrent_p2p(&self, flows: &[P2pFlow]) -> Result<f64, FluidError> {
+        price_concurrent_p2p(&self.sim, self.wafers, self.latency, flows, |s, d| {
+            self.route(s, d)
+        })
+    }
+
+    fn clone_box(&self) -> Box<dyn EgressFabric> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn non_oversubscribed_allreduce_is_two_passes_of_the_egress_link() {
+        // 4 wafers under one leaf: up + down at full rate, 1 switch hop
+        // each way.
+        let t = SwitchedTree::with_shape(4, 1e12, 1e-6, 8, 1.0);
+        assert!(!t.two_level());
+        let got = t.try_allreduce(1e9).unwrap();
+        let want = 2.0 * (1e9 / 1e12) + 2.0 * 1e-6;
+        assert!((got - want).abs() < 1e-15, "got {got} want {want}");
+    }
+
+    #[test]
+    fn oversubscribed_trunk_bottlenecks_the_allreduce() {
+        // 16 wafers over 2 leaves of radix 8, oversub 16: trunk carries
+        // the reduced stream at 0.5e12 while up links run at 1e12.
+        let fat = SwitchedTree::with_shape(16, 1e12, 0.0, 8, 1.0);
+        let thin = SwitchedTree::with_shape(16, 1e12, 0.0, 8, 16.0);
+        let t_fat = fat.try_allreduce(1e9).unwrap();
+        let t_thin = thin.try_allreduce(1e9).unwrap();
+        assert!(t_thin > t_fat, "tapered trunk must cost ({t_thin} vs {t_fat})");
+        // Fully-provisioned trunks never bottleneck: two full passes.
+        assert!((t_fat - 2.0 * (1e9 / 1e12)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn same_leaf_p2p_skips_the_spine() {
+        let t = SwitchedTree::with_shape(16, 1e12, 1e-6, 8, 2.0);
+        assert!(t.two_level());
+        let local = t.try_concurrent_p2p(&[P2pFlow::new(0, 1, 1e6)]).unwrap();
+        let remote = t.try_concurrent_p2p(&[P2pFlow::new(0, 9, 1e6)]).unwrap();
+        assert!(remote > local, "cross-leaf must pay spine hops ({remote} vs {local})");
+        // 1 hop vs 3 hops of switch latency at equal bandwidth.
+        assert!((remote - local - 2.0 * 1e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ragged_last_leaf_still_builds() {
+        // 10 wafers at radix 8: leaves of 8 and 2.
+        let t = SwitchedTree::with_shape(10, 1e12, 0.0, 8, 2.0);
+        assert_eq!(t.wafers(), 10);
+        assert!(t.try_allreduce(1e9).unwrap() > 0.0);
+        let x = t.try_concurrent_p2p(&[P2pFlow::new(7, 8, 1e9)]).unwrap();
+        assert!(x > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "radix must be >= 2")]
+    fn radix_one_rejected() {
+        let _ = SwitchedTree::with_shape(4, 1e12, 0.0, 1, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "oversubscription must be >= 1")]
+    fn undersubscription_rejected() {
+        let _ = SwitchedTree::with_shape(4, 1e12, 0.0, 8, 0.5);
+    }
+}

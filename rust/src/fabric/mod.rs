@@ -15,19 +15,25 @@
 //!   wafer fabric (Fig. 8), and the Table III hardware-overhead model.
 //! * [`collectives`] — fabric-independent collective math (traffic
 //!   factors, ring decomposition, chunking).
+//! * [`egress`] — link-level cross-wafer egress fabrics (the
+//!   `EgressFabric` trait with ring / CXL fat-tree / dragonfly
+//!   implementations, each an explicit link graph under the fluid
+//!   simulator).
 //! * [`scaleout`] — the multi-wafer scale-out layer: N wafers over an
-//!   off-wafer CXL-style egress fabric with hierarchical collectives
-//!   (reduce-scatter on-wafer → all-reduce across wafers → all-gather
-//!   on-wafer).
+//!   [`egress`] fabric with hierarchical collectives (reduce-scatter
+//!   on-wafer → all-reduce across wafers → all-gather on-wafer) and
+//!   cross-wafer pipeline-boundary transfers.
 //! * [`topology`] — the `Fabric` trait the coordinator schedules against.
 
 pub mod collectives;
+pub mod egress;
 pub mod fluid;
 pub mod fred;
 pub mod mesh;
 pub mod scaleout;
 pub mod topology;
 
+pub use egress::{EgressFabric, EgressTopo, P2pFlow};
 pub use fluid::{FluidError, FluidSim, Link, LinkId, Network, Transfer};
 pub use scaleout::ScaleOut;
 pub use topology::{CollectiveKind, Fabric, IoDirection, Plan};

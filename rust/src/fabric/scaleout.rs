@@ -1,69 +1,68 @@
-//! Multi-wafer scale-out fabric (beyond the paper: Hecaton-style
-//! hierarchical fleets).
+//! Multi-wafer scale-out: N wafers over a link-level egress fabric.
 //!
 //! FRED (Sec. VI) models a single wafer, but its target workloads (GPT-3,
-//! Transformer-1T) train on fleets of wafers. This module composes N
+//! Transformer-1T) train on fleets of wafers. [`ScaleOut`] composes N
 //! single-wafer fabrics ([`Mesh2D`](super::mesh::Mesh2D) or
-//! [`FredFabric`](super::fred::FredFabric)) over an off-wafer CXL-style
-//! interconnect characterized by two numbers: the per-wafer egress
-//! bandwidth (every byte leaving a wafer funnels through its bonded I/O
-//! controllers) and the per-hop cross-wafer latency.
+//! [`FredFabric`](super::fred::FredFabric)) over a cross-wafer
+//! [`EgressFabric`] — a first-class modeled topology
+//! ([`Ring`](super::egress::Ring) / [`SwitchedTree`](super::egress::SwitchedTree)
+//! / [`Dragonfly`](super::egress::Dragonfly), see [`super::egress`]) built
+//! from the wafers' bonded-I/O egress ports.
 //!
-//! The parallelization split follows the scale-out literature (Hecaton,
-//! arXiv 2407.05784): **DP across wafers, MP/PP within a wafer** — the
-//! low-bandwidth off-wafer fabric only ever carries the weight-gradient
-//! All-Reduce, which decomposes hierarchically:
+//! Two wafer-spanning splits are supported (see
+//! [`WaferSpan`](crate::coordinator::parallelism::WaferSpan)):
 //!
-//! 1. **Reduce-Scatter within each wafer** (full on-wafer bandwidth, the
-//!    per-wafer fabric's own collective plan),
-//! 2. **All-Reduce across wafers** on the locally-reduced shards (a ring
-//!    over the wafers' egress links, priced analytically — the off-wafer
-//!    fabric has no internal structure worth a link-level model),
-//! 3. **All-Gather within each wafer** (full on-wafer bandwidth again).
+//! * **DP across wafers** (Hecaton, arXiv 2407.05784): the egress fabric
+//!   carries the weight-gradient All-Reduce, decomposed hierarchically —
+//!   Reduce-Scatter within each wafer, All-Reduce across wafers on the
+//!   locally-reduced shards (priced over the egress link graph),
+//!   All-Gather within each wafer.
+//! * **PP across wafers**: pipeline stages span wafers for models whose
+//!   per-stage footprint exceeds one wafer; the egress fabric carries the
+//!   stage-boundary activations as concurrent point-to-point flows.
 //!
 //! A 1-wafer [`ScaleOut`] is *defined* to price exactly like the bare
 //! single-wafer fabric (it plans a plain All-Reduce, not RS + AG), so
 //! scale-out is a strict superset of the paper's model — property-tested
-//! in `tests/prop_scaleout.rs` along with monotonicity in the egress
-//! bandwidth.
+//! in `tests/prop_scaleout.rs` and `tests/prop_egress.rs` along with
+//! monotonicity in the egress bandwidth and the ring fabric's bit-exact
+//! match to PR 2's analytic formula.
 
+use super::egress::{onwafer_phase_time, EgressFabric, EgressTopo, P2pFlow};
 use super::fluid::FluidError;
-use super::topology::{CollectiveKind, Fabric, NpuId, Plan};
-use crate::util::units::GBPS;
+use super::topology::{CollectiveKind, Fabric, NpuId};
 
-/// Default per-wafer egress bandwidth: all 18 CXL-3 I/O controllers of
-/// the paper wafer bonded to the off-wafer fabric (18 × 128 GBps).
-pub const DEFAULT_EGRESS_BW: f64 = 18.0 * 128.0 * GBPS;
+pub use super::egress::{DEFAULT_EGRESS_BW, DEFAULT_XWAFER_LATENCY};
 
-/// Default cross-wafer hop latency. Off-wafer CXL switching is an order
-/// of magnitude slower than the 20 ns on-wafer hop (Table II).
-pub const DEFAULT_XWAFER_LATENCY: f64 = 500e-9;
-
-/// The scale-out wrapper: N identical wafers over a CXL-style egress
-/// fabric. Wafer count 1 degenerates to the bare single-wafer model.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// The scale-out wrapper: a thin handle on a cross-wafer
+/// [`EgressFabric`]. Wafer count 1 degenerates to the bare single-wafer
+/// model for every topology.
+#[derive(Debug)]
 pub struct ScaleOut {
-    /// Number of wafers in the fleet (>= 1).
-    pub wafers: usize,
-    /// Per-wafer egress bandwidth onto the off-wafer fabric, bytes/s.
-    pub egress_bw: f64,
-    /// Per-step cross-wafer latency, seconds.
-    pub latency: f64,
+    fabric: Box<dyn EgressFabric>,
+}
+
+impl Clone for ScaleOut {
+    fn clone(&self) -> Self {
+        Self { fabric: self.fabric.clone_box() }
+    }
 }
 
 impl ScaleOut {
-    /// Build a fleet; `wafers >= 1` and `egress_bw > 0` are required.
+    /// Build a fleet over the default (ring) egress topology;
+    /// `wafers >= 1` and `egress_bw > 0` are required.
     pub fn new(wafers: usize, egress_bw: f64, latency: f64) -> Self {
-        assert!(wafers >= 1, "scale-out needs at least one wafer");
-        assert!(
-            egress_bw > 0.0 && egress_bw.is_finite(),
-            "egress bandwidth must be positive and finite, got {egress_bw}"
-        );
-        assert!(
-            latency >= 0.0 && latency.is_finite(),
-            "cross-wafer latency must be non-negative, got {latency}"
-        );
-        Self { wafers, egress_bw, latency }
+        Self::with_topo(EgressTopo::Ring, wafers, egress_bw, latency)
+    }
+
+    /// Build a fleet over an explicit egress topology.
+    pub fn with_topo(topo: EgressTopo, wafers: usize, egress_bw: f64, latency: f64) -> Self {
+        Self { fabric: topo.build(wafers, egress_bw, latency) }
+    }
+
+    /// Wrap an already-built egress fabric.
+    pub fn from_fabric(fabric: Box<dyn EgressFabric>) -> Self {
+        Self { fabric }
     }
 
     /// The bare single-wafer configuration (identity wrapper).
@@ -76,29 +75,64 @@ impl ScaleOut {
         Self::new(wafers, DEFAULT_EGRESS_BW, DEFAULT_XWAFER_LATENCY)
     }
 
+    /// Number of wafers in the fleet (>= 1).
+    pub fn wafers(&self) -> usize {
+        self.fabric.wafers()
+    }
+
+    /// Per-wafer egress bandwidth onto the off-wafer fabric, bytes/s.
+    pub fn egress_bw(&self) -> f64 {
+        self.fabric.egress_bw()
+    }
+
+    /// Per-hop cross-wafer latency, seconds.
+    pub fn latency(&self) -> f64 {
+        self.fabric.latency()
+    }
+
+    /// The egress topology family.
+    pub fn topo(&self) -> EgressTopo {
+        self.fabric.topo()
+    }
+
+    /// Borrow the underlying egress fabric.
+    pub fn fabric(&self) -> &dyn EgressFabric {
+        self.fabric.as_ref()
+    }
+
     /// True when no cross-wafer communication exists.
     pub fn is_single(&self) -> bool {
-        self.wafers <= 1
+        self.fabric.is_single()
     }
 
     /// Time for the cross-wafer All-Reduce step on `wafer_bytes` distinct
-    /// reduced bytes held per wafer: a bandwidth-optimal ring over the
-    /// wafers' egress links moves `2·(W-1)/W · wafer_bytes` through each
-    /// wafer's egress, plus `2·(W-1)` serial latency steps.
+    /// reduced bytes held per wafer, priced over the egress link graph.
+    /// Panicking convenience over [`Self::try_cross_allreduce`] (the
+    /// egress transfer sets are structurally feasible).
     pub fn cross_allreduce_time(&self, wafer_bytes: f64) -> f64 {
-        if self.wafers <= 1 || wafer_bytes <= 0.0 {
-            return 0.0;
-        }
-        let w = self.wafers as f64;
-        2.0 * (w - 1.0) / w * wafer_bytes / self.egress_bw
-            + 2.0 * (w - 1.0) * self.latency
+        self.try_cross_allreduce(wafer_bytes)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible form of [`Self::cross_allreduce_time`].
+    pub fn try_cross_allreduce(&self, wafer_bytes: f64) -> Result<f64, FluidError> {
+        self.fabric.try_allreduce(wafer_bytes)
+    }
+
+    /// Completion time of the slowest of `flows` (cross-wafer
+    /// point-to-point stage transfers) running concurrently over the
+    /// egress link graph.
+    pub fn try_boundary_p2p(&self, flows: &[P2pFlow]) -> Result<f64, FluidError> {
+        self.fabric.try_concurrent_p2p(flows)
     }
 
     /// Hierarchical All-Reduce over concurrent on-wafer `groups` (each a
     /// list of physical NPU ids on one wafer, replicated on every wafer
     /// of the fleet) with `bytes` per member: on-wafer Reduce-Scatter,
     /// cross-wafer All-Reduce on the `groups.len() · bytes` distinct
-    /// reduced bytes each wafer then holds, on-wafer All-Gather.
+    /// reduced bytes each wafer then holds, on-wafer All-Gather. The
+    /// on-wafer phases go through [`onwafer_phase_time`], the single
+    /// shared implementation the simulator's phase pricing also uses.
     ///
     /// With `wafers == 1` this plans a plain on-wafer All-Reduce instead,
     /// so the single-wafer fleet prices identically to the bare fabric.
@@ -111,26 +145,12 @@ impl ScaleOut {
         if bytes <= 0.0 || groups.is_empty() {
             return Ok(0.0);
         }
-        let phase = |kind: CollectiveKind| -> Result<f64, FluidError> {
-            let plans: Vec<Plan> = groups
-                .iter()
-                .filter(|g| g.len() > 1)
-                .map(|g| fabric.plan_collective(kind, g, bytes))
-                .collect();
-            if plans.is_empty() {
-                return Ok(0.0);
-            }
-            Ok(fabric
-                .try_run_concurrent(&plans)?
-                .into_iter()
-                .fold(0.0, f64::max))
-        };
         if self.is_single() {
-            return phase(CollectiveKind::AllReduce);
+            return onwafer_phase_time(fabric, CollectiveKind::AllReduce, groups, bytes);
         }
-        let rs = phase(CollectiveKind::ReduceScatter)?;
-        let ag = phase(CollectiveKind::AllGather)?;
-        let cross = self.cross_allreduce_time(groups.len() as f64 * bytes);
+        let rs = onwafer_phase_time(fabric, CollectiveKind::ReduceScatter, groups, bytes)?;
+        let ag = onwafer_phase_time(fabric, CollectiveKind::AllGather, groups, bytes)?;
+        let cross = self.try_cross_allreduce(groups.len() as f64 * bytes)?;
         Ok(rs + cross + ag)
     }
 }
@@ -139,6 +159,7 @@ impl ScaleOut {
 mod tests {
     use super::*;
     use crate::coordinator::config::FabricKind;
+    use crate::fabric::topology::Plan;
 
     #[test]
     fn single_wafer_has_no_cross_traffic() {
@@ -159,12 +180,15 @@ mod tests {
     }
 
     #[test]
-    fn cross_time_is_monotone_in_egress_bw() {
-        let mut last = f64::INFINITY;
-        for bw in [0.5e12, 1e12, 2e12, 8e12] {
-            let t = ScaleOut::new(8, bw, DEFAULT_XWAFER_LATENCY).cross_allreduce_time(5e9);
-            assert!(t <= last, "cross time must not increase with bandwidth");
-            last = t;
+    fn cross_time_is_monotone_in_egress_bw_for_every_topo() {
+        for topo in EgressTopo::all() {
+            let mut last = f64::INFINITY;
+            for bw in [0.5e12, 1e12, 2e12, 8e12] {
+                let t = ScaleOut::with_topo(topo, 8, bw, DEFAULT_XWAFER_LATENCY)
+                    .cross_allreduce_time(5e9);
+                assert!(t <= last, "{topo}: cross time must not increase with bandwidth");
+                last = t;
+            }
         }
     }
 
@@ -226,6 +250,18 @@ mod tests {
         let t = s.hierarchical_allreduce(fabric.as_ref(), &groups, 1e9).unwrap();
         assert_eq!(t, s.cross_allreduce_time(4.0 * 1e9));
         assert!(t > 0.0);
+    }
+
+    #[test]
+    fn hierarchy_works_over_every_egress_topology() {
+        let fabric = FabricKind::FredD.build();
+        let groups: Vec<Vec<NpuId>> = vec![(0..10).collect(), (10..20).collect()];
+        for topo in EgressTopo::all() {
+            let s = ScaleOut::with_topo(topo, 4, DEFAULT_EGRESS_BW, DEFAULT_XWAFER_LATENCY);
+            assert_eq!(s.topo(), topo);
+            let t = s.hierarchical_allreduce(fabric.as_ref(), &groups, 64e6).unwrap();
+            assert!(t > 0.0 && t.is_finite(), "{topo}");
+        }
     }
 
     #[test]

@@ -1,0 +1,231 @@
+//! Property/invariant tests over the link-level egress fabrics
+//! (`fabric/egress/`) — the refactor seams ISSUE 3 locks in:
+//!
+//! 1. the [`Ring`] link graph reproduces PR 2's analytic
+//!    `cross_allreduce_time` formula **bit for bit** (the refactor is a
+//!    strict superset of the old model, never a perturbation of it),
+//! 2. every egress topology's All-Reduce and p2p pricing is monotonically
+//!    non-increasing in the egress bandwidth,
+//! 3. a 1-wafer fleet prices *identically* to the bare single-wafer
+//!    fabric for **every** egress topology and wafer span,
+//! 4. `WaferSpan::Pp` strategies exactly cover the fleet's
+//!    wafer × MP × DP × PP NPU count.
+
+use fred::coordinator::config::FabricKind;
+use fred::coordinator::parallelism::{ScaledStrategy, WaferSpan};
+use fred::coordinator::sim::Simulator;
+use fred::coordinator::sweep::factorizations;
+use fred::coordinator::workload;
+use fred::fabric::egress::{EgressFabric, EgressTopo, P2pFlow, Ring};
+use fred::fabric::scaleout::{ScaleOut, DEFAULT_XWAFER_LATENCY};
+use fred::util::prop::check;
+
+/// PR 2's analytic cross-wafer ring All-Reduce formula, verbatim.
+fn analytic_ring(wafers: usize, egress_bw: f64, latency: f64, wafer_bytes: f64) -> f64 {
+    if wafers <= 1 || wafer_bytes <= 0.0 {
+        return 0.0;
+    }
+    let w = wafers as f64;
+    2.0 * (w - 1.0) / w * wafer_bytes / egress_bw + 2.0 * (w - 1.0) * latency
+}
+
+#[test]
+fn ring_link_graph_is_bit_identical_to_analytic_formula() {
+    check(
+        "ring-vs-analytic-identity",
+        0xB17B17,
+        64,
+        |rng| {
+            let wafers = rng.range(1, 33);
+            let bw = *rng.choose(&[0.25e12, 1e12, 2.304e12, 7.7e11, 64e12]);
+            let latency = *rng.choose(&[0.0, 100e-9, 500e-9, 5e-6]);
+            let bytes = *rng.choose(&[0.0, 1.0, 64e6, 512e9, 3.14e8]);
+            (wafers, bw, latency, bytes)
+        },
+        |&(wafers, bw, latency, bytes)| {
+            let want = analytic_ring(wafers, bw, latency, bytes);
+            let ring = Ring::new(wafers, bw, latency);
+            let got = ring.try_allreduce(bytes).map_err(|e| e.to_string())?;
+            if got.to_bits() != want.to_bits() {
+                return Err(format!(
+                    "W={wafers} bw={bw} lat={latency} bytes={bytes}: link graph \
+                     {got:e} != analytic {want:e}"
+                ));
+            }
+            // And through the ScaleOut wrapper (the default topology).
+            let wrapped = ScaleOut::new(wafers, bw, latency).cross_allreduce_time(bytes);
+            if wrapped.to_bits() != want.to_bits() {
+                return Err(format!("ScaleOut wrapper drifted: {wrapped:e} != {want:e}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn every_topology_is_monotone_in_egress_bw() {
+    check(
+        "egress-bw-monotone-per-topo",
+        0x7090,
+        18,
+        |rng| {
+            let topo = *rng.choose(&EgressTopo::all());
+            let wafers = *rng.choose(&[2usize, 3, 4, 8, 16]);
+            let bytes = *rng.choose(&[1e6, 64e6, 2e9]);
+            (topo, wafers, bytes)
+        },
+        |&(topo, wafers, bytes)| {
+            let mut last_ar = f64::INFINITY;
+            let mut last_p2p = f64::INFINITY;
+            for bw in [0.25e12, 0.5e12, 1e12, 2.304e12, 8e12, 64e12] {
+                let f = topo.build(wafers, bw, DEFAULT_XWAFER_LATENCY);
+                let ar = f.try_allreduce(bytes).map_err(|e| e.to_string())?;
+                if !(ar <= last_ar) {
+                    return Err(format!(
+                        "{topo} W={wafers}: all-reduce rose from {last_ar} to {ar} at {bw}"
+                    ));
+                }
+                last_ar = ar;
+                let flows: Vec<P2pFlow> =
+                    (0..wafers - 1).map(|w| P2pFlow::new(w, w + 1, bytes)).collect();
+                let p2p = f.try_concurrent_p2p(&flows).map_err(|e| e.to_string())?;
+                if !(p2p <= last_p2p) {
+                    return Err(format!(
+                        "{topo} W={wafers}: p2p rose from {last_p2p} to {p2p} at {bw}"
+                    ));
+                }
+                last_p2p = p2p;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn one_wafer_fleet_is_identity_for_every_topo_and_span() {
+    // Whatever the egress topology, bandwidth, latency, or wafer span, a
+    // 1-wafer fleet never touches the scale-out fabric: every breakdown
+    // component matches the bare single-wafer simulation bit for bit.
+    check(
+        "one-wafer-identity-all-topos",
+        0x1DEA2,
+        12,
+        |rng| {
+            let topo = *rng.choose(&EgressTopo::all());
+            let span = *rng.choose(&WaferSpan::all());
+            let kind = *rng.choose(&[FabricKind::Baseline, FabricKind::FredD]);
+            let bw = *rng.choose(&[0.1e12, 2.304e12, 9e12]);
+            (topo, span, kind, bw)
+        },
+        |&(topo, span, kind, bw)| {
+            for w in [workload::resnet152(), workload::transformer_17b(), workload::gpt3()] {
+                let bare = Simulator::new(kind, w.clone(), w.default_strategy)
+                    .try_iterate()
+                    .map_err(|e| e.to_string())?;
+                let wrapped = Simulator::new(kind, w.clone(), w.default_strategy)
+                    .with_scaleout(ScaleOut::with_topo(topo, 1, bw, DEFAULT_XWAFER_LATENCY))
+                    .with_span(span)
+                    .try_iterate()
+                    .map_err(|e| e.to_string())?;
+                if bare.total() != wrapped.total() || bare.exposed != wrapped.exposed {
+                    return Err(format!(
+                        "{} on {} via {topo}/{span}: bare {bare:?} != 1-wafer {wrapped:?}",
+                        w.name,
+                        kind.name(),
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn pp_span_factorizations_exactly_cover_the_fleet() {
+    check(
+        "pp-span-exact-cover",
+        0xC0DE2,
+        96,
+        |rng| (rng.range(1, 17), rng.range(1, 65)),
+        |&(wafers, npus_per_wafer)| {
+            let total = wafers * npus_per_wafer;
+            for local in factorizations(npus_per_wafer) {
+                let s = ScaledStrategy::with_span(wafers, local, WaferSpan::Pp);
+                if s.total_workers() != total {
+                    return Err(format!(
+                        "{s} covers {} of {total} fleet NPUs",
+                        s.total_workers()
+                    ));
+                }
+                if s.global_pp() != wafers * local.pp {
+                    return Err(format!("{s}: global PP must be wafers x local PP"));
+                }
+                if s.global_dp() != local.dp {
+                    return Err(format!("{s}: PP span must not scale DP"));
+                }
+                // wafer x MP x DP x PP multiplies out to the fleet size.
+                if wafers * local.mp * s.global_dp() * local.pp != total {
+                    return Err(format!("{s}: wafer x MP x DP x PP != {total}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn topologies_trade_bandwidth_against_latency() {
+    // The design-space sanity check behind the sweep axis: at large
+    // payloads the ring's bandwidth-optimal All-Reduce wins; in the
+    // latency-bound regime (tiny payload, many wafers) the tree's
+    // O(levels) steps beat the ring's 2(W-1).
+    let wafers = 16;
+    let bw = 2.304e12;
+    let lat = 1e-6;
+    let ring = EgressTopo::Ring.build(wafers, bw, lat);
+    let tree = EgressTopo::Tree.build(wafers, bw, lat);
+    let big = 64e9;
+    let small = 64.0;
+    let ring_big = ring.try_allreduce(big).unwrap();
+    let tree_big = tree.try_allreduce(big).unwrap();
+    assert!(
+        ring_big < tree_big,
+        "bandwidth-bound: ring {ring_big} must beat tree {tree_big}"
+    );
+    let ring_small = ring.try_allreduce(small).unwrap();
+    let tree_small = tree.try_allreduce(small).unwrap();
+    assert!(
+        tree_small < ring_small,
+        "latency-bound: tree {tree_small} must beat ring {ring_small}"
+    );
+}
+
+#[test]
+fn full_iteration_feasible_on_every_topo_span_combination() {
+    // End-to-end smoke over the whole new axis grid: every egress
+    // topology x wafer span prices a full iteration on stationary and
+    // streaming workloads, and multi-wafer totals are never below the
+    // bare wafer's exposed-comm-free floor.
+    for topo in EgressTopo::all() {
+        for span in WaferSpan::all() {
+            for w in [workload::resnet152(), workload::transformer_1t()] {
+                let sim = Simulator::new(FabricKind::FredD, w.clone(), w.default_strategy)
+                    .with_scaleout(ScaleOut::with_topo(
+                        topo,
+                        4,
+                        2.304e12,
+                        DEFAULT_XWAFER_LATENCY,
+                    ))
+                    .with_span(span);
+                let b = sim.try_iterate().unwrap_or_else(|e| {
+                    panic!("{topo}/{span} on {}: {e}", w.name);
+                });
+                assert!(
+                    b.total().is_finite() && b.total() > 0.0,
+                    "{topo}/{span} on {}",
+                    w.name
+                );
+            }
+        }
+    }
+}

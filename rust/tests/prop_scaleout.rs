@@ -196,7 +196,7 @@ fn cross_wafer_term_matches_ring_arithmetic_end_to_end() {
     let one = Simulator::new(FabricKind::FredD, w.clone(), s).iterate();
     let scale = ScaleOut::with_wafers(4);
     let four = Simulator::new(FabricKind::FredD, w.clone(), s)
-        .with_scaleout(scale)
+        .with_scaleout(scale.clone())
         .iterate();
     let nb = w.dp_buckets.max(1) as f64;
     let bucket = w.params_bytes() / s.mp as f64 / s.pp as f64 / nb;

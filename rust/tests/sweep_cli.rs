@@ -115,6 +115,13 @@ fn sweep_cli_rejects_bad_input_with_usage_errors() {
         vec!["sweep", "--threads", "lots"],
         vec!["sweep", "--xwafer-bw", "-3"],
         vec!["sweep", "--xwafer-bw", "fast"],
+        vec!["sweep", "--xwafer-latency", "-1"],
+        vec!["sweep", "--xwafer-latency", "soon"],
+        vec!["sweep", "--xwafer-latency", "500,nan-ish"],
+        vec!["sweep", "--xwafer-topo", "hypercube"],
+        vec!["sweep", "--xwafer-topo", "ring,torus"],
+        vec!["sweep", "--span", "mp"],
+        vec!["sweep", "--span", "dp,diagonal"],
         // Unwritable --out path: the sweep itself succeeds (kept tiny
         // here) but the write must fail loudly.
         vec![
@@ -211,7 +218,7 @@ fn sweep_out_file_is_golden_against_stdout() {
     assert_eq!(file, stdout, "--out file must match --json stdout byte for byte");
     let doc = Json::parse(String::from_utf8(file).expect("utf8").trim())
         .expect("--out file is valid JSON");
-    assert_eq!(doc.get("schema_version").and_then(Json::as_usize), Some(2));
+    assert_eq!(doc.get("schema_version").and_then(Json::as_usize), Some(3));
     let points = doc.get("points").unwrap().as_arr().unwrap();
     assert_eq!(points.len(), 3, "3 strategies x 1 fabric x 1 fleet size");
     for p in points {
@@ -219,6 +226,148 @@ fn sweep_out_file_is_golden_against_stdout() {
         assert_eq!(p.get("total_npus").and_then(Json::as_usize), Some(40));
     }
     std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn schema_v3_signals_v2_consumers_instead_of_silently_misparsing() {
+    // A well-behaved v2 consumer checks `schema_version` before reading
+    // points. The v3 document must (a) carry the version as a plain
+    // number a v2 guard can compare against, and (b) still contain every
+    // v2 point field, so a consumer that *ignores* the version reads
+    // consistent values rather than garbage — the new axes are additive.
+    let json = run_sweep_json(&[
+        "--models",
+        "resnet152",
+        "--wafers",
+        "2",
+        "--fabrics",
+        "fred-d",
+        "--max-strategies",
+        "2",
+    ]);
+    let version = json
+        .get("schema_version")
+        .and_then(Json::as_f64)
+        .expect("version field must be a plain number");
+    assert_eq!(version, 3.0);
+    assert_ne!(version, 2.0, "a v2 guard comparing against 2 must reject this doc");
+    const V2_POINT_FIELDS: [&str; 13] = [
+        "workload",
+        "wafer",
+        "n_npus",
+        "wafers",
+        "xwafer_bw",
+        "total_npus",
+        "fabric",
+        "strategy",
+        "scaled_strategy",
+        "mp",
+        "dp",
+        "pp",
+        "global_dp",
+    ];
+    for p in json.get("points").unwrap().as_arr().unwrap() {
+        for field in V2_POINT_FIELDS {
+            assert!(p.get(field).is_some(), "v2 field `{field}` missing in v3 point");
+        }
+        // And the v3 additions are present under *new* names (no v2
+        // field changed meaning).
+        for field in ["xwafer_topo", "wafer_span", "xwafer_latency_s", "global_pp"] {
+            assert!(p.get(field).is_some(), "v3 field `{field}` missing");
+        }
+    }
+}
+
+#[test]
+fn sweep_cli_crosses_egress_topologies_and_spans() {
+    // The acceptance sweep: --xwafer-topo ring,tree,dragonfly x
+    // --span dp,pp on a 4-wafer fleet, all feasible, with the new JSON
+    // fields carrying the axes.
+    let json = run_sweep_json(&[
+        "--models",
+        "resnet152",
+        "--wafers",
+        "4",
+        "--fabrics",
+        "fred-d",
+        "--max-strategies",
+        "2",
+        "--xwafer-topo",
+        "ring,tree,dragonfly",
+        "--span",
+        "dp,pp",
+        "--xwafer-latency",
+        "250,1000",
+    ]);
+    let points = json.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), 2 * 3 * 2 * 2, "strategies x topos x spans x latencies");
+    let mut topos: Vec<String> = Vec::new();
+    let mut spans: Vec<String> = Vec::new();
+    let mut lats: Vec<u64> = Vec::new();
+    for p in points {
+        assert_eq!(p.get("ok").and_then(Json::as_bool), Some(true));
+        topos.push(p.get("xwafer_topo").unwrap().as_str().unwrap().to_string());
+        spans.push(p.get("wafer_span").unwrap().as_str().unwrap().to_string());
+        lats.push(p.get("xwafer_latency_s").unwrap().as_f64().unwrap().to_bits());
+        let span = p.get("wafer_span").unwrap().as_str().unwrap();
+        let wafers = p.get("wafers").unwrap().as_usize().unwrap();
+        let dp = p.get("dp").unwrap().as_usize().unwrap();
+        let pp = p.get("pp").unwrap().as_usize().unwrap();
+        let (global_dp, global_pp) = (
+            p.get("global_dp").unwrap().as_usize().unwrap(),
+            p.get("global_pp").unwrap().as_usize().unwrap(),
+        );
+        if span == "pp" {
+            assert_eq!(global_pp, wafers * pp, "PP span multiplies pipeline depth");
+            assert_eq!(global_dp, dp, "PP span leaves DP per-wafer");
+            let scaled = p.get("scaled_strategy").unwrap().as_str().unwrap();
+            assert!(scaled.starts_with("4W(pp) x "), "got `{scaled}`");
+        } else {
+            assert_eq!(global_dp, wafers * dp);
+            assert_eq!(global_pp, pp);
+        }
+    }
+    for list in [&mut topos, &mut spans] {
+        list.sort();
+        list.dedup();
+    }
+    assert_eq!(topos, vec!["dragonfly", "ring", "tree"]);
+    assert_eq!(spans, vec!["dp", "pp"]);
+    lats.sort_unstable();
+    lats.dedup();
+    assert_eq!(lats.len(), 2, "both latency points swept");
+    // ns scaling on the CLI: 250 ns arrives as 250 * 1e-9 seconds.
+    assert!(lats.contains(&(250.0_f64 * 1e-9).to_bits()));
+}
+
+#[test]
+fn egress_axis_sweep_is_byte_identical_at_any_thread_count() {
+    // The full new-axis grid through the real binary: output bytes must
+    // not depend on the thread count.
+    let args = [
+        "--models",
+        "resnet152",
+        "--wafers",
+        "1,2,4",
+        "--fabrics",
+        "fred-d",
+        "--max-strategies",
+        "3",
+        "--xwafer-topo",
+        "ring,tree,dragonfly",
+        "--span",
+        "dp,pp",
+        "--json",
+    ];
+    let with_threads = |n: &'static str| -> Vec<&'static str> {
+        let mut v = args.to_vec();
+        v.push("--threads");
+        v.push(n);
+        v
+    };
+    let single = run_sweep_stdout(&with_threads("1"), &[]);
+    let threaded = run_sweep_stdout(&with_threads("6"), &[]);
+    assert_eq!(single, threaded, "egress axes must preserve thread determinism");
 }
 
 #[test]
@@ -235,7 +384,7 @@ fn sweep_cli_scales_to_sixteen_wafer_fleets() {
         "--max-strategies",
         "2",
     ]);
-    assert_eq!(json.get("schema_version").and_then(Json::as_usize), Some(2));
+    assert_eq!(json.get("schema_version").and_then(Json::as_usize), Some(3));
     let points = json.get("points").unwrap().as_arr().unwrap();
     assert_eq!(points.len(), 10, "2 strategies x 5 fleet sizes");
     let mut fleets: Vec<usize> = points
