@@ -22,14 +22,18 @@ cargo build --release --examples
 echo "== cargo test -q =="
 cargo test -q
 
-echo "== multi-wafer sweep smoke =="
-# The scale-out path end to end through the real binary: a 4-wafer fleet,
-# JSON to stdout and --out, and the two outputs must agree byte for byte.
+echo "== multi-wafer sweep smoke (mixed 2x2 span riding along) =="
+# The scale-out path end to end through the real binary: a 4-wafer fleet
+# swept under both the plain DP span and a 2x2 mixed span, JSON to stdout
+# and --out, and the two outputs must agree byte for byte.
 target/release/fred sweep --wafers 4 --models resnet152 --max-strategies 6 \
+    --span dp,2x2 \
     --json --out /tmp/sweep.json > /tmp/sweep.stdout.json
 cmp /tmp/sweep.json /tmp/sweep.stdout.json
 test -s /tmp/sweep.json
-grep -q '"schema_version":3' /tmp/sweep.json
+grep -q '"schema_version":4' /tmp/sweep.json
+grep -q '"wafer_span":"dp"' /tmp/sweep.json
+grep -q '"wafer_span":"2x2"' /tmp/sweep.json
 rm -f /tmp/sweep.json /tmp/sweep.stdout.json
 
 echo "== egress-fabric sweep smoke (tree topology, PP across wafers) =="
@@ -39,10 +43,32 @@ target/release/fred sweep --wafers 4 --models resnet152 --max-strategies 4 \
     --xwafer-topo tree --span pp \
     --json --out /tmp/sweep_pp.json > /tmp/sweep_pp.stdout.json
 cmp /tmp/sweep_pp.json /tmp/sweep_pp.stdout.json
-grep -q '"schema_version":3' /tmp/sweep_pp.json
+grep -q '"schema_version":4' /tmp/sweep_pp.json
 grep -q '"xwafer_topo":"tree"' /tmp/sweep_pp.json
 grep -q '"wafer_span":"pp"' /tmp/sweep_pp.json
 rm -f /tmp/sweep_pp.json /tmp/sweep_pp.stdout.json
+
+echo "== MP-span sweep smoke (tree topology, MP across wafers) =="
+# ISSUE 4's headline path: tensor-parallel groups crossing the egress
+# fabric, end to end through the real binary at schema v4.
+target/release/fred sweep --wafers 4 --xwafer-topo tree --span mp \
+    --models resnet152 --max-strategies 4 \
+    --json --out /tmp/sweep_mp.json > /tmp/sweep_mp.stdout.json
+cmp /tmp/sweep_mp.json /tmp/sweep_mp.stdout.json
+grep -q '"schema_version":4' /tmp/sweep_mp.json
+grep -q '"wafer_span":"mp"' /tmp/sweep_mp.json
+grep -q '"global_mp"' /tmp/sweep_mp.json
+rm -f /tmp/sweep_mp.json /tmp/sweep_mp.stdout.json
+
+echo "== sweep determinism gate (--threads 1 vs --threads 4) =="
+# Byte-identity at any thread count, enforced in CI on the full span axis
+# (dp, pp, mp, and a mixed 2x2 span) — not just in the test suite.
+target/release/fred sweep --wafers 1,2,4 --models resnet152 --max-strategies 4 \
+    --span dp,pp,mp,2x2 --threads 1 --json > /tmp/sweep_t1.json
+target/release/fred sweep --wafers 1,2,4 --models resnet152 --max-strategies 4 \
+    --span dp,pp,mp,2x2 --threads 4 --json > /tmp/sweep_t4.json
+cmp /tmp/sweep_t1.json /tmp/sweep_t4.json
+rm -f /tmp/sweep_t1.json /tmp/sweep_t4.json
 
 if command -v rustfmt >/dev/null 2>&1; then
     echo "== cargo fmt --check =="

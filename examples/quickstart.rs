@@ -44,7 +44,10 @@ fn main() {
         Flow::all_reduce(vec![5, 0]),
         Flow::all_reduce(vec![6, 7]),
     ];
-    println!("\nFig. 7(j) flow set on FRED_2(8): {:?}", route_flows(8, 2, &flows).err().map(|e| e.to_string()));
+    println!(
+        "\nFig. 7(j) flow set on FRED_2(8): {:?}",
+        route_flows(8, 2, &flows).err().map(|e| e.to_string())
+    );
     println!("same flows on FRED_3(8):        routed = {}", route_flows(8, 3, &flows).is_ok());
 
     // 3. The AOT/PJRT path (needs `make artifacts`).

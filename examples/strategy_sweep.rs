@@ -11,8 +11,13 @@
 //!    off-wafer CXL fabric (DP across wafers, MP/PP within), and how
 //!    sensitive is the win to the cross-wafer egress bandwidth?
 //! 3. which *egress topology* should connect the wafers — ring vs CXL
-//!    fat-tree at the same egress bandwidth — and does spanning the
-//!    pipeline across wafers (`--span pp`) beat DP across wafers?
+//!    fat-tree at the same egress bandwidth — and which wafer span
+//!    (`--span dp,pp,mp`) wins on each?
+//! 4. when (if ever) does *MP across wafers* pay off — per-layer
+//!    activation All-Reduces over the egress fabric are the most
+//!    egress-hungry mapping, so MP-span points should close the gap on
+//!    DP/PP spans only as the egress bandwidth grows fat (the crossover
+//!    is computed and reported below).
 //!
 //! Run: `cargo run --release --example strategy_sweep`
 
@@ -79,7 +84,9 @@ fn main() {
         println!("best per-sample @ {wafers:>2} wafer(s): {}", fmt_time(best));
     }
     // ------------------------------- egress topology x wafer span
-    println!("\n== egress topologies: ring vs tree vs dragonfly at 2304 GB/s, dp vs pp span ==\n");
+    println!(
+        "\n== egress topologies: ring vs tree vs dragonfly at 2304 GB/s, dp/pp/mp span ==\n"
+    );
     let topo_cfg = SweepConfig {
         workloads: vec![workload::gpt3()],
         wafers: vec![WaferDims::PAPER],
@@ -108,9 +115,89 @@ fn main() {
             println!("best per-sample @ {:>9} / span {}: {}", t.name(), span, fmt_time(best));
         }
     }
+    // ------------------- MP-span crossover vs egress bandwidth
+    println!(
+        "\n== wafer-span crossover: dp vs pp vs mp, Transformer-17B on 4 wafers ==\n"
+    );
+    let bws_gbps = [64.0, 512.0, 2304.0, 16384.0, 262144.0];
+    let span_cfg = SweepConfig {
+        workloads: vec![workload::transformer_17b()],
+        wafers: vec![WaferDims::PAPER],
+        wafer_counts: vec![4],
+        xwafer_bws: bws_gbps.iter().map(|b| b * GBPS).collect(),
+        wafer_spans: vec![WaferSpan::Dp, WaferSpan::Pp, WaferSpan::Mp],
+        fabrics: vec![FabricKind::FredD],
+        strategies: None,
+        max_strategies: 6,
+        bench_bytes: 100e6,
+        ..SweepConfig::default()
+    };
+    let spans = run_sweep(&span_cfg);
+    let best = |bw_gbps: f64, span: WaferSpan| -> f64 {
+        spans
+            .points
+            .iter()
+            .filter(|p| p.xwafer_bw == bw_gbps * GBPS && p.span == span)
+            .filter_map(|p| p.outcome.as_ref().ok())
+            .map(|m| m.per_sample)
+            .fold(f64::INFINITY, f64::min)
+    };
+    let mut crossover: Option<f64> = None;
+    let mut ratios: Vec<f64> = Vec::new();
+    for &bw in &bws_gbps {
+        let (d, p, m) = (best(bw, WaferSpan::Dp), best(bw, WaferSpan::Pp), best(bw, WaferSpan::Mp));
+        let others = d.min(p);
+        let winner = if m < others {
+            "mp"
+        } else if d <= p {
+            "dp"
+        } else {
+            "pp"
+        };
+        ratios.push(m / others);
+        if m < others && crossover.is_none() {
+            crossover = Some(bw);
+        }
+        println!(
+            "egress {bw:>9.0} GB/s: dp {} | pp {} | mp {}  -> winner: {winner} \
+             (mp/best-other = {:.2}x)",
+            fmt_time(d),
+            fmt_time(p),
+            fmt_time(m),
+            m / others
+        );
+    }
+    // The span story the sweep must reproduce: MP across wafers is the
+    // most egress-hungry mapping, so it can only win on fat egress
+    // operating points — never on the starved end — and its gap to the
+    // best other span must shrink as the egress fattens.
+    assert!(
+        ratios[0] > 1.0,
+        "MP span must lose on the narrowest egress (ratio {})",
+        ratios[0]
+    );
+    assert!(
+        ratios[ratios.len() - 1] < ratios[0],
+        "MP span's relative gap must shrink with egress bandwidth ({ratios:?})"
+    );
+    match crossover {
+        Some(bw) => println!(
+            "\nMP-span crossover: MP-across-wafers first wins at {bw:.0} GB/s egress"
+        ),
+        None => println!(
+            "\nMP-span crossover: none within {:.0}..{:.0} GB/s — per-layer egress \
+             All-Reduces only pay off beyond the swept egress range (the mp/best-other \
+             ratio still fell {:.1}x -> {:.2}x)",
+            bws_gbps[0],
+            bws_gbps[bws_gbps.len() - 1],
+            ratios[0],
+            ratios[ratios.len() - 1]
+        ),
+    }
+
     println!(
         "\nmachine-readable: `fred sweep --models gpt3 --wafers 1,2,4,8,16 \
          --fabrics fred-d --xwafer-bw 1152,2304 --xwafer-topo ring,tree,dragonfly \
-         --span dp,pp --json --out sweep.json`"
+         --span dp,pp,mp,2x2 --json --out sweep.json`"
     );
 }

@@ -80,7 +80,7 @@ fn main() {
             ),
         ),
         (
-            "gpt3 | 4W x 3 topo x 2 span | fred-d | 6 strat",
+            "gpt3 | 4W x 3 topo x 3 span | fred-d | 6 strat",
             {
                 let mut c = cfg(
                     vec![workload::gpt3()],
@@ -91,6 +91,27 @@ fn main() {
                 c.wafer_counts = vec![4];
                 c.xwafer_topos = EgressTopo::all().to_vec();
                 c.wafer_spans = WaferSpan::all().to_vec();
+                c
+            },
+        ),
+        (
+            "t17b | 4W x mp + 2x2 span | fred-d | 6 strat",
+            // The ISSUE 4 axis in isolation: per-layer egress All-Reduces
+            // (MP span) and the two-dimensional mixed span are the most
+            // fluid-heavy points of the widened factorization space, so
+            // their points/s shows what the new spans cost the engine.
+            {
+                let mut c = cfg(
+                    vec![workload::transformer_17b()],
+                    vec![WaferDims::PAPER],
+                    vec![FabricKind::FredD],
+                    6,
+                );
+                c.wafer_counts = vec![4];
+                c.wafer_spans = vec![
+                    WaferSpan::Mp,
+                    WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 2 },
+                ];
                 c
             },
         ),
@@ -128,7 +149,12 @@ fn main() {
     );
     base.wafer_counts = vec![1, 4, 8];
     base.xwafer_topos = EgressTopo::all().to_vec();
-    base.wafer_spans = WaferSpan::all().to_vec();
+    let mut spans = WaferSpan::all().to_vec();
+    // The mixed span applies only to the fleet sizes it factors (4 and 8
+    // here via 2x2 / 2x4); the executor skips the rest.
+    spans.push(WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 2 });
+    spans.push(WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 4 });
+    base.wafer_spans = spans;
 
     let mut seq_cfg = base.clone();
     seq_cfg.threads = 1;

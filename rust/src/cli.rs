@@ -53,7 +53,7 @@ COMMANDS:
   sweep        [--models <m1,m2|all>] [--wafers 5x4,8x8,2,4] [--fabrics all|fred-a,fred-d]
                [--strategies auto|\"20,1,1;2,5,2\"] [--max-strategies N]
                [--xwafer-bw GBPS[,GBPS..]] [--xwafer-latency NS[,NS..]]
-               [--xwafer-topo ring,tree,dragonfly] [--span dp,pp]
+               [--xwafer-topo ring,tree,dragonfly] [--span dp,pp,mp,PPxDP]
                [--threads N] [--top N] [--bytes N] [--json] [--out FILE]
                Strategy/topology sweep engine: enumerates fabric x wafer
                shape x fleet size x MP/DP/PP factorization x workload,
@@ -76,19 +76,39 @@ COMMANDS:
                reduce/multicast, O(levels) steps, oversubscribed trunks),
                `dragonfly` (switch-less wafer groups, contended global
                links); give several to sweep the topology. `--span`
-               chooses what the wafer dimension multiplies: `dp` (DP
-               across wafers; gradient All-Reduce priced hierarchically
-               as on-wafer reduce-scatter -> cross-wafer all-reduce ->
-               on-wafer all-gather) and/or `pp` (pipeline stages span
-               wafers; boundary activations cross the egress fabric as
-               concurrent point-to-point flows). `--xwafer-bw` sets the
-               per-wafer egress bandwidth in GB/s (default 2304 = 18
-               CXL-3 controllers); `--xwafer-latency` sets the per-hop
-               cross-wafer latency in ns (default 500); give several
-               values to sweep the egress operating point.
-               Example: fred sweep --wafers 1,2,4,8,16 --models gpt3
+               chooses what the wafer dimension multiplies — the LIBRA-
+               style tier-to-dimension mapping:
+                 dp    DP across wafers: the gradient All-Reduce goes
+                       hierarchical (on-wafer reduce-scatter -> cross-
+                       wafer all-reduce -> on-wafer all-gather), once
+                       per iteration.
+                 pp    PP across wafers: pipeline stages tile the fleet;
+                       boundary activations cross the egress fabric as
+                       concurrent point-to-point flows.
+                 mp    MP across wafers: tensor-parallel groups cross
+                       the egress fabric, so *every layer's* activation
+                       All-Reduce pays the hierarchical egress path on
+                       the critical path (both stationary and streaming
+                       execution) while per-worker compute and weight
+                       shards shrink by the fleet size. Only viable on
+                       fat egress operating points.
+                 PxD   mixed span, e.g. `2x4` = 2-wafer PP blocks
+                       replicated as 4 DP fleets (P*D must equal a swept
+                       fleet size): boundary activations flow inside
+                       each block, gradients all-reduce across the
+                       same-stage wafers of every block, all rings
+                       concurrent on the shared egress links.
+               `--xwafer-bw` sets the per-wafer egress bandwidth in GB/s
+               (default 2304 = 18 CXL-3 controllers); `--xwafer-latency`
+               sets the per-hop cross-wafer latency in ns (default 500);
+               give several values to sweep the egress operating point.
+               JSON points carry the span decomposition (`wafer_span`,
+               `global_mp`/`global_dp`/`global_pp`, `span_*_wafers`) at
+               `schema_version: 4`.
+               Example: fred sweep --wafers 1,2,4,8 --models gpt3
                         --fabrics fred-d --xwafer-bw 1152,2304
-                        --xwafer-topo ring,tree --span dp,pp --json
+                        --xwafer-topo ring,tree --span dp,pp,mp,2x4
+                        --json
   microbench   [--strategy 2,5,2] [--bytes N]        (Fig. 9 per-phase BW)
   channel-load [--rows 4 --cols 4]                   (Fig. 4 hotspot)
   route        [--m 2|3]                             (Fig. 7 routing demo)
@@ -294,14 +314,16 @@ fn cmd_sweep(opts: &Opts) -> i32 {
     if xwafer_topos.is_empty() {
         xwafer_topos.push(EgressTopo::Ring);
     }
-    // Wafer-spanning axes.
+    // Wafer-spanning axes: dp / pp / mp, or a mixed NxM span
+    // (pp_wafers x dp_wafers). A mixed span must match at least one
+    // swept fleet size or it would silently never apply.
     let mut wafer_spans = Vec::new();
     if let Some(list) = opts.get("span") {
         for t in comma_list(list) {
             match WaferSpan::parse(t) {
                 Some(span) => wafer_spans.push(span),
                 None => {
-                    eprintln!("bad --span `{t}` (dp, pp)");
+                    eprintln!("bad --span `{t}` (dp, pp, mp, or PPxDP e.g. 2x4)");
                     return 2;
                 }
             }
@@ -309,6 +331,32 @@ fn cmd_sweep(opts: &Opts) -> i32 {
     }
     if wafer_spans.is_empty() {
         wafer_spans.push(WaferSpan::Dp);
+    }
+    for span in &wafer_spans {
+        if let WaferSpan::Mixed { pp_wafers, dp_wafers } = span {
+            if !wafer_counts.iter().any(|&wc| span.covers(wc)) {
+                eprintln!(
+                    "--span {} needs a matching fleet size: add {} to --wafers \
+                     (pp_wafers x dp_wafers must equal a swept wafer count)",
+                    span.name(),
+                    pp_wafers * dp_wafers
+                );
+                return 2;
+            }
+        }
+    }
+    // And the converse: every swept multi-wafer fleet size must have at
+    // least one covering span, or that fleet would silently produce zero
+    // sweep points (a consumer comparing fleet sizes would read an
+    // incomplete sweep as complete).
+    for &wc in &wafer_counts {
+        if wc > 1 && !wafer_spans.iter().any(|s| s.covers(wc)) {
+            eprintln!(
+                "--wafers {wc} has no covering --span: add dp, pp, mp, or a \
+                 mixed NxM span with N*M = {wc}"
+            );
+            return 2;
+        }
     }
     // Fabrics: --fabrics all | baseline,fred-a,...
     let fabrics_arg = opts.get("fabrics").or_else(|| opts.get("fabric")).unwrap_or("all");

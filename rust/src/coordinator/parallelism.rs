@@ -134,53 +134,165 @@ impl Strategy {
 
 /// Which parallelism dimension the wafer axis multiplies when a strategy
 /// spans a fleet: DP across wafers (Hecaton's split — the egress fabric
-/// carries only the weight-gradient All-Reduce) or PP across wafers
+/// carries only the weight-gradient All-Reduce), PP across wafers
 /// (pipeline stages span wafers for models whose per-stage footprint
-/// exceeds one wafer — the egress fabric carries boundary activations).
+/// exceeds one wafer — the egress fabric carries boundary activations),
+/// MP across wafers (tensor-parallel groups cross the egress fabric —
+/// per-layer activation All-Reduces on the critical path, viable only on
+/// fat egress operating points), or a mixed span (`pp_wafers`-deep PP
+/// blocks replicated `dp_wafers` ways — the LIBRA-style tier×dimension
+/// mapping with two dimensions on the egress tier at once).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum WaferSpan {
     /// The wafer dimension is extra data parallelism.
     Dp,
     /// The wafer dimension is extra pipeline depth.
     Pp,
+    /// The wafer dimension is extra tensor-parallel width.
+    Mp,
+    /// The wafer dimension factors into PP blocks × DP fleets:
+    /// `pp_wafers · dp_wafers` must equal the fleet's wafer count. Wafer
+    /// `w` sits at pipeline stage `w % pp_wafers` of DP block
+    /// `w / pp_wafers`.
+    Mixed {
+        /// Wafers per pipeline block (the PP multiplier).
+        pp_wafers: usize,
+        /// Number of replicated blocks (the DP multiplier).
+        dp_wafers: usize,
+    },
 }
 
 impl WaferSpan {
-    /// Every span, in CLI/report order.
-    pub fn all() -> [WaferSpan; 2] {
-        [WaferSpan::Dp, WaferSpan::Pp]
+    /// Every *pure* span, in CLI/report order. Mixed spans are
+    /// parameterized by the fleet factorization and cannot be enumerated
+    /// here; construct them explicitly or parse `"NxM"`.
+    pub fn all() -> [WaferSpan; 3] {
+        [WaferSpan::Dp, WaferSpan::Pp, WaferSpan::Mp]
     }
 
-    /// Name used on the CLI and in reports/JSON.
-    pub fn name(&self) -> &'static str {
+    /// Name used on the CLI and in reports/JSON (`dp`/`pp`/`mp`, or
+    /// `"NxM"` = `pp_wafers x dp_wafers` for a mixed span).
+    pub fn name(&self) -> String {
         match self {
-            WaferSpan::Dp => "dp",
-            WaferSpan::Pp => "pp",
+            WaferSpan::Dp => "dp".into(),
+            WaferSpan::Pp => "pp".into(),
+            WaferSpan::Mp => "mp".into(),
+            WaferSpan::Mixed { pp_wafers, dp_wafers } => {
+                format!("{pp_wafers}x{dp_wafers}")
+            }
         }
     }
 
-    /// Parse a CLI name (`dp` / `pp`).
+    /// Parse a CLI name: `dp` / `pp` / `mp`, or `NxM` (PP blocks × DP
+    /// fleets, both >= 1 and bare decimal digits).
     pub fn parse(s: &str) -> Option<Self> {
         match s.trim().to_ascii_lowercase().as_str() {
             "dp" => Some(WaferSpan::Dp),
             "pp" => Some(WaferSpan::Pp),
-            _ => None,
+            "mp" => Some(WaferSpan::Mp),
+            other => {
+                let (a, b) = other.split_once('x')?;
+                let dim = |t: &str| -> Option<usize> {
+                    let t = t.trim();
+                    if t.is_empty() || !t.bytes().all(|c| c.is_ascii_digit()) {
+                        return None;
+                    }
+                    t.parse().ok().filter(|&n| n >= 1)
+                };
+                Some(WaferSpan::Mixed { pp_wafers: dim(a)?, dp_wafers: dim(b)? })
+            }
+        }
+    }
+
+    /// Whether this span can be laid out on a `wafers`-wafer fleet: pure
+    /// spans cover any fleet, a mixed span only the fleet its
+    /// factorization multiplies out to.
+    pub fn covers(&self, wafers: usize) -> bool {
+        match self {
+            WaferSpan::Mixed { pp_wafers, dp_wafers } => pp_wafers * dp_wafers == wafers,
+            _ => true,
+        }
+    }
+
+    /// The wafer-dimension multiplier this span puts on DP.
+    pub fn dp_factor(&self, wafers: usize) -> usize {
+        match self {
+            WaferSpan::Dp => wafers,
+            WaferSpan::Mixed { dp_wafers, .. } => *dp_wafers,
+            WaferSpan::Pp | WaferSpan::Mp => 1,
+        }
+    }
+
+    /// The wafer-dimension multiplier this span puts on PP.
+    pub fn pp_factor(&self, wafers: usize) -> usize {
+        match self {
+            WaferSpan::Pp => wafers,
+            WaferSpan::Mixed { pp_wafers, .. } => *pp_wafers,
+            WaferSpan::Dp | WaferSpan::Mp => 1,
+        }
+    }
+
+    /// The wafer-dimension multiplier this span puts on MP.
+    pub fn mp_factor(&self, wafers: usize) -> usize {
+        match self {
+            WaferSpan::Mp => wafers,
+            _ => 1,
+        }
+    }
+
+    /// Wafer subgroups whose members all-reduce gradients across the
+    /// egress fabric under this span: the whole fleet for a DP span, the
+    /// same-stage wafers of each block for a mixed span (stage `s` group
+    /// = `{s, s + pp_wafers, ...}`), nothing for PP/MP spans (each wafer
+    /// then owns distinct layers or distinct shards).
+    pub fn dp_wafer_groups(&self, wafers: usize) -> Vec<Vec<usize>> {
+        match self {
+            WaferSpan::Dp => vec![(0..wafers).collect()],
+            WaferSpan::Mixed { pp_wafers, dp_wafers } => {
+                debug_assert_eq!(pp_wafers * dp_wafers, wafers);
+                (0..*pp_wafers)
+                    .map(|s| (0..*dp_wafers).map(|b| b * pp_wafers + s).collect())
+                    .collect()
+            }
+            WaferSpan::Pp | WaferSpan::Mp => Vec::new(),
+        }
+    }
+
+    /// Cross-wafer pipeline-stage boundaries `(src, dst)` under this
+    /// span: the full wafer chain for a PP span, one chain per DP block
+    /// for a mixed span, nothing for DP/MP spans.
+    pub fn pp_boundaries(&self, wafers: usize) -> Vec<(usize, usize)> {
+        match self {
+            WaferSpan::Pp => (0..wafers.saturating_sub(1)).map(|w| (w, w + 1)).collect(),
+            WaferSpan::Mixed { pp_wafers, dp_wafers } => {
+                debug_assert_eq!(pp_wafers * dp_wafers, wafers);
+                let mut out = Vec::new();
+                for b in 0..*dp_wafers {
+                    for s in 0..pp_wafers.saturating_sub(1) {
+                        out.push((b * pp_wafers + s, b * pp_wafers + s + 1));
+                    }
+                }
+                out
+            }
+            WaferSpan::Dp | WaferSpan::Mp => Vec::new(),
         }
     }
 }
 
 impl std::fmt::Display for WaferSpan {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str(self.name())
+        f.write_str(&self.name())
     }
 }
 
 /// A strategy with the scale-out wafer dimension: the fleet replicates
 /// the per-wafer MP/DP/PP arrangement `wafers` times, with the wafer
-/// dimension multiplying one global parallelism axis per its
+/// dimension multiplying the global parallelism axes per its
 /// [`WaferSpan`] — DP across wafers (the Hecaton-style hierarchical
-/// split) or PP across wafers (stages spanning wafers). A 1-wafer scaled
-/// strategy is exactly its local strategy either way.
+/// split), PP across wafers (stages spanning wafers), MP across wafers
+/// (tensor groups spanning wafers), or a mixed `pp_wafers × dp_wafers`
+/// factorization. A 1-wafer scaled strategy is exactly its local
+/// strategy under every span.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ScaledStrategy {
     /// Wafer count (the scale-out factor on the spanned axis), >= 1.
@@ -197,9 +309,16 @@ impl ScaledStrategy {
         Self::with_span(wafers, local, WaferSpan::Dp)
     }
 
-    /// Build with an explicit wafer span; `wafers >= 1`.
+    /// Build with an explicit wafer span; `wafers >= 1`, and a mixed span
+    /// must factor the fleet exactly (`pp_wafers · dp_wafers == wafers`).
     pub fn with_span(wafers: usize, local: Strategy, span: WaferSpan) -> Self {
         assert!(wafers >= 1, "need at least one wafer");
+        assert!(
+            span.covers(wafers),
+            "mixed span {} does not cover a {wafers}-wafer fleet \
+             (pp_wafers x dp_wafers must equal the wafer count)",
+            span.name()
+        );
         Self { wafers, local, span }
     }
 
@@ -213,20 +332,19 @@ impl ScaledStrategy {
         self.wafers * self.local.workers()
     }
 
-    /// Global data-parallel width (× wafers only under a DP span).
+    /// Global data-parallel width (× the span's DP wafer factor).
     pub fn global_dp(&self) -> usize {
-        match self.span {
-            WaferSpan::Dp => self.wafers * self.local.dp,
-            WaferSpan::Pp => self.local.dp,
-        }
+        self.span.dp_factor(self.wafers) * self.local.dp
     }
 
-    /// Global pipeline depth (× wafers only under a PP span).
+    /// Global pipeline depth (× the span's PP wafer factor).
     pub fn global_pp(&self) -> usize {
-        match self.span {
-            WaferSpan::Dp => self.local.pp,
-            WaferSpan::Pp => self.wafers * self.local.pp,
-        }
+        self.span.pp_factor(self.wafers) * self.local.pp
+    }
+
+    /// Global tensor-parallel width (× the span's MP wafer factor).
+    pub fn global_mp(&self) -> usize {
+        self.span.mp_factor(self.wafers) * self.local.mp
     }
 }
 
@@ -234,10 +352,10 @@ impl std::fmt::Display for ScaledStrategy {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         if self.wafers == 1 {
             write!(f, "{}", self.local)
-        } else if self.span == WaferSpan::Pp {
-            write!(f, "{}W(pp) x {}", self.wafers, self.local)
-        } else {
+        } else if self.span == WaferSpan::Dp {
             write!(f, "{}W x {}", self.wafers, self.local)
+        } else {
+            write!(f, "{}W({}) x {}", self.wafers, self.span.name(), self.local)
         }
     }
 }
@@ -341,10 +459,104 @@ mod tests {
     fn wafer_span_parse_and_names() {
         assert_eq!(WaferSpan::parse("dp"), Some(WaferSpan::Dp));
         assert_eq!(WaferSpan::parse(" PP "), Some(WaferSpan::Pp));
-        assert_eq!(WaferSpan::parse("mp"), None);
+        assert_eq!(WaferSpan::parse("mp"), Some(WaferSpan::Mp));
+        assert_eq!(
+            WaferSpan::parse("2x4"),
+            Some(WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 4 })
+        );
+        assert_eq!(
+            WaferSpan::parse(" 2 X 4 "),
+            Some(WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 4 })
+        );
         for s in WaferSpan::all() {
-            assert_eq!(WaferSpan::parse(s.name()), Some(s));
+            assert_eq!(WaferSpan::parse(&s.name()), Some(s));
         }
+        let mixed = WaferSpan::Mixed { pp_wafers: 3, dp_wafers: 2 };
+        assert_eq!(mixed.name(), "3x2");
+        assert_eq!(WaferSpan::parse(&mixed.name()), Some(mixed));
+        // Malformed mixed spans are rejected, not misparsed.
+        for bad in ["0x4", "4x0", "x4", "4x", "x", "+2x4", "2x+4", "2x4x2", "diag", ""] {
+            assert_eq!(WaferSpan::parse(bad), None, "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn span_factors_decompose_the_wafer_dimension() {
+        let w = 8;
+        for span in WaferSpan::all() {
+            assert!(span.covers(w));
+            assert_eq!(
+                span.mp_factor(w) * span.dp_factor(w) * span.pp_factor(w),
+                w,
+                "{}: factors must multiply out to the fleet",
+                span.name()
+            );
+        }
+        let mixed = WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 4 };
+        assert!(mixed.covers(8));
+        assert!(!mixed.covers(4));
+        assert_eq!(mixed.pp_factor(8), 2);
+        assert_eq!(mixed.dp_factor(8), 4);
+        assert_eq!(mixed.mp_factor(8), 1);
+    }
+
+    #[test]
+    fn mixed_span_wafer_groups_and_boundaries_tile_the_fleet() {
+        let mixed = WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 3 };
+        // DP groups: same-stage wafers across the three blocks.
+        let groups = mixed.dp_wafer_groups(6);
+        assert_eq!(groups, vec![vec![0, 2, 4], vec![1, 3, 5]]);
+        // PP boundaries: one chain per block, consecutive wafer indices.
+        let bounds = mixed.pp_boundaries(6);
+        assert_eq!(bounds, vec![(0, 1), (2, 3), (4, 5)]);
+        // Pure spans keep their legacy shapes.
+        assert_eq!(WaferSpan::Dp.dp_wafer_groups(4), vec![vec![0, 1, 2, 3]]);
+        assert_eq!(WaferSpan::Pp.pp_boundaries(4), vec![(0, 1), (1, 2), (2, 3)]);
+        assert!(WaferSpan::Mp.dp_wafer_groups(4).is_empty());
+        assert!(WaferSpan::Mp.pp_boundaries(4).is_empty());
+        assert!(WaferSpan::Dp.pp_boundaries(4).is_empty());
+        assert!(WaferSpan::Pp.dp_wafer_groups(4).is_empty());
+    }
+
+    #[test]
+    fn mp_span_multiplies_tensor_width_only() {
+        let local = Strategy::new(4, 5, 1);
+        let s = ScaledStrategy::with_span(4, local, WaferSpan::Mp);
+        assert_eq!(s.total_workers(), 80, "exact cover: wafers x mp x dp x pp");
+        assert_eq!(s.global_mp(), 16, "wafer dimension multiplies MP");
+        assert_eq!(s.global_dp(), 5, "MP span leaves DP per-wafer");
+        assert_eq!(s.global_pp(), 1);
+        assert_eq!(s.to_string(), "4W(mp) x MP(4)-DP(5)-PP(1)");
+        let one = ScaledStrategy::with_span(1, local, WaferSpan::Mp);
+        assert_eq!(one.global_mp(), 4);
+        assert_eq!(one.to_string(), local.to_string());
+    }
+
+    #[test]
+    fn mixed_span_factors_both_dimensions() {
+        let local = Strategy::new(2, 5, 2);
+        let span = WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 4 };
+        let s = ScaledStrategy::with_span(8, local, span);
+        assert_eq!(s.total_workers(), 160);
+        assert_eq!(s.global_pp(), 4, "2-wafer blocks double the pipeline");
+        assert_eq!(s.global_dp(), 20, "4 blocks quadruple DP");
+        assert_eq!(s.global_mp(), 2);
+        assert_eq!(
+            s.global_mp() * s.global_dp() * s.global_pp(),
+            160,
+            "global dims exactly cover the fleet"
+        );
+        assert_eq!(s.to_string(), "8W(2x4) x MP(2)-DP(5)-PP(2)");
+    }
+
+    #[test]
+    #[should_panic(expected = "does not cover")]
+    fn mixed_span_must_factor_the_fleet() {
+        let _ = ScaledStrategy::with_span(
+            4,
+            Strategy::new(1, 20, 1),
+            WaferSpan::Mixed { pp_wafers: 3, dp_wafers: 3 },
+        );
     }
 
     #[test]

@@ -45,8 +45,9 @@ pub struct Simulator {
     /// Multi-wafer scale-out context; the default single-wafer wrapper
     /// prices identically to the bare fabric for every egress topology.
     scaleout: ScaleOut,
-    /// Which axis the wafer dimension multiplies (DP or PP across
-    /// wafers). Irrelevant on a single wafer.
+    /// Which axis the wafer dimension multiplies (DP, PP, or MP across
+    /// wafers, or a mixed PP×DP factorization). Irrelevant on a single
+    /// wafer.
     span: WaferSpan,
 }
 
@@ -104,15 +105,31 @@ impl Simulator {
     /// gradient reduction is priced hierarchically; under
     /// [`WaferSpan::Pp`] (see [`Self::with_span`]) pipeline stages span
     /// wafers instead. A 1-wafer [`ScaleOut`] leaves every path
-    /// untouched.
+    /// untouched. The already-set span must cover the new fleet (a mixed
+    /// span is tied to its `pp_wafers × dp_wafers` wafer count), so the
+    /// builder invariant holds in either call order.
     pub fn with_scaleout(mut self, scaleout: ScaleOut) -> Self {
+        assert!(
+            self.span.covers(scaleout.wafers()),
+            "span {} does not cover a {}-wafer fleet",
+            self.span.name(),
+            scaleout.wafers()
+        );
         self.scaleout = scaleout;
         self
     }
 
-    /// Choose which axis the wafer dimension multiplies (DP or PP across
-    /// wafers). No effect on a single wafer.
+    /// Choose which axis the wafer dimension multiplies (DP, PP, or MP
+    /// across wafers, or a mixed PP×DP factorization). No effect on a
+    /// single wafer. A mixed span must factor the current scale-out
+    /// fleet exactly — set the scale-out first.
     pub fn with_span(mut self, span: WaferSpan) -> Self {
+        assert!(
+            span.covers(self.scaleout.wafers()),
+            "span {} does not cover a {}-wafer fleet",
+            span.name(),
+            self.scaleout.wafers()
+        );
         self.span = span;
         self
     }
@@ -201,6 +218,33 @@ impl Simulator {
         self.try_phase_time(&self.strategy.mp_groups(), CollectiveKind::AllReduce, bytes)
     }
 
+    /// One hierarchical MP All-Reduce round across the fleet: under an MP
+    /// wafer span each tensor-parallel group extends over every wafer, so
+    /// the per-layer activation All-Reduce decomposes into on-wafer
+    /// reduce-scatter, cross-wafer all-reduce on each wafer's distinct
+    /// partials (one bucket per MP group — all groups' buckets cross
+    /// concurrently), and on-wafer all-gather. With any other span — or a
+    /// single wafer — this is exactly [`Self::try_mp_round`]. Unlike the
+    /// DP round this sits on the *critical path of every layer*, which is
+    /// why MP across wafers is only viable on fat egress operating
+    /// points.
+    pub fn try_hier_mp_round(&self, bytes: f64) -> Result<f64, FluidError> {
+        if self.span.mp_factor(self.scaleout.wafers()) <= 1 {
+            return self.try_mp_round(bytes);
+        }
+        if bytes <= 0.0 {
+            return Ok(0.0);
+        }
+        let groups: Vec<Vec<usize>> = self
+            .strategy
+            .mp_groups()
+            .iter()
+            .map(|g| self.placement.map(g))
+            .collect();
+        self.scaleout
+            .hierarchical_allreduce(self.fabric.as_ref(), &groups, bytes)
+    }
+
     /// One concurrent DP All-Reduce round on `bytes` per worker.
     pub fn dp_round(&self, bytes: f64) -> f64 {
         self.try_dp_round(bytes).unwrap_or_else(|e| panic!("{e}"))
@@ -213,10 +257,14 @@ impl Simulator {
 
     /// One hierarchical DP All-Reduce round across the fleet: on-wafer
     /// reduce-scatter, cross-wafer all-reduce on each wafer's distinct
-    /// reduced shards (one bucket per DP group), on-wafer all-gather. On
-    /// a single wafer this is exactly [`Self::try_dp_round`].
+    /// reduced shards (one bucket per DP group) over the span's wafer
+    /// groups — the whole fleet under a DP span, the per-stage replica
+    /// sets under a mixed span — then on-wafer all-gather. On a single
+    /// wafer, or under a span whose wafer dimension adds no data
+    /// parallelism, this is exactly [`Self::try_dp_round`].
     pub fn try_hier_dp_round(&self, bytes: f64) -> Result<f64, FluidError> {
-        if self.scaleout.is_single() {
+        let wafer_groups = self.span.dp_wafer_groups(self.scaleout.wafers());
+        if self.scaleout.is_single() || !wafer_groups.iter().any(|g| g.len() > 1) {
             return self.try_dp_round(bytes);
         }
         if bytes <= 0.0 {
@@ -228,8 +276,12 @@ impl Simulator {
             .iter()
             .map(|g| self.placement.map(g))
             .collect();
-        self.scaleout
-            .hierarchical_allreduce(self.fabric.as_ref(), &groups, bytes)
+        self.scaleout.hierarchical_allreduce_grouped(
+            self.fabric.as_ref(),
+            &groups,
+            bytes,
+            &wafer_groups,
+        )
     }
 
     /// One concurrent PP boundary transfer (multicast from one member of
@@ -279,20 +331,27 @@ impl Simulator {
             .fold(0.0, f64::max))
     }
 
-    /// The cross-wafer stage-boundary round under a PP span: every DP
-    /// replica pushes `bytes` over each wafer boundary concurrently. The
-    /// `dp` replica flows of one boundary share that boundary's egress
-    /// path equally, which is max-min-fair equivalent to a single flow
-    /// carrying their combined payload — so each boundary is priced as
-    /// one aggregated flow, keeping the fluid transfer set small.
+    /// The cross-wafer stage-boundary round under a span with a PP wafer
+    /// factor: every DP replica pushes `bytes` over each wafer boundary
+    /// concurrently — the full wafer chain under a PP span, one chain per
+    /// replica block under a mixed span (all blocks' chains contend on
+    /// the egress link graph). The `dp` replica flows of one boundary
+    /// share that boundary's egress path equally, which is max-min-fair
+    /// equivalent to a single flow carrying their combined payload — so
+    /// each boundary is priced as one aggregated flow, keeping the fluid
+    /// transfer set small.
     fn try_pp_round_xwafer(&self, bytes: f64) -> Result<f64, FluidError> {
-        if self.span != WaferSpan::Pp || self.scaleout.is_single() || bytes <= 0.0 {
+        if self.scaleout.is_single() || bytes <= 0.0 {
             return Ok(0.0);
         }
-        let wafers = self.scaleout.wafers();
+        let boundaries = self.span.pp_boundaries(self.scaleout.wafers());
+        if boundaries.is_empty() {
+            return Ok(0.0);
+        }
         let replica_bytes = self.strategy.dp as f64 * bytes;
-        let flows: Vec<P2pFlow> = (0..wafers - 1)
-            .map(|w| P2pFlow::new(w, w + 1, replica_bytes))
+        let flows: Vec<P2pFlow> = boundaries
+            .iter()
+            .map(|&(src, dst)| P2pFlow::new(src, dst, replica_bytes))
             .collect();
         self.scaleout.try_boundary_p2p(&flows)
     }
@@ -340,10 +399,15 @@ impl Simulator {
         let mb_samples = samples_replica / mb as f64;
 
         // Stage partition by FLOPs over the *global* pipeline depth —
-        // under a PP wafer span the stages tile the whole fleet, so each
-        // wafer holds 1/wafers of the layers (the memory-capacity story)
-        // and the slot count grows with the deeper pipeline.
+        // under a PP wafer span (or the PP factor of a mixed span) the
+        // stages tile the whole fleet, so each wafer holds 1/pp_factor of
+        // the layers (the memory-capacity story) and the slot count grows
+        // with the deeper pipeline. Tensor sharding uses the *global* MP
+        // width: under an MP wafer span each layer shards over
+        // wafers × mp workers, so per-worker compute shrinks while every
+        // layer's activation All-Reduce crosses the egress fabric.
         let pp_global = self.global_pp();
+        let mp_global = self.scaled_strategy().global_mp();
         let flops: Vec<f64> = w.layers.iter().map(|l| l.fwd_flops).collect();
         let starts = schedule::partition_stages(&flops, pp_global.min(w.layers.len()));
         let ranges = schedule::stage_ranges(&starts, w.layers.len());
@@ -356,15 +420,17 @@ impl Simulator {
         for (si, &(a, b)) in ranges.iter().enumerate() {
             let stage_flops: f64 = w.layers[a..b]
                 .iter()
-                .map(|l| l.fwd_flops * mb_samples / s.mp as f64)
+                .map(|l| l.fwd_flops * mb_samples / mp_global as f64)
                 .sum();
             f_comp_max = f_comp_max.max(self.comp_time(stage_flops));
-            // MP All-Reduces: group identical-size rounds.
+            // MP All-Reduces: group identical-size rounds. Under an MP
+            // wafer span these go hierarchical (on-wafer RS → egress AR →
+            // on-wafer AG) on every layer — the per-layer critical path.
             let mut mp = 0.0;
-            if s.mp > 1 {
+            if mp_global > 1 {
                 for l in &w.layers[a..b] {
                     if l.mp_collectives > 0 {
-                        let t = self.try_mp_round(l.act_bytes * mb_samples)?;
+                        let t = self.try_hier_mp_round(l.act_bytes * mb_samples)?;
                         mp += t * l.mp_collectives as f64;
                     }
                 }
@@ -390,12 +456,15 @@ impl Simulator {
 
         // DP gradient All-Reduce, bucketed. Exposed fully (the paper's
         // Fig. 10 semantics) unless `overlap_dp` enables the bucketed
-        // overlap recurrence against backward compute. Only a DP wafer
-        // span adds cross-wafer gradient traffic; under a PP span every
-        // DP group lives within one wafer.
-        let cross_dp = self.span == WaferSpan::Dp && !self.scaleout.is_single();
+        // overlap recurrence against backward compute. Only a span with a
+        // DP wafer factor (DP, or the DP blocks of a mixed span) adds
+        // cross-wafer gradient traffic; under PP/MP spans every DP group
+        // lives within one wafer. The per-worker shard divides by the
+        // *global* MP width and pipeline depth.
+        let cross_dp = !self.scaleout.is_single()
+            && self.span.dp_factor(self.scaleout.wafers()) > 1;
         if s.dp > 1 || cross_dp {
-            let shard = w.params_bytes() / s.mp as f64 / pp_global as f64;
+            let shard = w.params_bytes() / mp_global as f64 / pp_global as f64;
             let nb = w.dp_buckets.max(1);
             let bucket_bytes = shard / nb as f64;
             let per_bucket = if cross_dp {
@@ -452,18 +521,26 @@ impl Simulator {
             self.fabric.try_run_plan(&plan)
         };
 
-        // Per-wafer layer slices: under a PP wafer span the fleet tiles
-        // the layer list into `wafers` contiguous blocks that stream
+        // Per-wafer layer slices: a span with a PP wafer factor tiles the
+        // layer list into `pp_factor` contiguous blocks that stream
         // *concurrently* (microbatches pipeline through the blocks), so
-        // the iteration's critical path is the slowest block's sweep and
-        // no cross-wafer gradient reduction exists (each wafer owns
-        // distinct layers). A DP span — and the single wafer — streams
-        // the whole list on every wafer.
+        // the iteration's critical path is the slowest block's sweep. A
+        // mixed span additionally replicates each block `dp_factor` ways
+        // (cross-wafer gradient reduction per block, below). A DP span —
+        // and the single wafer — streams the whole list on every wafer.
+        // An MP wafer span keeps the full layer sweep but shards each
+        // layer's *weight stream* over the fleet (each wafer streams only
+        // its 1/mp_factor tensor shard) at the price of per-layer egress
+        // All-Reduces.
         let wafers = self.scaleout.wafers();
-        let pp_span = self.span == WaferSpan::Pp && wafers > 1;
+        let pp_factor = self.span.pp_factor(wafers);
+        let mp_factor = self.span.mp_factor(wafers);
+        let mp_global = self.scaled_strategy().global_mp();
+        let pp_span = pp_factor > 1 && wafers > 1;
+        let stream_share = 1.0 / mp_factor as f64;
         let slices: Vec<(usize, usize)> = if pp_span {
-            let per = layers.len().div_ceil(wafers);
-            (0..wafers)
+            let per = layers.len().div_ceil(pp_factor);
+            (0..pp_factor)
                 .map(|k| (k * per, ((k + 1) * per).min(layers.len())))
                 .filter(|(a, b)| a < b)
                 .collect()
@@ -489,22 +566,25 @@ impl Simulator {
                 for gi in 0..n_groups {
                     let a = lo + gi * group;
                     let b = (a + group).min(hi);
-                    let params: f64 = layers[a..b].iter().map(|l| l.params_bytes).sum();
+                    let params: f64 =
+                        layers[a..b].iter().map(|l| l.params_bytes * stream_share).sum();
                     let flops: f64 = layers[a..b]
                         .iter()
                         .map(|l| {
                             l.fwd_flops * w.active_param_fraction * mb_samples * mb as f64
-                                / s.mp as f64
+                                / mp_global as f64
                         })
                         .sum();
                     let comp = self.comp_time(flops) * if bwd { 2.0 } else { 1.0 };
                     // MP comm inside the group (blocking, adds to the
-                    // hideable window denominator's wall time).
+                    // hideable window denominator's wall time); under an
+                    // MP wafer span every layer's All-Reduce goes
+                    // hierarchical over the egress fabric.
                     let mut mp = 0.0;
-                    if s.mp > 1 {
+                    if mp_global > 1 {
                         for l in &layers[a..b] {
                             if l.mp_collectives > 0 {
-                                mp += self.try_mp_round(l.act_bytes * mb_samples)?
+                                mp += self.try_hier_mp_round(l.act_bytes * mb_samples)?
                                     * l.mp_collectives as f64
                                     * mb as f64;
                             }
@@ -563,24 +643,39 @@ impl Simulator {
         if pp_span {
             // Slice-boundary activations cross the egress fabric once per
             // microbatch per sweep direction, all boundaries concurrent.
-            let flows: Vec<P2pFlow> = slices
-                .windows(2)
-                .enumerate()
-                .map(|(k, pair)| {
-                    P2pFlow::new(k, k + 1, layers[pair[0].1 - 1].act_bytes * mb_samples)
-                })
-                .collect();
+            // Under a mixed span every DP block runs its own chain of
+            // slices, so each boundary repeats per block and the blocks'
+            // flows contend on the shared egress link graph.
+            let dp_blocks = self.span.dp_factor(wafers);
+            let mut flows: Vec<P2pFlow> = Vec::new();
+            for (k, pair) in slices.windows(2).enumerate() {
+                let act = layers[pair[0].1 - 1].act_bytes * mb_samples;
+                for block in 0..dp_blocks {
+                    flows.push(P2pFlow::new(
+                        block * pp_factor + k,
+                        block * pp_factor + k + 1,
+                        act,
+                    ));
+                }
+            }
             let t = self.scaleout.try_boundary_p2p(&flows)?;
             out.add(CommType::Pp, 2.0 * mb as f64 * t);
-        } else if !self.scaleout.is_single() {
-            // Cross-wafer gradient reduction (DP span): on-wafer DP folds
-            // into the gradient stream-out above, but with DP across
-            // wafers each wafer's reduced gradients (the full model,
-            // whatever the on-wafer MP sharding) must also be all-reduced
-            // over the off-wafer fabric before the optimizer step.
+        }
+        let dp_wafer_groups = self.span.dp_wafer_groups(wafers);
+        if dp_wafer_groups.iter().any(|g| g.len() > 1) {
+            // Cross-wafer gradient reduction (the span's DP wafer
+            // factor): on-wafer DP folds into the gradient stream-out
+            // above, but wafers replicating the same layers must also
+            // all-reduce their reduced gradients over the off-wafer
+            // fabric before the optimizer step — the whole model under a
+            // DP span, each block's 1/pp_factor slice under a mixed span
+            // (all stages' replica rings concurrent). PP/MP spans pay
+            // nothing here: each wafer owns distinct layers or distinct
+            // tensor shards.
+            let wafer_grad = w.params_bytes() / pp_factor as f64;
             out.add(
                 CommType::Dp,
-                self.scaleout.try_cross_allreduce(w.params_bytes())?,
+                self.scaleout.try_subgroup_allreduce(&dp_wafer_groups, wafer_grad)?,
             );
         }
 
@@ -602,23 +697,30 @@ impl Simulator {
         self.try_microbench(bytes).unwrap_or_else(|e| panic!("{e}"))
     }
 
-    /// Fallible form of [`Self::microbench`].
+    /// Fallible form of [`Self::microbench`]. Every phase uses its
+    /// *global* width so the metric is consistent under wafer spans: the
+    /// MP and DP rounds go hierarchical over the egress fabric when their
+    /// dimension spans wafers, and the PP round includes the cross-wafer
+    /// boundary flows. On a single wafer this is exactly the per-wafer
+    /// Fig. 9 metric.
     pub fn try_microbench(&self, bytes: f64) -> Result<[Option<f64>; 3], FluidError> {
         use crate::fabric::collectives::endpoint_send_bytes;
-        let s = &self.strategy;
-        let mp = if s.mp > 1 {
-            let t = self.try_mp_round(bytes)?;
-            Some(endpoint_send_bytes(CollectiveKind::AllReduce, s.mp, bytes) / t)
+        let scaled = self.scaled_strategy();
+        let mp_global = scaled.global_mp();
+        let mp = if mp_global > 1 {
+            let t = self.try_hier_mp_round(bytes)?;
+            Some(endpoint_send_bytes(CollectiveKind::AllReduce, mp_global, bytes) / t)
         } else {
             None
         };
-        let dp = if s.dp > 1 {
-            let t = self.try_dp_round(bytes)?;
-            Some(endpoint_send_bytes(CollectiveKind::AllReduce, s.dp, bytes) / t)
+        let dp_global = scaled.global_dp();
+        let dp = if dp_global > 1 {
+            let t = self.try_hier_dp_round(bytes)?;
+            Some(endpoint_send_bytes(CollectiveKind::AllReduce, dp_global, bytes) / t)
         } else {
             None
         };
-        let pp = if s.pp > 1 {
+        let pp = if scaled.global_pp() > 1 {
             let t = self.try_pp_round(bytes)?;
             Some(bytes / t)
         } else {
@@ -892,6 +994,185 @@ mod tests {
             .with_scaleout(ScaleOut::with_wafers(4))
             .iterate();
         assert!(dp4.get(CommType::Dp) > 0.0);
+    }
+
+    #[test]
+    fn mp_span_shards_compute_and_exposes_per_layer_egress_ars() {
+        use crate::fabric::scaleout::ScaleOut;
+        let w = workload::transformer_17b();
+        let s = w.default_strategy;
+        let one = Simulator::new(FabricKind::FredD, w.clone(), s);
+        let four = Simulator::new(FabricKind::FredD, w.clone(), s)
+            .with_scaleout(ScaleOut::with_wafers(4))
+            .with_span(WaferSpan::Mp);
+        assert_eq!(four.scaled_strategy().global_mp(), 4 * s.mp);
+        assert_eq!(
+            four.global_minibatch(),
+            one.global_minibatch(),
+            "an MP span adds no data parallelism"
+        );
+        let b1 = one.iterate();
+        let b4 = four.iterate();
+        // Tensor sharding over the fleet: per-worker compute is exactly
+        // 1/4 of the single wafer's (stage partition and slots are
+        // unchanged — only the MP divisor grows).
+        assert!(
+            (b4.compute - b1.compute / 4.0).abs() <= 1e-12 * b1.compute,
+            "compute {} must quarter {}",
+            b4.compute,
+            b1.compute
+        );
+        // Every layer's activation All-Reduce now crosses the egress
+        // fabric: MP exposure grows, and no cross-wafer DP traffic or
+        // boundary flows appear.
+        assert!(
+            b4.get(CommType::Mp) > b1.get(CommType::Mp),
+            "per-layer egress ARs must cost: {} vs {}",
+            b4.get(CommType::Mp),
+            b1.get(CommType::Mp)
+        );
+        assert!(b4.get(CommType::Dp) <= b1.get(CommType::Dp));
+    }
+
+    #[test]
+    fn mp_span_on_one_wafer_is_the_identity() {
+        use crate::fabric::scaleout::ScaleOut;
+        for w in [workload::resnet152(), workload::transformer_17b(), workload::gpt3()] {
+            let bare = sim(FabricKind::FredD, w.clone()).iterate();
+            let spanned = sim(FabricKind::FredD, w.clone())
+                .with_scaleout(ScaleOut::single())
+                .with_span(WaferSpan::Mp)
+                .iterate();
+            assert_eq!(bare.total(), spanned.total(), "{}", w.name);
+            assert_eq!(bare.exposed, spanned.exposed, "{}", w.name);
+        }
+    }
+
+    #[test]
+    fn streaming_mp_span_shards_the_weight_stream_but_pays_mp_comm() {
+        use crate::fabric::scaleout::ScaleOut;
+        let w = workload::transformer_1t();
+        let one = sim(FabricKind::FredD, w.clone()).iterate();
+        assert_eq!(one.get(CommType::Mp), 0.0, "MP(1) on one wafer has no MP comm");
+        let four = sim(FabricKind::FredD, w.clone())
+            .with_scaleout(ScaleOut::with_wafers(4))
+            .with_span(WaferSpan::Mp)
+            .iterate();
+        // Each wafer streams only its quarter of every tensor...
+        assert!(
+            four.get(CommType::Stream) < one.get(CommType::Stream),
+            "stream {} must shrink vs {}",
+            four.get(CommType::Stream),
+            one.get(CommType::Stream)
+        );
+        assert!(four.compute < one.compute, "compute shards across the fleet");
+        // ...but pays per-layer activation All-Reduces over the egress
+        // fabric, and owns distinct shards (no cross-wafer gradient AR).
+        assert!(four.get(CommType::Mp) > 0.0, "egress MP comm must appear");
+        assert_eq!(four.get(CommType::Dp), 0.0, "MP span owns distinct shards per wafer");
+    }
+
+    #[test]
+    fn mixed_span_composes_pp_blocks_with_dp_fleets() {
+        use crate::fabric::scaleout::ScaleOut;
+        let w = workload::transformer_17b();
+        let s = w.default_strategy;
+        let span = WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 2 };
+        let one = Simulator::new(FabricKind::FredD, w.clone(), s);
+        let four = Simulator::new(FabricKind::FredD, w.clone(), s)
+            .with_scaleout(ScaleOut::with_wafers(4))
+            .with_span(span);
+        assert_eq!(four.global_pp(), 2 * s.pp, "2-wafer blocks double the pipeline");
+        assert_eq!(
+            four.global_minibatch(),
+            2 * one.global_minibatch(),
+            "2 DP blocks double the minibatch"
+        );
+        let b1 = one.iterate();
+        let b4 = four.iterate();
+        assert!(b4.total().is_finite() && b4.total() > 0.0);
+        assert!(
+            b4.get(CommType::Pp) > b1.get(CommType::Pp),
+            "block boundaries cross the egress fabric"
+        );
+        assert!(b4.get(CommType::Dp) > 0.0, "replica blocks all-reduce gradients");
+    }
+
+    #[test]
+    fn degenerate_mixed_spans_price_like_their_pure_span() {
+        use crate::fabric::scaleout::ScaleOut;
+        for w in [workload::resnet152(), workload::transformer_17b(), workload::transformer_1t()]
+        {
+            let pp = sim(FabricKind::FredD, w.clone())
+                .with_scaleout(ScaleOut::with_wafers(4))
+                .with_span(WaferSpan::Pp)
+                .iterate();
+            let mixed_pp = sim(FabricKind::FredD, w.clone())
+                .with_scaleout(ScaleOut::with_wafers(4))
+                .with_span(WaferSpan::Mixed { pp_wafers: 4, dp_wafers: 1 })
+                .iterate();
+            assert_eq!(pp.total(), mixed_pp.total(), "{}: Mixed{{4,1}} != Pp", w.name);
+            assert_eq!(pp.exposed, mixed_pp.exposed, "{}", w.name);
+            let dp = sim(FabricKind::FredD, w.clone())
+                .with_scaleout(ScaleOut::with_wafers(4))
+                .iterate();
+            let mixed_dp = sim(FabricKind::FredD, w.clone())
+                .with_scaleout(ScaleOut::with_wafers(4))
+                .with_span(WaferSpan::Mixed { pp_wafers: 1, dp_wafers: 4 })
+                .iterate();
+            assert_eq!(dp.total(), mixed_dp.total(), "{}: Mixed{{1,4}} != Dp", w.name);
+            assert_eq!(dp.exposed, mixed_dp.exposed, "{}", w.name);
+        }
+    }
+
+    #[test]
+    fn hier_mp_round_strictly_exceeds_the_onwafer_round() {
+        use crate::fabric::scaleout::ScaleOut;
+        let w = workload::transformer_17b();
+        let s = Strategy::new(4, 5, 1);
+        let one = Simulator::new(FabricKind::FredD, w.clone(), s);
+        // Even with the egress provisioned at the on-wafer trunk rate,
+        // the MP-span round must cost strictly more than the pure
+        // on-wafer round: the RS/AG phases match the All-Reduce's volume
+        // and the cross-wafer phase adds strictly positive time.
+        let trunk_bw = 100e12;
+        let four = Simulator::new(FabricKind::FredD, w, s)
+            .with_scaleout(ScaleOut::new(4, trunk_bw, 0.0))
+            .with_span(WaferSpan::Mp);
+        let bytes = 64e6;
+        let on_wafer = one.try_mp_round(bytes).expect("feasible");
+        let spanned = four.try_hier_mp_round(bytes).expect("feasible");
+        assert!(on_wafer > 0.0);
+        assert!(
+            spanned > on_wafer,
+            "MP across wafers must cost more than on-wafer MP ({spanned} vs {on_wafer})"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "does not cover")]
+    fn mixed_span_must_factor_the_scaleout_fleet() {
+        use crate::fabric::scaleout::ScaleOut;
+        let w = workload::resnet152();
+        let s = w.default_strategy;
+        let _ = Simulator::new(FabricKind::FredD, w, s)
+            .with_scaleout(ScaleOut::with_wafers(4))
+            .with_span(WaferSpan::Mixed { pp_wafers: 3, dp_wafers: 2 });
+    }
+
+    #[test]
+    #[should_panic(expected = "does not cover")]
+    fn rescaling_under_a_mixed_span_revalidates_the_fleet() {
+        // The builder invariant holds in either call order: shrinking the
+        // fleet under an already-set mixed span must fail loudly, not
+        // price 2x2 wafer groups against a 3-wafer link graph.
+        use crate::fabric::scaleout::ScaleOut;
+        let w = workload::resnet152();
+        let s = w.default_strategy;
+        let _ = Simulator::new(FabricKind::FredD, w, s)
+            .with_scaleout(ScaleOut::with_wafers(4))
+            .with_span(WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 2 })
+            .with_scaleout(ScaleOut::with_wafers(3));
     }
 
     #[test]

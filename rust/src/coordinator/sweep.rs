@@ -16,8 +16,11 @@
 //!   ([`EgressTopo`]: ring / CXL fat-tree / dragonfly, each a link-level
 //!   model — the LIBRA-style per-dimension topology choice),
 //! * **wafer spans** — which axis the wafer dimension multiplies
-//!   ([`WaferSpan`]: DP across wafers, or PP across wafers with boundary
-//!   activations priced over the egress fabric),
+//!   ([`WaferSpan`]: DP across wafers; PP across wafers with boundary
+//!   activations priced over the egress fabric; MP across wafers with
+//!   per-layer activation All-Reduces crossing the egress fabric on the
+//!   critical path; and mixed `pp_wafers × dp_wafers` factorizations —
+//!   the full tier×dimension mapping space of LIBRA-style co-design),
 //! * **parallelization strategies** — every `MP·DP·PP` factorization of
 //!   the wafer's NPU count (capped, deterministically, by
 //!   [`SweepConfig::max_strategies`]),
@@ -66,10 +69,15 @@ use std::collections::HashMap;
 /// `tests/sweep_cli.rs`). v2 added `schema_version` itself plus the
 /// scale-out fields (`wafers`, `xwafer_bw`, `total_npus`, `global_dp`,
 /// `scaled_strategy`); v3 added the egress axes (`xwafer_topo`,
-/// `wafer_span`, `xwafer_latency_s`, `global_pp`). This const is the
-/// single place the version lives — consumers must check it before
-/// reading point fields.
-pub const SCHEMA_VERSION: f64 = 3.0;
+/// `wafer_span`, `xwafer_latency_s`, `global_pp`); v4 extended
+/// `wafer_span` beyond `dp`/`pp` (new values `mp` and `NxM` mixed spans)
+/// and added the span-decomposition fields (`global_mp`,
+/// `span_mp_wafers`, `span_dp_wafers`, `span_pp_wafers`) — every v3
+/// field is intact, but a v3 consumer that switches on `wafer_span`
+/// values must version-guard, hence the bump. This const is the single
+/// place the version lives — consumers must check it before reading
+/// point fields.
+pub const SCHEMA_VERSION: f64 = 4.0;
 
 /// A wafer shape: `n_l1` rows / L1 groups × `per_l1` columns / NPUs per
 /// group.
@@ -136,12 +144,16 @@ pub fn factorizations(n_npus: usize) -> Vec<Strategy> {
     out
 }
 
-/// Pair a local strategy list with a fleet size. This is the shared core
-/// of [`scaleout_factorizations`] *and* of [`run_sweep`]'s cross-product
-/// enumeration, so the engine's strategy space and the property-tested
-/// public API cannot drift apart.
-fn scale_strategies(wafers: usize, locals: &[Strategy]) -> Vec<ScaledStrategy> {
-    locals.iter().map(|&s| ScaledStrategy::new(wafers, s)).collect()
+/// Pair a local strategy list with a fleet size and wafer span. This is
+/// the shared core of [`scaleout_factorizations`] *and* of
+/// [`run_sweep`]'s cross-product enumeration, so the engine's strategy
+/// space and the property-tested public API cannot drift apart. The span
+/// must cover the fleet (`WaferSpan::covers`).
+fn scale_strategies(wafers: usize, span: WaferSpan, locals: &[Strategy]) -> Vec<ScaledStrategy> {
+    locals
+        .iter()
+        .map(|&s| ScaledStrategy::with_span(wafers, s, span))
+        .collect()
 }
 
 /// The wafer-dimensioned strategy space of a fleet: every `MP·DP·PP`
@@ -150,7 +162,22 @@ fn scale_strategies(wafers: usize, locals: &[Strategy]) -> Vec<ScaledStrategy> {
 /// covers the fleet's total NPU count (property-tested in
 /// `tests/prop_scaleout.rs`).
 pub fn scaleout_factorizations(wafers: usize, npus_per_wafer: usize) -> Vec<ScaledStrategy> {
-    scale_strategies(wafers, &factorizations(npus_per_wafer))
+    scaleout_factorizations_spanned(wafers, npus_per_wafer, WaferSpan::Dp)
+}
+
+/// [`scaleout_factorizations`] under an explicit wafer span: MP across
+/// wafers, PP across wafers, or a mixed `pp_wafers × dp_wafers`
+/// factorization. Exact cover holds for every span — the fleet-global
+/// `global_mp · global_dp · global_pp` always equals `wafers ×
+/// npus_per_wafer` (property-tested in `tests/prop_egress.rs` /
+/// `tests/prop_scaleout.rs`). Panics if `span` does not cover `wafers`
+/// (a mixed span whose factors don't multiply out to the fleet).
+pub fn scaleout_factorizations_spanned(
+    wafers: usize,
+    npus_per_wafer: usize,
+    span: WaferSpan,
+) -> Vec<ScaledStrategy> {
+    scale_strategies(wafers, span, &factorizations(npus_per_wafer))
 }
 
 /// What to sweep.
@@ -176,9 +203,15 @@ pub struct SweepConfig {
     /// to [`EgressTopo::Ring`] (PR 2's model); single-wafer fleets are
     /// evaluated once.
     pub xwafer_topos: Vec<EgressTopo>,
-    /// Wafer-spanning axes to sweep ([`WaferSpan::Dp`] and/or
-    /// [`WaferSpan::Pp`]). An empty list falls back to DP across wafers;
-    /// single-wafer fleets are evaluated once.
+    /// Wafer-spanning axes to sweep: any of [`WaferSpan::Dp`],
+    /// [`WaferSpan::Pp`], [`WaferSpan::Mp`], and/or mixed
+    /// [`WaferSpan::Mixed`] factorizations. An empty list falls back to
+    /// DP across wafers; single-wafer fleets are evaluated once; a mixed
+    /// span is applied only to the fleet sizes its `pp_wafers ×
+    /// dp_wafers` product covers (other fleets skip it). Every
+    /// multi-wafer fleet must be covered by at least one listed span —
+    /// [`run_sweep`] panics otherwise rather than silently emitting an
+    /// incomplete sweep.
     pub wafer_spans: Vec<WaferSpan>,
     /// Fabric kinds.
     pub fabrics: Vec<FabricKind>,
@@ -402,19 +435,37 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepReport {
         for &wafers in &cfg.wafer_counts {
             // A single-wafer fleet never touches the egress fabric:
             // evaluate it once instead of once per bandwidth / latency /
-            // topology / span.
+            // topology / span. A mixed span only applies to the fleet
+            // sizes its factorization covers, so each fleet filters the
+            // span list first (a 1-wafer fleet with no covering span in
+            // the list falls back to the span-irrelevant DP label).
             let single = wafers == 1;
+            let covering: Vec<WaferSpan> =
+                wafer_spans.iter().copied().filter(|s| s.covers(wafers)).collect();
+            // A multi-wafer fleet with no covering span would silently
+            // produce zero points — the incomplete-sweep-read-as-complete
+            // failure the CLI also guards against. Fail loudly instead.
+            assert!(
+                single || !covering.is_empty(),
+                "no span in {:?} covers a {wafers}-wafer fleet; add a pure span \
+                 or a mixed NxM span with N*M = {wafers}",
+                wafer_spans.iter().map(|s| s.name()).collect::<Vec<_>>()
+            );
+            let spans: Vec<WaferSpan> = if single {
+                vec![covering.first().copied().unwrap_or(WaferSpan::Dp)]
+            } else {
+                covering
+            };
             let bws = if single { &xwafer_bws[..1] } else { &xwafer_bws[..] };
             let lats = if single { &xwafer_latencies[..1] } else { &xwafer_latencies[..] };
             let topos = if single { &xwafer_topos[..1] } else { &xwafer_topos[..] };
-            let spans = if single { &wafer_spans[..1] } else { &wafer_spans[..] };
             for &xwafer_bw in bws {
                 for &xwafer_latency in lats {
                     for &topo in topos {
-                        for &span in spans {
+                        for &span in &spans {
                             for &kind in &cfg.fabrics {
                                 for workload_idx in 0..cfg.workloads.len() {
-                                    for scaled in scale_strategies(wafers, &locals) {
+                                    for scaled in scale_strategies(wafers, span, &locals) {
                                         specs.push(PointSpec {
                                             kind,
                                             wafer,
@@ -422,7 +473,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepReport {
                                             xwafer_bw,
                                             xwafer_latency,
                                             topo,
-                                            span,
+                                            span: scaled.span,
                                             workload_idx,
                                             strategy: scaled.local,
                                         });
@@ -546,10 +597,15 @@ impl SweepReport {
             let fleet = if p.wafers == 1 {
                 "1".to_string()
             } else {
+                let span_tag = if p.span == WaferSpan::Dp {
+                    String::new()
+                } else {
+                    format!("({})", p.span.name())
+                };
                 format!(
                     "{}{} {} @ {}",
                     p.wafers,
-                    if p.span == WaferSpan::Pp { "(pp)" } else { "" },
+                    span_tag,
                     p.topo.name(),
                     fmt_bw(p.xwafer_bw)
                 )
@@ -600,7 +656,7 @@ impl SweepReport {
                     ("xwafer_bw", Json::Num(p.xwafer_bw)),
                     ("xwafer_latency_s", Json::Num(p.xwafer_latency)),
                     ("xwafer_topo", Json::Str(p.topo.name().to_string())),
-                    ("wafer_span", Json::Str(p.span.name().to_string())),
+                    ("wafer_span", Json::Str(p.span.name())),
                     (
                         "total_npus",
                         Json::Num((p.wafer.npus() * p.wafers) as f64),
@@ -621,6 +677,22 @@ impl SweepReport {
                     (
                         "global_pp",
                         Json::Num(p.scaled_strategy().global_pp() as f64),
+                    ),
+                    (
+                        "global_mp",
+                        Json::Num(p.scaled_strategy().global_mp() as f64),
+                    ),
+                    (
+                        "span_mp_wafers",
+                        Json::Num(p.span.mp_factor(p.wafers) as f64),
+                    ),
+                    (
+                        "span_dp_wafers",
+                        Json::Num(p.span.dp_factor(p.wafers) as f64),
+                    ),
+                    (
+                        "span_pp_wafers",
+                        Json::Num(p.span.pp_factor(p.wafers) as f64),
                     ),
                     ("ok", Json::Bool(p.outcome.is_ok())),
                 ];
@@ -866,12 +938,12 @@ mod tests {
         cfg.wafer_spans = WaferSpan::all().to_vec();
         let report = run_sweep(&cfg);
         // 2 strategies x 2 fabrics x (1-wafer once + 2-wafer x 3 topos x
-        // 2 spans) — single-wafer fleets are never duplicated across the
-        // egress axes.
-        assert_eq!(report.points.len(), 4 + 4 * 6);
+        // 3 pure spans) — single-wafer fleets are never duplicated across
+        // the egress axes.
+        assert_eq!(report.points.len(), 4 + 4 * 9);
         assert_eq!(report.points.iter().filter(|p| p.wafers == 1).count(), 4);
         for p in &report.points {
-            assert!(p.outcome.is_ok(), "{} {} infeasible", p.topo, p.span);
+            assert!(p.outcome.is_ok(), "{} {} infeasible", p.topo, p.span.name());
         }
         let mut topos: Vec<&str> = report
             .points
@@ -882,12 +954,91 @@ mod tests {
         topos.sort_unstable();
         topos.dedup();
         assert_eq!(topos, vec!["dragonfly", "ring", "tree"]);
-        let pp_points = report
+        for span in WaferSpan::all() {
+            let n = report
+                .points
+                .iter()
+                .filter(|p| p.wafers == 2 && p.span == span)
+                .count();
+            assert_eq!(n, 4 * 3, "every topo prices the {} span too", span.name());
+        }
+    }
+
+    #[test]
+    fn mixed_spans_apply_only_to_covering_fleets() {
+        let mut cfg = tiny_cfg();
+        cfg.wafer_counts = vec![1, 2, 4];
+        cfg.wafer_spans = vec![WaferSpan::Dp, WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 2 }];
+        let report = run_sweep(&cfg);
+        // 2 strategies x 2 fabrics x (1-wafer once + 2-wafer dp-only +
+        // 4-wafer x {dp, 2x2}): the 2x2 mixed span skips the fleets it
+        // cannot factor.
+        assert_eq!(report.points.len(), 4 + 4 + 8);
+        let mixed: Vec<_> = report
             .points
             .iter()
-            .filter(|p| p.wafers == 2 && p.span == WaferSpan::Pp)
-            .count();
-        assert_eq!(pp_points, 4 * 3, "every topo prices the PP span too");
+            .filter(|p| matches!(p.span, WaferSpan::Mixed { .. }))
+            .collect();
+        assert_eq!(mixed.len(), 4, "2x2 span applies to the 4-wafer fleet only");
+        for p in mixed {
+            assert_eq!(p.wafers, 4);
+            assert!(p.outcome.is_ok(), "{}", p.strategy);
+            let scaled = p.scaled_strategy();
+            assert_eq!(scaled.total_workers(), 80, "exact cover survives the mixed span");
+            assert_eq!(scaled.global_pp(), 2 * p.strategy.pp);
+            assert_eq!(scaled.global_dp(), 2 * p.strategy.dp);
+            assert!(scaled.to_string().starts_with("4W(2x2) x "));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "covers a 2-wafer fleet")]
+    fn fleet_without_a_covering_span_fails_loudly() {
+        // Library callers bypass the CLI's validation; a fleet that no
+        // span covers must not silently vanish from the report.
+        let mut cfg = tiny_cfg();
+        cfg.wafer_counts = vec![2, 4];
+        cfg.wafer_spans = vec![WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 2 }];
+        let _ = run_sweep(&cfg);
+    }
+
+    #[test]
+    fn mp_span_points_carry_the_global_tensor_width() {
+        let mut cfg = tiny_cfg();
+        cfg.wafer_counts = vec![4];
+        cfg.wafer_spans = vec![WaferSpan::Mp];
+        let report = run_sweep(&cfg);
+        assert_eq!(report.points.len(), 4);
+        for p in &report.points {
+            assert!(p.outcome.is_ok(), "{}", p.strategy);
+            let scaled = p.scaled_strategy();
+            assert_eq!(scaled.span, WaferSpan::Mp);
+            assert_eq!(scaled.global_mp(), 4 * p.strategy.mp);
+            assert_eq!(scaled.global_dp(), p.strategy.dp, "MP span leaves DP per-wafer");
+            assert_eq!(scaled.total_workers(), 80);
+            assert!(scaled.to_string().starts_with("4W(mp) x "));
+        }
+    }
+
+    #[test]
+    fn spanned_factorizations_match_the_dp_helper_spectrum() {
+        for span in [
+            WaferSpan::Pp,
+            WaferSpan::Mp,
+            WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 2 },
+        ] {
+            let fs = scaleout_factorizations_spanned(4, 20, span);
+            assert_eq!(fs.len(), scaleout_factorizations(4, 20).len());
+            for s in &fs {
+                assert_eq!(s.span, span);
+                assert_eq!(s.total_workers(), 80);
+                assert_eq!(
+                    s.global_mp() * s.global_dp() * s.global_pp(),
+                    80,
+                    "{s}: global dims must exactly cover the fleet"
+                );
+            }
+        }
     }
 
     #[test]

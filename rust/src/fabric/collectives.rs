@@ -36,7 +36,9 @@ pub fn innetwork_send_bytes(kind: CollectiveKind, n: usize, d: f64) -> f64 {
     }
     match kind {
         CollectiveKind::AllReduce => d,
-        CollectiveKind::ReduceScatter | CollectiveKind::AllGather => d * (n as f64 - 1.0) / n as f64,
+        CollectiveKind::ReduceScatter | CollectiveKind::AllGather => {
+            d * (n as f64 - 1.0) / n as f64
+        }
         CollectiveKind::Reduce => d,
         CollectiveKind::Multicast => d / n as f64, // only the root sends
         CollectiveKind::AllToAll => d * (n as f64 - 1.0) / n as f64,

@@ -317,6 +317,23 @@ mod tests {
     }
 
     #[test]
+    fn co_group_subgroups_avoid_the_thin_global_links() {
+        // Mixed-span placement sensitivity, dragonfly edition: a replica
+        // group inside one wafer group all-reduces over full-rate local
+        // ports; the same-size group split across wafer groups rides the
+        // half-rate global links and must cost more.
+        let d = Dragonfly::new(4, 1e12, 1e-6);
+        assert_eq!(d.group_size(), 2);
+        let co_group = d.try_subgroup_allreduce(&[vec![0, 1]], 1e9).unwrap();
+        let split = d.try_subgroup_allreduce(&[vec![0, 2]], 1e9).unwrap();
+        assert!(co_group > 0.0);
+        assert!(
+            split > co_group,
+            "cross-group subgroup must pay global links ({split} vs {co_group})"
+        );
+    }
+
+    #[test]
     fn ragged_fleet_sizes_build_and_price() {
         for wafers in [3usize, 5, 7, 11, 13] {
             let d = Dragonfly::new(wafers, 1e12, 1e-7);

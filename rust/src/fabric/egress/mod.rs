@@ -160,6 +160,53 @@ pub trait EgressFabric: std::fmt::Debug + Send + Sync {
     /// non-positive payload are free.
     fn try_concurrent_p2p(&self, flows: &[P2pFlow]) -> Result<f64, FluidError>;
 
+    /// Time for *concurrent* All-Reduces over disjoint wafer `subgroups`
+    /// on `wafer_bytes` distinct reduced bytes held per member — the
+    /// egress phase of a mixed wafer span, where each pipeline stage's
+    /// replicas reduce among themselves while every stage's ring shares
+    /// the same link graph.
+    ///
+    /// A single subgroup covering the whole fleet delegates to
+    /// [`Self::try_allreduce`], so a `Mixed{pp=1,dp=N}` span prices
+    /// **identically** to the plain DP span by construction. Partial
+    /// subgroups run the bandwidth-optimal ring algorithm over the link
+    /// graph: `2·(k-1)` serialized steps per `k`-member group, each step
+    /// a concurrent p2p round of `wafer_bytes / k` chunks to the ring
+    /// successor (smaller groups drop out of later steps), so inter-group
+    /// link contention is resolved by the fluid model, not assumed away.
+    fn try_subgroup_allreduce(
+        &self,
+        subgroups: &[Vec<usize>],
+        wafer_bytes: f64,
+    ) -> Result<f64, FluidError> {
+        if wafer_bytes <= 0.0 || self.is_single() {
+            return Ok(0.0);
+        }
+        let active: Vec<&Vec<usize>> = subgroups.iter().filter(|g| g.len() > 1).collect();
+        if active.is_empty() {
+            return Ok(0.0);
+        }
+        if active.len() == 1 && active[0].len() == self.wafers() {
+            return self.try_allreduce(wafer_bytes);
+        }
+        let max_steps = active.iter().map(|g| 2 * (g.len() - 1)).max().unwrap();
+        let mut total = 0.0;
+        for step in 0..max_steps {
+            let mut flows: Vec<P2pFlow> = Vec::new();
+            for g in &active {
+                if step >= 2 * (g.len() - 1) {
+                    continue;
+                }
+                let chunk = wafer_bytes / g.len() as f64;
+                for i in 0..g.len() {
+                    flows.push(P2pFlow::new(g[i], g[(i + 1) % g.len()], chunk));
+                }
+            }
+            total += self.try_concurrent_p2p(&flows)?;
+        }
+        Ok(total)
+    }
+
     /// Clone into a boxed trait object (egress fabrics are immutable
     /// link-graph models, like on-wafer [`Fabric`]s).
     fn clone_box(&self) -> Box<dyn EgressFabric>;
@@ -318,6 +365,51 @@ mod tests {
                 .try_concurrent_p2p(&[P2pFlow::new(0, 1, 1e9), P2pFlow::new(0, 2, 1e9)])
                 .unwrap();
             assert!(two > one, "{topo}: sharing must cost ({two} vs {one})");
+        }
+    }
+
+    #[test]
+    fn full_fleet_subgroup_allreduce_delegates_to_allreduce() {
+        // The Mixed{pp=1,dp=N} ≡ Dp identity seam: one subgroup covering
+        // every wafer must price bit-identically to try_allreduce.
+        for topo in EgressTopo::all() {
+            let f = topo.build(6, 1.3e12, 700e-9);
+            let all: Vec<usize> = (0..6).collect();
+            let a = f.try_subgroup_allreduce(&[all], 5e9).unwrap();
+            let b = f.try_allreduce(5e9).unwrap();
+            assert_eq!(a.to_bits(), b.to_bits(), "{topo}");
+        }
+    }
+
+    #[test]
+    fn singleton_subgroups_are_free() {
+        // The Mixed{pp=N,dp=1} ≡ Pp identity seam: all-singleton DP
+        // groups carry no cross-wafer gradient traffic.
+        for topo in EgressTopo::all() {
+            let f = topo.build(4, 1e12, 1e-6);
+            let singles: Vec<Vec<usize>> = (0..4).map(|w| vec![w]).collect();
+            assert_eq!(f.try_subgroup_allreduce(&singles, 1e9).unwrap(), 0.0, "{topo}");
+            assert_eq!(f.try_subgroup_allreduce(&[], 1e9).unwrap(), 0.0, "{topo}");
+            let all: Vec<usize> = (0..4).collect();
+            assert_eq!(f.try_subgroup_allreduce(&[all], 0.0).unwrap(), 0.0, "{topo}");
+        }
+    }
+
+    #[test]
+    fn partial_subgroup_allreduce_is_monotone_in_bw_and_positive() {
+        // Two interleaved 2-member groups on a 4-wafer fleet (the 2x2
+        // mixed span's DP phase): positive, finite, and monotone
+        // non-increasing in the egress bandwidth on every topology.
+        for topo in EgressTopo::all() {
+            let groups = vec![vec![0usize, 2], vec![1usize, 3]];
+            let mut last = f64::INFINITY;
+            for bw in [0.5e12, 1e12, 4e12, 16e12] {
+                let f = topo.build(4, bw, DEFAULT_XWAFER_LATENCY);
+                let t = f.try_subgroup_allreduce(&groups, 1e9).unwrap();
+                assert!(t > 0.0 && t.is_finite(), "{topo} @ {bw}");
+                assert!(t <= last, "{topo}: subgroup AR rose with bandwidth");
+                last = t;
+            }
         }
     }
 

@@ -141,6 +141,19 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_subgroups_never_beat_a_lone_subgroup() {
+        // The mixed-span DP phase: adding a second stage's replica ring
+        // can only contend for egress links, never help.
+        let ring = Ring::new(4, 1e12, 500e-9);
+        let lone = ring.try_subgroup_allreduce(&[vec![0, 2]], 1e9).unwrap();
+        let both = ring
+            .try_subgroup_allreduce(&[vec![0, 2], vec![1, 3]], 1e9)
+            .unwrap();
+        assert!(lone > 0.0);
+        assert!(both >= lone, "sharing the ring must not speed a group up");
+    }
+
+    #[test]
     fn disjoint_boundary_flows_do_not_contend() {
         // Pipeline-style neighbor flows each use a distinct egress link.
         let ring = Ring::new(4, 1e12, 0.0);

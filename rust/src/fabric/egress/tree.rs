@@ -236,6 +236,22 @@ mod tests {
     }
 
     #[test]
+    fn co_leaf_subgroups_beat_cross_leaf_subgroups() {
+        // Mixed-span placement sensitivity: a replica group confined to
+        // one leaf all-reduces without touching the oversubscribed spine,
+        // so it must beat the same-size group straddling leaves.
+        let t = SwitchedTree::with_shape(4, 1e12, 1e-6, 2, 4.0);
+        assert!(t.two_level());
+        let co_leaf = t.try_subgroup_allreduce(&[vec![0, 1]], 1e9).unwrap();
+        let straddling = t.try_subgroup_allreduce(&[vec![0, 2]], 1e9).unwrap();
+        assert!(co_leaf > 0.0);
+        assert!(
+            straddling > co_leaf,
+            "cross-leaf subgroup must pay the spine ({straddling} vs {co_leaf})"
+        );
+    }
+
+    #[test]
     #[should_panic(expected = "radix must be >= 2")]
     fn radix_one_rejected() {
         let _ = SwitchedTree::with_shape(4, 1e12, 0.0, 1, 1.0);

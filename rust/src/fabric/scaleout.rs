@@ -126,6 +126,18 @@ impl ScaleOut {
         self.fabric.try_concurrent_p2p(flows)
     }
 
+    /// Concurrent All-Reduces over disjoint `wafer_groups` (the mixed
+    /// span's per-stage replica rings), priced over the egress link
+    /// graph. A single group covering the whole fleet delegates to
+    /// [`Self::try_cross_allreduce`].
+    pub fn try_subgroup_allreduce(
+        &self,
+        wafer_groups: &[Vec<usize>],
+        wafer_bytes: f64,
+    ) -> Result<f64, FluidError> {
+        self.fabric.try_subgroup_allreduce(wafer_groups, wafer_bytes)
+    }
+
     /// Hierarchical All-Reduce over concurrent on-wafer `groups` (each a
     /// list of physical NPU ids on one wafer, replicated on every wafer
     /// of the fleet) with `bytes` per member: on-wafer Reduce-Scatter,
@@ -142,15 +154,34 @@ impl ScaleOut {
         groups: &[Vec<NpuId>],
         bytes: f64,
     ) -> Result<f64, FluidError> {
+        let all: Vec<usize> = (0..self.wafers()).collect();
+        self.hierarchical_allreduce_grouped(fabric, groups, bytes, &[all])
+    }
+
+    /// [`Self::hierarchical_allreduce`] with an explicit cross-wafer
+    /// group structure: the egress phase all-reduces each of
+    /// `wafer_groups` concurrently (the mixed span's per-stage replica
+    /// sets) instead of the whole fleet. With the single full-fleet group
+    /// this *is* `hierarchical_allreduce` (the cross phase delegates to
+    /// the plain fleet-wide All-Reduce), so DP-span pricing cannot drift;
+    /// with no multi-member wafer group it degrades to the plain on-wafer
+    /// All-Reduce, so `Mixed{pp=N,dp=1}` prices exactly like a PP span.
+    pub fn hierarchical_allreduce_grouped(
+        &self,
+        fabric: &dyn Fabric,
+        groups: &[Vec<NpuId>],
+        bytes: f64,
+        wafer_groups: &[Vec<usize>],
+    ) -> Result<f64, FluidError> {
         if bytes <= 0.0 || groups.is_empty() {
             return Ok(0.0);
         }
-        if self.is_single() {
+        if self.is_single() || !wafer_groups.iter().any(|g| g.len() > 1) {
             return onwafer_phase_time(fabric, CollectiveKind::AllReduce, groups, bytes);
         }
         let rs = onwafer_phase_time(fabric, CollectiveKind::ReduceScatter, groups, bytes)?;
         let ag = onwafer_phase_time(fabric, CollectiveKind::AllGather, groups, bytes)?;
-        let cross = self.try_cross_allreduce(groups.len() as f64 * bytes)?;
+        let cross = self.try_subgroup_allreduce(wafer_groups, groups.len() as f64 * bytes)?;
         Ok(rs + cross + ag)
     }
 }
@@ -261,6 +292,65 @@ mod tests {
             assert_eq!(s.topo(), topo);
             let t = s.hierarchical_allreduce(fabric.as_ref(), &groups, 64e6).unwrap();
             assert!(t > 0.0 && t.is_finite(), "{topo}");
+        }
+    }
+
+    #[test]
+    fn grouped_hierarchy_with_full_fleet_matches_plain_hierarchy() {
+        let fabric = FabricKind::FredD.build();
+        let groups: Vec<Vec<NpuId>> = vec![(0..10).collect(), (10..20).collect()];
+        for topo in EgressTopo::all() {
+            let s = ScaleOut::with_topo(topo, 4, DEFAULT_EGRESS_BW, DEFAULT_XWAFER_LATENCY);
+            let all: Vec<usize> = (0..4).collect();
+            let plain = s.hierarchical_allreduce(fabric.as_ref(), &groups, 64e6).unwrap();
+            let grouped = s
+                .hierarchical_allreduce_grouped(fabric.as_ref(), &groups, 64e6, &[all])
+                .unwrap();
+            assert_eq!(plain.to_bits(), grouped.to_bits(), "{topo}");
+        }
+    }
+
+    #[test]
+    fn grouped_hierarchy_with_singleton_wafer_groups_is_onwafer_allreduce() {
+        // The Mixed{pp=N,dp=1} degeneracy: no replica has a cross-wafer
+        // peer, so the gradient collective is the bare on-wafer
+        // All-Reduce — not RS + 0 + AG.
+        use crate::fabric::egress::onwafer_phase_time;
+        let fabric = FabricKind::FredD.build();
+        let groups: Vec<Vec<NpuId>> = vec![(0..20).collect()];
+        let s = ScaleOut::with_wafers(4);
+        let singles: Vec<Vec<usize>> = (0..4).map(|w| vec![w]).collect();
+        let got = s
+            .hierarchical_allreduce_grouped(fabric.as_ref(), &groups, 64e6, &singles)
+            .unwrap();
+        let want =
+            onwafer_phase_time(fabric.as_ref(), CollectiveKind::AllReduce, &groups, 64e6)
+                .unwrap();
+        assert_eq!(got.to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn partial_wafer_groups_price_on_every_topology() {
+        // 2x2 mixed fleet: each stage's replica pair all-reduces among 2
+        // wafers concurrently. On the unidirectional ring the interleaved
+        // pairs {0,2},{1,3} each traverse two links, so the mixed layout
+        // can legitimately cost *more* than the fleet-wide ring — the
+        // placement sensitivity the link-level model exists to expose.
+        // Here we pin feasibility + bandwidth monotonicity per topology.
+        let fabric = FabricKind::FredD.build();
+        let groups: Vec<Vec<NpuId>> = vec![(0..20).collect()];
+        let pairs = vec![vec![0usize, 2], vec![1usize, 3]];
+        for topo in EgressTopo::all() {
+            let mut last = f64::INFINITY;
+            for bw in [0.5e12, 2.304e12, 16e12] {
+                let s = ScaleOut::with_topo(topo, 4, bw, 0.0);
+                let t = s
+                    .hierarchical_allreduce_grouped(fabric.as_ref(), &groups, 256e6, &pairs)
+                    .unwrap();
+                assert!(t > 0.0 && t.is_finite(), "{topo} @ {bw}");
+                assert!(t <= last, "{topo}: mixed hierarchy rose with bandwidth");
+                last = t;
+            }
         }
     }
 

@@ -1,5 +1,5 @@
 //! Property/invariant tests over the link-level egress fabrics
-//! (`fabric/egress/`) — the refactor seams ISSUE 3 locks in:
+//! (`fabric/egress/`) — the refactor seams ISSUEs 3 and 4 lock in:
 //!
 //! 1. the [`Ring`] link graph reproduces PR 2's analytic
 //!    `cross_allreduce_time` formula **bit for bit** (the refactor is a
@@ -7,11 +7,16 @@
 //! 2. every egress topology's All-Reduce and p2p pricing is monotonically
 //!    non-increasing in the egress bandwidth,
 //! 3. a 1-wafer fleet prices *identically* to the bare single-wafer
-//!    fabric for **every** egress topology and wafer span,
-//! 4. `WaferSpan::Pp` strategies exactly cover the fleet's
-//!    wafer × MP × DP × PP NPU count.
+//!    fabric for **every** egress topology and wafer span (pure *and*
+//!    mixed),
+//! 4. `WaferSpan::Pp` / [`WaferSpan::Mp`] / mixed strategies exactly
+//!    cover the fleet's wafer × MP × DP × PP NPU count,
+//! 5. the MP-span iteration is monotonically non-increasing in the
+//!    egress bandwidth and strictly worse than on-wafer MP at equal
+//!    trunk bandwidth (the per-layer egress All-Reduce is never free).
 
 use fred::coordinator::config::FabricKind;
+use fred::coordinator::metrics::CommType;
 use fred::coordinator::parallelism::{ScaledStrategy, WaferSpan};
 use fred::coordinator::sim::Simulator;
 use fred::coordinator::sweep::factorizations;
@@ -103,7 +108,8 @@ fn every_topology_is_monotone_in_egress_bw() {
 
 #[test]
 fn one_wafer_fleet_is_identity_for_every_topo_and_span() {
-    // Whatever the egress topology, bandwidth, latency, or wafer span, a
+    // Whatever the egress topology, bandwidth, latency, or wafer span —
+    // including the new MP span and the degenerate 1x1 mixed span — a
     // 1-wafer fleet never touches the scale-out fabric: every breakdown
     // component matches the bare single-wafer simulation bit for bit.
     check(
@@ -112,7 +118,12 @@ fn one_wafer_fleet_is_identity_for_every_topo_and_span() {
         12,
         |rng| {
             let topo = *rng.choose(&EgressTopo::all());
-            let span = *rng.choose(&WaferSpan::all());
+            let span = *rng.choose(&[
+                WaferSpan::Dp,
+                WaferSpan::Pp,
+                WaferSpan::Mp,
+                WaferSpan::Mixed { pp_wafers: 1, dp_wafers: 1 },
+            ]);
             let kind = *rng.choose(&[FabricKind::Baseline, FabricKind::FredD]);
             let bw = *rng.choose(&[0.1e12, 2.304e12, 9e12]);
             (topo, span, kind, bw)
@@ -166,6 +177,204 @@ fn pp_span_factorizations_exactly_cover_the_fleet() {
                 // wafer x MP x DP x PP multiplies out to the fleet size.
                 if wafers * local.mp * s.global_dp() * local.pp != total {
                     return Err(format!("{s}: wafer x MP x DP x PP != {total}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn mp_span_factorizations_exactly_cover_the_fleet() {
+    check(
+        "mp-span-exact-cover",
+        0xC0DE3,
+        96,
+        |rng| (rng.range(1, 17), rng.range(1, 65)),
+        |&(wafers, npus_per_wafer)| {
+            let total = wafers * npus_per_wafer;
+            for local in factorizations(npus_per_wafer) {
+                let s = ScaledStrategy::with_span(wafers, local, WaferSpan::Mp);
+                if s.total_workers() != total {
+                    return Err(format!(
+                        "{s} covers {} of {total} fleet NPUs",
+                        s.total_workers()
+                    ));
+                }
+                if s.global_mp() != wafers * local.mp {
+                    return Err(format!("{s}: global MP must be wafers x local MP"));
+                }
+                if s.global_dp() != local.dp || s.global_pp() != local.pp {
+                    return Err(format!("{s}: MP span must not scale DP/PP"));
+                }
+                if s.global_mp() * s.global_dp() * s.global_pp() != total {
+                    return Err(format!("{s}: global MP x DP x PP != {total}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn mixed_span_factorizations_exactly_cover_the_fleet() {
+    check(
+        "mixed-span-exact-cover",
+        0xC0DE4,
+        64,
+        |rng| {
+            let pp_wafers = rng.range(1, 9);
+            let dp_wafers = rng.range(1, 9);
+            let npus = rng.range(1, 49);
+            (pp_wafers, dp_wafers, npus)
+        },
+        |&(pp_wafers, dp_wafers, npus_per_wafer)| {
+            let wafers = pp_wafers * dp_wafers;
+            let span = WaferSpan::Mixed { pp_wafers, dp_wafers };
+            let total = wafers * npus_per_wafer;
+            for local in factorizations(npus_per_wafer) {
+                let s = ScaledStrategy::with_span(wafers, local, span);
+                if s.total_workers() != total {
+                    return Err(format!(
+                        "{s} covers {} of {total} fleet NPUs",
+                        s.total_workers()
+                    ));
+                }
+                if s.global_pp() != pp_wafers * local.pp
+                    || s.global_dp() != dp_wafers * local.dp
+                    || s.global_mp() != local.mp
+                {
+                    return Err(format!("{s}: mixed span mis-factored the fleet"));
+                }
+                if s.global_mp() * s.global_dp() * s.global_pp() != total {
+                    return Err(format!("{s}: global MP x DP x PP != {total}"));
+                }
+            }
+            // The span's wafer groups and boundaries tile the fleet:
+            // every wafer appears in exactly one DP group, and each
+            // block's chain has pp_wafers - 1 boundaries.
+            let mut seen: Vec<usize> = span.dp_wafer_groups(wafers).concat();
+            seen.sort_unstable();
+            if seen != (0..wafers).collect::<Vec<_>>() {
+                return Err(format!("{span:?}: DP wafer groups must partition the fleet"));
+            }
+            if span.pp_boundaries(wafers).len() != dp_wafers * (pp_wafers - 1) {
+                return Err(format!("{span:?}: wrong boundary count"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn mp_span_iteration_is_monotone_in_egress_bw() {
+    // The MP span is the most egress-hungry mapping (per-layer ARs on the
+    // critical path), so the full iteration must be monotonically
+    // non-increasing in the egress bandwidth on every topology — for the
+    // stationary (t17b) and streaming (t1t) execution paths.
+    for topo in EgressTopo::all() {
+        for w in [workload::transformer_17b(), workload::transformer_1t()] {
+            let mut last = f64::INFINITY;
+            for bw in [0.5e12, 1e12, 2.304e12, 16e12] {
+                let sim = Simulator::new(FabricKind::FredD, w.clone(), w.default_strategy)
+                    .with_scaleout(ScaleOut::with_topo(topo, 4, bw, DEFAULT_XWAFER_LATENCY))
+                    .with_span(WaferSpan::Mp);
+                let t = sim.try_iterate().expect("feasible").total();
+                assert!(
+                    t <= last,
+                    "{topo} / {}: MP-span iteration slowed from {last} to {t} at egress {bw}",
+                    w.name
+                );
+                last = t;
+            }
+        }
+    }
+}
+
+#[test]
+fn mp_span_is_strictly_worse_than_onwafer_mp_at_equal_trunk_bw() {
+    // Spanning the tensor dimension across wafers can never beat keeping
+    // it on-wafer at the same trunk bandwidth: the hierarchical round
+    // pays the on-wafer RS/AG volume *plus* a strictly positive egress
+    // phase, on every topology.
+    let w = workload::transformer_17b();
+    let s = fred::coordinator::parallelism::Strategy::new(4, 5, 1);
+    let one = Simulator::new(FabricKind::FredD, w.clone(), s);
+    let bytes = 64e6;
+    let on_wafer = one.try_mp_round(bytes).expect("feasible");
+    assert!(on_wafer > 0.0);
+    for topo in EgressTopo::all() {
+        // Egress provisioned far above the on-wafer trunk: the span is
+        // still strictly slower.
+        let spanned = Simulator::new(FabricKind::FredD, w.clone(), s)
+            .with_scaleout(ScaleOut::with_topo(topo, 4, 100e12, 0.0))
+            .with_span(WaferSpan::Mp)
+            .try_hier_mp_round(bytes)
+            .expect("feasible");
+        assert!(
+            spanned > on_wafer,
+            "{topo}: MP across wafers must cost more than on-wafer MP \
+             ({spanned} vs {on_wafer})"
+        );
+        // And the full iteration is never faster than the bare wafer's.
+        let bare = one.try_iterate().expect("feasible").total();
+        let fleet = Simulator::new(FabricKind::FredD, w.clone(), s)
+            .with_scaleout(ScaleOut::with_topo(topo, 4, 100e12, 0.0))
+            .with_span(WaferSpan::Mp)
+            .try_iterate()
+            .expect("feasible");
+        assert!(
+            fleet.get(CommType::Mp) > 0.0,
+            "{topo}: the MP span must expose egress MP time"
+        );
+        assert!(bare > 0.0 && fleet.total().is_finite());
+    }
+}
+
+#[test]
+fn mixed_span_composition_is_consistent_with_pure_spans() {
+    // Degeneracy: a Mixed{pp=N,dp=1} fleet *is* a PP-span fleet and a
+    // Mixed{pp=1,dp=N} fleet *is* a DP-span fleet — every breakdown
+    // component bit-identical, for every topology and execution mode.
+    check(
+        "mixed-span-degeneracy",
+        0x3D5EA,
+        12,
+        |rng| {
+            let topo = *rng.choose(&EgressTopo::all());
+            let wafers = *rng.choose(&[2usize, 3, 4, 8]);
+            let kind = *rng.choose(&[FabricKind::Baseline, FabricKind::FredD]);
+            (topo, wafers, kind)
+        },
+        |&(topo, wafers, kind)| {
+            for w in [workload::resnet152(), workload::transformer_17b(), workload::gpt3()] {
+                let scale = || {
+                    ScaleOut::with_topo(topo, wafers, 2.304e12, DEFAULT_XWAFER_LATENCY)
+                };
+                let cases = [
+                    (WaferSpan::Pp, WaferSpan::Mixed { pp_wafers: wafers, dp_wafers: 1 }),
+                    (WaferSpan::Dp, WaferSpan::Mixed { pp_wafers: 1, dp_wafers: wafers }),
+                ];
+                for (pure, mixed) in cases {
+                    let a = Simulator::new(kind, w.clone(), w.default_strategy)
+                        .with_scaleout(scale())
+                        .with_span(pure)
+                        .try_iterate()
+                        .map_err(|e| e.to_string())?;
+                    let b = Simulator::new(kind, w.clone(), w.default_strategy)
+                        .with_scaleout(scale())
+                        .with_span(mixed)
+                        .try_iterate()
+                        .map_err(|e| e.to_string())?;
+                    if a.total() != b.total() || a.exposed != b.exposed {
+                        return Err(format!(
+                            "{} on {} via {topo}: {} {a:?} != {} {b:?}",
+                            w.name,
+                            kind.name(),
+                            pure.name(),
+                            mixed.name(),
+                        ));
+                    }
                 }
             }
             Ok(())

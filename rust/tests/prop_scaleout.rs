@@ -10,8 +10,11 @@
 //!    total NPU count.
 
 use fred::coordinator::config::FabricKind;
+use fred::coordinator::parallelism::WaferSpan;
 use fred::coordinator::sim::Simulator;
-use fred::coordinator::sweep::{factorizations, scaleout_factorizations};
+use fred::coordinator::sweep::{
+    factorizations, scaleout_factorizations, scaleout_factorizations_spanned,
+};
 use fred::coordinator::workload;
 use fred::fabric::scaleout::{ScaleOut, DEFAULT_XWAFER_LATENCY};
 use fred::fabric::topology::NpuId;
@@ -163,6 +166,88 @@ fn scaleout_factorizations_exactly_cover_total_npus() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn spanned_factorizations_exactly_cover_total_npus_for_every_span() {
+    // The exact-cover contract extends to every wafer span: whatever
+    // dimension (or mixed factorization) the wafer axis multiplies, the
+    // fleet-global MP x DP x PP product equals wafers x per-wafer NPUs.
+    check(
+        "spanned-factorizations-cover",
+        0xC0DE5,
+        64,
+        |rng| {
+            let wafers = rng.range(1, 13);
+            let npus = rng.range(1, 49);
+            // A random span: one of the pure spans, or a mixed span built
+            // from a random divisor of the wafer count.
+            let pick = rng.range(0, 4);
+            let span = match pick {
+                0 => WaferSpan::Dp,
+                1 => WaferSpan::Pp,
+                2 => WaferSpan::Mp,
+                _ => {
+                    let divisors: Vec<usize> =
+                        (1..=wafers).filter(|d| wafers % d == 0).collect();
+                    let pp_wafers = *rng.choose(&divisors);
+                    WaferSpan::Mixed { pp_wafers, dp_wafers: wafers / pp_wafers }
+                }
+            };
+            (wafers, npus, span)
+        },
+        |&(wafers, npus_per_wafer, span)| {
+            let fs = scaleout_factorizations_spanned(wafers, npus_per_wafer, span);
+            let total = wafers * npus_per_wafer;
+            if fs.len() != factorizations(npus_per_wafer).len() {
+                return Err(format!(
+                    "{} scaled strategies vs {} local factorizations",
+                    fs.len(),
+                    factorizations(npus_per_wafer).len()
+                ));
+            }
+            for s in &fs {
+                if s.span != span {
+                    return Err(format!("{s} lost its span"));
+                }
+                if s.total_workers() != total {
+                    return Err(format!(
+                        "{s} covers {} of {total} fleet NPUs",
+                        s.total_workers()
+                    ));
+                }
+                if s.global_mp() * s.global_dp() * s.global_pp() != total {
+                    return Err(format!("{s}: global MP x DP x PP != {total}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn mixed_span_iteration_is_monotone_in_egress_bw() {
+    // The mixed span pays the egress fabric on two dimensions at once
+    // (block-boundary activations + per-stage gradient rings); both
+    // terms, and therefore the full iteration, must be monotonically
+    // non-increasing in the egress bandwidth.
+    let span = WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 2 };
+    for w in [workload::resnet152(), workload::transformer_17b(), workload::transformer_1t()]
+    {
+        let mut last = f64::INFINITY;
+        for bw in [0.5e12, 1e12, 2.304e12, 16e12] {
+            let sim = Simulator::new(FabricKind::FredD, w.clone(), w.default_strategy)
+                .with_scaleout(ScaleOut::new(4, bw, DEFAULT_XWAFER_LATENCY))
+                .with_span(span);
+            let t = sim.try_iterate().expect("feasible").total();
+            assert!(
+                t <= last,
+                "{}: mixed-span iteration slowed from {last} to {t} at egress {bw}",
+                w.name
+            );
+            last = t;
+        }
+    }
 }
 
 #[test]

@@ -120,8 +120,17 @@ fn sweep_cli_rejects_bad_input_with_usage_errors() {
         vec!["sweep", "--xwafer-latency", "500,nan-ish"],
         vec!["sweep", "--xwafer-topo", "hypercube"],
         vec!["sweep", "--xwafer-topo", "ring,torus"],
-        vec!["sweep", "--span", "mp"],
         vec!["sweep", "--span", "dp,diagonal"],
+        vec!["sweep", "--span", "0x2"],
+        vec!["sweep", "--span", "2x"],
+        vec!["sweep", "--span", "2x2x2"],
+        // A mixed span must match a swept fleet size (default --wafers
+        // is a single wafer; 2x2 needs a 4-wafer fleet).
+        vec!["sweep", "--span", "2x2"],
+        vec!["sweep", "--wafers", "2,8", "--span", "2x2"],
+        // ...and every multi-wafer fleet needs a covering span: the
+        // 2-wafer fleet here would otherwise silently emit zero points.
+        vec!["sweep", "--wafers", "2,4", "--span", "2x2"],
         // Unwritable --out path: the sweep itself succeeds (kept tiny
         // here) but the write must fail loudly.
         vec![
@@ -218,7 +227,7 @@ fn sweep_out_file_is_golden_against_stdout() {
     assert_eq!(file, stdout, "--out file must match --json stdout byte for byte");
     let doc = Json::parse(String::from_utf8(file).expect("utf8").trim())
         .expect("--out file is valid JSON");
-    assert_eq!(doc.get("schema_version").and_then(Json::as_usize), Some(3));
+    assert_eq!(doc.get("schema_version").and_then(Json::as_usize), Some(4));
     let points = doc.get("points").unwrap().as_arr().unwrap();
     assert_eq!(points.len(), 3, "3 strategies x 1 fabric x 1 fleet size");
     for p in points {
@@ -229,12 +238,15 @@ fn sweep_out_file_is_golden_against_stdout() {
 }
 
 #[test]
-fn schema_v3_signals_v2_consumers_instead_of_silently_misparsing() {
-    // A well-behaved v2 consumer checks `schema_version` before reading
-    // points. The v3 document must (a) carry the version as a plain
-    // number a v2 guard can compare against, and (b) still contain every
-    // v2 point field, so a consumer that *ignores* the version reads
-    // consistent values rather than garbage — the new axes are additive.
+fn schema_v4_signals_v3_consumers_instead_of_silently_misparsing() {
+    // A well-behaved v3 consumer checks `schema_version` before reading
+    // points (it may switch on the `wafer_span` values `dp`/`pp`, which
+    // v4 extends with `mp` and mixed `NxM` strings — a semantic change
+    // that forces the bump). The v4 document must (a) carry the version
+    // as a plain number a v3 guard can compare against, and (b) still
+    // contain every v2 *and* v3 point field, so a consumer that ignores
+    // the version reads consistent values rather than garbage — the new
+    // fields are additive.
     let json = run_sweep_json(&[
         "--models",
         "resnet152",
@@ -249,7 +261,8 @@ fn schema_v3_signals_v2_consumers_instead_of_silently_misparsing() {
         .get("schema_version")
         .and_then(Json::as_f64)
         .expect("version field must be a plain number");
-    assert_eq!(version, 3.0);
+    assert_eq!(version, 4.0);
+    assert_ne!(version, 3.0, "a v3 guard comparing against 3 must reject this doc");
     assert_ne!(version, 2.0, "a v2 guard comparing against 2 must reject this doc");
     const V2_POINT_FIELDS: [&str; 13] = [
         "workload",
@@ -266,16 +279,86 @@ fn schema_v3_signals_v2_consumers_instead_of_silently_misparsing() {
         "pp",
         "global_dp",
     ];
+    const V3_POINT_FIELDS: [&str; 4] =
+        ["xwafer_topo", "wafer_span", "xwafer_latency_s", "global_pp"];
     for p in json.get("points").unwrap().as_arr().unwrap() {
         for field in V2_POINT_FIELDS {
-            assert!(p.get(field).is_some(), "v2 field `{field}` missing in v3 point");
+            assert!(p.get(field).is_some(), "v2 field `{field}` missing in v4 point");
         }
-        // And the v3 additions are present under *new* names (no v2
-        // field changed meaning).
-        for field in ["xwafer_topo", "wafer_span", "xwafer_latency_s", "global_pp"] {
-            assert!(p.get(field).is_some(), "v3 field `{field}` missing");
+        for field in V3_POINT_FIELDS {
+            assert!(p.get(field).is_some(), "v3 field `{field}` missing in v4 point");
         }
+        // The v4 additions are present under *new* names (no v2/v3 field
+        // changed name), and default points still use a v3-legal span
+        // value — only opted-in sweeps emit the new span strings.
+        for field in ["global_mp", "span_mp_wafers", "span_dp_wafers", "span_pp_wafers"] {
+            assert!(p.get(field).is_some(), "v4 field `{field}` missing");
+        }
+        assert_eq!(p.get("wafer_span").and_then(Json::as_str), Some("dp"));
+        // Span decomposition is self-consistent with the global dims.
+        let n = |k: &str| p.get(k).unwrap().as_usize().unwrap();
+        assert_eq!(n("span_mp_wafers") * n("span_dp_wafers") * n("span_pp_wafers"), 2);
+        assert_eq!(n("global_mp") * n("global_dp") * n("global_pp"), n("total_npus"));
     }
+}
+
+#[test]
+fn sweep_cli_prices_mp_and_mixed_spans() {
+    // The acceptance sweep: --span mp,2x2 on a 4-wafer fleet across all
+    // three egress topologies, all feasible, with the span decomposition
+    // carried in the JSON.
+    let json = run_sweep_json(&[
+        "--models",
+        "resnet152",
+        "--wafers",
+        "4",
+        "--fabrics",
+        "fred-d",
+        "--max-strategies",
+        "2",
+        "--xwafer-topo",
+        "ring,tree,dragonfly",
+        "--span",
+        "mp,2x2",
+    ]);
+    let points = json.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), 2 * 3 * 2, "strategies x topos x spans");
+    let mut spans: Vec<String> = Vec::new();
+    for p in points {
+        assert_eq!(p.get("ok").and_then(Json::as_bool), Some(true));
+        let span = p.get("wafer_span").unwrap().as_str().unwrap().to_string();
+        let n = |k: &str| p.get(k).unwrap().as_usize().unwrap();
+        let (mp, dp, pp) = (n("mp"), n("dp"), n("pp"));
+        match span.as_str() {
+            "mp" => {
+                assert_eq!(n("global_mp"), 4 * mp, "MP span multiplies tensor width");
+                assert_eq!(n("global_dp"), dp);
+                assert_eq!(n("global_pp"), pp);
+                assert_eq!(n("span_mp_wafers"), 4);
+                let scaled = p.get("scaled_strategy").unwrap().as_str().unwrap();
+                assert!(scaled.starts_with("4W(mp) x "), "got `{scaled}`");
+            }
+            "2x2" => {
+                assert_eq!(n("global_pp"), 2 * pp, "2-wafer PP blocks");
+                assert_eq!(n("global_dp"), 2 * dp, "2 DP fleets");
+                assert_eq!(n("global_mp"), mp);
+                assert_eq!(n("span_pp_wafers"), 2);
+                assert_eq!(n("span_dp_wafers"), 2);
+                let scaled = p.get("scaled_strategy").unwrap().as_str().unwrap();
+                assert!(scaled.starts_with("4W(2x2) x "), "got `{scaled}`");
+            }
+            other => panic!("unexpected wafer_span `{other}`"),
+        }
+        assert_eq!(
+            n("global_mp") * n("global_dp") * n("global_pp"),
+            n("total_npus"),
+            "exact cover through the CLI"
+        );
+        spans.push(span);
+    }
+    spans.sort();
+    spans.dedup();
+    assert_eq!(spans, vec!["2x2", "mp"]);
 }
 
 #[test]
@@ -356,7 +439,7 @@ fn egress_axis_sweep_is_byte_identical_at_any_thread_count() {
         "--xwafer-topo",
         "ring,tree,dragonfly",
         "--span",
-        "dp,pp",
+        "dp,pp,mp,2x2",
         "--json",
     ];
     let with_threads = |n: &'static str| -> Vec<&'static str> {
@@ -384,7 +467,7 @@ fn sweep_cli_scales_to_sixteen_wafer_fleets() {
         "--max-strategies",
         "2",
     ]);
-    assert_eq!(json.get("schema_version").and_then(Json::as_usize), Some(3));
+    assert_eq!(json.get("schema_version").and_then(Json::as_usize), Some(4));
     let points = json.get("points").unwrap().as_arr().unwrap();
     assert_eq!(points.len(), 10, "2 strategies x 5 fleet sizes");
     let mut fleets: Vec<usize> = points
