@@ -31,7 +31,7 @@ target/release/fred sweep --wafers 4 --models resnet152 --max-strategies 6 \
     --json --out /tmp/sweep.json > /tmp/sweep.stdout.json
 cmp /tmp/sweep.json /tmp/sweep.stdout.json
 test -s /tmp/sweep.json
-grep -q '"schema_version":4' /tmp/sweep.json
+grep -q '"schema_version":5' /tmp/sweep.json
 grep -q '"wafer_span":"dp"' /tmp/sweep.json
 grep -q '"wafer_span":"2x2"' /tmp/sweep.json
 rm -f /tmp/sweep.json /tmp/sweep.stdout.json
@@ -43,7 +43,7 @@ target/release/fred sweep --wafers 4 --models resnet152 --max-strategies 4 \
     --xwafer-topo tree --span pp \
     --json --out /tmp/sweep_pp.json > /tmp/sweep_pp.stdout.json
 cmp /tmp/sweep_pp.json /tmp/sweep_pp.stdout.json
-grep -q '"schema_version":4' /tmp/sweep_pp.json
+grep -q '"schema_version":5' /tmp/sweep_pp.json
 grep -q '"xwafer_topo":"tree"' /tmp/sweep_pp.json
 grep -q '"wafer_span":"pp"' /tmp/sweep_pp.json
 rm -f /tmp/sweep_pp.json /tmp/sweep_pp.stdout.json
@@ -55,18 +55,54 @@ target/release/fred sweep --wafers 4 --xwafer-topo tree --span mp \
     --models resnet152 --max-strategies 4 \
     --json --out /tmp/sweep_mp.json > /tmp/sweep_mp.stdout.json
 cmp /tmp/sweep_mp.json /tmp/sweep_mp.stdout.json
-grep -q '"schema_version":4' /tmp/sweep_mp.json
+grep -q '"schema_version":5' /tmp/sweep_mp.json
 grep -q '"wafer_span":"mp"' /tmp/sweep_mp.json
 grep -q '"global_mp"' /tmp/sweep_mp.json
 rm -f /tmp/sweep_mp.json /tmp/sweep_mp.stdout.json
 
+echo "== overlap/microbatch smoke (schema v5 schedule axes) =="
+# ISSUE 5's headline path: the phase-timeline engine's full-overlap
+# schedule and a microbatch override, end to end through the real binary.
+target/release/fred sweep --wafers 2 --models t17b --max-strategies 4 \
+    --overlap full --microbatches 8 \
+    --json --out /tmp/sweep_ov.json > /tmp/sweep_ov.stdout.json
+cmp /tmp/sweep_ov.json /tmp/sweep_ov.stdout.json
+grep -q '"schema_version":5' /tmp/sweep_ov.json
+grep -q '"overlap":"full"' /tmp/sweep_ov.json
+grep -q '"microbatches":8' /tmp/sweep_ov.json
+grep -q '"exposed_total_s"' /tmp/sweep_ov.json
+rm -f /tmp/sweep_ov.json /tmp/sweep_ov.stdout.json
+
+echo "== merge round-trip (sweep -> split -> merge -> cmp) =="
+# Shard the same grid on the fleet axis, merge the shards, and require
+# byte-identity with the unsharded run (explicit --strategies so no
+# truncation bookkeeping diverges between shards).
+MERGE_ARGS=(--models resnet152 --strategies "1,20,1;4,5,1;2,5,2" \
+    --fabrics fred-a,fred-d --overlap off,full --json)
+target/release/fred sweep --wafers 1,2 "${MERGE_ARGS[@]}" > /tmp/merge_all.json
+target/release/fred sweep --wafers 1 "${MERGE_ARGS[@]}" > /tmp/merge_s1.json
+target/release/fred sweep --wafers 2 "${MERGE_ARGS[@]}" > /tmp/merge_s2.json
+target/release/fred merge /tmp/merge_s1.json /tmp/merge_s2.json > /tmp/merge_out.json
+cmp /tmp/merge_all.json /tmp/merge_out.json
+# Mismatched schema versions are rejected, never silently mixed.
+printf '{"points":[],"schema_version":4,"truncated_strategies":0}\n' > /tmp/merge_stale.json
+if target/release/fred merge /tmp/merge_s1.json /tmp/merge_stale.json > /dev/null 2>&1; then
+    echo "merge must reject mismatched schema_version" >&2
+    exit 1
+fi
+rm -f /tmp/merge_all.json /tmp/merge_s1.json /tmp/merge_s2.json \
+    /tmp/merge_out.json /tmp/merge_stale.json
+
 echo "== sweep determinism gate (--threads 1 vs --threads 4) =="
 # Byte-identity at any thread count, enforced in CI on the full span axis
-# (dp, pp, mp, and a mixed 2x2 span) — not just in the test suite.
+# (dp, pp, mp, and a mixed 2x2 span) *and* the schedule axes (overlap
+# modes x microbatch override) — not just in the test suite.
 target/release/fred sweep --wafers 1,2,4 --models resnet152 --max-strategies 4 \
-    --span dp,pp,mp,2x2 --threads 1 --json > /tmp/sweep_t1.json
+    --span dp,pp,mp,2x2 --overlap off,dp,full --microbatches 4 \
+    --threads 1 --json > /tmp/sweep_t1.json
 target/release/fred sweep --wafers 1,2,4 --models resnet152 --max-strategies 4 \
-    --span dp,pp,mp,2x2 --threads 4 --json > /tmp/sweep_t4.json
+    --span dp,pp,mp,2x2 --overlap off,dp,full --microbatches 4 \
+    --threads 4 --json > /tmp/sweep_t4.json
 cmp /tmp/sweep_t1.json /tmp/sweep_t4.json
 rm -f /tmp/sweep_t1.json /tmp/sweep_t4.json
 

@@ -18,12 +18,17 @@
 //!    egress-hungry mapping, so MP-span points should close the gap on
 //!    DP/PP spans only as the egress bandwidth grows fat (the crossover
 //!    is computed and reported below).
+//! 5. what does *overlap-aware scheduling* buy (`--overlap off,full`) —
+//!    hiding the cross-wafer gradient All-Reduce behind backward compute
+//!    is capped by the backward window, so the saving should peak on
+//!    egress-starved operating points and vanish on fat ones.
 //!
 //! Run: `cargo run --release --example strategy_sweep`
 
 use fred::coordinator::config::FabricKind;
 use fred::coordinator::parallelism::WaferSpan;
 use fred::coordinator::sweep::{run_sweep, SweepConfig, WaferDims};
+use fred::coordinator::timeline::OverlapMode;
 use fred::coordinator::workload;
 use fred::fabric::egress::EgressTopo;
 use fred::util::units::{fmt_time, GBPS};
@@ -195,9 +200,67 @@ fn main() {
         ),
     }
 
+    // -------------- overlap crossover: compute-bound vs egress-bound
+    println!(
+        "\n== overlap crossover: off vs full, Transformer-17B, 4 wafers (dp span) ==\n"
+    );
+    // The phase-timeline engine's question: *where* does hiding the
+    // cross-wafer gradient All-Reduce behind backward compute pay? The
+    // hidden time is capped by the backward window, so the absolute
+    // saving grows as the egress starves (comm dominates) and vanishes
+    // when the egress is so fat the All-Reduce was never exposed.
+    let ov_bws_gbps = [512.0, 2304.0, 262144.0];
+    let ov_cfg = SweepConfig {
+        workloads: vec![workload::transformer_17b()],
+        wafers: vec![WaferDims::PAPER],
+        wafer_counts: vec![4],
+        xwafer_bws: ov_bws_gbps.iter().map(|b| b * GBPS).collect(),
+        overlaps: vec![OverlapMode::Off, OverlapMode::Full],
+        fabrics: vec![FabricKind::FredD],
+        strategies: None,
+        max_strategies: 6,
+        bench_bytes: 100e6,
+        ..SweepConfig::default()
+    };
+    let ov = run_sweep(&ov_cfg);
+    let best_ov = |bw_gbps: f64, mode: OverlapMode| -> f64 {
+        ov.points
+            .iter()
+            .filter(|p| p.xwafer_bw == bw_gbps * GBPS && p.overlap == mode)
+            .filter_map(|p| p.outcome.as_ref().ok())
+            .map(|m| m.per_sample)
+            .fold(f64::INFINITY, f64::min)
+    };
+    let mut savings: Vec<f64> = Vec::new();
+    for &bw in &ov_bws_gbps {
+        let off = best_ov(bw, OverlapMode::Off);
+        let full = best_ov(bw, OverlapMode::Full);
+        let saving = off - full;
+        savings.push(saving);
+        println!(
+            "egress {bw:>9.0} GB/s: off {} | full {} | hidden {} ({:.1}% of off)",
+            fmt_time(off),
+            fmt_time(full),
+            fmt_time(saving),
+            100.0 * saving / off
+        );
+    }
+    // The overlap story the sweep must reproduce: overlap never hurts,
+    // and it helps most when the egress fabric is the bottleneck — the
+    // starved operating point hides a full backward-window's worth of
+    // comm, while on the fattest egress there is almost nothing left to
+    // hide.
+    assert!(savings.iter().all(|&s| s >= 0.0), "overlap must never hurt ({savings:?})");
+    assert!(
+        savings[0] > savings[savings.len() - 1],
+        "overlap must pay most on the starved egress ({savings:?})"
+    );
+
     println!(
         "\nmachine-readable: `fred sweep --models gpt3 --wafers 1,2,4,8,16 \
          --fabrics fred-d --xwafer-bw 1152,2304 --xwafer-topo ring,tree,dragonfly \
-         --span dp,pp,mp,2x2 --json --out sweep.json`"
+         --span dp,pp,mp,2x2 --overlap off,full --microbatches 2,8 --json \
+         --out sweep.json`; shard across machines and recombine with \
+         `fred merge shard1.json shard2.json --out sweep.json`"
     );
 }

@@ -18,6 +18,7 @@
 use fred::coordinator::config::FabricKind;
 use fred::coordinator::parallelism::WaferSpan;
 use fred::coordinator::sweep::{factorizations, run_sweep, SweepConfig, WaferDims};
+use fred::coordinator::timeline::OverlapMode;
 use fred::coordinator::workload;
 use fred::fabric::egress::EgressTopo;
 use fred::util::table::Table;
@@ -95,6 +96,26 @@ fn main() {
             },
         ),
         (
+            "t17b | 2W x 3 overlap x mb 2,8 | fred-d | 6 strat",
+            // The ISSUE 5 axes in isolation: the full-overlap scheduler
+            // prices the DP bucket train twice (serial floor + pipelined
+            // schedule) and the chunked egress rounds add fluid calls on
+            // streaming workloads, so points/s here shows what the
+            // timeline engine's overlap modes cost the engine.
+            {
+                let mut c = cfg(
+                    vec![workload::transformer_17b()],
+                    vec![WaferDims::PAPER],
+                    vec![FabricKind::FredD],
+                    6,
+                );
+                c.wafer_counts = vec![2];
+                c.overlaps = OverlapMode::all().to_vec();
+                c.microbatches = vec![2, 8];
+                c
+            },
+        ),
+        (
             "t17b | 4W x mp + 2x2 span | fred-d | 6 strat",
             // The ISSUE 4 axis in isolation: per-layer egress All-Reduces
             // (MP span) and the two-dimensional mixed span are the most
@@ -155,6 +176,11 @@ fn main() {
     spans.push(WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 2 });
     spans.push(WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 4 });
     base.wafer_spans = spans;
+    // The schedule axes ride the determinism wall too: overlap modes and
+    // microbatch overrides must not perturb byte-identity across thread
+    // counts.
+    base.overlaps = vec![OverlapMode::Off, OverlapMode::Full];
+    base.microbatches = vec![4];
 
     let mut seq_cfg = base.clone();
     seq_cfg.threads = 1;

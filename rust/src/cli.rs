@@ -3,7 +3,7 @@
 use crate::coordinator::{
     config::FabricKind, metrics::CommType, parallelism::Strategy, parallelism::WaferSpan,
     placement, placement::Placement, sim::Simulator, sweep, sweep::SweepConfig,
-    sweep::WaferDims, workload::Workload,
+    sweep::WaferDims, timeline::OverlapMode, workload::Workload,
 };
 use crate::fabric::egress::EgressTopo;
 use crate::fabric::fred::hw_model::HwOverhead;
@@ -54,6 +54,7 @@ COMMANDS:
                [--strategies auto|\"20,1,1;2,5,2\"] [--max-strategies N]
                [--xwafer-bw GBPS[,GBPS..]] [--xwafer-latency NS[,NS..]]
                [--xwafer-topo ring,tree,dragonfly] [--span dp,pp,mp,PPxDP]
+               [--overlap off,dp,full] [--microbatches N[,N..]]
                [--threads N] [--top N] [--bytes N] [--json] [--out FILE]
                Strategy/topology sweep engine: enumerates fabric x wafer
                shape x fleet size x MP/DP/PP factorization x workload,
@@ -103,12 +104,60 @@ COMMANDS:
                sets the per-hop cross-wafer latency in ns (default 500);
                give several values to sweep the egress operating point.
                JSON points carry the span decomposition (`wafer_span`,
-               `global_mp`/`global_dp`/`global_pp`, `span_*_wafers`) at
-               `schema_version: 4`.
+               `global_mp`/`global_dp`/`global_pp`, `span_*_wafers`) and
+               the schedule axes (`overlap`, `microbatches`,
+               `exposed_total_s`) at `schema_version: 5`.
+
+               ## Overlap
+               An iteration is priced by the phase-timeline engine: every
+               phase (compute, MP/DP/PP comm, weight streaming) is tagged
+               with the resource it occupies — NPU compute, the on-wafer
+               fabric, the cross-wafer egress fabric, the I/O channels —
+               and a deterministic list scheduler serializes phases per
+               resource while independent resources overlap. `--overlap`
+               picks the schedule (give several to sweep the axis):
+                 off   fully exposed communication — the paper's Fig. 10
+                       semantics and the default; bit-identical to the
+                       pre-timeline pricing.
+                 dp    the DP gradient All-Reduce is bucketed and hidden
+                       under backward compute via the queueing
+                       recurrence (buckets ready at a steady rate,
+                       All-Reduces serialized on the fabric; only the
+                       tail is exposed).
+                 full  per-resource pipelining everywhere it helps: each
+                       gradient bucket's on-wafer reduce-scatter, egress
+                       All-Reduce, and on-wafer all-gather occupy their
+                       own resources, so bucket i's cross-wafer hop
+                       overlaps bucket i+1's on-wafer phase *and* hides
+                       under backward compute; streaming workloads chunk
+                       the cross-wafer gradient reduction per backward
+                       layer group. Never prices worse than `off` (the
+                       scheduler falls back when chunking loses, e.g. on
+                       latency-dominated egress).
+               Blocking phases (per-layer MP All-Reduces, pipeline
+               boundary handoffs) stay on the critical path in every
+               mode, and weight-stream prefetch hiding follows the
+               workload's double-buffering capability, not this flag.
+               `--microbatches` overrides each workload's Table V
+               microbatch count (sweepable): more microbatches shrink
+               pipeline bubbles and DP-overlap windows per bucket.
                Example: fred sweep --wafers 1,2,4,8 --models gpt3
                         --fabrics fred-d --xwafer-bw 1152,2304
                         --xwafer-topo ring,tree --span dp,pp,mp,2x4
-                        --json
+                        --overlap off,full --microbatches 2,8 --json
+  merge        FILE [FILE..] [--out FILE]
+               Merge several `fred sweep --json` documents (a sweep
+               sharded across machines: shard on disjoint fleet sizes,
+               workloads, or bandwidths) into one re-ranked document on
+               stdout (and --out FILE). All inputs must carry the current
+               `schema_version` (5) — mismatches are rejected, never
+               silently mixed. Merging the shards of a split grid
+               reproduces the unsharded sweep byte for byte when the
+               shards use explicit --strategies (or an uncapped
+               --max-strategies): auto-enumeration counts its truncation
+               once per wafer shape, so shards re-enumerating the same
+               shape would double-count `truncated_strategies` (the
+               ranked `points` themselves always round-trip exactly).
   microbench   [--strategy 2,5,2] [--bytes N]        (Fig. 9 per-phase BW)
   channel-load [--rows 4 --cols 4]                   (Fig. 4 hotspot)
   route        [--m 2|3]                             (Fig. 7 routing demo)
@@ -128,6 +177,7 @@ pub fn run(args: &[String]) -> i32 {
     match cmd.as_str() {
         "sim" => cmd_sim(&opts),
         "sweep" => cmd_sweep(&opts),
+        "merge" => cmd_merge(&args[1..]),
         "microbench" => cmd_microbench(&opts),
         "channel-load" => cmd_channel_load(&opts),
         "route" => cmd_route(&opts),
@@ -358,6 +408,38 @@ fn cmd_sweep(opts: &Opts) -> i32 {
             return 2;
         }
     }
+    // Overlap schedules: --overlap off,dp,full (the timeline-engine
+    // scheduling axis; off is the paper's fully-exposed default).
+    let mut overlaps = Vec::new();
+    if let Some(list) = opts.get("overlap") {
+        for t in comma_list(list) {
+            match OverlapMode::parse(t) {
+                Some(m) => overlaps.push(m),
+                None => {
+                    eprintln!("bad --overlap `{t}` (off, dp, full)");
+                    return 2;
+                }
+            }
+        }
+    }
+    if overlaps.is_empty() {
+        overlaps.push(OverlapMode::Off);
+    }
+    // Microbatch counts: --microbatches 8 or 2,8,32 (each >= 1).
+    let mut microbatches = Vec::new();
+    if let Some(list) = opts.get("microbatches") {
+        for t in comma_list(list) {
+            match t.parse::<usize>() {
+                Ok(n) if n >= 1 && t.bytes().all(|c| c.is_ascii_digit()) => {
+                    microbatches.push(n)
+                }
+                _ => {
+                    eprintln!("bad --microbatches `{t}` (expected an integer >= 1)");
+                    return 2;
+                }
+            }
+        }
+    }
     // Fabrics: --fabrics all | baseline,fred-a,...
     let fabrics_arg = opts.get("fabrics").or_else(|| opts.get("fabric")).unwrap_or("all");
     let fabrics: Vec<FabricKind> = if fabrics_arg == "all" {
@@ -421,6 +503,8 @@ fn cmd_sweep(opts: &Opts) -> i32 {
         wafer_spans,
         fabrics: fabrics.clone(),
         strategies,
+        overlaps,
+        microbatches,
         max_strategies,
         bench_bytes,
         threads,
@@ -472,6 +556,75 @@ fn cmd_sweep(opts: &Opts) -> i32 {
     }
     println!("\nJSON:");
     println!("{json_text}");
+    0
+}
+
+/// `fred merge FILE [FILE..] [--out FILE]` — merge sharded sweep JSON
+/// documents into one re-ranked document (stdout + optional --out).
+/// Positional arguments are input files; the only option is `--out`.
+fn cmd_merge(args: &[String]) -> i32 {
+    use crate::runtime::json::Json;
+    let mut files: Vec<&String> = Vec::new();
+    let mut out_path: Option<&str> = None;
+    let mut i = 0usize;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--out" => {
+                i += 1;
+                match args.get(i) {
+                    Some(p) => out_path = Some(p.as_str()),
+                    None => {
+                        eprintln!("--out needs a path");
+                        return 2;
+                    }
+                }
+            }
+            a if a.starts_with("--") => {
+                eprintln!("unknown option `{a}` for merge (only --out)");
+                return 2;
+            }
+            _ => files.push(&args[i]),
+        }
+        i += 1;
+    }
+    if files.is_empty() {
+        eprintln!("merge needs at least one sweep JSON file");
+        return 2;
+    }
+    let mut docs = Vec::with_capacity(files.len());
+    for f in &files {
+        let text = match std::fs::read_to_string(f) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("cannot read `{f}`: {e}");
+                return 2;
+            }
+        };
+        match Json::parse(text.trim()) {
+            Ok(doc) => docs.push(doc),
+            Err(e) => {
+                eprintln!("`{f}` is not a sweep JSON document: {e}");
+                return 2;
+            }
+        }
+    }
+    let merged = match sweep::merge_sweep_docs(&docs) {
+        Ok(doc) => doc,
+        Err(e) => {
+            eprintln!("merge failed: {e}");
+            return 2;
+        }
+    };
+    let text = merged.render();
+    // --out mirrors `sweep --out`: newline-terminated, byte-identical to
+    // the stdout document.
+    if let Some(path) = out_path {
+        if let Err(e) = std::fs::write(path, format!("{text}\n")) {
+            eprintln!("cannot write --out `{path}`: {e}");
+            return 2;
+        }
+    }
+    println!("{text}");
     0
 }
 

@@ -1,7 +1,11 @@
 //! Result records: the end-to-end breakdown of Figs. 2 and 10 — total
 //! time decomposed into compute and *exposed* communication per source
 //! (Sec. VII-D: "exposed communication time refers to the amount of time
-//! that is not overlapped with the compute time").
+//! that is not overlapped with the compute time"). Exposure is computed
+//! by the phase-timeline engine ([`super::timeline`]): what lands in
+//! each [`CommType`] slot is the time the engine's list scheduler could
+//! not hide under the active overlap mode, so `compute + exposed` is
+//! the iteration's critical-path length by construction.
 
 /// Sources of exposed communication time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]

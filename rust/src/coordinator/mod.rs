@@ -11,12 +11,16 @@
 //! * [`schedule`] — the training-iteration schedule: weight-stationary
 //!   and weight-streaming execution modes (Sec. III-A), GPipe-style
 //!   microbatch pipelining.
-//! * [`sim`] — walks the schedule against a fabric and produces the
-//!   end-to-end breakdown (compute + exposed comm per source) that
-//!   Figs. 2, 9, 10 plot.
+//! * [`timeline`] — the phase-timeline engine: an iteration as explicit
+//!   resource-tagged phases priced by one deterministic list scheduler
+//!   (per-resource serialization; the `--overlap` axis).
+//! * [`sim`] — builds the timeline for a workload × strategy × fabric
+//!   and produces the end-to-end breakdown (compute + exposed comm per
+//!   source) that Figs. 2, 9, 10 plot.
 //! * [`metrics`] — breakdown records, normalization, speedups.
 //! * [`sweep`] — the strategy/topology sweep engine: cross-product of
-//!   fabric × wafer shape × strategy × workload, ranked.
+//!   fabric × wafer shape × strategy × overlap schedule × workload,
+//!   ranked.
 
 pub mod config;
 pub mod metrics;
@@ -25,6 +29,7 @@ pub mod placement;
 pub mod schedule;
 pub mod sim;
 pub mod sweep;
+pub mod timeline;
 pub mod workload;
 
 pub use config::FabricKind;
@@ -33,4 +38,5 @@ pub use parallelism::{ScaledStrategy, Strategy, WaferSpan};
 pub use placement::Placement;
 pub use sim::Simulator;
 pub use sweep::{SweepConfig, SweepReport, WaferDims};
+pub use timeline::OverlapMode;
 pub use workload::Workload;

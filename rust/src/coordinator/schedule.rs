@@ -6,7 +6,10 @@
 //! with backward compute.
 
 /// Split `weights[i]` (per-layer FLOPs) into `stages` contiguous groups
-/// with greedily balanced sums. Returns the start index of each stage.
+/// with greedily balanced sums. Returns the start index of each stage:
+/// always exactly `stages` starts, strictly increasing, beginning at 0 —
+/// so every stage owns at least one layer even when `stages` equals the
+/// layer count or the weights are extremely skewed.
 pub fn partition_stages(weights: &[f64], stages: usize) -> Vec<usize> {
     assert!(stages >= 1 && stages <= weights.len().max(1));
     let total: f64 = weights.iter().sum();
@@ -21,11 +24,28 @@ pub fn partition_stages(weights: &[f64], stages: usize) -> Vec<usize> {
         }
         acc += w;
     }
+    // Degenerate fallback (few layers / extreme skew): the greedy pass
+    // came up short. Fill with successive indices, then clamp from the
+    // back — stage j can start no later than `len - (stages - j)` or the
+    // stages after it would be empty. The caps are strictly increasing,
+    // so the clamped list stays strictly increasing (the old fallback
+    // saturated at `len - 1` and emitted duplicate starts, i.e. empty
+    // stages, whenever the greedy cuts landed near the tail).
     while starts.len() < stages {
-        // Degenerate (few layers): split wherever possible.
         let last = *starts.last().unwrap();
-        starts.push((last + 1).min(weights.len() - 1));
+        starts.push(last + 1);
     }
+    let n = weights.len();
+    for j in (1..starts.len()).rev() {
+        let cap = n - (stages - j);
+        if starts[j] > cap {
+            starts[j] = cap;
+        }
+    }
+    debug_assert!(starts.len() == stages);
+    debug_assert!(starts[0] == 0);
+    debug_assert!(starts.windows(2).all(|w| w[0] < w[1]), "{starts:?}");
+    debug_assert!(n == 0 || *starts.last().unwrap() < n);
     starts
 }
 
@@ -54,21 +74,21 @@ pub fn bubble_fraction(microbatches: usize, stages: usize) -> f64 {
 /// buckets at a steady rate; each bucket's All-Reduce (duration
 /// `bucket_comm`) starts when its bucket is ready and serializes on the
 /// network. The recurrence yields the tail not hidden by compute.
+///
+/// This is now a thin wrapper over the phase-timeline engine's general
+/// list scheduler ([`exposed_after_window`](super::timeline::exposed_after_window)):
+/// one bucket per
+/// All-Reduce, each a single-segment chain on the on-wafer fabric
+/// resource. The scheduler's same-resource queueing *is* the recurrence
+/// (bit-for-bit — the arithmetic is `start = max(net_free, ready)`,
+/// `done = start + c`, `exposed = max(0, done - bwd)` in both framings).
 pub fn exposed_dp_time(bwd_compute: f64, bucket_comm: &[f64]) -> f64 {
-    let n = bucket_comm.len();
-    if n == 0 {
-        return 0.0;
-    }
-    let per_bucket = bwd_compute / n as f64;
-    let mut net_free = 0.0_f64; // when the network finishes the previous AR
-    let mut done = 0.0_f64;
-    for (i, &c) in bucket_comm.iter().enumerate() {
-        let ready = per_bucket * (i + 1) as f64;
-        let start = net_free.max(ready);
-        done = start + c;
-        net_free = done;
-    }
-    (done - bwd_compute).max(0.0)
+    use super::timeline::{exposed_after_window, Bucket, Resource};
+    let buckets: Vec<Bucket> = bucket_comm
+        .iter()
+        .map(|&c| Bucket::single(Resource::OnWafer, c))
+        .collect();
+    exposed_after_window(bwd_compute, &buckets)
 }
 
 #[cfg(test)]
@@ -114,6 +134,58 @@ mod tests {
             assert_eq!(ranges.last().unwrap().1, 78);
             for win in ranges.windows(2) {
                 assert_eq!(win[0].1, win[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn partition_one_layer_per_stage() {
+        // stages == layers: every stage owns exactly one layer, starts
+        // are the identity sequence.
+        for n in 1..=8 {
+            let w = vec![1.0; n];
+            let starts = partition_stages(&w, n);
+            assert_eq!(starts, (0..n).collect::<Vec<_>>());
+            let ranges = stage_ranges(&starts, n);
+            assert!(ranges.iter().all(|&(a, b)| b - a == 1), "{ranges:?}");
+        }
+    }
+
+    #[test]
+    fn partition_skewed_tail_stays_strictly_increasing() {
+        // The old fallback saturated at len-1 and emitted duplicate
+        // starts (empty stages) when the greedy cuts landed near the
+        // tail: [1,1,100,1,1] at 5 stages used to yield [0,2,3,4,4].
+        let w = vec![1.0, 1.0, 100.0, 1.0, 1.0];
+        let starts = partition_stages(&w, 5);
+        assert_eq!(starts, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn partition_every_stage_nonempty_for_all_shapes() {
+        // Exhaustive small-shape sweep over skew patterns: exactly
+        // `stages` strictly increasing starts, so no stage is empty.
+        let patterns: [fn(usize) -> f64; 4] = [
+            |_| 1.0,
+            |i| (i + 1) as f64,
+            |i| if i == 0 { 1000.0 } else { 1.0 },
+            |i| if i % 3 == 2 { 500.0 } else { 1.0 },
+        ];
+        for pat in patterns {
+            for n in 1..=9usize {
+                let w: Vec<f64> = (0..n).map(pat).collect();
+                for stages in 1..=n {
+                    let starts = partition_stages(&w, stages);
+                    assert_eq!(starts.len(), stages, "{w:?} @ {stages}");
+                    assert_eq!(starts[0], 0);
+                    assert!(
+                        starts.windows(2).all(|p| p[0] < p[1]),
+                        "{w:?} @ {stages}: {starts:?}"
+                    );
+                    assert!(*starts.last().unwrap() < n);
+                    let ranges = stage_ranges(&starts, n);
+                    assert!(ranges.iter().all(|&(a, b)| a < b), "{ranges:?}");
+                }
             }
         }
     }

@@ -3,29 +3,46 @@
 //! compute + exposed-comm breakdown of Figs. 2 and 10, plus the Fig. 9
 //! communication microbenchmarks.
 //!
+//! An iteration is *built* here and *priced* by the phase-timeline
+//! engine ([`super::timeline`]): both execution modes assemble an
+//! explicit [`Timeline`] of phases tagged with the resource they occupy
+//! (NPU compute, on-wafer fabric, egress fabric, I/O channels), and the
+//! engine's deterministic list scheduler turns it into a breakdown under
+//! the simulator's [`OverlapMode`] — no phase is priced outside the
+//! engine. With overlap off the pricing is bit-identical to the paper's
+//! fully-exposed summation.
+//!
 //! Modelling summary (details in DESIGN.md §4):
 //!
 //! * **compute** — `FLOPs / (1 PFLOP × MXU eff × compute_scale)`,
 //!   identical on every fabric; pipeline bubbles are folded into compute.
 //! * **MP comm** — per-layer Megatron All-Reduces on the activation,
 //!   *blocking*: all MP groups run concurrently (congestion resolved by
-//!   the fluid simulator) and the time is exposed.
-//! * **DP comm** — bucketed gradient All-Reduces overlapped with backward
-//!   compute via the queueing recurrence of [`schedule::exposed_dp_time`].
+//!   the fluid simulator) and the time is exposed in every overlap mode.
+//! * **DP comm** — bucketed gradient All-Reduces; a [`Step::Overlapped`]
+//!   released across the backward-compute window. `--overlap dp` prices
+//!   it with the legacy queueing recurrence; `--overlap full`
+//!   additionally pipelines each bucket's on-wafer RS / egress AR /
+//!   on-wafer AG segments across their resources.
 //! * **PP comm** — per-microbatch stage-boundary multicast (one MP-group
 //!   member suffices as source — the paper's footnote 6), exposed per
 //!   pipeline slot.
 //! * **weight streaming** — layer groups stream in during fwd and again
 //!   during bwd; gradients reduce-stream out concurrently (opposite link
-//!   direction); exposure is `max(0, io − compute)` per group, and the
-//!   input load cannot be prefetched (I/O is saturated) — exactly the
-//!   Transformer-1T discussion in Sec. VIII.
+//!   direction); each group's load is a [`Step::Hidden`] under the
+//!   previous group's compute window (the prefetch instance of the
+//!   engine's overlap mechanism), and the input load cannot be
+//!   prefetched (I/O is saturated) — exactly the Transformer-1T
+//!   discussion in Sec. VIII. Under `--overlap full` the cross-wafer
+//!   gradient reduction chunks per backward layer group and hides under
+//!   the backward sweep.
 
 use super::config::{self, FabricKind};
 use super::metrics::{Breakdown, CommType};
 use super::parallelism::{ScaledStrategy, Strategy, WaferSpan};
 use super::placement::Placement;
 use super::schedule;
+use super::timeline::{Bucket, OverlapMode, Resource, Step, Timeline};
 use super::workload::{ExecMode, Workload};
 use crate::fabric::egress::{onwafer_phase_time, P2pFlow};
 use crate::fabric::fluid::FluidError;
@@ -49,6 +66,10 @@ pub struct Simulator {
     /// wafers, or a mixed PP×DP factorization). Irrelevant on a single
     /// wafer.
     span: WaferSpan,
+    /// How aggressively the timeline scheduler may overlap communication
+    /// with compute (the `--overlap` axis). Defaults to the workload's
+    /// legacy `overlap_dp` flag mapping.
+    overlap: OverlapMode,
 }
 
 impl Simulator {
@@ -79,6 +100,7 @@ impl Simulator {
             n_npus
         );
         let placement = Placement::paper_default(&strategy, mesh.as_ref(), n_npus);
+        let overlap = workload.default_overlap();
         Self {
             kind,
             fabric,
@@ -88,6 +110,7 @@ impl Simulator {
             placement,
             scaleout: ScaleOut::single(),
             span: WaferSpan::Dp,
+            overlap,
         }
     }
 
@@ -132,6 +155,19 @@ impl Simulator {
         );
         self.span = span;
         self
+    }
+
+    /// Choose how aggressively the timeline scheduler may overlap
+    /// communication with compute ([`OverlapMode::Off`] reproduces the
+    /// paper's fully-exposed pricing bit for bit).
+    pub fn with_overlap(mut self, overlap: OverlapMode) -> Self {
+        self.overlap = overlap;
+        self
+    }
+
+    /// The active overlap mode.
+    pub fn overlap(&self) -> OverlapMode {
+        self.overlap
     }
 
     /// The scale-out context.
@@ -263,12 +299,24 @@ impl Simulator {
     /// wafer, or under a span whose wafer dimension adds no data
     /// parallelism, this is exactly [`Self::try_dp_round`].
     pub fn try_hier_dp_round(&self, bytes: f64) -> Result<f64, FluidError> {
+        let segments = self.try_hier_dp_segments(bytes)?;
+        Ok(segments.iter().fold(0.0, |acc, &(_, d)| acc + d))
+    }
+
+    /// Per-resource decomposition of [`Self::try_hier_dp_round`]: the
+    /// timeline segments one gradient bucket occupies — a single fused
+    /// on-wafer All-Reduce when the round never leaves the wafer, or the
+    /// on-wafer RS → egress AR → on-wafer AG chain of the hierarchical
+    /// round. The left-fold sum of the segments is bit-identical to the
+    /// round time (the `--overlap full` scheduler pipelines these
+    /// segments across their resources; every other mode just sums them).
+    pub fn try_hier_dp_segments(&self, bytes: f64) -> Result<Vec<(Resource, f64)>, FluidError> {
         let wafer_groups = self.span.dp_wafer_groups(self.scaleout.wafers());
         if self.scaleout.is_single() || !wafer_groups.iter().any(|g| g.len() > 1) {
-            return self.try_dp_round(bytes);
+            return Ok(vec![(Resource::OnWafer, self.try_dp_round(bytes)?)]);
         }
         if bytes <= 0.0 {
-            return Ok(0.0);
+            return Ok(vec![(Resource::OnWafer, 0.0)]);
         }
         let groups: Vec<Vec<usize>> = self
             .strategy
@@ -276,12 +324,21 @@ impl Simulator {
             .iter()
             .map(|g| self.placement.map(g))
             .collect();
-        self.scaleout.hierarchical_allreduce_grouped(
+        let round = self.scaleout.hierarchical_allreduce_grouped_phases(
             self.fabric.as_ref(),
             &groups,
             bytes,
             &wafer_groups,
-        )
+        )?;
+        Ok(if round.fused {
+            vec![(Resource::OnWafer, round.rs)]
+        } else {
+            vec![
+                (Resource::OnWafer, round.rs),
+                (Resource::Egress, round.cross),
+                (Resource::OnWafer, round.ag),
+            ]
+        })
     }
 
     /// One concurrent PP boundary transfer (multicast from one member of
@@ -390,9 +447,19 @@ impl Simulator {
     }
 
     fn try_iterate_stationary(&self) -> Result<Breakdown, FluidError> {
+        Ok(self.stationary_timeline()?.price(self.overlap))
+    }
+
+    /// Build the weight-stationary iteration as a phase timeline:
+    /// compute and the blocking MP/PP rounds are critical-path serial
+    /// phases; the bucketed DP gradient All-Reduce is a
+    /// [`Step::Overlapped`] released across the backward-compute window
+    /// (enabled from [`OverlapMode::Dp`]; at [`OverlapMode::Full`] its
+    /// on-wafer/egress segments pipeline per resource).
+    fn stationary_timeline(&self) -> Result<Timeline, FluidError> {
         let w = &self.workload;
         let s = &self.strategy;
-        let mut out = Breakdown::default();
+        let mut tl = Timeline::new();
 
         let mb = w.microbatches.max(1);
         let samples_replica = config::SAMPLES_PER_REPLICA as f64;
@@ -442,55 +509,69 @@ impl Simulator {
         }
 
         // Pipeline totals; bwd compute = 2× fwd, bwd MP comm = fwd MP.
+        // MP All-Reduces are *blocking* (activation sync on the layer
+        // critical path), so they stay serial in every overlap mode.
         let compute = slots * (f_comp_max + 2.0 * f_comp_max);
         let mp_exposed = slots * (f_mp_max + f_mp_max);
-        out.compute = compute;
-        out.add(CommType::Mp, mp_exposed);
+        tl.serial_compute(compute);
+        let mp_resource = if self.span.mp_factor(self.scaleout.wafers()) > 1 {
+            Resource::Egress
+        } else {
+            Resource::OnWafer
+        };
+        tl.serial_comm(CommType::Mp, mp_resource, mp_exposed);
 
         // PP boundary transfers: fwd activation + bwd gradient per slot
-        // (under a PP span this includes the cross-wafer boundary flows).
+        // (under a PP span this includes the cross-wafer boundary flows);
+        // in-slot handoffs, so critical-path serial.
         if pp_global > 1 {
             let t = self.try_pp_round(boundary_act)?;
-            out.add(CommType::Pp, slots * 2.0 * t);
+            // Boundary flows cross the egress fabric only when the span
+            // puts a PP factor on the wafer dimension; under DP/MP spans
+            // every pipeline copy is wafer-local.
+            let pp_resource = if self.span.pp_factor(self.scaleout.wafers()) > 1 {
+                Resource::Egress
+            } else {
+                Resource::OnWafer
+            };
+            tl.serial_comm(CommType::Pp, pp_resource, slots * 2.0 * t);
         }
 
-        // DP gradient All-Reduce, bucketed. Exposed fully (the paper's
-        // Fig. 10 semantics) unless `overlap_dp` enables the bucketed
-        // overlap recurrence against backward compute. Only a span with a
-        // DP wafer factor (DP, or the DP blocks of a mixed span) adds
-        // cross-wafer gradient traffic; under PP/MP spans every DP group
-        // lives within one wafer. The per-worker shard divides by the
-        // *global* MP width and pipeline depth.
+        // DP gradient All-Reduce, bucketed: an Overlapped step released
+        // across the backward-compute window. Exposed fully (the paper's
+        // Fig. 10 semantics) below `OverlapMode::Dp`; the recurrence
+        // prices it from `Dp` up, and `Full` pipelines each bucket's
+        // on-wafer RS / egress AR / on-wafer AG across their resources.
+        // Only a span with a DP wafer factor (DP, or the DP blocks of a
+        // mixed span) adds cross-wafer gradient traffic; under PP/MP
+        // spans every DP group lives within one wafer. The per-worker
+        // shard divides by the *global* MP width and pipeline depth.
         let cross_dp = !self.scaleout.is_single()
             && self.span.dp_factor(self.scaleout.wafers()) > 1;
         if s.dp > 1 || cross_dp {
             let shard = w.params_bytes() / mp_global as f64 / pp_global as f64;
             let nb = w.dp_buckets.max(1);
             let bucket_bytes = shard / nb as f64;
-            let per_bucket = if cross_dp {
-                self.try_hier_dp_round(bucket_bytes)?
-            } else {
-                self.try_dp_round(bucket_bytes)?
-            };
-            let exposed = if w.overlap_dp {
-                let bwd_compute = compute * 2.0 / 3.0;
-                schedule::exposed_dp_time(bwd_compute, &vec![per_bucket; nb])
-            } else {
-                per_bucket * nb as f64
-            };
-            out.add(CommType::Dp, exposed);
+            let segments = self.try_hier_dp_segments(bucket_bytes)?;
+            let per_bucket = segments.iter().fold(0.0, |acc, &(_, d)| acc + d);
+            tl.push(Step::Overlapped {
+                kind: CommType::Dp,
+                window: compute * 2.0 / 3.0,
+                buckets: vec![Bucket { segments }; nb],
+                serial_time: per_bucket * nb as f64,
+                enabled_at: OverlapMode::Dp,
+            });
         }
 
         // Input minibatch load: prefetched during the previous iteration
         // (the I/O channels are otherwise idle in stationary mode).
-        out.add(CommType::InputLoad, 0.0);
-        Ok(out)
+        tl.serial_comm(CommType::InputLoad, Resource::Io, 0.0);
+        Ok(tl)
     }
 
     fn try_iterate_streaming(&self) -> Result<Breakdown, FluidError> {
         let w = &self.workload;
         let s = &self.strategy;
-        let mut out = Breakdown::default();
         let all_npus: Vec<usize> = (0..s.workers()).map(|w| self.placement.npu(w)).collect();
 
         let mb = w.microbatches.max(1);
@@ -548,18 +629,20 @@ impl Simulator {
             vec![(0, layers.len())]
         };
 
-        // One wafer's fwd + bwd sweeps over its layer slice. In each
-        // sweep the group's weights stream in while the previous group
-        // computes; exposure is the non-hidden remainder. On bwd,
-        // gradients also stream out (ReduceOut, on the opposite link
-        // direction — concurrent with the next load). Returns
-        // (compute, mp, pp, stream-exposed).
-        let sweep_slice = |lo: usize, hi: usize| -> Result<(f64, f64, f64, f64), FluidError> {
+        // One wafer's fwd + bwd sweeps over its layer slice, as a phase
+        // timeline. In each sweep the group's weights stream in while the
+        // previous group computes: a [`Step::Hidden`] under the previous
+        // group's compute window — the prefetch instance of the engine's
+        // overlap mechanism, active in every mode (it is a
+        // double-buffering capacity property of the workload, not a
+        // schedule choice). On bwd, gradients also stream out (ReduceOut,
+        // on the opposite link direction — concurrent with the next
+        // load). Compute and the blocking MP/PP rounds are critical-path
+        // serial phases.
+        let mp_resource = if mp_factor > 1 { Resource::Egress } else { Resource::OnWafer };
+        let slice_timeline = |lo: usize, hi: usize| -> Result<Timeline, FluidError> {
             let n_groups = (hi - lo).div_ceil(group);
-            let mut compute_total = 0.0_f64;
-            let mut mp_total = 0.0_f64;
-            let mut pp_total = 0.0_f64;
-            let mut stream_exposed = 0.0_f64;
+            let mut tl = Timeline::new();
             for sweep in 0..2usize {
                 let bwd = sweep == 1;
                 let mut prev_overlap = 0.0_f64; // compute hiding the next load
@@ -609,36 +692,51 @@ impl Simulator {
                         // the max of the two.
                         io = io.max(io_out_time(params)?);
                     }
-                    stream_exposed += (io - prev_overlap).max(0.0);
+                    tl.push(Step::Hidden {
+                        kind: CommType::Stream,
+                        duration: io,
+                        window: prev_overlap,
+                    });
+                    tl.serial_compute(comp);
+                    tl.serial_comm(CommType::Mp, mp_resource, mp);
+                    tl.serial_comm(CommType::Pp, Resource::OnWafer, pp);
                     // Prefetch: the next group's load hides under this
                     // group's compute only when double-buffering is
                     // possible.
                     prev_overlap = if w.stream_prefetch { comp + mp + pp } else { 0.0 };
-                    compute_total += comp;
-                    mp_total += mp;
-                    pp_total += pp;
                 }
                 // The last group's compute hides nothing further.
             }
-            Ok((compute_total, mp_total, pp_total, stream_exposed))
+            Ok(tl)
         };
 
-        // Critical path: the slice whose sweep takes longest (the blocks
-        // pipeline, so the fleet drains at the slowest block's rate).
-        let mut best = (0.0_f64, 0.0_f64, 0.0_f64, 0.0_f64);
-        let mut best_total = f64::NEG_INFINITY;
+        // Critical path: the slice whose sweep takes longest under the
+        // active overlap mode (the blocks pipeline, so the fleet drains
+        // at the slowest block's rate). The selection key folds the
+        // priced components in the legacy compute+mp+pp+stream order.
+        let mut best: Option<Breakdown> = None;
+        let mut best_key = f64::NEG_INFINITY;
+        let mut best_groups = 1usize;
         for &(lo, hi) in &slices {
-            let t = sweep_slice(lo, hi)?;
-            let total = t.0 + t.1 + t.2 + t.3;
-            if total > best_total {
-                best_total = total;
-                best = t;
+            let bd = slice_timeline(lo, hi)?.price(self.overlap);
+            let key = bd.compute
+                + bd.get(CommType::Mp)
+                + bd.get(CommType::Pp)
+                + bd.get(CommType::Stream);
+            if key > best_key {
+                best_key = key;
+                best_groups = (hi - lo).div_ceil(group);
+                best = Some(bd);
             }
         }
-        out.compute = best.0;
-        out.add(CommType::Mp, best.1);
-        out.add(CommType::Pp, best.2);
-        out.add(CommType::Stream, best.3);
+        // A slice timeline only ever populates compute/Mp/Pp/Stream, so
+        // the winning slice's breakdown seeds the iteration breakdown
+        // directly; the fleet-level tail prices into it below.
+        let mut out = best.unwrap_or_default();
+
+        // Fleet-level tail of the iteration, as its own timeline priced
+        // into the same breakdown.
+        let mut tail = Timeline::new();
 
         if pp_span {
             // Slice-boundary activations cross the egress fabric once per
@@ -659,7 +757,7 @@ impl Simulator {
                 }
             }
             let t = self.scaleout.try_boundary_p2p(&flows)?;
-            out.add(CommType::Pp, 2.0 * mb as f64 * t);
+            tail.serial_comm(CommType::Pp, Resource::Egress, 2.0 * mb as f64 * t);
         }
         let dp_wafer_groups = self.span.dp_wafer_groups(wafers);
         if dp_wafer_groups.iter().any(|g| g.len() > 1) {
@@ -671,12 +769,31 @@ impl Simulator {
             // DP span, each block's 1/pp_factor slice under a mixed span
             // (all stages' replica rings concurrent). PP/MP spans pay
             // nothing here: each wafer owns distinct layers or distinct
-            // tensor shards.
+            // tensor shards. Under `--overlap full` the reduction chunks
+            // per backward layer group (gradients become available as the
+            // backward sweep drains) and hides under the backward-compute
+            // window, the chunked egress rounds queueing on the egress
+            // busy interval; every other mode prices the one-shot
+            // reduction fully exposed.
             let wafer_grad = w.params_bytes() / pp_factor as f64;
-            out.add(
-                CommType::Dp,
-                self.scaleout.try_subgroup_allreduce(&dp_wafer_groups, wafer_grad)?,
-            );
+            let serial_time =
+                self.scaleout.try_subgroup_allreduce(&dp_wafer_groups, wafer_grad)?;
+            let buckets = if self.overlap == OverlapMode::Full {
+                let n = best_groups.max(1);
+                let chunk = self
+                    .scaleout
+                    .try_subgroup_allreduce(&dp_wafer_groups, wafer_grad / n as f64)?;
+                vec![Bucket::single(Resource::Egress, chunk); n]
+            } else {
+                Vec::new()
+            };
+            tail.push(Step::Overlapped {
+                kind: CommType::Dp,
+                window: out.compute * (2.0 / 3.0),
+                buckets,
+                serial_time,
+                enabled_at: OverlapMode::Full,
+            });
         }
 
         // Input load: I/O is saturated all iteration, so the minibatch
@@ -684,7 +801,8 @@ impl Simulator {
         // Each wafer loads its own DP replicas' samples, so the per-wafer
         // load is scale-out invariant.
         let input_bytes = w.input_bytes * w.minibatch(s) as f64;
-        out.add(CommType::InputLoad, io_in_time(input_bytes)?);
+        tail.serial_comm(CommType::InputLoad, Resource::Io, io_in_time(input_bytes)?);
+        tail.price_into(self.overlap, &mut out);
         Ok(out)
     }
 
@@ -702,30 +820,35 @@ impl Simulator {
     /// MP and DP rounds go hierarchical over the egress fabric when their
     /// dimension spans wafers, and the PP round includes the cross-wafer
     /// boundary flows. On a single wafer this is exactly the per-wafer
-    /// Fig. 9 metric.
+    /// Fig. 9 metric. The standalone rounds form a three-phase timeline
+    /// priced by the engine; single serial phases are overlap-invariant,
+    /// so the metric does not depend on the `--overlap` axis.
     pub fn try_microbench(&self, bytes: f64) -> Result<[Option<f64>; 3], FluidError> {
         use crate::fabric::collectives::endpoint_send_bytes;
         let scaled = self.scaled_strategy();
         let mp_global = scaled.global_mp();
-        let mp = if mp_global > 1 {
-            let t = self.try_hier_mp_round(bytes)?;
-            Some(endpoint_send_bytes(CollectiveKind::AllReduce, mp_global, bytes) / t)
-        } else {
-            None
-        };
         let dp_global = scaled.global_dp();
-        let dp = if dp_global > 1 {
-            let t = self.try_hier_dp_round(bytes)?;
-            Some(endpoint_send_bytes(CollectiveKind::AllReduce, dp_global, bytes) / t)
-        } else {
-            None
-        };
-        let pp = if scaled.global_pp() > 1 {
-            let t = self.try_pp_round(bytes)?;
-            Some(bytes / t)
-        } else {
-            None
-        };
+        let pp_global = scaled.global_pp();
+        let mut tl = Timeline::new();
+        if mp_global > 1 {
+            tl.serial_comm(CommType::Mp, Resource::OnWafer, self.try_hier_mp_round(bytes)?);
+        }
+        if dp_global > 1 {
+            tl.serial_comm(CommType::Dp, Resource::OnWafer, self.try_hier_dp_round(bytes)?);
+        }
+        if pp_global > 1 {
+            tl.serial_comm(CommType::Pp, Resource::OnWafer, self.try_pp_round(bytes)?);
+        }
+        let bd = tl.price(self.overlap);
+        let mp = (mp_global > 1).then(|| {
+            endpoint_send_bytes(CollectiveKind::AllReduce, mp_global, bytes)
+                / bd.get(CommType::Mp)
+        });
+        let dp = (dp_global > 1).then(|| {
+            endpoint_send_bytes(CollectiveKind::AllReduce, dp_global, bytes)
+                / bd.get(CommType::Dp)
+        });
+        let pp = (pp_global > 1).then(|| bytes / bd.get(CommType::Pp));
         Ok([mp, dp, pp])
     }
 
@@ -1173,6 +1296,104 @@ mod tests {
             .with_scaleout(ScaleOut::with_wafers(4))
             .with_span(WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 2 })
             .with_scaleout(ScaleOut::with_wafers(3));
+    }
+
+    #[test]
+    fn overlap_off_is_the_default_and_dp_mode_matches_the_legacy_flag() {
+        // The default mode mirrors the workload's legacy `overlap_dp`
+        // flag, and an explicit Off prices identically to the default.
+        let s = sim(FabricKind::FredD, workload::resnet152());
+        assert_eq!(s.overlap(), OverlapMode::Off);
+        let off = s.iterate();
+        let explicit = sim(FabricKind::FredD, workload::resnet152())
+            .with_overlap(OverlapMode::Off)
+            .iterate();
+        assert_eq!(off.total(), explicit.total());
+        assert_eq!(off.exposed, explicit.exposed);
+        // Dp mode is the legacy workload-flag path, bit for bit.
+        let mut w = workload::resnet152();
+        w.overlap_dp = true;
+        let legacy = sim(FabricKind::FredD, w).iterate();
+        let dp = sim(FabricKind::FredD, workload::resnet152())
+            .with_overlap(OverlapMode::Dp)
+            .iterate();
+        assert_eq!(legacy.total(), dp.total());
+        assert_eq!(legacy.exposed, dp.exposed);
+        assert!(dp.get(CommType::Dp) <= off.get(CommType::Dp));
+    }
+
+    #[test]
+    fn full_overlap_hides_cross_wafer_dp_behind_backward_compute() {
+        use crate::fabric::scaleout::ScaleOut;
+        let w = workload::resnet152();
+        let off = sim(FabricKind::FredD, w.clone())
+            .with_scaleout(ScaleOut::with_wafers(4))
+            .iterate();
+        let full = sim(FabricKind::FredD, w.clone())
+            .with_scaleout(ScaleOut::with_wafers(4))
+            .with_overlap(OverlapMode::Full)
+            .iterate();
+        assert!(
+            full.get(CommType::Dp) < off.get(CommType::Dp),
+            "overlap must hide some of the hierarchical DP round: {} vs {}",
+            full.get(CommType::Dp),
+            off.get(CommType::Dp)
+        );
+        assert_eq!(full.compute, off.compute, "overlap never changes compute");
+        assert_eq!(full.get(CommType::Mp), off.get(CommType::Mp), "MP stays blocking");
+        assert!(full.total() <= off.total());
+    }
+
+    #[test]
+    fn overlap_modes_are_monotone_for_both_exec_modes() {
+        use crate::fabric::scaleout::ScaleOut;
+        for w in [workload::resnet152(), workload::transformer_17b(), workload::transformer_1t()]
+        {
+            let total = |mode: OverlapMode| {
+                sim(FabricKind::FredD, w.clone())
+                    .with_scaleout(ScaleOut::with_wafers(4))
+                    .with_overlap(mode)
+                    .iterate()
+                    .total()
+            };
+            let off = total(OverlapMode::Off);
+            let dp = total(OverlapMode::Dp);
+            let full = total(OverlapMode::Full);
+            assert!(full <= off, "{}: full {full} > off {off}", w.name);
+            assert!(dp <= off * (1.0 + 1e-9), "{}: dp {dp} > off {off}", w.name);
+            assert!(full <= dp * (1.0 + 1e-9), "{}: full {full} > dp {dp}", w.name);
+        }
+    }
+
+    #[test]
+    fn microbatch_count_trades_bubble_for_per_slot_compute() {
+        // GPipe arithmetic through the timeline: fewer microbatches mean
+        // fewer slots but a larger per-slot share, and the bubble term
+        // makes the single-microbatch pipeline strictly slower on
+        // compute for a pp=2 workload.
+        let w8 = workload::transformer_17b();
+        let mut w1 = workload::transformer_17b();
+        w1.microbatches = 1;
+        let b8 = sim(FabricKind::FredD, w8).iterate();
+        let b1 = sim(FabricKind::FredD, w1).iterate();
+        assert!(
+            b1.compute > b8.compute,
+            "mb=1 bubble must cost compute: {} vs {}",
+            b1.compute,
+            b8.compute
+        );
+    }
+
+    #[test]
+    fn microbench_is_overlap_invariant() {
+        let w = workload::gpt3();
+        let base = sim(FabricKind::FredD, w.clone());
+        let full = sim(FabricKind::FredD, w).with_overlap(OverlapMode::Full);
+        let a = base.microbench(100e6);
+        let b = full.microbench(100e6);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x, y, "standalone rounds must not depend on the overlap axis");
+        }
     }
 
     #[test]

@@ -24,6 +24,12 @@
 //! * **parallelization strategies** — every `MP·DP·PP` factorization of
 //!   the wafer's NPU count (capped, deterministically, by
 //!   [`SweepConfig::max_strategies`]),
+//! * **overlap schedules** — how aggressively the phase-timeline engine
+//!   may hide communication under compute ([`OverlapMode`]: fully
+//!   exposed / the DP bucket recurrence / full per-resource
+//!   pipelining — the LIBRA-style schedule axis),
+//! * **microbatch counts** — the GPipe pipelining depth, overriding each
+//!   workload's Table V default,
 //! * **workloads** — any subset of the four Table V models,
 //!
 //! runs each point through [`Simulator::try_iterate`], and ranks the
@@ -54,6 +60,7 @@ use super::config::FabricKind;
 use super::metrics::{Breakdown, CommType};
 use super::parallelism::{ScaledStrategy, Strategy, WaferSpan};
 use super::sim::Simulator;
+use super::timeline::OverlapMode;
 use super::workload::Workload;
 use crate::fabric::egress::EgressTopo;
 use crate::fabric::mesh::Mesh2D;
@@ -72,12 +79,15 @@ use std::collections::HashMap;
 /// `wafer_span`, `xwafer_latency_s`, `global_pp`); v4 extended
 /// `wafer_span` beyond `dp`/`pp` (new values `mp` and `NxM` mixed spans)
 /// and added the span-decomposition fields (`global_mp`,
-/// `span_mp_wafers`, `span_dp_wafers`, `span_pp_wafers`) — every v3
-/// field is intact, but a v3 consumer that switches on `wafer_span`
-/// values must version-guard, hence the bump. This const is the single
-/// place the version lives — consumers must check it before reading
+/// `span_mp_wafers`, `span_dp_wafers`, `span_pp_wafers`); v5 added the
+/// overlap-schedule axes (`overlap`: `off`/`dp`/`full`, `microbatches`)
+/// and the `exposed_total_s` scalar — every v4 field is intact, but two
+/// v5 points can now differ *only* in their schedule, so a v4 consumer
+/// keying points on the v4 fields would silently conflate them, hence
+/// the bump. This const is the single place the version lives —
+/// consumers (including `fred merge`) must check it before reading
 /// point fields.
-pub const SCHEMA_VERSION: f64 = 4.0;
+pub const SCHEMA_VERSION: f64 = 5.0;
 
 /// A wafer shape: `n_l1` rows / L1 groups × `per_l1` columns / NPUs per
 /// group.
@@ -219,6 +229,14 @@ pub struct SweepConfig {
     /// each wafer's NPU count (strategies that need more workers than a
     /// wafer has are skipped on that wafer).
     pub strategies: Option<Vec<Strategy>>,
+    /// Overlap schedules to sweep ([`OverlapMode`]). An empty list falls
+    /// back to [`OverlapMode::Off`] — the paper's fully-exposed pricing.
+    /// Unlike the egress axes this applies to single-wafer fleets too
+    /// (the DP bucket recurrence already overlaps on-wafer).
+    pub overlaps: Vec<OverlapMode>,
+    /// Microbatch counts to sweep, overriding each workload's Table V
+    /// default. An empty list keeps the per-workload default.
+    pub microbatches: Vec<usize>,
     /// Cap on auto-enumerated strategies per wafer (truncation is
     /// deterministic and reported, never silent).
     pub max_strategies: usize,
@@ -242,6 +260,8 @@ impl Default for SweepConfig {
             wafer_spans: vec![WaferSpan::Dp],
             fabrics: FabricKind::all().to_vec(),
             strategies: None,
+            overlaps: vec![OverlapMode::Off],
+            microbatches: Vec::new(),
             max_strategies: 12,
             bench_bytes: 100e6,
             threads: 0,
@@ -301,6 +321,11 @@ pub struct SweepPoint {
     pub fabric: FabricKind,
     /// Per-wafer strategy (the wafer dimension is `wafers`).
     pub strategy: Strategy,
+    /// Overlap schedule this point was priced under.
+    pub overlap: OverlapMode,
+    /// Microbatch count this point ran with (the workload default unless
+    /// the `--microbatches` axis overrode it).
+    pub microbatches: usize,
     /// Metrics, or the typed-error string for infeasible points.
     pub outcome: Result<SweepMetrics, String>,
 }
@@ -335,6 +360,9 @@ struct PointSpec {
     span: WaferSpan,
     workload_idx: usize,
     strategy: Strategy,
+    overlap: OverlapMode,
+    /// `None` keeps the workload's Table V microbatch default.
+    microbatches: Option<usize>,
 }
 
 /// Per-thread prototype cache: fabrics are immutable link-graph models,
@@ -353,17 +381,23 @@ fn eval_point(cfg: &SweepConfig, spec: &PointSpec, cache: &mut ProtoCache) -> Sw
         )
     });
     let workload = &cfg.workloads[spec.workload_idx];
+    let mut point_workload = workload.clone();
+    if let Some(mb) = spec.microbatches {
+        point_workload.microbatches = mb;
+    }
+    let microbatches = point_workload.microbatches;
     let scale =
         ScaleOut::with_topo(spec.topo, spec.wafers, spec.xwafer_bw, spec.xwafer_latency);
     let sim = Simulator::with_fabric(
         spec.kind,
         proto.clone_box(),
         mesh_proto.clone(),
-        workload.clone(),
+        point_workload,
         spec.strategy,
     )
     .with_scaleout(scale)
-    .with_span(spec.span);
+    .with_span(spec.span)
+    .with_overlap(spec.overlap);
     let outcome = match sim.try_iterate() {
         Ok(breakdown) => {
             let per_sample = breakdown.total() / sim.global_minibatch().max(1) as f64;
@@ -385,6 +419,8 @@ fn eval_point(cfg: &SweepConfig, spec: &PointSpec, cache: &mut ProtoCache) -> Sw
         span: spec.span,
         fabric: spec.kind,
         strategy: spec.strategy,
+        overlap: spec.overlap,
+        microbatches,
         outcome,
     }
 }
@@ -413,6 +449,17 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepReport {
         vec![WaferSpan::Dp]
     } else {
         cfg.wafer_spans.clone()
+    };
+    let overlaps: Vec<OverlapMode> = if cfg.overlaps.is_empty() {
+        vec![OverlapMode::Off]
+    } else {
+        cfg.overlaps.clone()
+    };
+    // `None` = the workload's own Table V microbatch count.
+    let microbatches: Vec<Option<usize>> = if cfg.microbatches.is_empty() {
+        vec![None]
+    } else {
+        cfg.microbatches.iter().map(|&n| Some(n)).collect()
     };
     let mut specs: Vec<PointSpec> = Vec::new();
     let mut truncated = 0usize;
@@ -465,18 +512,26 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepReport {
                         for &span in &spans {
                             for &kind in &cfg.fabrics {
                                 for workload_idx in 0..cfg.workloads.len() {
-                                    for scaled in scale_strategies(wafers, span, &locals) {
-                                        specs.push(PointSpec {
-                                            kind,
-                                            wafer,
-                                            wafers: scaled.wafers,
-                                            xwafer_bw,
-                                            xwafer_latency,
-                                            topo,
-                                            span: scaled.span,
-                                            workload_idx,
-                                            strategy: scaled.local,
-                                        });
+                                    for &overlap in &overlaps {
+                                        for &mb in &microbatches {
+                                            for scaled in
+                                                scale_strategies(wafers, span, &locals)
+                                            {
+                                                specs.push(PointSpec {
+                                                    kind,
+                                                    wafer,
+                                                    wafers: scaled.wafers,
+                                                    xwafer_bw,
+                                                    xwafer_latency,
+                                                    topo,
+                                                    span: scaled.span,
+                                                    workload_idx,
+                                                    strategy: scaled.local,
+                                                    overlap,
+                                                    microbatches: mb,
+                                                });
+                                            }
+                                        }
                                     }
                                 }
                             }
@@ -539,6 +594,8 @@ fn rank(points: &mut [SweepPoint]) {
             .then_with(|| a.span.cmp(&b.span))
             .then_with(|| a.fabric.name().cmp(b.fabric.name()))
             .then_with(|| a.strategy.to_string().cmp(&b.strategy.to_string()))
+            .then_with(|| a.overlap.cmp(&b.overlap))
+            .then_with(|| a.microbatches.cmp(&b.microbatches))
     });
 }
 
@@ -551,8 +608,18 @@ impl SweepReport {
         // f64 is not Hash; the bandwidth/latency bit patterns are (both
         // come from finite config lists, so bitwise equality is the right
         // match).
-        type Key<'a> =
-            (&'a str, WaferDims, usize, u64, u64, EgressTopo, WaferSpan, Strategy);
+        type Key<'a> = (
+            &'a str,
+            WaferDims,
+            usize,
+            u64,
+            u64,
+            EgressTopo,
+            WaferSpan,
+            Strategy,
+            OverlapMode,
+            usize,
+        );
         fn key(p: &SweepPoint) -> Key<'_> {
             (
                 p.workload.as_str(),
@@ -563,6 +630,8 @@ impl SweepReport {
                 p.topo,
                 p.span,
                 p.strategy,
+                p.overlap,
+                p.microbatches,
             )
         }
         let mut fast: HashMap<Key, f64> = HashMap::new();
@@ -587,10 +656,12 @@ impl SweepReport {
         (wins, comparisons)
     }
 
-    /// Render the top `top` points as a fixed-width table.
+    /// Render the top `top` points as a fixed-width table. The `sched`
+    /// column carries the overlap mode and microbatch count of each
+    /// point (`off/mb8` etc.), so schedule-axis sweeps stay readable.
     pub fn render_table(&self, top: usize) -> String {
         let mut t = Table::new(&[
-            "rank", "workload", "wafer", "fleet", "fabric", "strategy", "iter",
+            "rank", "workload", "wafer", "fleet", "fabric", "strategy", "sched", "iter",
             "per-sample", "eff BW", "status",
         ]);
         for (i, p) in self.points.iter().take(top).enumerate() {
@@ -610,6 +681,7 @@ impl SweepReport {
                     fmt_bw(p.xwafer_bw)
                 )
             };
+            let sched = format!("{}/mb{}", p.overlap.name(), p.microbatches);
             match &p.outcome {
                 Ok(m) => t.row(&[
                     format!("{}", i + 1),
@@ -618,6 +690,7 @@ impl SweepReport {
                     fleet,
                     p.fabric.name().to_string(),
                     p.strategy.to_string(),
+                    sched,
                     fmt_time(m.breakdown.total()),
                     fmt_time(m.per_sample),
                     fmt_bw(m.effective_bw),
@@ -630,6 +703,7 @@ impl SweepReport {
                     fleet,
                     p.fabric.name().to_string(),
                     p.strategy.to_string(),
+                    sched,
                     "-".into(),
                     "-".into(),
                     "-".into(),
@@ -694,6 +768,8 @@ impl SweepReport {
                         "span_pp_wafers",
                         Json::Num(p.span.pp_factor(p.wafers) as f64),
                     ),
+                    ("overlap", Json::Str(p.overlap.name().to_string())),
+                    ("microbatches", Json::Num(p.microbatches as f64)),
                     ("ok", Json::Bool(p.outcome.is_ok())),
                 ];
                 match &p.outcome {
@@ -701,6 +777,10 @@ impl SweepReport {
                         fields.push(("total_s", Json::Num(m.breakdown.total())));
                         fields.push(("per_sample_s", Json::Num(m.per_sample)));
                         fields.push(("compute_s", Json::Num(m.breakdown.compute)));
+                        fields.push((
+                            "exposed_total_s",
+                            Json::Num(m.breakdown.total_exposed()),
+                        ));
                         fields.push(("effective_npu_bw", Json::Num(m.effective_bw)));
                         let comm: Vec<(&str, Json)> = CommType::all()
                             .iter()
@@ -722,6 +802,144 @@ impl SweepReport {
             ),
         ])
     }
+}
+
+/// Total sort key of one JSON sweep point, mirroring [`rank`] exactly so
+/// `fred merge` reproduces a single-run ranking byte for byte (the CI
+/// round-trip `sweep → split → merge → cmp` pins this).
+struct MergeKey {
+    infeasible: u8,
+    per_sample: f64,
+    workload: String,
+    wafer: WaferDims,
+    wafers: usize,
+    xwafer_bw: f64,
+    xwafer_latency: f64,
+    topo: EgressTopo,
+    span: WaferSpan,
+    fabric: String,
+    strategy: String,
+    overlap: OverlapMode,
+    microbatches: usize,
+}
+
+fn merge_key(p: &Json) -> Result<MergeKey, String> {
+    let str_field = |k: &str| -> Result<String, String> {
+        p.get(k)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| format!("point missing string field `{k}`"))
+    };
+    let num_field = |k: &str| -> Result<f64, String> {
+        p.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("point missing numeric field `{k}`"))
+    };
+    let ok = p
+        .get("ok")
+        .and_then(Json::as_bool)
+        .ok_or_else(|| "point missing `ok`".to_string())?;
+    let per_sample = if ok { num_field("per_sample_s")? } else { f64::INFINITY };
+    let wafer_s = str_field("wafer")?;
+    let wafer = WaferDims::parse(&wafer_s).ok_or_else(|| format!("bad wafer `{wafer_s}`"))?;
+    let topo_s = str_field("xwafer_topo")?;
+    let topo =
+        EgressTopo::parse(&topo_s).ok_or_else(|| format!("bad xwafer_topo `{topo_s}`"))?;
+    let span_s = str_field("wafer_span")?;
+    let span =
+        WaferSpan::parse(&span_s).ok_or_else(|| format!("bad wafer_span `{span_s}`"))?;
+    let overlap_s = str_field("overlap")?;
+    let overlap =
+        OverlapMode::parse(&overlap_s).ok_or_else(|| format!("bad overlap `{overlap_s}`"))?;
+    Ok(MergeKey {
+        infeasible: u8::from(!ok),
+        per_sample,
+        workload: str_field("workload")?,
+        wafer,
+        wafers: num_field("wafers")? as usize,
+        xwafer_bw: num_field("xwafer_bw")?,
+        xwafer_latency: num_field("xwafer_latency_s")?,
+        topo,
+        span,
+        fabric: str_field("fabric")?,
+        strategy: str_field("strategy")?,
+        overlap,
+        microbatches: num_field("microbatches")? as usize,
+    })
+}
+
+fn merge_key_cmp(a: &MergeKey, b: &MergeKey) -> std::cmp::Ordering {
+    a.infeasible
+        .cmp(&b.infeasible)
+        .then(a.per_sample.total_cmp(&b.per_sample))
+        .then_with(|| a.workload.cmp(&b.workload))
+        .then_with(|| a.wafer.cmp(&b.wafer))
+        .then_with(|| a.wafers.cmp(&b.wafers))
+        .then_with(|| a.xwafer_bw.total_cmp(&b.xwafer_bw))
+        .then_with(|| a.xwafer_latency.total_cmp(&b.xwafer_latency))
+        .then_with(|| a.topo.cmp(&b.topo))
+        .then_with(|| a.span.cmp(&b.span))
+        .then_with(|| a.fabric.cmp(&b.fabric))
+        .then_with(|| a.strategy.cmp(&b.strategy))
+        .then_with(|| a.overlap.cmp(&b.overlap))
+        .then_with(|| a.microbatches.cmp(&b.microbatches))
+}
+
+/// Merge several `fred sweep --json` documents (e.g. a sweep sharded
+/// across machines) into one: points are concatenated and re-ranked with
+/// the same total order [`rank`] uses, `truncated_strategies` sums, and
+/// every input must carry the current [`SCHEMA_VERSION`] — mismatched
+/// versions are rejected rather than silently mixing contracts (the
+/// ranking key reads v5 fields). Closes the ROADMAP "Sweep resume/merge"
+/// item.
+///
+/// Byte-identity with the unsharded run: shard on disjoint axes (fleet
+/// sizes, workloads, bandwidths) *and* keep the truncation bookkeeping
+/// shard-invariant — truncation is counted once per wafer shape by
+/// [`run_sweep`], so two shards re-enumerating the same shape's strategy
+/// list would each report it and the merged sum would double-count. Pass
+/// explicit `--strategies`, raise `--max-strategies` past the
+/// factorization count, or shard on the wafer-*shape* axis; the `points`
+/// array itself round-trips exactly in every case.
+pub fn merge_sweep_docs(docs: &[Json]) -> Result<Json, String> {
+    if docs.is_empty() {
+        return Err("no sweep documents to merge".into());
+    }
+    let mut keyed: Vec<(MergeKey, Json)> = Vec::new();
+    let mut truncated = 0.0_f64;
+    for (i, doc) in docs.iter().enumerate() {
+        let version = doc
+            .get("schema_version")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("input {i}: missing schema_version"))?;
+        if version != SCHEMA_VERSION {
+            return Err(format!(
+                "input {i}: schema_version {version} != {SCHEMA_VERSION}; \
+                 re-run that shard with this binary before merging"
+            ));
+        }
+        let points = doc
+            .get("points")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("input {i}: missing points array"))?;
+        for p in points {
+            let key = merge_key(p).map_err(|e| format!("input {i}: {e}"))?;
+            keyed.push((key, p.clone()));
+        }
+        truncated += doc
+            .get("truncated_strategies")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+    }
+    keyed.sort_by(|a, b| merge_key_cmp(&a.0, &b.0));
+    Ok(Json::obj(vec![
+        ("schema_version", Json::Num(SCHEMA_VERSION)),
+        (
+            "points",
+            Json::Arr(keyed.into_iter().map(|(_, p)| p).collect()),
+        ),
+        ("truncated_strategies", Json::Num(truncated)),
+    ]))
 }
 
 #[cfg(test)]
@@ -837,6 +1055,17 @@ mod tests {
             assert_eq!(p.get("wafer_span").and_then(Json::as_str), Some("dp"));
             assert!(p.get("xwafer_latency_s").unwrap().as_f64().unwrap() >= 0.0);
             assert!(p.get("global_pp").unwrap().as_usize().unwrap() >= 1);
+            // v5 fields: the schedule axes and the exposure scalar.
+            assert_eq!(p.get("overlap").and_then(Json::as_str), Some("off"));
+            assert_eq!(
+                p.get("microbatches").and_then(Json::as_usize),
+                Some(1),
+                "ResNet's Table V default"
+            );
+            let exposed = p.get("exposed_total_s").unwrap().as_f64().unwrap();
+            let total = p.get("total_s").unwrap().as_f64().unwrap();
+            let compute = p.get("compute_s").unwrap().as_f64().unwrap();
+            assert!(exposed >= 0.0 && (compute + exposed - total).abs() <= 1e-12 * total);
         }
     }
 
@@ -1092,16 +1321,104 @@ mod tests {
     }
 
     #[test]
+    fn overlap_axis_multiplies_points_and_full_never_ranks_slower() {
+        let mut cfg = tiny_cfg();
+        cfg.wafer_counts = vec![2];
+        cfg.overlaps = OverlapMode::all().to_vec();
+        let report = run_sweep(&cfg);
+        assert_eq!(report.points.len(), 12, "2 strategies x 2 fabrics x 3 overlaps");
+        for p in report.points.iter().filter(|p| p.overlap == OverlapMode::Full) {
+            assert!(p.outcome.is_ok(), "{}", p.strategy);
+            let off = report
+                .points
+                .iter()
+                .find(|q| {
+                    q.overlap == OverlapMode::Off
+                        && q.fabric == p.fabric
+                        && q.strategy == p.strategy
+                })
+                .expect("matched overlap-off point");
+            let tf = p.outcome.as_ref().unwrap().breakdown.total();
+            let to = off.outcome.as_ref().unwrap().breakdown.total();
+            assert!(tf <= to, "{}: full {tf} > off {to}", p.strategy);
+        }
+    }
+
+    #[test]
+    fn microbatch_axis_overrides_the_workload_default() {
+        let mut cfg = tiny_cfg();
+        cfg.workloads = vec![workload::transformer_17b()];
+        cfg.strategies = Some(vec![Strategy::new(2, 5, 2)]);
+        cfg.fabrics = vec![FabricKind::FredD];
+        cfg.microbatches = vec![1, 8, 32];
+        let report = run_sweep(&cfg);
+        assert_eq!(report.points.len(), 3);
+        let mut mbs: Vec<usize> = report.points.iter().map(|p| p.microbatches).collect();
+        mbs.sort_unstable();
+        assert_eq!(mbs, vec![1, 8, 32]);
+        for p in &report.points {
+            assert!(p.outcome.is_ok(), "mb={}", p.microbatches);
+        }
+        // An empty microbatch axis records each workload's own count.
+        let mut dflt = tiny_cfg();
+        dflt.workloads = vec![workload::transformer_17b()];
+        dflt.strategies = Some(vec![Strategy::new(2, 5, 2)]);
+        dflt.fabrics = vec![FabricKind::FredD];
+        let report = run_sweep(&dflt);
+        assert!(report.points.iter().all(|p| p.microbatches == 8), "t17b default");
+    }
+
+    #[test]
+    fn merge_of_shards_reproduces_the_combined_run_byte_for_byte() {
+        let mut all = tiny_cfg();
+        all.wafer_counts = vec![1, 2];
+        all.overlaps = vec![OverlapMode::Off, OverlapMode::Full];
+        all.microbatches = vec![1, 4];
+        let combined = run_sweep(&all).to_json();
+        let mut shard1 = all.clone();
+        shard1.wafer_counts = vec![1];
+        let mut shard2 = all.clone();
+        shard2.wafer_counts = vec![2];
+        let merged = merge_sweep_docs(&[
+            run_sweep(&shard1).to_json(),
+            run_sweep(&shard2).to_json(),
+        ])
+        .expect("merge");
+        assert_eq!(
+            merged.render(),
+            combined.render(),
+            "sharding on the fleet axis then merging must reproduce the full run"
+        );
+    }
+
+    #[test]
+    fn merge_is_idempotent_and_rejects_mismatched_schema_versions() {
+        let doc = run_sweep(&tiny_cfg()).to_json();
+        let same = merge_sweep_docs(std::slice::from_ref(&doc)).expect("single-doc merge");
+        assert_eq!(same.render(), doc.render(), "already-ranked doc is a fixed point");
+        let old = Json::obj(vec![
+            ("schema_version", Json::Num(4.0)),
+            ("points", Json::Arr(vec![])),
+            ("truncated_strategies", Json::Num(0.0)),
+        ]);
+        let err = merge_sweep_docs(&[doc, old]).unwrap_err();
+        assert!(err.contains("schema_version"), "{err}");
+        assert!(merge_sweep_docs(&[]).is_err(), "empty input set must be rejected");
+    }
+
+    #[test]
     fn threaded_sweep_with_egress_axes_is_byte_identical() {
         let mut cfg = tiny_cfg();
         cfg.wafer_counts = vec![1, 2, 4];
         cfg.xwafer_topos = EgressTopo::all().to_vec();
         cfg.wafer_spans = WaferSpan::all().to_vec();
         cfg.xwafer_latencies = vec![DEFAULT_XWAFER_LATENCY, 2e-6];
+        cfg.overlaps = OverlapMode::all().to_vec();
+        cfg.microbatches = vec![4];
         cfg.threads = 1;
         let seq = run_sweep(&cfg).to_json().render();
         cfg.threads = 5;
         let par = run_sweep(&cfg).to_json().render();
-        assert_eq!(seq, par, "egress axes must not break thread determinism");
+        assert_eq!(seq, par, "egress + schedule axes must not break thread determinism");
     }
 }

@@ -1,0 +1,484 @@
+//! The iteration phase-timeline engine: explicit phases, explicit
+//! resources, one deterministic list scheduler.
+//!
+//! Before this module, `Simulator::try_iterate` priced an iteration by
+//! ad-hoc summation scattered across its stationary and streaming match
+//! arms, and overlap existed only as the hard-coded `overlap_dp`
+//! recurrence. LIBRA (arXiv 2109.11762) shows that workload-aware
+//! overlap of multi-dimensional collectives is the deciding factor when
+//! ranking hierarchical topologies, so the iteration model is now an
+//! explicit [`Timeline`]: a sequence of [`Step`]s whose [`Phase`]s are
+//! tagged with the hardware [`Resource`] they occupy (NPU compute, the
+//! on-wafer reduction fabric, the cross-wafer egress fabric, the
+//! off-wafer I/O channels). A deterministic list scheduler
+//! ([`exposed_after_window`]) prices the timeline with **per-resource
+//! serialization**: phases on independent resources overlap, phases on
+//! the same resource queue (busy-interval pricing).
+//!
+//! The two overlap mechanisms that previously existed as special cases
+//! are now instances of that one scheduler:
+//!
+//! * the `exposed_dp_time` gradient-bucket recurrence of
+//!   [`schedule`](super::schedule) is a single-resource bucket list
+//!   released steadily across the backward-compute window, and
+//! * the weight-streaming `stream_prefetch` hiding is a one-bucket
+//!   window ([`Step::Hidden`]).
+//!
+//! [`OverlapMode`] selects how aggressively the scheduler may overlap:
+//!
+//! * [`OverlapMode::Off`] — every step fully serialized (the paper's
+//!   Fig. 10 semantics). Pricing is **bit-identical** to the
+//!   pre-timeline summation: each step contributes exactly the f64 its
+//!   builder computed, folded in the same order.
+//! * [`OverlapMode::Dp`] — [`Step::Overlapped`] steps enabled at `Dp`
+//!   run the bucket recurrence against their compute window with each
+//!   bucket's segments fused into one opaque network phase — exactly
+//!   the legacy `overlap_dp` recurrence.
+//! * [`OverlapMode::Full`] — bucket segments keep their resource tags
+//!   and pipeline: bucket *i*'s cross-wafer egress All-Reduce overlaps
+//!   bucket *i+1*'s on-wafer reduce-scatter, and the whole train hides
+//!   under backward compute. The scheduler never prices worse than the
+//!   serialized baseline (a chunking that loses to it — e.g.
+//!   latency-dominated egress chunks — falls back), so
+//!   `full <= dp-at-most-ulp <= off` holds by construction.
+
+use super::metrics::{Breakdown, CommType};
+
+/// How aggressively the timeline scheduler may overlap communication
+/// with compute — the `--overlap` sweep axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OverlapMode {
+    /// Fully serialized (the paper's exposed-comm semantics; default).
+    Off,
+    /// Only the DP gradient-bucket All-Reduce overlaps backward compute
+    /// (the legacy `overlap_dp` recurrence).
+    Dp,
+    /// Every overlappable step runs on its resource: independent
+    /// resources overlap, same-resource phases queue.
+    Full,
+}
+
+impl OverlapMode {
+    /// Every mode, in CLI/report order.
+    pub fn all() -> [OverlapMode; 3] {
+        [OverlapMode::Off, OverlapMode::Dp, OverlapMode::Full]
+    }
+
+    /// Name used on the CLI and in reports/JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OverlapMode::Off => "off",
+            OverlapMode::Dp => "dp",
+            OverlapMode::Full => "full",
+        }
+    }
+
+    /// Parse a CLI name (`off` / `dp` / `full`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" => Some(OverlapMode::Off),
+            "dp" => Some(OverlapMode::Dp),
+            "full" => Some(OverlapMode::Full),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for OverlapMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The hardware a phase occupies. Phases on different resources may
+/// overlap; phases on the same resource serialize (busy intervals).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Resource {
+    /// NPU arithmetic (forward/backward compute).
+    Npu,
+    /// The on-wafer reduction fabric (mesh or FRED switch tree).
+    OnWafer,
+    /// The cross-wafer egress fabric (ring / CXL tree / dragonfly).
+    Egress,
+    /// The off-wafer I/O channels (weight streaming, input loading).
+    Io,
+}
+
+impl Resource {
+    fn index(self) -> usize {
+        match self {
+            Resource::Npu => 0,
+            Resource::OnWafer => 1,
+            Resource::Egress => 2,
+            Resource::Io => 3,
+        }
+    }
+}
+
+/// What a phase's time is reported as in the [`Breakdown`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseKind {
+    /// Compute time (folds into `Breakdown::compute`).
+    Compute,
+    /// Exposed communication of the given source.
+    Comm(CommType),
+}
+
+/// One priced phase of the iteration: a duration on a resource.
+#[derive(Debug, Clone, Copy)]
+pub struct Phase {
+    /// Breakdown slot this phase reports into.
+    pub kind: PhaseKind,
+    /// Hardware the phase occupies.
+    pub resource: Resource,
+    /// Duration in seconds (already priced against the fabric).
+    pub duration: f64,
+}
+
+impl Phase {
+    /// A compute phase (NPU resource).
+    pub fn compute(duration: f64) -> Self {
+        Self { kind: PhaseKind::Compute, resource: Resource::Npu, duration }
+    }
+
+    /// A communication phase.
+    pub fn comm(t: CommType, resource: Resource, duration: f64) -> Self {
+        Self { kind: PhaseKind::Comm(t), resource, duration }
+    }
+}
+
+/// One bucket of an overlappable round: a chain of segments that run in
+/// order, each on its own resource (e.g. on-wafer reduce-scatter →
+/// cross-wafer egress All-Reduce → on-wafer all-gather).
+#[derive(Debug, Clone)]
+pub struct Bucket {
+    /// `(resource, duration)` segments, executed in order.
+    pub segments: Vec<(Resource, f64)>,
+}
+
+impl Bucket {
+    /// A single-segment bucket.
+    pub fn single(resource: Resource, duration: f64) -> Self {
+        Self { segments: vec![(resource, duration)] }
+    }
+
+    /// Total serial time of the chain (left-fold, so a 3-segment bucket
+    /// sums exactly like the legacy `rs + cross + ag`).
+    pub fn serial(&self) -> f64 {
+        self.segments.iter().fold(0.0, |acc, &(_, d)| acc + d)
+    }
+}
+
+/// One step of the iteration timeline.
+#[derive(Debug, Clone)]
+pub enum Step {
+    /// Critical-path phase: serializes with everything before and after
+    /// it in every mode (blocking MP All-Reduces, pipeline handoffs,
+    /// compute itself).
+    Serial(Phase),
+    /// A phase that hides under an already-elapsed window of work on
+    /// another resource (weight-stream prefetch: the group's load hides
+    /// under the previous group's compute). Exposure is
+    /// `max(0, duration - window)` in **every** mode — the hiding is a
+    /// buffer-capacity property of the workload, not a schedule choice.
+    Hidden {
+        /// Breakdown slot.
+        kind: CommType,
+        /// The phase's serial duration.
+        duration: f64,
+        /// Work on other resources it may hide under.
+        window: f64,
+    },
+    /// The general overlap instance: `buckets` released at a steady rate
+    /// across a compute `window`, each bucket a chain of per-resource
+    /// segments. Exposure is the tail past the window
+    /// ([`exposed_after_window`]).
+    Overlapped {
+        /// Breakdown slot.
+        kind: CommType,
+        /// Compute window the buckets are released across (seconds).
+        window: f64,
+        /// The bucket chains (identical or not).
+        buckets: Vec<Bucket>,
+        /// Exact non-overlapped cost, preserved bit-for-bit in modes
+        /// below `enabled_at` (e.g. the legacy `per_bucket * nb`).
+        serial_time: f64,
+        /// First mode at which this step may overlap.
+        enabled_at: OverlapMode,
+    },
+}
+
+/// An iteration as an explicit sequence of steps. Built by the
+/// [`Simulator`](super::sim::Simulator); priced here and nowhere else.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    steps: Vec<Step>,
+}
+
+impl Timeline {
+    /// Empty timeline.
+    pub fn new() -> Self {
+        Self { steps: Vec::new() }
+    }
+
+    /// Append a step.
+    pub fn push(&mut self, step: Step) {
+        self.steps.push(step);
+    }
+
+    /// Append a serial compute phase.
+    pub fn serial_compute(&mut self, duration: f64) {
+        self.push(Step::Serial(Phase::compute(duration)));
+    }
+
+    /// Append a serial (blocking) communication phase.
+    pub fn serial_comm(&mut self, t: CommType, resource: Resource, duration: f64) {
+        self.push(Step::Serial(Phase::comm(t, resource, duration)));
+    }
+
+    /// The steps, in order.
+    pub fn steps(&self) -> &[Step] {
+        &self.steps
+    }
+
+    /// Price the timeline into a fresh [`Breakdown`].
+    pub fn price(&self, mode: OverlapMode) -> Breakdown {
+        let mut out = Breakdown::default();
+        self.price_into(mode, &mut out);
+        out
+    }
+
+    /// Price the timeline, accumulating into `out` (the streaming path
+    /// prices its per-slice timeline and its fleet-level tail timeline
+    /// into one breakdown).
+    pub fn price_into(&self, mode: OverlapMode, out: &mut Breakdown) {
+        for step in &self.steps {
+            match step {
+                Step::Serial(p) => match p.kind {
+                    PhaseKind::Compute => out.compute += p.duration,
+                    PhaseKind::Comm(t) => out.add(t, p.duration),
+                },
+                Step::Hidden { kind, duration, window } => {
+                    out.add(*kind, (duration - window).max(0.0));
+                }
+                Step::Overlapped { kind, window, buckets, serial_time, enabled_at } => {
+                    let exposed = if mode < *enabled_at || buckets.is_empty() {
+                        *serial_time
+                    } else if mode < OverlapMode::Full {
+                        // The legacy recurrence: each bucket's chain
+                        // fused into one opaque network phase.
+                        let fused: Vec<Bucket> = buckets
+                            .iter()
+                            .map(|b| Bucket::single(Resource::OnWafer, b.serial()))
+                            .collect();
+                        exposed_after_window(*window, &fused)
+                    } else {
+                        // Per-resource pipelining; never worse than the
+                        // serialized baseline.
+                        exposed_after_window(*window, buckets).min(*serial_time)
+                    };
+                    out.add(*kind, exposed);
+                }
+            }
+        }
+    }
+}
+
+/// The deterministic list scheduler — the single overlap mechanism of
+/// the engine. `buckets[i]` becomes ready at `window / n * (i + 1)`
+/// (backward compute emits gradient buckets at a steady rate); each
+/// bucket's segments then run in order, and every segment starts at the
+/// later of its predecessor's completion and its **resource** becoming
+/// free — same-resource segments queue, different resources overlap.
+/// Returns the tail not hidden by the window:
+/// `max(0, last completion - window)`.
+///
+/// With single-segment buckets on one resource this is exactly the
+/// legacy `exposed_dp_time` recurrence (re-exported from
+/// [`schedule`](super::schedule) as a thin wrapper); with `window == 0`
+/// it degenerates to per-resource busy-interval pricing of the bucket
+/// train itself.
+pub fn exposed_after_window(window: f64, buckets: &[Bucket]) -> f64 {
+    let n = buckets.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let per_bucket = window / n as f64;
+    // free-at per Resource::index().
+    let mut free = [0.0_f64; 4];
+    let mut done_max = 0.0_f64;
+    for (i, b) in buckets.iter().enumerate() {
+        let ready = per_bucket * (i + 1) as f64;
+        let mut prev = ready;
+        for &(res, dur) in &b.segments {
+            let r = res.index();
+            let start = free[r].max(prev);
+            let done = start + dur;
+            free[r] = done;
+            prev = done;
+        }
+        done_max = done_max.max(prev);
+    }
+    (done_max - window).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlap_mode_parse_and_order() {
+        for m in OverlapMode::all() {
+            assert_eq!(OverlapMode::parse(m.name()), Some(m));
+            assert_eq!(m.to_string(), m.name());
+        }
+        assert_eq!(OverlapMode::parse(" FULL "), Some(OverlapMode::Full));
+        assert_eq!(OverlapMode::parse("on"), None);
+        assert_eq!(OverlapMode::parse(""), None);
+        assert!(OverlapMode::Off < OverlapMode::Dp);
+        assert!(OverlapMode::Dp < OverlapMode::Full);
+    }
+
+    #[test]
+    fn off_pricing_is_exact_summation_in_step_order() {
+        let mut tl = Timeline::new();
+        tl.serial_compute(1.0);
+        tl.serial_comm(CommType::Mp, Resource::OnWafer, 0.25);
+        tl.serial_comm(CommType::Pp, Resource::OnWafer, 0.125);
+        tl.push(Step::Overlapped {
+            kind: CommType::Dp,
+            window: 2.0 / 3.0,
+            buckets: vec![Bucket::single(Resource::OnWafer, 0.1); 3],
+            serial_time: 0.1 * 3.0,
+            enabled_at: OverlapMode::Dp,
+        });
+        let b = tl.price(OverlapMode::Off);
+        assert_eq!(b.compute, 1.0);
+        assert_eq!(b.get(CommType::Mp), 0.25);
+        assert_eq!(b.get(CommType::Pp), 0.125);
+        assert_eq!(b.get(CommType::Dp), 0.1 * 3.0, "serial_time verbatim, not a re-sum");
+    }
+
+    #[test]
+    fn hidden_step_clamps_at_zero_in_every_mode() {
+        for mode in OverlapMode::all() {
+            let mut tl = Timeline::new();
+            tl.push(Step::Hidden { kind: CommType::Stream, duration: 0.4, window: 1.0 });
+            tl.push(Step::Hidden { kind: CommType::Stream, duration: 1.5, window: 1.0 });
+            let b = tl.price(mode);
+            assert_eq!(b.get(CommType::Stream), 0.5, "{mode}: only the tail is exposed");
+        }
+    }
+
+    #[test]
+    fn scheduler_matches_the_legacy_recurrence_on_one_resource() {
+        // Comm slower than compute: buckets ready at 0.1k, ARs
+        // serialize: done = 0.1 + 10 x 0.2 = 2.1 -> exposed 1.1 (the
+        // schedule.rs unit-test case).
+        let buckets = vec![Bucket::single(Resource::OnWafer, 0.2); 10];
+        let e = exposed_after_window(1.0, &buckets);
+        assert!((e - 1.1).abs() < 1e-9, "{e}");
+        // Cheap comm: only the last tail shows.
+        let cheap = vec![Bucket::single(Resource::OnWafer, 0.001); 10];
+        let e = exposed_after_window(1.0, &cheap);
+        assert!((e - 0.001).abs() < 1e-9, "{e}");
+        // Zero window: full serialization.
+        let e = exposed_after_window(0.0, &vec![Bucket::single(Resource::OnWafer, 0.1); 5]);
+        assert!((e - 0.5).abs() < 1e-12, "{e}");
+        assert_eq!(exposed_after_window(1.0, &[]), 0.0);
+    }
+
+    #[test]
+    fn independent_resources_overlap_and_same_resource_queues() {
+        // Two buckets, each (OnWafer 1s, Egress 1s), no window: bucket 1's
+        // on-wafer segment overlaps bucket 0's egress segment -> 3s, not
+        // the 4s serial chain.
+        let b = Bucket { segments: vec![(Resource::OnWafer, 1.0), (Resource::Egress, 1.0)] };
+        let t = exposed_after_window(0.0, &vec![b.clone(), b.clone()]);
+        assert_eq!(t, 3.0, "flow-shop pipelining");
+        // Same resource everywhere: fully serialized.
+        let s = Bucket { segments: vec![(Resource::OnWafer, 1.0), (Resource::OnWafer, 1.0)] };
+        let t = exposed_after_window(0.0, &vec![s.clone(), s.clone()]);
+        assert_eq!(t, 4.0, "same-resource segments queue");
+    }
+
+    #[test]
+    fn full_mode_pipelines_and_never_beats_serial_floor() {
+        let b = Bucket { segments: vec![(Resource::OnWafer, 1.0), (Resource::Egress, 1.0)] };
+        let mut tl = Timeline::new();
+        tl.push(Step::Overlapped {
+            kind: CommType::Dp,
+            window: 0.0,
+            buckets: vec![b.clone(), b.clone()],
+            serial_time: 4.0,
+            enabled_at: OverlapMode::Dp,
+        });
+        assert_eq!(tl.price(OverlapMode::Off).get(CommType::Dp), 4.0);
+        assert_eq!(tl.price(OverlapMode::Dp).get(CommType::Dp), 4.0, "fused chains");
+        assert_eq!(tl.price(OverlapMode::Full).get(CommType::Dp), 3.0, "pipelined");
+    }
+
+    #[test]
+    fn full_mode_falls_back_when_chunking_loses() {
+        // Latency-dominated chunks: the pipelined schedule would cost
+        // more than the one-shot serial round, so the scheduler falls
+        // back to the serial floor — `full <= off` holds structurally.
+        let mut tl = Timeline::new();
+        tl.push(Step::Overlapped {
+            kind: CommType::Dp,
+            window: 0.0,
+            buckets: vec![Bucket::single(Resource::Egress, 1.0); 8],
+            serial_time: 2.0, // unchunked round is cheaper than 8 x 1.0
+            enabled_at: OverlapMode::Full,
+        });
+        assert_eq!(tl.price(OverlapMode::Full).get(CommType::Dp), 2.0);
+        assert_eq!(tl.price(OverlapMode::Off).get(CommType::Dp), 2.0);
+    }
+
+    #[test]
+    fn overlapped_below_enabled_at_is_the_serial_time_verbatim() {
+        let mut tl = Timeline::new();
+        tl.push(Step::Overlapped {
+            kind: CommType::Dp,
+            window: 10.0,
+            buckets: vec![Bucket::single(Resource::Egress, 0.5); 4],
+            serial_time: 2.0,
+            enabled_at: OverlapMode::Full,
+        });
+        // Off and Dp both sit below Full: serial.
+        assert_eq!(tl.price(OverlapMode::Off).get(CommType::Dp), 2.0);
+        assert_eq!(tl.price(OverlapMode::Dp).get(CommType::Dp), 2.0);
+        // Full hides everything but the last bucket's tail: the final
+        // chunk is only ready when the window ends (the recurrence
+        // semantics), so exactly one 0.5 s round stays exposed.
+        assert_eq!(tl.price(OverlapMode::Full).get(CommType::Dp), 0.5);
+    }
+
+    #[test]
+    fn price_into_accumulates_across_timelines() {
+        let mut a = Timeline::new();
+        a.serial_compute(1.0);
+        a.serial_comm(CommType::Stream, Resource::Io, 0.5);
+        let mut b = Timeline::new();
+        b.serial_comm(CommType::Dp, Resource::Egress, 0.25);
+        let mut out = a.price(OverlapMode::Off);
+        b.price_into(OverlapMode::Off, &mut out);
+        assert_eq!(out.compute, 1.0);
+        assert_eq!(out.get(CommType::Stream), 0.5);
+        assert_eq!(out.get(CommType::Dp), 0.25);
+        assert_eq!(out.total(), 1.75);
+    }
+
+    #[test]
+    fn bucket_serial_left_folds() {
+        let b = Bucket {
+            segments: vec![
+                (Resource::OnWafer, 0.1),
+                (Resource::Egress, 0.2),
+                (Resource::OnWafer, 0.3),
+            ],
+        };
+        assert_eq!(b.serial(), 0.1 + 0.2 + 0.3);
+        assert_eq!(Bucket::single(Resource::Io, 2.0).serial(), 2.0);
+    }
+}

@@ -14,6 +14,7 @@
 
 use super::config;
 use super::parallelism::Strategy;
+use super::timeline::OverlapMode;
 
 /// Execution mode (paper Sec. III-A).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -65,7 +66,10 @@ pub struct Workload {
     /// Overlap the DP gradient All-Reduce with backward compute. The
     /// paper's Fig. 10 DP bars correspond to non-overlapped execution
     /// (ASTRA-SIM's default); `true` enables the bucketed-overlap
-    /// recurrence as an ablation.
+    /// recurrence as an ablation. This legacy flag only seeds the
+    /// simulator's default [`OverlapMode`] (see
+    /// [`Workload::default_overlap`]) — the `--overlap off,dp,full`
+    /// sweep axis overrides it per point.
     pub overlap_dp: bool,
     /// Prefetch the next layer group's weights during compute in
     /// weight-streaming mode. True for the pure-DP Transformer-1T
@@ -89,6 +93,17 @@ impl Workload {
     /// Samples per iteration (minibatch = DP × 16, Sec. VII-C).
     pub fn minibatch(&self, strategy: &Strategy) -> usize {
         strategy.dp * config::SAMPLES_PER_REPLICA
+    }
+
+    /// The timeline overlap mode this workload's legacy `overlap_dp`
+    /// flag maps to: the simulator's default when no explicit
+    /// `--overlap` mode is set.
+    pub fn default_overlap(&self) -> OverlapMode {
+        if self.overlap_dp {
+            OverlapMode::Dp
+        } else {
+            OverlapMode::Off
+        }
     }
 
     /// By-name lookup for the CLI.
@@ -352,6 +367,16 @@ mod tests {
         let w = transformer_17b();
         let n = w.layers.iter().filter(|l| l.mp_collectives == 2).count();
         assert_eq!(n, 78);
+    }
+
+    #[test]
+    fn default_overlap_mirrors_the_legacy_flag() {
+        for w in Workload::all() {
+            assert_eq!(w.default_overlap(), OverlapMode::Off, "{}", w.name);
+        }
+        let mut w = resnet152();
+        w.overlap_dp = true;
+        assert_eq!(w.default_overlap(), OverlapMode::Dp);
     }
 
     #[test]

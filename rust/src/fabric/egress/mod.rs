@@ -35,6 +35,18 @@
 //!
 //! A 1-wafer instance of *every* topology is free by construction, so
 //! scale-out remains a strict superset of the paper's single-wafer model.
+//!
+//! Overlap-aware pricing: the egress fabric is a first-class **resource**
+//! of the coordinator's phase-timeline engine
+//! (`coordinator::timeline::Resource::Egress`). Under `--overlap full`
+//! the cross-wafer All-Reduce phases produced by
+//! [`ScaleOut::hierarchical_allreduce_grouped_phases`](super::scaleout::ScaleOut::hierarchical_allreduce_grouped_phases)
+//! occupy the egress busy interval while on-wafer reduce-scatter /
+//! all-gather phases and backward compute proceed on their own
+//! resources — chunked egress rounds queue here (same resource) but
+//! overlap everything else, which is exactly the busy-interval
+//! semantics `try_subgroup_allreduce`'s serialized ring steps already
+//! express within a single round.
 
 pub mod dragonfly;
 pub mod ring;

@@ -173,16 +173,71 @@ impl ScaleOut {
         bytes: f64,
         wafer_groups: &[Vec<usize>],
     ) -> Result<f64, FluidError> {
+        Ok(self
+            .hierarchical_allreduce_grouped_phases(fabric, groups, bytes, wafer_groups)?
+            .total())
+    }
+
+    /// The phase decomposition behind
+    /// [`Self::hierarchical_allreduce_grouped`] — the seam the
+    /// phase-timeline engine's overlap-aware scheduling needs: the
+    /// on-wafer reduce-scatter and all-gather occupy the on-wafer
+    /// fabric while the cross-wafer All-Reduce occupies the egress
+    /// fabric, so under `--overlap full` the egress phase of gradient
+    /// bucket *i* can run while bucket *i+1*'s reduce-scatter proceeds
+    /// on-wafer and backward compute continues on the NPUs (busy
+    /// intervals are tracked per resource by the timeline's list
+    /// scheduler). The summed [`HierRound::total`] is bit-identical to
+    /// what `hierarchical_allreduce_grouped` always returned.
+    pub fn hierarchical_allreduce_grouped_phases(
+        &self,
+        fabric: &dyn Fabric,
+        groups: &[Vec<NpuId>],
+        bytes: f64,
+        wafer_groups: &[Vec<usize>],
+    ) -> Result<HierRound, FluidError> {
         if bytes <= 0.0 || groups.is_empty() {
-            return Ok(0.0);
+            return Ok(HierRound::fused(0.0));
         }
         if self.is_single() || !wafer_groups.iter().any(|g| g.len() > 1) {
-            return onwafer_phase_time(fabric, CollectiveKind::AllReduce, groups, bytes);
+            let ar = onwafer_phase_time(fabric, CollectiveKind::AllReduce, groups, bytes)?;
+            return Ok(HierRound::fused(ar));
         }
         let rs = onwafer_phase_time(fabric, CollectiveKind::ReduceScatter, groups, bytes)?;
         let ag = onwafer_phase_time(fabric, CollectiveKind::AllGather, groups, bytes)?;
         let cross = self.try_subgroup_allreduce(wafer_groups, groups.len() as f64 * bytes)?;
-        Ok(rs + cross + ag)
+        Ok(HierRound { rs, cross, ag, fused: false })
+    }
+}
+
+/// Phase decomposition of one hierarchical All-Reduce round: on-wafer
+/// reduce-scatter → cross-wafer egress All-Reduce → on-wafer all-gather.
+/// A non-hierarchical round (single wafer, or no multi-member wafer
+/// group) is a single fused on-wafer All-Reduce carried in `rs` with
+/// `cross == ag == 0` and `fused == true`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HierRound {
+    /// On-wafer reduce-scatter time (or the whole fused All-Reduce).
+    pub rs: f64,
+    /// Cross-wafer egress All-Reduce time.
+    pub cross: f64,
+    /// On-wafer all-gather time.
+    pub ag: f64,
+    /// True when the round never left the wafer (plain All-Reduce).
+    pub fused: bool,
+}
+
+impl HierRound {
+    /// A round that never crossed wafers.
+    pub fn fused(ar: f64) -> Self {
+        Self { rs: ar, cross: 0.0, ag: 0.0, fused: true }
+    }
+
+    /// Serial round time, summed in the legacy `rs + cross + ag` order
+    /// (bit-identical to the pre-decomposition pricing; the fused form
+    /// adds exact zeros).
+    pub fn total(&self) -> f64 {
+        self.rs + self.cross + self.ag
     }
 }
 
@@ -352,6 +407,43 @@ mod tests {
                 last = t;
             }
         }
+    }
+
+    #[test]
+    fn grouped_phase_decomposition_sums_to_the_round() {
+        // The overlap seam: rs/cross/ag phases must re-sum bit-exactly
+        // to the fused round the simulator always priced, per topology.
+        let fabric = FabricKind::FredD.build();
+        let groups: Vec<Vec<NpuId>> = vec![(0..10).collect(), (10..20).collect()];
+        for topo in EgressTopo::all() {
+            let s = ScaleOut::with_topo(topo, 4, DEFAULT_EGRESS_BW, DEFAULT_XWAFER_LATENCY);
+            let all: Vec<usize> = (0..4).collect();
+            let phases = s
+                .hierarchical_allreduce_grouped_phases(
+                    fabric.as_ref(),
+                    &groups,
+                    64e6,
+                    std::slice::from_ref(&all),
+                )
+                .unwrap();
+            assert!(!phases.fused, "{topo}");
+            assert!(phases.rs > 0.0 && phases.cross > 0.0 && phases.ag > 0.0, "{topo}");
+            let total = s
+                .hierarchical_allreduce_grouped(fabric.as_ref(), &groups, 64e6, &[all])
+                .unwrap();
+            assert_eq!(phases.total().to_bits(), total.to_bits(), "{topo}");
+        }
+        // A single wafer (or singleton wafer groups) fuses to the plain
+        // on-wafer All-Reduce with exact-zero cross/ag phases.
+        let one = ScaleOut::single();
+        let f = one
+            .hierarchical_allreduce_grouped_phases(fabric.as_ref(), &groups, 64e6, &[vec![0]])
+            .unwrap();
+        assert!(f.fused);
+        assert!(f.rs > 0.0);
+        assert_eq!(f.cross, 0.0);
+        assert_eq!(f.ag, 0.0);
+        assert_eq!(f.total().to_bits(), f.rs.to_bits());
     }
 
     #[test]

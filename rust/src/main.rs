@@ -4,7 +4,10 @@
 //!
 //! * `sim`          — end-to-end iteration breakdown (Fig. 10 rows)
 //! * `sweep`        — strategy/topology sweep engine: fabric × wafer ×
-//!   MP/DP/PP factorization × workload, ranked (subsumes Fig. 2)
+//!   MP/DP/PP factorization × overlap schedule × workload, ranked
+//!   (subsumes Fig. 2)
+//! * `merge`        — merge sharded `sweep --json` documents into one
+//!   re-ranked document (schema-version-guarded)
 //! * `microbench`   — per-phase effective bandwidth (Fig. 9)
 //! * `channel-load` — mesh I/O hotspot analysis (Fig. 4)
 //! * `route`        — FRED switch routing demo (Fig. 7 h/i/j)

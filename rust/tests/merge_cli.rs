@@ -1,0 +1,173 @@
+//! Integration tests for `fred merge`: the sweep → split → merge
+//! round-trip through the real binary, the `--out` contract, and the
+//! schema-version / malformed-input rejection paths.
+
+use fred::runtime::json::Json;
+use std::path::PathBuf;
+use std::process::Command;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("fred_merge_{}_{name}", std::process::id()))
+}
+
+/// Run `fred` with args, asserting success, returning stdout bytes.
+fn run_ok(args: &[&str]) -> Vec<u8> {
+    let out = Command::new(env!("CARGO_BIN_EXE_fred"))
+        .args(args)
+        .output()
+        .expect("spawn fred");
+    assert!(
+        out.status.success(),
+        "{args:?} failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    out.stdout
+}
+
+#[test]
+fn merge_round_trips_a_sharded_sweep_byte_for_byte() {
+    // Shard the same grid on the fleet-size axis; explicit --strategies
+    // so no per-shard truncation bookkeeping diverges.
+    let strategies = "1,20,1;4,5,1;2,5,2";
+    let common = [
+        "sweep",
+        "--models",
+        "resnet152",
+        "--strategies",
+        strategies,
+        "--fabrics",
+        "fred-a,fred-d",
+        "--overlap",
+        "off,full",
+        "--microbatches",
+        "1,4",
+        "--json",
+    ];
+    let with_wafers = |w: &'static str| -> Vec<&'static str> {
+        let mut v = common.to_vec();
+        v.push("--wafers");
+        v.push(w);
+        v
+    };
+    let combined = run_ok(&with_wafers("1,2"));
+    let shard1_path = tmp("shard1.json");
+    let shard2_path = tmp("shard2.json");
+    std::fs::write(&shard1_path, run_ok(&with_wafers("1"))).unwrap();
+    std::fs::write(&shard2_path, run_ok(&with_wafers("2"))).unwrap();
+
+    let out_path = tmp("merged.json");
+    let merged_stdout = run_ok(&[
+        "merge",
+        shard1_path.to_str().unwrap(),
+        shard2_path.to_str().unwrap(),
+        "--out",
+        out_path.to_str().unwrap(),
+    ]);
+    assert_eq!(
+        merged_stdout, combined,
+        "merge of the two shards must reproduce the combined sweep byte for byte"
+    );
+    let merged_file = std::fs::read(&out_path).expect("--out written");
+    assert_eq!(merged_file, merged_stdout, "--out must match stdout byte for byte");
+
+    // The merged doc still parses and is ranked ascending per-sample.
+    let doc = Json::parse(String::from_utf8(merged_stdout).unwrap().trim()).unwrap();
+    assert_eq!(doc.get("schema_version").and_then(Json::as_usize), Some(5));
+    let points = doc.get("points").unwrap().as_arr().unwrap();
+    // 3 strategies x 2 fabrics x 2 overlaps x 2 microbatches x (1-wafer
+    // once + 2-wafer once).
+    assert_eq!(points.len(), 3 * 2 * 2 * 2 * 2);
+    let mut last = 0.0_f64;
+    for p in points {
+        assert_eq!(p.get("ok").and_then(Json::as_bool), Some(true));
+        let per_sample = p.get("per_sample_s").unwrap().as_f64().unwrap();
+        assert!(per_sample >= last, "merged points must stay ranked");
+        last = per_sample;
+    }
+
+    for p in [&shard1_path, &shard2_path, &out_path] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn merge_rejects_bad_inputs_with_usage_errors() {
+    // A real (tiny) sweep doc to pair with the bad ones.
+    let good_path = tmp("good.json");
+    std::fs::write(
+        &good_path,
+        run_ok(&[
+            "sweep",
+            "--models",
+            "resnet152",
+            "--fabrics",
+            "fred-d",
+            "--max-strategies",
+            "1",
+            "--json",
+        ]),
+    )
+    .unwrap();
+    // A v4-era document: right shape, stale version.
+    let stale_path = tmp("stale.json");
+    std::fs::write(
+        &stale_path,
+        "{\"points\":[],\"schema_version\":4,\"truncated_strategies\":0}\n",
+    )
+    .unwrap();
+    // Not JSON at all.
+    let garbage_path = tmp("garbage.json");
+    std::fs::write(&garbage_path, "not a sweep document").unwrap();
+
+    let good = good_path.to_str().unwrap();
+    let cases: Vec<Vec<&str>> = vec![
+        vec!["merge"],                                            // no inputs
+        vec!["merge", "/nonexistent-for-sure/sweep.json"],        // unreadable
+        vec!["merge", good, garbage_path.to_str().unwrap()],      // unparseable
+        vec!["merge", good, stale_path.to_str().unwrap()],        // version mismatch
+        vec!["merge", good, "--unknown-flag", "x"],               // bad option
+        vec!["merge", good, "--out"],                             // --out without path
+        vec!["merge", good, "--out", "/nonexistent-for-sure/m.json"], // unwritable
+    ];
+    for args in cases {
+        let out = Command::new(env!("CARGO_BIN_EXE_fred"))
+            .args(&args)
+            .output()
+            .expect("spawn fred");
+        assert_eq!(out.status.code(), Some(2), "{args:?} must exit 2");
+    }
+
+    // The mismatch error names the versions so the operator knows which
+    // shard to re-run.
+    let out = Command::new(env!("CARGO_BIN_EXE_fred"))
+        .args(["merge", good, stale_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("schema_version"), "stderr: {stderr}");
+
+    for p in [&good_path, &stale_path, &garbage_path] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn merging_one_document_is_the_identity() {
+    let doc_path = tmp("single.json");
+    let sweep = run_ok(&[
+        "sweep",
+        "--models",
+        "resnet152",
+        "--wafers",
+        "2",
+        "--fabrics",
+        "fred-d",
+        "--max-strategies",
+        "3",
+        "--json",
+    ]);
+    std::fs::write(&doc_path, &sweep).unwrap();
+    let merged = run_ok(&["merge", doc_path.to_str().unwrap()]);
+    assert_eq!(merged, sweep, "an already-ranked document is a merge fixed point");
+    std::fs::remove_file(&doc_path).ok();
+}

@@ -1,0 +1,152 @@
+//! Property tests for the phase-timeline engine's overlap modes: for
+//! every wafer span × egress topology, `--overlap full` never prices an
+//! iteration slower than `--overlap off` (the scheduler only *hides*
+//! time, with a serial-floor fallback), `dp` sits between them up to
+//! rounding, and overlap never touches compute or the blocking phases.
+
+use fred::coordinator::config::FabricKind;
+use fred::coordinator::metrics::CommType;
+use fred::coordinator::parallelism::WaferSpan;
+use fred::coordinator::sim::Simulator;
+use fred::coordinator::timeline::OverlapMode;
+use fred::coordinator::workload::{self, Workload};
+use fred::fabric::egress::EgressTopo;
+use fred::fabric::scaleout::ScaleOut;
+
+fn spans() -> [WaferSpan; 4] {
+    [
+        WaferSpan::Dp,
+        WaferSpan::Pp,
+        WaferSpan::Mp,
+        WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 2 },
+    ]
+}
+
+fn fleet_sim(w: &Workload, topo: EgressTopo, span: WaferSpan, mode: OverlapMode) -> Simulator {
+    let s = w.default_strategy;
+    Simulator::new(FabricKind::FredD, w.clone(), s)
+        .with_scaleout(ScaleOut::with_topo(topo, 4, 2.304e12, 500e-9))
+        .with_span(span)
+        .with_overlap(mode)
+}
+
+#[test]
+fn full_overlap_never_slower_than_off_for_every_span_and_topology() {
+    // One stationary and one streaming workload across the whole
+    // span × topology grid on a 4-wafer fleet.
+    for w in [workload::resnet152(), workload::transformer_1t()] {
+        for topo in EgressTopo::all() {
+            for span in spans() {
+                let off = fleet_sim(&w, topo, span, OverlapMode::Off).iterate();
+                let dp = fleet_sim(&w, topo, span, OverlapMode::Dp).iterate();
+                let full = fleet_sim(&w, topo, span, OverlapMode::Full).iterate();
+                let ctx = format!("{} {} span={}", w.name, topo, span.name());
+                // The serial-floor fallback makes full <= off exact.
+                assert!(
+                    full.total() <= off.total(),
+                    "{ctx}: full {} > off {}",
+                    full.total(),
+                    off.total()
+                );
+                // The dp recurrence can round a hair past serial.
+                assert!(
+                    dp.total() <= off.total() * (1.0 + 1e-9),
+                    "{ctx}: dp {} > off {}",
+                    dp.total(),
+                    off.total()
+                );
+                assert!(
+                    full.total() <= dp.total() * (1.0 + 1e-9),
+                    "{ctx}: full {} > dp {}",
+                    full.total(),
+                    dp.total()
+                );
+                // Overlap hides communication; it never changes compute
+                // or the blocking MP exposure.
+                assert_eq!(full.compute, off.compute, "{ctx}: compute must be invariant");
+                assert_eq!(
+                    full.get(CommType::Mp),
+                    off.get(CommType::Mp),
+                    "{ctx}: MP is blocking in every mode"
+                );
+                assert_eq!(
+                    full.get(CommType::Pp),
+                    off.get(CommType::Pp),
+                    "{ctx}: PP handoffs are blocking in every mode"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn overlap_only_ever_reduces_the_dp_and_stream_exposure() {
+    for w in [workload::resnet152(), workload::transformer_1t()] {
+        for topo in EgressTopo::all() {
+            for span in spans() {
+                let off = fleet_sim(&w, topo, span, OverlapMode::Off).iterate();
+                let full = fleet_sim(&w, topo, span, OverlapMode::Full).iterate();
+                for t in CommType::all() {
+                    assert!(
+                        full.get(t) <= off.get(t),
+                        "{} {} span={} {}: {} > {}",
+                        w.name,
+                        topo,
+                        span.name(),
+                        t.name(),
+                        full.get(t),
+                        off.get(t)
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn full_overlap_strictly_hides_cross_wafer_gradients_on_a_dp_span() {
+    // On the DP span the cross-wafer gradient All-Reduce dominates the
+    // exposed DP time; full overlap must strictly hide part of it for
+    // both execution modes (stationary buckets against backward compute,
+    // streaming chunks against the backward sweep).
+    for w in [workload::resnet152(), workload::transformer_1t()] {
+        for topo in EgressTopo::all() {
+            let off = fleet_sim(&w, topo, WaferSpan::Dp, OverlapMode::Off).iterate();
+            let full = fleet_sim(&w, topo, WaferSpan::Dp, OverlapMode::Full).iterate();
+            assert!(off.get(CommType::Dp) > 0.0, "{} {}: no DP to hide?", w.name, topo);
+            assert!(
+                full.get(CommType::Dp) < off.get(CommType::Dp),
+                "{} {}: full {} must strictly beat off {}",
+                w.name,
+                topo,
+                full.get(CommType::Dp),
+                off.get(CommType::Dp)
+            );
+        }
+    }
+}
+
+#[test]
+fn single_wafer_overlap_reduces_to_the_on_wafer_recurrence() {
+    // Without a fleet the only overlappable phase is the on-wafer DP
+    // bucket round: dp and full coincide (one segment per bucket — there
+    // is nothing to pipeline across resources), and both are <= off.
+    for w in [workload::resnet152(), workload::transformer_17b()] {
+        let s = w.default_strategy;
+        let total = |mode: OverlapMode| {
+            Simulator::new(FabricKind::FredD, w.clone(), s)
+                .with_overlap(mode)
+                .iterate()
+        };
+        let off = total(OverlapMode::Off);
+        let dp = total(OverlapMode::Dp);
+        let full = total(OverlapMode::Full);
+        assert_eq!(
+            dp.get(CommType::Dp),
+            full.get(CommType::Dp),
+            "{}: single-segment buckets pipeline trivially",
+            w.name
+        );
+        assert!(dp.get(CommType::Dp) <= off.get(CommType::Dp), "{}", w.name);
+    }
+}

@@ -124,6 +124,11 @@ fn sweep_cli_rejects_bad_input_with_usage_errors() {
         vec!["sweep", "--span", "0x2"],
         vec!["sweep", "--span", "2x"],
         vec!["sweep", "--span", "2x2x2"],
+        vec!["sweep", "--overlap", "on"],
+        vec!["sweep", "--overlap", "off,max"],
+        vec!["sweep", "--microbatches", "0"],
+        vec!["sweep", "--microbatches", "8,-2"],
+        vec!["sweep", "--microbatches", "lots"],
         // A mixed span must match a swept fleet size (default --wafers
         // is a single wafer; 2x2 needs a 4-wafer fleet).
         vec!["sweep", "--span", "2x2"],
@@ -227,7 +232,7 @@ fn sweep_out_file_is_golden_against_stdout() {
     assert_eq!(file, stdout, "--out file must match --json stdout byte for byte");
     let doc = Json::parse(String::from_utf8(file).expect("utf8").trim())
         .expect("--out file is valid JSON");
-    assert_eq!(doc.get("schema_version").and_then(Json::as_usize), Some(4));
+    assert_eq!(doc.get("schema_version").and_then(Json::as_usize), Some(5));
     let points = doc.get("points").unwrap().as_arr().unwrap();
     assert_eq!(points.len(), 3, "3 strategies x 1 fabric x 1 fleet size");
     for p in points {
@@ -238,15 +243,16 @@ fn sweep_out_file_is_golden_against_stdout() {
 }
 
 #[test]
-fn schema_v4_signals_v3_consumers_instead_of_silently_misparsing() {
-    // A well-behaved v3 consumer checks `schema_version` before reading
-    // points (it may switch on the `wafer_span` values `dp`/`pp`, which
-    // v4 extends with `mp` and mixed `NxM` strings — a semantic change
-    // that forces the bump). The v4 document must (a) carry the version
-    // as a plain number a v3 guard can compare against, and (b) still
-    // contain every v2 *and* v3 point field, so a consumer that ignores
-    // the version reads consistent values rather than garbage — the new
-    // fields are additive.
+fn schema_v5_signals_v4_consumers_instead_of_silently_misparsing() {
+    // A well-behaved v4 consumer checks `schema_version` before reading
+    // points (it may key points on the v4 field set, which two v5 points
+    // can now share while differing only in their `overlap`/
+    // `microbatches` schedule — a semantic change that forces the bump).
+    // The v5 document must (a) carry the version as a plain number a v4
+    // guard can compare against, and (b) still contain every v2, v3,
+    // *and* v4 point field under its old name, so a consumer that
+    // ignores the version reads consistent values rather than garbage —
+    // the new fields are additive.
     let json = run_sweep_json(&[
         "--models",
         "resnet152",
@@ -261,9 +267,9 @@ fn schema_v4_signals_v3_consumers_instead_of_silently_misparsing() {
         .get("schema_version")
         .and_then(Json::as_f64)
         .expect("version field must be a plain number");
-    assert_eq!(version, 4.0);
+    assert_eq!(version, 5.0);
+    assert_ne!(version, 4.0, "a v4 guard comparing against 4 must reject this doc");
     assert_ne!(version, 3.0, "a v3 guard comparing against 3 must reject this doc");
-    assert_ne!(version, 2.0, "a v2 guard comparing against 2 must reject this doc");
     const V2_POINT_FIELDS: [&str; 13] = [
         "workload",
         "wafer",
@@ -281,24 +287,37 @@ fn schema_v4_signals_v3_consumers_instead_of_silently_misparsing() {
     ];
     const V3_POINT_FIELDS: [&str; 4] =
         ["xwafer_topo", "wafer_span", "xwafer_latency_s", "global_pp"];
+    const V4_POINT_FIELDS: [&str; 4] =
+        ["global_mp", "span_mp_wafers", "span_dp_wafers", "span_pp_wafers"];
     for p in json.get("points").unwrap().as_arr().unwrap() {
         for field in V2_POINT_FIELDS {
-            assert!(p.get(field).is_some(), "v2 field `{field}` missing in v4 point");
+            assert!(p.get(field).is_some(), "v2 field `{field}` missing in v5 point");
         }
         for field in V3_POINT_FIELDS {
-            assert!(p.get(field).is_some(), "v3 field `{field}` missing in v4 point");
+            assert!(p.get(field).is_some(), "v3 field `{field}` missing in v5 point");
         }
-        // The v4 additions are present under *new* names (no v2/v3 field
-        // changed name), and default points still use a v3-legal span
-        // value — only opted-in sweeps emit the new span strings.
-        for field in ["global_mp", "span_mp_wafers", "span_dp_wafers", "span_pp_wafers"] {
-            assert!(p.get(field).is_some(), "v4 field `{field}` missing");
+        for field in V4_POINT_FIELDS {
+            assert!(p.get(field).is_some(), "v4 field `{field}` missing in v5 point");
         }
+        // The v5 additions are present under *new* names, and a default
+        // sweep emits the schedule a v4 document implicitly priced:
+        // overlap off at the workload's own microbatch count.
+        for field in ["overlap", "microbatches", "exposed_total_s"] {
+            assert!(p.get(field).is_some(), "v5 field `{field}` missing");
+        }
+        assert_eq!(p.get("overlap").and_then(Json::as_str), Some("off"));
         assert_eq!(p.get("wafer_span").and_then(Json::as_str), Some("dp"));
         // Span decomposition is self-consistent with the global dims.
         let n = |k: &str| p.get(k).unwrap().as_usize().unwrap();
         assert_eq!(n("span_mp_wafers") * n("span_dp_wafers") * n("span_pp_wafers"), 2);
         assert_eq!(n("global_mp") * n("global_dp") * n("global_pp"), n("total_npus"));
+        assert!(n("microbatches") >= 1);
+        // The exposure scalar closes the compute/total identity.
+        let f = |k: &str| p.get(k).unwrap().as_f64().unwrap();
+        assert!(
+            (f("compute_s") + f("exposed_total_s") - f("total_s")).abs()
+                <= 1e-12 * f("total_s")
+        );
     }
 }
 
@@ -454,6 +473,108 @@ fn egress_axis_sweep_is_byte_identical_at_any_thread_count() {
 }
 
 #[test]
+fn sweep_cli_prices_overlap_and_microbatch_axes() {
+    let json = run_sweep_json(&[
+        "--models",
+        "t17b",
+        "--wafers",
+        "2",
+        "--fabrics",
+        "fred-d",
+        "--max-strategies",
+        "2",
+        "--overlap",
+        "off,dp,full",
+        "--microbatches",
+        "2,8",
+    ]);
+    let points = json.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), 2 * 3 * 2, "strategies x overlaps x microbatches");
+    let mut totals: BTreeMap<(String, usize, String), f64> = BTreeMap::new();
+    for p in points {
+        assert_eq!(p.get("ok").and_then(Json::as_bool), Some(true));
+        let strategy = p.get("strategy").unwrap().as_str().unwrap().to_string();
+        let overlap = p.get("overlap").unwrap().as_str().unwrap().to_string();
+        let mb = p.get("microbatches").unwrap().as_usize().unwrap();
+        assert!(mb == 2 || mb == 8, "swept microbatch counts only, got {mb}");
+        totals.insert(
+            (strategy, mb, overlap),
+            p.get("total_s").unwrap().as_f64().unwrap(),
+        );
+    }
+    // Matched (strategy, microbatches): overlap can only help.
+    for ((strategy, mb, overlap), &t_off) in &totals {
+        if overlap != "off" {
+            continue;
+        }
+        let t_dp = totals[&(strategy.clone(), *mb, "dp".to_string())];
+        let t_full = totals[&(strategy.clone(), *mb, "full".to_string())];
+        assert!(t_full <= t_off, "{strategy} mb{mb}: full {t_full} > off {t_off}");
+        assert!(
+            t_dp <= t_off * (1.0 + 1e-9),
+            "{strategy} mb{mb}: dp {t_dp} > off {t_off}"
+        );
+    }
+}
+
+/// The refactor's correctness wall: the `--overlap off` sweep output over
+/// the full axis grid (fleet sizes × egress topologies × wafer spans ×
+/// fabrics × a stationary and a streaming workload) is byte-identical at
+/// any `--threads` count and pinned against the committed golden file at
+/// `tests/data/golden_overlap_off.json`. The golden seeds itself on the
+/// first run of a fresh checkout (the timeline refactor preserved the
+/// legacy pricing by construction: every overlap-off phase contributes
+/// the exact f64 the pre-refactor summation computed, folded in the same
+/// order); once seeded, any pricing drift fails the comparison. Delete
+/// the file to re-seed after an *intentional* pricing change.
+#[test]
+fn overlap_off_grid_matches_the_committed_golden_at_any_thread_count() {
+    let args = [
+        "--models",
+        "resnet152,gpt3",
+        "--wafers",
+        "5x4,1,2,4",
+        "--fabrics",
+        "fred-a,fred-d",
+        "--max-strategies",
+        "3",
+        "--xwafer-topo",
+        "ring,tree,dragonfly",
+        "--span",
+        "dp,pp,mp,2x2",
+        "--overlap",
+        "off",
+        "--json",
+    ];
+    let with_threads = |n: &'static str| -> Vec<&'static str> {
+        let mut v = args.to_vec();
+        v.push("--threads");
+        v.push(n);
+        v
+    };
+    let t1 = run_sweep_stdout(&with_threads("1"), &[]);
+    let t4 = run_sweep_stdout(&with_threads("4"), &[]);
+    assert_eq!(t1, t4, "--overlap off grid must be thread-deterministic");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/data");
+    let path = dir.join("golden_overlap_off.json");
+    if !path.exists() {
+        std::fs::create_dir_all(&dir).expect("create tests/data");
+        std::fs::write(&path, &t1).expect("seed golden file");
+        eprintln!("seeded golden {} ({} bytes)", path.display(), t1.len());
+        return;
+    }
+    let golden = std::fs::read(&path).expect("read golden file");
+    assert!(
+        golden == t1,
+        "--overlap off output drifted from {} ({} vs {} bytes); if the pricing \
+         change is intentional, delete the golden file to re-seed it",
+        path.display(),
+        golden.len(),
+        t1.len()
+    );
+}
+
+#[test]
 fn sweep_cli_scales_to_sixteen_wafer_fleets() {
     // The acceptance sweep: fleet sizes 1,2,4,8,16 end to end, with
     // global strategy/minibatch accounting and the scale-out JSON fields.
@@ -467,7 +588,7 @@ fn sweep_cli_scales_to_sixteen_wafer_fleets() {
         "--max-strategies",
         "2",
     ]);
-    assert_eq!(json.get("schema_version").and_then(Json::as_usize), Some(4));
+    assert_eq!(json.get("schema_version").and_then(Json::as_usize), Some(5));
     let points = json.get("points").unwrap().as_arr().unwrap();
     assert_eq!(points.len(), 10, "2 strategies x 5 fleet sizes");
     let mut fleets: Vec<usize> = points
