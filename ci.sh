@@ -31,7 +31,7 @@ target/release/fred sweep --wafers 4 --models resnet152 --max-strategies 6 \
     --json --out /tmp/sweep.json > /tmp/sweep.stdout.json
 cmp /tmp/sweep.json /tmp/sweep.stdout.json
 test -s /tmp/sweep.json
-grep -q '"schema_version":5' /tmp/sweep.json
+grep -q '"schema_version":6' /tmp/sweep.json
 grep -q '"wafer_span":"dp"' /tmp/sweep.json
 grep -q '"wafer_span":"2x2"' /tmp/sweep.json
 rm -f /tmp/sweep.json /tmp/sweep.stdout.json
@@ -43,7 +43,7 @@ target/release/fred sweep --wafers 4 --models resnet152 --max-strategies 4 \
     --xwafer-topo tree --span pp \
     --json --out /tmp/sweep_pp.json > /tmp/sweep_pp.stdout.json
 cmp /tmp/sweep_pp.json /tmp/sweep_pp.stdout.json
-grep -q '"schema_version":5' /tmp/sweep_pp.json
+grep -q '"schema_version":6' /tmp/sweep_pp.json
 grep -q '"xwafer_topo":"tree"' /tmp/sweep_pp.json
 grep -q '"wafer_span":"pp"' /tmp/sweep_pp.json
 rm -f /tmp/sweep_pp.json /tmp/sweep_pp.stdout.json
@@ -55,23 +55,50 @@ target/release/fred sweep --wafers 4 --xwafer-topo tree --span mp \
     --models resnet152 --max-strategies 4 \
     --json --out /tmp/sweep_mp.json > /tmp/sweep_mp.stdout.json
 cmp /tmp/sweep_mp.json /tmp/sweep_mp.stdout.json
-grep -q '"schema_version":5' /tmp/sweep_mp.json
+grep -q '"schema_version":6' /tmp/sweep_mp.json
 grep -q '"wafer_span":"mp"' /tmp/sweep_mp.json
 grep -q '"global_mp"' /tmp/sweep_mp.json
 rm -f /tmp/sweep_mp.json /tmp/sweep_mp.stdout.json
 
-echo "== overlap/microbatch smoke (schema v5 schedule axes) =="
+echo "== overlap/microbatch smoke (overlap axes) =="
 # ISSUE 5's headline path: the phase-timeline engine's full-overlap
 # schedule and a microbatch override, end to end through the real binary.
 target/release/fred sweep --wafers 2 --models t17b --max-strategies 4 \
     --overlap full --microbatches 8 \
     --json --out /tmp/sweep_ov.json > /tmp/sweep_ov.stdout.json
 cmp /tmp/sweep_ov.json /tmp/sweep_ov.stdout.json
-grep -q '"schema_version":5' /tmp/sweep_ov.json
+grep -q '"schema_version":6' /tmp/sweep_ov.json
 grep -q '"overlap":"full"' /tmp/sweep_ov.json
 grep -q '"microbatches":8' /tmp/sweep_ov.json
 grep -q '"exposed_total_s"' /tmp/sweep_ov.json
 rm -f /tmp/sweep_ov.json /tmp/sweep_ov.stdout.json
+
+echo "== pipeline-schedule smoke (schema v6 stage-graph axis) =="
+# ISSUE 6's headline path: 1F1B and zero-bubble schedules priced by the
+# stage-graph engine on a PP-spanning fleet, end to end through the real
+# binary at schema v6.
+target/release/fred sweep --wafers 2 --models t17b --max-strategies 4 \
+    --span pp --schedule 1f1b,zb \
+    --json --out /tmp/sweep_sched.json > /tmp/sweep_sched.stdout.json
+cmp /tmp/sweep_sched.json /tmp/sweep_sched.stdout.json
+grep -q '"schema_version":6' /tmp/sweep_sched.json
+grep -q '"schedule":"1f1b"' /tmp/sweep_sched.json
+grep -q '"schedule":"zb"' /tmp/sweep_sched.json
+grep -q '"vstages"' /tmp/sweep_sched.json
+rm -f /tmp/sweep_sched.json /tmp/sweep_sched.stdout.json
+
+echo "== gpipe golden gate (--schedule gpipe == the default, byte for byte) =="
+# The refactor's acceptance wall: routing the default sweep through the
+# stage-graph engine must not change a single byte relative to an
+# explicit --schedule gpipe, at several thread counts.
+GOLDEN_ARGS=(--wafers 1,2 --models resnet152,t17b --max-strategies 4 \
+    --span dp,pp --json)
+target/release/fred sweep "${GOLDEN_ARGS[@]}" --threads 1 > /tmp/gp_default.json
+target/release/fred sweep "${GOLDEN_ARGS[@]}" --schedule gpipe --threads 1 > /tmp/gp_explicit.json
+target/release/fred sweep "${GOLDEN_ARGS[@]}" --schedule gpipe --threads 4 > /tmp/gp_threaded.json
+cmp /tmp/gp_default.json /tmp/gp_explicit.json
+cmp /tmp/gp_default.json /tmp/gp_threaded.json
+rm -f /tmp/gp_default.json /tmp/gp_explicit.json /tmp/gp_threaded.json
 
 echo "== merge round-trip (sweep -> split -> merge -> cmp) =="
 # Shard the same grid on the fleet axis, merge the shards, and require
@@ -96,12 +123,15 @@ rm -f /tmp/merge_all.json /tmp/merge_s1.json /tmp/merge_s2.json \
 echo "== sweep determinism gate (--threads 1 vs --threads 4) =="
 # Byte-identity at any thread count, enforced in CI on the full span axis
 # (dp, pp, mp, and a mixed 2x2 span) *and* the schedule axes (overlap
-# modes x microbatch override) — not just in the test suite.
+# modes x microbatch override x pipeline schedules) — not just in the
+# test suite.
 target/release/fred sweep --wafers 1,2,4 --models resnet152 --max-strategies 4 \
     --span dp,pp,mp,2x2 --overlap off,dp,full --microbatches 4 \
+    --schedule gpipe,1f1b,zb \
     --threads 1 --json > /tmp/sweep_t1.json
 target/release/fred sweep --wafers 1,2,4 --models resnet152 --max-strategies 4 \
     --span dp,pp,mp,2x2 --overlap off,dp,full --microbatches 4 \
+    --schedule gpipe,1f1b,zb \
     --threads 4 --json > /tmp/sweep_t4.json
 cmp /tmp/sweep_t1.json /tmp/sweep_t4.json
 rm -f /tmp/sweep_t1.json /tmp/sweep_t4.json

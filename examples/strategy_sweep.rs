@@ -22,11 +22,16 @@
 //!    hiding the cross-wafer gradient All-Reduce behind backward compute
 //!    is capped by the backward window, so the saving should peak on
 //!    egress-starved operating points and vanish on fat ones.
+//! 6. which *pipeline schedule* wins where (`--schedule gpipe,1f1b,zb`)
+//!    — a flush schedule's bubble grows with pipeline depth at fixed
+//!    microbatches, so 1F1B's advantage over GPipe must widen as stages
+//!    are added, and zero-bubble must never trail 1F1B.
 //!
 //! Run: `cargo run --release --example strategy_sweep`
 
 use fred::coordinator::config::FabricKind;
-use fred::coordinator::parallelism::WaferSpan;
+use fred::coordinator::parallelism::{Strategy, WaferSpan};
+use fred::coordinator::stagegraph::PipeSchedule;
 use fred::coordinator::sweep::{run_sweep, SweepConfig, WaferDims};
 use fred::coordinator::timeline::OverlapMode;
 use fred::coordinator::workload;
@@ -256,10 +261,68 @@ fn main() {
         "overlap must pay most on the starved egress ({savings:?})"
     );
 
+    // ------- schedule crossover: gpipe vs 1f1b vs zb over pipeline depth
+    println!(
+        "\n== schedule crossover: gpipe vs 1f1b vs zb, Transformer-17B at pp=2,4,5,10 ==\n"
+    );
+    // The stage-graph engine's question: how much of the flush bubble do
+    // the steadier schedules claw back, and how does that scale with
+    // depth? GPipe idles `p - 1` of `mb + p - 1` slots, so at fixed
+    // microbatches its bubble — and therefore 1F1B's advantage — must
+    // grow monotonically with the stage count; zero-bubble fills the
+    // drain with weight-gradient work and can only extend the saving.
+    let depths = [2usize, 4, 5, 10];
+    let sched_cfg = SweepConfig {
+        workloads: vec![workload::transformer_17b()],
+        wafers: vec![WaferDims::PAPER],
+        // One strategy per pipeline depth, all exact 20-worker covers.
+        strategies: Some(depths.iter().map(|&p| Strategy::new(1, 20 / p, p)).collect()),
+        schedules: vec![PipeSchedule::GPipe, PipeSchedule::OneF1B, PipeSchedule::Zb],
+        fabrics: vec![FabricKind::FredD],
+        bench_bytes: 100e6,
+        ..SweepConfig::default()
+    };
+    let sched = run_sweep(&sched_cfg);
+    let at = |p: usize, s: PipeSchedule| -> f64 {
+        sched
+            .points
+            .iter()
+            .filter(|q| q.strategy.pp == p && q.schedule == s)
+            .filter_map(|q| q.outcome.as_ref().ok())
+            .map(|m| m.breakdown.total())
+            .fold(f64::INFINITY, f64::min)
+    };
+    let mut last_adv = 0.0;
+    for &p in &depths {
+        let g = at(p, PipeSchedule::GPipe);
+        let f = at(p, PipeSchedule::OneF1B);
+        let z = at(p, PipeSchedule::Zb);
+        let adv = g - f;
+        println!(
+            "pp={p:>2}: gpipe {} | 1f1b {} | zb {}  (1f1b saves {}, {:.1}% of gpipe)",
+            fmt_time(g),
+            fmt_time(f),
+            fmt_time(z),
+            fmt_time(adv),
+            100.0 * adv / g
+        );
+        // The schedule story the sweep must reproduce: at fixed
+        // microbatches the flush bubble deepens with the pipeline, so
+        // 1F1B's absolute saving strictly grows with the stage count,
+        // and zero-bubble never trails 1F1B.
+        assert!(
+            adv > last_adv,
+            "1F1B's advantage must grow with pipeline depth (pp={p}: {adv} <= {last_adv})"
+        );
+        assert!(z <= f, "pp={p}: zb {z} > 1f1b {f}");
+        last_adv = adv;
+    }
+
     println!(
         "\nmachine-readable: `fred sweep --models gpt3 --wafers 1,2,4,8,16 \
          --fabrics fred-d --xwafer-bw 1152,2304 --xwafer-topo ring,tree,dragonfly \
-         --span dp,pp,mp,2x2 --overlap off,full --microbatches 2,8 --json \
+         --span dp,pp,mp,2x2 --overlap off,full --microbatches 2,8 \
+         --schedule gpipe,1f1b,zb --json \
          --out sweep.json`; shard across machines and recombine with \
          `fred merge shard1.json shard2.json --out sweep.json`"
     );

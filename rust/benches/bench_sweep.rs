@@ -17,10 +17,12 @@
 
 use fred::coordinator::config::FabricKind;
 use fred::coordinator::parallelism::WaferSpan;
+use fred::coordinator::stagegraph::PipeSchedule;
 use fred::coordinator::sweep::{factorizations, run_sweep, SweepConfig, WaferDims};
 use fred::coordinator::timeline::OverlapMode;
 use fred::coordinator::workload;
 use fred::fabric::egress::EgressTopo;
+use fred::runtime::json::Json;
 use fred::util::table::Table;
 use std::time::Instant;
 
@@ -116,6 +118,27 @@ fn main() {
             },
         ),
         (
+            "t17b | 2W(pp) x 4 schedules | fred-d | 6 strat",
+            // The ISSUE 6 axis in isolation: 1f1b / interleaved / zb
+            // build and schedule the per-microbatch stage graph (O(mb x
+            // stages x chunks) phases through the lane scheduler's
+            // quadratic selection loop) where gpipe stays closed-form,
+            // so points/s here shows what stage-graph pricing costs the
+            // engine.
+            {
+                let mut c = cfg(
+                    vec![workload::transformer_17b()],
+                    vec![WaferDims::PAPER],
+                    vec![FabricKind::FredD],
+                    6,
+                );
+                c.wafer_counts = vec![2];
+                c.wafer_spans = vec![WaferSpan::Pp];
+                c.schedules = PipeSchedule::all().to_vec();
+                c
+            },
+        ),
+        (
             "t17b | 4W x mp + 2x2 span | fred-d | 6 strat",
             // The ISSUE 4 axis in isolation: per-layer egress All-Reduces
             // (MP span) and the two-dimensional mixed span are the most
@@ -139,6 +162,7 @@ fn main() {
     ];
 
     let mut table = Table::new(&["sweep", "points", "feasible", "wall", "points/s"]);
+    let mut json_cases: Vec<Json> = Vec::new();
     for (name, cfg) in cases {
         let t0 = Instant::now();
         let report = run_sweep(&cfg);
@@ -152,9 +176,27 @@ fn main() {
             format!("{:.2} s", dt),
             format!("{:.1}", n as f64 / dt),
         ]);
+        json_cases.push(Json::obj(vec![
+            ("name", Json::Str(name.to_string())),
+            ("points", Json::Num(n as f64)),
+            ("feasible", Json::Num(feasible as f64)),
+            ("wall_s", Json::Num(dt)),
+            ("points_per_s", Json::Num(n as f64 / dt)),
+        ]));
         assert!(feasible > 0, "{name}: no feasible points");
     }
     table.print();
+    // Machine-readable throughput record for regression tracking: one
+    // entry per case, points/s being the headline number.
+    let bench_doc = Json::obj(vec![
+        ("bench", Json::Str("sweep".to_string())),
+        ("cases", Json::Arr(json_cases)),
+    ]);
+    let bench_path = "BENCH_sweep.json";
+    match std::fs::write(bench_path, format!("{}\n", bench_doc.render())) {
+        Ok(()) => println!("(wrote {bench_path})"),
+        Err(e) => eprintln!("(cannot write {bench_path}: {e})"),
+    }
 
     // ------------------------------------------------ threaded executor
     // The cross-product now includes the egress axes (topology x span),

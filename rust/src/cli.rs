@@ -2,8 +2,8 @@
 
 use crate::coordinator::{
     config::FabricKind, metrics::CommType, parallelism::Strategy, parallelism::WaferSpan,
-    placement, placement::Placement, sim::Simulator, sweep, sweep::SweepConfig,
-    sweep::WaferDims, timeline::OverlapMode, workload::Workload,
+    placement, placement::Placement, sim::Simulator, stagegraph::PipeSchedule, sweep,
+    sweep::SweepConfig, sweep::WaferDims, timeline::OverlapMode, workload::Workload,
 };
 use crate::fabric::egress::EgressTopo;
 use crate::fabric::fred::hw_model::HwOverhead;
@@ -55,6 +55,7 @@ COMMANDS:
                [--xwafer-bw GBPS[,GBPS..]] [--xwafer-latency NS[,NS..]]
                [--xwafer-topo ring,tree,dragonfly] [--span dp,pp,mp,PPxDP]
                [--overlap off,dp,full] [--microbatches N[,N..]]
+               [--schedule gpipe,1f1b,interleaved,zb] [--vstages N]
                [--threads N] [--top N] [--bytes N] [--json] [--out FILE]
                Strategy/topology sweep engine: enumerates fabric x wafer
                shape x fleet size x MP/DP/PP factorization x workload,
@@ -105,8 +106,8 @@ COMMANDS:
                give several values to sweep the egress operating point.
                JSON points carry the span decomposition (`wafer_span`,
                `global_mp`/`global_dp`/`global_pp`, `span_*_wafers`) and
-               the schedule axes (`overlap`, `microbatches`,
-               `exposed_total_s`) at `schema_version: 5`.
+               the schedule axes (`overlap`, `microbatches`, `schedule`,
+               `vstages`, `exposed_total_s`) at `schema_version: 6`.
 
                ## Overlap
                An iteration is priced by the phase-timeline engine: every
@@ -141,16 +142,55 @@ COMMANDS:
                `--microbatches` overrides each workload's Table V
                microbatch count (sweepable): more microbatches shrink
                pipeline bubbles and DP-overlap windows per bucket.
+
+               ## Schedules
+               `--schedule` picks how microbatches move through the
+               pipeline stages (give several to sweep the axis). Each
+               schedule is priced by building the per-microbatch stage
+               graph — every forward/backward phase of every microbatch
+               on its stage, with its dependencies — and running it
+               through the timeline engine's deterministic list
+               scheduler, so bubbles emerge from phase ordering instead
+               of closed-form fractions:
+                 gpipe        flush schedule, `mb + stages - 1` slots;
+                              the default, bit-identical to the analytic
+                              closed-form pricing at any thread count.
+                 1f1b         one-forward-one-backward: steady state
+                              holds one in-flight microbatch per stage,
+                              and stage boundaries are paid per
+                              microbatch rather than per slot. Never
+                              prices worse than gpipe.
+                 interleaved  virtual pipeline stages: each physical
+                              stage holds `--vstages` chunks (default
+                              2), shrinking the warmup/drain bubble by
+                              the interleaving depth while multiplying
+                              boundary traffic by it. Needs --vstages
+                              >= 2, dividing each model's layer count;
+                              clamped per point to the layers a stage
+                              actually holds.
+                 zb           zero-bubble: backward is split into its
+                              input-gradient and weight-gradient
+                              halves, and the weight half fills the
+                              drain bubble. Never prices worse than
+                              1f1b (so `zb <= 1f1b <= gpipe` holds on
+                              every point).
+               Single-stage pipelines (global PP = 1) price identically
+               under every schedule, and weight-streaming workloads
+               (gpt3, t1t) are schedule-invariant by construction: the
+               streaming engine already pays stage boundaries per
+               microbatch and double-buffers layer slices, so there is
+               no warmup/drain bubble for a schedule to shrink.
                Example: fred sweep --wafers 1,2,4,8 --models gpt3
                         --fabrics fred-d --xwafer-bw 1152,2304
                         --xwafer-topo ring,tree --span dp,pp,mp,2x4
-                        --overlap off,full --microbatches 2,8 --json
+                        --overlap off,full --microbatches 2,8
+                        --schedule gpipe,1f1b,zb --json
   merge        FILE [FILE..] [--out FILE]
                Merge several `fred sweep --json` documents (a sweep
                sharded across machines: shard on disjoint fleet sizes,
                workloads, or bandwidths) into one re-ranked document on
                stdout (and --out FILE). All inputs must carry the current
-               `schema_version` (5) — mismatches are rejected, never
+               `schema_version` (6) — mismatches are rejected, never
                silently mixed. Merging the shards of a split grid
                reproduces the unsharded sweep byte for byte when the
                shards use explicit --strategies (or an uncapped
@@ -440,6 +480,54 @@ fn cmd_sweep(opts: &Opts) -> i32 {
             }
         }
     }
+    // Pipeline schedules: --schedule gpipe,1f1b,interleaved,zb (the
+    // stage-graph pricing axis; gpipe is the analytic default).
+    let mut schedules = Vec::new();
+    if let Some(list) = opts.get("schedule") {
+        for t in comma_list(list) {
+            match PipeSchedule::parse(t) {
+                Some(s) => schedules.push(s),
+                None => {
+                    eprintln!("bad --schedule `{t}` (gpipe, 1f1b, interleaved, zb)");
+                    return 2;
+                }
+            }
+        }
+    }
+    // Interleaving depth: virtual stages per physical pipeline stage.
+    let vstages: usize = match opts.get("vstages") {
+        None => 2,
+        Some(t) => match t.parse::<usize>() {
+            Ok(n) if n >= 1 && t.bytes().all(|c| c.is_ascii_digit()) => n,
+            _ => {
+                eprintln!("bad --vstages `{t}` (expected an integer >= 1)");
+                return 2;
+            }
+        },
+    };
+    // An interleaved sweep with a depth the models cannot realize would
+    // silently degenerate (the per-point clamp folds it back to fewer
+    // virtual stages); make the inconsistency loud instead.
+    if schedules.contains(&PipeSchedule::Interleaved) {
+        if vstages < 2 {
+            eprintln!(
+                "--schedule interleaved needs --vstages >= 2 (got {vstages}): one virtual \
+                 stage per physical stage is just 1f1b"
+            );
+            return 2;
+        }
+        for w in &workloads {
+            if w.layers.len() % vstages != 0 {
+                eprintln!(
+                    "--vstages {vstages} does not divide {}'s {} layers: interleaved \
+                     virtual stages must tile each model's layer stack evenly",
+                    w.name,
+                    w.layers.len()
+                );
+                return 2;
+            }
+        }
+    }
     // Fabrics: --fabrics all | baseline,fred-a,...
     let fabrics_arg = opts.get("fabrics").or_else(|| opts.get("fabric")).unwrap_or("all");
     let fabrics: Vec<FabricKind> = if fabrics_arg == "all" {
@@ -505,6 +593,8 @@ fn cmd_sweep(opts: &Opts) -> i32 {
         strategies,
         overlaps,
         microbatches,
+        schedules,
+        vstages,
         max_strategies,
         bench_bytes,
         threads,

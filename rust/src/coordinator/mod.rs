@@ -10,7 +10,11 @@
 //!   activation models.
 //! * [`schedule`] — the training-iteration schedule: weight-stationary
 //!   and weight-streaming execution modes (Sec. III-A), GPipe-style
-//!   microbatch pipelining.
+//!   microbatch pipelining (the analytic closed forms, kept as the
+//!   GPipe test oracle).
+//! * [`stagegraph`] — microbatch-level pipeline stage graphs: the
+//!   `--schedule` axis (gpipe / 1f1b / interleaved / zb) priced by a
+//!   deterministic per-stage-lane list scheduler.
 //! * [`timeline`] — the phase-timeline engine: an iteration as explicit
 //!   resource-tagged phases priced by one deterministic list scheduler
 //!   (per-resource serialization; the `--overlap` axis).
@@ -28,6 +32,7 @@ pub mod parallelism;
 pub mod placement;
 pub mod schedule;
 pub mod sim;
+pub mod stagegraph;
 pub mod sweep;
 pub mod timeline;
 pub mod workload;
@@ -37,6 +42,7 @@ pub use metrics::{Breakdown, CommType};
 pub use parallelism::{ScaledStrategy, Strategy, WaferSpan};
 pub use placement::Placement;
 pub use sim::Simulator;
+pub use stagegraph::PipeSchedule;
 pub use sweep::{SweepConfig, SweepReport, WaferDims};
 pub use timeline::OverlapMode;
 pub use workload::Workload;

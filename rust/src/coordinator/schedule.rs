@@ -60,12 +60,28 @@ pub fn stage_ranges(starts: &[usize], n_layers: usize) -> Vec<(usize, usize)> {
 }
 
 /// GPipe slot count: a flush schedule runs `mb + stages − 1` slots.
+///
+/// Domain: `microbatches >= 1` and `stages >= 1` (asserted — zero
+/// microbatches used to underflow silently). This closed form is the
+/// **GPipe test oracle** for the stage-graph pricing path
+/// ([`stagegraph`](super::stagegraph)): `--schedule gpipe` must agree
+/// with it bit-for-bit, and `tests/prop_schedule.rs` holds it to that.
 pub fn pipeline_slots(microbatches: usize, stages: usize) -> usize {
+    assert!(
+        microbatches >= 1 && stages >= 1,
+        "pipeline_slots domain: microbatches >= 1 (got {microbatches}), stages >= 1 (got {stages})"
+    );
     microbatches + stages - 1
 }
 
 /// Bubble fraction `(p−1)/(mb+p−1)` (Sec. VII-C picks mb to keep this
 /// small: 8 microbatches at pp=2 ⇒ 1/9).
+///
+/// Domain: `microbatches >= 1` and `stages >= 1` (asserted, via
+/// [`pipeline_slots`] — zero stages used to return garbage like `-inf`
+/// instead of failing loudly). Kept exported as the GPipe test oracle;
+/// the pricing path itself now goes through
+/// [`stagegraph::price_schedule`](super::stagegraph::price_schedule).
 pub fn bubble_fraction(microbatches: usize, stages: usize) -> f64 {
     (stages as f64 - 1.0) / pipeline_slots(microbatches, stages) as f64
 }
@@ -196,6 +212,18 @@ mod tests {
         assert!((bubble_fraction(8, 2) - 1.0 / 9.0).abs() < 1e-12);
         assert_eq!(pipeline_slots(1, 1), 1);
         assert_eq!(bubble_fraction(1, 1), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "pipeline_slots domain")]
+    fn zero_microbatches_is_out_of_domain() {
+        pipeline_slots(0, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "pipeline_slots domain")]
+    fn zero_stages_is_out_of_domain() {
+        bubble_fraction(8, 0);
     }
 
     #[test]

@@ -42,6 +42,7 @@ use super::metrics::{Breakdown, CommType};
 use super::parallelism::{ScaledStrategy, Strategy, WaferSpan};
 use super::placement::Placement;
 use super::schedule;
+use super::stagegraph::{self, PipeSchedule, StageCosts};
 use super::timeline::{Bucket, OverlapMode, Resource, Step, Timeline};
 use super::workload::{ExecMode, Workload};
 use crate::fabric::egress::{onwafer_phase_time, P2pFlow};
@@ -70,6 +71,14 @@ pub struct Simulator {
     /// with compute (the `--overlap` axis). Defaults to the workload's
     /// legacy `overlap_dp` flag mapping.
     overlap: OverlapMode,
+    /// The pipeline schedule (the `--schedule` axis). The default,
+    /// [`PipeSchedule::GPipe`], prices bit-identically to the
+    /// pre-schedule analytic path.
+    schedule: PipeSchedule,
+    /// Virtual stages per physical stage for
+    /// [`PipeSchedule::Interleaved`] (clamped per point to the layers a
+    /// stage actually holds); ignored by the other schedules.
+    vstages: usize,
 }
 
 impl Simulator {
@@ -111,6 +120,8 @@ impl Simulator {
             scaleout: ScaleOut::single(),
             span: WaferSpan::Dp,
             overlap,
+            schedule: PipeSchedule::GPipe,
+            vstages: 1,
         }
     }
 
@@ -163,6 +174,29 @@ impl Simulator {
     pub fn with_overlap(mut self, overlap: OverlapMode) -> Self {
         self.overlap = overlap;
         self
+    }
+
+    /// Choose the pipeline schedule and (for
+    /// [`PipeSchedule::Interleaved`]) the virtual-stage count. The
+    /// default GPipe schedule keeps the analytic pricing path bit for
+    /// bit; `vstages` is clamped per point to the layers-per-stage the
+    /// partition actually produces, so any `>= 1` value is safe here —
+    /// the CLI applies the stricter divisibility validation.
+    pub fn with_schedule(mut self, schedule: PipeSchedule, vstages: usize) -> Self {
+        assert!(vstages >= 1, "vstages must be >= 1 (got {vstages})");
+        self.schedule = schedule;
+        self.vstages = vstages;
+        self
+    }
+
+    /// The active pipeline schedule.
+    pub fn schedule(&self) -> PipeSchedule {
+        self.schedule
+    }
+
+    /// The requested interleaving depth (pre-clamp).
+    pub fn vstages(&self) -> usize {
+        self.vstages
     }
 
     /// The active overlap mode.
@@ -478,7 +512,6 @@ impl Simulator {
         let flops: Vec<f64> = w.layers.iter().map(|l| l.fwd_flops).collect();
         let starts = schedule::partition_stages(&flops, pp_global.min(w.layers.len()));
         let ranges = schedule::stage_ranges(&starts, w.layers.len());
-        let slots = schedule::pipeline_slots(mb, pp_global) as f64;
 
         // Per-stage per-microbatch compute & MP comm (fwd).
         let mut f_comp_max = 0.0_f64;
@@ -497,35 +530,53 @@ impl Simulator {
             if mp_global > 1 {
                 for l in &w.layers[a..b] {
                     if l.mp_collectives > 0 {
-                        let t = self.try_hier_mp_round(l.act_bytes * mb_samples)?;
+                        let t = self.try_hier_mp_round(l.microbatch_act_bytes(mb_samples))?;
                         mp += t * l.mp_collectives as f64;
                     }
                 }
             }
             f_mp_max = f_mp_max.max(mp);
             if si + 1 < ranges.len() {
-                boundary_act = boundary_act.max(w.layers[b - 1].act_bytes * mb_samples);
+                boundary_act = boundary_act.max(w.layers[b - 1].microbatch_act_bytes(mb_samples));
             }
         }
 
-        // Pipeline totals; bwd compute = 2× fwd, bwd MP comm = fwd MP.
+        // Pipeline totals priced by the stage-graph engine
+        // ([`stagegraph::price_schedule`]): bwd compute = 2× fwd, bwd MP
+        // comm = fwd MP, boundary transfers 2× per crossing. The GPipe
+        // arm (and any 1-stage pipeline) is the legacy analytic closed
+        // form verbatim — bit-identical to the pre-schedule pricing —
+        // while 1f1b / interleaved / zb derive their makespans from the
+        // per-microbatch dependency graph on per-stage NPU lanes.
         // MP All-Reduces are *blocking* (activation sync on the layer
-        // critical path), so they stay serial in every overlap mode.
-        let compute = slots * (f_comp_max + 2.0 * f_comp_max);
-        let mp_exposed = slots * (f_mp_max + f_mp_max);
+        // critical path), so they stay serial in every overlap mode;
+        // boundary flows are the p2p egress flows they actually cross
+        // under PP/Mixed spans (`try_pp_round`), wafer-local otherwise.
+        let boundary = if pp_global > 1 { self.try_pp_round(boundary_act)? } else { 0.0 };
+        // Interleaving cannot split a stage finer than the layers it
+        // actually holds.
+        let stage_layers = ranges.iter().map(|&(a, b)| b - a).min().unwrap_or(1).max(1);
+        let costs = StageCosts { fwd_comp: f_comp_max, fwd_mp: f_mp_max, boundary };
+        let price = stagegraph::price_schedule(
+            self.schedule,
+            pp_global,
+            mb,
+            self.vstages.min(stage_layers),
+            &costs,
+        );
+        let compute = price.compute;
         tl.serial_compute(compute);
         let mp_resource = if self.span.mp_factor(self.scaleout.wafers()) > 1 {
             Resource::Egress
         } else {
             Resource::OnWafer
         };
-        tl.serial_comm(CommType::Mp, mp_resource, mp_exposed);
+        tl.serial_comm(CommType::Mp, mp_resource, price.mp);
 
-        // PP boundary transfers: fwd activation + bwd gradient per slot
-        // (under a PP span this includes the cross-wafer boundary flows);
-        // in-slot handoffs, so critical-path serial.
+        // PP boundary transfers: fwd activation + bwd gradient (under a
+        // PP span these are the cross-wafer boundary flows); in-slot
+        // handoffs, so critical-path serial.
         if pp_global > 1 {
-            let t = self.try_pp_round(boundary_act)?;
             // Boundary flows cross the egress fabric only when the span
             // puts a PP factor on the wafer dimension; under DP/MP spans
             // every pipeline copy is wafer-local.
@@ -534,7 +585,7 @@ impl Simulator {
             } else {
                 Resource::OnWafer
             };
-            tl.serial_comm(CommType::Pp, pp_resource, slots * 2.0 * t);
+            tl.serial_comm(CommType::Pp, pp_resource, price.pp);
         }
 
         // DP gradient All-Reduce, bucketed: an Overlapped step released
@@ -569,6 +620,16 @@ impl Simulator {
         Ok(tl)
     }
 
+    /// Weight-streaming iteration. The `--schedule` axis is a no-op
+    /// here *by construction*, not by omission: the streaming stage
+    /// timeline already charges every boundary crossing per microbatch
+    /// (`2 · mb` egress rounds below — the same per-microbatch
+    /// semantics the stage graph gives 1F1B/ZB), and the layer groups
+    /// double-buffer through the wafer every slice, so there are no
+    /// warmup/drain slots for a schedule to reorder. All schedules
+    /// therefore price identically on streaming workloads
+    /// (`tests/prop_schedule.rs` pins this), which also keeps
+    /// `--schedule gpipe` bit-identical on them.
     fn try_iterate_streaming(&self) -> Result<Breakdown, FluidError> {
         let w = &self.workload;
         let s = &self.strategy;
@@ -667,7 +728,7 @@ impl Simulator {
                     if mp_global > 1 {
                         for l in &layers[a..b] {
                             if l.mp_collectives > 0 {
-                                mp += self.try_hier_mp_round(l.act_bytes * mb_samples)?
+                                mp += self.try_hier_mp_round(l.microbatch_act_bytes(mb_samples))?
                                     * l.mp_collectives as f64
                                     * mb as f64;
                             }
@@ -677,7 +738,7 @@ impl Simulator {
                     // group (slice-boundary handoffs are priced over the
                     // egress fabric below).
                     let pp = if s.pp > 1 {
-                        self.try_pp_round_onwafer(layers[b - 1].act_bytes * mb_samples)?
+                        self.try_pp_round_onwafer(layers[b - 1].microbatch_act_bytes(mb_samples))?
                             * mb as f64
                     } else {
                         0.0
@@ -747,7 +808,7 @@ impl Simulator {
             let dp_blocks = self.span.dp_factor(wafers);
             let mut flows: Vec<P2pFlow> = Vec::new();
             for (k, pair) in slices.windows(2).enumerate() {
-                let act = layers[pair[0].1 - 1].act_bytes * mb_samples;
+                let act = layers[pair[0].1 - 1].microbatch_act_bytes(mb_samples);
                 for block in 0..dp_blocks {
                     flows.push(P2pFlow::new(
                         block * pp_factor + k,
@@ -946,6 +1007,84 @@ mod tests {
         // C and D must beat the baseline; D must be the best.
         assert!(totals[3] < totals[0], "{totals:?}");
         assert!(totals[4] <= totals[3] * 1.001, "{totals:?}");
+    }
+
+    #[test]
+    fn gpipe_schedule_is_the_default_pricing_path_bit_for_bit() {
+        // `--schedule gpipe` and the no-schedule default must be the
+        // same f64s everywhere: stationary with PP (T-17B), stationary
+        // without PP (ResNet), and streaming (GPT-3).
+        for w in [workload::resnet152(), workload::transformer_17b(), workload::gpt3()] {
+            let s = w.default_strategy;
+            let base = Simulator::new(FabricKind::FredD, w.clone(), s).iterate();
+            let g = Simulator::new(FabricKind::FredD, w.clone(), s)
+                .with_schedule(PipeSchedule::GPipe, 1)
+                .iterate();
+            assert_eq!(base.compute.to_bits(), g.compute.to_bits(), "{}", w.name);
+            for t in CommType::all() {
+                assert_eq!(base.get(t).to_bits(), g.get(t).to_bits(), "{} {}", w.name, t.name());
+            }
+        }
+    }
+
+    #[test]
+    fn schedules_order_on_a_pipelined_stationary_workload() {
+        let w = workload::transformer_17b();
+        let s = w.default_strategy; // MP(3)-DP(3)-PP(2), 8 microbatches
+        let total = |sched: PipeSchedule| {
+            Simulator::new(FabricKind::FredD, w.clone(), s)
+                .with_schedule(sched, 1)
+                .iterate()
+                .total()
+        };
+        let g = total(PipeSchedule::GPipe);
+        let f = total(PipeSchedule::OneF1B);
+        let z = total(PipeSchedule::Zb);
+        assert!(f < g, "1f1b {f} must beat gpipe {g} (per-microbatch comm)");
+        assert!(z <= f, "zb {z} must not lose to 1f1b {f}");
+    }
+
+    #[test]
+    fn streaming_workloads_price_identically_across_schedules() {
+        // Boundary crossings already charge per microbatch in the
+        // streaming arm; schedules have nothing to reorder.
+        for w in [workload::gpt3(), workload::transformer_1t()] {
+            let s = w.default_strategy;
+            let base = Simulator::new(FabricKind::FredD, w.clone(), s).iterate();
+            for sched in PipeSchedule::all() {
+                let b = Simulator::new(FabricKind::FredD, w.clone(), s)
+                    .with_schedule(sched, 2)
+                    .iterate();
+                assert_eq!(base.total().to_bits(), b.total().to_bits(), "{} {sched}", w.name);
+            }
+        }
+    }
+
+    #[test]
+    fn single_stage_pipelines_are_schedule_invariant() {
+        // ResNet-152 (pp=1): no pipeline, every schedule degenerates to
+        // the analytic arm.
+        let w = workload::resnet152();
+        let s = w.default_strategy;
+        let base = Simulator::new(FabricKind::FredD, w.clone(), s).iterate();
+        for sched in PipeSchedule::all() {
+            let b = Simulator::new(FabricKind::FredD, w.clone(), s)
+                .with_schedule(sched, 2)
+                .iterate();
+            assert_eq!(base.total().to_bits(), b.total().to_bits(), "{sched}");
+        }
+    }
+
+    #[test]
+    fn interleaving_depth_is_clamped_to_the_stage_partition() {
+        // An absurd vstages request must not panic — it clamps to the
+        // layers-per-stage the partition produced.
+        let w = workload::transformer_17b();
+        let s = w.default_strategy;
+        let b = Simulator::new(FabricKind::FredD, w.clone(), s)
+            .with_schedule(PipeSchedule::Interleaved, 10_000)
+            .iterate();
+        assert!(b.total() > 0.0);
     }
 
     #[test]

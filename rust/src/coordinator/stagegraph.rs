@@ -1,0 +1,610 @@
+//! Microbatch-level pipeline stage graphs: the `--schedule` axis.
+//!
+//! Before this module the coordinator priced every pipeline point with
+//! the analytic GPipe closed form of [`schedule`](super::schedule)
+//! (`bubble_fraction = (stages-1)/(mb+stages-1)`), so the *schedule* —
+//! the per-stage ordering of forward and backward microbatch work — was
+//! invisible to the sweep. Hecaton (arXiv 2407.05784) and schedule-aware
+//! mapping searches show that the schedule/communication interaction
+//! decides which wafer-scale layouts win, so pipeline pricing is now a
+//! per-microbatch **stage graph**: every (schedule, stages, microbatches,
+//! virtual stages) point builds the dependency graph of forward /
+//! backward phases ([`StagePhase`], tagged with the
+//! [`Resource`](super::timeline::Resource) they occupy — NPU lanes, one
+//! per physical stage), and a deterministic per-lane list scheduler
+//! (the PR 5 list scheduler generalized from one global resource vector
+//! to one lane per stage) derives the compute makespan from phase
+//! ordering alone. 1F1B warmup/steady/drain, interleaved virtual
+//! stages (Megatron, arXiv 2104.04473), and zero-bubble split-backward
+//! (arXiv 2401.10241) *emerge* from the priority rule `B > F > W`
+//! rather than from formulas.
+//!
+//! ## Cost model
+//!
+//! All schedules share one cost basis, [`StageCosts`]: the analytic
+//! path prices the *slowest* stage's forward compute, blocking MP
+//! collective time, and boundary-activation transfer, and the stage
+//! graph inherits exactly those per-microbatch costs — so schedules
+//! differ **only** in phase ordering, which is the axis under study.
+//!
+//! * **`gpipe`** keeps the legacy closed form verbatim: every term is
+//!   the same f64 expression folded in the same order as the
+//!   pre-refactor `sim.rs` arithmetic (`slots * (f + 2f)` compute,
+//!   `slots * (m + m)` MP, `slots * 2 * t` PP), so `--schedule gpipe`
+//!   prices **bit-identically** to the analytic path by construction.
+//!   The analytic model charges communication per pipeline *slot*:
+//!   bubble slots replay the comm rounds because the per-slot cost
+//!   bundles compute and comm.
+//! * **`1f1b`** runs the stage-graph scheduler. Under the uniform
+//!   max-stage cost basis its compute makespan equals GPipe's
+//!   (`(mb+stages-1) * 3f` — 1F1B famously saves memory, not bubble),
+//!   but communication is incurred per *microbatch*: each microbatch
+//!   crosses each collective exactly once, and the warmup/drain slots
+//!   idle the fabric instead of replaying comm. Exposed MP/PP cost is
+//!   therefore `mb` rounds, not `mb+stages-1`, and the advantage over
+//!   GPipe — `(stages-1) * (2*mp + 2*boundary)` — grows with stage
+//!   count at fixed microbatch count.
+//! * **`zb`** splits the backward phase into input-grad `B` (on the
+//!   critical dependency chain) and weight-grad `W` (free-floating);
+//!   the scheduler fills the drain bubbles with `W` work, shrinking
+//!   the compute makespan toward `mb * 3f + (stages-1) * 2f`.
+//! * **`interleaved`** hosts `vstages` round-robin chunks per physical
+//!   stage: the bubble shrinks by the chunk factor
+//!   (`(stages-1) * 3f / v`), but every chunk handoff crosses a real
+//!   stage boundary, so boundary traffic grows by the same factor —
+//!   the classic bubble-vs-communication trade, now visible to the
+//!   sweep instead of assumed away.
+//!
+//! ## Structural ordering
+//!
+//! `zb <= 1f1b <= gpipe` holds *by construction*, not by hope: each
+//! schedule's total is clamped to its parent's (`1f1b` falls back to
+//! the GPipe price if ordering ever inverts, `zb` to `1f1b`) — the same
+//! serial-floor idiom [`OverlapMode::Full`](super::timeline::OverlapMode)
+//! uses (`.min(serial_time)`). Interleaved is deliberately *not*
+//! clamped: its extra boundary rounds are a real cost that may lose to
+//! `gpipe` on thin egress links, and hiding that would defeat the
+//! point of the axis.
+
+use super::schedule;
+use super::timeline::Resource;
+
+/// The pipeline schedule — the `--schedule` sweep axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PipeSchedule {
+    /// All-forward-then-all-backward with per-slot comm charging: the
+    /// legacy analytic closed form, bit-identical to the pre-schedule
+    /// pricing path (default).
+    GPipe,
+    /// One-forward-one-backward steady state: same compute makespan,
+    /// per-microbatch comm charging.
+    OneF1B,
+    /// Interleaved virtual stages (`--vstages` chunks per stage):
+    /// smaller bubble, more boundary crossings.
+    Interleaved,
+    /// Zero-bubble: backward split into input-grad `B` and
+    /// free-floating weight-grad `W` that fills the drain bubbles.
+    Zb,
+}
+
+impl PipeSchedule {
+    /// Every schedule, in CLI/report order.
+    pub fn all() -> [PipeSchedule; 4] {
+        [
+            PipeSchedule::GPipe,
+            PipeSchedule::OneF1B,
+            PipeSchedule::Interleaved,
+            PipeSchedule::Zb,
+        ]
+    }
+
+    /// Name used on the CLI and in reports/JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PipeSchedule::GPipe => "gpipe",
+            PipeSchedule::OneF1B => "1f1b",
+            PipeSchedule::Interleaved => "interleaved",
+            PipeSchedule::Zb => "zb",
+        }
+    }
+
+    /// Parse a CLI name (`gpipe` / `1f1b` / `interleaved` / `zb`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "gpipe" => Some(PipeSchedule::GPipe),
+            "1f1b" => Some(PipeSchedule::OneF1B),
+            "interleaved" => Some(PipeSchedule::Interleaved),
+            "zb" | "zero-bubble" | "zerobubble" => Some(PipeSchedule::Zb),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for PipeSchedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The shared per-microbatch cost basis: what the slowest stage costs
+/// per microbatch, exactly as the analytic path measures it.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageCosts {
+    /// Forward compute of the slowest stage (seconds; backward is 2x).
+    pub fwd_comp: f64,
+    /// Blocking MP collective time of the slowest stage during forward
+    /// (seconds; the backward pass replays it once).
+    pub fwd_mp: f64,
+    /// One boundary-activation transfer across the widest stage
+    /// boundary (seconds, one direction; zero when `stages == 1`).
+    pub boundary: f64,
+}
+
+/// The priced schedule: critical-path compute plus exposed MP/PP
+/// communication, ready to be emitted as serial
+/// [`Timeline`](super::timeline::Timeline) steps.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SchedulePrice {
+    /// Pipeline compute makespan (seconds).
+    pub compute: f64,
+    /// Exposed blocking MP collective time (seconds).
+    pub mp: f64,
+    /// Exposed boundary-activation transfer time (seconds).
+    pub pp: f64,
+}
+
+impl SchedulePrice {
+    /// Compute + exposed comm — the clamp comparison key.
+    pub fn total(&self) -> f64 {
+        self.compute + self.mp + self.pp
+    }
+}
+
+/// What a stage-graph phase does on its NPU lane. The variant order is
+/// the lane priority (`B > F > W`): input-grad backward unblocks the
+/// upstream stage, forward feeds the downstream one, and weight-grad
+/// work has no consumer at all — it exists to fill bubbles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageWork {
+    /// Backward input-grad (the full backward for non-split schedules).
+    BwdInput,
+    /// Forward.
+    Fwd,
+    /// Backward weight-grad (zero-bubble only).
+    BwdWeight,
+}
+
+impl StageWork {
+    fn rank(self) -> u8 {
+        match self {
+            StageWork::BwdInput => 0,
+            StageWork::Fwd => 1,
+            StageWork::BwdWeight => 2,
+        }
+    }
+}
+
+/// One node of the stage graph: a unit of work for one microbatch on
+/// one stage-chunk, tagged with the hardware resource it occupies
+/// (always an NPU lane — communication is charged per microbatch in
+/// closed form, see the module docs).
+#[derive(Debug, Clone)]
+pub struct StagePhase {
+    /// Work class.
+    pub work: StageWork,
+    /// Physical stage lane hosting the phase.
+    pub stage: usize,
+    /// Microbatch index.
+    pub microbatch: usize,
+    /// Virtual-stage chunk index (`stage` when `vstages == 1`).
+    pub chunk: usize,
+    /// Duration on the lane (seconds).
+    pub duration: f64,
+    /// Hardware the phase occupies.
+    pub resource: Resource,
+    /// Indices of phases that must complete first.
+    pub deps: Vec<usize>,
+}
+
+/// Build the dependency graph of per-microbatch phases for a pipeline
+/// of `stages` physical stages hosting `vstages` round-robin chunks
+/// each (chunk `c` lives on stage `c % stages`). `split_backward`
+/// selects the zero-bubble decomposition (`B` + `W`) over the fused
+/// `2f` backward.
+///
+/// Index layout: forward phases first (`chunk * mb + microbatch`),
+/// then input-grad backward, then (if split) weight-grad.
+pub fn build_stage_graph(
+    stages: usize,
+    microbatches: usize,
+    vstages: usize,
+    fwd_comp: f64,
+    split_backward: bool,
+) -> Vec<StagePhase> {
+    assert!(stages >= 1 && microbatches >= 1 && vstages >= 1);
+    let chunks = stages * vstages;
+    let mb = microbatches;
+    let f = fwd_comp / vstages as f64;
+    let idx_f = |c: usize, j: usize| c * mb + j;
+    let idx_b = |c: usize, j: usize| chunks * mb + c * mb + j;
+    let idx_w = |c: usize, j: usize| 2 * chunks * mb + c * mb + j;
+    let mut phases = Vec::with_capacity(chunks * mb * if split_backward { 3 } else { 2 });
+    for c in 0..chunks {
+        for j in 0..mb {
+            phases.push(StagePhase {
+                work: StageWork::Fwd,
+                stage: c % stages,
+                microbatch: j,
+                chunk: c,
+                duration: f,
+                resource: Resource::Npu,
+                deps: if c == 0 { vec![] } else { vec![idx_f(c - 1, j)] },
+            });
+        }
+    }
+    for c in 0..chunks {
+        for j in 0..mb {
+            phases.push(StagePhase {
+                work: StageWork::BwdInput,
+                stage: c % stages,
+                microbatch: j,
+                chunk: c,
+                duration: if split_backward { f } else { 2.0 * f },
+                resource: Resource::Npu,
+                deps: if c == chunks - 1 {
+                    vec![idx_f(c, j)]
+                } else {
+                    vec![idx_b(c + 1, j)]
+                },
+            });
+        }
+    }
+    if split_backward {
+        for c in 0..chunks {
+            for j in 0..mb {
+                phases.push(StagePhase {
+                    work: StageWork::BwdWeight,
+                    stage: c % stages,
+                    microbatch: j,
+                    chunk: c,
+                    duration: f,
+                    resource: Resource::Npu,
+                    deps: vec![idx_b(c, j)],
+                });
+            }
+        }
+    }
+    phases
+}
+
+/// The deterministic per-lane list scheduler: the PR 5 list scheduler
+/// generalized from one global free-time vector per [`Resource`] to one
+/// lane per physical stage. Greedy and non-idling — a lane never waits
+/// while a phase is ready — with ties broken by the total order
+/// `(start, work rank, microbatch, chunk, stage)`, so two runs over the
+/// same graph produce bit-identical makespans at any thread count.
+///
+/// Each iteration commits the schedulable phase with the globally
+/// earliest start time; that decision is stable because every
+/// still-unscheduled phase starts no earlier, hence completes later,
+/// hence cannot make a dependency ready sooner.
+pub fn lane_makespan(stages: usize, phases: &[StagePhase]) -> f64 {
+    let mut free = vec![0.0_f64; stages];
+    let mut done: Vec<f64> = vec![0.0; phases.len()];
+    let mut scheduled = vec![false; phases.len()];
+    let mut remaining = phases.len();
+    let mut makespan = 0.0_f64;
+    while remaining > 0 {
+        // (start, rank, microbatch, chunk, stage, id) of the best pick.
+        let mut best: Option<(f64, u8, usize, usize, usize, usize)> = None;
+        for (i, p) in phases.iter().enumerate() {
+            if scheduled[i] {
+                continue;
+            }
+            let mut ready = 0.0_f64;
+            let mut blocked = false;
+            for &d in &p.deps {
+                if !scheduled[d] {
+                    blocked = true;
+                    break;
+                }
+                ready = ready.max(done[d]);
+            }
+            if blocked {
+                continue;
+            }
+            let start = free[p.stage].max(ready);
+            let key = (start, p.work.rank(), p.microbatch, p.chunk, p.stage, i);
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    key.0 < b.0
+                        || (key.0 == b.0 && (key.1, key.2, key.3, key.4, key.5) < (b.1, b.2, b.3, b.4, b.5))
+                }
+            };
+            if better {
+                best = Some(key);
+            }
+        }
+        let (start, _, _, _, stage, id) = best.expect("stage graph is acyclic");
+        let end = start + phases[id].duration;
+        scheduled[id] = true;
+        done[id] = end;
+        free[stage] = end;
+        makespan = makespan.max(end);
+        remaining -= 1;
+    }
+    makespan
+}
+
+/// The legacy analytic GPipe closed form, term for term: every
+/// expression below is folded in exactly the order the pre-schedule
+/// `sim.rs` arithmetic used, so the result is bit-identical to the
+/// pre-refactor pricing — this is the golden-file wall `--schedule
+/// gpipe` stands behind. [`schedule::pipeline_slots`] stays exported
+/// as the test oracle for this arm.
+fn analytic_gpipe(stages: usize, microbatches: usize, c: &StageCosts) -> SchedulePrice {
+    let slots = schedule::pipeline_slots(microbatches, stages) as f64;
+    SchedulePrice {
+        compute: slots * (c.fwd_comp + 2.0 * c.fwd_comp),
+        mp: slots * (c.fwd_mp + c.fwd_mp),
+        pp: slots * 2.0 * c.boundary,
+    }
+}
+
+/// Price one pipeline point under a schedule. `vstages` is consulted
+/// only by [`PipeSchedule::Interleaved`] (callers clamp it to the
+/// layers-per-stage they actually have). Panics if `stages == 0` or
+/// `microbatches == 0` — the CLI rejects those before they get here.
+///
+/// A single stage has no pipeline at all, so every schedule degenerates
+/// to the analytic form there (bit-identical across the axis).
+pub fn price_schedule(
+    sched: PipeSchedule,
+    stages: usize,
+    microbatches: usize,
+    vstages: usize,
+    c: &StageCosts,
+) -> SchedulePrice {
+    assert!(
+        stages >= 1 && microbatches >= 1,
+        "price_schedule domain: stages >= 1 (got {stages}), microbatches >= 1 (got {microbatches})"
+    );
+    if sched == PipeSchedule::GPipe || stages == 1 {
+        return analytic_gpipe(stages, microbatches, c);
+    }
+    let mb = microbatches as f64;
+    // Per-microbatch comm charging: each microbatch crosses each MP
+    // collective and each boundary exactly once per direction; the
+    // bubble slots idle the fabric instead of replaying comm.
+    let mp = mb * (c.fwd_mp + c.fwd_mp);
+    let price = match sched {
+        PipeSchedule::GPipe => unreachable!("handled above"),
+        PipeSchedule::OneF1B => {
+            let phases = build_stage_graph(stages, microbatches, 1, c.fwd_comp, false);
+            SchedulePrice {
+                compute: lane_makespan(stages, &phases),
+                mp,
+                pp: mb * 2.0 * c.boundary,
+            }
+        }
+        PipeSchedule::Zb => {
+            let phases = build_stage_graph(stages, microbatches, 1, c.fwd_comp, true);
+            SchedulePrice {
+                compute: lane_makespan(stages, &phases),
+                mp,
+                pp: mb * 2.0 * c.boundary,
+            }
+        }
+        PipeSchedule::Interleaved => {
+            let v = vstages.max(1);
+            let phases = build_stage_graph(stages, microbatches, v, c.fwd_comp, false);
+            SchedulePrice {
+                compute: lane_makespan(stages, &phases),
+                // Every chunk handoff crosses a physical stage
+                // boundary: v times the boundary rounds.
+                pp: mb * 2.0 * c.boundary * v as f64,
+                mp,
+            }
+        }
+    };
+    // Structural ordering clamp (the serial-floor idiom of
+    // `OverlapMode::Full`): a child schedule never prices worse than
+    // its parent, so `zb <= 1f1b <= gpipe` holds by construction across
+    // every span and egress topology. Interleaved stays unclamped — its
+    // extra boundary rounds are a real trade, not a modeling artifact.
+    match sched {
+        PipeSchedule::OneF1B => {
+            let parent = analytic_gpipe(stages, microbatches, c);
+            if price.total() > parent.total() {
+                parent
+            } else {
+                price
+            }
+        }
+        PipeSchedule::Zb => {
+            let parent = price_schedule(PipeSchedule::OneF1B, stages, microbatches, 1, c);
+            if price.total() > parent.total() {
+                parent
+            } else {
+                price
+            }
+        }
+        _ => price,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn costs(f: f64, m: f64, t: f64) -> StageCosts {
+        StageCosts { fwd_comp: f, fwd_mp: m, boundary: t }
+    }
+
+    #[test]
+    fn schedule_parse_name_all_and_order() {
+        for s in PipeSchedule::all() {
+            assert_eq!(PipeSchedule::parse(s.name()), Some(s));
+            assert_eq!(s.to_string(), s.name());
+        }
+        assert_eq!(PipeSchedule::parse(" ZB "), Some(PipeSchedule::Zb));
+        assert_eq!(PipeSchedule::parse("zero-bubble"), Some(PipeSchedule::Zb));
+        assert_eq!(PipeSchedule::parse("warp"), None);
+        assert_eq!(PipeSchedule::parse(""), None);
+        assert!(PipeSchedule::GPipe < PipeSchedule::OneF1B);
+        assert!(PipeSchedule::OneF1B < PipeSchedule::Interleaved);
+        assert!(PipeSchedule::Interleaved < PipeSchedule::Zb);
+    }
+
+    #[test]
+    fn gpipe_is_bit_identical_to_the_analytic_closed_form() {
+        // The oracle: the exact f64 expressions the pre-schedule sim.rs
+        // folded, with pipeline_slots as the slot count.
+        for (stages, mb) in [(1, 1), (1, 8), (2, 8), (4, 4), (5, 2), (10, 16)] {
+            let c = costs(1.7e-3, 3.1e-4, 9.9e-5);
+            let p = price_schedule(PipeSchedule::GPipe, stages, mb, 1, &c);
+            let slots = schedule::pipeline_slots(mb, stages) as f64;
+            assert_eq!(p.compute, slots * (c.fwd_comp + 2.0 * c.fwd_comp));
+            assert_eq!(p.mp, slots * (c.fwd_mp + c.fwd_mp));
+            assert_eq!(p.pp, slots * 2.0 * c.boundary);
+        }
+    }
+
+    #[test]
+    fn one_stage_degenerates_every_schedule_to_the_analytic_form() {
+        let c = costs(2.0e-3, 4.0e-4, 0.0);
+        let gpipe = price_schedule(PipeSchedule::GPipe, 1, 8, 4, &c);
+        for s in PipeSchedule::all() {
+            let p = price_schedule(s, 1, 8, 4, &c);
+            assert_eq!(p.compute, gpipe.compute, "{s}");
+            assert_eq!(p.mp, gpipe.mp, "{s}");
+            assert_eq!(p.pp, gpipe.pp, "{s}");
+        }
+    }
+
+    #[test]
+    fn worked_example_two_stages_two_microbatches() {
+        // Hand-scheduled makespans for stages=2, mb=2, f=1 (see the
+        // scheduler docs): 1F1B = (mb+p-1)*3f = 9; zero-bubble fills
+        // the drain with W work = 7; interleaved v=2 = mb*3f +
+        // (p-1)*3f/v = 7.5.
+        let c = costs(1.0, 0.0, 0.0);
+        let f1b = price_schedule(PipeSchedule::OneF1B, 2, 2, 1, &c);
+        assert!((f1b.compute - 9.0).abs() < 1e-12, "{}", f1b.compute);
+        let zb = price_schedule(PipeSchedule::Zb, 2, 2, 1, &c);
+        assert!((zb.compute - 7.0).abs() < 1e-12, "{}", zb.compute);
+        let il = price_schedule(PipeSchedule::Interleaved, 2, 2, 2, &c);
+        assert!((il.compute - 7.5).abs() < 1e-12, "{}", il.compute);
+    }
+
+    #[test]
+    fn onef1b_compute_matches_gpipe_and_comm_drops_to_mb_rounds() {
+        // Uniform stage costs: 1F1B's compute makespan equals GPipe's
+        // (it saves memory, not bubble); the whole advantage is comm
+        // charged per microbatch instead of per slot.
+        for (stages, mb) in [(2, 2), (2, 8), (4, 8), (5, 4), (8, 16)] {
+            let c = costs(1.3e-3, 2.0e-4, 7.0e-5);
+            let g = price_schedule(PipeSchedule::GPipe, stages, mb, 1, &c);
+            let f = price_schedule(PipeSchedule::OneF1B, stages, mb, 1, &c);
+            assert!((f.compute - g.compute).abs() < 1e-12 * g.compute, "{stages}x{mb}");
+            let mbf = mb as f64;
+            assert!((f.mp - mbf * 2.0 * c.fwd_mp).abs() < 1e-15);
+            assert!((f.pp - mbf * 2.0 * c.boundary).abs() < 1e-15);
+            // Advantage = (stages-1) * (2*mp + 2*boundary).
+            let adv = g.total() - f.total();
+            let want = (stages - 1) as f64 * (2.0 * c.fwd_mp + 2.0 * c.boundary);
+            assert!((adv - want).abs() < 1e-12, "{stages}x{mb}: {adv} vs {want}");
+        }
+    }
+
+    #[test]
+    fn ordering_zb_le_1f1b_le_gpipe_across_the_grid() {
+        for stages in [1, 2, 3, 4, 5, 8] {
+            for mb in [1, 2, 4, 8, 16] {
+                for c in [
+                    costs(1.0e-3, 0.0, 0.0),
+                    costs(1.0e-3, 5.0e-4, 0.0),
+                    costs(1.0e-3, 0.0, 2.0e-4),
+                    costs(1.0e-3, 5.0e-4, 2.0e-4),
+                    costs(1.0e-6, 5.0e-3, 2.0e-3), // comm-dominated
+                ] {
+                    let g = price_schedule(PipeSchedule::GPipe, stages, mb, 1, &c);
+                    let f = price_schedule(PipeSchedule::OneF1B, stages, mb, 1, &c);
+                    let z = price_schedule(PipeSchedule::Zb, stages, mb, 1, &c);
+                    let ctx = format!("stages={stages} mb={mb}");
+                    assert!(z.total() <= f.total(), "{ctx}: zb {} > 1f1b {}", z.total(), f.total());
+                    assert!(f.total() <= g.total(), "{ctx}: 1f1b {} > gpipe {}", f.total(), g.total());
+                    // The pipeline never beats the serial floor of
+                    // mb*stages fully serialized slots.
+                    let serial = (mb * stages) as f64
+                        * (3.0 * c.fwd_comp + 2.0 * c.fwd_mp + 2.0 * c.boundary);
+                    assert!(g.total() <= serial * (1.0 + 1e-12), "{ctx}: gpipe above serial floor");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zb_strictly_beats_1f1b_when_there_is_a_drain_to_fill() {
+        for stages in [2, 4, 8] {
+            let c = costs(1.0e-3, 0.0, 0.0);
+            let f = price_schedule(PipeSchedule::OneF1B, stages, 8, 1, &c);
+            let z = price_schedule(PipeSchedule::Zb, stages, 8, 1, &c);
+            assert!(z.compute < f.compute, "stages={stages}: {} !< {}", z.compute, f.compute);
+        }
+    }
+
+    #[test]
+    fn interleaving_shrinks_the_bubble_and_grows_boundary_traffic() {
+        let c = costs(1.0e-3, 0.0, 1.0e-4);
+        let v1 = price_schedule(PipeSchedule::Interleaved, 4, 8, 1, &c);
+        let v2 = price_schedule(PipeSchedule::Interleaved, 4, 8, 2, &c);
+        let v4 = price_schedule(PipeSchedule::Interleaved, 4, 8, 4, &c);
+        assert!(v2.compute < v1.compute, "{} !< {}", v2.compute, v1.compute);
+        assert!(v4.compute < v2.compute, "{} !< {}", v4.compute, v2.compute);
+        assert!(v2.pp > v1.pp && v4.pp > v2.pp, "boundary rounds must scale with v");
+    }
+
+    #[test]
+    fn scheduler_is_deterministic_and_the_graph_is_resource_tagged() {
+        let phases = build_stage_graph(5, 7, 2, 1.3e-3, true);
+        assert!(phases.iter().all(|p| p.resource == Resource::Npu));
+        assert!(phases.iter().all(|p| p.stage == p.chunk % 5));
+        let a = lane_makespan(5, &phases);
+        let b = lane_makespan(5, &phases);
+        assert_eq!(a.to_bits(), b.to_bits(), "bit-identical reruns");
+        for s in PipeSchedule::all() {
+            let c = costs(1.1e-3, 2.2e-4, 3.3e-5);
+            let p1 = price_schedule(s, 4, 6, 2, &c);
+            let p2 = price_schedule(s, 4, 6, 2, &c);
+            assert_eq!(p1.compute.to_bits(), p2.compute.to_bits(), "{s}");
+            assert_eq!(p1.mp.to_bits(), p2.mp.to_bits(), "{s}");
+            assert_eq!(p1.pp.to_bits(), p2.pp.to_bits(), "{s}");
+        }
+    }
+
+    #[test]
+    fn single_microbatch_single_chain() {
+        // mb=1: one microbatch walks down and back, makespan = the
+        // serial chain stages*(f + 2f) for every graph schedule.
+        let c = costs(2.0e-3, 0.0, 0.0);
+        for stages in [2, 3, 6] {
+            let f = price_schedule(PipeSchedule::OneF1B, stages, 1, 1, &c);
+            let want = stages as f64 * 3.0 * c.fwd_comp;
+            assert!((f.compute - want).abs() < 1e-12, "stages={stages}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "price_schedule domain")]
+    fn zero_microbatches_is_rejected() {
+        price_schedule(PipeSchedule::GPipe, 2, 0, 1, &StageCosts::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "price_schedule domain")]
+    fn zero_stages_is_rejected() {
+        price_schedule(PipeSchedule::OneF1B, 0, 4, 1, &StageCosts::default());
+    }
+}

@@ -60,6 +60,7 @@ use super::config::FabricKind;
 use super::metrics::{Breakdown, CommType};
 use super::parallelism::{ScaledStrategy, Strategy, WaferSpan};
 use super::sim::Simulator;
+use super::stagegraph::PipeSchedule;
 use super::timeline::OverlapMode;
 use super::workload::Workload;
 use crate::fabric::egress::EgressTopo;
@@ -84,10 +85,14 @@ use std::collections::HashMap;
 /// and the `exposed_total_s` scalar — every v4 field is intact, but two
 /// v5 points can now differ *only* in their schedule, so a v4 consumer
 /// keying points on the v4 fields would silently conflate them, hence
-/// the bump. This const is the single place the version lives —
-/// consumers (including `fred merge`) must check it before reading
-/// point fields.
-pub const SCHEMA_VERSION: f64 = 5.0;
+/// the bump; v6 added the pipeline-schedule axes (`schedule`:
+/// `gpipe`/`1f1b`/`interleaved`/`zb`, and `vstages`) — every v5 field
+/// is intact, but two v6 points can now differ only in their pipeline
+/// schedule, so a v5 consumer keying points on the v5 fields would
+/// silently conflate them, hence the bump. This const is the single
+/// place the version lives — consumers (including `fred merge`) must
+/// check it before reading point fields.
+pub const SCHEMA_VERSION: f64 = 6.0;
 
 /// A wafer shape: `n_l1` rows / L1 groups × `per_l1` columns / NPUs per
 /// group.
@@ -237,6 +242,15 @@ pub struct SweepConfig {
     /// Microbatch counts to sweep, overriding each workload's Table V
     /// default. An empty list keeps the per-workload default.
     pub microbatches: Vec<usize>,
+    /// Pipeline schedules to sweep ([`PipeSchedule`]). An empty list
+    /// falls back to [`PipeSchedule::GPipe`] — the analytic closed
+    /// form, bit-identical to the pre-schedule pricing path.
+    pub schedules: Vec<PipeSchedule>,
+    /// Virtual stages per physical stage for
+    /// [`PipeSchedule::Interleaved`] points (ignored by the other
+    /// schedules; clamped per point to the layers a stage holds). The
+    /// CLI validates divisibility against the selected workloads.
+    pub vstages: usize,
     /// Cap on auto-enumerated strategies per wafer (truncation is
     /// deterministic and reported, never silent).
     pub max_strategies: usize,
@@ -262,6 +276,8 @@ impl Default for SweepConfig {
             strategies: None,
             overlaps: vec![OverlapMode::Off],
             microbatches: Vec::new(),
+            schedules: vec![PipeSchedule::GPipe],
+            vstages: 2,
             max_strategies: 12,
             bench_bytes: 100e6,
             threads: 0,
@@ -326,6 +342,11 @@ pub struct SweepPoint {
     /// Microbatch count this point ran with (the workload default unless
     /// the `--microbatches` axis overrode it).
     pub microbatches: usize,
+    /// Pipeline schedule this point was priced under.
+    pub schedule: PipeSchedule,
+    /// Interleaving depth requested for this point (meaningful for
+    /// `interleaved`; carried on every point so the JSON key is total).
+    pub vstages: usize,
     /// Metrics, or the typed-error string for infeasible points.
     pub outcome: Result<SweepMetrics, String>,
 }
@@ -363,6 +384,8 @@ struct PointSpec {
     overlap: OverlapMode,
     /// `None` keeps the workload's Table V microbatch default.
     microbatches: Option<usize>,
+    schedule: PipeSchedule,
+    vstages: usize,
 }
 
 /// Per-thread prototype cache: fabrics are immutable link-graph models,
@@ -397,7 +420,8 @@ fn eval_point(cfg: &SweepConfig, spec: &PointSpec, cache: &mut ProtoCache) -> Sw
     )
     .with_scaleout(scale)
     .with_span(spec.span)
-    .with_overlap(spec.overlap);
+    .with_overlap(spec.overlap)
+    .with_schedule(spec.schedule, spec.vstages);
     let outcome = match sim.try_iterate() {
         Ok(breakdown) => {
             let per_sample = breakdown.total() / sim.global_minibatch().max(1) as f64;
@@ -421,6 +445,8 @@ fn eval_point(cfg: &SweepConfig, spec: &PointSpec, cache: &mut ProtoCache) -> Sw
         strategy: spec.strategy,
         overlap: spec.overlap,
         microbatches,
+        schedule: spec.schedule,
+        vstages: spec.vstages,
         outcome,
     }
 }
@@ -461,6 +487,12 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepReport {
     } else {
         cfg.microbatches.iter().map(|&n| Some(n)).collect()
     };
+    let schedules: Vec<PipeSchedule> = if cfg.schedules.is_empty() {
+        vec![PipeSchedule::GPipe]
+    } else {
+        cfg.schedules.clone()
+    };
+    let vstages = cfg.vstages.max(1);
     let mut specs: Vec<PointSpec> = Vec::new();
     let mut truncated = 0usize;
     for &wafer in &cfg.wafers {
@@ -514,22 +546,26 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepReport {
                                 for workload_idx in 0..cfg.workloads.len() {
                                     for &overlap in &overlaps {
                                         for &mb in &microbatches {
-                                            for scaled in
-                                                scale_strategies(wafers, span, &locals)
-                                            {
-                                                specs.push(PointSpec {
-                                                    kind,
-                                                    wafer,
-                                                    wafers: scaled.wafers,
-                                                    xwafer_bw,
-                                                    xwafer_latency,
-                                                    topo,
-                                                    span: scaled.span,
-                                                    workload_idx,
-                                                    strategy: scaled.local,
-                                                    overlap,
-                                                    microbatches: mb,
-                                                });
+                                            for &sched in &schedules {
+                                                for scaled in
+                                                    scale_strategies(wafers, span, &locals)
+                                                {
+                                                    specs.push(PointSpec {
+                                                        kind,
+                                                        wafer,
+                                                        wafers: scaled.wafers,
+                                                        xwafer_bw,
+                                                        xwafer_latency,
+                                                        topo,
+                                                        span: scaled.span,
+                                                        workload_idx,
+                                                        strategy: scaled.local,
+                                                        overlap,
+                                                        microbatches: mb,
+                                                        schedule: sched,
+                                                        vstages,
+                                                    });
+                                                }
                                             }
                                         }
                                     }
@@ -596,6 +632,8 @@ fn rank(points: &mut [SweepPoint]) {
             .then_with(|| a.strategy.to_string().cmp(&b.strategy.to_string()))
             .then_with(|| a.overlap.cmp(&b.overlap))
             .then_with(|| a.microbatches.cmp(&b.microbatches))
+            .then_with(|| a.schedule.cmp(&b.schedule))
+            .then_with(|| a.vstages.cmp(&b.vstages))
     });
 }
 
@@ -619,6 +657,8 @@ impl SweepReport {
             Strategy,
             OverlapMode,
             usize,
+            PipeSchedule,
+            usize,
         );
         fn key(p: &SweepPoint) -> Key<'_> {
             (
@@ -632,6 +672,8 @@ impl SweepReport {
                 p.strategy,
                 p.overlap,
                 p.microbatches,
+                p.schedule,
+                p.vstages,
             )
         }
         let mut fast: HashMap<Key, f64> = HashMap::new();
@@ -657,8 +699,9 @@ impl SweepReport {
     }
 
     /// Render the top `top` points as a fixed-width table. The `sched`
-    /// column carries the overlap mode and microbatch count of each
-    /// point (`off/mb8` etc.), so schedule-axis sweeps stay readable.
+    /// column carries the pipeline schedule, overlap mode, and microbatch
+    /// count of each point (`1f1b/off/mb8` etc.), so schedule-axis sweeps
+    /// stay readable.
     pub fn render_table(&self, top: usize) -> String {
         let mut t = Table::new(&[
             "rank", "workload", "wafer", "fleet", "fabric", "strategy", "sched", "iter",
@@ -681,7 +724,8 @@ impl SweepReport {
                     fmt_bw(p.xwafer_bw)
                 )
             };
-            let sched = format!("{}/mb{}", p.overlap.name(), p.microbatches);
+            let sched =
+                format!("{}/{}/mb{}", p.schedule.name(), p.overlap.name(), p.microbatches);
             match &p.outcome {
                 Ok(m) => t.row(&[
                     format!("{}", i + 1),
@@ -770,6 +814,8 @@ impl SweepReport {
                     ),
                     ("overlap", Json::Str(p.overlap.name().to_string())),
                     ("microbatches", Json::Num(p.microbatches as f64)),
+                    ("schedule", Json::Str(p.schedule.name().to_string())),
+                    ("vstages", Json::Num(p.vstages as f64)),
                     ("ok", Json::Bool(p.outcome.is_ok())),
                 ];
                 match &p.outcome {
@@ -821,6 +867,8 @@ struct MergeKey {
     strategy: String,
     overlap: OverlapMode,
     microbatches: usize,
+    schedule: PipeSchedule,
+    vstages: usize,
 }
 
 fn merge_key(p: &Json) -> Result<MergeKey, String> {
@@ -851,6 +899,9 @@ fn merge_key(p: &Json) -> Result<MergeKey, String> {
     let overlap_s = str_field("overlap")?;
     let overlap =
         OverlapMode::parse(&overlap_s).ok_or_else(|| format!("bad overlap `{overlap_s}`"))?;
+    let sched_s = str_field("schedule")?;
+    let schedule =
+        PipeSchedule::parse(&sched_s).ok_or_else(|| format!("bad schedule `{sched_s}`"))?;
     Ok(MergeKey {
         infeasible: u8::from(!ok),
         per_sample,
@@ -865,6 +916,8 @@ fn merge_key(p: &Json) -> Result<MergeKey, String> {
         strategy: str_field("strategy")?,
         overlap,
         microbatches: num_field("microbatches")? as usize,
+        schedule,
+        vstages: num_field("vstages")? as usize,
     })
 }
 
@@ -883,6 +936,8 @@ fn merge_key_cmp(a: &MergeKey, b: &MergeKey) -> std::cmp::Ordering {
         .then_with(|| a.strategy.cmp(&b.strategy))
         .then_with(|| a.overlap.cmp(&b.overlap))
         .then_with(|| a.microbatches.cmp(&b.microbatches))
+        .then_with(|| a.schedule.cmp(&b.schedule))
+        .then_with(|| a.vstages.cmp(&b.vstages))
 }
 
 /// Merge several `fred sweep --json` documents (e.g. a sweep sharded
@@ -890,7 +945,7 @@ fn merge_key_cmp(a: &MergeKey, b: &MergeKey) -> std::cmp::Ordering {
 /// the same total order [`rank`] uses, `truncated_strategies` sums, and
 /// every input must carry the current [`SCHEMA_VERSION`] — mismatched
 /// versions are rejected rather than silently mixing contracts (the
-/// ranking key reads v5 fields). Closes the ROADMAP "Sweep resume/merge"
+/// ranking key reads v6 fields). Closes the ROADMAP "Sweep resume/merge"
 /// item.
 ///
 /// Byte-identity with the unsharded run: shard on disjoint axes (fleet
@@ -1062,6 +1117,9 @@ mod tests {
                 Some(1),
                 "ResNet's Table V default"
             );
+            // v6 fields: the pipeline-schedule axis.
+            assert_eq!(p.get("schedule").and_then(Json::as_str), Some("gpipe"));
+            assert_eq!(p.get("vstages").and_then(Json::as_usize), Some(2));
             let exposed = p.get("exposed_total_s").unwrap().as_f64().unwrap();
             let total = p.get("total_s").unwrap().as_f64().unwrap();
             let compute = p.get("compute_s").unwrap().as_f64().unwrap();
@@ -1369,6 +1427,36 @@ mod tests {
     }
 
     #[test]
+    fn schedule_axis_multiplies_points_and_orders_zb_le_1f1b_le_gpipe() {
+        let mut cfg = tiny_cfg();
+        cfg.workloads = vec![workload::transformer_17b()];
+        cfg.strategies = Some(vec![Strategy::new(2, 2, 5)]);
+        cfg.fabrics = vec![FabricKind::FredD];
+        cfg.schedules = PipeSchedule::all().to_vec();
+        let report = run_sweep(&cfg);
+        assert_eq!(report.points.len(), 4, "one point per schedule");
+        let total = |s: PipeSchedule| -> f64 {
+            report
+                .points
+                .iter()
+                .find(|p| p.schedule == s)
+                .expect("point for every schedule")
+                .outcome
+                .as_ref()
+                .expect("feasible")
+                .breakdown
+                .total()
+        };
+        let (g, f, z) = (
+            total(PipeSchedule::GPipe),
+            total(PipeSchedule::OneF1B),
+            total(PipeSchedule::Zb),
+        );
+        assert!(z <= f && f <= g, "zb {z} <= 1f1b {f} <= gpipe {g}");
+        assert!(f < g, "a 5-deep pipeline at mb=8 has a bubble for 1F1B to shrink");
+    }
+
+    #[test]
     fn merge_of_shards_reproduces_the_combined_run_byte_for_byte() {
         let mut all = tiny_cfg();
         all.wafer_counts = vec![1, 2];
@@ -1415,6 +1503,7 @@ mod tests {
         cfg.xwafer_latencies = vec![DEFAULT_XWAFER_LATENCY, 2e-6];
         cfg.overlaps = OverlapMode::all().to_vec();
         cfg.microbatches = vec![4];
+        cfg.schedules = PipeSchedule::all().to_vec();
         cfg.threads = 1;
         let seq = run_sweep(&cfg).to_json().render();
         cfg.threads = 5;

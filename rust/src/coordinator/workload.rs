@@ -40,6 +40,29 @@ pub struct Layer {
     pub mp_collectives: usize,
 }
 
+impl Layer {
+    /// Activation bytes this layer emits for one microbatch of
+    /// `mb_samples` samples (fractional when the per-replica minibatch
+    /// does not divide evenly) — the forward volume a pipeline boundary
+    /// after this layer carries per microbatch, and the volume each MP
+    /// collective reduces. Same fold as the legacy inline
+    /// `act_bytes * samples` (one multiplication, same operand order),
+    /// so pricing through this helper is bit-identical.
+    pub fn microbatch_act_bytes(&self, mb_samples: f64) -> f64 {
+        self.act_bytes * mb_samples
+    }
+
+    /// Gradient bytes the backward pass sends across the same boundary
+    /// for one microbatch: activations and their gradients are both
+    /// fp16 tensors of identical shape, so the volume mirrors
+    /// [`Layer::microbatch_act_bytes`] exactly — which is why the
+    /// stage-graph pricing charges `2x` the one-direction boundary
+    /// transfer per microbatch.
+    pub fn microbatch_grad_bytes(&self, mb_samples: f64) -> f64 {
+        self.microbatch_act_bytes(mb_samples)
+    }
+}
+
 /// A training workload (Table V row).
 #[derive(Debug, Clone)]
 pub struct Workload {
@@ -377,6 +400,17 @@ mod tests {
         let mut w = resnet152();
         w.overlap_dp = true;
         assert_eq!(w.default_overlap(), OverlapMode::Dp);
+    }
+
+    #[test]
+    fn microbatch_volumes_scale_with_samples_and_grads_mirror_acts() {
+        let w = transformer_17b();
+        let l = &w.layers[1];
+        assert_eq!(l.microbatch_act_bytes(1.0), l.act_bytes);
+        assert_eq!(l.microbatch_act_bytes(6.0), l.act_bytes * 6.0);
+        for s in [1.0, 2.5, 16.0] {
+            assert_eq!(l.microbatch_grad_bytes(s), l.microbatch_act_bytes(s));
+        }
     }
 
     #[test]

@@ -1,0 +1,291 @@
+//! Property tests for the pipeline-schedule axis: the stage-graph
+//! pricing path (`--schedule`) must reproduce the analytic GPipe closed
+//! form bit for bit on its default arm, hold the structural ordering
+//! `zb <= 1f1b <= gpipe <= serial` on every span × egress topology,
+//! degenerate to a single identity on one-stage pipelines and on
+//! weight-streaming workloads, and keep the sweep engine's exact-cover
+//! and thread-determinism contracts at `schema_version: 6`.
+
+use fred::coordinator::config::FabricKind;
+use fred::coordinator::metrics::{Breakdown, CommType};
+use fred::coordinator::parallelism::{Strategy, WaferSpan};
+use fred::coordinator::schedule;
+use fred::coordinator::sim::Simulator;
+use fred::coordinator::stagegraph::{self, PipeSchedule, StageCosts};
+use fred::coordinator::sweep::{self, SweepConfig, WaferDims};
+use fred::coordinator::timeline::OverlapMode;
+use fred::coordinator::workload::{self, Workload};
+use fred::fabric::egress::EgressTopo;
+use fred::fabric::scaleout::ScaleOut;
+use fred::runtime::json::Json;
+
+fn spans() -> [WaferSpan; 4] {
+    [
+        WaferSpan::Dp,
+        WaferSpan::Pp,
+        WaferSpan::Mp,
+        WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 2 },
+    ]
+}
+
+fn fleet_sim(
+    w: &Workload,
+    topo: EgressTopo,
+    span: WaferSpan,
+    sched: PipeSchedule,
+    vstages: usize,
+) -> Simulator {
+    Simulator::new(FabricKind::FredD, w.clone(), w.default_strategy)
+        .with_scaleout(ScaleOut::with_topo(topo, 4, 2.304e12, 500e-9))
+        .with_span(span)
+        .with_schedule(sched, vstages)
+}
+
+/// Bitwise equality of two breakdowns: compute plus every exposed-comm
+/// channel. `assert_eq!` on f64 would accept -0.0 == 0.0 and reject
+/// nothing else extra, but `to_bits` states the byte-identity contract
+/// the golden files depend on.
+fn assert_bits_eq(a: &Breakdown, b: &Breakdown, ctx: &str) {
+    assert_eq!(a.compute.to_bits(), b.compute.to_bits(), "{ctx}: compute");
+    for t in CommType::all() {
+        assert_eq!(a.get(t).to_bits(), b.get(t).to_bits(), "{ctx}: {}", t.name());
+    }
+}
+
+#[test]
+fn gpipe_is_bit_identical_to_the_default_pricing_path_everywhere() {
+    // `--schedule gpipe` (at any interleaving depth — gpipe ignores it)
+    // must price exactly what the pre-refactor analytic path priced,
+    // which is what a Simulator without `with_schedule` still prices.
+    for w in [workload::transformer_17b(), workload::gpt3()] {
+        for topo in EgressTopo::all() {
+            for span in spans() {
+                let base = Simulator::new(FabricKind::FredD, w.clone(), w.default_strategy)
+                    .with_scaleout(ScaleOut::with_topo(topo, 4, 2.304e12, 500e-9))
+                    .with_span(span)
+                    .iterate();
+                for vstages in [1, 2, 7] {
+                    let g = fleet_sim(&w, topo, span, PipeSchedule::GPipe, vstages).iterate();
+                    let ctx =
+                        format!("{} {} span={} v={vstages}", w.name, topo, span.name());
+                    assert_bits_eq(&g, &base, &ctx);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn gpipe_unit_pricing_matches_the_closed_form_oracle() {
+    // The stage-graph gpipe arm against the `schedule` module's exported
+    // closed forms, over a grid of shapes: same folds, same order, so
+    // bitwise equality — this is the oracle the refactor must preserve.
+    let c = StageCosts { fwd_comp: 3.7e-3, fwd_mp: 5.1e-4, boundary: 2.9e-4 };
+    for stages in [1usize, 2, 3, 5, 10] {
+        for mb in [1usize, 2, 8, 32] {
+            let slots = schedule::pipeline_slots(mb, stages) as f64;
+            let p = stagegraph::price_schedule(PipeSchedule::GPipe, stages, mb, 1, &c);
+            assert_eq!(p.compute.to_bits(), (slots * (c.fwd_comp + 2.0 * c.fwd_comp)).to_bits());
+            assert_eq!(p.mp.to_bits(), (slots * (c.fwd_mp + c.fwd_mp)).to_bits());
+            assert_eq!(p.pp.to_bits(), (slots * 2.0 * c.boundary).to_bits());
+            // And the bubble fraction is recoverable: the slot count is
+            // the whole story for a flush schedule.
+            let bubble = schedule::bubble_fraction(mb, stages);
+            assert!((1.0 - mb as f64 / slots - bubble).abs() < 1e-12);
+        }
+    }
+}
+
+#[test]
+fn zb_le_1f1b_le_gpipe_for_every_span_and_topology() {
+    // A pipelined stationary workload (t17b: pp=2 on-wafer, deeper on
+    // pp-bearing spans) across the whole span × topology grid.
+    let w = workload::transformer_17b();
+    for topo in EgressTopo::all() {
+        for span in spans() {
+            let g = fleet_sim(&w, topo, span, PipeSchedule::GPipe, 2).iterate();
+            let f = fleet_sim(&w, topo, span, PipeSchedule::OneF1B, 2).iterate();
+            let z = fleet_sim(&w, topo, span, PipeSchedule::Zb, 2).iterate();
+            let i = fleet_sim(&w, topo, span, PipeSchedule::Interleaved, 2).iterate();
+            let ctx = format!("{} span={}", topo, span.name());
+            // Structural clamps make the ordering exact, not approximate.
+            assert!(z.total() <= f.total(), "{ctx}: zb {} > 1f1b {}", z.total(), f.total());
+            assert!(f.total() <= g.total(), "{ctx}: 1f1b {} > gpipe {}", f.total(), g.total());
+            // Interleaved carries no such guarantee — it trades bubble
+            // for boundary traffic — but it must price and stay finite.
+            assert!(i.total().is_finite() && i.total() > 0.0, "{ctx}");
+        }
+    }
+}
+
+#[test]
+fn gpipe_never_exceeds_the_serial_microbatch_floor() {
+    // The ordering's top end: a flush schedule's `mb + p - 1` slots are
+    // never worse than running every microbatch through every stage
+    // serially (`mb * p` slots), for every phase it prices, across a
+    // grid of cost shapes (compute-bound, comm-bound, boundary-bound).
+    let shapes = [
+        StageCosts { fwd_comp: 1e-3, fwd_mp: 1e-5, boundary: 1e-6 },
+        StageCosts { fwd_comp: 1e-5, fwd_mp: 1e-3, boundary: 1e-6 },
+        StageCosts { fwd_comp: 1e-5, fwd_mp: 1e-6, boundary: 1e-3 },
+        StageCosts { fwd_comp: 1e-3, fwd_mp: 1e-3, boundary: 1e-3 },
+    ];
+    for c in shapes {
+        for stages in [1usize, 2, 4, 9] {
+            for mb in [1usize, 2, 8, 17] {
+                let serial_slots = (mb * stages) as f64;
+                let serial = serial_slots
+                    * (3.0 * c.fwd_comp + 2.0 * c.fwd_mp + 2.0 * c.boundary);
+                for sched in PipeSchedule::all() {
+                    let p = stagegraph::price_schedule(sched, stages, mb, 2, &c);
+                    assert!(
+                        p.total() <= serial * (1.0 + 1e-12),
+                        "{sched} p={stages} mb={mb}: {} > serial {serial}",
+                        p.total()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn onef1b_advantage_grows_with_stage_count_at_fixed_microbatches() {
+    // The bubble a flush schedule pays grows with depth; 1F1B's saving
+    // over it must therefore widen as stages are added at fixed mb.
+    let c = StageCosts { fwd_comp: 1e-3, fwd_mp: 2e-4, boundary: 1e-4 };
+    let mb = 8;
+    let mut last = 0.0;
+    for stages in [2usize, 3, 5, 8] {
+        let g = stagegraph::price_schedule(PipeSchedule::GPipe, stages, mb, 1, &c);
+        let f = stagegraph::price_schedule(PipeSchedule::OneF1B, stages, mb, 1, &c);
+        let adv = g.total() - f.total();
+        assert!(adv > last, "stages={stages}: advantage {adv} <= previous {last}");
+        last = adv;
+    }
+}
+
+#[test]
+fn single_stage_pipelines_price_identically_under_every_schedule() {
+    // ResNet's Table V strategy is pp=1 on-wafer; on a dp/mp span the
+    // global pipeline stays one stage and every schedule must collapse
+    // to the same bytes.
+    let w = workload::resnet152();
+    for topo in EgressTopo::all() {
+        for span in [WaferSpan::Dp, WaferSpan::Mp] {
+            let base = fleet_sim(&w, topo, span, PipeSchedule::GPipe, 2).iterate();
+            for sched in PipeSchedule::all() {
+                let b = fleet_sim(&w, topo, span, sched, 2).iterate();
+                let ctx = format!("{} {} span={}", sched, topo, span.name());
+                assert_bits_eq(&b, &base, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_workloads_are_schedule_invariant_by_construction() {
+    // Weight streaming already pays stage boundaries per microbatch and
+    // double-buffers layer slices — there is no warmup/drain bubble for
+    // a schedule to shrink, so the axis is a no-op on gpt3/t1t even on
+    // pp-bearing spans.
+    for w in [workload::gpt3(), workload::transformer_1t()] {
+        for topo in EgressTopo::all() {
+            for span in spans() {
+                let base = fleet_sim(&w, topo, span, PipeSchedule::GPipe, 2).iterate();
+                for sched in PipeSchedule::all() {
+                    let b = fleet_sim(&w, topo, span, sched, 2).iterate();
+                    let ctx = format!("{} {} {} span={}", w.name, sched, topo, span.name());
+                    assert_bits_eq(&b, &base, &ctx);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn schedules_compose_with_overlap_without_breaking_either_ordering() {
+    // The two axes are orthogonal: at every schedule, full overlap never
+    // prices worse than off; at every overlap mode, 1f1b never prices
+    // worse than gpipe.
+    let w = workload::transformer_17b();
+    for sched in PipeSchedule::all() {
+        for mode in OverlapMode::all() {
+            let t = |s: PipeSchedule, m: OverlapMode| {
+                fleet_sim(&w, EgressTopo::Ring, WaferSpan::Pp, s, 2)
+                    .with_overlap(m)
+                    .iterate()
+                    .total()
+            };
+            assert!(
+                t(sched, OverlapMode::Full) <= t(sched, OverlapMode::Off),
+                "{sched}: full > off"
+            );
+            assert!(
+                t(PipeSchedule::OneF1B, mode) <= t(PipeSchedule::GPipe, mode),
+                "{}: 1f1b > gpipe",
+                mode.name()
+            );
+        }
+    }
+}
+
+fn grid_cfg(threads: usize) -> SweepConfig {
+    SweepConfig {
+        workloads: vec![workload::transformer_17b()],
+        wafers: vec![WaferDims::PAPER],
+        wafer_counts: vec![4],
+        xwafer_topos: EgressTopo::all().to_vec(),
+        wafer_spans: vec![WaferSpan::Dp, WaferSpan::Pp],
+        fabrics: vec![FabricKind::FredD],
+        strategies: Some(vec![Strategy::new(2, 5, 2)]),
+        schedules: PipeSchedule::all().to_vec(),
+        threads,
+        ..SweepConfig::default()
+    }
+}
+
+#[test]
+fn sweep_covers_the_schedule_grid_exactly_and_deterministically() {
+    let report = sweep::run_sweep(&grid_cfg(1));
+    // 3 topos × 2 spans × 4 schedules, one strategy, one fabric.
+    assert_eq!(report.points.len(), 24, "exact cover of the schedule grid");
+    for sched in PipeSchedule::all() {
+        let n = report.points.iter().filter(|p| p.schedule == sched).count();
+        assert_eq!(n, 6, "{sched}: every (topo, span) cell prices every schedule");
+    }
+    assert!(report.points.iter().all(|p| p.outcome.is_ok()));
+    // Thread count must not change a single byte of the ranked JSON.
+    let seq = sweep::run_sweep(&grid_cfg(1)).to_json().render();
+    let par = sweep::run_sweep(&grid_cfg(4)).to_json().render();
+    assert_eq!(seq, par, "schedule axis must keep the sweep thread-deterministic");
+}
+
+#[test]
+fn schema_v6_keeps_every_v5_field_and_adds_the_schedule_axis() {
+    // A v5 consumer keying on the v5 fields must find all of them, and a
+    // v6 consumer must find the schedule axis; the version bump is what
+    // tells the former to upgrade rather than silently misparse.
+    let doc = sweep::run_sweep(&grid_cfg(1)).to_json();
+    let text = doc.render();
+    let back = Json::parse(&text).expect("sweep JSON parses");
+    assert_eq!(back.get("schema_version").and_then(Json::as_f64), Some(6.0));
+    assert_eq!(sweep::SCHEMA_VERSION, 6.0);
+    let points = back.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), 24);
+    let v5_fields = [
+        "workload", "wafer", "n_npus", "wafers", "xwafer_bw", "xwafer_latency_s",
+        "xwafer_topo", "wafer_span", "total_npus", "fabric", "strategy",
+        "scaled_strategy", "mp", "dp", "pp", "global_dp", "global_pp", "global_mp",
+        "span_mp_wafers", "span_dp_wafers", "span_pp_wafers", "overlap",
+        "microbatches", "ok",
+    ];
+    for p in points {
+        for f in v5_fields {
+            assert!(p.get(f).is_some(), "v5 field `{f}` must survive the v6 bump");
+        }
+        let sched = p.get("schedule").and_then(Json::as_str).expect("v6 `schedule`");
+        assert!(PipeSchedule::parse(sched).is_some(), "parseable schedule `{sched}`");
+        assert!(p.get("vstages").and_then(Json::as_usize).unwrap() >= 1);
+    }
+}

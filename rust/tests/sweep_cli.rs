@@ -129,6 +129,24 @@ fn sweep_cli_rejects_bad_input_with_usage_errors() {
         vec!["sweep", "--microbatches", "0"],
         vec!["sweep", "--microbatches", "8,-2"],
         vec!["sweep", "--microbatches", "lots"],
+        vec!["sweep", "--schedule", "warp"],
+        vec!["sweep", "--schedule", "gpipe,1f2b"],
+        vec!["sweep", "--vstages", "0"],
+        vec!["sweep", "--vstages", "many"],
+        // Interleaving depth 1 is just 1f1b; asking for interleaved with
+        // it is an inconsistent sweep.
+        vec!["sweep", "--schedule", "interleaved", "--vstages", "1"],
+        // ...and the depth must tile each selected model's layer stack
+        // (ResNet-152 has 52 layers; 3 does not divide 52).
+        vec![
+            "sweep",
+            "--schedule",
+            "interleaved",
+            "--vstages",
+            "3",
+            "--models",
+            "resnet152",
+        ],
         // A mixed span must match a swept fleet size (default --wafers
         // is a single wafer; 2x2 needs a 4-wafer fleet).
         vec!["sweep", "--span", "2x2"],
@@ -232,7 +250,7 @@ fn sweep_out_file_is_golden_against_stdout() {
     assert_eq!(file, stdout, "--out file must match --json stdout byte for byte");
     let doc = Json::parse(String::from_utf8(file).expect("utf8").trim())
         .expect("--out file is valid JSON");
-    assert_eq!(doc.get("schema_version").and_then(Json::as_usize), Some(5));
+    assert_eq!(doc.get("schema_version").and_then(Json::as_usize), Some(6));
     let points = doc.get("points").unwrap().as_arr().unwrap();
     assert_eq!(points.len(), 3, "3 strategies x 1 fabric x 1 fleet size");
     for p in points {
@@ -243,14 +261,14 @@ fn sweep_out_file_is_golden_against_stdout() {
 }
 
 #[test]
-fn schema_v5_signals_v4_consumers_instead_of_silently_misparsing() {
-    // A well-behaved v4 consumer checks `schema_version` before reading
-    // points (it may key points on the v4 field set, which two v5 points
-    // can now share while differing only in their `overlap`/
-    // `microbatches` schedule — a semantic change that forces the bump).
-    // The v5 document must (a) carry the version as a plain number a v4
+fn schema_v6_signals_v5_consumers_instead_of_silently_misparsing() {
+    // A well-behaved v5 consumer checks `schema_version` before reading
+    // points (it may key points on the v5 field set, which two v6 points
+    // can now share while differing only in their `schedule`/`vstages`
+    // pipeline schedule — a semantic change that forces the bump). The
+    // v6 document must (a) carry the version as a plain number a v5
     // guard can compare against, and (b) still contain every v2, v3,
-    // *and* v4 point field under its old name, so a consumer that
+    // v4, *and* v5 point field under its old name, so a consumer that
     // ignores the version reads consistent values rather than garbage —
     // the new fields are additive.
     let json = run_sweep_json(&[
@@ -267,9 +285,9 @@ fn schema_v5_signals_v4_consumers_instead_of_silently_misparsing() {
         .get("schema_version")
         .and_then(Json::as_f64)
         .expect("version field must be a plain number");
-    assert_eq!(version, 5.0);
+    assert_eq!(version, 6.0);
+    assert_ne!(version, 5.0, "a v5 guard comparing against 5 must reject this doc");
     assert_ne!(version, 4.0, "a v4 guard comparing against 4 must reject this doc");
-    assert_ne!(version, 3.0, "a v3 guard comparing against 3 must reject this doc");
     const V2_POINT_FIELDS: [&str; 13] = [
         "workload",
         "wafer",
@@ -291,20 +309,26 @@ fn schema_v5_signals_v4_consumers_instead_of_silently_misparsing() {
         ["global_mp", "span_mp_wafers", "span_dp_wafers", "span_pp_wafers"];
     for p in json.get("points").unwrap().as_arr().unwrap() {
         for field in V2_POINT_FIELDS {
-            assert!(p.get(field).is_some(), "v2 field `{field}` missing in v5 point");
+            assert!(p.get(field).is_some(), "v2 field `{field}` missing in v6 point");
         }
         for field in V3_POINT_FIELDS {
-            assert!(p.get(field).is_some(), "v3 field `{field}` missing in v5 point");
+            assert!(p.get(field).is_some(), "v3 field `{field}` missing in v6 point");
         }
         for field in V4_POINT_FIELDS {
-            assert!(p.get(field).is_some(), "v4 field `{field}` missing in v5 point");
+            assert!(p.get(field).is_some(), "v4 field `{field}` missing in v6 point");
         }
-        // The v5 additions are present under *new* names, and a default
-        // sweep emits the schedule a v4 document implicitly priced:
-        // overlap off at the workload's own microbatch count.
         for field in ["overlap", "microbatches", "exposed_total_s"] {
-            assert!(p.get(field).is_some(), "v5 field `{field}` missing");
+            assert!(p.get(field).is_some(), "v5 field `{field}` missing in v6 point");
         }
+        // The v6 additions are present under *new* names, and a default
+        // sweep emits the schedule a v5 document implicitly priced:
+        // gpipe (the analytic flush schedule), overlap off, at the
+        // workload's own microbatch count.
+        for field in ["schedule", "vstages"] {
+            assert!(p.get(field).is_some(), "v6 field `{field}` missing");
+        }
+        assert_eq!(p.get("schedule").and_then(Json::as_str), Some("gpipe"));
+        assert!(p.get("vstages").and_then(Json::as_usize).unwrap() >= 1);
         assert_eq!(p.get("overlap").and_then(Json::as_str), Some("off"));
         assert_eq!(p.get("wafer_span").and_then(Json::as_str), Some("dp"));
         // Span decomposition is self-consistent with the global dims.
@@ -517,6 +541,51 @@ fn sweep_cli_prices_overlap_and_microbatch_axes() {
     }
 }
 
+#[test]
+fn sweep_cli_prices_the_schedule_axis_and_preserves_the_ordering() {
+    // The new v6 axis end to end: a pipelined fleet swept across all
+    // four schedules, every point feasible and tagged, and the
+    // structural ordering zb <= 1f1b <= gpipe visible through the
+    // binary.
+    let json = run_sweep_json(&[
+        "--models",
+        "t17b",
+        "--wafers",
+        "2",
+        "--fabrics",
+        "fred-d",
+        "--max-strategies",
+        "2",
+        "--span",
+        "pp",
+        "--schedule",
+        "gpipe,1f1b,interleaved,zb",
+    ]);
+    let points = json.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), 2 * 4, "strategies x schedules");
+    let mut totals: BTreeMap<(String, String), f64> = BTreeMap::new();
+    for p in points {
+        assert_eq!(p.get("ok").and_then(Json::as_bool), Some(true));
+        let strategy = p.get("strategy").unwrap().as_str().unwrap().to_string();
+        let sched = p.get("schedule").unwrap().as_str().unwrap().to_string();
+        assert_eq!(p.get("vstages").and_then(Json::as_usize), Some(2));
+        totals.insert((strategy, sched), p.get("total_s").unwrap().as_f64().unwrap());
+    }
+    for ((strategy, sched), &t_gpipe) in &totals {
+        if sched != "gpipe" {
+            continue;
+        }
+        let t_1f1b = totals[&(strategy.clone(), "1f1b".to_string())];
+        let t_zb = totals[&(strategy.clone(), "zb".to_string())];
+        // Interleaved carries no such guarantee: it trades bubble for
+        // boundary traffic, so it is swept, not ordered.
+        let t_il = totals[&(strategy.clone(), "interleaved".to_string())];
+        assert!(t_il > 0.0);
+        assert!(t_zb <= t_1f1b, "{strategy}: zb {t_zb} > 1f1b {t_1f1b}");
+        assert!(t_1f1b <= t_gpipe, "{strategy}: 1f1b {t_1f1b} > gpipe {t_gpipe}");
+    }
+}
+
 /// The refactor's correctness wall: the `--overlap off` sweep output over
 /// the full axis grid (fleet sizes × egress topologies × wafer spans ×
 /// fabrics × a stationary and a streaming workload) is byte-identical at
@@ -588,7 +657,7 @@ fn sweep_cli_scales_to_sixteen_wafer_fleets() {
         "--max-strategies",
         "2",
     ]);
-    assert_eq!(json.get("schema_version").and_then(Json::as_usize), Some(5));
+    assert_eq!(json.get("schema_version").and_then(Json::as_usize), Some(6));
     let points = json.get("points").unwrap().as_arr().unwrap();
     assert_eq!(points.len(), 10, "2 strategies x 5 fleet sizes");
     let mut fleets: Vec<usize> = points
