@@ -31,7 +31,7 @@ target/release/fred sweep --wafers 4 --models resnet152 --max-strategies 6 \
     --json --out /tmp/sweep.json > /tmp/sweep.stdout.json
 cmp /tmp/sweep.json /tmp/sweep.stdout.json
 test -s /tmp/sweep.json
-grep -q '"schema_version":6' /tmp/sweep.json
+grep -q '"schema_version":7' /tmp/sweep.json
 grep -q '"wafer_span":"dp"' /tmp/sweep.json
 grep -q '"wafer_span":"2x2"' /tmp/sweep.json
 rm -f /tmp/sweep.json /tmp/sweep.stdout.json
@@ -43,7 +43,7 @@ target/release/fred sweep --wafers 4 --models resnet152 --max-strategies 4 \
     --xwafer-topo tree --span pp \
     --json --out /tmp/sweep_pp.json > /tmp/sweep_pp.stdout.json
 cmp /tmp/sweep_pp.json /tmp/sweep_pp.stdout.json
-grep -q '"schema_version":6' /tmp/sweep_pp.json
+grep -q '"schema_version":7' /tmp/sweep_pp.json
 grep -q '"xwafer_topo":"tree"' /tmp/sweep_pp.json
 grep -q '"wafer_span":"pp"' /tmp/sweep_pp.json
 rm -f /tmp/sweep_pp.json /tmp/sweep_pp.stdout.json
@@ -55,7 +55,7 @@ target/release/fred sweep --wafers 4 --xwafer-topo tree --span mp \
     --models resnet152 --max-strategies 4 \
     --json --out /tmp/sweep_mp.json > /tmp/sweep_mp.stdout.json
 cmp /tmp/sweep_mp.json /tmp/sweep_mp.stdout.json
-grep -q '"schema_version":6' /tmp/sweep_mp.json
+grep -q '"schema_version":7' /tmp/sweep_mp.json
 grep -q '"wafer_span":"mp"' /tmp/sweep_mp.json
 grep -q '"global_mp"' /tmp/sweep_mp.json
 rm -f /tmp/sweep_mp.json /tmp/sweep_mp.stdout.json
@@ -67,7 +67,7 @@ target/release/fred sweep --wafers 2 --models t17b --max-strategies 4 \
     --overlap full --microbatches 8 \
     --json --out /tmp/sweep_ov.json > /tmp/sweep_ov.stdout.json
 cmp /tmp/sweep_ov.json /tmp/sweep_ov.stdout.json
-grep -q '"schema_version":6' /tmp/sweep_ov.json
+grep -q '"schema_version":7' /tmp/sweep_ov.json
 grep -q '"overlap":"full"' /tmp/sweep_ov.json
 grep -q '"microbatches":8' /tmp/sweep_ov.json
 grep -q '"exposed_total_s"' /tmp/sweep_ov.json
@@ -81,11 +81,33 @@ target/release/fred sweep --wafers 2 --models t17b --max-strategies 4 \
     --span pp --schedule 1f1b,zb \
     --json --out /tmp/sweep_sched.json > /tmp/sweep_sched.stdout.json
 cmp /tmp/sweep_sched.json /tmp/sweep_sched.stdout.json
-grep -q '"schema_version":6' /tmp/sweep_sched.json
+grep -q '"schema_version":7' /tmp/sweep_sched.json
 grep -q '"schedule":"1f1b"' /tmp/sweep_sched.json
 grep -q '"schedule":"zb"' /tmp/sweep_sched.json
 grep -q '"vstages"' /tmp/sweep_sched.json
 rm -f /tmp/sweep_sched.json /tmp/sweep_sched.stdout.json
+
+echo "== memory smoke (--mem prune --zero 1, schema v7 fields) =="
+# The memory-feasibility axes end to end through the real binary: ZeRO-1
+# sharding annotated on every point, the typed infeasible reason under
+# --mem rank, and the Table V T-1T default point dropped by --mem prune.
+target/release/fred sweep --models t17b --max-strategies 4 \
+    --mem prune --zero 1 \
+    --json --out /tmp/sweep_mem.json > /tmp/sweep_mem.stdout.json
+cmp /tmp/sweep_mem.json /tmp/sweep_mem.stdout.json
+grep -q '"schema_version":7' /tmp/sweep_mem.json
+grep -q '"zero":"1"' /tmp/sweep_mem.json
+grep -q '"mem_gb"' /tmp/sweep_mem.json
+grep -q '"mem_ok"' /tmp/sweep_mem.json
+grep -q '"mem_pruned"' /tmp/sweep_mem.json
+target/release/fred sweep --models t1t --strategies 1,20,1 --fabrics fred-d \
+    --mem rank --json > /tmp/sweep_mem_rank.json
+grep -q '"error_kind":"memory"' /tmp/sweep_mem_rank.json
+target/release/fred sweep --models t1t --strategies 1,20,1 --fabrics fred-d \
+    --mem prune --json > /tmp/sweep_mem_prune.json
+grep -q '"mem_pruned":1' /tmp/sweep_mem_prune.json
+rm -f /tmp/sweep_mem.json /tmp/sweep_mem.stdout.json \
+    /tmp/sweep_mem_rank.json /tmp/sweep_mem_prune.json
 
 echo "== gpipe golden gate (--schedule gpipe == the default, byte for byte) =="
 # The refactor's acceptance wall: routing the default sweep through the
@@ -99,6 +121,19 @@ target/release/fred sweep "${GOLDEN_ARGS[@]}" --schedule gpipe --threads 4 > /tm
 cmp /tmp/gp_default.json /tmp/gp_explicit.json
 cmp /tmp/gp_default.json /tmp/gp_threaded.json
 rm -f /tmp/gp_default.json /tmp/gp_explicit.json /tmp/gp_threaded.json
+
+echo "== memory golden gate (--mem off == the default, byte for byte) =="
+# The memory model's acceptance wall: the default sweep must not change a
+# single byte — explicit --mem off --zero 0 --recompute off is just the
+# default's spelling, at several thread counts.
+target/release/fred sweep "${GOLDEN_ARGS[@]}" --threads 1 > /tmp/mem_default.json
+target/release/fred sweep "${GOLDEN_ARGS[@]}" --mem off --zero 0 --recompute off \
+    --threads 1 > /tmp/mem_explicit.json
+target/release/fred sweep "${GOLDEN_ARGS[@]}" --mem off --zero 0 --recompute off \
+    --threads 4 > /tmp/mem_threaded.json
+cmp /tmp/mem_default.json /tmp/mem_explicit.json
+cmp /tmp/mem_default.json /tmp/mem_threaded.json
+rm -f /tmp/mem_default.json /tmp/mem_explicit.json /tmp/mem_threaded.json
 
 echo "== merge round-trip (sweep -> split -> merge -> cmp) =="
 # Shard the same grid on the fleet axis, merge the shards, and require
@@ -123,15 +158,15 @@ rm -f /tmp/merge_all.json /tmp/merge_s1.json /tmp/merge_s2.json \
 echo "== sweep determinism gate (--threads 1 vs --threads 4) =="
 # Byte-identity at any thread count, enforced in CI on the full span axis
 # (dp, pp, mp, and a mixed 2x2 span) *and* the schedule axes (overlap
-# modes x microbatch override x pipeline schedules) — not just in the
-# test suite.
+# modes x microbatch override x pipeline schedules x ZeRO x recompute
+# under --mem rank) — not just in the test suite.
 target/release/fred sweep --wafers 1,2,4 --models resnet152 --max-strategies 4 \
     --span dp,pp,mp,2x2 --overlap off,dp,full --microbatches 4 \
-    --schedule gpipe,1f1b,zb \
+    --schedule gpipe,1f1b,zb --zero 0,2 --recompute off,full --mem rank \
     --threads 1 --json > /tmp/sweep_t1.json
 target/release/fred sweep --wafers 1,2,4 --models resnet152 --max-strategies 4 \
     --span dp,pp,mp,2x2 --overlap off,dp,full --microbatches 4 \
-    --schedule gpipe,1f1b,zb \
+    --schedule gpipe,1f1b,zb --zero 0,2 --recompute off,full --mem rank \
     --threads 4 --json > /tmp/sweep_t4.json
 cmp /tmp/sweep_t1.json /tmp/sweep_t4.json
 rm -f /tmp/sweep_t1.json /tmp/sweep_t4.json

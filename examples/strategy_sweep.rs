@@ -26,13 +26,19 @@
 //!    — a flush schedule's bubble grows with pipeline depth at fixed
 //!    microbatches, so 1F1B's advantage over GPipe must widen as stages
 //!    are added, and zero-bubble must never trail 1F1B.
+//! 7. which recommendations actually *fit* (`--mem rank|prune`) — GPipe
+//!    holds every in-flight microbatch's activations, so at high
+//!    microbatch counts it blows past the 80 GB HBM that 1F1B's
+//!    depth-capped residency respects, and the memory-aware sweep must
+//!    flip the recommendation.
 //!
 //! Run: `cargo run --release --example strategy_sweep`
 
 use fred::coordinator::config::FabricKind;
+use fred::coordinator::memory::MemPolicy;
 use fred::coordinator::parallelism::{Strategy, WaferSpan};
 use fred::coordinator::stagegraph::PipeSchedule;
-use fred::coordinator::sweep::{run_sweep, SweepConfig, WaferDims};
+use fred::coordinator::sweep::{run_sweep, InfeasibleKind, SweepConfig, WaferDims};
 use fred::coordinator::timeline::OverlapMode;
 use fred::coordinator::workload;
 use fred::fabric::egress::EgressTopo;
@@ -318,11 +324,56 @@ fn main() {
         last_adv = adv;
     }
 
+    // -------- memory feasibility: gpipe vs 1f1b at high microbatch
+    println!(
+        "\n== memory feasibility: GPT-3 MP(1)-DP(10)-PP(2), 16 microbatches ==\n"
+    );
+    // The footprint model's question: which schedule actually *fits*?
+    // GPipe holds all 16 in-flight activation sets per stage while 1F1B
+    // caps residency at the pipeline depth, so under `--mem rank` GPipe
+    // must surface as typed memory-infeasible (ranked below the feasible
+    // point) and under `--mem prune` it must vanish from the report —
+    // the memory-aware sweep flips the recommendation to 1F1B.
+    let mem_cfg = SweepConfig {
+        workloads: vec![workload::gpt3()],
+        wafers: vec![WaferDims::PAPER],
+        strategies: Some(vec![Strategy::new(1, 10, 2)]),
+        microbatches: vec![16],
+        schedules: vec![PipeSchedule::GPipe, PipeSchedule::OneF1B],
+        mem: MemPolicy::Rank,
+        fabrics: vec![FabricKind::FredD],
+        bench_bytes: 100e6,
+        ..SweepConfig::default()
+    };
+    let ranked = run_sweep(&mem_cfg);
+    print!("{}", ranked.render_table(8));
+    assert_eq!(ranked.points.len(), 2);
+    let fits = &ranked.points[0];
+    let over = &ranked.points[1];
+    assert_eq!(fits.schedule, PipeSchedule::OneF1B);
+    assert!(fits.outcome.is_ok() && fits.mem_ok, "1f1b must fit: {:.1} GB", fits.mem_gb);
+    assert_eq!(over.schedule, PipeSchedule::GPipe);
+    assert!(!over.mem_ok && over.mem_gb > 80.0, "gpipe must blow HBM: {:.1} GB", over.mem_gb);
+    match &over.outcome {
+        Err(e) => assert_eq!(e.kind, InfeasibleKind::Memory),
+        Ok(_) => panic!("gpipe must be memory-infeasible under --mem rank"),
+    }
+    let pruned = run_sweep(&SweepConfig { mem: MemPolicy::Prune, ..mem_cfg });
+    assert_eq!(pruned.points.len(), 1, "--mem prune must drop the gpipe point");
+    assert_eq!(pruned.mem_pruned, 1, "exactly the gpipe point is dropped");
+    assert_eq!(pruned.points[0].schedule, PipeSchedule::OneF1B);
+    println!(
+        "gpipe {:.1} GB/NPU (> 80 GB HBM) vs 1f1b {:.1} GB — `--mem prune` drops \
+         gpipe and the recommendation flips to 1f1b",
+        over.mem_gb, fits.mem_gb
+    );
+
     println!(
         "\nmachine-readable: `fred sweep --models gpt3 --wafers 1,2,4,8,16 \
          --fabrics fred-d --xwafer-bw 1152,2304 --xwafer-topo ring,tree,dragonfly \
          --span dp,pp,mp,2x2 --overlap off,full --microbatches 2,8 \
-         --schedule gpipe,1f1b,zb --json \
+         --schedule gpipe,1f1b,zb --zero 0,1,2 --recompute off,full \
+         --mem rank --json \
          --out sweep.json`; shard across machines and recombine with \
          `fred merge shard1.json shard2.json --out sweep.json`"
     );

@@ -16,6 +16,7 @@
 //! Run: `cargo bench --bench bench_sweep`
 
 use fred::coordinator::config::FabricKind;
+use fred::coordinator::memory::{MemPolicy, Recompute, ZeroStage};
 use fred::coordinator::parallelism::WaferSpan;
 use fred::coordinator::stagegraph::PipeSchedule;
 use fred::coordinator::sweep::{factorizations, run_sweep, SweepConfig, WaferDims};
@@ -139,6 +140,27 @@ fn main() {
             },
         ),
         (
+            "t17b | 3 zero x 2 recompute x 2 sched | fred-d | 6 strat",
+            // The memory axes in isolation: ZeRO stages and recompute
+            // multiply the point count 6x but only recompute=full changes
+            // pricing (the 4/3 forward re-run), so points/s here shows
+            // what the footprint model and the widened cross-product cost
+            // the engine under --mem rank.
+            {
+                let mut c = cfg(
+                    vec![workload::transformer_17b()],
+                    vec![WaferDims::PAPER],
+                    vec![FabricKind::FredD],
+                    6,
+                );
+                c.schedules = vec![PipeSchedule::GPipe, PipeSchedule::OneF1B];
+                c.zeros = ZeroStage::all().to_vec();
+                c.recomputes = Recompute::all().to_vec();
+                c.mem = MemPolicy::Rank;
+                c
+            },
+        ),
+        (
             "t17b | 4W x mp + 2x2 span | fred-d | 6 strat",
             // The ISSUE 4 axis in isolation: per-layer egress All-Reduces
             // (MP span) and the two-dimensional mixed span are the most
@@ -223,6 +245,9 @@ fn main() {
     // counts.
     base.overlaps = vec![OverlapMode::Off, OverlapMode::Full];
     base.microbatches = vec![4];
+    // ... as must the memory axes (footprint annotation + ZeRO sharding).
+    base.zeros = vec![ZeroStage::Z0, ZeroStage::Z1];
+    base.mem = MemPolicy::Rank;
 
     let mut seq_cfg = base.clone();
     seq_cfg.threads = 1;

@@ -1,8 +1,9 @@
 //! Command-line interface (hand-rolled; no `clap` offline).
 
 use crate::coordinator::{
-    config::FabricKind, metrics::CommType, parallelism::Strategy, parallelism::WaferSpan,
-    placement, placement::Placement, sim::Simulator, stagegraph::PipeSchedule, sweep,
+    config::FabricKind, memory::MemPolicy, memory::Recompute, memory::ZeroStage,
+    metrics::CommType, parallelism::Strategy, parallelism::WaferSpan, placement,
+    placement::Placement, sim::Simulator, stagegraph::PipeSchedule, sweep,
     sweep::SweepConfig, sweep::WaferDims, timeline::OverlapMode, workload::Workload,
 };
 use crate::fabric::egress::EgressTopo;
@@ -56,6 +57,7 @@ COMMANDS:
                [--xwafer-topo ring,tree,dragonfly] [--span dp,pp,mp,PPxDP]
                [--overlap off,dp,full] [--microbatches N[,N..]]
                [--schedule gpipe,1f1b,interleaved,zb] [--vstages N]
+               [--zero 0,1,2] [--recompute off,full] [--mem off|rank|prune]
                [--threads N] [--top N] [--bytes N] [--json] [--out FILE]
                Strategy/topology sweep engine: enumerates fabric x wafer
                shape x fleet size x MP/DP/PP factorization x workload,
@@ -107,7 +109,8 @@ COMMANDS:
                JSON points carry the span decomposition (`wafer_span`,
                `global_mp`/`global_dp`/`global_pp`, `span_*_wafers`) and
                the schedule axes (`overlap`, `microbatches`, `schedule`,
-               `vstages`, `exposed_total_s`) at `schema_version: 6`.
+               `vstages`, `exposed_total_s`) and the memory axes (`zero`,
+               `recompute`, `mem_gb`, `mem_ok`) at `schema_version: 7`.
 
                ## Overlap
                An iteration is priced by the phase-timeline engine: every
@@ -180,17 +183,55 @@ COMMANDS:
                streaming engine already pays stage boundaries per
                microbatch and double-buffers layer slices, so there is
                no warmup/drain bubble for a schedule to shrink.
+
+               ## Memory
+               Every point carries a modeled per-NPU footprint (`mem`
+               table column; `mem_gb`/`mem_ok` in JSON): fp16 weights
+               and gradients sharded over global MP x PP, Adam optimizer
+               state at 6x the fp16 weights (fp32 master + two moments;
+               off-wafer for weight-streaming workloads), and the
+               activation working set the *schedule* implies — gpipe
+               holds all in-flight microbatches, 1f1b/zb cap residency
+               at pipeline depth, interleaved at the same depth across
+               its virtual chunks. Two knobs shrink it (sweepable):
+                 --zero 0,1,2       ZeRO stage: 1 shards optimizer state
+                                    across the DP group, 2 also shards
+                                    gradients. Footprint-only — the
+                                    reduce-scatter + all-gather moves
+                                    All-Reduce's volume, so pricing is
+                                    unchanged.
+                 --recompute full   drop activations to stage boundaries
+                                    and re-run the forward during
+                                    backward; prices the extra forward
+                                    (4/3x compute) into the timeline.
+               --mem picks what to do when the footprint exceeds the
+               80 GB HBM (Table II):
+                 off    annotate only — pricing and ranking are byte-
+                        identical to a memory-blind sweep (default).
+                 rank   mark over-budget points `infeasible(memory)`,
+                        ranked below feasible points but above fluid
+                        deadlocks (the typed `error_kind` JSON field
+                        tells them apart).
+                 prune  drop them from the report (counted in the
+                        top-level `mem_pruned` JSON field, never
+                        silently).
+               The memory-blind ranking bug this fixes: gpipe at high
+               microbatch counts outranks 1f1b on paper, but needs all
+               `mb` activation sets resident — e.g. gpt3 at MP1-DP10-PP2
+               x 16 microbatches is 132 GB/NPU under gpipe (infeasible)
+               vs 29 GB under 1f1b; `--mem rank` surfaces the flip.
                Example: fred sweep --wafers 1,2,4,8 --models gpt3
                         --fabrics fred-d --xwafer-bw 1152,2304
                         --xwafer-topo ring,tree --span dp,pp,mp,2x4
                         --overlap off,full --microbatches 2,8
-                        --schedule gpipe,1f1b,zb --json
+                        --schedule gpipe,1f1b,zb --zero 0,1
+                        --recompute off,full --mem rank --json
   merge        FILE [FILE..] [--out FILE]
                Merge several `fred sweep --json` documents (a sweep
                sharded across machines: shard on disjoint fleet sizes,
                workloads, or bandwidths) into one re-ranked document on
                stdout (and --out FILE). All inputs must carry the current
-               `schema_version` (6) — mismatches are rejected, never
+               `schema_version` (7) — mismatches are rejected, never
                silently mixed. Merging the shards of a split grid
                reproduces the unsharded sweep byte for byte when the
                shards use explicit --strategies (or an uncapped
@@ -528,6 +569,50 @@ fn cmd_sweep(opts: &Opts) -> i32 {
             }
         }
     }
+    // ZeRO sharding stages: --zero 0,1,2 (footprint-only axis).
+    let mut zeros = Vec::new();
+    if let Some(list) = opts.get("zero") {
+        for t in comma_list(list) {
+            match ZeroStage::parse(t) {
+                Some(z) => zeros.push(z),
+                None => {
+                    eprintln!("bad --zero `{t}` (0, 1, 2)");
+                    return 2;
+                }
+            }
+        }
+    }
+    if zeros.is_empty() {
+        zeros.push(ZeroStage::Z0);
+    }
+    // Activation recompute: --recompute off,full.
+    let mut recomputes = Vec::new();
+    if let Some(list) = opts.get("recompute") {
+        for t in comma_list(list) {
+            match Recompute::parse(t) {
+                Some(r) => recomputes.push(r),
+                None => {
+                    eprintln!("bad --recompute `{t}` (off, full)");
+                    return 2;
+                }
+            }
+        }
+    }
+    if recomputes.is_empty() {
+        recomputes.push(Recompute::Off);
+    }
+    // Memory feasibility policy: --mem off|rank|prune (a single policy,
+    // not a swept axis — it decides what happens to over-HBM points).
+    let mem = match opts.get("mem") {
+        None => MemPolicy::Off,
+        Some(t) => match MemPolicy::parse(t) {
+            Some(m) => m,
+            None => {
+                eprintln!("bad --mem `{t}` (off, rank, prune)");
+                return 2;
+            }
+        },
+    };
     // Fabrics: --fabrics all | baseline,fred-a,...
     let fabrics_arg = opts.get("fabrics").or_else(|| opts.get("fabric")).unwrap_or("all");
     let fabrics: Vec<FabricKind> = if fabrics_arg == "all" {
@@ -595,6 +680,9 @@ fn cmd_sweep(opts: &Opts) -> i32 {
         microbatches,
         schedules,
         vstages,
+        zeros,
+        recomputes,
+        mem,
         max_strategies,
         bench_bytes,
         threads,
@@ -625,6 +713,12 @@ fn cmd_sweep(opts: &Opts) -> i32 {
         println!(
             "(note: {} auto-enumerated strategies dropped by --max-strategies {max_strategies})",
             report.truncated_strategies
+        );
+    }
+    if report.mem_pruned > 0 {
+        println!(
+            "(note: {} memory-infeasible points dropped by --mem prune)",
+            report.mem_pruned
         );
     }
     print!("{}", report.render_table(top));

@@ -1,0 +1,381 @@
+//! Per-NPU memory footprint model: the `--zero` / `--recompute` axes
+//! and the `--mem` feasibility policy.
+//!
+//! The sweep previously assumed every point fits in HBM, so it happily
+//! ranked GPipe at high microbatch counts above 1F1B even though the
+//! stage-graph docs say "1F1B famously saves memory, not bubble" — a
+//! bug for any operating point whose weights + optimizer state +
+//! in-flight activations exceed the per-NPU 80 GB of paper Table II
+//! (Sec. III-A is explicitly a memory-capacity story: stationary models
+//! fit, streaming ones do not). WATOS (arXiv 2512.12279) shows
+//! memory-constraint-aware strategy search changes *which* mappings win
+//! on wafer-scale chips, so the footprint is now a first-class model:
+//!
+//! * **Stationary state** — fp16 weights sharded across the model axes
+//!   (`params / (mp × pp)`), an fp16 gradient buffer of the same size,
+//!   and Adam optimizer state at [`ADAM_OPT_MULTIPLIER`]`×` the fp16
+//!   weights (fp32 master + two fp32 moments = 12 bytes/param — the
+//!   ZeRO paper's `K = 12` bookkeeping). [`ZeroStage`] shards the
+//!   optimizer (stage 1) and the gradients (stage 2) across the DP
+//!   group on top. Weight-streaming workloads keep only the active
+//!   layer group resident (double-buffered), with master weights and
+//!   optimizer state off-wafer — ZeRO has nothing left to shard there.
+//! * **Activation working set** — derived from the *schedule*, not
+//!   assumed: GPipe holds all `mb` microbatch activations per stage,
+//!   1F1B/zero-bubble cap in-flight activations at pipeline depth,
+//!   interleaved holds `v` live chunks of a `1/v`-sized per-chunk set
+//!   (the `v`s cancel into the same depth cap) — see
+//!   [`stagegraph::in_flight_microbatches`]. [`Recompute::Full`]
+//!   shrinks residency to the stage-boundary tensors plus one layer's
+//!   re-forward working set, and the simulator prices the extra
+//!   forward-recompute phase into the timeline.
+//!
+//! [`MemPolicy`] decides what the sweep does with an over-budget point:
+//! `off` (default) only annotates — pricing and ranking are
+//! byte-identical to a memory-blind sweep; `rank` marks the point
+//! memory-infeasible (typed, below feasible but above fluid-deadlock
+//! points); `prune` drops memory-infeasible points from the report.
+
+use super::config;
+use super::stagegraph::{self, PipeSchedule};
+use super::workload::{ExecMode, Workload};
+
+/// Adam optimizer bytes per fp16 weight byte: fp32 master copy + fp32
+/// first and second moments = 12 bytes per parameter = 6× the 2-byte
+/// fp16 weight.
+pub const ADAM_OPT_MULTIPLIER: f64 = 6.0;
+
+/// Resident working set of a layer relative to its boundary output
+/// tensor: the input held for backward plus intermediate buffers
+/// (attention scores, dropout masks) kept alongside the output itself.
+pub const ACT_RESIDENCY_FACTOR: f64 = 3.0;
+
+/// ZeRO optimizer-state sharding stage — the `--zero` sweep axis.
+/// Ordered so `>=` comparisons read as "shards at least this much".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ZeroStage {
+    /// No sharding: every DP replica holds full optimizer state.
+    Z0,
+    /// Optimizer state sharded across the DP group (ZeRO-1).
+    Z1,
+    /// Optimizer state and gradients sharded across the DP group
+    /// (ZeRO-2).
+    Z2,
+}
+
+impl ZeroStage {
+    /// Every stage, in CLI/report order.
+    pub fn all() -> [ZeroStage; 3] {
+        [ZeroStage::Z0, ZeroStage::Z1, ZeroStage::Z2]
+    }
+
+    /// Name used on the CLI and in reports/JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ZeroStage::Z0 => "0",
+            ZeroStage::Z1 => "1",
+            ZeroStage::Z2 => "2",
+        }
+    }
+
+    /// Parse a CLI name (`0` / `1` / `2`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "0" | "z0" => Some(ZeroStage::Z0),
+            "1" | "z1" => Some(ZeroStage::Z1),
+            "2" | "z2" => Some(ZeroStage::Z2),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ZeroStage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Activation recomputation — the `--recompute` sweep axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Recompute {
+    /// Keep every in-flight activation (default).
+    Off,
+    /// Full recompute: keep stage-boundary tensors only, re-run the
+    /// forward during backward (the simulator prices the extra forward
+    /// as a compute phase).
+    Full,
+}
+
+impl Recompute {
+    /// Every mode, in CLI/report order.
+    pub fn all() -> [Recompute; 2] {
+        [Recompute::Off, Recompute::Full]
+    }
+
+    /// Name used on the CLI and in reports/JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Recompute::Off => "off",
+            Recompute::Full => "full",
+        }
+    }
+
+    /// Parse a CLI name (`off` / `full`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" => Some(Recompute::Off),
+            "full" => Some(Recompute::Full),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Recompute {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What the sweep does with a point whose footprint exceeds HBM — the
+/// `--mem` policy flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemPolicy {
+    /// Annotate only: `mem_gb`/`mem_ok` are reported but pricing and
+    /// ranking are byte-identical to a memory-blind sweep (default).
+    Off,
+    /// Mark over-budget points memory-infeasible: typed reason, ranked
+    /// below feasible points but above fluid-deadlock points.
+    Rank,
+    /// Drop memory-infeasible points from the report entirely.
+    Prune,
+}
+
+impl MemPolicy {
+    /// Every policy, in CLI/report order.
+    pub fn all() -> [MemPolicy; 3] {
+        [MemPolicy::Off, MemPolicy::Rank, MemPolicy::Prune]
+    }
+
+    /// Name used on the CLI.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MemPolicy::Off => "off",
+            MemPolicy::Rank => "rank",
+            MemPolicy::Prune => "prune",
+        }
+    }
+
+    /// Parse a CLI name (`off` / `rank` / `prune`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" => Some(MemPolicy::Off),
+            "rank" => Some(MemPolicy::Rank),
+            "prune" => Some(MemPolicy::Prune),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for MemPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The per-NPU footprint, term by term (bytes).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Footprint {
+    /// Resident fp16 weights.
+    pub weights: f64,
+    /// Resident fp16 gradient buffer.
+    pub grads: f64,
+    /// Resident Adam optimizer state (zero for weight streaming).
+    pub optimizer: f64,
+    /// In-flight activation working set.
+    pub activations: f64,
+}
+
+impl Footprint {
+    /// Total resident bytes.
+    pub fn total(&self) -> f64 {
+        self.weights + self.grads + self.optimizer + self.activations
+    }
+
+    /// Total in GB (the `mem_gb` report field).
+    pub fn gb(&self) -> f64 {
+        self.total() / 1e9
+    }
+
+    /// Does this fit the per-NPU HBM (Table II: 80 GB)?
+    pub fn fits(&self) -> bool {
+        self.total() <= config::HBM_CAPACITY
+    }
+}
+
+/// The per-NPU footprint of one operating point. Dimensions are the
+/// *global* MP/DP/PP factors (wafer-spanning strategies shard across
+/// the whole fleet); `microbatches` splits the per-replica minibatch of
+/// [`config::SAMPLES_PER_REPLICA`] samples. A balanced-shard
+/// approximation — every NPU holds `1/(mp×pp)` of the model and its
+/// pipeline stage's share of the activations — which keeps the model
+/// monotone in each sharding axis by construction.
+#[allow(clippy::too_many_arguments)]
+pub fn footprint(
+    w: &Workload,
+    mp_global: usize,
+    dp_global: usize,
+    pp_global: usize,
+    schedule: PipeSchedule,
+    vstages: usize,
+    microbatches: usize,
+    zero: ZeroStage,
+    recompute: Recompute,
+) -> Footprint {
+    let mp = mp_global.max(1) as f64;
+    let dp = dp_global.max(1) as f64;
+    let pp = pp_global.max(1) as f64;
+    let mb = microbatches.max(1);
+
+    let (weights, mut grads, mut optimizer) = match w.exec_mode {
+        ExecMode::WeightStationary => {
+            let shard = w.params_bytes() / (mp * pp);
+            (shard, shard, ADAM_OPT_MULTIPLIER * shard)
+        }
+        ExecMode::WeightStreaming => {
+            // Only the active layer group is resident (double-buffered
+            // for the prefetch pipeline); master weights and optimizer
+            // state live off-wafer, so ZeRO has nothing left to shard.
+            let max_layer = w.layers.iter().map(|l| l.params_bytes).fold(0.0, f64::max);
+            let resident = 2.0 * max_layer / mp;
+            (resident, resident, 0.0)
+        }
+    };
+    if w.exec_mode == ExecMode::WeightStationary {
+        if zero >= ZeroStage::Z1 {
+            optimizer /= dp;
+        }
+        if zero >= ZeroStage::Z2 {
+            grads /= dp;
+        }
+    }
+
+    // One microbatch's activation slice of this NPU's stage, times the
+    // schedule's in-flight depth.
+    let mb_samples = config::SAMPLES_PER_REPLICA as f64 / mb as f64;
+    let in_flight = stagegraph::in_flight_microbatches(schedule, pp_global.max(1), mb, vstages);
+    let total_act: f64 = w.layers.iter().map(|l| l.act_bytes).sum();
+    let per_mb = total_act * mb_samples * ACT_RESIDENCY_FACTOR / (mp * pp);
+    let mut activations = per_mb * in_flight;
+    if recompute == Recompute::Full {
+        // Keep only the stage-boundary tensor per in-flight microbatch
+        // plus one layer's working set for the re-forward; the clamp
+        // guarantees recompute never increases the activation term.
+        let max_layer_act = w.layers.iter().map(|l| l.act_bytes).fold(0.0, f64::max);
+        let boundary = max_layer_act * mb_samples * ACT_RESIDENCY_FACTOR / mp;
+        activations = activations.min(boundary * in_flight + boundary);
+    }
+
+    Footprint { weights, grads, optimizer, activations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::workload::{gpt3, resnet152, transformer_17b, transformer_1t};
+
+    fn fp(
+        w: &Workload,
+        (mp, dp, pp): (usize, usize, usize),
+        sched: PipeSchedule,
+        mb: usize,
+        zero: ZeroStage,
+        rc: Recompute,
+    ) -> Footprint {
+        footprint(w, mp, dp, pp, sched, 1, mb, zero, rc)
+    }
+
+    #[test]
+    fn parse_name_round_trips_and_ordering() {
+        for z in ZeroStage::all() {
+            assert_eq!(ZeroStage::parse(z.name()), Some(z));
+            assert_eq!(z.to_string(), z.name());
+        }
+        for r in Recompute::all() {
+            assert_eq!(Recompute::parse(r.name()), Some(r));
+            assert_eq!(r.to_string(), r.name());
+        }
+        for m in MemPolicy::all() {
+            assert_eq!(MemPolicy::parse(m.name()), Some(m));
+            assert_eq!(m.to_string(), m.name());
+        }
+        assert_eq!(ZeroStage::parse(" Z1 "), Some(ZeroStage::Z1));
+        assert_eq!(ZeroStage::parse("3"), None);
+        assert_eq!(Recompute::parse("sometimes"), None);
+        assert_eq!(MemPolicy::parse("maybe"), None);
+        assert!(ZeroStage::Z0 < ZeroStage::Z1 && ZeroStage::Z1 < ZeroStage::Z2);
+        assert!(Recompute::Off < Recompute::Full);
+    }
+
+    #[test]
+    fn footprint_terms_sum_and_gate_on_hbm() {
+        let f = Footprint { weights: 10e9, grads: 10e9, optimizer: 50e9, activations: 5e9 };
+        assert_eq!(f.total(), 75e9);
+        assert_eq!(f.gb(), 75.0);
+        assert!(f.fits());
+        let over = Footprint { activations: 81e9, ..Default::default() };
+        assert!(!over.fits());
+    }
+
+    #[test]
+    fn table_v_defaults_fit_except_the_1t_model() {
+        // Sec. III-A at the Table V operating points: ResNet-152,
+        // T-17B (stationary) and GPT-3 (streaming) fit in 80 GB;
+        // Transformer-1T's full-minibatch activation set does not —
+        // the point `--mem prune` excludes — until full recompute
+        // shrinks it to boundary tensors.
+        for w in [resnet152(), transformer_17b(), gpt3()] {
+            let s = w.default_strategy;
+            let f = fp(&w, (s.mp, s.dp, s.pp), PipeSchedule::GPipe, w.microbatches, ZeroStage::Z0, Recompute::Off);
+            assert!(f.fits(), "{}: {:.1} GB", w.name, f.gb());
+        }
+        let w = transformer_1t();
+        let s = w.default_strategy;
+        let f = fp(&w, (s.mp, s.dp, s.pp), PipeSchedule::GPipe, w.microbatches, ZeroStage::Z0, Recompute::Off);
+        assert!(!f.fits(), "T-1T must exceed HBM without recompute: {:.1} GB", f.gb());
+        let r = fp(&w, (s.mp, s.dp, s.pp), PipeSchedule::GPipe, w.microbatches, ZeroStage::Z0, Recompute::Full);
+        assert!(r.fits(), "T-1T with full recompute: {:.1} GB", r.gb());
+    }
+
+    #[test]
+    fn gpipe_vs_1f1b_feasibility_flips_for_gpt3_at_high_microbatch() {
+        // The ranking bug this module exists to fix: at MP(1)-DP(10)-
+        // PP(2) with 16 microbatches, GPipe holds all 16 in-flight
+        // activation sets and blows past 80 GB while 1F1B caps
+        // residency at the pipeline depth and fits.
+        let w = gpt3();
+        let g = fp(&w, (1, 10, 2), PipeSchedule::GPipe, 16, ZeroStage::Z0, Recompute::Off);
+        let f = fp(&w, (1, 10, 2), PipeSchedule::OneF1B, 16, ZeroStage::Z0, Recompute::Off);
+        assert!(!g.fits(), "gpipe: {:.1} GB", g.gb());
+        assert!(f.fits(), "1f1b: {:.1} GB", f.gb());
+        assert!(g.activations > f.activations);
+    }
+
+    #[test]
+    fn zero_shards_optimizer_then_gradients_across_dp() {
+        let w = transformer_17b();
+        let dims = (3, 3, 2);
+        let z0 = fp(&w, dims, PipeSchedule::GPipe, 8, ZeroStage::Z0, Recompute::Off);
+        let z1 = fp(&w, dims, PipeSchedule::GPipe, 8, ZeroStage::Z1, Recompute::Off);
+        let z2 = fp(&w, dims, PipeSchedule::GPipe, 8, ZeroStage::Z2, Recompute::Off);
+        assert_eq!(z1.optimizer, z0.optimizer / 3.0);
+        assert_eq!(z1.grads, z0.grads);
+        assert_eq!(z2.grads, z0.grads / 3.0);
+        assert!(z0.total() > z1.total() && z1.total() > z2.total());
+        // Streaming keeps no optimizer state on-wafer: ZeRO is a no-op.
+        let w = gpt3();
+        let s0 = fp(&w, (2, 5, 2), PipeSchedule::GPipe, 2, ZeroStage::Z0, Recompute::Off);
+        let s2 = fp(&w, (2, 5, 2), PipeSchedule::GPipe, 2, ZeroStage::Z2, Recompute::Off);
+        assert_eq!(s0.optimizer, 0.0);
+        assert_eq!(s0.total(), s2.total());
+    }
+}

@@ -12,6 +12,9 @@
 //!   and weight-streaming execution modes (Sec. III-A), GPipe-style
 //!   microbatch pipelining (the analytic closed forms, kept as the
 //!   GPipe test oracle).
+//! * [`memory`] — the per-NPU footprint model (ZeRO-sharded optimizer
+//!   state, schedule-derived activation residency, recompute): the
+//!   `--zero` / `--recompute` axes and the `--mem` feasibility policy.
 //! * [`stagegraph`] — microbatch-level pipeline stage graphs: the
 //!   `--schedule` axis (gpipe / 1f1b / interleaved / zb) priced by a
 //!   deterministic per-stage-lane list scheduler.
@@ -27,6 +30,7 @@
 //!   ranked.
 
 pub mod config;
+pub mod memory;
 pub mod metrics;
 pub mod parallelism;
 pub mod placement;
@@ -38,6 +42,7 @@ pub mod timeline;
 pub mod workload;
 
 pub use config::FabricKind;
+pub use memory::{Footprint, MemPolicy, Recompute, ZeroStage};
 pub use metrics::{Breakdown, CommType};
 pub use parallelism::{ScaledStrategy, Strategy, WaferSpan};
 pub use placement::Placement;

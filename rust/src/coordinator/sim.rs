@@ -38,6 +38,7 @@
 //!   the backward sweep.
 
 use super::config::{self, FabricKind};
+use super::memory::{self, Footprint, Recompute, ZeroStage};
 use super::metrics::{Breakdown, CommType};
 use super::parallelism::{ScaledStrategy, Strategy, WaferSpan};
 use super::placement::Placement;
@@ -79,6 +80,14 @@ pub struct Simulator {
     /// [`PipeSchedule::Interleaved`] (clamped per point to the layers a
     /// stage actually holds); ignored by the other schedules.
     vstages: usize,
+    /// ZeRO optimizer-state sharding stage (the `--zero` axis). Affects
+    /// the footprint only — RS+AG traffic is volume-equivalent to the
+    /// All-Reduce already priced, so pricing is unchanged.
+    zero: ZeroStage,
+    /// Activation recompute (the `--recompute` axis). `Full` shrinks
+    /// the activation footprint to boundary tensors and prices the
+    /// extra forward-recompute work into the timeline.
+    recompute: Recompute,
 }
 
 impl Simulator {
@@ -122,6 +131,8 @@ impl Simulator {
             overlap,
             schedule: PipeSchedule::GPipe,
             vstages: 1,
+            zero: ZeroStage::Z0,
+            recompute: Recompute::Off,
         }
     }
 
@@ -187,6 +198,49 @@ impl Simulator {
         self.schedule = schedule;
         self.vstages = vstages;
         self
+    }
+
+    /// Choose the ZeRO optimizer-sharding stage and activation-recompute
+    /// mode (the `--zero` / `--recompute` axes). The defaults
+    /// ([`ZeroStage::Z0`], [`Recompute::Off`]) keep pricing bit-identical
+    /// to the memory-blind path; [`Recompute::Full`] prices the
+    /// forward-recompute into the timeline (stationary: one extra
+    /// forward's pipeline makespan; streaming: 3× instead of 2× backward
+    /// compute per layer group), while ZeRO only ever moves the
+    /// footprint.
+    pub fn with_memory(mut self, zero: ZeroStage, recompute: Recompute) -> Self {
+        self.zero = zero;
+        self.recompute = recompute;
+        self
+    }
+
+    /// The active ZeRO stage.
+    pub fn zero(&self) -> ZeroStage {
+        self.zero
+    }
+
+    /// The active recompute mode.
+    pub fn recompute(&self) -> Recompute {
+        self.recompute
+    }
+
+    /// The per-NPU memory footprint of this operating point: weights +
+    /// gradients + optimizer state + schedule-derived in-flight
+    /// activations, evaluated at the fleet-wide *global* MP/DP/PP
+    /// dimensions (wafer-spanning strategies shard across the fleet).
+    pub fn footprint(&self) -> Footprint {
+        let scaled = self.scaled_strategy();
+        memory::footprint(
+            &self.workload,
+            scaled.global_mp(),
+            scaled.global_dp(),
+            scaled.global_pp(),
+            self.schedule,
+            self.vstages,
+            self.workload.microbatches,
+            self.zero,
+            self.recompute,
+        )
     }
 
     /// The active pipeline schedule.
@@ -566,6 +620,13 @@ impl Simulator {
         );
         let compute = price.compute;
         tl.serial_compute(compute);
+        if self.recompute == Recompute::Full {
+            // Full recompute re-runs the forward during backward: one
+            // extra forward's worth of pipeline makespan (the fwd third
+            // of the fwd + 2× bwd slot cost), priced as its own serial
+            // phase so the default path stays bit-identical.
+            tl.serial_compute(compute / 3.0);
+        }
         let mp_resource = if self.span.mp_factor(self.scaleout.wafers()) > 1 {
             Resource::Egress
         } else {
@@ -719,7 +780,11 @@ impl Simulator {
                                 / mp_global as f64
                         })
                         .sum();
-                    let comp = self.comp_time(flops) * if bwd { 2.0 } else { 1.0 };
+                    // Backward is 2× forward; full recompute re-runs
+                    // the group's forward first, making it 3×.
+                    let bwd_factor =
+                        if self.recompute == Recompute::Full { 3.0 } else { 2.0 };
+                    let comp = self.comp_time(flops) * if bwd { bwd_factor } else { 1.0 };
                     // MP comm inside the group (blocking, adds to the
                     // hideable window denominator's wall time); under an
                     // MP wafer span every layer's All-Reduce goes
@@ -882,23 +947,42 @@ impl Simulator {
     /// dimension spans wafers, and the PP round includes the cross-wafer
     /// boundary flows. On a single wafer this is exactly the per-wafer
     /// Fig. 9 metric. The standalone rounds form a three-phase timeline
-    /// priced by the engine; single serial phases are overlap-invariant,
-    /// so the metric does not depend on the `--overlap` axis.
+    /// priced by the engine, each tagged with the fabric tier the priced
+    /// flows actually cross — [`Resource::Egress`] when the phase's
+    /// dimension spans wafers, [`Resource::OnWafer`] otherwise. Single
+    /// serial phases are overlap-invariant, so the tags never move the
+    /// metric and it does not depend on the `--overlap` axis.
     pub fn try_microbench(&self, bytes: f64) -> Result<[Option<f64>; 3], FluidError> {
         use crate::fabric::collectives::endpoint_send_bytes;
         let scaled = self.scaled_strategy();
         let mp_global = scaled.global_mp();
         let dp_global = scaled.global_dp();
         let pp_global = scaled.global_pp();
+        let wafers = self.scaleout.wafers();
         let mut tl = Timeline::new();
         if mp_global > 1 {
-            tl.serial_comm(CommType::Mp, Resource::OnWafer, self.try_hier_mp_round(bytes)?);
+            let res = if self.span.mp_factor(wafers) > 1 {
+                Resource::Egress
+            } else {
+                Resource::OnWafer
+            };
+            tl.serial_comm(CommType::Mp, res, self.try_hier_mp_round(bytes)?);
         }
         if dp_global > 1 {
-            tl.serial_comm(CommType::Dp, Resource::OnWafer, self.try_hier_dp_round(bytes)?);
+            let res = if !self.scaleout.is_single() && self.span.dp_factor(wafers) > 1 {
+                Resource::Egress
+            } else {
+                Resource::OnWafer
+            };
+            tl.serial_comm(CommType::Dp, res, self.try_hier_dp_round(bytes)?);
         }
         if pp_global > 1 {
-            tl.serial_comm(CommType::Pp, Resource::OnWafer, self.try_pp_round(bytes)?);
+            let res = if self.span.pp_factor(wafers) > 1 {
+                Resource::Egress
+            } else {
+                Resource::OnWafer
+            };
+            tl.serial_comm(CommType::Pp, res, self.try_pp_round(bytes)?);
         }
         let bd = tl.price(self.overlap);
         let mp = (mp_global > 1).then(|| {
@@ -1110,6 +1194,93 @@ mod tests {
         let [mp_d, _, _] = d.microbench(139e6);
         let bw_d = mp_d.unwrap();
         assert!(bw_d > 5.0e12, "FRED-D {}", bw_d / 1e9);
+    }
+
+    #[test]
+    fn microbench_tags_cross_wafer_rounds_without_moving_fig9() {
+        use crate::fabric::collectives::endpoint_send_bytes;
+        use crate::fabric::scaleout::ScaleOut;
+        // The resource-tag fix is metadata-only: each round is a single
+        // serial phase, so the Fig. 9 metric must stay bit-identical to
+        // the direct round times — and overlap-invariant — on every
+        // wafer span, including the spans whose rounds cross the egress
+        // fabric.
+        let w = workload::transformer_17b();
+        let s = w.default_strategy; // MP(3)-DP(3)-PP(2): all phases present
+        let bytes = 139e6;
+        for span in [WaferSpan::Dp, WaferSpan::Pp, WaferSpan::Mp] {
+            let sim = Simulator::new(FabricKind::FredD, w.clone(), s)
+                .with_scaleout(ScaleOut::with_wafers(4))
+                .with_span(span);
+            let scaled = sim.scaled_strategy();
+            let [mp, dp, pp] = sim.try_microbench(bytes).expect("feasible");
+            let want_mp = endpoint_send_bytes(CollectiveKind::AllReduce, scaled.global_mp(), bytes)
+                / sim.try_hier_mp_round(bytes).unwrap();
+            let want_dp = endpoint_send_bytes(CollectiveKind::AllReduce, scaled.global_dp(), bytes)
+                / sim.try_hier_dp_round(bytes).unwrap();
+            let want_pp = bytes / sim.try_pp_round(bytes).unwrap();
+            assert_eq!(mp.unwrap().to_bits(), want_mp.to_bits(), "{}", span.name());
+            assert_eq!(dp.unwrap().to_bits(), want_dp.to_bits(), "{}", span.name());
+            assert_eq!(pp.unwrap().to_bits(), want_pp.to_bits(), "{}", span.name());
+            let full = Simulator::new(FabricKind::FredD, w.clone(), s)
+                .with_scaleout(ScaleOut::with_wafers(4))
+                .with_span(span)
+                .with_overlap(OverlapMode::Full);
+            let again = full.try_microbench(bytes).expect("feasible");
+            assert_eq!(again, [mp, dp, pp], "{}", span.name());
+        }
+    }
+
+    #[test]
+    fn footprint_tracks_global_dimensions_and_memory_knobs() {
+        use crate::fabric::scaleout::ScaleOut;
+        let w = workload::transformer_17b();
+        let s = w.default_strategy;
+        let one = Simulator::new(FabricKind::FredD, w.clone(), s);
+        assert_eq!(one.zero(), ZeroStage::Z0);
+        assert_eq!(one.recompute(), Recompute::Off);
+        let f1 = one.footprint();
+        assert!(f1.fits(), "{:.1} GB", f1.gb());
+        // A PP span deepens the pipeline: the per-NPU weight shard and
+        // activation slice both shrink.
+        let f4 = Simulator::new(FabricKind::FredD, w.clone(), s)
+            .with_scaleout(ScaleOut::with_wafers(4))
+            .with_span(WaferSpan::Pp)
+            .footprint();
+        assert!(f4.weights < f1.weights);
+        assert!(f4.total() < f1.total());
+        // ZeRO shards optimizer state; full recompute never grows the
+        // activation term.
+        let z = Simulator::new(FabricKind::FredD, w.clone(), s)
+            .with_memory(ZeroStage::Z2, Recompute::Full)
+            .footprint();
+        assert!(z.optimizer < f1.optimizer);
+        assert!(z.activations <= f1.activations);
+    }
+
+    #[test]
+    fn recompute_full_prices_an_extra_forward_pass() {
+        // Both arms re-run the forward during backward: compute grows by
+        // exactly the forward third (4/3× total), and ZeRO never touches
+        // pricing at all.
+        for w in [workload::transformer_17b(), workload::gpt3()] {
+            let s = w.default_strategy;
+            let off = Simulator::new(FabricKind::FredD, w.clone(), s).iterate();
+            let full = Simulator::new(FabricKind::FredD, w.clone(), s)
+                .with_memory(ZeroStage::Z0, Recompute::Full)
+                .iterate();
+            assert!(
+                (full.compute - off.compute * 4.0 / 3.0).abs() < 1e-9 * off.compute,
+                "{}: {} vs {}",
+                w.name,
+                full.compute,
+                off.compute
+            );
+            let z2 = Simulator::new(FabricKind::FredD, w.clone(), s)
+                .with_memory(ZeroStage::Z2, Recompute::Off)
+                .iterate();
+            assert_eq!(z2.total().to_bits(), off.total().to_bits(), "{}", w.name);
+        }
     }
 
     #[test]

@@ -434,6 +434,34 @@ pub fn price_schedule(
     }
 }
 
+/// How many microbatches' activations one stage holds resident at the
+/// schedule's peak — the activation-residency factor the
+///// [`memory`](super::memory) footprint model multiplies a stage's
+/// per-microbatch activation slice by. GPipe runs all forwards before
+/// any backward, so every one of the `microbatches` sets is live at
+/// once; 1F1B and zero-bubble drain each microbatch's backward before
+/// admitting another, capping residency at the pipeline depth
+/// (`min(mb, stages)` — "1F1B famously saves memory, not bubble");
+/// interleaved keeps `v` live chunks of a `1/v`-sized per-chunk set,
+/// and the `v`s cancel back into the same depth cap.
+pub fn in_flight_microbatches(
+    sched: PipeSchedule,
+    stages: usize,
+    microbatches: usize,
+    vstages: usize,
+) -> f64 {
+    let mb = microbatches.max(1) as f64;
+    let depth = microbatches.max(1).min(stages.max(1)) as f64;
+    match sched {
+        PipeSchedule::GPipe => mb,
+        PipeSchedule::OneF1B | PipeSchedule::Zb => depth,
+        PipeSchedule::Interleaved => {
+            let v = vstages.max(1) as f64;
+            (v * depth) / v
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -593,6 +621,33 @@ mod tests {
             let f = price_schedule(PipeSchedule::OneF1B, stages, 1, 1, &c);
             let want = stages as f64 * 3.0 * c.fwd_comp;
             assert!((f.compute - want).abs() < 1e-12, "stages={stages}");
+        }
+    }
+
+    #[test]
+    fn in_flight_depth_tracks_the_schedule() {
+        // GPipe holds every microbatch's activations at once; 1F1B and
+        // zero-bubble cap residency at pipeline depth.
+        assert_eq!(in_flight_microbatches(PipeSchedule::GPipe, 4, 16, 1), 16.0);
+        assert_eq!(in_flight_microbatches(PipeSchedule::OneF1B, 4, 16, 1), 4.0);
+        assert_eq!(in_flight_microbatches(PipeSchedule::Zb, 4, 16, 1), 4.0);
+        // Interleaved: v live chunks x a 1/v-sized per-chunk set — the
+        // v's cancel into the 1F1B depth cap.
+        for v in [1, 2, 4] {
+            assert_eq!(in_flight_microbatches(PipeSchedule::Interleaved, 4, 16, v), 4.0);
+        }
+        // A pipeline never holds more microbatches than exist.
+        assert_eq!(in_flight_microbatches(PipeSchedule::OneF1B, 8, 2, 1), 2.0);
+        // GPipe >= 1F1B everywhere, strictly when mb > stages.
+        for stages in [1, 2, 4, 8] {
+            for mb in [1, 2, 4, 8, 16] {
+                let g = in_flight_microbatches(PipeSchedule::GPipe, stages, mb, 1);
+                let f = in_flight_microbatches(PipeSchedule::OneF1B, stages, mb, 1);
+                assert!(g >= f, "stages={stages} mb={mb}");
+                if mb > stages {
+                    assert!(g > f, "stages={stages} mb={mb}");
+                }
+            }
         }
     }
 

@@ -30,6 +30,11 @@
 //!   pipelining — the LIBRA-style schedule axis),
 //! * **microbatch counts** — the GPipe pipelining depth, overriding each
 //!   workload's Table V default,
+//! * **memory knobs** — ZeRO optimizer-state sharding stages and
+//!   activation recompute ([`ZeroStage`], [`Recompute`]), with every
+//!   point's per-NPU footprint checked against HBM by
+//!   [`memory::footprint`](super::memory::footprint) under the
+//!   [`MemPolicy`] flag,
 //! * **workloads** — any subset of the four Table V models,
 //!
 //! runs each point through [`Simulator::try_iterate`], and ranks the
@@ -37,8 +42,12 @@
 //! of Fig. 2 — minibatch scales with *global* DP, so ranking raw
 //! iteration time would reward small-DP points). Each point also records
 //! the Fig. 9 effective-NPU-bandwidth metric for its dominant comm phase.
-//! Infeasible points (fluid deadlocks on degenerate shapes) degrade to
-//! typed errors and rank last instead of aborting the sweep.
+//! Infeasible points degrade to typed errors ([`PointError`]) and rank
+//! last instead of aborting the sweep — memory-infeasible points
+//! (over-HBM footprints under `--mem rank`/`prune`) ahead of fluid
+//! deadlocks, because an over-budget point is actionable (shard deeper,
+//! recompute, split microbatches) while a deadlocked shape is just
+//! degenerate.
 //!
 //! Point evaluation is embarrassingly parallel, so [`run_sweep`] shards
 //! the cross-product over `std::thread::scope` workers (std only — no
@@ -56,7 +65,8 @@
 //! scale-out invariants live in `tests/prop_sweep.rs` and
 //! `tests/prop_scaleout.rs`.
 
-use super::config::FabricKind;
+use super::config::{self, FabricKind};
+use super::memory::{MemPolicy, Recompute, ZeroStage};
 use super::metrics::{Breakdown, CommType};
 use super::parallelism::{ScaledStrategy, Strategy, WaferSpan};
 use super::sim::Simulator;
@@ -89,10 +99,15 @@ use std::collections::HashMap;
 /// `gpipe`/`1f1b`/`interleaved`/`zb`, and `vstages`) — every v5 field
 /// is intact, but two v6 points can now differ only in their pipeline
 /// schedule, so a v5 consumer keying points on the v5 fields would
-/// silently conflate them, hence the bump. This const is the single
-/// place the version lives — consumers (including `fred merge`) must
-/// check it before reading point fields.
-pub const SCHEMA_VERSION: f64 = 6.0;
+/// silently conflate them, hence the bump; v7 added the memory axes
+/// (`zero`: `0`/`1`/`2`, `recompute`: `off`/`full`), the per-point
+/// footprint fields (`mem_gb`, `mem_ok`), `error_kind`
+/// (`memory`/`fluid`) on infeasible points, and the top-level
+/// `mem_pruned` count — every v6 field is intact, but two v7 points can
+/// now differ only in their memory knobs, hence the bump. This const is
+/// the single place the version lives — consumers (including
+/// `fred merge`) must check it before reading point fields.
+pub const SCHEMA_VERSION: f64 = 7.0;
 
 /// A wafer shape: `n_l1` rows / L1 groups × `per_l1` columns / NPUs per
 /// group.
@@ -251,6 +266,22 @@ pub struct SweepConfig {
     /// schedules; clamped per point to the layers a stage holds). The
     /// CLI validates divisibility against the selected workloads.
     pub vstages: usize,
+    /// ZeRO optimizer-state sharding stages to sweep ([`ZeroStage`]).
+    /// An empty list falls back to [`ZeroStage::Z0`] — no sharding, the
+    /// memory-blind engine's implicit assumption.
+    pub zeros: Vec<ZeroStage>,
+    /// Activation recompute settings to sweep ([`Recompute`]). An empty
+    /// list falls back to [`Recompute::Off`]. `full` shrinks the
+    /// activation footprint to stage boundaries and prices the extra
+    /// re-forward into the timeline (4/3× compute).
+    pub recomputes: Vec<Recompute>,
+    /// Memory feasibility policy ([`MemPolicy`]): `Off` annotates every
+    /// point with `mem_gb`/`mem_ok` but prices and ranks byte-identically
+    /// to a memory-blind sweep; `Rank` turns over-HBM points into typed
+    /// memory-infeasible errors ranked below feasible points but above
+    /// fluid deadlocks; `Prune` additionally drops them from the report
+    /// (counted in [`SweepReport::mem_pruned`], never silently).
+    pub mem: MemPolicy,
     /// Cap on auto-enumerated strategies per wafer (truncation is
     /// deterministic and reported, never silent).
     pub max_strategies: usize,
@@ -278,6 +309,9 @@ impl Default for SweepConfig {
             microbatches: Vec::new(),
             schedules: vec![PipeSchedule::GPipe],
             vstages: 2,
+            zeros: vec![ZeroStage::Z0],
+            recomputes: vec![Recompute::Off],
+            mem: MemPolicy::Off,
             max_strategies: 12,
             bench_bytes: 100e6,
             threads: 0,
@@ -316,6 +350,69 @@ pub struct SweepMetrics {
     pub effective_bw: f64,
 }
 
+/// Why a sweep point is infeasible — the typed reason the table's
+/// status column, the JSON `error_kind` field, and the [three-tier
+/// rank](SweepReport) all key on. Ordered so memory-infeasible points
+/// rank ahead of fluid deadlocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum InfeasibleKind {
+    /// The per-NPU footprint exceeds HBM under `--mem rank`/`prune`.
+    Memory,
+    /// The fluid list scheduler could not price the point (a deadlocked
+    /// degenerate shape).
+    Fluid,
+}
+
+impl InfeasibleKind {
+    /// Name used in the table status column and the JSON `error_kind`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            InfeasibleKind::Memory => "memory",
+            InfeasibleKind::Fluid => "fluid",
+        }
+    }
+
+    /// Parse a JSON `error_kind` value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "memory" => Some(InfeasibleKind::Memory),
+            "fluid" => Some(InfeasibleKind::Fluid),
+            _ => None,
+        }
+    }
+}
+
+/// A typed infeasibility: the kind drives ranking and pruning, the
+/// message carries the human-readable detail. Previously every
+/// infeasible point collapsed to one opaque `infeasible: {e}` string,
+/// so consumers could not tell an over-budget placement (actionable)
+/// from a deadlocked degenerate shape (not).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PointError {
+    /// What made the point infeasible.
+    pub kind: InfeasibleKind,
+    /// Human-readable detail (footprint size / fluid error text).
+    pub msg: String,
+}
+
+impl PointError {
+    /// A memory-infeasibility with the given detail.
+    pub fn memory(msg: String) -> Self {
+        Self { kind: InfeasibleKind::Memory, msg }
+    }
+
+    /// A fluid-model infeasibility with the given detail.
+    pub fn fluid(msg: String) -> Self {
+        Self { kind: InfeasibleKind::Fluid, msg }
+    }
+}
+
+impl std::fmt::Display for PointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.kind.name(), self.msg)
+    }
+}
+
 /// One evaluated point of the cross-product.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
@@ -347,8 +444,19 @@ pub struct SweepPoint {
     /// Interleaving depth requested for this point (meaningful for
     /// `interleaved`; carried on every point so the JSON key is total).
     pub vstages: usize,
-    /// Metrics, or the typed-error string for infeasible points.
-    pub outcome: Result<SweepMetrics, String>,
+    /// ZeRO sharding stage this point's footprint assumed.
+    pub zero: ZeroStage,
+    /// Activation recompute setting this point was priced under.
+    pub recompute: Recompute,
+    /// Modeled per-NPU footprint in GB — computed for every point, even
+    /// under `--mem off` (the annotation is free; only *acting* on it is
+    /// policy-gated).
+    pub mem_gb: f64,
+    /// Whether the footprint fits the per-NPU HBM.
+    pub mem_ok: bool,
+    /// Metrics, or the typed infeasibility for points that could not be
+    /// priced (fluid deadlock) or were memory-gated (`--mem rank`/`prune`).
+    pub outcome: Result<SweepMetrics, PointError>,
 }
 
 impl SweepPoint {
@@ -366,6 +474,10 @@ pub struct SweepReport {
     pub points: Vec<SweepPoint>,
     /// Auto-enumerated strategies dropped by [`SweepConfig::max_strategies`].
     pub truncated_strategies: usize,
+    /// Memory-infeasible points dropped by [`MemPolicy::Prune`] (0 under
+    /// `off`/`rank`) — reported so a pruned sweep is never mistaken for
+    /// a complete one.
+    pub mem_pruned: usize,
 }
 
 /// One point of the cross-product, by value (cheap `Copy` data only —
@@ -386,6 +498,8 @@ struct PointSpec {
     microbatches: Option<usize>,
     schedule: PipeSchedule,
     vstages: usize,
+    zero: ZeroStage,
+    recompute: Recompute,
 }
 
 /// Per-thread prototype cache: fabrics are immutable link-graph models,
@@ -421,17 +535,30 @@ fn eval_point(cfg: &SweepConfig, spec: &PointSpec, cache: &mut ProtoCache) -> Sw
     .with_scaleout(scale)
     .with_span(spec.span)
     .with_overlap(spec.overlap)
-    .with_schedule(spec.schedule, spec.vstages);
-    let outcome = match sim.try_iterate() {
-        Ok(breakdown) => {
-            let per_sample = breakdown.total() / sim.global_minibatch().max(1) as f64;
-            let effective_bw = sim
-                .try_microbench(cfg.bench_bytes)
-                .map(|phases| phases.iter().flatten().copied().fold(0.0, f64::max))
-                .unwrap_or(0.0);
-            Ok(SweepMetrics { breakdown, per_sample, effective_bw })
+    .with_schedule(spec.schedule, spec.vstages)
+    .with_memory(spec.zero, spec.recompute);
+    // The footprint is annotated on every point; the policy only decides
+    // whether an over-budget one is still *priced*.
+    let footprint = sim.footprint();
+    let mem_gb = footprint.gb();
+    let mem_ok = footprint.fits();
+    let outcome = if cfg.mem != MemPolicy::Off && !mem_ok {
+        Err(PointError::memory(format!(
+            "{mem_gb:.1} GB footprint > {:.0} GB HBM",
+            config::HBM_CAPACITY / 1e9
+        )))
+    } else {
+        match sim.try_iterate() {
+            Ok(breakdown) => {
+                let per_sample = breakdown.total() / sim.global_minibatch().max(1) as f64;
+                let effective_bw = sim
+                    .try_microbench(cfg.bench_bytes)
+                    .map(|phases| phases.iter().flatten().copied().fold(0.0, f64::max))
+                    .unwrap_or(0.0);
+                Ok(SweepMetrics { breakdown, per_sample, effective_bw })
+            }
+            Err(e) => Err(PointError::fluid(e.to_string())),
         }
-        Err(e) => Err(e.to_string()),
     };
     SweepPoint {
         workload: workload.name.clone(),
@@ -447,6 +574,10 @@ fn eval_point(cfg: &SweepConfig, spec: &PointSpec, cache: &mut ProtoCache) -> Sw
         microbatches,
         schedule: spec.schedule,
         vstages: spec.vstages,
+        zero: spec.zero,
+        recompute: spec.recompute,
+        mem_gb,
+        mem_ok,
         outcome,
     }
 }
@@ -491,6 +622,16 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepReport {
         vec![PipeSchedule::GPipe]
     } else {
         cfg.schedules.clone()
+    };
+    let zeros: Vec<ZeroStage> = if cfg.zeros.is_empty() {
+        vec![ZeroStage::Z0]
+    } else {
+        cfg.zeros.clone()
+    };
+    let recomputes: Vec<Recompute> = if cfg.recomputes.is_empty() {
+        vec![Recompute::Off]
+    } else {
+        cfg.recomputes.clone()
     };
     let vstages = cfg.vstages.max(1);
     let mut specs: Vec<PointSpec> = Vec::new();
@@ -547,24 +688,30 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepReport {
                                     for &overlap in &overlaps {
                                         for &mb in &microbatches {
                                             for &sched in &schedules {
-                                                for scaled in
-                                                    scale_strategies(wafers, span, &locals)
-                                                {
-                                                    specs.push(PointSpec {
-                                                        kind,
-                                                        wafer,
-                                                        wafers: scaled.wafers,
-                                                        xwafer_bw,
-                                                        xwafer_latency,
-                                                        topo,
-                                                        span: scaled.span,
-                                                        workload_idx,
-                                                        strategy: scaled.local,
-                                                        overlap,
-                                                        microbatches: mb,
-                                                        schedule: sched,
-                                                        vstages,
-                                                    });
+                                                for &zero in &zeros {
+                                                    for &recompute in &recomputes {
+                                                        for scaled in scale_strategies(
+                                                            wafers, span, &locals,
+                                                        ) {
+                                                            specs.push(PointSpec {
+                                                                kind,
+                                                                wafer,
+                                                                wafers: scaled.wafers,
+                                                                xwafer_bw,
+                                                                xwafer_latency,
+                                                                topo,
+                                                                span: scaled.span,
+                                                                workload_idx,
+                                                                strategy: scaled.local,
+                                                                overlap,
+                                                                microbatches: mb,
+                                                                schedule: sched,
+                                                                vstages,
+                                                                zero,
+                                                                recompute,
+                                                            });
+                                                        }
+                                                    }
                                                 }
                                             }
                                         }
@@ -606,16 +753,29 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepReport {
         })
     };
     rank(&mut points);
-    SweepReport { points, truncated_strategies: truncated }
+    let mut mem_pruned = 0usize;
+    if cfg.mem == MemPolicy::Prune {
+        let before = points.len();
+        points.retain(|p| {
+            !matches!(&p.outcome, Err(e) if e.kind == InfeasibleKind::Memory)
+        });
+        mem_pruned = before - points.len();
+    }
+    SweepReport { points, truncated_strategies: truncated, mem_pruned }
 }
 
-/// Rank: feasible before infeasible, then per-sample time ascending, with
-/// a total deterministic tie-break.
+/// Rank: feasible points by per-sample time ascending, then
+/// memory-infeasible points, then fluid deadlocks (see
+/// [`InfeasibleKind`] for why memory outranks fluid), with a total
+/// deterministic tie-break.
 fn rank(points: &mut [SweepPoint]) {
     points.sort_by(|a, b| {
         let key = |p: &SweepPoint| match &p.outcome {
             Ok(m) => (0u8, m.per_sample),
-            Err(_) => (1u8, f64::INFINITY),
+            Err(e) => match e.kind {
+                InfeasibleKind::Memory => (1u8, f64::INFINITY),
+                InfeasibleKind::Fluid => (2u8, f64::INFINITY),
+            },
         };
         let (fa, ta) = key(a);
         let (fb, tb) = key(b);
@@ -634,6 +794,8 @@ fn rank(points: &mut [SweepPoint]) {
             .then_with(|| a.microbatches.cmp(&b.microbatches))
             .then_with(|| a.schedule.cmp(&b.schedule))
             .then_with(|| a.vstages.cmp(&b.vstages))
+            .then_with(|| a.zero.cmp(&b.zero))
+            .then_with(|| a.recompute.cmp(&b.recompute))
     });
 }
 
@@ -659,6 +821,8 @@ impl SweepReport {
             usize,
             PipeSchedule,
             usize,
+            ZeroStage,
+            Recompute,
         );
         fn key(p: &SweepPoint) -> Key<'_> {
             (
@@ -674,6 +838,8 @@ impl SweepReport {
                 p.microbatches,
                 p.schedule,
                 p.vstages,
+                p.zero,
+                p.recompute,
             )
         }
         let mut fast: HashMap<Key, f64> = HashMap::new();
@@ -701,11 +867,13 @@ impl SweepReport {
     /// Render the top `top` points as a fixed-width table. The `sched`
     /// column carries the pipeline schedule, overlap mode, and microbatch
     /// count of each point (`1f1b/off/mb8` etc.), so schedule-axis sweeps
-    /// stay readable.
+    /// stay readable; the `mem` column carries the modeled per-NPU
+    /// footprint, with a trailing `!` when it exceeds HBM (always shown,
+    /// even under `--mem off` — annotation is free).
     pub fn render_table(&self, top: usize) -> String {
         let mut t = Table::new(&[
             "rank", "workload", "wafer", "fleet", "fabric", "strategy", "sched", "iter",
-            "per-sample", "eff BW", "status",
+            "per-sample", "eff BW", "mem", "status",
         ]);
         for (i, p) in self.points.iter().take(top).enumerate() {
             let fleet = if p.wafers == 1 {
@@ -724,8 +892,15 @@ impl SweepReport {
                     fmt_bw(p.xwafer_bw)
                 )
             };
-            let sched =
+            let mut sched =
                 format!("{}/{}/mb{}", p.schedule.name(), p.overlap.name(), p.microbatches);
+            if p.zero != ZeroStage::Z0 {
+                sched.push_str(&format!("/z{}", p.zero.name()));
+            }
+            if p.recompute == Recompute::Full {
+                sched.push_str("/rc");
+            }
+            let mem = format!("{:.1}GB{}", p.mem_gb, if p.mem_ok { "" } else { "!" });
             match &p.outcome {
                 Ok(m) => t.row(&[
                     format!("{}", i + 1),
@@ -738,6 +913,7 @@ impl SweepReport {
                     fmt_time(m.breakdown.total()),
                     fmt_time(m.per_sample),
                     fmt_bw(m.effective_bw),
+                    mem,
                     "ok".to_string(),
                 ]),
                 Err(e) => t.row(&[
@@ -751,7 +927,8 @@ impl SweepReport {
                     "-".into(),
                     "-".into(),
                     "-".into(),
-                    format!("infeasible: {e}"),
+                    mem,
+                    format!("infeasible({}): {}", e.kind.name(), e.msg),
                 ]),
             };
         }
@@ -816,6 +993,10 @@ impl SweepReport {
                     ("microbatches", Json::Num(p.microbatches as f64)),
                     ("schedule", Json::Str(p.schedule.name().to_string())),
                     ("vstages", Json::Num(p.vstages as f64)),
+                    ("zero", Json::Str(p.zero.name().to_string())),
+                    ("recompute", Json::Str(p.recompute.name().to_string())),
+                    ("mem_gb", Json::Num(p.mem_gb)),
+                    ("mem_ok", Json::Bool(p.mem_ok)),
                     ("ok", Json::Bool(p.outcome.is_ok())),
                 ];
                 match &p.outcome {
@@ -834,7 +1015,10 @@ impl SweepReport {
                             .collect();
                         fields.push(("exposed_comm_s", Json::obj(comm)));
                     }
-                    Err(e) => fields.push(("error", Json::Str(e.clone()))),
+                    Err(e) => {
+                        fields.push(("error", Json::Str(e.msg.clone())));
+                        fields.push(("error_kind", Json::Str(e.kind.name().to_string())));
+                    }
                 }
                 Json::obj(fields)
             })
@@ -846,6 +1030,7 @@ impl SweepReport {
                 "truncated_strategies",
                 Json::Num(self.truncated_strategies as f64),
             ),
+            ("mem_pruned", Json::Num(self.mem_pruned as f64)),
         ])
     }
 }
@@ -854,6 +1039,8 @@ impl SweepReport {
 /// `fred merge` reproduces a single-run ranking byte for byte (the CI
 /// round-trip `sweep → split → merge → cmp` pins this).
 struct MergeKey {
+    /// 0 = feasible, 1 = memory-infeasible, 2 = fluid deadlock —
+    /// mirrors [`rank`]'s three tiers via the JSON `error_kind` field.
     infeasible: u8,
     per_sample: f64,
     workload: String,
@@ -869,6 +1056,8 @@ struct MergeKey {
     microbatches: usize,
     schedule: PipeSchedule,
     vstages: usize,
+    zero: ZeroStage,
+    recompute: Recompute,
 }
 
 fn merge_key(p: &Json) -> Result<MergeKey, String> {
@@ -902,8 +1091,24 @@ fn merge_key(p: &Json) -> Result<MergeKey, String> {
     let sched_s = str_field("schedule")?;
     let schedule =
         PipeSchedule::parse(&sched_s).ok_or_else(|| format!("bad schedule `{sched_s}`"))?;
+    let zero_s = str_field("zero")?;
+    let zero = ZeroStage::parse(&zero_s).ok_or_else(|| format!("bad zero `{zero_s}`"))?;
+    let rc_s = str_field("recompute")?;
+    let recompute =
+        Recompute::parse(&rc_s).ok_or_else(|| format!("bad recompute `{rc_s}`"))?;
+    let infeasible = if ok {
+        0u8
+    } else {
+        let kind_s = str_field("error_kind")?;
+        match InfeasibleKind::parse(&kind_s)
+            .ok_or_else(|| format!("bad error_kind `{kind_s}`"))?
+        {
+            InfeasibleKind::Memory => 1u8,
+            InfeasibleKind::Fluid => 2u8,
+        }
+    };
     Ok(MergeKey {
-        infeasible: u8::from(!ok),
+        infeasible,
         per_sample,
         workload: str_field("workload")?,
         wafer,
@@ -918,6 +1123,8 @@ fn merge_key(p: &Json) -> Result<MergeKey, String> {
         microbatches: num_field("microbatches")? as usize,
         schedule,
         vstages: num_field("vstages")? as usize,
+        zero,
+        recompute,
     })
 }
 
@@ -938,6 +1145,8 @@ fn merge_key_cmp(a: &MergeKey, b: &MergeKey) -> std::cmp::Ordering {
         .then_with(|| a.microbatches.cmp(&b.microbatches))
         .then_with(|| a.schedule.cmp(&b.schedule))
         .then_with(|| a.vstages.cmp(&b.vstages))
+        .then_with(|| a.zero.cmp(&b.zero))
+        .then_with(|| a.recompute.cmp(&b.recompute))
 }
 
 /// Merge several `fred sweep --json` documents (e.g. a sweep sharded
@@ -945,8 +1154,8 @@ fn merge_key_cmp(a: &MergeKey, b: &MergeKey) -> std::cmp::Ordering {
 /// the same total order [`rank`] uses, `truncated_strategies` sums, and
 /// every input must carry the current [`SCHEMA_VERSION`] — mismatched
 /// versions are rejected rather than silently mixing contracts (the
-/// ranking key reads v6 fields). Closes the ROADMAP "Sweep resume/merge"
-/// item.
+/// ranking key reads v7 fields, including `error_kind` on infeasible
+/// points). Closes the ROADMAP "Sweep resume/merge" item.
 ///
 /// Byte-identity with the unsharded run: shard on disjoint axes (fleet
 /// sizes, workloads, bandwidths) *and* keep the truncation bookkeeping
@@ -962,6 +1171,7 @@ pub fn merge_sweep_docs(docs: &[Json]) -> Result<Json, String> {
     }
     let mut keyed: Vec<(MergeKey, Json)> = Vec::new();
     let mut truncated = 0.0_f64;
+    let mut mem_pruned = 0.0_f64;
     for (i, doc) in docs.iter().enumerate() {
         let version = doc
             .get("schema_version")
@@ -985,6 +1195,7 @@ pub fn merge_sweep_docs(docs: &[Json]) -> Result<Json, String> {
             .get("truncated_strategies")
             .and_then(Json::as_f64)
             .unwrap_or(0.0);
+        mem_pruned += doc.get("mem_pruned").and_then(Json::as_f64).unwrap_or(0.0);
     }
     keyed.sort_by(|a, b| merge_key_cmp(&a.0, &b.0));
     Ok(Json::obj(vec![
@@ -994,6 +1205,7 @@ pub fn merge_sweep_docs(docs: &[Json]) -> Result<Json, String> {
             Json::Arr(keyed.into_iter().map(|(_, p)| p).collect()),
         ),
         ("truncated_strategies", Json::Num(truncated)),
+        ("mem_pruned", Json::Num(mem_pruned)),
     ]))
 }
 
@@ -1120,11 +1332,17 @@ mod tests {
             // v6 fields: the pipeline-schedule axis.
             assert_eq!(p.get("schedule").and_then(Json::as_str), Some("gpipe"));
             assert_eq!(p.get("vstages").and_then(Json::as_usize), Some(2));
+            // v7 fields: the memory axes and footprint annotation.
+            assert_eq!(p.get("zero").and_then(Json::as_str), Some("0"));
+            assert_eq!(p.get("recompute").and_then(Json::as_str), Some("off"));
+            assert!(p.get("mem_gb").unwrap().as_f64().unwrap() > 0.0);
+            assert_eq!(p.get("mem_ok").and_then(Json::as_bool), Some(true));
             let exposed = p.get("exposed_total_s").unwrap().as_f64().unwrap();
             let total = p.get("total_s").unwrap().as_f64().unwrap();
             let compute = p.get("compute_s").unwrap().as_f64().unwrap();
             assert!(exposed >= 0.0 && (compute + exposed - total).abs() <= 1e-12 * total);
         }
+        assert_eq!(back.get("mem_pruned").and_then(Json::as_f64), Some(0.0));
     }
 
     #[test]
@@ -1454,6 +1672,143 @@ mod tests {
         );
         assert!(z <= f && f <= g, "zb {z} <= 1f1b {f} <= gpipe {g}");
         assert!(f < g, "a 5-deep pipeline at mb=8 has a bubble for 1F1B to shrink");
+    }
+
+    #[test]
+    fn memory_axes_multiply_points_and_shard_the_footprint() {
+        let mut cfg = tiny_cfg();
+        cfg.workloads = vec![workload::transformer_17b()];
+        cfg.strategies = Some(vec![Strategy::new(3, 3, 2)]);
+        cfg.fabrics = vec![FabricKind::FredD];
+        cfg.zeros = ZeroStage::all().to_vec();
+        cfg.recomputes = Recompute::all().to_vec();
+        let report = run_sweep(&cfg);
+        assert_eq!(report.points.len(), 6, "3 ZeRO stages x 2 recompute modes");
+        let point = |z: ZeroStage, rc: Recompute| {
+            report
+                .points
+                .iter()
+                .find(|p| p.zero == z && p.recompute == rc)
+                .expect("point for every knob combination")
+        };
+        // ZeRO shards the optimizer (then gradients): footprint strictly
+        // shrinks with the stage; recompute never grows it.
+        let gb = |z, rc| point(z, rc).mem_gb;
+        assert!(gb(ZeroStage::Z0, Recompute::Off) > gb(ZeroStage::Z1, Recompute::Off));
+        assert!(gb(ZeroStage::Z1, Recompute::Off) > gb(ZeroStage::Z2, Recompute::Off));
+        for z in ZeroStage::all() {
+            assert!(gb(z, Recompute::Full) <= gb(z, Recompute::Off), "{z}");
+        }
+        // ZeRO is footprint-only (RS+AG moves All-Reduce's volume):
+        // pricing is bit-identical across stages.
+        let total = |z: ZeroStage| {
+            point(z, Recompute::Off).outcome.as_ref().unwrap().breakdown.total()
+        };
+        assert_eq!(total(ZeroStage::Z0).to_bits(), total(ZeroStage::Z2).to_bits());
+        // Full recompute prices the re-run forward: 4/3x compute.
+        let comp =
+            |rc: Recompute| point(ZeroStage::Z0, rc).outcome.as_ref().unwrap().breakdown.compute;
+        let (off, full) = (comp(Recompute::Off), comp(Recompute::Full));
+        assert!((full - off * 4.0 / 3.0).abs() <= 1e-9 * off, "{full} vs 4/3 x {off}");
+    }
+
+    #[test]
+    fn mem_policy_gates_the_1t_default_point() {
+        // T-1T's Table V default (MP1-DP20-PP1, one microbatch) streams
+        // the whole minibatch's activation set: ~712 GB/NPU — the Table-V
+        // operating point `--mem prune` must exclude. `--mem off` only
+        // annotates; full recompute brings it back under budget.
+        let mut cfg = tiny_cfg();
+        cfg.workloads = vec![workload::transformer_1t()];
+        cfg.strategies = Some(vec![Strategy::new(1, 20, 1)]);
+        cfg.fabrics = vec![FabricKind::FredD];
+
+        let off = run_sweep(&cfg);
+        assert_eq!(off.points.len(), 1);
+        assert!(off.points[0].outcome.is_ok(), "off: annotate only, still priced");
+        assert!(!off.points[0].mem_ok, "{} GB must exceed HBM", off.points[0].mem_gb);
+        assert!(off.points[0].mem_gb > 80.0);
+
+        cfg.mem = MemPolicy::Rank;
+        let ranked = run_sweep(&cfg);
+        let e = ranked.points[0].outcome.as_ref().unwrap_err();
+        assert_eq!(e.kind, InfeasibleKind::Memory);
+        assert!(e.msg.contains("GB"), "{}", e.msg);
+        assert_eq!(ranked.mem_pruned, 0, "rank keeps the point visible");
+
+        cfg.mem = MemPolicy::Prune;
+        let pruned = run_sweep(&cfg);
+        assert!(pruned.points.is_empty(), "prune drops the point");
+        assert_eq!(pruned.mem_pruned, 1, "...but counts it");
+
+        cfg.recomputes = vec![Recompute::Full];
+        let rec = run_sweep(&cfg);
+        assert_eq!(rec.points.len(), 1, "full recompute fits again");
+        assert!(rec.points[0].mem_ok && rec.points[0].outcome.is_ok());
+        assert_eq!(rec.mem_pruned, 0);
+    }
+
+    #[test]
+    fn rank_orders_memory_infeasible_above_fluid_deadlocks() {
+        let base = |outcome: Result<SweepMetrics, PointError>| SweepPoint {
+            workload: "w".into(),
+            wafer: WaferDims::PAPER,
+            wafers: 1,
+            xwafer_bw: DEFAULT_EGRESS_BW,
+            xwafer_latency: DEFAULT_XWAFER_LATENCY,
+            topo: EgressTopo::Ring,
+            span: WaferSpan::Dp,
+            fabric: FabricKind::FredD,
+            strategy: Strategy::new(1, 20, 1),
+            overlap: OverlapMode::Off,
+            microbatches: 1,
+            schedule: PipeSchedule::GPipe,
+            vstages: 1,
+            zero: ZeroStage::Z0,
+            recompute: Recompute::Off,
+            mem_gb: 1.0,
+            mem_ok: true,
+            outcome,
+        };
+        let mut pts = vec![
+            base(Err(PointError::fluid("deadlock".into()))),
+            base(Err(PointError::memory("too big".into()))),
+        ];
+        rank(&mut pts);
+        assert_eq!(
+            pts[0].outcome.as_ref().unwrap_err().kind,
+            InfeasibleKind::Memory,
+            "an over-budget point is actionable, a deadlocked shape is not"
+        );
+        assert_eq!(pts[1].outcome.as_ref().unwrap_err().kind, InfeasibleKind::Fluid);
+    }
+
+    #[test]
+    fn merge_round_trips_typed_memory_infeasible_points() {
+        let mut cfg = tiny_cfg();
+        cfg.workloads = vec![workload::resnet152(), workload::transformer_1t()];
+        cfg.strategies = Some(vec![Strategy::new(1, 20, 1)]);
+        cfg.fabrics = vec![FabricKind::FredD];
+        cfg.mem = MemPolicy::Rank;
+        let combined = run_sweep(&cfg).to_json();
+        assert!(
+            combined.render().contains("\"error_kind\":\"memory\""),
+            "the typed kind must survive into the JSON"
+        );
+        let mut shard1 = cfg.clone();
+        shard1.workloads = vec![workload::resnet152()];
+        let mut shard2 = cfg.clone();
+        shard2.workloads = vec![workload::transformer_1t()];
+        let merged = merge_sweep_docs(&[
+            run_sweep(&shard1).to_json(),
+            run_sweep(&shard2).to_json(),
+        ])
+        .expect("merge");
+        assert_eq!(
+            merged.render(),
+            combined.render(),
+            "typed infeasibility must merge byte-for-byte"
+        );
     }
 
     #[test]

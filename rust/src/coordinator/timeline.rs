@@ -24,6 +24,14 @@
 //! * the weight-streaming `stream_prefetch` hiding is a one-bucket
 //!   window ([`Step::Hidden`]).
 //!
+//! Memory-motivated schedule changes ride the same step vocabulary:
+//! full activation recompute ([`Recompute::Full`](super::memory))
+//! appears as an additional serial compute phase (the re-run forward
+//! sits on the backward critical path, so it is a [`Step::Serial`]
+//! [`Phase::compute`], never an overlappable step) — the priced
+//! counterpart of the footprint reduction the
+//! [`memory`](super::memory) model grants it.
+//!
 //! [`OverlapMode`] selects how aggressively the scheduler may overlap:
 //!
 //! * [`OverlapMode::Off`] — every step fully serialized (the paper's
@@ -452,6 +460,19 @@ mod tests {
         // chunk is only ready when the window ends (the recurrence
         // semantics), so exactly one 0.5 s round stays exposed.
         assert_eq!(tl.price(OverlapMode::Full).get(CommType::Dp), 0.5);
+    }
+
+    #[test]
+    fn consecutive_serial_computes_sum_in_every_mode() {
+        // The forward-recompute pattern: the simulator appends the
+        // re-run forward as a second serial compute phase, which must
+        // fold into `compute` identically under every overlap mode.
+        let mut tl = Timeline::new();
+        tl.serial_compute(0.9);
+        tl.serial_compute(0.3);
+        for mode in OverlapMode::all() {
+            assert_eq!(tl.price(mode).compute, 0.9 + 0.3, "{mode}");
+        }
     }
 
     #[test]

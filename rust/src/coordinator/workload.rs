@@ -362,13 +362,49 @@ mod tests {
 
     #[test]
     fn stationary_models_fit_on_wafer() {
-        // Sec. III-A: weight-stationary workloads fit in 20 × 80 GB.
-        let cap = 20.0 * config::HBM_CAPACITY;
-        // Params + optimizer states (~6× params for Adam fp32 master).
-        assert!(resnet152().params_bytes() * 6.0 < cap);
-        assert!(transformer_17b().params_bytes() * 6.0 < cap);
-        // Streaming ones do not fit (that's why they stream).
-        assert!(transformer_1t().params_bytes() > cap);
+        // Sec. III-A via the real footprint model: at its Table V
+        // strategy, each weight-stationary workload's per-NPU state
+        // (weights + grads + Adam optimizer + in-flight activations)
+        // fits the Table II HBM — no hand-waved multipliers.
+        use super::memory::{self, Recompute, ZeroStage};
+        use super::stagegraph::PipeSchedule;
+        for w in [resnet152(), transformer_17b()] {
+            assert_eq!(w.exec_mode, ExecMode::WeightStationary, "{}", w.name);
+            let s = w.default_strategy;
+            let f = memory::footprint(
+                &w,
+                s.mp,
+                s.dp,
+                s.pp,
+                PipeSchedule::GPipe,
+                1,
+                w.microbatches,
+                ZeroStage::Z0,
+                Recompute::Off,
+            );
+            assert!(f.fits(), "{}: {:.1} GB per NPU", w.name, f.gb());
+        }
+        // Streaming ones exceed even the whole wafer's aggregate HBM
+        // (that's why they stream): 1T fp16 params vs N_NPU x 80 GB.
+        let wafer_cap = config::N_NPU as f64 * config::HBM_CAPACITY;
+        assert!(transformer_1t().params_bytes() > wafer_cap);
+        // GPT-3's streamed footprint fits per NPU despite its 350 GB of
+        // parameters — only the active layer group is resident.
+        let w = gpt3();
+        let s = w.default_strategy;
+        let f = memory::footprint(
+            &w,
+            s.mp,
+            s.dp,
+            s.pp,
+            PipeSchedule::GPipe,
+            1,
+            w.microbatches,
+            ZeroStage::Z0,
+            Recompute::Off,
+        );
+        assert!(f.fits(), "GPT-3 streamed: {:.1} GB per NPU", f.gb());
+        assert!(w.params_bytes() / (s.mp * s.pp) as f64 > config::HBM_CAPACITY);
     }
 
     #[test]

@@ -1,0 +1,204 @@
+//! Property tests over the per-NPU memory footprint model
+//! (`coordinator::memory`): monotonicity in every sharding axis, the
+//! recompute clamp, the schedule-derived activation ordering, and the
+//! `--mem off` default's byte-identity through the real binary.
+
+use fred::coordinator::memory::{footprint, Recompute, ZeroStage};
+use fred::coordinator::stagegraph::PipeSchedule;
+use fred::coordinator::workload::Workload;
+use std::process::Command;
+
+const DIMS: [usize; 4] = [1, 2, 4, 8];
+const MBS: [usize; 4] = [1, 2, 8, 16];
+
+#[test]
+fn footprint_never_grows_with_tensor_parallel_width() {
+    // Wider MP shards weights, gradients, optimizer state, activations,
+    // and the recompute boundary alike: the total is non-increasing in
+    // MP for every workload, schedule, and recompute setting.
+    for w in Workload::all() {
+        for sched in PipeSchedule::all() {
+            for rc in Recompute::all() {
+                for &pp in &DIMS {
+                    for &mb in &MBS {
+                        let mut last = f64::INFINITY;
+                        for &mp in &DIMS {
+                            let f = footprint(&w, mp, 2, pp, sched, 1, mb, ZeroStage::Z0, rc);
+                            assert!(
+                                f.total() <= last,
+                                "{}: footprint grew from {last:.3e} to {:.3e} at \
+                                 mp={mp} pp={pp} mb={mb} {sched:?} {rc:?}",
+                                w.name,
+                                f.total()
+                            );
+                            last = f.total();
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn footprint_never_grows_with_pipeline_depth() {
+    // Deeper PP shards the stage's weights and activation slice; the
+    // in-flight depth cap (min(mb, stages) for 1f1b/zb) grows at most
+    // linearly with the 1/pp sharding, so the product is non-increasing.
+    // Stated at recompute off: the full-recompute clamp adds a
+    // pp-independent re-forward floor (one layer's working set), which
+    // can hold the activation term flat while stages multiply.
+    for w in Workload::all() {
+        for sched in PipeSchedule::all() {
+            for &mp in &DIMS {
+                for &mb in &MBS {
+                    let mut last = f64::INFINITY;
+                    for &pp in &DIMS {
+                        let f = footprint(
+                            &w,
+                            mp,
+                            2,
+                            pp,
+                            sched,
+                            1,
+                            mb,
+                            ZeroStage::Z0,
+                            Recompute::Off,
+                        );
+                        assert!(
+                            f.total() <= last,
+                            "{}: footprint grew from {last:.3e} to {:.3e} at \
+                             mp={mp} pp={pp} mb={mb} {sched:?}",
+                            w.name,
+                            f.total()
+                        );
+                        last = f.total();
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_stages_never_grow_the_footprint() {
+    // Each ZeRO stage shards strictly more state across the DP group;
+    // weights and activations are untouched by the axis.
+    for w in Workload::all() {
+        for &dp in &DIMS {
+            let fp = |z| footprint(&w, 2, dp, 2, PipeSchedule::GPipe, 1, 4, z, Recompute::Off);
+            let (z0, z1, z2) = (fp(ZeroStage::Z0), fp(ZeroStage::Z1), fp(ZeroStage::Z2));
+            assert!(z1.total() <= z0.total(), "{} dp={dp}: Z1 grew", w.name);
+            assert!(z2.total() <= z1.total(), "{} dp={dp}: Z2 grew", w.name);
+            assert_eq!(z1.weights, z0.weights, "ZeRO-1/2 never shard weights");
+            assert_eq!(z2.weights, z0.weights);
+            assert_eq!(z1.activations, z0.activations, "ZeRO is activation-blind");
+            assert_eq!(z1.grads, z0.grads, "gradient sharding starts at stage 2");
+        }
+    }
+}
+
+#[test]
+fn recompute_never_increases_the_activation_term() {
+    // The clamp `min(full set, boundary residency)` makes this hold by
+    // construction on every operating point; the other terms are not
+    // recompute's to touch.
+    for w in Workload::all() {
+        for sched in PipeSchedule::all() {
+            for &mp in &DIMS {
+                for &pp in &DIMS {
+                    for &mb in &MBS {
+                        let off =
+                            footprint(&w, mp, 2, pp, sched, 1, mb, ZeroStage::Z0, Recompute::Off);
+                        let full =
+                            footprint(&w, mp, 2, pp, sched, 1, mb, ZeroStage::Z0, Recompute::Full);
+                        assert!(
+                            full.activations <= off.activations,
+                            "{}: recompute grew activations {:.3e} -> {:.3e} at \
+                             mp={mp} pp={pp} mb={mb} {sched:?}",
+                            w.name,
+                            off.activations,
+                            full.activations
+                        );
+                        assert_eq!(full.weights, off.weights);
+                        assert_eq!(full.grads, off.grads);
+                        assert_eq!(full.optimizer, off.optimizer);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn gpipe_activations_dominate_1f1b_beyond_the_pipeline_depth() {
+    // GPipe holds all `mb` in-flight activation sets; 1F1B caps
+    // residency at the pipeline depth — strictly smaller whenever there
+    // are more microbatches than stages (the feasibility-flip mechanism).
+    for w in Workload::all() {
+        for &pp in &[2usize, 4] {
+            for &mb in &MBS {
+                let act = |sched| {
+                    footprint(&w, 1, 2, pp, sched, 1, mb, ZeroStage::Z0, Recompute::Off)
+                        .activations
+                };
+                let (g, f) = (act(PipeSchedule::GPipe), act(PipeSchedule::OneF1B));
+                assert!(g >= f, "{}: gpipe {g:.3e} < 1f1b {f:.3e}", w.name);
+                if mb > pp {
+                    assert!(
+                        g > f,
+                        "{}: gpipe {g:.3e} must strictly exceed 1f1b {f:.3e} at \
+                         mb={mb} > pp={pp}",
+                        w.name
+                    );
+                } else {
+                    assert_eq!(g, f, "{}: no excess microbatches to cap at mb={mb}", w.name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn default_sweep_is_byte_identical_across_threads_and_explicit_mem_flags() {
+    // The `--mem off` compatibility wall through the real binary: the
+    // default sweep must be byte-identical at any thread count AND to
+    // the explicit `--mem off --zero 0 --recompute off` spelling — the
+    // memory model may only change output when asked to.
+    let base = [
+        "sweep",
+        "--models",
+        "gpt3,t17b",
+        "--wafers",
+        "1,2",
+        "--fabrics",
+        "fred-a,fred-d",
+        "--max-strategies",
+        "3",
+        "--schedule",
+        "gpipe,1f1b",
+        "--json",
+    ];
+    let run = |extra: &[&str]| -> Vec<u8> {
+        let out = Command::new(env!("CARGO_BIN_EXE_fred"))
+            .args(base)
+            .args(extra)
+            .output()
+            .expect("spawn fred sweep");
+        assert!(
+            out.status.success(),
+            "sweep failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        out.stdout
+    };
+    let t1 = run(&["--threads", "1"]);
+    let t4 = run(&["--threads", "4"]);
+    assert_eq!(t1, t4, "--mem off default must stay thread-deterministic");
+    let explicit =
+        run(&["--threads", "1", "--mem", "off", "--zero", "0", "--recompute", "off"]);
+    assert_eq!(
+        t1, explicit,
+        "explicit --mem off --zero 0 --recompute off must be the default, byte for byte"
+    );
+}

@@ -80,7 +80,7 @@ fn sweep_is_deterministic_across_runs() {
                             m.per_sample,
                             m.effective_bw
                         ),
-                        Err(e) => e.clone(),
+                        Err(e) => e.to_string(),
                     },
                 )
             })
@@ -164,5 +164,5 @@ fn thread_count_never_changes_sweep_output() {
     for r in &renders[1..] {
         assert_eq!(&renders[0], r, "sweep output must be thread-count invariant");
     }
-    assert!(renders[0].contains("\"schema_version\":6"));
+    assert!(renders[0].contains("\"schema_version\":7"));
 }

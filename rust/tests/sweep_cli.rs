@@ -133,6 +133,11 @@ fn sweep_cli_rejects_bad_input_with_usage_errors() {
         vec!["sweep", "--schedule", "gpipe,1f2b"],
         vec!["sweep", "--vstages", "0"],
         vec!["sweep", "--vstages", "many"],
+        vec!["sweep", "--zero", "3"],
+        vec!["sweep", "--zero", "x"],
+        vec!["sweep", "--zero", "0,deep"],
+        vec!["sweep", "--recompute", "sometimes"],
+        vec!["sweep", "--mem", "maybe"],
         // Interleaving depth 1 is just 1f1b; asking for interleaved with
         // it is an inconsistent sweep.
         vec!["sweep", "--schedule", "interleaved", "--vstages", "1"],
@@ -250,7 +255,7 @@ fn sweep_out_file_is_golden_against_stdout() {
     assert_eq!(file, stdout, "--out file must match --json stdout byte for byte");
     let doc = Json::parse(String::from_utf8(file).expect("utf8").trim())
         .expect("--out file is valid JSON");
-    assert_eq!(doc.get("schema_version").and_then(Json::as_usize), Some(6));
+    assert_eq!(doc.get("schema_version").and_then(Json::as_usize), Some(7));
     let points = doc.get("points").unwrap().as_arr().unwrap();
     assert_eq!(points.len(), 3, "3 strategies x 1 fabric x 1 fleet size");
     for p in points {
@@ -261,14 +266,14 @@ fn sweep_out_file_is_golden_against_stdout() {
 }
 
 #[test]
-fn schema_v6_signals_v5_consumers_instead_of_silently_misparsing() {
-    // A well-behaved v5 consumer checks `schema_version` before reading
-    // points (it may key points on the v5 field set, which two v6 points
-    // can now share while differing only in their `schedule`/`vstages`
-    // pipeline schedule — a semantic change that forces the bump). The
-    // v6 document must (a) carry the version as a plain number a v5
-    // guard can compare against, and (b) still contain every v2, v3,
-    // v4, *and* v5 point field under its old name, so a consumer that
+fn schema_v7_signals_v6_consumers_instead_of_silently_misparsing() {
+    // A well-behaved v6 consumer checks `schema_version` before reading
+    // points (it may key points on the v6 field set, which two v7 points
+    // can now share while differing only in their `zero`/`recompute`
+    // memory knobs — a semantic change that forces the bump). The v7
+    // document must (a) carry the version as a plain number a v6 guard
+    // can compare against, and (b) still contain every v2, v3, v4, v5,
+    // *and* v6 point field under its old name, so a consumer that
     // ignores the version reads consistent values rather than garbage —
     // the new fields are additive.
     let json = run_sweep_json(&[
@@ -285,9 +290,9 @@ fn schema_v6_signals_v5_consumers_instead_of_silently_misparsing() {
         .get("schema_version")
         .and_then(Json::as_f64)
         .expect("version field must be a plain number");
-    assert_eq!(version, 6.0);
+    assert_eq!(version, 7.0);
+    assert_ne!(version, 6.0, "a v6 guard comparing against 6 must reject this doc");
     assert_ne!(version, 5.0, "a v5 guard comparing against 5 must reject this doc");
-    assert_ne!(version, 4.0, "a v4 guard comparing against 4 must reject this doc");
     const V2_POINT_FIELDS: [&str; 13] = [
         "workload",
         "wafer",
@@ -309,24 +314,31 @@ fn schema_v6_signals_v5_consumers_instead_of_silently_misparsing() {
         ["global_mp", "span_mp_wafers", "span_dp_wafers", "span_pp_wafers"];
     for p in json.get("points").unwrap().as_arr().unwrap() {
         for field in V2_POINT_FIELDS {
-            assert!(p.get(field).is_some(), "v2 field `{field}` missing in v6 point");
+            assert!(p.get(field).is_some(), "v2 field `{field}` missing in v7 point");
         }
         for field in V3_POINT_FIELDS {
-            assert!(p.get(field).is_some(), "v3 field `{field}` missing in v6 point");
+            assert!(p.get(field).is_some(), "v3 field `{field}` missing in v7 point");
         }
         for field in V4_POINT_FIELDS {
-            assert!(p.get(field).is_some(), "v4 field `{field}` missing in v6 point");
+            assert!(p.get(field).is_some(), "v4 field `{field}` missing in v7 point");
         }
         for field in ["overlap", "microbatches", "exposed_total_s"] {
-            assert!(p.get(field).is_some(), "v5 field `{field}` missing in v6 point");
+            assert!(p.get(field).is_some(), "v5 field `{field}` missing in v7 point");
         }
-        // The v6 additions are present under *new* names, and a default
-        // sweep emits the schedule a v5 document implicitly priced:
-        // gpipe (the analytic flush schedule), overlap off, at the
-        // workload's own microbatch count.
         for field in ["schedule", "vstages"] {
-            assert!(p.get(field).is_some(), "v6 field `{field}` missing");
+            assert!(p.get(field).is_some(), "v6 field `{field}` missing in v7 point");
         }
+        // The v7 additions are present under *new* names, and a default
+        // sweep emits the memory knobs a v6 document implicitly assumed:
+        // no ZeRO sharding, no recompute, footprint annotated but never
+        // acted on.
+        for field in ["zero", "recompute", "mem_gb", "mem_ok"] {
+            assert!(p.get(field).is_some(), "v7 field `{field}` missing");
+        }
+        assert_eq!(p.get("zero").and_then(Json::as_str), Some("0"));
+        assert_eq!(p.get("recompute").and_then(Json::as_str), Some("off"));
+        assert!(p.get("mem_gb").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(p.get("mem_ok").and_then(Json::as_bool), Some(true));
         assert_eq!(p.get("schedule").and_then(Json::as_str), Some("gpipe"));
         assert!(p.get("vstages").and_then(Json::as_usize).unwrap() >= 1);
         assert_eq!(p.get("overlap").and_then(Json::as_str), Some("off"));
@@ -644,6 +656,74 @@ fn overlap_off_grid_matches_the_committed_golden_at_any_thread_count() {
 }
 
 #[test]
+fn mem_policy_surfaces_and_prunes_the_1t_point_through_the_cli() {
+    // Table V's T-1T default (MP1-DP20-PP1, one microbatch) streams the
+    // whole minibatch's activation set — ~712 GB/NPU, the Table V
+    // operating point `--mem prune` must exclude with a typed reason.
+    let base = ["--models", "t1t", "--strategies", "1,20,1", "--fabrics", "fred-d"];
+    let mut rank_args = base.to_vec();
+    rank_args.extend_from_slice(&["--mem", "rank"]);
+    let json = run_sweep_json(&rank_args);
+    let points = json.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), 1);
+    let p = &points[0];
+    assert_eq!(p.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(p.get("error_kind").and_then(Json::as_str), Some("memory"));
+    assert_eq!(p.get("mem_ok").and_then(Json::as_bool), Some(false));
+    assert!(p.get("mem_gb").unwrap().as_f64().unwrap() > 80.0);
+    assert!(p.get("error").unwrap().as_str().unwrap().contains("GB"));
+
+    let mut prune_args = base.to_vec();
+    prune_args.extend_from_slice(&["--mem", "prune"]);
+    let json = run_sweep_json(&prune_args);
+    assert!(json.get("points").unwrap().as_arr().unwrap().is_empty());
+    assert_eq!(json.get("mem_pruned").and_then(Json::as_usize), Some(1));
+
+    // Full recompute shrinks the activation set to stage boundaries and
+    // the same point fits again.
+    let mut rec_args = prune_args.clone();
+    rec_args.extend_from_slice(&["--recompute", "full"]);
+    let json = run_sweep_json(&rec_args);
+    let points = json.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), 1, "full recompute fits under --mem prune");
+    assert_eq!(points[0].get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(points[0].get("recompute").and_then(Json::as_str), Some("full"));
+    assert_eq!(json.get("mem_pruned").and_then(Json::as_usize), Some(0));
+}
+
+#[test]
+fn mem_rank_flips_gpipe_vs_1f1b_for_gpt3_at_high_microbatch() {
+    // The memory-blind ranking bug end to end: GPT-3 at MP1-DP10-PP2
+    // with 16 microbatches needs all 16 activation sets resident under
+    // gpipe (~132 GB/NPU) but only the 2-deep pipeline's worth under
+    // 1f1b (~29 GB) — `--mem rank` makes the feasibility flip visible
+    // in the ranking.
+    let json = run_sweep_json(&[
+        "--models",
+        "gpt3",
+        "--strategies",
+        "1,10,2",
+        "--fabrics",
+        "fred-d",
+        "--microbatches",
+        "16",
+        "--schedule",
+        "gpipe,1f1b",
+        "--mem",
+        "rank",
+    ]);
+    let points = json.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), 2, "one point per schedule");
+    assert_eq!(points[0].get("schedule").and_then(Json::as_str), Some("1f1b"));
+    assert_eq!(points[0].get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(points[0].get("mem_ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(points[1].get("schedule").and_then(Json::as_str), Some("gpipe"));
+    assert_eq!(points[1].get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(points[1].get("error_kind").and_then(Json::as_str), Some("memory"));
+    assert!(points[1].get("mem_gb").unwrap().as_f64().unwrap() > 80.0);
+}
+
+#[test]
 fn sweep_cli_scales_to_sixteen_wafer_fleets() {
     // The acceptance sweep: fleet sizes 1,2,4,8,16 end to end, with
     // global strategy/minibatch accounting and the scale-out JSON fields.
@@ -657,7 +737,7 @@ fn sweep_cli_scales_to_sixteen_wafer_fleets() {
         "--max-strategies",
         "2",
     ]);
-    assert_eq!(json.get("schema_version").and_then(Json::as_usize), Some(6));
+    assert_eq!(json.get("schema_version").and_then(Json::as_usize), Some(7));
     let points = json.get("points").unwrap().as_arr().unwrap();
     assert_eq!(points.len(), 10, "2 strategies x 5 fleet sizes");
     let mut fleets: Vec<usize> = points
