@@ -171,6 +171,93 @@ target/release/fred sweep --wafers 1,2,4 --models resnet152 --max-strategies 4 \
 cmp /tmp/sweep_t1.json /tmp/sweep_t4.json
 rm -f /tmp/sweep_t1.json /tmp/sweep_t4.json
 
+echo "== sweep cache smoke (warm run byte-identical to cold run) =="
+# The content-addressed point cache end to end: a cold run populates the
+# cache file, the warm rerun answers every lookup from it, and both
+# stdout documents must agree byte for byte. Reuse stats go to stderr
+# only — stdout is the byte-identity surface — and a cacheless run of
+# the same grid must produce the same document too.
+THRU_ARGS=(--wafers 1,2 --models resnet152 --max-strategies 4 \
+    --overlap off,full --json)
+rm -f /tmp/sweep_cache.json
+target/release/fred sweep "${THRU_ARGS[@]}" --cache /tmp/sweep_cache.json \
+    > /tmp/sweep_cold.json 2> /tmp/sweep_cold.err
+target/release/fred sweep "${THRU_ARGS[@]}" --cache /tmp/sweep_cache.json \
+    > /tmp/sweep_warm.json 2> /tmp/sweep_warm.err
+cmp /tmp/sweep_cold.json /tmp/sweep_warm.json
+grep -q 'sweep cache: 0 hits' /tmp/sweep_cold.err
+grep -q ' 0 misses' /tmp/sweep_warm.err
+target/release/fred sweep "${THRU_ARGS[@]}" > /tmp/sweep_nocache.json
+cmp /tmp/sweep_cold.json /tmp/sweep_nocache.json
+rm -f /tmp/sweep_cache.json /tmp/sweep_cold.json /tmp/sweep_warm.json \
+    /tmp/sweep_nocache.json /tmp/sweep_cold.err /tmp/sweep_warm.err
+
+echo "== sweep resume smoke (complete document re-prices nothing) =="
+# Resuming over the run's own complete --out document must price zero
+# points and leave the document byte-identical.
+rm -f /tmp/sweep_resume.json
+target/release/fred sweep "${THRU_ARGS[@]}" --out /tmp/sweep_resume.json > /dev/null
+cp /tmp/sweep_resume.json /tmp/sweep_resume.orig.json
+target/release/fred sweep "${THRU_ARGS[@]}" --out /tmp/sweep_resume.json --resume \
+    > /dev/null 2> /tmp/sweep_resume.err
+cmp /tmp/sweep_resume.json /tmp/sweep_resume.orig.json
+grep -q 'priced 0' /tmp/sweep_resume.err
+rm -f /tmp/sweep_resume.json /tmp/sweep_resume.orig.json /tmp/sweep_resume.err
+
+echo "== sweep shard smoke (--shard 0/2 + 1/2 -> merge == unsharded) =="
+target/release/fred sweep "${THRU_ARGS[@]}" > /tmp/shard_all.json
+target/release/fred sweep "${THRU_ARGS[@]}" --shard 0/2 > /tmp/shard_0.json
+target/release/fred sweep "${THRU_ARGS[@]}" --shard 1/2 > /tmp/shard_1.json
+target/release/fred merge /tmp/shard_0.json /tmp/shard_1.json > /tmp/shard_merged.json
+cmp /tmp/shard_all.json /tmp/shard_merged.json
+rm -f /tmp/shard_all.json /tmp/shard_0.json /tmp/shard_1.json /tmp/shard_merged.json
+
+echo "== throughput-flag error paths (exit 2, not silence) =="
+# Bad shard specs and --resume without --out must fail loudly.
+for bad in "--shard 2/2" "--shard 3/2" "--shard x/2" "--shard 1/0" \
+    "--shard 2" "--resume"; do
+    # shellcheck disable=SC2086
+    if target/release/fred sweep --models resnet152 --strategies 1,20,1 $bad \
+        --json > /dev/null 2>&1; then
+        echo "sweep $bad must exit 2" >&2
+        exit 1
+    fi
+done
+printf '{not json' > /tmp/bad_cache.json
+if target/release/fred sweep --models resnet152 --strategies 1,20,1 \
+    --cache /tmp/bad_cache.json --json > /dev/null 2>&1; then
+    echo "corrupt --cache must exit 2" >&2
+    exit 1
+fi
+printf '{"points":[],"schema_version":4,"truncated_strategies":0}\n' > /tmp/stale_resume.json
+if target/release/fred sweep --models resnet152 --strategies 1,20,1 \
+    --resume --out /tmp/stale_resume.json --json > /dev/null 2>&1; then
+    echo "stale-schema --resume must exit 2" >&2
+    exit 1
+fi
+rm -f /tmp/bad_cache.json /tmp/stale_resume.json
+
+echo "== perf smoke: sweep throughput vs committed baseline =="
+# BENCH_sweep.json at the repo root is the committed throughput baseline;
+# a fresh bench run overwrites the working copy and `fred perfgate`
+# compares the two (2x regression threshold). Warn-only by default —
+# shared runners are noisy — hard gate under CI_STRICT=1. With no
+# committed baseline yet, the run seeds the file instead (commit it).
+if [ -f BENCH_sweep.json ]; then
+    cp BENCH_sweep.json /tmp/bench_sweep_baseline.json
+    cargo bench --bench bench_sweep > /dev/null
+    if [ "${CI_STRICT:-0}" = "1" ]; then
+        target/release/fred perfgate /tmp/bench_sweep_baseline.json BENCH_sweep.json
+    else
+        target/release/fred perfgate /tmp/bench_sweep_baseline.json BENCH_sweep.json \
+            || echo "perf smoke: WARNING - sweep throughput regressed vs baseline (CI_STRICT=1 to fail)"
+    fi
+    rm -f /tmp/bench_sweep_baseline.json
+else
+    cargo bench --bench bench_sweep > /dev/null
+    echo "perf smoke: no committed BENCH_sweep.json baseline; this run seeded one - commit it"
+fi
+
 if command -v rustfmt >/dev/null 2>&1; then
     echo "== cargo fmt --check =="
     cargo fmt --check

@@ -31,14 +31,21 @@
 //!    microbatch counts it blows past the 80 GB HBM that 1F1B's
 //!    depth-capped residency respects, and the memory-aware sweep must
 //!    flip the recommendation.
+//! 8. what does the *next* what-if cost (`--cache`) — widening one axis
+//!    of an already-priced sweep should only price the delta: every
+//!    previously priced point replays from the content-addressed cache,
+//!    and the replayed document is byte-identical to a fresh run.
 //!
 //! Run: `cargo run --release --example strategy_sweep`
 
 use fred::coordinator::config::FabricKind;
 use fred::coordinator::memory::MemPolicy;
 use fred::coordinator::parallelism::{Strategy, WaferSpan};
+use fred::coordinator::pointcache::PointCache;
 use fred::coordinator::stagegraph::PipeSchedule;
-use fred::coordinator::sweep::{run_sweep, InfeasibleKind, SweepConfig, WaferDims};
+use fred::coordinator::sweep::{
+    run_sweep, run_sweep_with, InfeasibleKind, SweepConfig, SweepOptions, WaferDims,
+};
 use fred::coordinator::timeline::OverlapMode;
 use fred::coordinator::workload;
 use fred::fabric::egress::EgressTopo;
@@ -368,13 +375,71 @@ fn main() {
         over.mem_gb, fits.mem_gb
     );
 
+    // ------------- cached what-if: widening an axis prices only the delta
+    println!("\n== cached what-if: widening the fleet axis prices only the delta ==\n");
+    // The content-addressed cache's question: what does the *next*
+    // what-if cost? Price a 2-fleet sweep into a fresh cache, then widen
+    // the axis to three fleet sizes — every previously priced point
+    // replays from the cache, only the new fleet size is priced, and the
+    // replayed document is byte-identical to a from-scratch run of the
+    // widened grid.
+    let narrow_cfg = SweepConfig {
+        workloads: vec![workload::transformer_17b()],
+        wafers: vec![WaferDims::PAPER],
+        wafer_counts: vec![1, 2],
+        fabrics: vec![FabricKind::FredD],
+        strategies: None,
+        max_strategies: 4,
+        bench_bytes: 100e6,
+        ..SweepConfig::default()
+    };
+    let mut opts = SweepOptions {
+        cache: Some(PointCache::new()),
+        ..SweepOptions::default()
+    };
+    let narrow = run_sweep_with(&narrow_cfg, &mut opts);
+    assert_eq!(narrow.stats.cache_hits, 0, "a fresh cache cannot hit");
+    assert_eq!(narrow.stats.priced, narrow.stats.total_specs);
+    println!(
+        "narrow run (fleets 1,2):   priced {:>2} of {:>2} specs — cache warmed",
+        narrow.stats.priced, narrow.stats.total_specs
+    );
+
+    let wide_cfg = SweepConfig {
+        wafer_counts: vec![1, 2, 4],
+        ..narrow_cfg
+    };
+    let wide = run_sweep_with(&wide_cfg, &mut opts);
+    assert_eq!(
+        wide.stats.cache_hits, narrow.stats.total_specs,
+        "every narrow-run point must replay from the cache"
+    );
+    assert_eq!(
+        wide.stats.priced,
+        wide.stats.total_specs - narrow.stats.total_specs,
+        "only the 4-wafer delta is priced"
+    );
+    println!(
+        "widened run (fleets 1,2,4): priced {:>2} of {:>2} specs — {} replayed from cache",
+        wide.stats.priced, wide.stats.total_specs, wide.stats.cache_hits
+    );
+    let fresh_wide = run_sweep(&wide_cfg);
+    assert_eq!(
+        wide.report.to_json().render(),
+        fresh_wide.to_json().render(),
+        "the cache-assisted document must be byte-identical to a fresh run"
+    );
+    println!("cache-assisted document == fresh run, byte for byte");
+
     println!(
         "\nmachine-readable: `fred sweep --models gpt3 --wafers 1,2,4,8,16 \
          --fabrics fred-d --xwafer-bw 1152,2304 --xwafer-topo ring,tree,dragonfly \
          --span dp,pp,mp,2x2 --overlap off,full --microbatches 2,8 \
          --schedule gpipe,1f1b,zb --zero 0,1,2 --recompute off,full \
          --mem rank --json \
-         --out sweep.json`; shard across machines and recombine with \
-         `fred merge shard1.json shard2.json --out sweep.json`"
+         --out sweep.json`; shard across machines (`--shard 0/4` ... `--shard 3/4`) \
+         and recombine with `fred merge shard0.json shard1.json ... --out sweep.json`; \
+         keep a `--cache points.json` warm so repeat what-ifs only price the delta, \
+         and `--resume` an interrupted `--out` run instead of restarting it"
     );
 }

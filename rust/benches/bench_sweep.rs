@@ -6,7 +6,8 @@
 //! Budget: the default CLI sweep (t17b, 5×4, all fabrics, 12 strategies)
 //! must finish in seconds, and points/s must not regress silently.
 //!
-//! The sweep executor shards points over `std::thread::scope` workers, so
+//! The sweep executor runs points on work-stealing `std::thread::scope`
+//! workers (each claims the next spec from a shared atomic index), so
 //! the second section compares a forced single-thread run against the
 //! auto thread count on the same (multi-wafer) cross-product and asserts
 //! the outputs are byte-identical — the determinism contract of
@@ -161,6 +162,32 @@ fn main() {
             },
         ),
         (
+            "skew | 1W+4W x all spans x 3 topos | all 5 fabrics | 4 strat",
+            // The work-stealing showcase: cheap single-wafer mesh points
+            // mixed with fluid-heavy multi-wafer MP-span points in one
+            // spec list. A static chunk partition strands the expensive
+            // tail on one worker while the rest idle; the claim loop
+            // keeps every worker busy, so this case's points/s is the
+            // one to watch for executor regressions.
+            {
+                let mut c = cfg(
+                    vec![workload::transformer_17b()],
+                    vec![WaferDims::PAPER],
+                    FabricKind::all().to_vec(),
+                    4,
+                );
+                c.wafer_counts = vec![1, 4];
+                c.xwafer_topos = EgressTopo::all().to_vec();
+                c.wafer_spans = vec![
+                    WaferSpan::Dp,
+                    WaferSpan::Pp,
+                    WaferSpan::Mp,
+                    WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 2 },
+                ];
+                c
+            },
+        ),
+        (
             "t17b | 4W x mp + 2x2 span | fred-d | 6 strat",
             // The ISSUE 4 axis in isolation: per-layer egress All-Reduces
             // (MP span) and the two-dimensional mixed span are the most
@@ -208,17 +235,6 @@ fn main() {
         assert!(feasible > 0, "{name}: no feasible points");
     }
     table.print();
-    // Machine-readable throughput record for regression tracking: one
-    // entry per case, points/s being the headline number.
-    let bench_doc = Json::obj(vec![
-        ("bench", Json::Str("sweep".to_string())),
-        ("cases", Json::Arr(json_cases)),
-    ]);
-    let bench_path = "BENCH_sweep.json";
-    match std::fs::write(bench_path, format!("{}\n", bench_doc.render())) {
-        Ok(()) => println!("(wrote {bench_path})"),
-        Err(e) => eprintln!("(cannot write {bench_path}: {e})"),
-    }
 
     // ------------------------------------------------ threaded executor
     // The cross-product now includes the egress axes (topology x span),
@@ -287,4 +303,35 @@ fn main() {
         "speedup: {:.2}x (outputs byte-identical; FRED_SWEEP_THREADS overrides both)",
         dt_seq / dt_par
     );
+
+    // The executor runs join the throughput record too: the auto-thread
+    // row is where a work-distribution regression (e.g. a skewed
+    // partition idling workers) shows up even when per-point cost is
+    // unchanged.
+    let feasible_seq = seq.points.iter().filter(|p| p.outcome.is_ok()).count();
+    for (name, wall) in
+        [("threaded | 1 thread", dt_seq), ("threaded | auto threads", dt_par)]
+    {
+        json_cases.push(Json::obj(vec![
+            ("name", Json::Str(name.to_string())),
+            ("points", Json::Num(n as f64)),
+            ("feasible", Json::Num(feasible_seq as f64)),
+            ("wall_s", Json::Num(wall)),
+            ("points_per_s", Json::Num(n as f64 / wall)),
+        ]));
+    }
+
+    // Machine-readable throughput record for regression tracking: one
+    // entry per case, points/s being the headline number. Written to the
+    // repo root (not the bench's cwd) so ci.sh and the committed
+    // baseline always agree on the path.
+    let bench_doc = Json::obj(vec![
+        ("bench", Json::Str("sweep".to_string())),
+        ("cases", Json::Arr(json_cases)),
+    ]);
+    let bench_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sweep.json");
+    match std::fs::write(bench_path, format!("{}\n", bench_doc.render())) {
+        Ok(()) => println!("(wrote {bench_path})"),
+        Err(e) => eprintln!("(cannot write {bench_path}: {e})"),
+    }
 }

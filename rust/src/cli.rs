@@ -3,8 +3,9 @@
 use crate::coordinator::{
     config::FabricKind, memory::MemPolicy, memory::Recompute, memory::ZeroStage,
     metrics::CommType, parallelism::Strategy, parallelism::WaferSpan, placement,
-    placement::Placement, sim::Simulator, stagegraph::PipeSchedule, sweep,
-    sweep::SweepConfig, sweep::WaferDims, timeline::OverlapMode, workload::Workload,
+    placement::Placement, pointcache::PointCache, sim::Simulator,
+    stagegraph::PipeSchedule, sweep, sweep::SweepConfig, sweep::WaferDims,
+    timeline::OverlapMode, workload::Workload,
 };
 use crate::fabric::egress::EgressTopo;
 use crate::fabric::fred::hw_model::HwOverhead;
@@ -59,6 +60,7 @@ COMMANDS:
                [--schedule gpipe,1f1b,interleaved,zb] [--vstages N]
                [--zero 0,1,2] [--recompute off,full] [--mem off|rank|prune]
                [--threads N] [--top N] [--bytes N] [--json] [--out FILE]
+               [--shard I/N] [--resume] [--cache FILE]
                Strategy/topology sweep engine: enumerates fabric x wafer
                shape x fleet size x MP/DP/PP factorization x workload,
                runs each point end to end, and ranks by per-sample
@@ -220,6 +222,47 @@ COMMANDS:
                `mb` activation sets resident — e.g. gpt3 at MP1-DP10-PP2
                x 16 microbatches is 132 GB/NPU under gpipe (infeasible)
                vs 29 GB under 1f1b; `--mem rank` surfaces the flip.
+
+               ## Throughput
+               The sweep is built to be re-run. Points are priced on
+               work-stealing worker threads (each claims the next spec
+               from a shared index, so skewed point costs cannot idle a
+               statically partitioned chunk; output stays byte-identical
+               at any --threads). Three flags skip re-pricing entirely:
+                 --shard I/N   evaluate only the I-th of N deterministic
+                               slices of the spec list (0-indexed); run
+                               one shard per machine and recombine the
+                               --out files with `fred merge` — the
+                               merged document is byte-identical to the
+                               unsharded run (truncation bookkeeping is
+                               reported on shard 0 only, so the counts
+                               sum correctly).
+                 --resume      reuse every point of an existing --out
+                               document (requires --out); only specs
+                               missing from it are priced, then the
+                               document is rewritten. Resuming over a
+                               complete document prices nothing. The
+                               document does not record pricing flags,
+                               so resume with the same --bytes and
+                               --mem as the original run.
+                 --cache FILE  content-addressed point cache: each
+                               priced point is stored under a
+                               fingerprint of every pricing input (the
+                               full spec, the workload's numbers,
+                               --bytes, --mem, schema version), so a
+                               warm re-run — or a what-if query sharing
+                               most of its grid — replays hits instead
+                               of re-pricing. Created on first use,
+                               rewritten after each run; files from an
+                               older schema version are dropped, not
+                               replayed.
+               Reuse statistics go to stderr (`sweep resume: reused R of
+               T points, priced P`; `sweep cache: N hits, M misses`);
+               stdout stays byte-identical to a fresh run in both table
+               and --json modes. `cargo bench --bench bench_sweep`
+               tracks sweep throughput (points/s) in BENCH_sweep.json,
+               and `fred perfgate` turns two of those files into a CI
+               trajectory gate.
                Example: fred sweep --wafers 1,2,4,8 --models gpt3
                         --fabrics fred-d --xwafer-bw 1152,2304
                         --xwafer-topo ring,tree --span dp,pp,mp,2x4
@@ -239,6 +282,13 @@ COMMANDS:
                once per wafer shape, so shards re-enumerating the same
                shape would double-count `truncated_strategies` (the
                ranked `points` themselves always round-trip exactly).
+  perfgate     BASELINE FRESH [--threshold X]
+               Compare two `cargo bench --bench bench_sweep` JSON
+               documents (BENCH_sweep.json) case by case on points/s;
+               exit 1 when any case present in both is more than X times
+               slower than baseline (default 2.0). ci.sh runs this
+               against the committed baseline as the sweep-throughput
+               trajectory gate (warn-only unless CI_STRICT=1).
   microbench   [--strategy 2,5,2] [--bytes N]        (Fig. 9 per-phase BW)
   channel-load [--rows 4 --cols 4]                   (Fig. 4 hotspot)
   route        [--m 2|3]                             (Fig. 7 routing demo)
@@ -259,6 +309,7 @@ pub fn run(args: &[String]) -> i32 {
         "sim" => cmd_sim(&opts),
         "sweep" => cmd_sweep(&opts),
         "merge" => cmd_merge(&args[1..]),
+        "perfgate" => cmd_perfgate(&args[1..]),
         "microbench" => cmd_microbench(&opts),
         "channel-load" => cmd_channel_load(&opts),
         "route" => cmd_route(&opts),
@@ -665,6 +716,66 @@ fn cmd_sweep(opts: &Opts) -> i32 {
     };
     let json_only = opts.has("json");
     let out_path = opts.get("out");
+    // --shard I/N: deterministic 1/N slice of the spec list for
+    // cross-machine distribution; recombine the shards with `fred merge`.
+    let shard = match opts.get("shard") {
+        None => None,
+        Some(s) => match parse_shard(s) {
+            Some(v) => Some(v),
+            None => {
+                eprintln!("bad --shard `{s}` (expected I/N with 0 <= I < N, e.g. 0/4)");
+                return 2;
+            }
+        },
+    };
+    // --resume: reuse every matching point of an existing --out document
+    // instead of re-pricing it. A missing file is a fresh start (the
+    // first run of a resume loop); a corrupt or stale one is an error.
+    let resume = if opts.has("resume") {
+        let Some(path) = out_path else {
+            eprintln!(
+                "--resume needs --out FILE (the document to resume from and write back)"
+            );
+            return 2;
+        };
+        match std::fs::read_to_string(path) {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                eprintln!("sweep resume: `{path}` not found, starting fresh");
+                None
+            }
+            Err(e) => {
+                eprintln!("cannot read --resume document `{path}`: {e}");
+                return 2;
+            }
+            Ok(text) => {
+                let parsed = crate::runtime::json::Json::parse(text.trim())
+                    .map_err(|e| format!("`{path}` is not a sweep JSON document: {e}"))
+                    .and_then(|doc| sweep::points_from_doc(&doc));
+                match parsed {
+                    Ok(points) => Some(points),
+                    Err(e) => {
+                        eprintln!("cannot resume from `{path}`: {e}");
+                        return 2;
+                    }
+                }
+            }
+        }
+    } else {
+        None
+    };
+    // --cache FILE: content-addressed point cache, loaded before the run
+    // and written back after (created on first use).
+    let cache_path = opts.get("cache");
+    let cache = match cache_path {
+        None => None,
+        Some(path) => match PointCache::load(path) {
+            Ok(c) => Some(c),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+    };
 
     let cfg = SweepConfig {
         workloads,
@@ -687,8 +798,28 @@ fn cmd_sweep(opts: &Opts) -> i32 {
         bench_bytes,
         threads,
     };
-    let report = sweep::run_sweep(&cfg);
+    let mut swopts = sweep::SweepOptions { shard, resume, cache };
+    let resuming = swopts.resume.is_some();
+    let run = sweep::run_sweep_with(&cfg, &mut swopts);
+    let (report, stats) = (run.report, run.stats);
     let json_text = report.to_json().render();
+
+    // Reuse statistics go to stderr so stdout stays byte-identical to a
+    // fresh run in both table and --json modes (the warm-equals-cold
+    // walls in ci.sh cmp stdout/--out only).
+    if resuming {
+        eprintln!(
+            "sweep resume: reused {} of {} points, priced {}",
+            stats.resumed, stats.total_specs, stats.priced
+        );
+    }
+    if let (Some(path), Some(cache)) = (cache_path, swopts.cache.as_ref()) {
+        eprintln!("sweep cache: {} hits, {} misses", cache.hits, cache.misses);
+        if let Err(e) = cache.save(path) {
+            eprintln!("{e}");
+            return 2;
+        }
+    }
 
     // --out FILE: the same JSON document that --json prints, newline-
     // terminated so the file is byte-identical to the --json stdout.
@@ -809,6 +940,124 @@ fn cmd_merge(args: &[String]) -> i32 {
         }
     }
     println!("{text}");
+    0
+}
+
+/// Parse `--shard I/N` (shard index / shard count): plain digits only,
+/// `0 <= I < N` — the same strictness `--wafers` applies (no signs, no
+/// empties), so a malformed shard spec is a loud exit 2 rather than a
+/// silently empty sweep.
+fn parse_shard(s: &str) -> Option<(usize, usize)> {
+    let (i_s, n_s) = s.split_once('/')?;
+    let digits = |t: &str| -> Option<usize> {
+        let t = t.trim();
+        if t.is_empty() || !t.chars().all(|c| c.is_ascii_digit()) {
+            return None;
+        }
+        t.parse().ok()
+    };
+    let i = digits(i_s)?;
+    let n = digits(n_s)?;
+    (n >= 1 && i < n).then_some((i, n))
+}
+
+/// `fred perfgate BASELINE FRESH [--threshold X]` — the sweep-throughput
+/// trajectory gate: compare two `BENCH_sweep.json` documents case by
+/// case on points/s. Exit 1 when any case present in both is more than
+/// X times slower than baseline (default 2.0 — generous enough for
+/// shared-runner noise, tight enough to catch a real hot-path
+/// regression); exit 2 on usage or parse errors. Cases present on only
+/// one side are reported but never fail the gate (a renamed bench case
+/// is a baseline-refresh chore, not a regression).
+fn cmd_perfgate(args: &[String]) -> i32 {
+    use crate::runtime::json::Json;
+    let mut files: Vec<&String> = Vec::new();
+    let mut threshold = 2.0f64;
+    let mut i = 0usize;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--threshold" => {
+                i += 1;
+                match args.get(i).and_then(|t| t.parse::<f64>().ok()) {
+                    Some(x) if x.is_finite() && x >= 1.0 => threshold = x,
+                    _ => {
+                        eprintln!("bad --threshold (expected a number >= 1, e.g. 2.0)");
+                        return 2;
+                    }
+                }
+            }
+            a if a.starts_with("--") => {
+                eprintln!("unknown option `{a}` for perfgate (only --threshold)");
+                return 2;
+            }
+            _ => files.push(&args[i]),
+        }
+        i += 1;
+    }
+    if files.len() != 2 {
+        eprintln!(
+            "perfgate needs exactly two files: BASELINE FRESH (the committed \
+             baseline and a fresh `cargo bench --bench bench_sweep` output)"
+        );
+        return 2;
+    }
+    // name -> points/s, in deterministic (sorted) iteration order.
+    let load = |path: &str| -> Result<std::collections::BTreeMap<String, f64>, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read `{path}`: {e}"))?;
+        let doc = Json::parse(text.trim())
+            .map_err(|e| format!("`{path}` is not a bench JSON document: {e}"))?;
+        let cases = doc
+            .get("cases")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("`{path}` has no cases array"))?;
+        let mut by_name = std::collections::BTreeMap::new();
+        for c in cases {
+            let name = c
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("`{path}`: case missing name"))?;
+            let pps = c
+                .get("points_per_s")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("`{path}`: case `{name}` missing points_per_s"))?;
+            by_name.insert(name.to_string(), pps);
+        }
+        Ok(by_name)
+    };
+    let (base, fresh) = match (load(files[0]), load(files[1])) {
+        (Ok(b), Ok(f)) => (b, f),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut regressed = 0usize;
+    for (name, &b) in &base {
+        let Some(&f) = fresh.get(name) else {
+            println!("perfgate: case `{name}` missing from fresh run (refresh the baseline?)");
+            continue;
+        };
+        // How many times slower than baseline this run was; < 1 = faster.
+        let ratio = if f > 0.0 { b / f } else { f64::INFINITY };
+        let verdict = if ratio > threshold {
+            regressed += 1;
+            "REGRESSED"
+        } else {
+            "ok"
+        };
+        println!("perfgate: {name}: {f:.1} pts/s vs baseline {b:.1} ({ratio:.2}x) {verdict}");
+    }
+    for name in fresh.keys() {
+        if !base.contains_key(name) {
+            println!("perfgate: new case `{name}` (no baseline yet)");
+        }
+    }
+    if regressed > 0 {
+        eprintln!("perfgate: {regressed} case(s) regressed beyond {threshold}x of baseline");
+        return 1;
+    }
+    println!("perfgate: all matched cases within {threshold}x of baseline");
     0
 }
 

@@ -28,12 +28,15 @@
 //! * [`sweep`] — the strategy/topology sweep engine: cross-product of
 //!   fabric × wafer shape × strategy × overlap schedule × workload,
 //!   ranked.
+//! * [`pointcache`] — the content-addressed sweep-point cache backing
+//!   `fred sweep --cache` (delta-pricing for repeated what-if queries).
 
 pub mod config;
 pub mod memory;
 pub mod metrics;
 pub mod parallelism;
 pub mod placement;
+pub mod pointcache;
 pub mod schedule;
 pub mod sim;
 pub mod stagegraph;
@@ -46,8 +49,9 @@ pub use memory::{Footprint, MemPolicy, Recompute, ZeroStage};
 pub use metrics::{Breakdown, CommType};
 pub use parallelism::{ScaledStrategy, Strategy, WaferSpan};
 pub use placement::Placement;
+pub use pointcache::PointCache;
 pub use sim::Simulator;
 pub use stagegraph::PipeSchedule;
-pub use sweep::{SweepConfig, SweepReport, WaferDims};
+pub use sweep::{SweepConfig, SweepOptions, SweepReport, SweepRun, SweepStats, WaferDims};
 pub use timeline::OverlapMode;
 pub use workload::Workload;

@@ -1,0 +1,183 @@
+//! Content-addressed sweep-point cache (`fred sweep --cache FILE`).
+//!
+//! The sweep is a pure function of its inputs: every priced point is
+//! fully determined by the schema version, the point's spec (fabric,
+//! shape, fleet, egress operating point, span, strategy, and the
+//! schedule/memory axes), the workload's numbers, the microbenchmark
+//! payload, and the memory policy. That makes repeated what-if queries
+//! ("add one axis value, re-run") mostly redundant work — so each point
+//! is keyed by a canonical fingerprint of exactly those inputs, and a
+//! cache hit replays the stored point JSON instead of re-pricing it.
+//!
+//! Entries store the point in the `fred sweep --json` per-point format
+//! (see [`super::sweep::SCHEMA_VERSION`]): the hand-rolled JSON codec
+//! renders `f64`s with shortest-round-trip formatting, so a replayed
+//! point re-renders byte-identically to a freshly priced one — the
+//! warm-run-equals-cold-run wall in ci.sh and `tests/sweep_cli.rs`.
+//!
+//! The fingerprint itself is computed by the sweep engine (the spec
+//! type is private to it); this module provides the hash, the file
+//! format, and the hit/miss bookkeeping. Keys are 128-bit FNV-1a over
+//! the canonical string — not cryptographic, but collision-safe far
+//! beyond any enumerable sweep size, and dependency-free.
+
+use crate::runtime::json::Json;
+use std::collections::BTreeMap;
+
+/// 128-bit FNV-1a over `bytes` (offset basis / prime per the FNV spec).
+pub fn fnv1a128(bytes: &[u8]) -> u128 {
+    const OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+    const PRIME: u128 = 0x0000000001000000000000000000013b;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u128;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Hex fingerprint of a canonical key string.
+pub fn fingerprint(canonical: &str) -> String {
+    format!("{:032x}", fnv1a128(canonical.as_bytes()))
+}
+
+/// An on-disk map from point fingerprint to priced point JSON, plus
+/// hit/miss counters for the run that holds it. Entries are kept in a
+/// `BTreeMap` so the saved file is deterministic (sorted keys).
+#[derive(Debug, Default)]
+pub struct PointCache {
+    entries: BTreeMap<String, Json>,
+    /// Lookups answered from the cache this run.
+    pub hits: usize,
+    /// Lookups that fell through to a fresh `eval_point` this run.
+    pub misses: usize,
+}
+
+impl PointCache {
+    /// An empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Load a cache file. A missing file is an empty cache (the cold
+    /// run of the warm/cold pair); a file written under a different
+    /// [`super::sweep::SCHEMA_VERSION`] is also treated as empty —
+    /// stale entries are dropped rather than replayed into a document
+    /// with a different contract. An unreadable or unparsable file is
+    /// an error (silently clobbering a corrupt cache would hide it).
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(Self::new());
+            }
+            Err(e) => return Err(format!("cannot read cache `{path}`: {e}")),
+        };
+        let doc = Json::parse(&text)
+            .map_err(|e| format!("cache `{path}` is not valid JSON: {e}"))?;
+        let version = doc
+            .get("schema_version")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("cache `{path}` has no schema_version"))?;
+        if version != super::sweep::SCHEMA_VERSION {
+            return Ok(Self::new());
+        }
+        let mut entries = BTreeMap::new();
+        if let Some(obj) = doc.get("points").and_then(Json::as_obj) {
+            for (k, v) in obj {
+                entries.insert(k.clone(), v.clone());
+            }
+        }
+        Ok(Self { entries, hits: 0, misses: 0 })
+    }
+
+    /// Write the cache back (sorted keys — deterministic bytes).
+    pub fn save(&self, path: &str) -> Result<(), String> {
+        let points: Vec<(&str, Json)> = self
+            .entries
+            .iter()
+            .map(|(k, v)| (k.as_str(), v.clone()))
+            .collect();
+        let doc = Json::obj(vec![
+            ("schema_version", Json::Num(super::sweep::SCHEMA_VERSION)),
+            ("points", Json::obj(points)),
+        ]);
+        std::fs::write(path, format!("{}\n", doc.render()))
+            .map_err(|e| format!("cannot write cache `{path}`: {e}"))
+    }
+
+    /// The stored point for `key`, if any. Counting a lookup as a hit
+    /// is the caller's call (a stored point that fails to parse back is
+    /// a miss, and only the sweep engine can parse points).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.entries.get(key)
+    }
+
+    /// Store a priced point under its fingerprint.
+    pub fn insert(&mut self, key: String, point: Json) {
+        self.entries.insert(key, point);
+    }
+
+    /// Number of stored points.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is stored.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_is_stable_and_order_sensitive() {
+        // Spot values pin the constants: any change to the hash breaks
+        // every existing cache file, which must be a deliberate act.
+        assert_eq!(fingerprint(""), "6c62272e07bb014262b821756295c58d");
+        assert_ne!(fingerprint("a|b"), fingerprint("b|a"));
+        assert_ne!(fingerprint("ab"), fingerprint("a\0b"));
+    }
+
+    #[test]
+    fn roundtrip_through_a_file() {
+        let mut c = PointCache::new();
+        c.insert("k1".into(), Json::Num(1.5));
+        c.insert("k0".into(), Json::Str("x".into()));
+        let path = std::env::temp_dir().join("fred_pointcache_roundtrip.json");
+        let path = path.to_str().unwrap();
+        c.save(path).unwrap();
+        let back = PointCache::load(path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.get("k1").unwrap().as_f64(), Some(1.5));
+        assert_eq!(back.get("k0").unwrap().as_str(), Some("x"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_an_empty_cache() {
+        let c = PointCache::load("/nonexistent/fred_pointcache.json");
+        assert!(c.unwrap().is_empty());
+    }
+
+    #[test]
+    fn stale_schema_version_drops_entries() {
+        let path = std::env::temp_dir().join("fred_pointcache_stale.json");
+        let path = path.to_str().unwrap();
+        std::fs::write(path, "{\"points\":{\"k\":1},\"schema_version\":4}\n").unwrap();
+        assert!(PointCache::load(path).unwrap().is_empty());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn corrupt_file_is_an_error_not_an_empty_cache() {
+        let path = std::env::temp_dir().join("fred_pointcache_corrupt.json");
+        let path = path.to_str().unwrap();
+        std::fs::write(path, "{not json").unwrap();
+        assert!(PointCache::load(path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

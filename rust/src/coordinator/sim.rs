@@ -51,14 +51,21 @@ use crate::fabric::fluid::FluidError;
 use crate::fabric::mesh::Mesh2D;
 use crate::fabric::scaleout::ScaleOut;
 use crate::fabric::topology::{CollectiveKind, Fabric, IoDirection};
+use std::borrow::Cow;
 
 /// A workload+strategy+fabric simulation context.
-pub struct Simulator {
+///
+/// The workload is held as a [`Cow`] so bulk callers (the sweep engine
+/// prices thousands of points against the same few workloads) can lend a
+/// shared prototype instead of cloning the full layer list per point;
+/// the by-value constructors wrap owned workloads, so ordinary callers
+/// never see the lifetime.
+pub struct Simulator<'w> {
     kind: FabricKind,
     fabric: Box<dyn Fabric>,
     /// Kept for snake ordering / channel-load analysis on the baseline.
     mesh: Option<Mesh2D>,
-    workload: Workload,
+    workload: Cow<'w, Workload>,
     strategy: Strategy,
     placement: Placement,
     /// Multi-wafer scale-out context; the default single-wafer wrapper
@@ -90,13 +97,13 @@ pub struct Simulator {
     recompute: Recompute,
 }
 
-impl Simulator {
+impl<'w> Simulator<'w> {
     /// Build with the paper's default placement for the fabric kind, on
     /// the paper's 20-NPU wafer.
-    pub fn new(kind: FabricKind, workload: Workload, strategy: Strategy) -> Self {
+    pub fn new(kind: FabricKind, workload: Workload, strategy: Strategy) -> Simulator<'static> {
         let fabric = kind.build();
         let mesh = kind.is_mesh().then(Mesh2D::paper_baseline);
-        Self::with_fabric(kind, fabric, mesh, workload, strategy)
+        Simulator::with_fabric(kind, fabric, mesh, workload, strategy)
     }
 
     /// Build against an arbitrary fabric instance (the sweep engine's
@@ -109,7 +116,20 @@ impl Simulator {
         mesh: Option<Mesh2D>,
         workload: Workload,
         strategy: Strategy,
-    ) -> Self {
+    ) -> Simulator<'static> {
+        Simulator::with_fabric_shared(kind, fabric, mesh, Cow::Owned(workload), strategy)
+    }
+
+    /// [`Self::with_fabric`] without the per-call workload clone:
+    /// `Cow::Borrowed` lends a shared prototype for the simulator's
+    /// lifetime (the sweep hot path), `Cow::Owned` hands one over.
+    pub fn with_fabric_shared(
+        kind: FabricKind,
+        fabric: Box<dyn Fabric>,
+        mesh: Option<Mesh2D>,
+        workload: Cow<'w, Workload>,
+        strategy: Strategy,
+    ) -> Simulator<'w> {
         let n_npus = fabric.npu_count();
         assert!(
             strategy.workers() <= n_npus,
@@ -1008,7 +1028,7 @@ mod tests {
     use super::*;
     use crate::coordinator::workload;
 
-    fn sim(kind: FabricKind, w: Workload) -> Simulator {
+    fn sim(kind: FabricKind, w: Workload) -> Simulator<'static> {
         let s = w.default_strategy;
         Simulator::new(kind, w, s)
     }

@@ -49,14 +49,25 @@
 //! recompute, split microbatches) while a deadlocked shape is just
 //! degenerate.
 //!
-//! Point evaluation is embarrassingly parallel, so [`run_sweep`] shards
-//! the cross-product over `std::thread::scope` workers (std only — no
-//! rayon offline). Each point is a pure function of its spec, points are
-//! reassembled in spec order before ranking, and the rank comparator has
-//! a total tie-break — so the output is **byte-identical for every
-//! thread count** (`--threads 1` / `FRED_SWEEP_THREADS=1` force the
-//! sequential path; property-tested in `tests/prop_sweep.rs` and through
-//! the binary in `tests/sweep_cli.rs`).
+//! Point evaluation is embarrassingly parallel, so [`run_sweep`] runs
+//! the cross-product on `std::thread::scope` workers (std only — no
+//! rayon offline) that *steal* work: each claims the next unevaluated
+//! spec from a shared atomic index and writes the result into its
+//! pre-indexed slot, so skewed point costs (a fluid-heavy fleet next to
+//! a cheap single-wafer mesh) cannot idle a statically assigned chunk.
+//! Each point is a pure function of its spec, slots keep spec order,
+//! and the rank comparator has a total tie-break — so the output is
+//! **byte-identical for every thread count** (`--threads 1` /
+//! `FRED_SWEEP_THREADS=1` force the sequential path; property-tested in
+//! `tests/prop_sweep.rs` and through the binary in `tests/sweep_cli.rs`).
+//!
+//! [`run_sweep_with`] layers the sweep-as-a-service toolkit on the same
+//! pipeline: `--shard i/N` slices the spec list for cross-machine runs
+//! (`fred merge` reassembles them byte-identically), `--resume` replays
+//! points from a previous `--out` document, and `--cache` replays them
+//! from a content-addressed [`PointCache`] keyed on every pricing input
+//! (see [`super::pointcache`]). All three reuse paths reconstruct points
+//! that re-render byte-for-byte like freshly priced ones.
 //!
 //! Output is a ranked [`Table`](crate::util::table::Table) and a
 //! machine-readable [`Json`] document (`fred sweep --json`, versioned by
@@ -69,10 +80,11 @@ use super::config::{self, FabricKind};
 use super::memory::{MemPolicy, Recompute, ZeroStage};
 use super::metrics::{Breakdown, CommType};
 use super::parallelism::{ScaledStrategy, Strategy, WaferSpan};
+use super::pointcache::{self, PointCache};
 use super::sim::Simulator;
 use super::stagegraph::PipeSchedule;
 use super::timeline::OverlapMode;
-use super::workload::Workload;
+use super::workload::{ExecMode, Workload};
 use crate::fabric::egress::EgressTopo;
 use crate::fabric::mesh::Mesh2D;
 use crate::fabric::scaleout::{ScaleOut, DEFAULT_EGRESS_BW, DEFAULT_XWAFER_LATENCY};
@@ -80,7 +92,10 @@ use crate::fabric::topology::Fabric;
 use crate::runtime::json::Json;
 use crate::util::table::Table;
 use crate::util::units::{fmt_bw, fmt_time};
+use std::borrow::Cow;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 /// Version of the `fred sweep --json` document contract. Bump on any
 /// breaking change to field names or semantics (golden-file test:
@@ -502,30 +517,50 @@ struct PointSpec {
     recompute: Recompute,
 }
 
-/// Per-thread prototype cache: fabrics are immutable link-graph models,
-/// so each worker derives one per (kind, shape) it encounters and clones
-/// it per point (cheaper than re-deriving the link graph per point).
+/// Shared prototype cache: fabrics are immutable link-graph models
+/// ([`Fabric`] is `Send + Sync`), so the executor derives one per
+/// (kind, shape) in the spec list up front and every worker clones from
+/// the same map — no worker re-derives a link graph the sweep already
+/// built (the promoted per-thread cache from PR 2).
 type ProtoCache = HashMap<(FabricKind, WaferDims), (Box<dyn Fabric>, Option<Mesh2D>)>;
 
-/// Evaluate one point of the cross-product.
-fn eval_point(cfg: &SweepConfig, spec: &PointSpec, cache: &mut ProtoCache) -> SweepPoint {
-    let (proto, mesh_proto) = cache.entry((spec.kind, spec.wafer)).or_insert_with(|| {
-        (
-            spec.kind.build_sized(spec.wafer.n_l1, spec.wafer.per_l1),
-            spec.kind
-                .is_mesh()
-                .then(|| Mesh2D::with_dims(spec.wafer.n_l1, spec.wafer.per_l1)),
-        )
-    });
-    let workload = &cfg.workloads[spec.workload_idx];
-    let mut point_workload = workload.clone();
-    if let Some(mb) = spec.microbatches {
-        point_workload.microbatches = mb;
+/// Build the prototype for every (kind, shape) the spec list touches.
+fn build_protos(specs: &[PointSpec]) -> ProtoCache {
+    let mut protos = ProtoCache::new();
+    for spec in specs {
+        protos.entry((spec.kind, spec.wafer)).or_insert_with(|| {
+            (
+                spec.kind.build_sized(spec.wafer.n_l1, spec.wafer.per_l1),
+                spec.kind
+                    .is_mesh()
+                    .then(|| Mesh2D::with_dims(spec.wafer.n_l1, spec.wafer.per_l1)),
+            )
+        });
     }
+    protos
+}
+
+/// Evaluate one point of the cross-product. `protos` must already hold
+/// this spec's (kind, shape) prototype — see [`build_protos`].
+fn eval_point(cfg: &SweepConfig, spec: &PointSpec, protos: &ProtoCache) -> SweepPoint {
+    let (proto, mesh_proto) = protos
+        .get(&(spec.kind, spec.wafer))
+        .expect("prototype prebuilt for every spec in the list");
+    let workload = &cfg.workloads[spec.workload_idx];
+    // Borrow the shared workload prototype; clone only when this point
+    // overrides its microbatch count (the `--microbatches` axis).
+    let point_workload: Cow<Workload> = match spec.microbatches {
+        None => Cow::Borrowed(workload),
+        Some(mb) => {
+            let mut w = workload.clone();
+            w.microbatches = mb;
+            Cow::Owned(w)
+        }
+    };
     let microbatches = point_workload.microbatches;
     let scale =
         ScaleOut::with_topo(spec.topo, spec.wafers, spec.xwafer_bw, spec.xwafer_latency);
-    let sim = Simulator::with_fabric(
+    let sim = Simulator::with_fabric_shared(
         spec.kind,
         proto.clone_box(),
         mesh_proto.clone(),
@@ -582,11 +617,12 @@ fn eval_point(cfg: &SweepConfig, spec: &PointSpec, cache: &mut ProtoCache) -> Sw
     }
 }
 
-/// Run the whole cross-product and rank the results. Points are
-/// evaluated on [`resolve_threads`] worker threads; the output is
-/// identical for every thread count.
-pub fn run_sweep(cfg: &SweepConfig) -> SweepReport {
-    // Enumerate the cross-product deterministically.
+/// Enumerate the cross-product deterministically. Returns the ordered
+/// spec list plus the number of auto-enumerated strategies dropped by
+/// [`SweepConfig::max_strategies`]. Spec order is the identity the whole
+/// throughput machinery hangs off: slots, shards, and resume matching
+/// all index into this list.
+fn enumerate_specs(cfg: &SweepConfig) -> (Vec<PointSpec>, usize) {
     let xwafer_bws: Vec<f64> = if cfg.xwafer_bws.is_empty() {
         vec![DEFAULT_EGRESS_BW]
     } else {
@@ -725,33 +761,299 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepReport {
         }
     }
 
-    // Shard over scoped threads; chunks preserve spec order on
-    // reassembly, so threading cannot perturb the result.
-    let threads = resolve_threads(cfg.threads).min(specs.len().max(1));
-    let chunk = specs.len().div_ceil(threads).max(1);
-    let mut points: Vec<SweepPoint> = if threads <= 1 {
-        let mut cache = ProtoCache::new();
-        specs.iter().map(|s| eval_point(cfg, s, &mut cache)).collect()
-    } else {
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = specs
-                .chunks(chunk)
-                .map(|shard| {
-                    scope.spawn(move || {
-                        let mut cache = ProtoCache::new();
-                        shard
-                            .iter()
-                            .map(|s| eval_point(cfg, s, &mut cache))
-                            .collect::<Vec<SweepPoint>>()
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .flat_map(|h| h.join().expect("sweep worker panicked"))
-                .collect()
-        })
+    (specs, truncated)
+}
+
+/// Evaluate a spec list on [`resolve_threads`] worker threads.
+///
+/// Workers *claim* the next unevaluated spec from a shared atomic index
+/// and write the result into its pre-indexed slot — so a worker that
+/// drew cheap points (single-wafer, mesh) keeps pulling work while one
+/// stuck on an expensive fluid solve does not idle the rest, unlike the
+/// old static `chunks()` partition whose wall clock was the slowest
+/// chunk. Slot indexing preserves spec order exactly, so the output is
+/// byte-identical at every thread count.
+fn eval_specs(cfg: &SweepConfig, specs: &[PointSpec]) -> Vec<SweepPoint> {
+    if specs.is_empty() {
+        return Vec::new();
+    }
+    let protos = build_protos(specs);
+    let threads = resolve_threads(cfg.threads).min(specs.len());
+    if threads <= 1 {
+        return specs.iter().map(|s| eval_point(cfg, s, &protos)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<OnceLock<SweepPoint>> = specs.iter().map(|_| OnceLock::new()).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= specs.len() {
+                    break;
+                }
+                // fetch_add hands each index to exactly one worker, so
+                // this set can never collide.
+                let _ = slots[i].set(eval_point(cfg, &specs[i], &protos));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().expect("every claimed slot was filled"))
+        .collect()
+}
+
+/// Identity of a point independent of how it was produced: every axis
+/// that distinguishes one spec from another, with f64 operating points
+/// compared bitwise (both sides come from the same finite config lists).
+/// This is how `--resume` matches a prior run's points back onto the
+/// freshly enumerated spec list.
+type PointId = (
+    String,
+    WaferDims,
+    usize,
+    u64,
+    u64,
+    EgressTopo,
+    WaferSpan,
+    FabricKind,
+    Strategy,
+    OverlapMode,
+    usize,
+    PipeSchedule,
+    usize,
+    ZeroStage,
+    Recompute,
+);
+
+fn spec_id(cfg: &SweepConfig, spec: &PointSpec) -> PointId {
+    let workload = &cfg.workloads[spec.workload_idx];
+    (
+        workload.name.clone(),
+        spec.wafer,
+        spec.wafers,
+        spec.xwafer_bw.to_bits(),
+        spec.xwafer_latency.to_bits(),
+        spec.topo,
+        spec.span,
+        spec.kind,
+        spec.strategy,
+        spec.overlap,
+        spec.microbatches.unwrap_or(workload.microbatches),
+        spec.schedule,
+        spec.vstages,
+        spec.zero,
+        spec.recompute,
+    )
+}
+
+fn point_id(p: &SweepPoint) -> PointId {
+    (
+        p.workload.clone(),
+        p.wafer,
+        p.wafers,
+        p.xwafer_bw.to_bits(),
+        p.xwafer_latency.to_bits(),
+        p.topo,
+        p.span,
+        p.fabric,
+        p.strategy,
+        p.overlap,
+        p.microbatches,
+        p.schedule,
+        p.vstages,
+        p.zero,
+        p.recompute,
+    )
+}
+
+/// Canonical string for everything about a workload that feeds pricing.
+/// Part of the cache key: two workloads with the same name but different
+/// numbers must not share cache entries. `f64`s are keyed by bit
+/// pattern — bitwise equality is the only equality the cache needs.
+fn workload_canonical(w: &Workload) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let mode = match w.exec_mode {
+        ExecMode::WeightStationary => "stationary",
+        ExecMode::WeightStreaming => "streaming",
     };
+    let _ = write!(
+        s,
+        "{}|{mode}|{}|{}|{:016x}|{}|{:016x}|{:016x}|{}|{}",
+        w.name,
+        w.default_strategy,
+        w.microbatches,
+        w.input_bytes.to_bits(),
+        w.dp_buckets,
+        w.compute_scale.to_bits(),
+        w.active_param_fraction.to_bits(),
+        w.overlap_dp,
+        w.stream_prefetch,
+    );
+    for l in &w.layers {
+        let _ = write!(
+            s,
+            "|{}:{:016x}:{:016x}:{:016x}:{}",
+            l.name,
+            l.params_bytes.to_bits(),
+            l.fwd_flops.to_bits(),
+            l.act_bytes.to_bits(),
+            l.mp_collectives,
+        );
+    }
+    s
+}
+
+/// Content-address of one point: a fingerprint over every input that
+/// determines its priced JSON. `workload_canons` holds the per-workload
+/// canonical strings (computed once per sweep, not once per point).
+fn spec_fingerprint(cfg: &SweepConfig, spec: &PointSpec, workload_canons: &[String]) -> String {
+    let mb = match spec.microbatches {
+        None => "default".to_string(),
+        Some(n) => n.to_string(),
+    };
+    let canonical = format!(
+        "v{}|{}|{}x{}|{}|{:016x}|{:016x}|{}|{}|{}|{}|{mb}|{}|{}|{}|{}|{:016x}|{}|{}",
+        SCHEMA_VERSION,
+        spec.kind.name(),
+        spec.wafer.n_l1,
+        spec.wafer.per_l1,
+        spec.wafers,
+        spec.xwafer_bw.to_bits(),
+        spec.xwafer_latency.to_bits(),
+        spec.topo.name(),
+        spec.span.name(),
+        spec.strategy,
+        spec.overlap.name(),
+        spec.schedule.name(),
+        spec.vstages,
+        spec.zero.name(),
+        spec.recompute.name(),
+        cfg.bench_bytes.to_bits(),
+        cfg.mem.name(),
+        workload_canons[spec.workload_idx],
+    );
+    pointcache::fingerprint(&canonical)
+}
+
+/// Throughput knobs for [`run_sweep_with`] — all default to "off", in
+/// which case it behaves exactly like [`run_sweep`].
+#[derive(Debug, Default)]
+pub struct SweepOptions {
+    /// `Some((i, n))` keeps only specs with `index % n == i`: a
+    /// deterministic 1/n slice of the cross-product whose outputs
+    /// `fred merge` reassembles byte-identically to the unsharded run.
+    /// Truncation is reported on shard 0 only, so merged shard counts
+    /// sum to the unsharded run's.
+    pub shard: Option<(usize, usize)>,
+    /// Points recovered from a previous run's `--out` document: any
+    /// enumerated spec whose identity matches one of these is reused
+    /// instead of re-priced.
+    pub resume: Option<Vec<SweepPoint>>,
+    /// Content-addressed point cache: hits skip `eval_point`, fresh
+    /// points are inserted back. Counters accumulate on the cache.
+    pub cache: Option<PointCache>,
+}
+
+/// What the executor actually did — surfaced on stderr by the CLI so
+/// warm/cold and resumed runs are distinguishable without perturbing
+/// the (byte-identity-gated) stdout document.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SweepStats {
+    /// Specs this run was responsible for (after any shard filter).
+    pub total_specs: usize,
+    /// Points reused from the `--resume` document.
+    pub resumed: usize,
+    /// Points replayed from the content-addressed cache.
+    pub cache_hits: usize,
+    /// Cache lookups that fell through to pricing.
+    pub cache_misses: usize,
+    /// Points actually priced by [`eval_specs`] this run.
+    pub priced: usize,
+}
+
+/// A completed sweep plus its executor statistics.
+#[derive(Debug)]
+pub struct SweepRun {
+    /// The ranked report — byte-identical to [`run_sweep`]'s for the
+    /// same config, whatever mix of resume/cache/pricing produced it.
+    pub report: SweepReport,
+    /// Where the points came from.
+    pub stats: SweepStats,
+}
+
+/// Run the cross-product with the full throughput toolkit: shard
+/// filtering, resume-from-document, and the content-addressed point
+/// cache. Every reuse path reconstructs points that render
+/// byte-identically to freshly priced ones (the JSON codec's
+/// shortest-round-trip f64 format makes the round trip lossless), so
+/// the output document is invariant over where points came from.
+pub fn run_sweep_with(cfg: &SweepConfig, opts: &mut SweepOptions) -> SweepRun {
+    let (mut specs, mut truncated) = enumerate_specs(cfg);
+    if let Some((i, n)) = opts.shard {
+        assert!(n > 0, "shard count must be >= 1");
+        assert!(i < n, "shard index {i} out of range for {n} shards");
+        let mut idx = 0usize;
+        specs.retain(|_| {
+            let keep = idx % n == i;
+            idx += 1;
+            keep
+        });
+        if i != 0 {
+            truncated = 0;
+        }
+    }
+    let mut stats = SweepStats { total_specs: specs.len(), ..SweepStats::default() };
+    let mut slots: Vec<Option<SweepPoint>> = vec![None; specs.len()];
+    if let Some(old) = &opts.resume {
+        let mut by_id: HashMap<PointId, &SweepPoint> =
+            old.iter().map(|p| (point_id(p), p)).collect();
+        for (i, spec) in specs.iter().enumerate() {
+            if let Some(p) = by_id.remove(&spec_id(cfg, spec)) {
+                slots[i] = Some(p.clone());
+                stats.resumed += 1;
+            }
+        }
+    }
+    // Cache keys are computed once and kept for the insert pass; only
+    // specs the resume pass left unfilled are looked up.
+    let mut keys: Vec<Option<String>> = vec![None; specs.len()];
+    if let Some(cache) = &mut opts.cache {
+        let canons: Vec<String> = cfg.workloads.iter().map(workload_canonical).collect();
+        for (i, spec) in specs.iter().enumerate() {
+            if slots[i].is_some() {
+                continue;
+            }
+            let key = spec_fingerprint(cfg, spec, &canons);
+            // A stored point that fails to parse back is a miss, not an
+            // error: the entry is simply re-priced and overwritten.
+            if let Some(p) = cache.get(&key).and_then(|j| point_from_json(j).ok()) {
+                slots[i] = Some(p);
+                cache.hits += 1;
+                stats.cache_hits += 1;
+            } else {
+                cache.misses += 1;
+                stats.cache_misses += 1;
+                keys[i] = Some(key);
+            }
+        }
+    }
+    let pending: Vec<usize> =
+        (0..specs.len()).filter(|&i| slots[i].is_none()).collect();
+    stats.priced = pending.len();
+    let pending_specs: Vec<PointSpec> = pending.iter().map(|&i| specs[i]).collect();
+    let fresh = eval_specs(cfg, &pending_specs);
+    for (&i, point) in pending.iter().zip(fresh) {
+        if let Some(cache) = opts.cache.as_mut() {
+            if let Some(key) = keys[i].take() {
+                cache.insert(key, point_to_json(&point));
+            }
+        }
+        slots[i] = Some(point);
+    }
+    let mut points: Vec<SweepPoint> =
+        slots.into_iter().map(|s| s.expect("every slot filled")).collect();
     rank(&mut points);
     let mut mem_pruned = 0usize;
     if cfg.mem == MemPolicy::Prune {
@@ -761,7 +1063,17 @@ pub fn run_sweep(cfg: &SweepConfig) -> SweepReport {
         });
         mem_pruned = before - points.len();
     }
-    SweepReport { points, truncated_strategies: truncated, mem_pruned }
+    SweepRun {
+        report: SweepReport { points, truncated_strategies: truncated, mem_pruned },
+        stats,
+    }
+}
+
+/// Run the whole cross-product and rank the results. Points are
+/// evaluated on [`resolve_threads`] worker threads; the output is
+/// identical for every thread count.
+pub fn run_sweep(cfg: &SweepConfig) -> SweepReport {
+    run_sweep_with(cfg, &mut SweepOptions::default()).report
 }
 
 /// Rank: feasible points by per-sample time ascending, then
@@ -939,93 +1251,12 @@ impl SweepReport {
     /// the full exposed-comm breakdown per point, under the
     /// [`SCHEMA_VERSION`] contract.
     pub fn to_json(&self) -> Json {
-        let points: Vec<Json> = self
-            .points
-            .iter()
-            .map(|p| {
-                let mut fields = vec![
-                    ("workload", Json::Str(p.workload.clone())),
-                    ("wafer", Json::Str(p.wafer.to_string())),
-                    ("n_npus", Json::Num(p.wafer.npus() as f64)),
-                    ("wafers", Json::Num(p.wafers as f64)),
-                    ("xwafer_bw", Json::Num(p.xwafer_bw)),
-                    ("xwafer_latency_s", Json::Num(p.xwafer_latency)),
-                    ("xwafer_topo", Json::Str(p.topo.name().to_string())),
-                    ("wafer_span", Json::Str(p.span.name())),
-                    (
-                        "total_npus",
-                        Json::Num((p.wafer.npus() * p.wafers) as f64),
-                    ),
-                    ("fabric", Json::Str(p.fabric.name().to_string())),
-                    ("strategy", Json::Str(p.strategy.to_string())),
-                    (
-                        "scaled_strategy",
-                        Json::Str(p.scaled_strategy().to_string()),
-                    ),
-                    ("mp", Json::Num(p.strategy.mp as f64)),
-                    ("dp", Json::Num(p.strategy.dp as f64)),
-                    ("pp", Json::Num(p.strategy.pp as f64)),
-                    (
-                        "global_dp",
-                        Json::Num(p.scaled_strategy().global_dp() as f64),
-                    ),
-                    (
-                        "global_pp",
-                        Json::Num(p.scaled_strategy().global_pp() as f64),
-                    ),
-                    (
-                        "global_mp",
-                        Json::Num(p.scaled_strategy().global_mp() as f64),
-                    ),
-                    (
-                        "span_mp_wafers",
-                        Json::Num(p.span.mp_factor(p.wafers) as f64),
-                    ),
-                    (
-                        "span_dp_wafers",
-                        Json::Num(p.span.dp_factor(p.wafers) as f64),
-                    ),
-                    (
-                        "span_pp_wafers",
-                        Json::Num(p.span.pp_factor(p.wafers) as f64),
-                    ),
-                    ("overlap", Json::Str(p.overlap.name().to_string())),
-                    ("microbatches", Json::Num(p.microbatches as f64)),
-                    ("schedule", Json::Str(p.schedule.name().to_string())),
-                    ("vstages", Json::Num(p.vstages as f64)),
-                    ("zero", Json::Str(p.zero.name().to_string())),
-                    ("recompute", Json::Str(p.recompute.name().to_string())),
-                    ("mem_gb", Json::Num(p.mem_gb)),
-                    ("mem_ok", Json::Bool(p.mem_ok)),
-                    ("ok", Json::Bool(p.outcome.is_ok())),
-                ];
-                match &p.outcome {
-                    Ok(m) => {
-                        fields.push(("total_s", Json::Num(m.breakdown.total())));
-                        fields.push(("per_sample_s", Json::Num(m.per_sample)));
-                        fields.push(("compute_s", Json::Num(m.breakdown.compute)));
-                        fields.push((
-                            "exposed_total_s",
-                            Json::Num(m.breakdown.total_exposed()),
-                        ));
-                        fields.push(("effective_npu_bw", Json::Num(m.effective_bw)));
-                        let comm: Vec<(&str, Json)> = CommType::all()
-                            .iter()
-                            .map(|&c| (c.name(), Json::Num(m.breakdown.get(c))))
-                            .collect();
-                        fields.push(("exposed_comm_s", Json::obj(comm)));
-                    }
-                    Err(e) => {
-                        fields.push(("error", Json::Str(e.msg.clone())));
-                        fields.push(("error_kind", Json::Str(e.kind.name().to_string())));
-                    }
-                }
-                Json::obj(fields)
-            })
-            .collect();
         Json::obj(vec![
             ("schema_version", Json::Num(SCHEMA_VERSION)),
-            ("points", Json::Arr(points)),
+            (
+                "points",
+                Json::Arr(self.points.iter().map(point_to_json).collect()),
+            ),
             (
                 "truncated_strategies",
                 Json::Num(self.truncated_strategies as f64),
@@ -1033,6 +1264,219 @@ impl SweepReport {
             ("mem_pruned", Json::Num(self.mem_pruned as f64)),
         ])
     }
+}
+
+/// One point in the `fred sweep --json` per-point format — the inverse
+/// of [`point_from_json`], and the value stored per cache entry.
+fn point_to_json(p: &SweepPoint) -> Json {
+    let mut fields = vec![
+        ("workload", Json::Str(p.workload.clone())),
+        ("wafer", Json::Str(p.wafer.to_string())),
+        ("n_npus", Json::Num(p.wafer.npus() as f64)),
+        ("wafers", Json::Num(p.wafers as f64)),
+        ("xwafer_bw", Json::Num(p.xwafer_bw)),
+        ("xwafer_latency_s", Json::Num(p.xwafer_latency)),
+        ("xwafer_topo", Json::Str(p.topo.name().to_string())),
+        ("wafer_span", Json::Str(p.span.name())),
+        (
+            "total_npus",
+            Json::Num((p.wafer.npus() * p.wafers) as f64),
+        ),
+        ("fabric", Json::Str(p.fabric.name().to_string())),
+        ("strategy", Json::Str(p.strategy.to_string())),
+        (
+            "scaled_strategy",
+            Json::Str(p.scaled_strategy().to_string()),
+        ),
+        ("mp", Json::Num(p.strategy.mp as f64)),
+        ("dp", Json::Num(p.strategy.dp as f64)),
+        ("pp", Json::Num(p.strategy.pp as f64)),
+        (
+            "global_dp",
+            Json::Num(p.scaled_strategy().global_dp() as f64),
+        ),
+        (
+            "global_pp",
+            Json::Num(p.scaled_strategy().global_pp() as f64),
+        ),
+        (
+            "global_mp",
+            Json::Num(p.scaled_strategy().global_mp() as f64),
+        ),
+        (
+            "span_mp_wafers",
+            Json::Num(p.span.mp_factor(p.wafers) as f64),
+        ),
+        (
+            "span_dp_wafers",
+            Json::Num(p.span.dp_factor(p.wafers) as f64),
+        ),
+        (
+            "span_pp_wafers",
+            Json::Num(p.span.pp_factor(p.wafers) as f64),
+        ),
+        ("overlap", Json::Str(p.overlap.name().to_string())),
+        ("microbatches", Json::Num(p.microbatches as f64)),
+        ("schedule", Json::Str(p.schedule.name().to_string())),
+        ("vstages", Json::Num(p.vstages as f64)),
+        ("zero", Json::Str(p.zero.name().to_string())),
+        ("recompute", Json::Str(p.recompute.name().to_string())),
+        ("mem_gb", Json::Num(p.mem_gb)),
+        ("mem_ok", Json::Bool(p.mem_ok)),
+        ("ok", Json::Bool(p.outcome.is_ok())),
+    ];
+    match &p.outcome {
+        Ok(m) => {
+            fields.push(("total_s", Json::Num(m.breakdown.total())));
+            fields.push(("per_sample_s", Json::Num(m.per_sample)));
+            fields.push(("compute_s", Json::Num(m.breakdown.compute)));
+            fields.push((
+                "exposed_total_s",
+                Json::Num(m.breakdown.total_exposed()),
+            ));
+            fields.push(("effective_npu_bw", Json::Num(m.effective_bw)));
+            let comm: Vec<(&str, Json)> = CommType::all()
+                .iter()
+                .map(|&c| (c.name(), Json::Num(m.breakdown.get(c))))
+                .collect();
+            fields.push(("exposed_comm_s", Json::obj(comm)));
+        }
+        Err(e) => {
+            fields.push(("error", Json::Str(e.msg.clone())));
+            fields.push(("error_kind", Json::Str(e.kind.name().to_string())));
+        }
+    }
+    Json::obj(fields)
+}
+
+/// Reconstruct a [`SweepPoint`] from its `--json` form. Only primary
+/// fields are read; everything [`point_to_json`] derives (totals, global
+/// factors, NPU counts) is recomputed on re-render — and since the JSON
+/// codec round-trips every `f64` bit-exactly, the same arithmetic on the
+/// same bits re-renders byte-identically. This is what lets `--resume`
+/// and `--cache` replay points without a second pricing pipeline.
+fn point_from_json(p: &Json) -> Result<SweepPoint, String> {
+    let str_field = |k: &str| -> Result<&str, String> {
+        p.get(k)
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("point missing string field `{k}`"))
+    };
+    let num_field = |k: &str| -> Result<f64, String> {
+        p.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("point missing numeric field `{k}`"))
+    };
+    let wafer_s = str_field("wafer")?;
+    let wafer = WaferDims::parse(wafer_s).ok_or_else(|| format!("bad wafer `{wafer_s}`"))?;
+    let topo_s = str_field("xwafer_topo")?;
+    let topo =
+        EgressTopo::parse(topo_s).ok_or_else(|| format!("bad xwafer_topo `{topo_s}`"))?;
+    let span_s = str_field("wafer_span")?;
+    let span =
+        WaferSpan::parse(span_s).ok_or_else(|| format!("bad wafer_span `{span_s}`"))?;
+    let fabric_s = str_field("fabric")?;
+    let fabric = FabricKind::all()
+        .iter()
+        .copied()
+        .find(|k| k.name() == fabric_s)
+        .ok_or_else(|| format!("bad fabric `{fabric_s}`"))?;
+    let overlap_s = str_field("overlap")?;
+    let overlap =
+        OverlapMode::parse(overlap_s).ok_or_else(|| format!("bad overlap `{overlap_s}`"))?;
+    let sched_s = str_field("schedule")?;
+    let schedule =
+        PipeSchedule::parse(sched_s).ok_or_else(|| format!("bad schedule `{sched_s}`"))?;
+    let zero_s = str_field("zero")?;
+    let zero = ZeroStage::parse(zero_s).ok_or_else(|| format!("bad zero `{zero_s}`"))?;
+    let rc_s = str_field("recompute")?;
+    let recompute =
+        Recompute::parse(rc_s).ok_or_else(|| format!("bad recompute `{rc_s}`"))?;
+    let strategy = Strategy::new(
+        num_field("mp")? as usize,
+        num_field("dp")? as usize,
+        num_field("pp")? as usize,
+    );
+    let ok = p
+        .get("ok")
+        .and_then(Json::as_bool)
+        .ok_or_else(|| "point missing `ok`".to_string())?;
+    let outcome = if ok {
+        let mut breakdown = Breakdown {
+            compute: num_field("compute_s")?,
+            ..Breakdown::default()
+        };
+        let comm = p
+            .get("exposed_comm_s")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| "point missing `exposed_comm_s`".to_string())?;
+        for &c in CommType::all().iter() {
+            let v = comm
+                .get(c.name())
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("point missing exposed_comm_s `{}`", c.name()))?;
+            breakdown.add(c, v);
+        }
+        Ok(SweepMetrics {
+            breakdown,
+            per_sample: num_field("per_sample_s")?,
+            effective_bw: num_field("effective_npu_bw")?,
+        })
+    } else {
+        let kind_s = str_field("error_kind")?;
+        let kind = InfeasibleKind::parse(kind_s)
+            .ok_or_else(|| format!("bad error_kind `{kind_s}`"))?;
+        Err(PointError { kind, msg: str_field("error")?.to_string() })
+    };
+    Ok(SweepPoint {
+        workload: str_field("workload")?.to_string(),
+        wafer,
+        wafers: num_field("wafers")? as usize,
+        xwafer_bw: num_field("xwafer_bw")?,
+        xwafer_latency: num_field("xwafer_latency_s")?,
+        topo,
+        span,
+        fabric,
+        strategy,
+        overlap,
+        microbatches: num_field("microbatches")? as usize,
+        schedule,
+        vstages: num_field("vstages")? as usize,
+        zero,
+        recompute,
+        mem_gb: num_field("mem_gb")?,
+        mem_ok: p
+            .get("mem_ok")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| "point missing `mem_ok`".to_string())?,
+        outcome,
+    })
+}
+
+/// Parse every point out of a `fred sweep --json` document — the
+/// `--resume` ingest path. The document must carry the current
+/// [`SCHEMA_VERSION`]; any unparsable point is an error (resuming from
+/// a half-understood document would silently re-price what it
+/// misread, defeating the byte-identity contract).
+pub fn points_from_doc(doc: &Json) -> Result<Vec<SweepPoint>, String> {
+    let version = doc
+        .get("schema_version")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| "resume document missing schema_version".to_string())?;
+    if version != SCHEMA_VERSION {
+        return Err(format!(
+            "resume document has schema_version {version}, this binary writes \
+             {SCHEMA_VERSION}; re-run the sweep instead of resuming"
+        ));
+    }
+    let points = doc
+        .get("points")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "resume document missing points array".to_string())?;
+    points
+        .iter()
+        .enumerate()
+        .map(|(i, p)| point_from_json(p).map_err(|e| format!("point {i}: {e}")))
+        .collect()
 }
 
 /// Total sort key of one JSON sweep point, mirroring [`rank`] exactly so
@@ -1864,5 +2308,175 @@ mod tests {
         cfg.threads = 5;
         let par = run_sweep(&cfg).to_json().render();
         assert_eq!(seq, par, "egress + schedule axes must not break thread determinism");
+    }
+
+    #[test]
+    fn point_json_roundtrip_is_byte_identical() {
+        // The whole resume/cache design rests on this: a point that goes
+        // out through `point_to_json`, through the codec's text form, and
+        // back through `point_from_json` must re-render to the same bytes.
+        let mut cfg = tiny_cfg();
+        cfg.wafer_counts = vec![1, 2];
+        cfg.overlaps = vec![OverlapMode::Off, OverlapMode::Full];
+        cfg.microbatches = vec![1, 4];
+        let report = run_sweep(&cfg);
+        assert!(!report.points.is_empty());
+        for p in &report.points {
+            let text = point_to_json(p).render();
+            let parsed = Json::parse(&text).expect("rendered point parses");
+            let back = point_from_json(&parsed).expect("point reconstructs");
+            assert_eq!(
+                point_to_json(&back).render(),
+                text,
+                "round trip must be lossless"
+            );
+        }
+    }
+
+    #[test]
+    fn infeasible_point_roundtrips_through_json() {
+        let p = SweepPoint {
+            workload: "t17b".into(),
+            wafer: WaferDims::PAPER,
+            wafers: 2,
+            xwafer_bw: 1e9,
+            xwafer_latency: 1e-6,
+            topo: EgressTopo::Ring,
+            span: WaferSpan::Dp,
+            fabric: FabricKind::FredA,
+            strategy: Strategy::new(1, 20, 1),
+            overlap: OverlapMode::Off,
+            microbatches: 4,
+            schedule: PipeSchedule::GPipe,
+            vstages: 1,
+            zero: ZeroStage::Z0,
+            recompute: Recompute::Off,
+            mem_gb: 99.5,
+            mem_ok: false,
+            outcome: Err(PointError::memory("99.5 GB footprint > 40 GB HBM".into())),
+        };
+        let text = point_to_json(&p).render();
+        let back = point_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(point_to_json(&back).render(), text);
+    }
+
+    #[test]
+    fn shards_reassemble_to_the_unsharded_run() {
+        let mut cfg = tiny_cfg();
+        cfg.wafer_counts = vec![1, 2];
+        cfg.overlaps = vec![OverlapMode::Off, OverlapMode::Full];
+        let full = run_sweep(&cfg).to_json();
+        for n in [2usize, 3] {
+            let docs: Vec<Json> = (0..n)
+                .map(|i| {
+                    let mut o =
+                        SweepOptions { shard: Some((i, n)), ..SweepOptions::default() };
+                    run_sweep_with(&cfg, &mut o).report.to_json()
+                })
+                .collect();
+            let merged = merge_sweep_docs(&docs).expect("merge shards");
+            assert_eq!(
+                merged.render(),
+                full.render(),
+                "{n} shards must merge to the full run byte for byte"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_truncation_counts_sum_to_the_unsharded_runs() {
+        // Auto-enumerated strategies with a cap: every shard re-enumerates
+        // the same spec list, so only shard 0 may report the truncation.
+        let mut cfg = tiny_cfg();
+        cfg.strategies = None;
+        cfg.max_strategies = 4;
+        let full = run_sweep(&cfg);
+        assert!(full.truncated_strategies > 0, "cap must actually truncate");
+        let mut total = 0usize;
+        for i in 0..2 {
+            let mut o = SweepOptions { shard: Some((i, 2)), ..SweepOptions::default() };
+            total += run_sweep_with(&cfg, &mut o).report.truncated_strategies;
+        }
+        assert_eq!(total, full.truncated_strategies);
+    }
+
+    #[test]
+    fn resume_over_a_complete_document_prices_nothing() {
+        let mut cfg = tiny_cfg();
+        cfg.wafer_counts = vec![1, 2];
+        cfg.microbatches = vec![2, 4];
+        let full = run_sweep(&cfg).to_json();
+        let points = points_from_doc(&full).expect("ingest own output");
+        let mut o = SweepOptions { resume: Some(points), ..SweepOptions::default() };
+        let resumed = run_sweep_with(&cfg, &mut o);
+        assert_eq!(resumed.stats.priced, 0, "complete document leaves nothing to price");
+        assert_eq!(resumed.stats.resumed, resumed.stats.total_specs);
+        assert_eq!(
+            resumed.report.to_json().render(),
+            full.render(),
+            "resumed run must reproduce the original bytes"
+        );
+    }
+
+    #[test]
+    fn resume_prices_only_the_missing_specs() {
+        let mut narrow = tiny_cfg();
+        narrow.wafer_counts = vec![1];
+        let mut wide = narrow.clone();
+        wide.wafer_counts = vec![1, 2];
+        let fresh_wide = run_sweep(&wide).to_json();
+        let points = points_from_doc(&run_sweep(&narrow).to_json()).expect("ingest");
+        let reused = points.len();
+        let mut o = SweepOptions { resume: Some(points), ..SweepOptions::default() };
+        let resumed = run_sweep_with(&wide, &mut o);
+        assert_eq!(resumed.stats.resumed, reused);
+        assert_eq!(resumed.stats.priced, resumed.stats.total_specs - reused);
+        assert!(resumed.stats.priced > 0, "widened axis must add work");
+        assert_eq!(
+            resumed.report.to_json().render(),
+            fresh_wide.render(),
+            "partial resume must still match the fresh run byte for byte"
+        );
+    }
+
+    #[test]
+    fn warm_cache_run_is_all_hits_and_byte_identical() {
+        let mut cfg = tiny_cfg();
+        cfg.wafer_counts = vec![1, 2];
+        let mut cold_opts =
+            SweepOptions { cache: Some(PointCache::new()), ..SweepOptions::default() };
+        let cold = run_sweep_with(&cfg, &mut cold_opts);
+        assert_eq!(cold.stats.cache_hits, 0);
+        assert_eq!(cold.stats.cache_misses, cold.stats.total_specs);
+        assert_eq!(cold.stats.priced, cold.stats.total_specs);
+        let cache = cold_opts.cache.take().expect("cache survives the run");
+        assert_eq!(cache.len(), cold.stats.total_specs);
+        let mut warm_opts = SweepOptions { cache: Some(cache), ..SweepOptions::default() };
+        let warm = run_sweep_with(&cfg, &mut warm_opts);
+        assert_eq!(warm.stats.cache_hits, warm.stats.total_specs);
+        assert_eq!(warm.stats.priced, 0, "warm cache must skip every eval_point");
+        assert_eq!(
+            warm.report.to_json().render(),
+            cold.report.to_json().render(),
+            "warm run must be byte-identical to the cold run"
+        );
+    }
+
+    #[test]
+    fn cache_distinguishes_bench_bytes_and_workload_numbers() {
+        // Same spec, different pricing inputs, must never share entries.
+        let cfg = tiny_cfg();
+        let mut bigger = cfg.clone();
+        bigger.bench_bytes = cfg.bench_bytes * 2.0;
+        let canon: Vec<String> = cfg.workloads.iter().map(workload_canonical).collect();
+        let (specs, _) = enumerate_specs(&cfg);
+        let a = spec_fingerprint(&cfg, &specs[0], &canon);
+        let b = spec_fingerprint(&bigger, &specs[0], &canon);
+        assert_ne!(a, b, "bench_bytes is a pricing input");
+        let mut scaled = cfg.workloads[0].clone();
+        scaled.compute_scale *= 2.0;
+        let canon2 = vec![workload_canonical(&scaled)];
+        let c = spec_fingerprint(&cfg, &specs[0], &canon2);
+        assert_ne!(a, c, "workload numbers are pricing inputs");
     }
 }

@@ -109,7 +109,11 @@ impl Plan {
 }
 
 /// What a wafer-scale fabric must provide to the coordinator.
-pub trait Fabric {
+///
+/// `Send + Sync` because fabrics are immutable link-graph models: the
+/// sweep executor builds one prototype per (kind, shape) and shares it
+/// read-only across worker threads, each cloning per point.
+pub trait Fabric: Send + Sync {
     /// Short name for reports ("2D-Mesh", "FRED-C", ...).
     fn name(&self) -> String;
 

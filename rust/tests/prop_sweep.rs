@@ -4,8 +4,12 @@
 //! fat trunks — never slower than FRED-A/B on the same point).
 
 use fred::coordinator::config::FabricKind;
-use fred::coordinator::sweep::{factorizations, run_sweep, SweepConfig, SweepReport, WaferDims};
+use fred::coordinator::sweep::{
+    factorizations, merge_sweep_docs, run_sweep, run_sweep_with, SweepConfig, SweepOptions,
+    SweepReport, WaferDims,
+};
 use fred::coordinator::workload;
+use fred::runtime::json::Json;
 use fred::util::prop::check;
 use std::collections::BTreeMap;
 
@@ -165,4 +169,64 @@ fn thread_count_never_changes_sweep_output() {
         assert_eq!(&renders[0], r, "sweep output must be thread-count invariant");
     }
     assert!(renders[0].contains("\"schema_version\":7"));
+}
+
+#[test]
+fn every_shard_partition_merges_back_byte_identically_at_any_thread_count() {
+    // The sharding contract: for any N, running all shards i/N and
+    // merging the documents reproduces the unsharded run byte for byte —
+    // and the property is independent of the executor's thread count.
+    let mut cfg = small_cfg(vec![FabricKind::FredA, FabricKind::FredD], 4);
+    cfg.wafer_counts = vec![1, 2];
+    for threads in [1usize, 3] {
+        cfg.threads = threads;
+        let full = run_sweep(&cfg).to_json().render();
+        for n in [2usize, 3] {
+            let docs: Vec<Json> = (0..n)
+                .map(|i| {
+                    let mut opts = SweepOptions {
+                        shard: Some((i, n)),
+                        ..SweepOptions::default()
+                    };
+                    run_sweep_with(&cfg, &mut opts).report.to_json()
+                })
+                .collect();
+            let merged = merge_sweep_docs(&docs).expect("shard documents merge");
+            assert_eq!(
+                merged.render(),
+                full,
+                "threads={threads}, {n} shards must reassemble the unsharded run"
+            );
+        }
+    }
+}
+
+#[test]
+fn resuming_a_complete_document_reprices_nothing_at_any_thread_count() {
+    // The resume contract, through the same JSON round-trip the CLI
+    // performs: feeding a run its own complete rendered document back
+    // prices zero points and reproduces the document byte for byte.
+    let mut cfg = small_cfg(vec![FabricKind::FredD], 4);
+    cfg.wafer_counts = vec![1, 2];
+    for threads in [1usize, 3] {
+        cfg.threads = threads;
+        let bytes = run_sweep(&cfg).to_json().render();
+        let doc = Json::parse(&bytes).expect("rendered sweep document parses");
+        let points = fred::coordinator::sweep::points_from_doc(&doc).expect("points parse back");
+        let mut opts = SweepOptions {
+            resume: Some(points),
+            ..SweepOptions::default()
+        };
+        let run = run_sweep_with(&cfg, &mut opts);
+        assert_eq!(run.stats.priced, 0, "threads={threads}: nothing left to price");
+        assert_eq!(
+            run.stats.resumed, run.stats.total_specs,
+            "threads={threads}: every spec reused from the document"
+        );
+        assert_eq!(
+            run.report.to_json().render(),
+            bytes,
+            "threads={threads}: resumed document must be byte-identical"
+        );
+    }
 }

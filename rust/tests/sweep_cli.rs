@@ -138,6 +138,18 @@ fn sweep_cli_rejects_bad_input_with_usage_errors() {
         vec!["sweep", "--zero", "0,deep"],
         vec!["sweep", "--recompute", "sometimes"],
         vec!["sweep", "--mem", "maybe"],
+        // Shard specs must be I/N with 0 <= I < N.
+        vec!["sweep", "--shard", "2/2"],
+        vec!["sweep", "--shard", "3/2"],
+        vec!["sweep", "--shard", "x/2"],
+        vec!["sweep", "--shard", "1/0"],
+        vec!["sweep", "--shard", "2"],
+        vec!["sweep", "--shard", "1/2/3"],
+        vec!["sweep", "--shard", "-1/2"],
+        vec!["sweep", "--shard", ""],
+        // --resume re-reads the --out document; without --out there is
+        // nothing to resume from.
+        vec!["sweep", "--resume"],
         // Interleaving depth 1 is just 1f1b; asking for interleaved with
         // it is an inconsistent sweep.
         vec!["sweep", "--schedule", "interleaved", "--vstages", "1"],
@@ -770,5 +782,200 @@ fn sweep_cli_scales_to_sixteen_wafer_fleets() {
                 "scaled strategy `{scaled}` must carry the wafer dimension"
             );
         }
+    }
+}
+
+/// Run `fred sweep`, asserting success, returning (stdout, stderr).
+fn run_sweep_capture(args: &[&str]) -> (Vec<u8>, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_fred"))
+        .arg("sweep")
+        .args(args)
+        .output()
+        .expect("spawn fred sweep");
+    let stderr = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(out.status.success(), "sweep failed: {stderr}");
+    (out.stdout, stderr)
+}
+
+#[test]
+fn warm_cache_cli_run_is_all_hits_and_byte_identical_to_cold() {
+    // The --cache byte-identity wall through the real binary: the cold
+    // run reports zero hits, the warm rerun answers everything from the
+    // cache file with zero misses, and stdout never changes — not even
+    // against a cacheless run of the same grid.
+    let cache = std::env::temp_dir().join(format!("fred_cli_cache_{}.json", std::process::id()));
+    let cache_str = cache.to_str().expect("utf8 temp path");
+    std::fs::remove_file(&cache).ok();
+    let base = [
+        "--models",
+        "resnet152",
+        "--wafers",
+        "1,2",
+        "--fabrics",
+        "fred-a,fred-d",
+        "--max-strategies",
+        "3",
+        "--json",
+    ];
+    let with_cache = {
+        let mut v = base.to_vec();
+        v.extend_from_slice(&["--cache", cache_str]);
+        v
+    };
+    let (cold, cold_err) = run_sweep_capture(&with_cache);
+    assert!(
+        cold_err.contains("sweep cache: 0 hits"),
+        "cold run must report zero hits, got: {cold_err}"
+    );
+    let (warm, warm_err) = run_sweep_capture(&with_cache);
+    assert!(
+        warm_err.contains(" 0 misses"),
+        "warm run must report zero misses, got: {warm_err}"
+    );
+    assert_eq!(cold, warm, "warm-cache stdout must match the cold run byte for byte");
+    let (plain, _) = run_sweep_capture(&base);
+    assert_eq!(plain, cold, "--cache must not change the output bytes");
+    std::fs::remove_file(&cache).ok();
+}
+
+#[test]
+fn resume_cli_over_a_complete_out_document_prices_nothing() {
+    // `--resume` against the run's own complete --out file: every point
+    // is reused, zero are priced, and both stdout and the rewritten file
+    // stay byte-identical.
+    let out_path = std::env::temp_dir().join(format!("fred_cli_resume_{}.json", std::process::id()));
+    let out_str = out_path.to_str().expect("utf8 temp path");
+    std::fs::remove_file(&out_path).ok();
+    let base = [
+        "--models",
+        "resnet152",
+        "--wafers",
+        "2",
+        "--fabrics",
+        "fred-d",
+        "--max-strategies",
+        "4",
+        "--overlap",
+        "off,full",
+        "--json",
+        "--out",
+        out_str,
+    ];
+    let (first, _) = run_sweep_capture(&base);
+    let first_file = std::fs::read(&out_path).expect("--out file written");
+    let resumed_args = {
+        let mut v = base.to_vec();
+        v.push("--resume");
+        v
+    };
+    let (second, second_err) = run_sweep_capture(&resumed_args);
+    assert!(
+        second_err.contains("priced 0"),
+        "resume over a complete document must price nothing, got: {second_err}"
+    );
+    assert_eq!(first, second, "resumed stdout must match the fresh run byte for byte");
+    let second_file = std::fs::read(&out_path).expect("--out file rewritten");
+    assert_eq!(first_file, second_file, "resumed --out file must be byte-identical");
+    std::fs::remove_file(&out_path).ok();
+}
+
+#[test]
+fn shard_cli_outputs_merge_to_the_unsharded_document() {
+    // --shard 0/2 and 1/2 partition the grid; `fred merge` over the two
+    // shard documents must reproduce the unsharded run byte for byte
+    // (truncation counts included — only shard 0 reports them).
+    let base = [
+        "--models",
+        "resnet152",
+        "--wafers",
+        "1,2",
+        "--fabrics",
+        "fred-d",
+        "--max-strategies",
+        "4",
+        "--json",
+    ];
+    let (full, _) = run_sweep_capture(&base);
+    let dir = std::env::temp_dir();
+    let mut shard_paths = Vec::new();
+    for i in 0..2 {
+        let spec = format!("{i}/2");
+        let args = {
+            let mut v = base.to_vec();
+            v.extend_from_slice(&["--shard", &spec]);
+            v
+        };
+        let (bytes, _) = run_sweep_capture(&args);
+        let path = dir.join(format!("fred_cli_shard_{}_{i}.json", std::process::id()));
+        std::fs::write(&path, bytes).expect("write shard file");
+        shard_paths.push(path);
+    }
+    let merged = Command::new(env!("CARGO_BIN_EXE_fred"))
+        .arg("merge")
+        .args(shard_paths.iter().map(|p| p.to_str().unwrap()))
+        .output()
+        .expect("spawn fred merge");
+    assert!(
+        merged.status.success(),
+        "merge failed: {}",
+        String::from_utf8_lossy(&merged.stderr)
+    );
+    assert_eq!(
+        merged.stdout, full,
+        "merged shard documents must match the unsharded run byte for byte"
+    );
+    for p in shard_paths {
+        std::fs::remove_file(&p).ok();
+    }
+}
+
+#[test]
+fn sweep_cli_rejects_corrupt_cache_and_stale_resume_documents() {
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+
+    // A cache file that exists but does not parse must fail loudly, not
+    // silently start cold.
+    let bad_cache = dir.join(format!("fred_cli_badcache_{pid}.json"));
+    std::fs::write(&bad_cache, "{not json").expect("write corrupt cache");
+    let out = Command::new(env!("CARGO_BIN_EXE_fred"))
+        .args(["sweep", "--models", "resnet152", "--strategies", "1,20,1"])
+        .args(["--cache", bad_cache.to_str().unwrap(), "--json"])
+        .output()
+        .expect("spawn fred sweep");
+    assert_eq!(out.status.code(), Some(2), "corrupt --cache must exit 2");
+
+    // A resume document from an older schema must be rejected, not
+    // reinterpreted under today's field semantics.
+    let stale = dir.join(format!("fred_cli_stale_{pid}.json"));
+    std::fs::write(
+        &stale,
+        "{\"points\":[],\"schema_version\":4,\"truncated_strategies\":0}\n",
+    )
+    .expect("write stale doc");
+    let out = Command::new(env!("CARGO_BIN_EXE_fred"))
+        .args(["sweep", "--models", "resnet152", "--strategies", "1,20,1"])
+        .args(["--resume", "--out", stale.to_str().unwrap(), "--json"])
+        .output()
+        .expect("spawn fred sweep");
+    assert_eq!(out.status.code(), Some(2), "stale-schema --resume must exit 2");
+
+    // A missing resume file is NOT an error: first run of a sharded
+    // fleet starts fresh (with a stderr notice) and writes the file.
+    let absent = dir.join(format!("fred_cli_absent_{pid}.json"));
+    std::fs::remove_file(&absent).ok();
+    let out = Command::new(env!("CARGO_BIN_EXE_fred"))
+        .args(["sweep", "--models", "resnet152", "--strategies", "1,20,1"])
+        .args(["--resume", "--out", absent.to_str().unwrap(), "--json"])
+        .output()
+        .expect("spawn fred sweep");
+    assert!(out.status.success(), "--resume with a missing file must start fresh");
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("not found, starting fresh"),
+        "missing resume file must be announced on stderr"
+    );
+    assert!(absent.exists(), "the fresh run must still write --out");
+    for p in [bad_cache, stale, absent] {
+        std::fs::remove_file(&p).ok();
     }
 }
