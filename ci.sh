@@ -31,7 +31,7 @@ target/release/fred sweep --wafers 4 --models resnet152 --max-strategies 6 \
     --json --out /tmp/sweep.json > /tmp/sweep.stdout.json
 cmp /tmp/sweep.json /tmp/sweep.stdout.json
 test -s /tmp/sweep.json
-grep -q '"schema_version":7' /tmp/sweep.json
+grep -q '"schema_version":8' /tmp/sweep.json
 grep -q '"wafer_span":"dp"' /tmp/sweep.json
 grep -q '"wafer_span":"2x2"' /tmp/sweep.json
 rm -f /tmp/sweep.json /tmp/sweep.stdout.json
@@ -43,7 +43,7 @@ target/release/fred sweep --wafers 4 --models resnet152 --max-strategies 4 \
     --xwafer-topo tree --span pp \
     --json --out /tmp/sweep_pp.json > /tmp/sweep_pp.stdout.json
 cmp /tmp/sweep_pp.json /tmp/sweep_pp.stdout.json
-grep -q '"schema_version":7' /tmp/sweep_pp.json
+grep -q '"schema_version":8' /tmp/sweep_pp.json
 grep -q '"xwafer_topo":"tree"' /tmp/sweep_pp.json
 grep -q '"wafer_span":"pp"' /tmp/sweep_pp.json
 rm -f /tmp/sweep_pp.json /tmp/sweep_pp.stdout.json
@@ -55,7 +55,7 @@ target/release/fred sweep --wafers 4 --xwafer-topo tree --span mp \
     --models resnet152 --max-strategies 4 \
     --json --out /tmp/sweep_mp.json > /tmp/sweep_mp.stdout.json
 cmp /tmp/sweep_mp.json /tmp/sweep_mp.stdout.json
-grep -q '"schema_version":7' /tmp/sweep_mp.json
+grep -q '"schema_version":8' /tmp/sweep_mp.json
 grep -q '"wafer_span":"mp"' /tmp/sweep_mp.json
 grep -q '"global_mp"' /tmp/sweep_mp.json
 rm -f /tmp/sweep_mp.json /tmp/sweep_mp.stdout.json
@@ -67,7 +67,7 @@ target/release/fred sweep --wafers 2 --models t17b --max-strategies 4 \
     --overlap full --microbatches 8 \
     --json --out /tmp/sweep_ov.json > /tmp/sweep_ov.stdout.json
 cmp /tmp/sweep_ov.json /tmp/sweep_ov.stdout.json
-grep -q '"schema_version":7' /tmp/sweep_ov.json
+grep -q '"schema_version":8' /tmp/sweep_ov.json
 grep -q '"overlap":"full"' /tmp/sweep_ov.json
 grep -q '"microbatches":8' /tmp/sweep_ov.json
 grep -q '"exposed_total_s"' /tmp/sweep_ov.json
@@ -81,7 +81,7 @@ target/release/fred sweep --wafers 2 --models t17b --max-strategies 4 \
     --span pp --schedule 1f1b,zb \
     --json --out /tmp/sweep_sched.json > /tmp/sweep_sched.stdout.json
 cmp /tmp/sweep_sched.json /tmp/sweep_sched.stdout.json
-grep -q '"schema_version":7' /tmp/sweep_sched.json
+grep -q '"schema_version":8' /tmp/sweep_sched.json
 grep -q '"schedule":"1f1b"' /tmp/sweep_sched.json
 grep -q '"schedule":"zb"' /tmp/sweep_sched.json
 grep -q '"vstages"' /tmp/sweep_sched.json
@@ -95,7 +95,7 @@ target/release/fred sweep --models t17b --max-strategies 4 \
     --mem prune --zero 1 \
     --json --out /tmp/sweep_mem.json > /tmp/sweep_mem.stdout.json
 cmp /tmp/sweep_mem.json /tmp/sweep_mem.stdout.json
-grep -q '"schema_version":7' /tmp/sweep_mem.json
+grep -q '"schema_version":8' /tmp/sweep_mem.json
 grep -q '"zero":"1"' /tmp/sweep_mem.json
 grep -q '"mem_gb"' /tmp/sweep_mem.json
 grep -q '"mem_ok"' /tmp/sweep_mem.json
@@ -211,6 +211,82 @@ target/release/fred sweep "${THRU_ARGS[@]}" --shard 1/2 > /tmp/shard_1.json
 target/release/fred merge /tmp/shard_0.json /tmp/shard_1.json > /tmp/shard_merged.json
 cmp /tmp/shard_all.json /tmp/shard_merged.json
 rm -f /tmp/shard_all.json /tmp/shard_0.json /tmp/shard_1.json /tmp/shard_merged.json
+
+echo "== search smoke (seeded run, schema v8 envelope + search metadata) =="
+# The optimizer end to end through the real binary: a seeded budgeted
+# run, --out byte-identical to --json stdout, the sweep envelope plus
+# the additive `search` key, and exploration counters on stderr only.
+SEARCH_SPACE=(--models resnet152 --strategies "1,20,1;4,5,1;2,5,2" \
+    --fabrics fred-a,fred-d --schedule gpipe,1f1b --zero 0,1,2)
+target/release/fred search "${SEARCH_SPACE[@]}" --algo anneal --seed 7 \
+    --budget 12 --json --out /tmp/search.json > /tmp/search.stdout.json
+cmp /tmp/search.json /tmp/search.stdout.json
+grep -q '"schema_version":8' /tmp/search.json
+grep -q '"search":{' /tmp/search.json
+grep -q '"algo":"anneal"' /tmp/search.json
+grep -q '"seed":7' /tmp/search.json
+grep -q '"best_trajectory"' /tmp/search.json
+# Determinism per seed: the same seed reproduces the document byte for
+# byte at a different thread count.
+target/release/fred search "${SEARCH_SPACE[@]}" --algo anneal --seed 7 \
+    --budget 12 --threads 3 --json > /tmp/search_t3.json
+cmp /tmp/search.json /tmp/search_t3.json
+rm -f /tmp/search.json /tmp/search.stdout.json /tmp/search_t3.json
+
+echo "== search oracle gate (--budget full merges to the sweep, byte for byte) =="
+# The correctness wall of the shared evaluation facade: pricing the
+# whole space through the search pipeline and normalizing both documents
+# through `fred merge` (which drops the additive `search` key) must
+# reproduce the exhaustive sweep exactly.
+target/release/fred sweep "${SEARCH_SPACE[@]}" --json > /tmp/oracle_sweep.json
+target/release/fred search "${SEARCH_SPACE[@]}" --budget full --top 0 --json \
+    > /tmp/oracle_search.json
+target/release/fred merge /tmp/oracle_sweep.json > /tmp/oracle_sweep_norm.json
+target/release/fred merge /tmp/oracle_search.json > /tmp/oracle_search_norm.json
+cmp /tmp/oracle_sweep_norm.json /tmp/oracle_search_norm.json
+# A second oracle space exercising the evolve algorithm and the memory
+# axes: full-budget output is algorithm-independent by construction.
+target/release/fred sweep "${SEARCH_SPACE[@]}" --mem rank --json \
+    > /tmp/oracle2_sweep.json
+target/release/fred search "${SEARCH_SPACE[@]}" --mem rank --algo evolve \
+    --budget full --top 0 --json > /tmp/oracle2_search.json
+target/release/fred merge /tmp/oracle2_sweep.json > /tmp/oracle2_sweep_norm.json
+target/release/fred merge /tmp/oracle2_search.json > /tmp/oracle2_search_norm.json
+cmp /tmp/oracle2_sweep_norm.json /tmp/oracle2_search_norm.json
+# A budgeted walk must find the sweep's rank-1 per-sample time while
+# pricing strictly less than the space (the grid has deliberate pricing
+# plateaus — ZeRO never changes the price — so the argmin is a region).
+# Deterministic per seed; a handful of seeds are allowed, each capped at
+# half the space.
+best_sweep=$(grep -o '"per_sample_s":[0-9e.+-]*' /tmp/oracle_sweep_norm.json | head -1)
+found=0
+for seed in 1 2 3 4 5; do
+    target/release/fred search "${SEARCH_SPACE[@]}" --seed "$seed" --budget 18 \
+        --json > /tmp/search_budget.json
+    best_search=$(grep -o '"per_sample_s":[0-9e.+-]*' /tmp/search_budget.json | head -1)
+    if [ "$best_search" = "$best_sweep" ]; then
+        found=1
+        break
+    fi
+done
+if [ "$found" != "1" ]; then
+    echo "budgeted search (seeds 1-5, 18 of 36 points) never found the sweep argmin" >&2
+    exit 1
+fi
+rm -f /tmp/oracle_sweep.json /tmp/oracle_search.json /tmp/oracle_sweep_norm.json \
+    /tmp/oracle_search_norm.json /tmp/oracle2_sweep.json /tmp/oracle2_search.json \
+    /tmp/oracle2_sweep_norm.json /tmp/oracle2_search_norm.json /tmp/search_budget.json
+
+echo "== search error paths (exit 2, not silence) =="
+for bad in "--algo genetic" "--budget 0" "--budget many" "--seed -1" \
+    "--seed x" "--top x" "--placements x" "--threads 0"; do
+    # shellcheck disable=SC2086
+    if target/release/fred search --models resnet152 --strategies 1,20,1 $bad \
+        --json > /dev/null 2>&1; then
+        echo "search $bad must exit 2" >&2
+        exit 1
+    fi
+done
 
 echo "== throughput-flag error paths (exit 2, not silence) =="
 # Bad shard specs and --resume without --out must fail loudly.

@@ -35,13 +35,18 @@
 //!    of an already-priced sweep should only price the delta: every
 //!    previously priced point replays from the content-addressed cache,
 //!    and the replayed document is byte-identical to a fresh run.
+//! 9. is brute force even necessary (`fred search`) — a seeded
+//!    annealing walk over the same spec list, pricing each candidate
+//!    through the same evaluator, should land on the exhaustive sweep's
+//!    argmin after pricing a fraction (here <= 20%) of the space.
 //!
 //! Run: `cargo run --release --example strategy_sweep`
 
 use fred::coordinator::config::FabricKind;
-use fred::coordinator::memory::MemPolicy;
+use fred::coordinator::memory::{MemPolicy, Recompute, ZeroStage};
 use fred::coordinator::parallelism::{Strategy, WaferSpan};
 use fred::coordinator::pointcache::PointCache;
+use fred::coordinator::search::{run_search, SearchBudget, SearchConfig};
 use fred::coordinator::stagegraph::PipeSchedule;
 use fred::coordinator::sweep::{
     run_sweep, run_sweep_with, InfeasibleKind, SweepConfig, SweepOptions, WaferDims,
@@ -430,6 +435,80 @@ fn main() {
         "the cache-assisted document must be byte-identical to a fresh run"
     );
     println!("cache-assisted document == fresh run, byte for byte");
+
+    // ------------------------------------------------------------------
+    // 9. search vs sweep: the argmin without pricing the space.
+    //
+    // The search walks the *same* spec list the sweep enumerates and
+    // prices every candidate through the same evaluator, so when it
+    // lands on the sweep's argmin the two points are byte-identical —
+    // the only question is how much of the space it had to pay for.
+    // The grid below has deliberate plateaus (ZeRO never changes the
+    // price, every schedule ties at pp=1), so the optimum is a region,
+    // not a needle.
+    // ------------------------------------------------------------------
+    println!("\n== search vs sweep: ResNet-152, 216-point grid, 20% budget ==\n");
+    let space_cfg = SweepConfig {
+        workloads: vec![workload::resnet152()],
+        wafers: vec![WaferDims::PAPER],
+        fabrics: vec![FabricKind::FredA, FabricKind::FredD],
+        strategies: Some(vec![
+            Strategy::new(1, 20, 1),
+            Strategy::new(2, 10, 1),
+            Strategy::new(4, 5, 1),
+            Strategy::new(5, 4, 1),
+            Strategy::new(2, 5, 2),
+            Strategy::new(1, 10, 2),
+        ]),
+        schedules: vec![PipeSchedule::GPipe, PipeSchedule::OneF1B, PipeSchedule::Zb],
+        zeros: vec![ZeroStage::Z0, ZeroStage::Z1, ZeroStage::Z2],
+        recomputes: vec![Recompute::Off, Recompute::Full],
+        threads: 1,
+        ..SweepConfig::default()
+    };
+    let exhaustive = run_sweep(&space_cfg);
+    let argmin = exhaustive.points[0]
+        .outcome
+        .as_ref()
+        .expect("the exhaustive argmin must be feasible")
+        .per_sample;
+    let space = exhaustive.points.len();
+    let budget = space / 5; // <= 20% of the grid
+    let mut found = None;
+    for seed in 1..=8u64 {
+        let scfg = SearchConfig {
+            seed,
+            budget: SearchBudget::Points(budget),
+            ..SearchConfig::default()
+        };
+        let result = run_search(&space_cfg, &scfg);
+        let best = result
+            .best()
+            .and_then(|p| p.outcome.as_ref().ok())
+            .map(|m| m.per_sample);
+        println!(
+            "seed {seed}: best {} after pricing {:>3} of {space} specs ({} pruned by bounds)",
+            best.map(fmt_time).unwrap_or_else(|| "-".into()),
+            result.priced,
+            result.pruned
+        );
+        assert!(
+            result.priced <= budget,
+            "the budget caps priced points at {budget}, got {}",
+            result.priced
+        );
+        if best == Some(argmin) {
+            found = Some((seed, result.priced));
+            break;
+        }
+    }
+    let (seed, priced) = found.expect("no seed found the exhaustive argmin");
+    println!(
+        "seed {seed} found the exhaustive argmin ({}) pricing {priced} of {space} specs \
+         ({:.0}% of the space)",
+        fmt_time(argmin),
+        100.0 * priced as f64 / space as f64
+    );
 
     println!(
         "\nmachine-readable: `fred sweep --models gpt3 --wafers 1,2,4,8,16 \

@@ -19,6 +19,7 @@
 use fred::coordinator::config::FabricKind;
 use fred::coordinator::memory::{MemPolicy, Recompute, ZeroStage};
 use fred::coordinator::parallelism::WaferSpan;
+use fred::coordinator::search::{run_search, SearchAlgo, SearchBudget, SearchConfig};
 use fred::coordinator::stagegraph::PipeSchedule;
 use fred::coordinator::sweep::{factorizations, run_sweep, SweepConfig, WaferDims};
 use fred::coordinator::timeline::OverlapMode;
@@ -320,6 +321,76 @@ fn main() {
             ("points_per_s", Json::Num(n as f64 / wall)),
         ]));
     }
+
+    // ---------------------------------------------- search efficiency
+    // The optimizer's value proposition in one number: how many points
+    // it prices before landing on its best (vs the space the exhaustive
+    // sweep must pay for). Both algorithms walk the same spec list and
+    // price through the same evaluator, so points/s is comparable with
+    // the sweep rows; `priced_to_best` is the efficiency headline.
+    println!("\n=== §Perf: optimizer-driven search vs exhaustive sweep ===");
+    let mut space_cfg = cfg(
+        vec![workload::resnet152(), workload::transformer_17b()],
+        vec![WaferDims::PAPER],
+        vec![FabricKind::FredA, FabricKind::FredD],
+        8,
+    );
+    space_cfg.schedules = vec![PipeSchedule::GPipe, PipeSchedule::OneF1B];
+    space_cfg.zeros = ZeroStage::all().to_vec();
+
+    let t0 = Instant::now();
+    let exhaustive = run_sweep(&space_cfg);
+    let dt_sweep = t0.elapsed().as_secs_f64();
+    let space = exhaustive.points.len();
+    let argmin = exhaustive.points[0].outcome.as_ref().ok().map(|m| m.per_sample);
+
+    let mut st =
+        Table::new(&["explorer", "space", "priced", "to best", "wall", "points/s", "argmin?"]);
+    st.row(&[
+        "exhaustive sweep".into(),
+        space.to_string(),
+        space.to_string(),
+        "-".into(),
+        format!("{dt_sweep:.2} s"),
+        format!("{:.1}", space as f64 / dt_sweep),
+        "yes".into(),
+    ]);
+    for (label, algo) in [("anneal", SearchAlgo::Anneal), ("evolve", SearchAlgo::Evolve)] {
+        let scfg = SearchConfig {
+            algo,
+            seed: 1,
+            budget: SearchBudget::Points(space / 4),
+            ..SearchConfig::default()
+        };
+        let t0 = Instant::now();
+        let result = run_search(&space_cfg, &scfg);
+        let dt = t0.elapsed().as_secs_f64();
+        let to_best = result.trajectory.last().map(|s| s.priced).unwrap_or(0);
+        let best = result.best().and_then(|p| p.outcome.as_ref().ok()).map(|m| m.per_sample);
+        let hit = best.is_some() && best == argmin;
+        st.row(&[
+            format!("search | {label} | 25% budget"),
+            space.to_string(),
+            result.priced.to_string(),
+            to_best.to_string(),
+            format!("{dt:.2} s"),
+            format!("{:.1}", result.priced as f64 / dt),
+            if hit { "yes" } else { "no" }.into(),
+        ]);
+        let feasible = result.report.points.iter().filter(|p| p.outcome.is_ok()).count();
+        json_cases.push(Json::obj(vec![
+            ("name", Json::Str(format!("search | {label} | 25% budget"))),
+            ("points", Json::Num(result.priced as f64)),
+            ("feasible", Json::Num(feasible as f64)),
+            ("wall_s", Json::Num(dt)),
+            ("points_per_s", Json::Num(result.priced as f64 / dt)),
+            ("space", Json::Num(space as f64)),
+            ("priced_to_best", Json::Num(to_best as f64)),
+            ("found_argmin", Json::Bool(hit)),
+        ]));
+        assert!(result.priced <= space / 4, "{label}: budget overrun");
+    }
+    st.print();
 
     // Machine-readable throughput record for regression tracking: one
     // entry per case, points/s being the headline number. Written to the

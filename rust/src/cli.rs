@@ -3,7 +3,8 @@
 use crate::coordinator::{
     config::FabricKind, memory::MemPolicy, memory::Recompute, memory::ZeroStage,
     metrics::CommType, parallelism::Strategy, parallelism::WaferSpan, placement,
-    placement::Placement, pointcache::PointCache, sim::Simulator,
+    placement::Placement, pointcache::PointCache, search, search::SearchAlgo,
+    search::SearchBudget, search::SearchConfig, sim::Simulator,
     stagegraph::PipeSchedule, sweep, sweep::SweepConfig, sweep::WaferDims,
     timeline::OverlapMode, workload::Workload,
 };
@@ -67,8 +68,11 @@ COMMANDS:
                iteration time. Emits a ranked table plus machine-readable
                JSON (only JSON with --json; --out FILE writes the same
                JSON document to FILE). Points are evaluated on --threads
-               workers (default: one per core; FRED_SWEEP_THREADS
-               overrides) with output identical at any thread count.
+               workers (default: one per core) with output identical at
+               any thread count. The FRED_SWEEP_THREADS env var is
+               deprecated in favor of --threads: it still takes
+               precedence this release (with a one-time stderr warning)
+               and will be removed in the next.
                Defaults: t17b on one 5x4 paper wafer, all five fabrics,
                auto strategies (subsumes the paper's Fig. 2 sweep).
 
@@ -112,7 +116,7 @@ COMMANDS:
                `global_mp`/`global_dp`/`global_pp`, `span_*_wafers`) and
                the schedule axes (`overlap`, `microbatches`, `schedule`,
                `vstages`, `exposed_total_s`) and the memory axes (`zero`,
-               `recompute`, `mem_gb`, `mem_ok`) at `schema_version: 7`.
+               `recompute`, `mem_gb`, `mem_ok`) at `schema_version: 8`.
 
                ## Overlap
                An iteration is priced by the phase-timeline engine: every
@@ -269,13 +273,83 @@ COMMANDS:
                         --overlap off,full --microbatches 2,8
                         --schedule gpipe,1f1b,zb --zero 0,1
                         --recompute off,full --mem rank --json
+  search       [every `sweep` grid flag] [--algo anneal|evolve]
+               [--seed N] [--budget full|N] [--top N] [--placements N]
+               [--threads N] [--json] [--out FILE]
+               Optimizer-driven exploration of the same axis product the
+               sweep enumerates: when the full cross-product is too big
+               to price exhaustively, a seeded local search finds the
+               sweep's best point after pricing a fraction of the space.
+
+               ## Search
+               The search space is exactly `fred sweep`'s spec list for
+               the given grid flags (same validation, same error
+               messages), and every candidate is priced by the same
+               point evaluator, so a point's JSON is byte-identical
+               between the two subcommands. Neighbor moves mutate one
+               axis at a time — refactor a prime factor between MP/DP/PP
+               (preserving the worker product), swap the wafer span,
+               flip the schedule / egress topology / ZeRO stage /
+               recompute / overlap / microbatch count, or jump fleet
+               size, wafer shape, fabric, workload, or an egress
+               operating point — and only propose values the grid
+               actually enumerates. Before a candidate is fully priced,
+               two lower bounds may discard it: the per-NPU memory
+               footprint (when --mem is rank or prune) and an analytic
+               compute floor (serial bottleneck-stage compute, provably
+               <= the timeline price), counted in the `pruned` field.
+                 --algo anneal   simulated annealing (default): one
+                                 chain, Metropolis acceptance on
+                                 relative regression, geometric cooling.
+                 --algo evolve   evolutionary: a small population,
+                                 truncation selection, mutation-only
+                                 children priced in deterministic
+                                 batches.
+                 --seed N        PRNG seed (default 1). The same seed
+                                 prices the same points in the same
+                                 order at any --threads value — output
+                                 is byte-identical.
+                 --budget N      stop after pricing N points (default
+                                 64; bound-pruned candidates do not
+                                 count). Growing the budget never loses
+                                 the best already found (the walk is a
+                                 prefix of the longer walk's).
+                 --budget full   price every spec: the exhaustive sweep
+                                 through the search pipeline. `fred
+                                 merge` normalizes that document to the
+                                 sweep's own, byte for byte — ci.sh
+                                 gates on it.
+                 --top N         keep the N best points in the document
+                                 (default 0 = keep everything priced).
+                 --placements N  after the walk, re-score the winner's
+                                 placement against N seeded random
+                                 placements by fabric congestion
+                                 (default 8; 0 disables). Reported in
+                                 the `search.placement` JSON object;
+                                 advisory, never re-ranks points.
+               Output is the sweep's JSON envelope (`schema_version: 8`)
+               plus a `search` metadata object: `space`, `visited`,
+               `priced`, `pruned`, `kept`, the `best_trajectory`
+               (per-sample seconds after each improving point), and
+               `placement`. --threads behaves exactly as in `sweep`
+               (FRED_SWEEP_THREADS is deprecated but still wins this
+               release); exploration counters go to stderr so --json
+               stdout stays a clean document.
+               Example: fred search --models gpt3 --wafers 1,2,4
+                        --fabrics fred-d,fred-a --span dp,pp,2x2
+                        --schedule gpipe,1f1b,zb --zero 0,1,2
+                        --mem prune --algo anneal --seed 7
+                        --budget 128 --top 10 --json
   merge        FILE [FILE..] [--out FILE]
                Merge several `fred sweep --json` documents (a sweep
                sharded across machines: shard on disjoint fleet sizes,
                workloads, or bandwidths) into one re-ranked document on
                stdout (and --out FILE). All inputs must carry the current
-               `schema_version` (7) — mismatches are rejected, never
-               silently mixed. Merging the shards of a split grid
+               `schema_version` (8) — mismatches are rejected, never
+               silently mixed. `fred search --json` documents are
+               accepted too (the `search` metadata key is dropped on
+               merge), so `search --budget full` output merges to the
+               exhaustive sweep's document byte for byte. Merging the shards of a split grid
                reproduces the unsharded sweep byte for byte when the
                shards use explicit --strategies (or an uncapped
                --max-strategies): auto-enumeration counts its truncation
@@ -308,6 +382,7 @@ pub fn run(args: &[String]) -> i32 {
     match cmd.as_str() {
         "sim" => cmd_sim(&opts),
         "sweep" => cmd_sweep(&opts),
+        "search" => cmd_search(&opts),
         "merge" => cmd_merge(&args[1..]),
         "perfgate" => cmd_perfgate(&args[1..]),
         "microbench" => cmd_microbench(&opts),
@@ -393,7 +468,14 @@ fn comma_list(s: &str) -> Vec<&str> {
     s.split(',').map(str::trim).filter(|t| !t.is_empty()).collect()
 }
 
-fn cmd_sweep(opts: &Opts) -> i32 {
+/// Parse the shared axis-grid and pricing options into a
+/// [`SweepConfig`] — the cross-product definition `fred sweep`
+/// enumerates exhaustively and `fred search` explores with an
+/// optimizer. Both subcommands accept the same grid flags with the same
+/// validation (and the same exit-2 messages), so every search space is
+/// a sweepable space and vice versa. On a reported error the exit code
+/// is returned as `Err`.
+fn parse_sweep_config(opts: &Opts) -> Result<SweepConfig, i32> {
     // Workloads: --models a,b | all (--workload kept as an alias).
     let models = opts.get("models").or_else(|| opts.get("workload")).unwrap_or("t17b");
     let workloads: Vec<Workload> = if models == "all" {
@@ -405,7 +487,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
                 Some(w) => ws.push(w),
                 None => {
                     eprintln!("unknown workload `{name}`");
-                    return 2;
+                    return Err(2);
                 }
             }
         }
@@ -422,7 +504,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
                 Some(wd) => wafers.push(wd),
                 None => {
                     eprintln!("bad wafer `{spec}` (expected RxC with R,C >= 2, e.g. 8x8)");
-                    return 2;
+                    return Err(2);
                 }
             }
         } else {
@@ -437,7 +519,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
                         "bad wafer count `{spec}` (expected a fleet size >= 1, or a \
                          shape RxC, e.g. 8x8)"
                     );
-                    return 2;
+                    return Err(2);
                 }
             }
         }
@@ -456,7 +538,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
                 Ok(v) if v > 0.0 && v.is_finite() => xwafer_bws.push(v * GBPS),
                 _ => {
                     eprintln!("bad --xwafer-bw `{t}` (GB/s, > 0)");
-                    return 2;
+                    return Err(2);
                 }
             }
         }
@@ -472,7 +554,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
                 Ok(v) if v >= 0.0 && v.is_finite() => xwafer_latencies.push(v * 1e-9),
                 _ => {
                     eprintln!("bad --xwafer-latency `{t}` (ns, >= 0)");
-                    return 2;
+                    return Err(2);
                 }
             }
         }
@@ -488,7 +570,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
                 Some(topo) => xwafer_topos.push(topo),
                 None => {
                     eprintln!("bad --xwafer-topo `{t}` (ring, tree, dragonfly)");
-                    return 2;
+                    return Err(2);
                 }
             }
         }
@@ -506,7 +588,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
                 Some(span) => wafer_spans.push(span),
                 None => {
                     eprintln!("bad --span `{t}` (dp, pp, mp, or PPxDP e.g. 2x4)");
-                    return 2;
+                    return Err(2);
                 }
             }
         }
@@ -523,7 +605,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
                     span.name(),
                     pp_wafers * dp_wafers
                 );
-                return 2;
+                return Err(2);
             }
         }
     }
@@ -537,7 +619,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
                 "--wafers {wc} has no covering --span: add dp, pp, mp, or a \
                  mixed NxM span with N*M = {wc}"
             );
-            return 2;
+            return Err(2);
         }
     }
     // Overlap schedules: --overlap off,dp,full (the timeline-engine
@@ -549,7 +631,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
                 Some(m) => overlaps.push(m),
                 None => {
                     eprintln!("bad --overlap `{t}` (off, dp, full)");
-                    return 2;
+                    return Err(2);
                 }
             }
         }
@@ -567,7 +649,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
                 }
                 _ => {
                     eprintln!("bad --microbatches `{t}` (expected an integer >= 1)");
-                    return 2;
+                    return Err(2);
                 }
             }
         }
@@ -581,7 +663,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
                 Some(s) => schedules.push(s),
                 None => {
                     eprintln!("bad --schedule `{t}` (gpipe, 1f1b, interleaved, zb)");
-                    return 2;
+                    return Err(2);
                 }
             }
         }
@@ -593,7 +675,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
             Ok(n) if n >= 1 && t.bytes().all(|c| c.is_ascii_digit()) => n,
             _ => {
                 eprintln!("bad --vstages `{t}` (expected an integer >= 1)");
-                return 2;
+                return Err(2);
             }
         },
     };
@@ -606,7 +688,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
                 "--schedule interleaved needs --vstages >= 2 (got {vstages}): one virtual \
                  stage per physical stage is just 1f1b"
             );
-            return 2;
+            return Err(2);
         }
         for w in &workloads {
             if w.layers.len() % vstages != 0 {
@@ -616,7 +698,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
                     w.name,
                     w.layers.len()
                 );
-                return 2;
+                return Err(2);
             }
         }
     }
@@ -628,7 +710,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
                 Some(z) => zeros.push(z),
                 None => {
                     eprintln!("bad --zero `{t}` (0, 1, 2)");
-                    return 2;
+                    return Err(2);
                 }
             }
         }
@@ -644,7 +726,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
                 Some(r) => recomputes.push(r),
                 None => {
                     eprintln!("bad --recompute `{t}` (off, full)");
-                    return 2;
+                    return Err(2);
                 }
             }
         }
@@ -660,7 +742,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
             Some(m) => m,
             None => {
                 eprintln!("bad --mem `{t}` (off, rank, prune)");
-                return 2;
+                return Err(2);
             }
         },
     };
@@ -675,7 +757,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
                 Some(k) => ks.push(k),
                 None => {
                     eprintln!("unknown fabric `{name}`");
-                    return 2;
+                    return Err(2);
                 }
             }
         }
@@ -691,7 +773,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
                     Some(s) => ss.push(s),
                     None => {
                         eprintln!("bad strategy `{spec}`");
-                        return 2;
+                        return Err(2);
                     }
                 }
             }
@@ -702,7 +784,6 @@ fn cmd_sweep(opts: &Opts) -> i32 {
         .get("max-strategies")
         .and_then(|s| s.parse().ok())
         .unwrap_or(12);
-    let top: usize = opts.get("top").and_then(|s| s.parse().ok()).unwrap_or(20);
     let bench_bytes: f64 = opts.get("bytes").and_then(|s| s.parse().ok()).unwrap_or(100e6);
     let threads: usize = match opts.get("threads") {
         None => 0,
@@ -710,10 +791,40 @@ fn cmd_sweep(opts: &Opts) -> i32 {
             Ok(n) if n >= 1 => n,
             _ => {
                 eprintln!("bad --threads `{t}` (expected an integer >= 1)");
-                return 2;
+                return Err(2);
             }
         },
     };
+
+    Ok(SweepConfig {
+        workloads,
+        wafers,
+        wafer_counts,
+        xwafer_bws,
+        xwafer_latencies,
+        xwafer_topos,
+        wafer_spans,
+        fabrics,
+        strategies,
+        overlaps,
+        microbatches,
+        schedules,
+        vstages,
+        zeros,
+        recomputes,
+        mem,
+        max_strategies,
+        bench_bytes,
+        threads,
+    })
+}
+
+fn cmd_sweep(opts: &Opts) -> i32 {
+    let cfg = match parse_sweep_config(opts) {
+        Ok(cfg) => cfg,
+        Err(code) => return code,
+    };
+    let top: usize = opts.get("top").and_then(|s| s.parse().ok()).unwrap_or(20);
     let json_only = opts.has("json");
     let out_path = opts.get("out");
     // --shard I/N: deterministic 1/N slice of the spec list for
@@ -777,27 +888,6 @@ fn cmd_sweep(opts: &Opts) -> i32 {
         },
     };
 
-    let cfg = SweepConfig {
-        workloads,
-        wafers,
-        wafer_counts,
-        xwafer_bws,
-        xwafer_latencies,
-        xwafer_topos,
-        wafer_spans,
-        fabrics: fabrics.clone(),
-        strategies,
-        overlaps,
-        microbatches,
-        schedules,
-        vstages,
-        zeros,
-        recomputes,
-        mem,
-        max_strategies,
-        bench_bytes,
-        threads,
-    };
     let mut swopts = sweep::SweepOptions { shard, resume, cache };
     let resuming = swopts.resume.is_some();
     let run = sweep::run_sweep_with(&cfg, &mut swopts);
@@ -842,8 +932,8 @@ fn cmd_sweep(opts: &Opts) -> i32 {
     );
     if report.truncated_strategies > 0 {
         println!(
-            "(note: {} auto-enumerated strategies dropped by --max-strategies {max_strategies})",
-            report.truncated_strategies
+            "(note: {} auto-enumerated strategies dropped by --max-strategies {})",
+            report.truncated_strategies, cfg.max_strategies
         );
     }
     if report.mem_pruned > 0 {
@@ -858,7 +948,7 @@ fn cmd_sweep(opts: &Opts) -> i32 {
         (FabricKind::FredD, FabricKind::FredA),
         (FabricKind::FredD, FabricKind::Baseline),
     ] {
-        if fabrics.contains(&fast) && fabrics.contains(&slow) {
+        if cfg.fabrics.contains(&fast) && cfg.fabrics.contains(&slow) {
             let (wins, cmps) = report.count_orderings(fast, slow);
             if cmps > 0 {
                 println!(
@@ -869,6 +959,126 @@ fn cmd_sweep(opts: &Opts) -> i32 {
             }
         }
     }
+    println!("\nJSON:");
+    println!("{json_text}");
+    0
+}
+
+/// `fred search` — optimizer-driven exploration of the sweep's axis
+/// product. Accepts every `fred sweep` grid flag (same validation, same
+/// exit-2 messages) plus the search controls, and prints the same JSON
+/// envelope — with an extra `search` metadata key that `fred merge`
+/// ignores — so search output composes with sweep shards.
+fn cmd_search(opts: &Opts) -> i32 {
+    let cfg = match parse_sweep_config(opts) {
+        Ok(cfg) => cfg,
+        Err(code) => return code,
+    };
+    let algo = match opts.get("algo") {
+        None => SearchAlgo::Anneal,
+        Some(t) => match SearchAlgo::parse(t) {
+            Some(a) => a,
+            None => {
+                eprintln!("bad --algo `{t}` (anneal, evolve)");
+                return 2;
+            }
+        },
+    };
+    let seed: u64 = match opts.get("seed") {
+        None => 1,
+        Some(t) => match t.parse::<u64>() {
+            Ok(n) => n,
+            Err(_) => {
+                eprintln!("bad --seed `{t}` (expected an unsigned integer)");
+                return 2;
+            }
+        },
+    };
+    let budget = match opts.get("budget") {
+        None => SearchBudget::Points(64),
+        Some(t) => match SearchBudget::parse(t) {
+            Some(b) => b,
+            None => {
+                eprintln!("bad --budget `{t}` (`full`, or a point count >= 1)");
+                return 2;
+            }
+        },
+    };
+    let top: usize = match opts.get("top") {
+        None => 0,
+        Some(t) => match t.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => {
+                eprintln!("bad --top `{t}` (expected an integer; 0 keeps every point)");
+                return 2;
+            }
+        },
+    };
+    let placements: usize = match opts.get("placements") {
+        None => 8,
+        Some(t) => match t.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => {
+                eprintln!(
+                    "bad --placements `{t}` (expected an integer; 0 disables refinement)"
+                );
+                return 2;
+            }
+        },
+    };
+    let scfg = SearchConfig { algo, seed, budget, top, placements };
+    let result = search::run_search(&cfg, &scfg);
+    let json_text = result.to_json(&scfg).render();
+
+    // Exploration counters go to stderr so stdout stays a clean JSON
+    // document in --json mode (mirrors the sweep's resume/cache lines).
+    eprintln!(
+        "search: {} of {} specs priced ({} proposals visited, {} pruned by bounds)",
+        result.priced, result.space, result.visited, result.pruned
+    );
+
+    if let Some(path) = opts.get("out") {
+        if let Err(e) = std::fs::write(path, format!("{json_text}\n")) {
+            eprintln!("cannot write --out `{path}`: {e}");
+            return 2;
+        }
+    }
+    if opts.has("json") {
+        println!("{json_text}");
+        return 0;
+    }
+
+    let n_points = result.report.points.len();
+    let feasible = result.report.points.iter().filter(|p| p.outcome.is_ok()).count();
+    println!(
+        "strategy/topology search ({}, seed {}): kept {n_points} points \
+         ({feasible} feasible) after pricing {} of {} specs",
+        scfg.algo.name(),
+        scfg.seed,
+        result.priced,
+        result.space
+    );
+    for step in &result.trajectory {
+        println!(
+            "  best {} after {} points priced",
+            fmt_time(step.per_sample),
+            step.priced
+        );
+    }
+    if let Some(p) = &result.placement {
+        let verdict = if p.best_is_default {
+            "paper default holds"
+        } else {
+            "a random placement beats the default"
+        };
+        println!(
+            "placement refinement: default {} vs best-of-{} random {} ({verdict})",
+            fmt_time(p.default_score),
+            p.evaluated,
+            fmt_time(p.best_score)
+        );
+    }
+    print!("{}", result.report.render_table(if top == 0 { 20 } else { top }));
     println!("\nJSON:");
     println!("{json_text}");
     0

@@ -1,0 +1,1104 @@
+//! Public point-evaluation facade — one pricing pipeline, many clients.
+//!
+//! Point pricing used to be trapped inside the sweep engine as a
+//! private `PointSpec`/`eval_point` pair, so any consumer other than
+//! the exhaustive enumerator — the optimizer-driven
+//! [`search`](super::search), notebooks, future services — had no
+//! stable entry point. This module is that entry point:
+//!
+//! * [`PointSpec`] — one point of the axis product, public, with a
+//!   validating [`PointSpecBuilder`] that rejects span/fleet mismatches
+//!   and degenerate operating points at construction time instead of
+//!   deep inside an enumeration loop's assert;
+//! * [`Evaluator`] — wraps the shared fabric-prototype cache, the
+//!   per-workload canonical strings behind content-addressed cache
+//!   fingerprints, and [`Evaluator::evaluate`], the *only* routine that
+//!   prices a spec into a [`SweepPoint`]. `run_sweep_with` and
+//!   `fred search` are both thin clients of this one facade, so a
+//!   search result is byte-identical to the sweep's pricing of the
+//!   same spec by construction;
+//! * [`Evaluator::bounds`] — the cheap side-channel: per-NPU memory
+//!   footprint and the analytic compute floor
+//!   ([`Simulator::analytic_floor`]), both closed-form (no fluid
+//!   solves), used by the search to prune dominated neighbors before
+//!   paying for full pricing;
+//! * [`rank`] — the total order every ranked document uses
+//!   (`fred sweep`, `fred search`, `fred merge` all sort by it);
+//! * [`point_to_json`] / [`point_from_json`] — the per-point codec
+//!   shared by the sweep document, the search document, the resume
+//!   path, and the point cache.
+//!
+//! Everything here is behavior-preserving extraction from the sweep
+//! engine: the golden `cmp` gates in ci.sh (threads 1 and 4) pin that
+//! routing the sweep through this facade changed no output byte.
+
+use super::config::{self, FabricKind};
+use super::memory::{MemPolicy, Recompute, ZeroStage};
+use super::metrics::{Breakdown, CommType};
+use super::parallelism::{ScaledStrategy, Strategy, WaferSpan};
+use super::pointcache;
+use super::sim::Simulator;
+use super::stagegraph::PipeSchedule;
+use super::sweep::{SweepConfig, WaferDims, SCHEMA_VERSION};
+use super::timeline::OverlapMode;
+use super::workload::{ExecMode, Workload};
+use crate::fabric::egress::EgressTopo;
+use crate::fabric::mesh::Mesh2D;
+use crate::fabric::scaleout::ScaleOut;
+use crate::fabric::topology::Fabric;
+use crate::runtime::json::Json;
+use std::borrow::Cow;
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+/// Metrics of one feasible sweep point.
+#[derive(Debug, Clone)]
+pub struct SweepMetrics {
+    /// Full iteration breakdown.
+    pub breakdown: Breakdown,
+    /// Iteration time divided by the fleet's global minibatch — the
+    /// ranking key (throughput view).
+    pub per_sample: f64,
+    /// Best per-phase effective NPU bandwidth (Fig. 9 metric), bytes/s.
+    pub effective_bw: f64,
+}
+
+/// Why a sweep point is infeasible — the typed reason the table's
+/// status column, the JSON `error_kind` field, and the [three-tier
+/// rank](rank) all key on. Ordered so memory-infeasible points rank
+/// ahead of fluid deadlocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum InfeasibleKind {
+    /// The per-NPU footprint exceeds HBM under `--mem rank`/`prune`.
+    Memory,
+    /// The fluid list scheduler could not price the point (a deadlocked
+    /// degenerate shape).
+    Fluid,
+}
+
+impl InfeasibleKind {
+    /// Name used in the table status column and the JSON `error_kind`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            InfeasibleKind::Memory => "memory",
+            InfeasibleKind::Fluid => "fluid",
+        }
+    }
+
+    /// Parse a JSON `error_kind` value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "memory" => Some(InfeasibleKind::Memory),
+            "fluid" => Some(InfeasibleKind::Fluid),
+            _ => None,
+        }
+    }
+}
+
+/// A typed infeasibility: the kind drives ranking and pruning, the
+/// message carries the human-readable detail. Previously every
+/// infeasible point collapsed to one opaque `infeasible: {e}` string,
+/// so consumers could not tell an over-budget placement (actionable)
+/// from a deadlocked degenerate shape (not).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PointError {
+    /// What made the point infeasible.
+    pub kind: InfeasibleKind,
+    /// Human-readable detail (footprint size / fluid error text).
+    pub msg: String,
+}
+
+impl PointError {
+    /// A memory-infeasibility with the given detail.
+    pub fn memory(msg: String) -> Self {
+        Self { kind: InfeasibleKind::Memory, msg }
+    }
+
+    /// A fluid-model infeasibility with the given detail.
+    pub fn fluid(msg: String) -> Self {
+        Self { kind: InfeasibleKind::Fluid, msg }
+    }
+}
+
+impl std::fmt::Display for PointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.kind.name(), self.msg)
+    }
+}
+
+/// One evaluated point of the cross-product.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// Workload name.
+    pub workload: String,
+    /// Wafer shape.
+    pub wafer: WaferDims,
+    /// Fleet size (wafer count; 1 = single wafer).
+    pub wafers: usize,
+    /// Cross-wafer egress bandwidth (bytes/s) this point was priced at.
+    pub xwafer_bw: f64,
+    /// Cross-wafer hop latency (seconds) this point was priced at.
+    pub xwafer_latency: f64,
+    /// Cross-wafer egress topology this point was priced over.
+    pub topo: EgressTopo,
+    /// Which axis the wafer dimension multiplies.
+    pub span: WaferSpan,
+    /// Fabric kind.
+    pub fabric: FabricKind,
+    /// Per-wafer strategy (the wafer dimension is `wafers`).
+    pub strategy: Strategy,
+    /// Overlap schedule this point was priced under.
+    pub overlap: OverlapMode,
+    /// Microbatch count this point ran with (the workload default unless
+    /// the `--microbatches` axis overrode it).
+    pub microbatches: usize,
+    /// Pipeline schedule this point was priced under.
+    pub schedule: PipeSchedule,
+    /// Interleaving depth requested for this point (meaningful for
+    /// `interleaved`; carried on every point so the JSON key is total).
+    pub vstages: usize,
+    /// ZeRO sharding stage this point's footprint assumed.
+    pub zero: ZeroStage,
+    /// Activation recompute setting this point was priced under.
+    pub recompute: Recompute,
+    /// Modeled per-NPU footprint in GB — computed for every point, even
+    /// under `--mem off` (the annotation is free; only *acting* on it is
+    /// policy-gated).
+    pub mem_gb: f64,
+    /// Whether the footprint fits the per-NPU HBM.
+    pub mem_ok: bool,
+    /// Metrics, or the typed infeasibility for points that could not be
+    /// priced (fluid deadlock) or were memory-gated (`--mem rank`/`prune`).
+    pub outcome: Result<SweepMetrics, PointError>,
+}
+
+impl SweepPoint {
+    /// The full wafer-dimensioned strategy of this point.
+    pub fn scaled_strategy(&self) -> ScaledStrategy {
+        ScaledStrategy::with_span(self.wafers, self.strategy, self.span)
+    }
+}
+
+/// One point of the axis product, by value (cheap `Copy` data only —
+/// spec lists are shared read-only across evaluator worker threads).
+/// Construct directly when the fields are known-consistent (the sweep's
+/// enumerator produces only covered spans and fitting strategies), or
+/// through [`PointSpec::builder`] to get the same consistency checks as
+/// hard errors instead of a deep assert.
+#[derive(Debug, Clone, Copy)]
+pub struct PointSpec {
+    /// Fabric kind.
+    pub kind: FabricKind,
+    /// Wafer shape.
+    pub wafer: WaferDims,
+    /// Fleet size (1 = single wafer).
+    pub wafers: usize,
+    /// Cross-wafer egress bandwidth, bytes/s.
+    pub xwafer_bw: f64,
+    /// Cross-wafer hop latency, seconds.
+    pub xwafer_latency: f64,
+    /// Cross-wafer egress topology.
+    pub topo: EgressTopo,
+    /// Which axis the wafer dimension multiplies. Must cover `wafers`.
+    pub span: WaferSpan,
+    /// Index into [`SweepConfig::workloads`].
+    pub workload_idx: usize,
+    /// Per-wafer strategy.
+    pub strategy: Strategy,
+    /// Overlap schedule.
+    pub overlap: OverlapMode,
+    /// `None` keeps the workload's Table V microbatch default.
+    pub microbatches: Option<usize>,
+    /// Pipeline schedule.
+    pub schedule: PipeSchedule,
+    /// Interleaving depth (for [`PipeSchedule::Interleaved`]).
+    pub vstages: usize,
+    /// ZeRO optimizer-state sharding stage.
+    pub zero: ZeroStage,
+    /// Activation recompute setting.
+    pub recompute: Recompute,
+}
+
+impl PointSpec {
+    /// Start a validating builder from the four identity axes every
+    /// point needs; everything else defaults to the sweep's defaults
+    /// (single wafer, ring egress at the CXL default operating point,
+    /// DP span, overlap off, GPipe, ZeRO-0, no recompute).
+    pub fn builder(
+        kind: FabricKind,
+        wafer: WaferDims,
+        workload_idx: usize,
+        strategy: Strategy,
+    ) -> PointSpecBuilder {
+        PointSpecBuilder {
+            spec: PointSpec {
+                kind,
+                wafer,
+                wafers: 1,
+                xwafer_bw: crate::fabric::scaleout::DEFAULT_EGRESS_BW,
+                xwafer_latency: crate::fabric::scaleout::DEFAULT_XWAFER_LATENCY,
+                topo: EgressTopo::Ring,
+                span: WaferSpan::Dp,
+                workload_idx,
+                strategy,
+                overlap: OverlapMode::Off,
+                microbatches: None,
+                schedule: PipeSchedule::GPipe,
+                vstages: 1,
+                zero: ZeroStage::Z0,
+                recompute: Recompute::Off,
+            },
+        }
+    }
+
+    /// The consistency conditions [`PointSpecBuilder::build`] enforces,
+    /// also checkable on a hand-assembled spec: the strategy fits the
+    /// wafer, the span covers the fleet, and the egress operating point
+    /// is physical. `workloads` is the list `workload_idx` indexes.
+    pub fn validate(&self, workloads: &[Workload]) -> Result<(), String> {
+        if self.workload_idx >= workloads.len() {
+            return Err(format!(
+                "workload_idx {} out of range for {} workloads",
+                self.workload_idx,
+                workloads.len()
+            ));
+        }
+        if self.strategy.workers() == 0 {
+            return Err(format!("degenerate strategy {}", self.strategy));
+        }
+        if self.strategy.workers() > self.wafer.npus() {
+            return Err(format!(
+                "strategy {} needs {} workers > {} NPUs on a {} wafer",
+                self.strategy,
+                self.strategy.workers(),
+                self.wafer.npus(),
+                self.wafer
+            ));
+        }
+        if self.wafers == 0 {
+            return Err("fleet must have at least one wafer".into());
+        }
+        if !self.span.covers(self.wafers) {
+            return Err(format!(
+                "span {} does not cover a {}-wafer fleet; use a pure span or a \
+                 mixed NxM span with N*M = {}",
+                self.span.name(),
+                self.wafers,
+                self.wafers
+            ));
+        }
+        if !(self.xwafer_bw.is_finite() && self.xwafer_bw > 0.0) {
+            return Err(format!("egress bandwidth must be finite and > 0, got {}", self.xwafer_bw));
+        }
+        if !(self.xwafer_latency.is_finite() && self.xwafer_latency >= 0.0) {
+            return Err(format!(
+                "egress latency must be finite and >= 0, got {}",
+                self.xwafer_latency
+            ));
+        }
+        if self.microbatches == Some(0) {
+            return Err("microbatch count must be >= 1".into());
+        }
+        if self.vstages == 0 {
+            return Err("vstages must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Validating constructor for [`PointSpec`]: the same consistency
+/// conditions the sweep CLI checks axis-by-axis, enforced at build time
+/// — a span/fleet mismatch or an over-wafer strategy is a hard error
+/// here instead of a loud assert deep inside an enumeration loop.
+#[derive(Debug, Clone)]
+pub struct PointSpecBuilder {
+    spec: PointSpec,
+}
+
+impl PointSpecBuilder {
+    /// Fleet size (wafer count).
+    pub fn wafers(mut self, wafers: usize) -> Self {
+        self.spec.wafers = wafers;
+        self
+    }
+
+    /// Cross-wafer egress operating point: topology, per-wafer
+    /// bandwidth (bytes/s), hop latency (seconds).
+    pub fn egress(mut self, topo: EgressTopo, bw: f64, latency: f64) -> Self {
+        self.spec.topo = topo;
+        self.spec.xwafer_bw = bw;
+        self.spec.xwafer_latency = latency;
+        self
+    }
+
+    /// Which axis the wafer dimension multiplies.
+    pub fn span(mut self, span: WaferSpan) -> Self {
+        self.spec.span = span;
+        self
+    }
+
+    /// Overlap schedule.
+    pub fn overlap(mut self, overlap: OverlapMode) -> Self {
+        self.spec.overlap = overlap;
+        self
+    }
+
+    /// Microbatch count override (`None` keeps the workload default).
+    pub fn microbatches(mut self, mb: Option<usize>) -> Self {
+        self.spec.microbatches = mb;
+        self
+    }
+
+    /// Pipeline schedule and interleaving depth.
+    pub fn schedule(mut self, schedule: PipeSchedule, vstages: usize) -> Self {
+        self.spec.schedule = schedule;
+        self.spec.vstages = vstages;
+        self
+    }
+
+    /// Memory knobs: ZeRO stage and activation recompute.
+    pub fn memory(mut self, zero: ZeroStage, recompute: Recompute) -> Self {
+        self.spec.zero = zero;
+        self.spec.recompute = recompute;
+        self
+    }
+
+    /// Validate and return the spec. `workloads` is the list the spec's
+    /// `workload_idx` indexes (normally [`SweepConfig::workloads`]).
+    pub fn build(self, workloads: &[Workload]) -> Result<PointSpec, String> {
+        self.spec.validate(workloads)?;
+        Ok(self.spec)
+    }
+}
+
+/// Identity of a point independent of how it was produced: every axis
+/// that distinguishes one spec from another, with f64 operating points
+/// compared bitwise (both sides come from the same finite config lists).
+/// This is how `--resume` matches a prior run's points back onto the
+/// freshly enumerated spec list, and how the search maps a mutated
+/// neighbor spec back into the enumerated space.
+pub(crate) type PointId = (
+    String,
+    WaferDims,
+    usize,
+    u64,
+    u64,
+    EgressTopo,
+    WaferSpan,
+    FabricKind,
+    Strategy,
+    OverlapMode,
+    usize,
+    PipeSchedule,
+    usize,
+    ZeroStage,
+    Recompute,
+);
+
+pub(crate) fn spec_id(cfg: &SweepConfig, spec: &PointSpec) -> PointId {
+    let workload = &cfg.workloads[spec.workload_idx];
+    (
+        workload.name.clone(),
+        spec.wafer,
+        spec.wafers,
+        spec.xwafer_bw.to_bits(),
+        spec.xwafer_latency.to_bits(),
+        spec.topo,
+        spec.span,
+        spec.kind,
+        spec.strategy,
+        spec.overlap,
+        spec.microbatches.unwrap_or(workload.microbatches),
+        spec.schedule,
+        spec.vstages,
+        spec.zero,
+        spec.recompute,
+    )
+}
+
+pub(crate) fn point_id(p: &SweepPoint) -> PointId {
+    (
+        p.workload.clone(),
+        p.wafer,
+        p.wafers,
+        p.xwafer_bw.to_bits(),
+        p.xwafer_latency.to_bits(),
+        p.topo,
+        p.span,
+        p.fabric,
+        p.strategy,
+        p.overlap,
+        p.microbatches,
+        p.schedule,
+        p.vstages,
+        p.zero,
+        p.recompute,
+    )
+}
+
+/// Canonical string for everything about a workload that feeds pricing.
+/// Part of the cache key: two workloads with the same name but different
+/// numbers must not share cache entries. `f64`s are keyed by bit
+/// pattern — bitwise equality is the only equality the cache needs.
+pub(crate) fn workload_canonical(w: &Workload) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let mode = match w.exec_mode {
+        ExecMode::WeightStationary => "stationary",
+        ExecMode::WeightStreaming => "streaming",
+    };
+    let _ = write!(
+        s,
+        "{}|{mode}|{}|{}|{:016x}|{}|{:016x}|{:016x}|{}|{}",
+        w.name,
+        w.default_strategy,
+        w.microbatches,
+        w.input_bytes.to_bits(),
+        w.dp_buckets,
+        w.compute_scale.to_bits(),
+        w.active_param_fraction.to_bits(),
+        w.overlap_dp,
+        w.stream_prefetch,
+    );
+    for l in &w.layers {
+        let _ = write!(
+            s,
+            "|{}:{:016x}:{:016x}:{:016x}:{}",
+            l.name,
+            l.params_bytes.to_bits(),
+            l.fwd_flops.to_bits(),
+            l.act_bytes.to_bits(),
+            l.mp_collectives,
+        );
+    }
+    s
+}
+
+/// Content-address of one point: a fingerprint over every input that
+/// determines its priced JSON. `workload_canons` holds the per-workload
+/// canonical strings (computed once per evaluator, not once per point).
+pub(crate) fn spec_fingerprint(
+    cfg: &SweepConfig,
+    spec: &PointSpec,
+    workload_canons: &[String],
+) -> String {
+    let mb = match spec.microbatches {
+        None => "default".to_string(),
+        Some(n) => n.to_string(),
+    };
+    let canonical = format!(
+        "v{}|{}|{}x{}|{}|{:016x}|{:016x}|{}|{}|{}|{}|{mb}|{}|{}|{}|{}|{:016x}|{}|{}",
+        SCHEMA_VERSION,
+        spec.kind.name(),
+        spec.wafer.n_l1,
+        spec.wafer.per_l1,
+        spec.wafers,
+        spec.xwafer_bw.to_bits(),
+        spec.xwafer_latency.to_bits(),
+        spec.topo.name(),
+        spec.span.name(),
+        spec.strategy,
+        spec.overlap.name(),
+        spec.schedule.name(),
+        spec.vstages,
+        spec.zero.name(),
+        spec.recompute.name(),
+        cfg.bench_bytes.to_bits(),
+        cfg.mem.name(),
+        workload_canons[spec.workload_idx],
+    );
+    pointcache::fingerprint(&canonical)
+}
+
+/// Cheap, closed-form lower bounds for one spec — everything a search
+/// can know about a point *without* paying for fluid pricing. Both
+/// bounds are sound: the priced point always satisfies
+/// `per_sample >= floor_per_sample`, and `mem_gb`/`mem_ok` are exactly
+/// the values [`Evaluator::evaluate`] would annotate.
+#[derive(Debug, Clone, Copy)]
+pub struct PointBounds {
+    /// Modeled per-NPU footprint in GB (same model as the priced point).
+    pub mem_gb: f64,
+    /// Whether the footprint fits HBM.
+    pub mem_ok: bool,
+    /// Analytic lower bound on the per-sample time
+    /// ([`Simulator::analytic_floor`] over the global minibatch).
+    pub floor_per_sample: f64,
+}
+
+/// Shared prototype cache: fabrics are immutable link-graph models
+/// ([`Fabric`] is `Send + Sync`), so the evaluator derives one per
+/// (kind, shape) and every client clones from the same map — no worker
+/// re-derives a link graph another one already built.
+type ProtoCache = HashMap<(FabricKind, WaferDims), (Box<dyn Fabric>, Option<Mesh2D>)>;
+
+/// The one pricing pipeline. Holds the sweep config (workloads, memory
+/// policy, microbenchmark payload, thread request), the per-workload
+/// canonical strings behind cache fingerprints, and the shared fabric
+/// prototype cache — everything [`Evaluator::evaluate`] needs to turn a
+/// [`PointSpec`] into a [`SweepPoint`] deterministically.
+pub struct Evaluator<'c> {
+    cfg: &'c SweepConfig,
+    canons: Vec<String>,
+    protos: RwLock<ProtoCache>,
+}
+
+impl<'c> Evaluator<'c> {
+    /// Build an evaluator over `cfg`'s workloads and pricing knobs.
+    pub fn new(cfg: &'c SweepConfig) -> Self {
+        Self {
+            cfg,
+            canons: cfg.workloads.iter().map(workload_canonical).collect(),
+            protos: RwLock::new(ProtoCache::new()),
+        }
+    }
+
+    /// The config this evaluator prices under.
+    pub fn config(&self) -> &SweepConfig {
+        self.cfg
+    }
+
+    /// Prebuild the fabric prototype for every (kind, shape) in `specs`
+    /// — called once before a parallel pass so workers only ever take
+    /// the read lock.
+    pub fn prime(&self, specs: &[PointSpec]) {
+        let mut protos = self.protos.write().expect("proto cache lock");
+        for spec in specs {
+            protos.entry((spec.kind, spec.wafer)).or_insert_with(|| {
+                (
+                    spec.kind.build_sized(spec.wafer.n_l1, spec.wafer.per_l1),
+                    spec.kind
+                        .is_mesh()
+                        .then(|| Mesh2D::with_dims(spec.wafer.n_l1, spec.wafer.per_l1)),
+                )
+            });
+        }
+    }
+
+    /// A clone of the (fabric, mesh) prototype for one (kind, shape),
+    /// building and caching it on first use.
+    fn proto_for(&self, kind: FabricKind, wafer: WaferDims) -> (Box<dyn Fabric>, Option<Mesh2D>) {
+        if let Some((f, m)) = self.protos.read().expect("proto cache lock").get(&(kind, wafer)) {
+            return (f.clone_box(), m.clone());
+        }
+        let built = (
+            kind.build_sized(wafer.n_l1, wafer.per_l1),
+            kind.is_mesh().then(|| Mesh2D::with_dims(wafer.n_l1, wafer.per_l1)),
+        );
+        let mut protos = self.protos.write().expect("proto cache lock");
+        let (f, m) = protos.entry((kind, wafer)).or_insert(built);
+        (f.clone_box(), m.clone())
+    }
+
+    /// The simulator for one spec — the single place a spec's axes are
+    /// applied, shared by [`Self::evaluate`] and [`Self::bounds`] so the
+    /// cheap path can never drift from the priced one.
+    fn simulator_for(&self, spec: &PointSpec) -> Simulator<'c> {
+        let (proto, mesh_proto) = self.proto_for(spec.kind, spec.wafer);
+        let workload = &self.cfg.workloads[spec.workload_idx];
+        // Borrow the shared workload prototype; clone only when this
+        // point overrides its microbatch count (the `--microbatches`
+        // axis).
+        let point_workload: Cow<'c, Workload> = match spec.microbatches {
+            None => Cow::Borrowed(workload),
+            Some(mb) => {
+                let mut w = workload.clone();
+                w.microbatches = mb;
+                Cow::Owned(w)
+            }
+        };
+        let scale =
+            ScaleOut::with_topo(spec.topo, spec.wafers, spec.xwafer_bw, spec.xwafer_latency);
+        Simulator::with_fabric_shared(
+            spec.kind,
+            proto,
+            mesh_proto,
+            point_workload,
+            spec.strategy,
+        )
+        .with_scaleout(scale)
+        .with_span(spec.span)
+        .with_overlap(spec.overlap)
+        .with_schedule(spec.schedule, spec.vstages)
+        .with_memory(spec.zero, spec.recompute)
+    }
+
+    /// Price one spec into a [`SweepPoint`]. Pure: the same spec under
+    /// the same config always produces the same point, bit for bit —
+    /// which is what makes every reuse path (cache, resume, search)
+    /// byte-identical to fresh pricing.
+    pub fn evaluate(&self, spec: &PointSpec) -> SweepPoint {
+        let sim = self.simulator_for(spec);
+        let microbatches = spec
+            .microbatches
+            .unwrap_or(self.cfg.workloads[spec.workload_idx].microbatches);
+        // The footprint is annotated on every point; the policy only
+        // decides whether an over-budget one is still *priced*.
+        let footprint = sim.footprint();
+        let mem_gb = footprint.gb();
+        let mem_ok = footprint.fits();
+        let outcome = if self.cfg.mem != MemPolicy::Off && !mem_ok {
+            Err(PointError::memory(format!(
+                "{mem_gb:.1} GB footprint > {:.0} GB HBM",
+                config::HBM_CAPACITY / 1e9
+            )))
+        } else {
+            match sim.try_iterate() {
+                Ok(breakdown) => {
+                    let per_sample = breakdown.total() / sim.global_minibatch().max(1) as f64;
+                    let effective_bw = sim
+                        .try_microbench(self.cfg.bench_bytes)
+                        .map(|phases| phases.iter().flatten().copied().fold(0.0, f64::max))
+                        .unwrap_or(0.0);
+                    Ok(SweepMetrics { breakdown, per_sample, effective_bw })
+                }
+                Err(e) => Err(PointError::fluid(e.to_string())),
+            }
+        };
+        SweepPoint {
+            workload: self.cfg.workloads[spec.workload_idx].name.clone(),
+            wafer: spec.wafer,
+            wafers: spec.wafers,
+            xwafer_bw: spec.xwafer_bw,
+            xwafer_latency: spec.xwafer_latency,
+            topo: spec.topo,
+            span: spec.span,
+            fabric: spec.kind,
+            strategy: spec.strategy,
+            overlap: spec.overlap,
+            microbatches,
+            schedule: spec.schedule,
+            vstages: spec.vstages,
+            zero: spec.zero,
+            recompute: spec.recompute,
+            mem_gb,
+            mem_ok,
+            outcome,
+        }
+    }
+
+    /// The cheap bounds for one spec — no fluid solves, no
+    /// microbenchmark. Used by the search to discard neighbors whose
+    /// floor already exceeds the incumbent before paying for
+    /// [`Self::evaluate`].
+    pub fn bounds(&self, spec: &PointSpec) -> PointBounds {
+        let sim = self.simulator_for(spec);
+        let footprint = sim.footprint();
+        PointBounds {
+            mem_gb: footprint.gb(),
+            mem_ok: footprint.fits(),
+            floor_per_sample: sim.analytic_floor() / sim.global_minibatch().max(1) as f64,
+        }
+    }
+
+    /// Content-addressed cache fingerprint of one spec (see
+    /// [`super::pointcache`]).
+    pub fn fingerprint(&self, spec: &PointSpec) -> String {
+        spec_fingerprint(self.cfg, spec, &self.canons)
+    }
+
+    /// Evaluate a spec list on [`resolve_threads`] worker threads.
+    ///
+    /// Workers *claim* the next unevaluated spec from a shared atomic
+    /// index and write the result into its pre-indexed slot — so a
+    /// worker that drew cheap points (single-wafer, mesh) keeps pulling
+    /// work while one stuck on an expensive fluid solve does not idle
+    /// the rest. Slot indexing preserves spec order exactly, so the
+    /// output is byte-identical at every thread count.
+    ///
+    /// [`resolve_threads`]: super::sweep::resolve_threads
+    pub fn evaluate_all(&self, specs: &[PointSpec]) -> Vec<SweepPoint> {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::OnceLock;
+        if specs.is_empty() {
+            return Vec::new();
+        }
+        self.prime(specs);
+        let threads = super::sweep::resolve_threads(self.cfg.threads).min(specs.len());
+        if threads <= 1 {
+            return specs.iter().map(|s| self.evaluate(s)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<OnceLock<SweepPoint>> = specs.iter().map(|_| OnceLock::new()).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= specs.len() {
+                        break;
+                    }
+                    // fetch_add hands each index to exactly one worker,
+                    // so this set can never collide.
+                    let _ = slots[i].set(self.evaluate(&specs[i]));
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().expect("every claimed slot was filled"))
+            .collect()
+    }
+}
+
+/// Rank: feasible points by per-sample time ascending, then
+/// memory-infeasible points, then fluid deadlocks (see
+/// [`InfeasibleKind`] for why memory outranks fluid), with a total
+/// deterministic tie-break. This is the one total order every ranked
+/// document uses — `fred sweep`, `fred search`, and `fred merge` all
+/// sort by it.
+pub fn rank(points: &mut [SweepPoint]) {
+    points.sort_by(|a, b| {
+        let key = |p: &SweepPoint| match &p.outcome {
+            Ok(m) => (0u8, m.per_sample),
+            Err(e) => match e.kind {
+                InfeasibleKind::Memory => (1u8, f64::INFINITY),
+                InfeasibleKind::Fluid => (2u8, f64::INFINITY),
+            },
+        };
+        let (fa, ta) = key(a);
+        let (fb, tb) = key(b);
+        fa.cmp(&fb)
+            .then(ta.total_cmp(&tb))
+            .then_with(|| a.workload.cmp(&b.workload))
+            .then_with(|| a.wafer.cmp(&b.wafer))
+            .then_with(|| a.wafers.cmp(&b.wafers))
+            .then_with(|| a.xwafer_bw.total_cmp(&b.xwafer_bw))
+            .then_with(|| a.xwafer_latency.total_cmp(&b.xwafer_latency))
+            .then_with(|| a.topo.cmp(&b.topo))
+            .then_with(|| a.span.cmp(&b.span))
+            .then_with(|| a.fabric.name().cmp(b.fabric.name()))
+            .then_with(|| a.strategy.to_string().cmp(&b.strategy.to_string()))
+            .then_with(|| a.overlap.cmp(&b.overlap))
+            .then_with(|| a.microbatches.cmp(&b.microbatches))
+            .then_with(|| a.schedule.cmp(&b.schedule))
+            .then_with(|| a.vstages.cmp(&b.vstages))
+            .then_with(|| a.zero.cmp(&b.zero))
+            .then_with(|| a.recompute.cmp(&b.recompute))
+    });
+}
+
+/// One point in the `fred sweep --json` per-point format — the inverse
+/// of [`point_from_json`], and the value stored per cache entry. The
+/// `fred search` document reuses this codec verbatim for its top-k.
+pub fn point_to_json(p: &SweepPoint) -> Json {
+    let mut fields = vec![
+        ("workload", Json::Str(p.workload.clone())),
+        ("wafer", Json::Str(p.wafer.to_string())),
+        ("n_npus", Json::Num(p.wafer.npus() as f64)),
+        ("wafers", Json::Num(p.wafers as f64)),
+        ("xwafer_bw", Json::Num(p.xwafer_bw)),
+        ("xwafer_latency_s", Json::Num(p.xwafer_latency)),
+        ("xwafer_topo", Json::Str(p.topo.name().to_string())),
+        ("wafer_span", Json::Str(p.span.name())),
+        (
+            "total_npus",
+            Json::Num((p.wafer.npus() * p.wafers) as f64),
+        ),
+        ("fabric", Json::Str(p.fabric.name().to_string())),
+        ("strategy", Json::Str(p.strategy.to_string())),
+        (
+            "scaled_strategy",
+            Json::Str(p.scaled_strategy().to_string()),
+        ),
+        ("mp", Json::Num(p.strategy.mp as f64)),
+        ("dp", Json::Num(p.strategy.dp as f64)),
+        ("pp", Json::Num(p.strategy.pp as f64)),
+        (
+            "global_dp",
+            Json::Num(p.scaled_strategy().global_dp() as f64),
+        ),
+        (
+            "global_pp",
+            Json::Num(p.scaled_strategy().global_pp() as f64),
+        ),
+        (
+            "global_mp",
+            Json::Num(p.scaled_strategy().global_mp() as f64),
+        ),
+        (
+            "span_mp_wafers",
+            Json::Num(p.span.mp_factor(p.wafers) as f64),
+        ),
+        (
+            "span_dp_wafers",
+            Json::Num(p.span.dp_factor(p.wafers) as f64),
+        ),
+        (
+            "span_pp_wafers",
+            Json::Num(p.span.pp_factor(p.wafers) as f64),
+        ),
+        ("overlap", Json::Str(p.overlap.name().to_string())),
+        ("microbatches", Json::Num(p.microbatches as f64)),
+        ("schedule", Json::Str(p.schedule.name().to_string())),
+        ("vstages", Json::Num(p.vstages as f64)),
+        ("zero", Json::Str(p.zero.name().to_string())),
+        ("recompute", Json::Str(p.recompute.name().to_string())),
+        ("mem_gb", Json::Num(p.mem_gb)),
+        ("mem_ok", Json::Bool(p.mem_ok)),
+        ("ok", Json::Bool(p.outcome.is_ok())),
+    ];
+    match &p.outcome {
+        Ok(m) => {
+            fields.push(("total_s", Json::Num(m.breakdown.total())));
+            fields.push(("per_sample_s", Json::Num(m.per_sample)));
+            fields.push(("compute_s", Json::Num(m.breakdown.compute)));
+            fields.push((
+                "exposed_total_s",
+                Json::Num(m.breakdown.total_exposed()),
+            ));
+            fields.push(("effective_npu_bw", Json::Num(m.effective_bw)));
+            let comm: Vec<(&str, Json)> = CommType::all()
+                .iter()
+                .map(|&c| (c.name(), Json::Num(m.breakdown.get(c))))
+                .collect();
+            fields.push(("exposed_comm_s", Json::obj(comm)));
+        }
+        Err(e) => {
+            fields.push(("error", Json::Str(e.msg.clone())));
+            fields.push(("error_kind", Json::Str(e.kind.name().to_string())));
+        }
+    }
+    Json::obj(fields)
+}
+
+/// Reconstruct a [`SweepPoint`] from its `--json` form. Only primary
+/// fields are read; everything [`point_to_json`] derives (totals, global
+/// factors, NPU counts) is recomputed on re-render — and since the JSON
+/// codec round-trips every `f64` bit-exactly, the same arithmetic on the
+/// same bits re-renders byte-identically. This is what lets `--resume`
+/// and `--cache` replay points without a second pricing pipeline.
+pub fn point_from_json(p: &Json) -> Result<SweepPoint, String> {
+    let str_field = |k: &str| -> Result<&str, String> {
+        p.get(k)
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("point missing string field `{k}`"))
+    };
+    let num_field = |k: &str| -> Result<f64, String> {
+        p.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("point missing numeric field `{k}`"))
+    };
+    let wafer_s = str_field("wafer")?;
+    let wafer = WaferDims::parse(wafer_s).ok_or_else(|| format!("bad wafer `{wafer_s}`"))?;
+    let topo_s = str_field("xwafer_topo")?;
+    let topo =
+        EgressTopo::parse(topo_s).ok_or_else(|| format!("bad xwafer_topo `{topo_s}`"))?;
+    let span_s = str_field("wafer_span")?;
+    let span =
+        WaferSpan::parse(span_s).ok_or_else(|| format!("bad wafer_span `{span_s}`"))?;
+    let fabric_s = str_field("fabric")?;
+    let fabric = FabricKind::all()
+        .iter()
+        .copied()
+        .find(|k| k.name() == fabric_s)
+        .ok_or_else(|| format!("bad fabric `{fabric_s}`"))?;
+    let overlap_s = str_field("overlap")?;
+    let overlap =
+        OverlapMode::parse(overlap_s).ok_or_else(|| format!("bad overlap `{overlap_s}`"))?;
+    let sched_s = str_field("schedule")?;
+    let schedule =
+        PipeSchedule::parse(sched_s).ok_or_else(|| format!("bad schedule `{sched_s}`"))?;
+    let zero_s = str_field("zero")?;
+    let zero = ZeroStage::parse(zero_s).ok_or_else(|| format!("bad zero `{zero_s}`"))?;
+    let rc_s = str_field("recompute")?;
+    let recompute =
+        Recompute::parse(rc_s).ok_or_else(|| format!("bad recompute `{rc_s}`"))?;
+    let strategy = Strategy::new(
+        num_field("mp")? as usize,
+        num_field("dp")? as usize,
+        num_field("pp")? as usize,
+    );
+    let ok = p
+        .get("ok")
+        .and_then(Json::as_bool)
+        .ok_or_else(|| "point missing `ok`".to_string())?;
+    let outcome = if ok {
+        let mut breakdown = Breakdown {
+            compute: num_field("compute_s")?,
+            ..Breakdown::default()
+        };
+        let comm = p
+            .get("exposed_comm_s")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| "point missing `exposed_comm_s`".to_string())?;
+        for &c in CommType::all().iter() {
+            let v = comm
+                .get(c.name())
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("point missing exposed_comm_s `{}`", c.name()))?;
+            breakdown.add(c, v);
+        }
+        Ok(SweepMetrics {
+            breakdown,
+            per_sample: num_field("per_sample_s")?,
+            effective_bw: num_field("effective_npu_bw")?,
+        })
+    } else {
+        let kind_s = str_field("error_kind")?;
+        let kind = InfeasibleKind::parse(kind_s)
+            .ok_or_else(|| format!("bad error_kind `{kind_s}`"))?;
+        Err(PointError { kind, msg: str_field("error")?.to_string() })
+    };
+    Ok(SweepPoint {
+        workload: str_field("workload")?.to_string(),
+        wafer,
+        wafers: num_field("wafers")? as usize,
+        xwafer_bw: num_field("xwafer_bw")?,
+        xwafer_latency: num_field("xwafer_latency_s")?,
+        topo,
+        span,
+        fabric,
+        strategy,
+        overlap,
+        microbatches: num_field("microbatches")? as usize,
+        schedule,
+        vstages: num_field("vstages")? as usize,
+        zero,
+        recompute,
+        mem_gb: num_field("mem_gb")?,
+        mem_ok: p
+            .get("mem_ok")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| "point missing `mem_ok`".to_string())?,
+        outcome,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sweep::enumerate_specs;
+    use crate::coordinator::workload;
+
+    fn tiny_cfg() -> SweepConfig {
+        SweepConfig {
+            workloads: vec![workload::resnet152()],
+            wafers: vec![WaferDims::PAPER],
+            fabrics: vec![FabricKind::FredA, FabricKind::FredD],
+            strategies: Some(vec![Strategy::new(1, 20, 1), Strategy::new(4, 5, 1)]),
+            threads: 1,
+            ..SweepConfig::default()
+        }
+    }
+
+    #[test]
+    fn cache_distinguishes_bench_bytes_and_workload_numbers() {
+        // Same spec, different pricing inputs, must never share entries.
+        let cfg = tiny_cfg();
+        let mut bigger = cfg.clone();
+        bigger.bench_bytes = cfg.bench_bytes * 2.0;
+        let canon: Vec<String> = cfg.workloads.iter().map(workload_canonical).collect();
+        let (specs, _) = enumerate_specs(&cfg);
+        let a = spec_fingerprint(&cfg, &specs[0], &canon);
+        let b = spec_fingerprint(&bigger, &specs[0], &canon);
+        assert_ne!(a, b, "bench_bytes is a pricing input");
+        let mut scaled = cfg.workloads[0].clone();
+        scaled.compute_scale *= 2.0;
+        let canon2 = vec![workload_canonical(&scaled)];
+        let c = spec_fingerprint(&cfg, &specs[0], &canon2);
+        assert_ne!(a, c, "workload numbers are pricing inputs");
+    }
+
+    #[test]
+    fn builder_rejects_inconsistent_specs() {
+        let workloads = vec![workload::resnet152()];
+        let ok = PointSpec::builder(
+            FabricKind::FredD,
+            WaferDims::PAPER,
+            0,
+            Strategy::new(2, 5, 2),
+        )
+        .wafers(4)
+        .span(WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 2 })
+        .build(&workloads);
+        assert!(ok.is_ok(), "{ok:?}");
+
+        // Span/fleet mismatch is a build error, not a deep assert.
+        let err = PointSpec::builder(
+            FabricKind::FredD,
+            WaferDims::PAPER,
+            0,
+            Strategy::new(2, 5, 2),
+        )
+        .wafers(3)
+        .span(WaferSpan::Mixed { pp_wafers: 2, dp_wafers: 2 })
+        .build(&workloads)
+        .unwrap_err();
+        assert!(err.contains("does not cover"), "{err}");
+
+        // Over-wafer strategy.
+        let err = PointSpec::builder(
+            FabricKind::FredD,
+            WaferDims::PAPER,
+            0,
+            Strategy::new(1, 64, 1),
+        )
+        .build(&workloads)
+        .unwrap_err();
+        assert!(err.contains("workers"), "{err}");
+
+        // Unphysical egress operating point.
+        let err = PointSpec::builder(
+            FabricKind::FredD,
+            WaferDims::PAPER,
+            0,
+            Strategy::new(1, 20, 1),
+        )
+        .wafers(2)
+        .egress(EgressTopo::Ring, 0.0, 1e-6)
+        .build(&workloads)
+        .unwrap_err();
+        assert!(err.contains("bandwidth"), "{err}");
+
+        // Out-of-range workload index.
+        let err = PointSpec::builder(
+            FabricKind::FredD,
+            WaferDims::PAPER,
+            3,
+            Strategy::new(1, 20, 1),
+        )
+        .build(&workloads)
+        .unwrap_err();
+        assert!(err.contains("workload_idx"), "{err}");
+    }
+
+    #[test]
+    fn evaluator_matches_itself_and_annotates_bounds_soundly() {
+        let cfg = tiny_cfg();
+        let ev = Evaluator::new(&cfg);
+        let (specs, _) = enumerate_specs(&cfg);
+        assert!(!specs.is_empty());
+        for spec in &specs {
+            let a = point_to_json(&ev.evaluate(spec)).render();
+            let b = point_to_json(&ev.evaluate(spec)).render();
+            assert_eq!(a, b, "evaluate must be pure");
+            let bounds = ev.bounds(spec);
+            let p = ev.evaluate(spec);
+            assert_eq!(bounds.mem_gb.to_bits(), p.mem_gb.to_bits());
+            assert_eq!(bounds.mem_ok, p.mem_ok);
+            let m = p.outcome.as_ref().expect("tiny space is feasible");
+            assert!(
+                bounds.floor_per_sample <= m.per_sample * (1.0 + 1e-9),
+                "floor {} must lower-bound per_sample {}",
+                bounds.floor_per_sample,
+                m.per_sample
+            );
+            assert!(bounds.floor_per_sample > 0.0);
+        }
+    }
+
+    #[test]
+    fn evaluate_all_is_thread_invariant() {
+        let mut cfg = tiny_cfg();
+        cfg.wafer_counts = vec![1, 2];
+        let render = |threads: usize| -> String {
+            cfg.threads = threads;
+            let ev = Evaluator::new(&cfg);
+            let (specs, _) = enumerate_specs(&cfg);
+            let pts = ev.evaluate_all(&specs);
+            Json::Arr(pts.iter().map(point_to_json).collect()).render()
+        };
+        let one = render(1);
+        assert_eq!(one, render(3), "thread count must not change evaluation output");
+    }
+}

@@ -25,19 +25,30 @@
 //!   and produces the end-to-end breakdown (compute + exposed comm per
 //!   source) that Figs. 2, 9, 10 plot.
 //! * [`metrics`] — breakdown records, normalization, speedups.
+//! * [`eval`] — the public point-evaluation facade: [`PointSpec`]
+//!   (builder-validated), [`Evaluator`] (the one pricing pipeline every
+//!   client shares), the [`eval::rank`] total order, and the per-point
+//!   JSON codec. `fred sweep` and `fred search` are both thin clients.
 //! * [`sweep`] — the strategy/topology sweep engine: cross-product of
 //!   fabric × wafer shape × strategy × overlap schedule × workload,
 //!   ranked.
+//! * [`search`] — optimizer-driven co-exploration of the same space:
+//!   seeded simulated-annealing / evolutionary local search over the
+//!   sweep's spec list, with memory and analytic-floor lower bounds
+//!   pruning neighbors before full pricing and `Placement::random` +
+//!   congestion scoring refining the winners.
 //! * [`pointcache`] — the content-addressed sweep-point cache backing
 //!   `fred sweep --cache` (delta-pricing for repeated what-if queries).
 
 pub mod config;
+pub mod eval;
 pub mod memory;
 pub mod metrics;
 pub mod parallelism;
 pub mod placement;
 pub mod pointcache;
 pub mod schedule;
+pub mod search;
 pub mod sim;
 pub mod stagegraph;
 pub mod sweep;
@@ -45,11 +56,14 @@ pub mod timeline;
 pub mod workload;
 
 pub use config::FabricKind;
+pub use eval::{Evaluator, InfeasibleKind, PointBounds, PointError, PointSpec, PointSpecBuilder,
+    SweepMetrics, SweepPoint};
 pub use memory::{Footprint, MemPolicy, Recompute, ZeroStage};
 pub use metrics::{Breakdown, CommType};
 pub use parallelism::{ScaledStrategy, Strategy, WaferSpan};
 pub use placement::Placement;
 pub use pointcache::PointCache;
+pub use search::{run_search, SearchAlgo, SearchBudget, SearchConfig, SearchResult};
 pub use sim::Simulator;
 pub use stagegraph::PipeSchedule;
 pub use sweep::{SweepConfig, SweepOptions, SweepReport, SweepRun, SweepStats, WaferDims};

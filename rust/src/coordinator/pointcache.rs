@@ -15,9 +15,10 @@
 //! point re-renders byte-identically to a freshly priced one — the
 //! warm-run-equals-cold-run wall in ci.sh and `tests/sweep_cli.rs`.
 //!
-//! The fingerprint itself is computed by the sweep engine (the spec
-//! type is private to it); this module provides the hash, the file
-//! format, and the hit/miss bookkeeping. Keys are 128-bit FNV-1a over
+//! The fingerprint itself is computed by the evaluation facade
+//! ([`super::eval::spec_fingerprint`] over the public [`PointSpec`]);
+//! this module provides the hash, the file format, and the hit/miss
+//! bookkeeping. Keys are 128-bit FNV-1a over
 //! the canonical string — not cryptographic, but collision-safe far
 //! beyond any enumerable sweep size, and dependency-free.
 

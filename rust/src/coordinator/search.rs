@@ -1,0 +1,930 @@
+//! Optimizer-driven strategy/topology co-exploration (`fred search`).
+//!
+//! The sweep's axis product is ~10-dimensional and exhaustive
+//! enumeration is about to stop scaling; this module explores the *same*
+//! space — literally the index set of [`enumerate_specs`]'s spec list —
+//! with seeded local search instead of brute force, the WATOS / LIBRA
+//! style strategy/architecture co-optimization the ROADMAP calls for.
+//!
+//! Design contracts, in decreasing order of importance:
+//!
+//! * **Same space, same pricing.** A search point is an index into the
+//!   sweep's enumerated spec list, priced by the same
+//!   [`Evaluator::evaluate`] facade. A spec the sweep would not
+//!   enumerate cannot be visited (mutated neighbors are mapped back via
+//!   spec identity; unmapped mutations are re-drawn), and a visited
+//!   spec's JSON is byte-identical to the sweep's — which is what makes
+//!   the exhaustive sweep a *correctness oracle*: `--budget full` merged
+//!   through `fred merge` must compare equal to the merged sweep.
+//! * **Determinism.** All randomness flows through one
+//!   [`Xorshift64`] seeded from [`SearchConfig::seed`]; batch pricing
+//!   goes through the thread-invariant [`Evaluator::evaluate_all`]; the
+//!   annealer prices sequentially. Same seed ⇒ byte-identical document
+//!   at any thread count.
+//! * **Budget monotonicity.** The cooling schedule and every proposal
+//!   draw depend only on the search *history*, never on the remaining
+//!   budget, so a run with budget `B` prices a prefix of what budget
+//!   `B+1` prices — the best-found point can only improve as the budget
+//!   grows (`tests/prop_search.rs` walls this).
+//! * **Sound pruning.** Before paying for fluid pricing, a neighbor is
+//!   discarded if its closed-form [`Evaluator::bounds`] already rule it
+//!   out: footprint over HBM (under `--mem rank|prune`), or analytic
+//!   compute floor above the incumbent. The floor is a true lower bound
+//!   ([`Simulator::analytic_floor`]), so a pruned neighbor can never
+//!   beat the final best — the prune margin `1 - 1e-9` only guards f64
+//!   round-off.
+//!
+//! [`enumerate_specs`]: super::sweep::enumerate_specs
+//! [`Simulator::analytic_floor`]: super::sim::Simulator::analytic_floor
+
+use super::eval::{point_to_json, rank, Evaluator, InfeasibleKind, PointSpec, SweepPoint};
+use super::memory::{MemPolicy, Recompute, ZeroStage};
+use super::parallelism::{Strategy, WaferSpan};
+use super::placement::Placement;
+use super::stagegraph::PipeSchedule;
+use super::sweep::{enumerate_specs, SweepConfig, SweepReport, WaferDims, SCHEMA_VERSION};
+use super::timeline::OverlapMode;
+use crate::fabric::egress::EgressTopo;
+use crate::fabric::mesh::Mesh2D;
+use crate::runtime::json::Json;
+use crate::util::prng::Xorshift64;
+use std::collections::HashMap;
+
+/// Search algorithm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchAlgo {
+    /// Simulated annealing: a single walker accepting uphill moves with
+    /// Metropolis probability under a fixed geometric cooling schedule.
+    Anneal,
+    /// Evolutionary search: a small population; each generation mutates
+    /// the fittest survivors and prices the batch in parallel.
+    Evolve,
+}
+
+impl SearchAlgo {
+    /// CLI / JSON name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SearchAlgo::Anneal => "anneal",
+            SearchAlgo::Evolve => "evolve",
+        }
+    }
+
+    /// Parse a `--algo` value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "anneal" => Some(SearchAlgo::Anneal),
+            "evolve" => Some(SearchAlgo::Evolve),
+            _ => None,
+        }
+    }
+}
+
+/// Points-priced cap for one search run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchBudget {
+    /// Price every enumerated spec (through the search machinery): the
+    /// oracle mode — the resulting document merges byte-identically to
+    /// the exhaustive sweep's.
+    Full,
+    /// Price at most this many fresh points (revisits and pruned
+    /// neighbors are free).
+    Points(usize),
+}
+
+impl SearchBudget {
+    /// Parse a `--budget` value: `full` or a positive point count.
+    pub fn parse(s: &str) -> Option<Self> {
+        if s == "full" {
+            return Some(SearchBudget::Full);
+        }
+        match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Some(SearchBudget::Points(n)),
+            _ => None,
+        }
+    }
+
+    /// JSON form: the string `"full"` or the numeric cap.
+    pub fn to_json(&self) -> Json {
+        match self {
+            SearchBudget::Full => Json::Str("full".into()),
+            SearchBudget::Points(n) => Json::Num(*n as f64),
+        }
+    }
+}
+
+/// Knobs for one [`run_search`] call.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchConfig {
+    /// Which optimizer drives the walk.
+    pub algo: SearchAlgo,
+    /// PRNG seed — the *only* source of randomness in a run.
+    pub seed: u64,
+    /// Points-priced cap.
+    pub budget: SearchBudget,
+    /// Keep only the best `top` points in the output document
+    /// (0 = keep every priced point — what the oracle `cmp` uses).
+    pub top: usize,
+    /// Random placements to score (against the paper default) for the
+    /// best point's inner placement loop; 0 disables the refinement.
+    pub placements: usize,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        Self {
+            algo: SearchAlgo::Anneal,
+            seed: 1,
+            budget: SearchBudget::Points(64),
+            top: 0,
+            placements: 0,
+        }
+    }
+}
+
+/// One improvement of the best-found point: after `priced` fresh
+/// pricings, the best feasible per-sample time was `per_sample`.
+#[derive(Debug, Clone, Copy)]
+pub struct TrajectoryStep {
+    /// Fresh points priced when this best was found (1-based).
+    pub priced: usize,
+    /// The best per-sample time at that moment, seconds.
+    pub per_sample: f64,
+}
+
+/// Result of the inner placement loop on the best point: the paper's
+/// dimension-priority placement scored against `evaluated - 1` seeded
+/// random placements by [`Placement::congestion_score`].
+#[derive(Debug, Clone, Copy)]
+pub struct PlacementSummary {
+    /// Placements scored (paper default + random).
+    pub evaluated: usize,
+    /// Congestion score of the paper-default placement, seconds.
+    pub default_score: f64,
+    /// Best congestion score found, seconds.
+    pub best_score: f64,
+    /// Whether the paper default was (weakly) the best.
+    pub best_is_default: bool,
+}
+
+/// A completed search: the ranked kept points (same envelope as a sweep
+/// report, so `fred merge` accepts the document) plus the exploration
+/// counters the ROADMAP's points-visited-to-best-found metric reads.
+#[derive(Debug)]
+pub struct SearchResult {
+    /// Kept points ranked by [`rank`], plus the sweep bookkeeping
+    /// (`truncated_strategies` from enumeration, `mem_pruned` from
+    /// `--mem prune` retention) — the merge-compatible envelope.
+    pub report: SweepReport,
+    /// Size of the full enumerated space the search ran over.
+    pub space: usize,
+    /// Proposals considered (including revisits and pruned neighbors).
+    pub visited: usize,
+    /// Fresh points actually priced (what `--budget` caps).
+    pub priced: usize,
+    /// Neighbors discarded by the closed-form bounds before pricing.
+    pub pruned: usize,
+    /// Specs the bounds pruned — kept so tests can re-price them and
+    /// verify none would have beaten the final best (not serialized).
+    pub pruned_specs: Vec<PointSpec>,
+    /// Best-found improvements in pricing order.
+    pub trajectory: Vec<TrajectoryStep>,
+    /// Inner placement-loop summary for the best point (when
+    /// [`SearchConfig::placements`] > 0 and a feasible best exists).
+    pub placement: Option<PlacementSummary>,
+}
+
+impl SearchResult {
+    /// The best point found (rank order), if any survived.
+    pub fn best(&self) -> Option<&SweepPoint> {
+        self.report.points.first()
+    }
+
+    /// The `fred search --json` document: the sweep envelope
+    /// (`schema_version`, `points`, `truncated_strategies`,
+    /// `mem_pruned` — so `fred merge` accepts it) plus a `search`
+    /// metadata object with the exploration counters.
+    pub fn to_json(&self, scfg: &SearchConfig) -> Json {
+        let trajectory: Vec<Json> = self
+            .trajectory
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("priced", Json::Num(t.priced as f64)),
+                    ("per_sample_s", Json::Num(t.per_sample)),
+                ])
+            })
+            .collect();
+        let placement = match &self.placement {
+            None => Json::Null,
+            Some(p) => Json::obj(vec![
+                ("evaluated", Json::Num(p.evaluated as f64)),
+                ("default_score_s", Json::Num(p.default_score)),
+                ("best_score_s", Json::Num(p.best_score)),
+                ("best_is_default", Json::Bool(p.best_is_default)),
+            ]),
+        };
+        let search = Json::obj(vec![
+            ("algo", Json::Str(scfg.algo.name().to_string())),
+            ("seed", Json::Num(scfg.seed as f64)),
+            ("budget", scfg.budget.to_json()),
+            ("space", Json::Num(self.space as f64)),
+            ("visited", Json::Num(self.visited as f64)),
+            ("priced", Json::Num(self.priced as f64)),
+            ("pruned", Json::Num(self.pruned as f64)),
+            ("kept", Json::Num(self.report.points.len() as f64)),
+            ("best_trajectory", Json::Arr(trajectory)),
+            ("placement", placement),
+        ]);
+        Json::obj(vec![
+            ("schema_version", Json::Num(SCHEMA_VERSION)),
+            (
+                "points",
+                Json::Arr(self.report.points.iter().map(point_to_json).collect()),
+            ),
+            (
+                "truncated_strategies",
+                Json::Num(self.report.truncated_strategies as f64),
+            ),
+            ("mem_pruned", Json::Num(self.report.mem_pruned as f64)),
+            ("search", search),
+        ])
+    }
+}
+
+/// Per-axis value universes of one enumerated space, in first-seen
+/// (deterministic) order — what neighbor moves draw replacement values
+/// from, so a mutation can only propose values the sweep would enumerate.
+struct AxisUniverse {
+    strategies: Vec<Strategy>,
+    spans: Vec<WaferSpan>,
+    topos: Vec<EgressTopo>,
+    schedules: Vec<PipeSchedule>,
+    zeros: Vec<ZeroStage>,
+    recomputes: Vec<Recompute>,
+    overlaps: Vec<OverlapMode>,
+    microbatches: Vec<Option<usize>>,
+    wafer_counts: Vec<usize>,
+    wafers: Vec<WaferDims>,
+    kinds: Vec<super::config::FabricKind>,
+    workloads: Vec<usize>,
+    bws: Vec<u64>,
+    latencies: Vec<u64>,
+}
+
+fn dedup_push<T: PartialEq + Copy>(v: &mut Vec<T>, x: T) {
+    if !v.contains(&x) {
+        v.push(x);
+    }
+}
+
+impl AxisUniverse {
+    fn of(specs: &[PointSpec]) -> Self {
+        let mut u = AxisUniverse {
+            strategies: Vec::new(),
+            spans: Vec::new(),
+            topos: Vec::new(),
+            schedules: Vec::new(),
+            zeros: Vec::new(),
+            recomputes: Vec::new(),
+            overlaps: Vec::new(),
+            microbatches: Vec::new(),
+            wafer_counts: Vec::new(),
+            wafers: Vec::new(),
+            kinds: Vec::new(),
+            workloads: Vec::new(),
+            bws: Vec::new(),
+            latencies: Vec::new(),
+        };
+        for s in specs {
+            dedup_push(&mut u.strategies, s.strategy);
+            dedup_push(&mut u.spans, s.span);
+            dedup_push(&mut u.topos, s.topo);
+            dedup_push(&mut u.schedules, s.schedule);
+            dedup_push(&mut u.zeros, s.zero);
+            dedup_push(&mut u.recomputes, s.recompute);
+            dedup_push(&mut u.overlaps, s.overlap);
+            dedup_push(&mut u.microbatches, s.microbatches);
+            dedup_push(&mut u.wafer_counts, s.wafers);
+            dedup_push(&mut u.wafers, s.wafer);
+            dedup_push(&mut u.kinds, s.kind);
+            dedup_push(&mut u.workloads, s.workload_idx);
+            dedup_push(&mut u.bws, s.xwafer_bw.to_bits());
+            dedup_push(&mut u.latencies, s.xwafer_latency.to_bits());
+        }
+        u
+    }
+}
+
+/// Prime factors of `n` (with multiplicity), ascending.
+fn prime_factors(mut n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut d = 2;
+    while d * d <= n {
+        while n % d == 0 {
+            out.push(d);
+            n /= d;
+        }
+        d += 1;
+    }
+    if n > 1 {
+        out.push(n);
+    }
+    out
+}
+
+/// Move one prime factor of the strategy between its mp/dp/pp
+/// dimensions — the "refactor a parallelism factor" neighbor move. The
+/// worker product is preserved, so the result fits wherever the input
+/// did. Returns the input unchanged when every dimension is 1.
+fn refactor_strategy(rng: &mut Xorshift64, s: Strategy) -> Strategy {
+    let dims = [s.mp, s.dp, s.pp];
+    let sources: Vec<usize> = (0..3).filter(|&i| dims[i] > 1).collect();
+    if sources.is_empty() {
+        return s;
+    }
+    let src = *rng.choose(&sources);
+    let factors = prime_factors(dims[src]);
+    let p = *rng.choose(&factors);
+    let dests: Vec<usize> = (0..3).filter(|&i| i != src).collect();
+    let dst = *rng.choose(&dests);
+    let mut dims = dims;
+    dims[src] /= p;
+    dims[dst] *= p;
+    Strategy::new(dims[0], dims[1], dims[2])
+}
+
+/// The enumerated space a search walks: the spec list, its identity
+/// index, and the per-axis universes neighbor moves draw from.
+struct SearchSpace<'c> {
+    cfg: &'c SweepConfig,
+    specs: Vec<PointSpec>,
+    index_of: HashMap<super::eval::PointId, usize>,
+    universe: AxisUniverse,
+}
+
+impl<'c> SearchSpace<'c> {
+    fn new(cfg: &'c SweepConfig, specs: Vec<PointSpec>) -> Self {
+        let index_of = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (super::eval::spec_id(cfg, s), i))
+            .collect();
+        let universe = AxisUniverse::of(&specs);
+        Self { cfg, specs, index_of, universe }
+    }
+
+    /// Map a mutated spec back into the enumerated space, if the sweep
+    /// would have enumerated it.
+    fn lookup(&self, spec: &PointSpec) -> Option<usize> {
+        self.index_of.get(&super::eval::spec_id(self.cfg, spec)).copied()
+    }
+
+    /// Draw a value from `values` different from `current`, if the axis
+    /// has one.
+    fn swap<T: PartialEq + Copy>(
+        rng: &mut Xorshift64,
+        values: &[T],
+        current: T,
+    ) -> Option<T> {
+        if values.len() < 2 {
+            return None;
+        }
+        for _ in 0..8 {
+            let v = *rng.choose(values);
+            if v != current {
+                return Some(v);
+            }
+        }
+        None
+    }
+
+    /// Propose a neighbor of spec `i`: mutate one axis, map the result
+    /// back into the space. Mutations that land outside the enumerated
+    /// space (a span that no longer covers the fleet, a strategy too
+    /// wide for the wafer) are re-drawn; after bounded retries the move
+    /// degenerates to a uniform restart — which keeps the walk ergodic
+    /// even on spaces where most mutations are invalid.
+    fn neighbor(&self, rng: &mut Xorshift64, i: usize) -> usize {
+        let u = &self.universe;
+        for _ in 0..16 {
+            let mut cand = self.specs[i];
+            match rng.range(0, 14) {
+                0 => {
+                    // Strategy move: prefer refactoring a prime factor
+                    // between dimensions; fall back to swapping in
+                    // another enumerated strategy.
+                    let refac = refactor_strategy(rng, cand.strategy);
+                    if refac != cand.strategy && u.strategies.contains(&refac) {
+                        cand.strategy = refac;
+                    } else if let Some(s) = Self::swap(rng, &u.strategies, cand.strategy) {
+                        cand.strategy = s;
+                    } else {
+                        continue;
+                    }
+                }
+                1 => match Self::swap(rng, &u.spans, cand.span) {
+                    Some(v) => cand.span = v,
+                    None => continue,
+                },
+                2 => match Self::swap(rng, &u.topos, cand.topo) {
+                    Some(v) => cand.topo = v,
+                    None => continue,
+                },
+                3 => match Self::swap(rng, &u.schedules, cand.schedule) {
+                    Some(v) => cand.schedule = v,
+                    None => continue,
+                },
+                4 => match Self::swap(rng, &u.zeros, cand.zero) {
+                    Some(v) => cand.zero = v,
+                    None => continue,
+                },
+                5 => match Self::swap(rng, &u.recomputes, cand.recompute) {
+                    Some(v) => cand.recompute = v,
+                    None => continue,
+                },
+                6 => match Self::swap(rng, &u.overlaps, cand.overlap) {
+                    Some(v) => cand.overlap = v,
+                    None => continue,
+                },
+                7 => match Self::swap(rng, &u.microbatches, cand.microbatches) {
+                    Some(v) => cand.microbatches = v,
+                    None => continue,
+                },
+                8 => match Self::swap(rng, &u.wafer_counts, cand.wafers) {
+                    Some(v) => cand.wafers = v,
+                    None => continue,
+                },
+                9 => match Self::swap(rng, &u.wafers, cand.wafer) {
+                    Some(v) => cand.wafer = v,
+                    None => continue,
+                },
+                10 => match Self::swap(rng, &u.kinds, cand.kind) {
+                    Some(v) => cand.kind = v,
+                    None => continue,
+                },
+                11 => match Self::swap(rng, &u.workloads, cand.workload_idx) {
+                    Some(v) => cand.workload_idx = v,
+                    None => continue,
+                },
+                12 => match Self::swap(rng, &u.bws, cand.xwafer_bw.to_bits()) {
+                    Some(v) => cand.xwafer_bw = f64::from_bits(v),
+                    None => continue,
+                },
+                _ => match Self::swap(rng, &u.latencies, cand.xwafer_latency.to_bits()) {
+                    Some(v) => cand.xwafer_latency = f64::from_bits(v),
+                    None => continue,
+                },
+            }
+            if let Some(j) = self.lookup(&cand) {
+                if j != i {
+                    return j;
+                }
+            }
+        }
+        rng.range(0, self.specs.len())
+    }
+}
+
+/// Ranking key of a priced point inside the walk: feasible points by
+/// per-sample time, then memory-infeasible, then fluid deadlocks — the
+/// same three tiers as [`rank`].
+fn score(p: &SweepPoint) -> f64 {
+    match &p.outcome {
+        Ok(m) => m.per_sample,
+        Err(_) => f64::INFINITY,
+    }
+}
+
+/// What [`Explorer::consider`] did with a proposed index.
+enum Considered {
+    /// Already priced earlier in the run (free).
+    Revisit,
+    /// Freshly priced (consumed one budget unit).
+    Priced,
+    /// Discarded by the closed-form bounds before pricing.
+    Pruned,
+    /// The budget is exhausted — stop the walk.
+    Exhausted,
+}
+
+/// Shared exploration state: the dedup map, the counters, the best-found
+/// trajectory, and the budget.
+struct Explorer<'s, 'c> {
+    space: &'s SearchSpace<'c>,
+    evaluator: &'s Evaluator<'c>,
+    budget: usize,
+    priced: HashMap<usize, SweepPoint>,
+    order: Vec<usize>,
+    visited: usize,
+    pruned: usize,
+    pruned_specs: Vec<PointSpec>,
+    best: f64,
+    trajectory: Vec<TrajectoryStep>,
+}
+
+impl<'s, 'c> Explorer<'s, 'c> {
+    fn new(space: &'s SearchSpace<'c>, evaluator: &'s Evaluator<'c>, budget: usize) -> Self {
+        Self {
+            space,
+            evaluator,
+            budget,
+            priced: HashMap::new(),
+            order: Vec::new(),
+            visited: 0,
+            pruned: 0,
+            pruned_specs: Vec::new(),
+            best: f64::INFINITY,
+            trajectory: Vec::new(),
+        }
+    }
+
+    fn budget_left(&self) -> usize {
+        self.budget.saturating_sub(self.order.len())
+    }
+
+    fn record(&mut self, i: usize, point: SweepPoint) {
+        let s = score(&point);
+        self.priced.insert(i, point);
+        self.order.push(i);
+        if s < self.best {
+            self.best = s;
+            self.trajectory.push(TrajectoryStep {
+                priced: self.order.len(),
+                per_sample: s,
+            });
+        }
+    }
+
+    /// Should `spec` be pruned instead of priced? Memory-infeasible
+    /// specs are skipped under `--mem rank|prune` (they could never
+    /// rank first); a spec whose analytic compute floor already exceeds
+    /// the incumbent best cannot beat it when fully priced.
+    fn prune(&self, spec: &PointSpec) -> bool {
+        let b = self.evaluator.bounds(spec);
+        if self.space.cfg.mem != MemPolicy::Off && !b.mem_ok {
+            return true;
+        }
+        self.best.is_finite() && b.floor_per_sample * (1.0 - 1e-9) > self.best
+    }
+
+    /// Look at index `i`: return its priced point if known, otherwise
+    /// bound-check and (budget permitting) price it.
+    fn consider(&mut self, i: usize) -> Considered {
+        self.visited += 1;
+        if self.priced.contains_key(&i) {
+            return Considered::Revisit;
+        }
+        if self.prune(&self.space.specs[i]) {
+            self.pruned += 1;
+            self.pruned_specs.push(self.space.specs[i]);
+            return Considered::Pruned;
+        }
+        if self.budget_left() == 0 {
+            return Considered::Exhausted;
+        }
+        let point = self.evaluator.evaluate(&self.space.specs[i]);
+        self.record(i, point);
+        Considered::Priced
+    }
+}
+
+/// Simulated annealing: one walker, Metropolis acceptance on the
+/// *relative* per-sample delta, fixed geometric cooling per proposal
+/// (budget-independent, so larger budgets extend smaller ones).
+fn anneal(ex: &mut Explorer<'_, '_>, rng: &mut Xorshift64) {
+    const T0: f64 = 0.25;
+    const COOL: f64 = 0.995;
+    let n = ex.space.specs.len();
+    let start = rng.range(0, n);
+    // The start point is always priced (no pruning: there is no
+    // incumbent yet, and the document must never be empty).
+    let point = ex.evaluator.evaluate(&ex.space.specs[start]);
+    ex.visited += 1;
+    ex.record(start, point);
+    let mut cur = start;
+    let mut cur_score = score(&ex.priced[&cur]);
+    let mut temp = T0;
+    // The proposal cap only bounds runtime once the space is exhausted
+    // or the budget unreachable; hitting it never changes what a
+    // shorter-budget run would have priced.
+    let cap = ex.budget.saturating_mul(64).max(n * 4);
+    for _ in 0..cap {
+        if ex.budget_left() == 0 || ex.priced.len() == n {
+            break;
+        }
+        let j = ex.space.neighbor(rng, cur);
+        temp *= COOL;
+        let cand_score = match ex.consider(j) {
+            Considered::Revisit | Considered::Priced => score(&ex.priced[&j]),
+            Considered::Pruned => continue,
+            Considered::Exhausted => break,
+        };
+        let accept = if cand_score <= cur_score {
+            true
+        } else if cur_score.is_finite() && cand_score.is_finite() {
+            let delta = (cand_score - cur_score) / cur_score;
+            rng.chance((-delta / temp.max(1e-6)).exp())
+        } else {
+            // Walking off an infeasible point is always progress;
+            // walking onto one never is.
+            !cur_score.is_finite()
+        };
+        if accept {
+            cur = j;
+            cur_score = cand_score;
+        }
+    }
+}
+
+/// Evolutionary search: sequential candidate generation (all PRNG draws
+/// happen in one deterministic stream), parallel order-preserving batch
+/// pricing through [`Evaluator::evaluate_all`].
+fn evolve(ex: &mut Explorer<'_, '_>, rng: &mut Xorshift64) {
+    let n = ex.space.specs.len();
+    let pop_size = 8.min(n);
+    let parents = 4.min(pop_size);
+    let children = 8;
+    // Seed population: distinct random indices, first one always priced.
+    let mut population: Vec<usize> = Vec::new();
+    let mut tries = 0;
+    while population.len() < pop_size && tries < pop_size * 16 {
+        tries += 1;
+        let i = rng.range(0, n);
+        if !population.contains(&i) {
+            population.push(i);
+        }
+    }
+    let first = population.first().copied().unwrap_or(0);
+    let point = ex.evaluator.evaluate(&ex.space.specs[first]);
+    ex.visited += 1;
+    ex.record(first, point);
+    // Price the rest of the seed population as the first batch.
+    let seed_batch: Vec<usize> = population.iter().copied().skip(1).collect();
+    price_batch(ex, &seed_batch);
+    population.retain(|i| ex.priced.contains_key(i));
+    let cap = ex.budget.saturating_mul(8).max(n).max(64);
+    let mut proposals = 0usize;
+    while ex.budget_left() > 0 && ex.priced.len() < n && proposals < cap {
+        // Fittest-first parent pool (deterministic tie-break by index).
+        population.sort_by(|&a, &b| {
+            score(&ex.priced[&a])
+                .total_cmp(&score(&ex.priced[&b]))
+                .then(a.cmp(&b))
+        });
+        population.truncate(pop_size);
+        let pool: Vec<usize> = population.iter().copied().take(parents).collect();
+        if pool.is_empty() {
+            break;
+        }
+        // Generate this generation's candidates sequentially...
+        let mut batch: Vec<usize> = Vec::new();
+        for _ in 0..children {
+            proposals += 1;
+            let parent = *rng.choose(&pool);
+            let j = ex.space.neighbor(rng, parent);
+            if !batch.contains(&j) {
+                batch.push(j);
+            }
+        }
+        // ...and price the survivors in parallel, in generated order.
+        // A fully-stale generation just loops again; the proposal cap
+        // bounds the total work.
+        price_batch(ex, &batch);
+        for j in batch {
+            if ex.priced.contains_key(&j) && !population.contains(&j) {
+                population.push(j);
+            }
+        }
+    }
+}
+
+/// Bound-check a candidate batch, truncate it to the remaining budget,
+/// and price it through the thread-invariant parallel executor.
+fn price_batch(ex: &mut Explorer<'_, '_>, batch: &[usize]) {
+    let mut fresh: Vec<usize> = Vec::new();
+    for &j in batch {
+        ex.visited += 1;
+        if ex.priced.contains_key(&j) || fresh.contains(&j) {
+            continue;
+        }
+        if ex.prune(&ex.space.specs[j]) {
+            ex.pruned += 1;
+            ex.pruned_specs.push(ex.space.specs[j]);
+            continue;
+        }
+        if fresh.len() >= ex.budget_left() {
+            break;
+        }
+        fresh.push(j);
+    }
+    let specs: Vec<PointSpec> = fresh.iter().map(|&j| ex.space.specs[j]).collect();
+    let points = ex.evaluator.evaluate_all(&specs);
+    for (j, p) in fresh.iter().copied().zip(points) {
+        ex.record(j, p);
+    }
+}
+
+/// Inner placement loop on the best point: score the paper-default
+/// placement against `placements` seeded random ones with
+/// [`Placement::congestion_score`] on the point's own fabric.
+fn refine_placement(
+    cfg: &SweepConfig,
+    best: &SweepPoint,
+    placements: usize,
+    seed: u64,
+) -> PlacementSummary {
+    let fabric = best.fabric.build_sized(best.wafer.n_l1, best.wafer.per_l1);
+    let mesh = best
+        .fabric
+        .is_mesh()
+        .then(|| Mesh2D::with_dims(best.wafer.n_l1, best.wafer.per_l1));
+    let n_npus = best.wafer.npus();
+    let strategy = best.strategy;
+    let bytes = cfg.bench_bytes;
+    let default = Placement::paper_default(&strategy, mesh.as_ref(), n_npus);
+    let default_score = default.congestion_score(fabric.as_ref(), &strategy, bytes);
+    // A distinct stream from the walk's: placement refinement must not
+    // perturb the (budget-monotone) exploration draws.
+    let mut rng = Xorshift64::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+    let mut best_score = default_score;
+    for _ in 0..placements {
+        let p = Placement::random(&strategy, n_npus, &mut rng);
+        let s = p.congestion_score(fabric.as_ref(), &strategy, bytes);
+        if s < best_score {
+            best_score = s;
+        }
+    }
+    PlacementSummary {
+        evaluated: placements + 1,
+        default_score,
+        best_score,
+        best_is_default: default_score <= best_score,
+    }
+}
+
+/// Run one search over `cfg`'s enumerated space. Deterministic per
+/// [`SearchConfig::seed`] at any thread count; `--budget full` prices
+/// every spec, so the resulting document merges byte-identically to the
+/// exhaustive sweep's (the ci.sh oracle gate).
+pub fn run_search(cfg: &SweepConfig, scfg: &SearchConfig) -> SearchResult {
+    let (specs, truncated) = enumerate_specs(cfg);
+    if specs.is_empty() {
+        // Degenerate grid (e.g. no workloads): an empty document, same
+        // as what the exhaustive sweep would produce.
+        return SearchResult {
+            report: SweepReport {
+                points: Vec::new(),
+                truncated_strategies: truncated,
+                mem_pruned: 0,
+            },
+            space: 0,
+            visited: 0,
+            priced: 0,
+            pruned: 0,
+            pruned_specs: Vec::new(),
+            trajectory: Vec::new(),
+            placement: None,
+        };
+    }
+    let space = SearchSpace::new(cfg, specs);
+    let evaluator = Evaluator::new(cfg);
+    let n = space.specs.len();
+    let budget = match scfg.budget {
+        SearchBudget::Full => n,
+        SearchBudget::Points(b) => b.min(n),
+    };
+    let mut ex = Explorer::new(&space, &evaluator, budget);
+    match scfg.budget {
+        SearchBudget::Full => {
+            // Oracle mode: price everything (no pruning, no walk) so
+            // the document is the sweep's, modulo ordering `fred merge`
+            // normalizes away.
+            let points = evaluator.evaluate_all(&space.specs);
+            ex.visited = n;
+            for (i, p) in points.into_iter().enumerate() {
+                ex.record(i, p);
+            }
+        }
+        SearchBudget::Points(_) => {
+            let mut rng = Xorshift64::new(scfg.seed);
+            match scfg.algo {
+                SearchAlgo::Anneal => anneal(&mut ex, &mut rng),
+                SearchAlgo::Evolve => evolve(&mut ex, &mut rng),
+            }
+        }
+    }
+    let mut points: Vec<SweepPoint> = ex.order.iter().map(|i| ex.priced[i].clone()).collect();
+    rank(&mut points);
+    let mut mem_pruned = 0usize;
+    if cfg.mem == MemPolicy::Prune {
+        let before = points.len();
+        points.retain(|p| !matches!(&p.outcome, Err(e) if e.kind == InfeasibleKind::Memory));
+        mem_pruned = before - points.len();
+    }
+    if scfg.top > 0 && points.len() > scfg.top {
+        points.truncate(scfg.top);
+    }
+    let placement = points
+        .first()
+        .filter(|p| p.outcome.is_ok() && scfg.placements > 0)
+        .map(|p| refine_placement(cfg, p, scfg.placements, scfg.seed));
+    SearchResult {
+        report: SweepReport {
+            points,
+            truncated_strategies: truncated,
+            mem_pruned,
+        },
+        space: n,
+        visited: ex.visited,
+        priced: ex.order.len(),
+        pruned: ex.pruned,
+        pruned_specs: ex.pruned_specs,
+        trajectory: ex.trajectory,
+        placement,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::FabricKind;
+    use crate::coordinator::workload;
+
+    fn tiny_cfg() -> SweepConfig {
+        SweepConfig {
+            workloads: vec![workload::resnet152()],
+            wafers: vec![WaferDims::PAPER],
+            fabrics: vec![FabricKind::FredA, FabricKind::FredD],
+            strategies: Some(vec![
+                Strategy::new(1, 20, 1),
+                Strategy::new(4, 5, 1),
+                Strategy::new(2, 10, 1),
+            ]),
+            threads: 1,
+            ..SweepConfig::default()
+        }
+    }
+
+    #[test]
+    fn full_budget_reproduces_the_sweep_ranking() {
+        let cfg = tiny_cfg();
+        let sweep = super::super::sweep::run_sweep(&cfg);
+        let scfg = SearchConfig { budget: SearchBudget::Full, ..SearchConfig::default() };
+        let search = run_search(&cfg, &scfg);
+        assert_eq!(search.priced, search.space);
+        let a: Vec<String> =
+            sweep.points.iter().map(|p| point_to_json(p).render()).collect();
+        let b: Vec<String> =
+            search.report.points.iter().map(|p| point_to_json(p).render()).collect();
+        assert_eq!(a, b, "full-budget search must price the sweep's ranking");
+    }
+
+    #[test]
+    fn refactor_preserves_worker_product() {
+        let mut rng = Xorshift64::new(3);
+        for _ in 0..100 {
+            let s = Strategy::new(4, 5, 1);
+            let r = refactor_strategy(&mut rng, s);
+            assert_eq!(r.workers(), s.workers());
+        }
+    }
+
+    #[test]
+    fn neighbor_stays_inside_the_enumerated_space() {
+        let cfg = tiny_cfg();
+        let (specs, _) = enumerate_specs(&cfg);
+        let space = SearchSpace::new(&cfg, specs);
+        let mut rng = Xorshift64::new(7);
+        let n = space.specs.len();
+        let mut i = 0usize;
+        for _ in 0..200 {
+            i = space.neighbor(&mut rng, i);
+            assert!(i < n);
+        }
+    }
+
+    #[test]
+    fn search_is_deterministic_per_seed() {
+        let cfg = tiny_cfg();
+        for algo in [SearchAlgo::Anneal, SearchAlgo::Evolve] {
+            let scfg = SearchConfig {
+                algo,
+                seed: 11,
+                budget: SearchBudget::Points(4),
+                ..SearchConfig::default()
+            };
+            let a = run_search(&cfg, &scfg).to_json(&scfg).render();
+            let b = run_search(&cfg, &scfg).to_json(&scfg).render();
+            assert_eq!(a, b, "{} must be deterministic", algo.name());
+        }
+    }
+
+    #[test]
+    fn budget_parse_accepts_full_and_counts() {
+        assert_eq!(SearchBudget::parse("full"), Some(SearchBudget::Full));
+        assert_eq!(SearchBudget::parse("12"), Some(SearchBudget::Points(12)));
+        assert_eq!(SearchBudget::parse("0"), None);
+        assert_eq!(SearchBudget::parse("many"), None);
+    }
+}

@@ -554,6 +554,79 @@ impl<'w> Simulator<'w> {
         flops / self.effective_flops()
     }
 
+    /// Closed-form lower bound on [`Self::try_iterate`]'s total
+    /// iteration time from serial compute alone — no fluid solves, so
+    /// it is orders of magnitude cheaper than full pricing. `fred
+    /// search` divides it by the global minibatch (see
+    /// `Evaluator::bounds`) to discard neighbors whose compute floor
+    /// already exceeds the incumbent before paying for pricing.
+    ///
+    /// Soundness: every priced breakdown satisfies `total() = compute +
+    /// total_exposed() >= compute`, and compute is bounded below by the
+    /// bottleneck's serial compute. Weight-stationary schedules must
+    /// run every microbatch's forward (1×) and backward (2×, plus the
+    /// forward re-run under full recompute) through the slowest stage
+    /// lane; a weight-streaming iteration's critical path is at least
+    /// the slowest layer slice's serial fwd + bwd sweep. The bound is
+    /// walled against full pricing in `tests/prop_search.rs`.
+    pub fn analytic_floor(&self) -> f64 {
+        let w = self.workload.as_ref();
+        let mb = w.microbatches.max(1);
+        let mb_samples = config::SAMPLES_PER_REPLICA as f64 / mb as f64;
+        let mp_global = self.scaled_strategy().global_mp();
+        match w.exec_mode {
+            ExecMode::WeightStationary => {
+                // Mirror `stationary_timeline`'s stage partition and
+                // per-stage forward compute exactly.
+                let pp_global = self.global_pp();
+                let flops: Vec<f64> = w.layers.iter().map(|l| l.fwd_flops).collect();
+                let starts = schedule::partition_stages(&flops, pp_global.min(w.layers.len()));
+                let ranges = schedule::stage_ranges(&starts, w.layers.len());
+                let mut f_comp_max = 0.0_f64;
+                for &(a, b) in &ranges {
+                    let stage_flops: f64 = w.layers[a..b]
+                        .iter()
+                        .map(|l| l.fwd_flops * mb_samples / mp_global as f64)
+                        .sum();
+                    f_comp_max = f_comp_max.max(self.comp_time(stage_flops));
+                }
+                let slots = if self.recompute == Recompute::Full { 4.0 } else { 3.0 };
+                slots * mb as f64 * f_comp_max
+            }
+            ExecMode::WeightStreaming => {
+                // Mirror `try_iterate_streaming`'s slice decomposition;
+                // the iteration drains no faster than the slowest
+                // slice's serial fwd + bwd compute.
+                let wafers = self.scaleout.wafers();
+                let pp_factor = self.span.pp_factor(wafers);
+                let pp_span = pp_factor > 1 && wafers > 1;
+                let layers = &w.layers;
+                let slices: Vec<(usize, usize)> = if pp_span {
+                    let per = layers.len().div_ceil(pp_factor);
+                    (0..pp_factor)
+                        .map(|k| (k * per, ((k + 1) * per).min(layers.len())))
+                        .filter(|&(a, b)| a < b)
+                        .collect()
+                } else {
+                    vec![(0, layers.len())]
+                };
+                let bwd_factor = if self.recompute == Recompute::Full { 3.0 } else { 2.0 };
+                let mut floor = 0.0_f64;
+                for &(lo, hi) in &slices {
+                    let slice_flops: f64 = layers[lo..hi]
+                        .iter()
+                        .map(|l| {
+                            l.fwd_flops * w.active_param_fraction * mb_samples * mb as f64
+                                / mp_global as f64
+                        })
+                        .sum();
+                    floor = floor.max(self.comp_time(slice_flops) * (1.0 + bwd_factor));
+                }
+                floor
+            }
+        }
+    }
+
     fn try_iterate_stationary(&self) -> Result<Breakdown, FluidError> {
         Ok(self.stationary_timeline()?.price(self.overlap))
     }

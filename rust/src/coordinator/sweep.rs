@@ -76,26 +76,28 @@
 //! scale-out invariants live in `tests/prop_sweep.rs` and
 //! `tests/prop_scaleout.rs`.
 
-use super::config::{self, FabricKind};
+use super::config::FabricKind;
 use super::memory::{MemPolicy, Recompute, ZeroStage};
-use super::metrics::{Breakdown, CommType};
 use super::parallelism::{ScaledStrategy, Strategy, WaferSpan};
-use super::pointcache::{self, PointCache};
-use super::sim::Simulator;
+use super::pointcache::PointCache;
 use super::stagegraph::PipeSchedule;
 use super::timeline::OverlapMode;
-use super::workload::{ExecMode, Workload};
+use super::workload::Workload;
 use crate::fabric::egress::EgressTopo;
-use crate::fabric::mesh::Mesh2D;
-use crate::fabric::scaleout::{ScaleOut, DEFAULT_EGRESS_BW, DEFAULT_XWAFER_LATENCY};
-use crate::fabric::topology::Fabric;
+use crate::fabric::scaleout::{DEFAULT_EGRESS_BW, DEFAULT_XWAFER_LATENCY};
 use crate::runtime::json::Json;
 use crate::util::table::Table;
 use crate::util::units::{fmt_bw, fmt_time};
-use std::borrow::Cow;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+
+// The point-evaluation facade lived here before it was extracted to
+// [`super::eval`]; re-export it so `coordinator::sweep::{SweepPoint, ...}`
+// paths keep working for every existing client.
+pub use super::eval::{
+    point_from_json, point_to_json, rank, Evaluator, InfeasibleKind, PointBounds, PointError,
+    PointSpec, PointSpecBuilder, SweepMetrics, SweepPoint,
+};
+use super::eval::{point_id, spec_id, PointId};
 
 /// Version of the `fred sweep --json` document contract. Bump on any
 /// breaking change to field names or semantics (golden-file test:
@@ -119,10 +121,17 @@ use std::sync::OnceLock;
 /// footprint fields (`mem_gb`, `mem_ok`), `error_kind`
 /// (`memory`/`fluid`) on infeasible points, and the top-level
 /// `mem_pruned` count — every v6 field is intact, but two v7 points can
-/// now differ only in their memory knobs, hence the bump. This const is
-/// the single place the version lives — consumers (including
-/// `fred merge`) must check it before reading point fields.
-pub const SCHEMA_VERSION: f64 = 7.0;
+/// now differ only in their memory knobs, hence the bump; v8 added the
+/// `fred search` document family: a search run emits the same envelope
+/// (`schema_version`, `points`, `truncated_strategies`, `mem_pruned` —
+/// so `fred merge` accepts it) plus a top-level `search` metadata object
+/// (algo, seed, budget, visited/priced/pruned counters, best-trajectory,
+/// placement refinement). Every v7 point field is intact, but a v7
+/// consumer reading a search document would silently mistake a budgeted
+/// top-k for an exhaustive sweep, hence the bump. This const is the
+/// single place the version lives — consumers (including `fred merge`)
+/// must check it before reading point fields.
+pub const SCHEMA_VERSION: f64 = 8.0;
 
 /// A wafer shape: `n_l1` rows / L1 groups × `per_l1` columns / NPUs per
 /// group.
@@ -339,10 +348,24 @@ impl Default for SweepConfig {
 /// everything, then an explicit `requested >= 1`, then one thread per
 /// available core. Thread count never changes sweep *output* — only
 /// wall-clock time.
+///
+/// `FRED_SWEEP_THREADS` is deprecated in favor of `--threads` on both
+/// `fred sweep` and `fred search`: reading it emits a one-time stderr
+/// warning this release, and the override will be removed in the next.
+/// It still wins over `requested` until then so existing wrappers keep
+/// their semantics for one release.
 pub fn resolve_threads(requested: usize) -> usize {
     if let Ok(v) = std::env::var("FRED_SWEEP_THREADS") {
         if let Ok(n) = v.trim().parse::<usize>() {
             if n >= 1 {
+                static DEPRECATED: std::sync::Once = std::sync::Once::new();
+                DEPRECATED.call_once(|| {
+                    eprintln!(
+                        "warning: FRED_SWEEP_THREADS is deprecated; pass --threads to \
+                         `fred sweep` / `fred search` instead (the env var still takes \
+                         precedence this release and will be removed in the next)"
+                    );
+                });
                 return n;
             }
         }
@@ -351,134 +374,6 @@ pub fn resolve_threads(requested: usize) -> usize {
         return requested;
     }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-}
-
-/// Metrics of one feasible sweep point.
-#[derive(Debug, Clone)]
-pub struct SweepMetrics {
-    /// Full iteration breakdown.
-    pub breakdown: Breakdown,
-    /// Iteration time divided by the fleet's global minibatch — the
-    /// ranking key (throughput view).
-    pub per_sample: f64,
-    /// Best per-phase effective NPU bandwidth (Fig. 9 metric), bytes/s.
-    pub effective_bw: f64,
-}
-
-/// Why a sweep point is infeasible — the typed reason the table's
-/// status column, the JSON `error_kind` field, and the [three-tier
-/// rank](SweepReport) all key on. Ordered so memory-infeasible points
-/// rank ahead of fluid deadlocks.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub enum InfeasibleKind {
-    /// The per-NPU footprint exceeds HBM under `--mem rank`/`prune`.
-    Memory,
-    /// The fluid list scheduler could not price the point (a deadlocked
-    /// degenerate shape).
-    Fluid,
-}
-
-impl InfeasibleKind {
-    /// Name used in the table status column and the JSON `error_kind`.
-    pub fn name(&self) -> &'static str {
-        match self {
-            InfeasibleKind::Memory => "memory",
-            InfeasibleKind::Fluid => "fluid",
-        }
-    }
-
-    /// Parse a JSON `error_kind` value.
-    pub fn parse(s: &str) -> Option<Self> {
-        match s {
-            "memory" => Some(InfeasibleKind::Memory),
-            "fluid" => Some(InfeasibleKind::Fluid),
-            _ => None,
-        }
-    }
-}
-
-/// A typed infeasibility: the kind drives ranking and pruning, the
-/// message carries the human-readable detail. Previously every
-/// infeasible point collapsed to one opaque `infeasible: {e}` string,
-/// so consumers could not tell an over-budget placement (actionable)
-/// from a deadlocked degenerate shape (not).
-#[derive(Debug, Clone, PartialEq)]
-pub struct PointError {
-    /// What made the point infeasible.
-    pub kind: InfeasibleKind,
-    /// Human-readable detail (footprint size / fluid error text).
-    pub msg: String,
-}
-
-impl PointError {
-    /// A memory-infeasibility with the given detail.
-    pub fn memory(msg: String) -> Self {
-        Self { kind: InfeasibleKind::Memory, msg }
-    }
-
-    /// A fluid-model infeasibility with the given detail.
-    pub fn fluid(msg: String) -> Self {
-        Self { kind: InfeasibleKind::Fluid, msg }
-    }
-}
-
-impl std::fmt::Display for PointError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{}: {}", self.kind.name(), self.msg)
-    }
-}
-
-/// One evaluated point of the cross-product.
-#[derive(Debug, Clone)]
-pub struct SweepPoint {
-    /// Workload name.
-    pub workload: String,
-    /// Wafer shape.
-    pub wafer: WaferDims,
-    /// Fleet size (wafer count; 1 = single wafer).
-    pub wafers: usize,
-    /// Cross-wafer egress bandwidth (bytes/s) this point was priced at.
-    pub xwafer_bw: f64,
-    /// Cross-wafer hop latency (seconds) this point was priced at.
-    pub xwafer_latency: f64,
-    /// Cross-wafer egress topology this point was priced over.
-    pub topo: EgressTopo,
-    /// Which axis the wafer dimension multiplies.
-    pub span: WaferSpan,
-    /// Fabric kind.
-    pub fabric: FabricKind,
-    /// Per-wafer strategy (the wafer dimension is `wafers`).
-    pub strategy: Strategy,
-    /// Overlap schedule this point was priced under.
-    pub overlap: OverlapMode,
-    /// Microbatch count this point ran with (the workload default unless
-    /// the `--microbatches` axis overrode it).
-    pub microbatches: usize,
-    /// Pipeline schedule this point was priced under.
-    pub schedule: PipeSchedule,
-    /// Interleaving depth requested for this point (meaningful for
-    /// `interleaved`; carried on every point so the JSON key is total).
-    pub vstages: usize,
-    /// ZeRO sharding stage this point's footprint assumed.
-    pub zero: ZeroStage,
-    /// Activation recompute setting this point was priced under.
-    pub recompute: Recompute,
-    /// Modeled per-NPU footprint in GB — computed for every point, even
-    /// under `--mem off` (the annotation is free; only *acting* on it is
-    /// policy-gated).
-    pub mem_gb: f64,
-    /// Whether the footprint fits the per-NPU HBM.
-    pub mem_ok: bool,
-    /// Metrics, or the typed infeasibility for points that could not be
-    /// priced (fluid deadlock) or were memory-gated (`--mem rank`/`prune`).
-    pub outcome: Result<SweepMetrics, PointError>,
-}
-
-impl SweepPoint {
-    /// The full wafer-dimensioned strategy of this point.
-    pub fn scaled_strategy(&self) -> ScaledStrategy {
-        ScaledStrategy::with_span(self.wafers, self.strategy, self.span)
-    }
 }
 
 /// A completed sweep: points ranked fastest-per-sample first (infeasible
@@ -495,134 +390,15 @@ pub struct SweepReport {
     pub mem_pruned: usize,
 }
 
-/// One point of the cross-product, by value (cheap `Copy` data only —
-/// the spec list is shared read-only across sweep worker threads).
-#[derive(Debug, Clone, Copy)]
-struct PointSpec {
-    kind: FabricKind,
-    wafer: WaferDims,
-    wafers: usize,
-    xwafer_bw: f64,
-    xwafer_latency: f64,
-    topo: EgressTopo,
-    span: WaferSpan,
-    workload_idx: usize,
-    strategy: Strategy,
-    overlap: OverlapMode,
-    /// `None` keeps the workload's Table V microbatch default.
-    microbatches: Option<usize>,
-    schedule: PipeSchedule,
-    vstages: usize,
-    zero: ZeroStage,
-    recompute: Recompute,
-}
-
-/// Shared prototype cache: fabrics are immutable link-graph models
-/// ([`Fabric`] is `Send + Sync`), so the executor derives one per
-/// (kind, shape) in the spec list up front and every worker clones from
-/// the same map — no worker re-derives a link graph the sweep already
-/// built (the promoted per-thread cache from PR 2).
-type ProtoCache = HashMap<(FabricKind, WaferDims), (Box<dyn Fabric>, Option<Mesh2D>)>;
-
-/// Build the prototype for every (kind, shape) the spec list touches.
-fn build_protos(specs: &[PointSpec]) -> ProtoCache {
-    let mut protos = ProtoCache::new();
-    for spec in specs {
-        protos.entry((spec.kind, spec.wafer)).or_insert_with(|| {
-            (
-                spec.kind.build_sized(spec.wafer.n_l1, spec.wafer.per_l1),
-                spec.kind
-                    .is_mesh()
-                    .then(|| Mesh2D::with_dims(spec.wafer.n_l1, spec.wafer.per_l1)),
-            )
-        });
-    }
-    protos
-}
-
-/// Evaluate one point of the cross-product. `protos` must already hold
-/// this spec's (kind, shape) prototype — see [`build_protos`].
-fn eval_point(cfg: &SweepConfig, spec: &PointSpec, protos: &ProtoCache) -> SweepPoint {
-    let (proto, mesh_proto) = protos
-        .get(&(spec.kind, spec.wafer))
-        .expect("prototype prebuilt for every spec in the list");
-    let workload = &cfg.workloads[spec.workload_idx];
-    // Borrow the shared workload prototype; clone only when this point
-    // overrides its microbatch count (the `--microbatches` axis).
-    let point_workload: Cow<Workload> = match spec.microbatches {
-        None => Cow::Borrowed(workload),
-        Some(mb) => {
-            let mut w = workload.clone();
-            w.microbatches = mb;
-            Cow::Owned(w)
-        }
-    };
-    let microbatches = point_workload.microbatches;
-    let scale =
-        ScaleOut::with_topo(spec.topo, spec.wafers, spec.xwafer_bw, spec.xwafer_latency);
-    let sim = Simulator::with_fabric_shared(
-        spec.kind,
-        proto.clone_box(),
-        mesh_proto.clone(),
-        point_workload,
-        spec.strategy,
-    )
-    .with_scaleout(scale)
-    .with_span(spec.span)
-    .with_overlap(spec.overlap)
-    .with_schedule(spec.schedule, spec.vstages)
-    .with_memory(spec.zero, spec.recompute);
-    // The footprint is annotated on every point; the policy only decides
-    // whether an over-budget one is still *priced*.
-    let footprint = sim.footprint();
-    let mem_gb = footprint.gb();
-    let mem_ok = footprint.fits();
-    let outcome = if cfg.mem != MemPolicy::Off && !mem_ok {
-        Err(PointError::memory(format!(
-            "{mem_gb:.1} GB footprint > {:.0} GB HBM",
-            config::HBM_CAPACITY / 1e9
-        )))
-    } else {
-        match sim.try_iterate() {
-            Ok(breakdown) => {
-                let per_sample = breakdown.total() / sim.global_minibatch().max(1) as f64;
-                let effective_bw = sim
-                    .try_microbench(cfg.bench_bytes)
-                    .map(|phases| phases.iter().flatten().copied().fold(0.0, f64::max))
-                    .unwrap_or(0.0);
-                Ok(SweepMetrics { breakdown, per_sample, effective_bw })
-            }
-            Err(e) => Err(PointError::fluid(e.to_string())),
-        }
-    };
-    SweepPoint {
-        workload: workload.name.clone(),
-        wafer: spec.wafer,
-        wafers: spec.wafers,
-        xwafer_bw: spec.xwafer_bw,
-        xwafer_latency: spec.xwafer_latency,
-        topo: spec.topo,
-        span: spec.span,
-        fabric: spec.kind,
-        strategy: spec.strategy,
-        overlap: spec.overlap,
-        microbatches,
-        schedule: spec.schedule,
-        vstages: spec.vstages,
-        zero: spec.zero,
-        recompute: spec.recompute,
-        mem_gb,
-        mem_ok,
-        outcome,
-    }
-}
-
 /// Enumerate the cross-product deterministically. Returns the ordered
 /// spec list plus the number of auto-enumerated strategies dropped by
 /// [`SweepConfig::max_strategies`]. Spec order is the identity the whole
 /// throughput machinery hangs off: slots, shards, and resume matching
-/// all index into this list.
-fn enumerate_specs(cfg: &SweepConfig) -> (Vec<PointSpec>, usize) {
+/// all index into this list — and `fred search` explores by index into
+/// this same list, which is what makes the exhaustive sweep its
+/// correctness oracle. Produces the same public [`PointSpec`] type
+/// [`Evaluator::evaluate`] consumes.
+pub fn enumerate_specs(cfg: &SweepConfig) -> (Vec<PointSpec>, usize) {
     let xwafer_bws: Vec<f64> = if cfg.xwafer_bws.is_empty() {
         vec![DEFAULT_EGRESS_BW]
     } else {
@@ -764,179 +540,6 @@ fn enumerate_specs(cfg: &SweepConfig) -> (Vec<PointSpec>, usize) {
     (specs, truncated)
 }
 
-/// Evaluate a spec list on [`resolve_threads`] worker threads.
-///
-/// Workers *claim* the next unevaluated spec from a shared atomic index
-/// and write the result into its pre-indexed slot — so a worker that
-/// drew cheap points (single-wafer, mesh) keeps pulling work while one
-/// stuck on an expensive fluid solve does not idle the rest, unlike the
-/// old static `chunks()` partition whose wall clock was the slowest
-/// chunk. Slot indexing preserves spec order exactly, so the output is
-/// byte-identical at every thread count.
-fn eval_specs(cfg: &SweepConfig, specs: &[PointSpec]) -> Vec<SweepPoint> {
-    if specs.is_empty() {
-        return Vec::new();
-    }
-    let protos = build_protos(specs);
-    let threads = resolve_threads(cfg.threads).min(specs.len());
-    if threads <= 1 {
-        return specs.iter().map(|s| eval_point(cfg, s, &protos)).collect();
-    }
-    let next = AtomicUsize::new(0);
-    let slots: Vec<OnceLock<SweepPoint>> = specs.iter().map(|_| OnceLock::new()).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= specs.len() {
-                    break;
-                }
-                // fetch_add hands each index to exactly one worker, so
-                // this set can never collide.
-                let _ = slots[i].set(eval_point(cfg, &specs[i], &protos));
-            });
-        }
-    });
-    slots
-        .into_iter()
-        .map(|s| s.into_inner().expect("every claimed slot was filled"))
-        .collect()
-}
-
-/// Identity of a point independent of how it was produced: every axis
-/// that distinguishes one spec from another, with f64 operating points
-/// compared bitwise (both sides come from the same finite config lists).
-/// This is how `--resume` matches a prior run's points back onto the
-/// freshly enumerated spec list.
-type PointId = (
-    String,
-    WaferDims,
-    usize,
-    u64,
-    u64,
-    EgressTopo,
-    WaferSpan,
-    FabricKind,
-    Strategy,
-    OverlapMode,
-    usize,
-    PipeSchedule,
-    usize,
-    ZeroStage,
-    Recompute,
-);
-
-fn spec_id(cfg: &SweepConfig, spec: &PointSpec) -> PointId {
-    let workload = &cfg.workloads[spec.workload_idx];
-    (
-        workload.name.clone(),
-        spec.wafer,
-        spec.wafers,
-        spec.xwafer_bw.to_bits(),
-        spec.xwafer_latency.to_bits(),
-        spec.topo,
-        spec.span,
-        spec.kind,
-        spec.strategy,
-        spec.overlap,
-        spec.microbatches.unwrap_or(workload.microbatches),
-        spec.schedule,
-        spec.vstages,
-        spec.zero,
-        spec.recompute,
-    )
-}
-
-fn point_id(p: &SweepPoint) -> PointId {
-    (
-        p.workload.clone(),
-        p.wafer,
-        p.wafers,
-        p.xwafer_bw.to_bits(),
-        p.xwafer_latency.to_bits(),
-        p.topo,
-        p.span,
-        p.fabric,
-        p.strategy,
-        p.overlap,
-        p.microbatches,
-        p.schedule,
-        p.vstages,
-        p.zero,
-        p.recompute,
-    )
-}
-
-/// Canonical string for everything about a workload that feeds pricing.
-/// Part of the cache key: two workloads with the same name but different
-/// numbers must not share cache entries. `f64`s are keyed by bit
-/// pattern — bitwise equality is the only equality the cache needs.
-fn workload_canonical(w: &Workload) -> String {
-    use std::fmt::Write as _;
-    let mut s = String::new();
-    let mode = match w.exec_mode {
-        ExecMode::WeightStationary => "stationary",
-        ExecMode::WeightStreaming => "streaming",
-    };
-    let _ = write!(
-        s,
-        "{}|{mode}|{}|{}|{:016x}|{}|{:016x}|{:016x}|{}|{}",
-        w.name,
-        w.default_strategy,
-        w.microbatches,
-        w.input_bytes.to_bits(),
-        w.dp_buckets,
-        w.compute_scale.to_bits(),
-        w.active_param_fraction.to_bits(),
-        w.overlap_dp,
-        w.stream_prefetch,
-    );
-    for l in &w.layers {
-        let _ = write!(
-            s,
-            "|{}:{:016x}:{:016x}:{:016x}:{}",
-            l.name,
-            l.params_bytes.to_bits(),
-            l.fwd_flops.to_bits(),
-            l.act_bytes.to_bits(),
-            l.mp_collectives,
-        );
-    }
-    s
-}
-
-/// Content-address of one point: a fingerprint over every input that
-/// determines its priced JSON. `workload_canons` holds the per-workload
-/// canonical strings (computed once per sweep, not once per point).
-fn spec_fingerprint(cfg: &SweepConfig, spec: &PointSpec, workload_canons: &[String]) -> String {
-    let mb = match spec.microbatches {
-        None => "default".to_string(),
-        Some(n) => n.to_string(),
-    };
-    let canonical = format!(
-        "v{}|{}|{}x{}|{}|{:016x}|{:016x}|{}|{}|{}|{}|{mb}|{}|{}|{}|{}|{:016x}|{}|{}",
-        SCHEMA_VERSION,
-        spec.kind.name(),
-        spec.wafer.n_l1,
-        spec.wafer.per_l1,
-        spec.wafers,
-        spec.xwafer_bw.to_bits(),
-        spec.xwafer_latency.to_bits(),
-        spec.topo.name(),
-        spec.span.name(),
-        spec.strategy,
-        spec.overlap.name(),
-        spec.schedule.name(),
-        spec.vstages,
-        spec.zero.name(),
-        spec.recompute.name(),
-        cfg.bench_bytes.to_bits(),
-        cfg.mem.name(),
-        workload_canons[spec.workload_idx],
-    );
-    pointcache::fingerprint(&canonical)
-}
-
 /// Throughput knobs for [`run_sweep_with`] — all default to "off", in
 /// which case it behaves exactly like [`run_sweep`].
 #[derive(Debug, Default)]
@@ -990,6 +593,7 @@ pub struct SweepRun {
 /// shortest-round-trip f64 format makes the round trip lossless), so
 /// the output document is invariant over where points came from.
 pub fn run_sweep_with(cfg: &SweepConfig, opts: &mut SweepOptions) -> SweepRun {
+    let evaluator = Evaluator::new(cfg);
     let (mut specs, mut truncated) = enumerate_specs(cfg);
     if let Some((i, n)) = opts.shard {
         assert!(n > 0, "shard count must be >= 1");
@@ -1020,12 +624,11 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &mut SweepOptions) -> SweepRun {
     // specs the resume pass left unfilled are looked up.
     let mut keys: Vec<Option<String>> = vec![None; specs.len()];
     if let Some(cache) = &mut opts.cache {
-        let canons: Vec<String> = cfg.workloads.iter().map(workload_canonical).collect();
         for (i, spec) in specs.iter().enumerate() {
             if slots[i].is_some() {
                 continue;
             }
-            let key = spec_fingerprint(cfg, spec, &canons);
+            let key = evaluator.fingerprint(spec);
             // A stored point that fails to parse back is a miss, not an
             // error: the entry is simply re-priced and overwritten.
             if let Some(p) = cache.get(&key).and_then(|j| point_from_json(j).ok()) {
@@ -1043,7 +646,7 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &mut SweepOptions) -> SweepRun {
         (0..specs.len()).filter(|&i| slots[i].is_none()).collect();
     stats.priced = pending.len();
     let pending_specs: Vec<PointSpec> = pending.iter().map(|&i| specs[i]).collect();
-    let fresh = eval_specs(cfg, &pending_specs);
+    let fresh = evaluator.evaluate_all(&pending_specs);
     for (&i, point) in pending.iter().zip(fresh) {
         if let Some(cache) = opts.cache.as_mut() {
             if let Some(key) = keys[i].take() {
@@ -1074,41 +677,6 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &mut SweepOptions) -> SweepRun {
 /// identical for every thread count.
 pub fn run_sweep(cfg: &SweepConfig) -> SweepReport {
     run_sweep_with(cfg, &mut SweepOptions::default()).report
-}
-
-/// Rank: feasible points by per-sample time ascending, then
-/// memory-infeasible points, then fluid deadlocks (see
-/// [`InfeasibleKind`] for why memory outranks fluid), with a total
-/// deterministic tie-break.
-fn rank(points: &mut [SweepPoint]) {
-    points.sort_by(|a, b| {
-        let key = |p: &SweepPoint| match &p.outcome {
-            Ok(m) => (0u8, m.per_sample),
-            Err(e) => match e.kind {
-                InfeasibleKind::Memory => (1u8, f64::INFINITY),
-                InfeasibleKind::Fluid => (2u8, f64::INFINITY),
-            },
-        };
-        let (fa, ta) = key(a);
-        let (fb, tb) = key(b);
-        fa.cmp(&fb)
-            .then(ta.total_cmp(&tb))
-            .then_with(|| a.workload.cmp(&b.workload))
-            .then_with(|| a.wafer.cmp(&b.wafer))
-            .then_with(|| a.wafers.cmp(&b.wafers))
-            .then_with(|| a.xwafer_bw.total_cmp(&b.xwafer_bw))
-            .then_with(|| a.xwafer_latency.total_cmp(&b.xwafer_latency))
-            .then_with(|| a.topo.cmp(&b.topo))
-            .then_with(|| a.span.cmp(&b.span))
-            .then_with(|| a.fabric.name().cmp(b.fabric.name()))
-            .then_with(|| a.strategy.to_string().cmp(&b.strategy.to_string()))
-            .then_with(|| a.overlap.cmp(&b.overlap))
-            .then_with(|| a.microbatches.cmp(&b.microbatches))
-            .then_with(|| a.schedule.cmp(&b.schedule))
-            .then_with(|| a.vstages.cmp(&b.vstages))
-            .then_with(|| a.zero.cmp(&b.zero))
-            .then_with(|| a.recompute.cmp(&b.recompute))
-    });
 }
 
 impl SweepReport {
@@ -1264,192 +832,6 @@ impl SweepReport {
             ("mem_pruned", Json::Num(self.mem_pruned as f64)),
         ])
     }
-}
-
-/// One point in the `fred sweep --json` per-point format — the inverse
-/// of [`point_from_json`], and the value stored per cache entry.
-fn point_to_json(p: &SweepPoint) -> Json {
-    let mut fields = vec![
-        ("workload", Json::Str(p.workload.clone())),
-        ("wafer", Json::Str(p.wafer.to_string())),
-        ("n_npus", Json::Num(p.wafer.npus() as f64)),
-        ("wafers", Json::Num(p.wafers as f64)),
-        ("xwafer_bw", Json::Num(p.xwafer_bw)),
-        ("xwafer_latency_s", Json::Num(p.xwafer_latency)),
-        ("xwafer_topo", Json::Str(p.topo.name().to_string())),
-        ("wafer_span", Json::Str(p.span.name())),
-        (
-            "total_npus",
-            Json::Num((p.wafer.npus() * p.wafers) as f64),
-        ),
-        ("fabric", Json::Str(p.fabric.name().to_string())),
-        ("strategy", Json::Str(p.strategy.to_string())),
-        (
-            "scaled_strategy",
-            Json::Str(p.scaled_strategy().to_string()),
-        ),
-        ("mp", Json::Num(p.strategy.mp as f64)),
-        ("dp", Json::Num(p.strategy.dp as f64)),
-        ("pp", Json::Num(p.strategy.pp as f64)),
-        (
-            "global_dp",
-            Json::Num(p.scaled_strategy().global_dp() as f64),
-        ),
-        (
-            "global_pp",
-            Json::Num(p.scaled_strategy().global_pp() as f64),
-        ),
-        (
-            "global_mp",
-            Json::Num(p.scaled_strategy().global_mp() as f64),
-        ),
-        (
-            "span_mp_wafers",
-            Json::Num(p.span.mp_factor(p.wafers) as f64),
-        ),
-        (
-            "span_dp_wafers",
-            Json::Num(p.span.dp_factor(p.wafers) as f64),
-        ),
-        (
-            "span_pp_wafers",
-            Json::Num(p.span.pp_factor(p.wafers) as f64),
-        ),
-        ("overlap", Json::Str(p.overlap.name().to_string())),
-        ("microbatches", Json::Num(p.microbatches as f64)),
-        ("schedule", Json::Str(p.schedule.name().to_string())),
-        ("vstages", Json::Num(p.vstages as f64)),
-        ("zero", Json::Str(p.zero.name().to_string())),
-        ("recompute", Json::Str(p.recompute.name().to_string())),
-        ("mem_gb", Json::Num(p.mem_gb)),
-        ("mem_ok", Json::Bool(p.mem_ok)),
-        ("ok", Json::Bool(p.outcome.is_ok())),
-    ];
-    match &p.outcome {
-        Ok(m) => {
-            fields.push(("total_s", Json::Num(m.breakdown.total())));
-            fields.push(("per_sample_s", Json::Num(m.per_sample)));
-            fields.push(("compute_s", Json::Num(m.breakdown.compute)));
-            fields.push((
-                "exposed_total_s",
-                Json::Num(m.breakdown.total_exposed()),
-            ));
-            fields.push(("effective_npu_bw", Json::Num(m.effective_bw)));
-            let comm: Vec<(&str, Json)> = CommType::all()
-                .iter()
-                .map(|&c| (c.name(), Json::Num(m.breakdown.get(c))))
-                .collect();
-            fields.push(("exposed_comm_s", Json::obj(comm)));
-        }
-        Err(e) => {
-            fields.push(("error", Json::Str(e.msg.clone())));
-            fields.push(("error_kind", Json::Str(e.kind.name().to_string())));
-        }
-    }
-    Json::obj(fields)
-}
-
-/// Reconstruct a [`SweepPoint`] from its `--json` form. Only primary
-/// fields are read; everything [`point_to_json`] derives (totals, global
-/// factors, NPU counts) is recomputed on re-render — and since the JSON
-/// codec round-trips every `f64` bit-exactly, the same arithmetic on the
-/// same bits re-renders byte-identically. This is what lets `--resume`
-/// and `--cache` replay points without a second pricing pipeline.
-fn point_from_json(p: &Json) -> Result<SweepPoint, String> {
-    let str_field = |k: &str| -> Result<&str, String> {
-        p.get(k)
-            .and_then(Json::as_str)
-            .ok_or_else(|| format!("point missing string field `{k}`"))
-    };
-    let num_field = |k: &str| -> Result<f64, String> {
-        p.get(k)
-            .and_then(Json::as_f64)
-            .ok_or_else(|| format!("point missing numeric field `{k}`"))
-    };
-    let wafer_s = str_field("wafer")?;
-    let wafer = WaferDims::parse(wafer_s).ok_or_else(|| format!("bad wafer `{wafer_s}`"))?;
-    let topo_s = str_field("xwafer_topo")?;
-    let topo =
-        EgressTopo::parse(topo_s).ok_or_else(|| format!("bad xwafer_topo `{topo_s}`"))?;
-    let span_s = str_field("wafer_span")?;
-    let span =
-        WaferSpan::parse(span_s).ok_or_else(|| format!("bad wafer_span `{span_s}`"))?;
-    let fabric_s = str_field("fabric")?;
-    let fabric = FabricKind::all()
-        .iter()
-        .copied()
-        .find(|k| k.name() == fabric_s)
-        .ok_or_else(|| format!("bad fabric `{fabric_s}`"))?;
-    let overlap_s = str_field("overlap")?;
-    let overlap =
-        OverlapMode::parse(overlap_s).ok_or_else(|| format!("bad overlap `{overlap_s}`"))?;
-    let sched_s = str_field("schedule")?;
-    let schedule =
-        PipeSchedule::parse(sched_s).ok_or_else(|| format!("bad schedule `{sched_s}`"))?;
-    let zero_s = str_field("zero")?;
-    let zero = ZeroStage::parse(zero_s).ok_or_else(|| format!("bad zero `{zero_s}`"))?;
-    let rc_s = str_field("recompute")?;
-    let recompute =
-        Recompute::parse(rc_s).ok_or_else(|| format!("bad recompute `{rc_s}`"))?;
-    let strategy = Strategy::new(
-        num_field("mp")? as usize,
-        num_field("dp")? as usize,
-        num_field("pp")? as usize,
-    );
-    let ok = p
-        .get("ok")
-        .and_then(Json::as_bool)
-        .ok_or_else(|| "point missing `ok`".to_string())?;
-    let outcome = if ok {
-        let mut breakdown = Breakdown {
-            compute: num_field("compute_s")?,
-            ..Breakdown::default()
-        };
-        let comm = p
-            .get("exposed_comm_s")
-            .and_then(Json::as_obj)
-            .ok_or_else(|| "point missing `exposed_comm_s`".to_string())?;
-        for &c in CommType::all().iter() {
-            let v = comm
-                .get(c.name())
-                .and_then(Json::as_f64)
-                .ok_or_else(|| format!("point missing exposed_comm_s `{}`", c.name()))?;
-            breakdown.add(c, v);
-        }
-        Ok(SweepMetrics {
-            breakdown,
-            per_sample: num_field("per_sample_s")?,
-            effective_bw: num_field("effective_npu_bw")?,
-        })
-    } else {
-        let kind_s = str_field("error_kind")?;
-        let kind = InfeasibleKind::parse(kind_s)
-            .ok_or_else(|| format!("bad error_kind `{kind_s}`"))?;
-        Err(PointError { kind, msg: str_field("error")?.to_string() })
-    };
-    Ok(SweepPoint {
-        workload: str_field("workload")?.to_string(),
-        wafer,
-        wafers: num_field("wafers")? as usize,
-        xwafer_bw: num_field("xwafer_bw")?,
-        xwafer_latency: num_field("xwafer_latency_s")?,
-        topo,
-        span,
-        fabric,
-        strategy,
-        overlap,
-        microbatches: num_field("microbatches")? as usize,
-        schedule,
-        vstages: num_field("vstages")? as usize,
-        zero,
-        recompute,
-        mem_gb: num_field("mem_gb")?,
-        mem_ok: p
-            .get("mem_ok")
-            .and_then(Json::as_bool)
-            .ok_or_else(|| "point missing `mem_ok`".to_string())?,
-        outcome,
-    })
 }
 
 /// Parse every point out of a `fred sweep --json` document — the
@@ -2463,20 +1845,18 @@ mod tests {
     }
 
     #[test]
-    fn cache_distinguishes_bench_bytes_and_workload_numbers() {
-        // Same spec, different pricing inputs, must never share entries.
+    fn cache_keys_are_stable_across_evaluator_instances() {
+        // The fingerprint is a pure function of config + spec: two
+        // evaluators over the same config must agree on every key (the
+        // on-disk cache is shared across processes). The
+        // bench-bytes/workload-numbers sensitivity half of this contract
+        // lives with the facade in `eval::tests`.
         let cfg = tiny_cfg();
-        let mut bigger = cfg.clone();
-        bigger.bench_bytes = cfg.bench_bytes * 2.0;
-        let canon: Vec<String> = cfg.workloads.iter().map(workload_canonical).collect();
         let (specs, _) = enumerate_specs(&cfg);
-        let a = spec_fingerprint(&cfg, &specs[0], &canon);
-        let b = spec_fingerprint(&bigger, &specs[0], &canon);
-        assert_ne!(a, b, "bench_bytes is a pricing input");
-        let mut scaled = cfg.workloads[0].clone();
-        scaled.compute_scale *= 2.0;
-        let canon2 = vec![workload_canonical(&scaled)];
-        let c = spec_fingerprint(&cfg, &specs[0], &canon2);
-        assert_ne!(a, c, "workload numbers are pricing inputs");
+        let a = Evaluator::new(&cfg);
+        let b = Evaluator::new(&cfg);
+        for spec in &specs {
+            assert_eq!(a.fingerprint(spec), b.fingerprint(spec));
+        }
     }
 }

@@ -72,7 +72,7 @@ fn merge_round_trips_a_sharded_sweep_byte_for_byte() {
 
     // The merged doc still parses and is ranked ascending per-sample.
     let doc = Json::parse(String::from_utf8(merged_stdout).unwrap().trim()).unwrap();
-    assert_eq!(doc.get("schema_version").and_then(Json::as_usize), Some(7));
+    assert_eq!(doc.get("schema_version").and_then(Json::as_usize), Some(8));
     let points = doc.get("points").unwrap().as_arr().unwrap();
     // 3 strategies x 2 fabrics x 2 overlaps x 2 microbatches x (1-wafer
     // once + 2-wafer once).

@@ -1,0 +1,208 @@
+//! Property/invariant tests over `fred search` and the point-evaluation
+//! facade it shares with the sweep: per-seed determinism at any thread
+//! count, oracle agreement with the exhaustive sweep, budget
+//! monotonicity, soundness of the two pre-pricing lower bounds, and
+//! validity of the random placements the refinement loop draws.
+
+use fred::coordinator::config::FabricKind;
+use fred::coordinator::eval::{point_to_json, Evaluator};
+use fred::coordinator::memory::{MemPolicy, Recompute};
+use fred::coordinator::parallelism::Strategy;
+use fred::coordinator::placement::Placement;
+use fred::coordinator::search::{run_search, SearchAlgo, SearchBudget, SearchConfig};
+use fred::coordinator::stagegraph::PipeSchedule;
+use fred::coordinator::sweep::{
+    enumerate_specs, factorizations, run_sweep, SweepConfig, WaferDims,
+};
+use fred::coordinator::workload;
+use fred::util::prng::Xorshift64;
+
+/// A diverse-but-small space (64 specs): two workloads spanning both
+/// execution modes, explicit strategies, two fabrics, two schedules,
+/// and the recompute axis.
+fn search_cfg() -> SweepConfig {
+    SweepConfig {
+        workloads: vec![workload::resnet152(), workload::gpt3()],
+        wafers: vec![WaferDims::PAPER],
+        fabrics: vec![FabricKind::FredA, FabricKind::FredD],
+        strategies: Some(vec![
+            Strategy::new(1, 20, 1),
+            Strategy::new(2, 5, 2),
+            Strategy::new(4, 5, 1),
+            Strategy::new(2, 10, 1),
+        ]),
+        schedules: vec![PipeSchedule::GPipe, PipeSchedule::OneF1B],
+        recomputes: vec![Recompute::Off, Recompute::Full],
+        threads: 1,
+        ..SweepConfig::default()
+    }
+}
+
+/// Best feasible per-sample time of a finished search (ranking key).
+fn best_per_sample(result: &fred::coordinator::search::SearchResult) -> f64 {
+    result
+        .best()
+        .and_then(|p| p.outcome.as_ref().ok())
+        .map(|m| m.per_sample)
+        .unwrap_or(f64::INFINITY)
+}
+
+#[test]
+fn search_documents_are_byte_identical_at_any_thread_count() {
+    for algo in [SearchAlgo::Anneal, SearchAlgo::Evolve] {
+        let scfg = SearchConfig {
+            algo,
+            seed: 42,
+            budget: SearchBudget::Points(12),
+            ..SearchConfig::default()
+        };
+        let docs: Vec<String> = [1usize, 3]
+            .iter()
+            .map(|&threads| {
+                let cfg = SweepConfig { threads, ..search_cfg() };
+                run_search(&cfg, &scfg).to_json(&scfg).render()
+            })
+            .collect();
+        assert_eq!(
+            docs[0], docs[1],
+            "{algo:?} search must price the same points in the same order \
+             regardless of --threads"
+        );
+    }
+}
+
+#[test]
+fn rerunning_the_same_seed_reproduces_the_document() {
+    let cfg = search_cfg();
+    let scfg = SearchConfig {
+        seed: 7,
+        budget: SearchBudget::Points(10),
+        ..SearchConfig::default()
+    };
+    let a = run_search(&cfg, &scfg).to_json(&scfg).render();
+    let b = run_search(&cfg, &scfg).to_json(&scfg).render();
+    assert_eq!(a, b, "re-running with the same seed must reproduce the document");
+}
+
+#[test]
+fn full_budget_reproduces_the_exhaustive_sweep_point_for_point() {
+    // Under --mem rank the ranking interleaves feasible, memory-
+    // infeasible, and (potentially) fluid-infeasible points — the full
+    // three-tier order must still match the sweep's exactly.
+    let cfg = SweepConfig { mem: MemPolicy::Rank, ..search_cfg() };
+    let scfg = SearchConfig { budget: SearchBudget::Full, ..SearchConfig::default() };
+    let result = run_search(&cfg, &scfg);
+    assert_eq!(result.priced, result.space, "--budget full must price every spec");
+    assert_eq!(result.pruned, 0, "--budget full must not prune");
+    let sweep = run_sweep(&cfg);
+    let a: Vec<String> = sweep.points.iter().map(|p| point_to_json(p).render()).collect();
+    let b: Vec<String> =
+        result.report.points.iter().map(|p| point_to_json(p).render()).collect();
+    assert_eq!(a, b, "full-budget search must rank the sweep's exact points");
+}
+
+#[test]
+fn growing_the_budget_never_loses_the_best_point_found() {
+    // The proposal stream does not depend on the budget, so a longer
+    // walk prices a superset (a prefix extension) of a shorter one —
+    // the incumbent can only improve.
+    let cfg = search_cfg();
+    for algo in [SearchAlgo::Anneal, SearchAlgo::Evolve] {
+        let mut prev = f64::INFINITY;
+        for budget in [2usize, 4, 8, 16, 32] {
+            let scfg = SearchConfig {
+                algo,
+                seed: 7,
+                budget: SearchBudget::Points(budget),
+                ..SearchConfig::default()
+            };
+            let best = best_per_sample(&run_search(&cfg, &scfg));
+            assert!(
+                best <= prev,
+                "{algo:?} best worsened from {prev} to {best} when the budget \
+                 grew to {budget}"
+            );
+            prev = best;
+        }
+    }
+}
+
+#[test]
+fn pruned_specs_never_beat_the_final_best() {
+    // A spec discarded by the memory or analytic-floor bound, when
+    // priced in full after all, must not rank ahead of the returned
+    // best: an infeasible outcome ranks below every feasible point by
+    // construction, and a feasible price is >= the floor that pruned it,
+    // which was already above the incumbent (which only improves).
+    let cfg = SweepConfig { mem: MemPolicy::Rank, ..search_cfg() };
+    for algo in [SearchAlgo::Anneal, SearchAlgo::Evolve] {
+        let scfg = SearchConfig {
+            algo,
+            seed: 3,
+            budget: SearchBudget::Points(20),
+            ..SearchConfig::default()
+        };
+        let result = run_search(&cfg, &scfg);
+        let best = best_per_sample(&result);
+        if !best.is_finite() {
+            continue;
+        }
+        let ev = Evaluator::new(&cfg);
+        for spec in &result.pruned_specs {
+            if let Ok(m) = &ev.evaluate(spec).outcome {
+                assert!(
+                    m.per_sample >= best * (1.0 - 1e-9),
+                    "{algo:?} pruned a spec that prices at {} < best {best}",
+                    m.per_sample
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn the_analytic_floor_never_exceeds_the_priced_time() {
+    // Soundness of the floor-pruning bound across both execution modes,
+    // both schedules, and the recompute axis: the serial bottleneck-
+    // stage compute is a lower bound on the full timeline price.
+    let cfg = search_cfg();
+    let (specs, _) = enumerate_specs(&cfg);
+    assert!(!specs.is_empty());
+    let ev = Evaluator::new(&cfg);
+    for spec in &specs {
+        let bounds = ev.bounds(spec);
+        if let Ok(m) = &ev.evaluate(spec).outcome {
+            assert!(
+                bounds.floor_per_sample <= m.per_sample * (1.0 + 1e-9),
+                "floor {} above priced {} for {spec:?}",
+                bounds.floor_per_sample,
+                m.per_sample
+            );
+        }
+    }
+}
+
+#[test]
+fn random_placements_are_valid_permutations_for_every_strategy_shape() {
+    // `Placement::random` feeds the search's placement-refinement loop
+    // with arbitrary strategy shapes (including primes and mp=dp=pp=1),
+    // on fleets both exactly-sized and over-provisioned: every draw must
+    // be an injective map into [0, n_npus) covering every worker.
+    let mut rng = Xorshift64::new(0xFACE);
+    for n in [1usize, 7, 20, 24, 64] {
+        for s in factorizations(n) {
+            for extra in [0usize, 5] {
+                let n_npus = n + extra;
+                for _ in 0..4 {
+                    let p = Placement::random(&s, n_npus, &mut rng);
+                    assert_eq!(p.len(), n, "placement for {s} must place every worker");
+                    assert!(
+                        p.is_valid(n_npus),
+                        "random placement for {s} on {n_npus} NPUs is not injective \
+                         into the fleet"
+                    );
+                }
+            }
+        }
+    }
+}

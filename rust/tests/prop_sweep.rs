@@ -168,7 +168,7 @@ fn thread_count_never_changes_sweep_output() {
     for r in &renders[1..] {
         assert_eq!(&renders[0], r, "sweep output must be thread-count invariant");
     }
-    assert!(renders[0].contains("\"schema_version\":7"));
+    assert!(renders[0].contains("\"schema_version\":8"));
 }
 
 #[test]

@@ -267,7 +267,7 @@ fn sweep_out_file_is_golden_against_stdout() {
     assert_eq!(file, stdout, "--out file must match --json stdout byte for byte");
     let doc = Json::parse(String::from_utf8(file).expect("utf8").trim())
         .expect("--out file is valid JSON");
-    assert_eq!(doc.get("schema_version").and_then(Json::as_usize), Some(7));
+    assert_eq!(doc.get("schema_version").and_then(Json::as_usize), Some(8));
     let points = doc.get("points").unwrap().as_arr().unwrap();
     assert_eq!(points.len(), 3, "3 strategies x 1 fabric x 1 fleet size");
     for p in points {
@@ -278,16 +278,17 @@ fn sweep_out_file_is_golden_against_stdout() {
 }
 
 #[test]
-fn schema_v7_signals_v6_consumers_instead_of_silently_misparsing() {
-    // A well-behaved v6 consumer checks `schema_version` before reading
-    // points (it may key points on the v6 field set, which two v7 points
-    // can now share while differing only in their `zero`/`recompute`
-    // memory knobs — a semantic change that forces the bump). The v7
-    // document must (a) carry the version as a plain number a v6 guard
-    // can compare against, and (b) still contain every v2, v3, v4, v5,
-    // *and* v6 point field under its old name, so a consumer that
-    // ignores the version reads consistent values rather than garbage —
-    // the new fields are additive.
+fn schema_v8_signals_v7_consumers_instead_of_silently_misparsing() {
+    // A well-behaved v7 consumer checks `schema_version` before reading
+    // the envelope (v8 documents may carry the additive `search`
+    // metadata key that `fred search` emits, and the spec fingerprint
+    // feeding the point cache changed with the evaluation-facade
+    // redesign — a compatibility boundary that forces the bump). The v8
+    // document must (a) carry the version as a plain number an old
+    // guard can compare against, and (b) still contain every v2..v7
+    // point field under its old name, so a consumer that ignores the
+    // version reads consistent values rather than garbage — the new
+    // fields are additive.
     let json = run_sweep_json(&[
         "--models",
         "resnet152",
@@ -302,9 +303,9 @@ fn schema_v7_signals_v6_consumers_instead_of_silently_misparsing() {
         .get("schema_version")
         .and_then(Json::as_f64)
         .expect("version field must be a plain number");
-    assert_eq!(version, 7.0);
+    assert_eq!(version, 8.0);
+    assert_ne!(version, 7.0, "a v7 guard comparing against 7 must reject this doc");
     assert_ne!(version, 6.0, "a v6 guard comparing against 6 must reject this doc");
-    assert_ne!(version, 5.0, "a v5 guard comparing against 5 must reject this doc");
     const V2_POINT_FIELDS: [&str; 13] = [
         "workload",
         "wafer",
@@ -749,7 +750,7 @@ fn sweep_cli_scales_to_sixteen_wafer_fleets() {
         "--max-strategies",
         "2",
     ]);
-    assert_eq!(json.get("schema_version").and_then(Json::as_usize), Some(7));
+    assert_eq!(json.get("schema_version").and_then(Json::as_usize), Some(8));
     let points = json.get("points").unwrap().as_arr().unwrap();
     assert_eq!(points.len(), 10, "2 strategies x 5 fleet sizes");
     let mut fleets: Vec<usize> = points
