@@ -212,6 +212,35 @@ target/release/fred merge /tmp/shard_0.json /tmp/shard_1.json > /tmp/shard_merge
 cmp /tmp/shard_all.json /tmp/shard_merged.json
 rm -f /tmp/shard_all.json /tmp/shard_0.json /tmp/shard_1.json /tmp/shard_merged.json
 
+echo "== phase-cache smoke (--phase-cache off byte-identical, nonzero hit rate) =="
+# The collective-time table end to end: hits replay the exact f64 a fresh
+# fluid solve would produce, so the memoized default must render the same
+# stdout document as --phase-cache off — at 1 worker and at 4, where the
+# table is shared across the work-stealing threads. A multi-schedule
+# sweep re-prices the same phases constantly, so the per-tier stderr
+# stats (next to the point-cache line) must show a nonzero hit count;
+# the off run must not report table stats at all.
+PC_ARGS=(--wafers 1,2 --models resnet152 --max-strategies 4 \
+    --span dp,pp --schedule gpipe,1f1b,zb --zero 0,1 --json)
+for t in 1 4; do
+    target/release/fred sweep "${PC_ARGS[@]}" --threads "$t" \
+        > "/tmp/pc_on_t$t.json" 2> "/tmp/pc_on_t$t.err"
+    target/release/fred sweep "${PC_ARGS[@]}" --threads "$t" --phase-cache off \
+        > "/tmp/pc_off_t$t.json" 2> "/tmp/pc_off_t$t.err"
+    cmp "/tmp/pc_on_t$t.json" "/tmp/pc_off_t$t.json"
+    grep -q 'sweep phase-cache: ' "/tmp/pc_on_t$t.err"
+    if grep -q 'sweep phase-cache: 0 hits' "/tmp/pc_on_t$t.err"; then
+        echo "threads $t: multi-schedule sweep must hit the collective-time table" >&2
+        exit 1
+    fi
+    if grep -q 'sweep phase-cache' "/tmp/pc_off_t$t.err"; then
+        echo "threads $t: --phase-cache off must not report table stats" >&2
+        exit 1
+    fi
+done
+rm -f /tmp/pc_on_t1.json /tmp/pc_on_t4.json /tmp/pc_off_t1.json /tmp/pc_off_t4.json \
+    /tmp/pc_on_t1.err /tmp/pc_on_t4.err /tmp/pc_off_t1.err /tmp/pc_off_t4.err
+
 echo "== search smoke (seeded run, schema v8 envelope + search metadata) =="
 # The optimizer end to end through the real binary: a seeded budgeted
 # run, --out byte-identical to --json stdout, the sweep envelope plus
@@ -289,9 +318,10 @@ for bad in "--algo genetic" "--budget 0" "--budget many" "--seed -1" \
 done
 
 echo "== throughput-flag error paths (exit 2, not silence) =="
-# Bad shard specs and --resume without --out must fail loudly.
+# Bad shard specs, --resume without --out, and unknown --phase-cache
+# values must fail loudly.
 for bad in "--shard 2/2" "--shard 3/2" "--shard x/2" "--shard 1/0" \
-    "--shard 2" "--resume"; do
+    "--shard 2" "--resume" "--phase-cache maybe"; do
     # shellcheck disable=SC2086
     if target/release/fred sweep --models resnet152 --strategies 1,20,1 $bad \
         --json > /dev/null 2>&1; then

@@ -11,8 +11,9 @@
 //! the second section compares a forced single-thread run against the
 //! auto thread count on the same (multi-wafer) cross-product and asserts
 //! the outputs are byte-identical — the determinism contract of
-//! `run_sweep`. (The `FRED_SWEEP_THREADS` env var overrides both sides;
-//! unset it for meaningful speedup numbers.)
+//! `run_sweep`. (Both sides pin `threads` explicitly, which takes
+//! precedence over the deprecated `FRED_SWEEP_THREADS` env var — the
+//! env is honored only when no explicit count is set.)
 //!
 //! Run: `cargo bench --bench bench_sweep`
 
@@ -21,7 +22,9 @@ use fred::coordinator::memory::{MemPolicy, Recompute, ZeroStage};
 use fred::coordinator::parallelism::WaferSpan;
 use fred::coordinator::search::{run_search, SearchAlgo, SearchBudget, SearchConfig};
 use fred::coordinator::stagegraph::PipeSchedule;
-use fred::coordinator::sweep::{factorizations, run_sweep, SweepConfig, WaferDims};
+use fred::coordinator::sweep::{
+    factorizations, run_sweep, run_sweep_with, SweepConfig, SweepOptions, WaferDims,
+};
 use fred::coordinator::timeline::OverlapMode;
 use fred::coordinator::workload;
 use fred::fabric::egress::EgressTopo;
@@ -301,7 +304,7 @@ fn main() {
     ]);
     t.print();
     println!(
-        "speedup: {:.2}x (outputs byte-identical; FRED_SWEEP_THREADS overrides both)",
+        "speedup: {:.2}x (outputs byte-identical; both sides pin --threads, which wins over FRED_SWEEP_THREADS)",
         dt_seq / dt_par
     );
 
@@ -321,6 +324,97 @@ fn main() {
             ("points_per_s", Json::Num(n as f64 / wall)),
         ]));
     }
+
+    // ------------------------------------------------ phase-cache
+    // The collective-time table in one number: a fluid-heavy
+    // multi-schedule cross-product (stage-graph schedules x ZeRO stages
+    // on a 4-wafer PP span) re-prices the same DP/MP/egress phases over
+    // and over — ZeRO never changes pricing and the schedules share the
+    // per-round collectives — so the memoized run should clear the
+    // cold run by >= 1.5x points/s. Byte-identity between the two runs
+    // is asserted here too: hits replay the exact f64 the solver would
+    // produce, so `--phase-cache off` is a pure de-optimization.
+    println!("\n=== §Perf: collective-time table (phase-cache off vs on) ===");
+    let mut pc = cfg(
+        vec![workload::transformer_17b()],
+        vec![WaferDims::PAPER],
+        vec![FabricKind::FredD],
+        6,
+    );
+    pc.wafer_counts = vec![4];
+    pc.wafer_spans = vec![WaferSpan::Pp];
+    pc.schedules = PipeSchedule::all().to_vec();
+    pc.zeros = ZeroStage::all().to_vec();
+    pc.mem = MemPolicy::Rank;
+
+    let mut cold_cfg = pc.clone();
+    cold_cfg.phase_cache = false;
+    let t0 = Instant::now();
+    let cold = run_sweep_with(&cold_cfg, &mut SweepOptions::default());
+    let dt_cold = t0.elapsed().as_secs_f64();
+
+    let mut warm_cfg = pc.clone();
+    warm_cfg.phase_cache = true;
+    let t0 = Instant::now();
+    let warm = run_sweep_with(&warm_cfg, &mut SweepOptions::default());
+    let dt_warm = t0.elapsed().as_secs_f64();
+
+    let n_pc = cold.report.points.len();
+    assert_eq!(n_pc, warm.report.points.len());
+    assert_eq!(
+        cold.report.to_json().render(),
+        warm.report.to_json().render(),
+        "phase-cache on must be byte-identical to off"
+    );
+    assert!(cold.stats.phase.is_none(), "cold run must not build a table");
+    let phase = warm.stats.phase.expect("warm run records phase-cache stats");
+    let hit_rate = phase.hit_rate();
+
+    let mut pt = Table::new(&["phase cache", "points", "wall", "points/s", "hit rate"]);
+    pt.row(&[
+        "off (cold)".into(),
+        n_pc.to_string(),
+        format!("{dt_cold:.2} s"),
+        format!("{:.1}", n_pc as f64 / dt_cold),
+        "-".into(),
+    ]);
+    pt.row(&[
+        "on (warm)".into(),
+        n_pc.to_string(),
+        format!("{dt_warm:.2} s"),
+        format!("{:.1}", n_pc as f64 / dt_warm),
+        format!("{:.1}%", hit_rate * 100.0),
+    ]);
+    pt.print();
+    println!(
+        "phase-cache speedup: {:.2}x ({} hits / {} misses)",
+        dt_cold / dt_warm,
+        phase.total_hits(),
+        phase.total_misses()
+    );
+
+    let feasible_pc = cold.report.points.iter().filter(|p| p.outcome.is_ok()).count();
+    json_cases.push(Json::obj(vec![
+        ("name", Json::Str("phase-cache | cold (off)".to_string())),
+        ("points", Json::Num(n_pc as f64)),
+        ("feasible", Json::Num(feasible_pc as f64)),
+        ("wall_s", Json::Num(dt_cold)),
+        ("points_per_s", Json::Num(n_pc as f64 / dt_cold)),
+    ]));
+    json_cases.push(Json::obj(vec![
+        ("name", Json::Str("phase-cache | warm (on)".to_string())),
+        ("points", Json::Num(n_pc as f64)),
+        ("feasible", Json::Num(feasible_pc as f64)),
+        ("wall_s", Json::Num(dt_warm)),
+        ("points_per_s", Json::Num(n_pc as f64 / dt_warm)),
+        ("phase_hit_rate", Json::Num(hit_rate)),
+        ("phase_hits", Json::Num(phase.total_hits() as f64)),
+        ("phase_misses", Json::Num(phase.total_misses() as f64)),
+    ]));
+    assert!(
+        phase.total_hits() > 0,
+        "multi-schedule sweep must hit the collective-time table"
+    );
 
     // ---------------------------------------------- search efficiency
     // The optimizer's value proposition in one number: how many points

@@ -8,6 +8,7 @@ use crate::coordinator::{
     stagegraph::PipeSchedule, sweep, sweep::SweepConfig, sweep::WaferDims,
     timeline::OverlapMode, workload::Workload,
 };
+use crate::fabric::colltable::{CollStats, CollTier};
 use crate::fabric::egress::EgressTopo;
 use crate::fabric::fred::hw_model::HwOverhead;
 use crate::fabric::fred::{route_flows, Flow};
@@ -61,7 +62,7 @@ COMMANDS:
                [--schedule gpipe,1f1b,interleaved,zb] [--vstages N]
                [--zero 0,1,2] [--recompute off,full] [--mem off|rank|prune]
                [--threads N] [--top N] [--bytes N] [--json] [--out FILE]
-               [--shard I/N] [--resume] [--cache FILE]
+               [--shard I/N] [--resume] [--cache FILE] [--phase-cache on|off]
                Strategy/topology sweep engine: enumerates fabric x wafer
                shape x fleet size x MP/DP/PP factorization x workload,
                runs each point end to end, and ranks by per-sample
@@ -70,9 +71,10 @@ COMMANDS:
                JSON document to FILE). Points are evaluated on --threads
                workers (default: one per core) with output identical at
                any thread count. The FRED_SWEEP_THREADS env var is
-               deprecated in favor of --threads: it still takes
-               precedence this release (with a one-time stderr warning)
-               and will be removed in the next.
+               deprecated in favor of --threads: an explicit --threads
+               now takes precedence, the env var is honored (with a
+               one-time stderr warning) only when the flag is absent,
+               and it will be removed in the next release.
                Defaults: t17b on one 5x4 paper wafer, all five fabrics,
                auto strategies (subsumes the paper's Fig. 2 sweep).
 
@@ -260,10 +262,23 @@ COMMANDS:
                                rewritten after each run; files from an
                                older schema version are dropped, not
                                replayed.
+                 --phase-cache on|off
+                               memoize fluid-priced phase times in a
+                               shared collective-time table (default
+                               on). Identical collectives — same fabric
+                               pair, kind, group pattern, payload —
+                               recur within a point, across points, and
+                               across worker threads; hits replay the
+                               exact solver result, so `off` produces
+                               byte-identical output and exists for
+                               debugging/timing the solver itself.
                Reuse statistics go to stderr (`sweep resume: reused R of
-               T points, priced P`; `sweep cache: N hits, M misses`);
-               stdout stays byte-identical to a fresh run in both table
-               and --json modes. `cargo bench --bench bench_sweep`
+               T points, priced P`; `sweep cache: N hits, M misses`;
+               `sweep phase-cache: N hits, M misses (onwafer A/B,
+               egress C/D, p2p E/F)` — per-tier hits/misses of the
+               collective-time table); stdout stays byte-identical to a
+               fresh run in both table and --json modes.
+               `cargo bench --bench bench_sweep`
                tracks sweep throughput (points/s) in BENCH_sweep.json,
                and `fred perfgate` turns two of those files into a CI
                trajectory gate.
@@ -331,10 +346,11 @@ COMMANDS:
                plus a `search` metadata object: `space`, `visited`,
                `priced`, `pruned`, `kept`, the `best_trajectory`
                (per-sample seconds after each improving point), and
-               `placement`. --threads behaves exactly as in `sweep`
-               (FRED_SWEEP_THREADS is deprecated but still wins this
-               release); exploration counters go to stderr so --json
-               stdout stays a clean document.
+               `placement`. --threads and --phase-cache behave exactly
+               as in `sweep` (FRED_SWEEP_THREADS is deprecated: an
+               explicit --threads wins, and the env var will be removed
+               next release); exploration counters go to stderr so
+               --json stdout stays a clean document.
                Example: fred search --models gpt3 --wafers 1,2,4
                         --fabrics fred-d,fred-a --span dp,pp,2x2
                         --schedule gpipe,1f1b,zb --zero 0,1,2
@@ -795,6 +811,16 @@ fn parse_sweep_config(opts: &Opts) -> Result<SweepConfig, i32> {
             }
         },
     };
+    // Collective-time table: --phase-cache on|off (default on; `off` is
+    // byte-identical — it only re-solves what a hit would replay).
+    let phase_cache = match opts.get("phase-cache") {
+        None | Some("on") => true,
+        Some("off") => false,
+        Some(t) => {
+            eprintln!("bad --phase-cache `{t}` (on, off)");
+            return Err(2);
+        }
+    };
 
     Ok(SweepConfig {
         workloads,
@@ -816,7 +842,23 @@ fn parse_sweep_config(opts: &Opts) -> Result<SweepConfig, i32> {
         max_strategies,
         bench_bytes,
         threads,
+        phase_cache,
     })
+}
+
+/// One stderr line of collective-time-table counters, shared by
+/// `fred sweep` and `fred search`:
+/// `N hits, M misses (onwafer A/B, egress C/D, p2p E/F)`.
+fn phase_stats_line(s: &CollStats) -> String {
+    let tier = |t: CollTier| (s.hits[t as usize], s.misses[t as usize]);
+    let (oh, om) = tier(CollTier::OnWafer);
+    let (eh, em) = tier(CollTier::Egress);
+    let (ph, pm) = tier(CollTier::P2p);
+    format!(
+        "{} hits, {} misses (onwafer {oh}/{om}, egress {eh}/{em}, p2p {ph}/{pm})",
+        s.total_hits(),
+        s.total_misses()
+    )
 }
 
 fn cmd_sweep(opts: &Opts) -> i32 {
@@ -909,6 +951,9 @@ fn cmd_sweep(opts: &Opts) -> i32 {
             eprintln!("{e}");
             return 2;
         }
+    }
+    if let Some(phase) = &stats.phase {
+        eprintln!("sweep phase-cache: {}", phase_stats_line(phase));
     }
 
     // --out FILE: the same JSON document that --json prints, newline-
@@ -1036,6 +1081,9 @@ fn cmd_search(opts: &Opts) -> i32 {
         "search: {} of {} specs priced ({} proposals visited, {} pruned by bounds)",
         result.priced, result.space, result.visited, result.pruned
     );
+    if let Some(phase) = &result.phase {
+        eprintln!("search phase-cache: {}", phase_stats_line(phase));
+    }
 
     if let Some(path) = opts.get("out") {
         if let Err(e) = std::fs::write(path, format!("{json_text}\n")) {

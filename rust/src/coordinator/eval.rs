@@ -42,6 +42,7 @@ use super::stagegraph::PipeSchedule;
 use super::sweep::{SweepConfig, WaferDims, SCHEMA_VERSION};
 use super::timeline::OverlapMode;
 use super::workload::{ExecMode, Workload};
+use crate::fabric::colltable::{CollStats, CollTable};
 use crate::fabric::egress::EgressTopo;
 use crate::fabric::mesh::Mesh2D;
 use crate::fabric::scaleout::ScaleOut;
@@ -49,7 +50,7 @@ use crate::fabric::topology::Fabric;
 use crate::runtime::json::Json;
 use std::borrow::Cow;
 use std::collections::HashMap;
-use std::sync::RwLock;
+use std::sync::{Arc, RwLock};
 
 /// Metrics of one feasible sweep point.
 #[derive(Debug, Clone)]
@@ -541,6 +542,13 @@ pub struct Evaluator<'c> {
     cfg: &'c SweepConfig,
     canons: Vec<String>,
     protos: RwLock<ProtoCache>,
+    /// Shared collective-time table ([`crate::fabric::colltable`]),
+    /// attached to every simulator this evaluator builds so fluid
+    /// solves are reused within a point, across points, and across
+    /// `evaluate_all` workers. `None` (`--phase-cache off`) prices
+    /// every phase directly; either way the output is byte-identical
+    /// because hits replay the exact solver `f64`.
+    colltable: Option<Arc<CollTable>>,
 }
 
 impl<'c> Evaluator<'c> {
@@ -550,7 +558,14 @@ impl<'c> Evaluator<'c> {
             cfg,
             canons: cfg.workloads.iter().map(workload_canonical).collect(),
             protos: RwLock::new(ProtoCache::new()),
+            colltable: cfg.phase_cache.then(|| Arc::new(CollTable::new())),
         }
+    }
+
+    /// Hit/miss counters of the shared collective-time table, or `None`
+    /// when the phase cache is off.
+    pub fn phase_stats(&self) -> Option<CollStats> {
+        self.colltable.as_ref().map(|t| t.stats())
     }
 
     /// The config this evaluator prices under.
@@ -609,7 +624,7 @@ impl<'c> Evaluator<'c> {
         };
         let scale =
             ScaleOut::with_topo(spec.topo, spec.wafers, spec.xwafer_bw, spec.xwafer_latency);
-        Simulator::with_fabric_shared(
+        let mut sim = Simulator::with_fabric_shared(
             spec.kind,
             proto,
             mesh_proto,
@@ -620,7 +635,11 @@ impl<'c> Evaluator<'c> {
         .with_span(spec.span)
         .with_overlap(spec.overlap)
         .with_schedule(spec.schedule, spec.vstages)
-        .with_memory(spec.zero, spec.recompute)
+        .with_memory(spec.zero, spec.recompute);
+        if let Some(table) = &self.colltable {
+            sim = sim.with_phase_table(Arc::clone(table));
+        }
+        sim
     }
 
     /// Price one spec into a [`SweepPoint`]. Pure: the same spec under

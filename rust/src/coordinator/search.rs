@@ -192,6 +192,9 @@ pub struct SearchResult {
     /// Inner placement-loop summary for the best point (when
     /// [`SearchConfig::placements`] > 0 and a feasible best exists).
     pub placement: Option<PlacementSummary>,
+    /// Hit/miss counters of the shared collective-time table; `None`
+    /// when the phase cache is off (or the space was empty).
+    pub phase: Option<crate::fabric::colltable::CollStats>,
 }
 
 impl SearchResult {
@@ -785,6 +788,7 @@ pub fn run_search(cfg: &SweepConfig, scfg: &SearchConfig) -> SearchResult {
             pruned_specs: Vec::new(),
             trajectory: Vec::new(),
             placement: None,
+            phase: None,
         };
     }
     let space = SearchSpace::new(cfg, specs);
@@ -842,6 +846,7 @@ pub fn run_search(cfg: &SweepConfig, scfg: &SearchConfig) -> SearchResult {
         pruned_specs: ex.pruned_specs,
         trajectory: ex.trajectory,
         placement,
+        phase: evaluator.phase_stats(),
     }
 }
 

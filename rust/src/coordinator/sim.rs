@@ -46,12 +46,14 @@ use super::schedule;
 use super::stagegraph::{self, PipeSchedule, StageCosts};
 use super::timeline::{Bucket, OverlapMode, Resource, Step, Timeline};
 use super::workload::{ExecMode, Workload};
-use crate::fabric::egress::{onwafer_phase_time, P2pFlow};
+use crate::fabric::colltable::{onwafer_phase_time_memo, CollHandle, CollTable};
+use crate::fabric::egress::P2pFlow;
 use crate::fabric::fluid::FluidError;
 use crate::fabric::mesh::Mesh2D;
 use crate::fabric::scaleout::ScaleOut;
 use crate::fabric::topology::{CollectiveKind, Fabric, IoDirection};
 use std::borrow::Cow;
+use std::sync::Arc;
 
 /// A workload+strategy+fabric simulation context.
 ///
@@ -95,6 +97,11 @@ pub struct Simulator<'w> {
     /// the activation footprint to boundary tensors and prices the
     /// extra forward-recompute work into the timeline.
     recompute: Recompute,
+    /// Handle on the shared collective-time table
+    /// ([`crate::fabric::colltable`]); `None` prices every phase
+    /// directly. Hits replay the exact `f64` a direct solve would
+    /// produce, so attaching a table never changes any output bit.
+    phase_memo: Option<CollHandle>,
 }
 
 impl<'w> Simulator<'w> {
@@ -153,6 +160,7 @@ impl<'w> Simulator<'w> {
             vstages: 1,
             zero: ZeroStage::Z0,
             recompute: Recompute::Off,
+            phase_memo: None,
         }
     }
 
@@ -181,6 +189,24 @@ impl<'w> Simulator<'w> {
             scaleout.wafers()
         );
         self.scaleout = scaleout;
+        if let Some(h) = &self.phase_memo {
+            self.phase_memo = Some(h.rebind(self.fabric.as_ref(), self.scaleout.fabric()));
+        }
+        self
+    }
+
+    /// Attach a shared collective-time table: every fluid-priced phase
+    /// (on-wafer rounds, egress All-Reduces, boundary p2p stages) is
+    /// memoized in `table` keyed by a canonical fingerprint of the
+    /// fabric pair, the collective, the group pattern, and the payload.
+    /// Hits replay the exact solver `f64`, so pricing with a table is
+    /// byte-identical to pricing without one — the table only removes
+    /// redundant solves (within this simulator, and across simulators
+    /// sharing the `Arc`). Safe in any builder order: a later
+    /// [`Self::with_scaleout`] rebinds the handle.
+    pub fn with_phase_table(mut self, table: Arc<CollTable>) -> Self {
+        self.phase_memo =
+            Some(CollHandle::new(table, self.fabric.as_ref(), self.scaleout.fabric()));
         self
     }
 
@@ -339,9 +365,11 @@ impl<'w> Simulator<'w> {
     // ------------------------------------------------------ comm phases
 
     /// Time for one concurrent round of collectives over logical groups,
-    /// via the shared on-wafer phase pricer ([`onwafer_phase_time`]) so
-    /// this and [`ScaleOut::hierarchical_allreduce`] price phases
-    /// identically by construction.
+    /// via the shared on-wafer phase pricer
+    /// ([`crate::fabric::egress::onwafer_phase_time`], memoized through
+    /// the attached collective-time table when present) so this and
+    /// [`ScaleOut::hierarchical_allreduce`] price phases identically by
+    /// construction.
     fn try_phase_time(
         &self,
         groups: &[Vec<usize>],
@@ -349,7 +377,7 @@ impl<'w> Simulator<'w> {
         bytes: f64,
     ) -> Result<f64, FluidError> {
         let mapped: Vec<Vec<usize>> = groups.iter().map(|g| self.placement.map(g)).collect();
-        onwafer_phase_time(self.fabric.as_ref(), kind, &mapped, bytes)
+        onwafer_phase_time_memo(self.fabric.as_ref(), kind, &mapped, bytes, self.phase_memo.as_ref())
     }
 
     /// One concurrent MP All-Reduce round on `bytes` per worker.
@@ -385,8 +413,12 @@ impl<'w> Simulator<'w> {
             .iter()
             .map(|g| self.placement.map(g))
             .collect();
-        self.scaleout
-            .hierarchical_allreduce(self.fabric.as_ref(), &groups, bytes)
+        self.scaleout.hierarchical_allreduce_memo(
+            self.fabric.as_ref(),
+            &groups,
+            bytes,
+            self.phase_memo.as_ref(),
+        )
     }
 
     /// One concurrent DP All-Reduce round on `bytes` per worker.
@@ -432,11 +464,12 @@ impl<'w> Simulator<'w> {
             .iter()
             .map(|g| self.placement.map(g))
             .collect();
-        let round = self.scaleout.hierarchical_allreduce_grouped_phases(
+        let round = self.scaleout.hierarchical_allreduce_grouped_phases_memo(
             self.fabric.as_ref(),
             &groups,
             bytes,
             &wafer_groups,
+            self.phase_memo.as_ref(),
         )?;
         Ok(if round.fused {
             vec![(Resource::OnWafer, round.rs)]
@@ -475,25 +508,27 @@ impl<'w> Simulator<'w> {
         if self.strategy.pp < 2 || bytes <= 0.0 {
             return Ok(0.0);
         }
-        let mut plans = Vec::new();
+        // Each boundary's multicast group is source NPU followed by the
+        // next stage's members; every group has >= 2 members, so the
+        // shared phase pricer plans exactly the transfer set this method
+        // always built (and the memo table can replay it).
+        let mut groups = Vec::new();
         for dp in 0..self.strategy.dp {
             for pp in 0..self.strategy.pp - 1 {
                 let src = self.strategy.stage_workers(dp, pp)[0];
                 let dests = self.strategy.stage_workers(dp, pp + 1);
                 let mut parts = vec![self.placement.npu(src)];
                 parts.extend(self.placement.map(&dests));
-                plans.push(self.fabric.plan_collective(
-                    CollectiveKind::Multicast,
-                    &parts,
-                    bytes,
-                ));
+                groups.push(parts);
             }
         }
-        Ok(self
-            .fabric
-            .try_run_concurrent(&plans)?
-            .into_iter()
-            .fold(0.0, f64::max))
+        onwafer_phase_time_memo(
+            self.fabric.as_ref(),
+            CollectiveKind::Multicast,
+            &groups,
+            bytes,
+            self.phase_memo.as_ref(),
+        )
     }
 
     /// The cross-wafer stage-boundary round under a span with a PP wafer
@@ -518,7 +553,7 @@ impl<'w> Simulator<'w> {
             .iter()
             .map(|&(src, dst)| P2pFlow::new(src, dst, replica_bytes))
             .collect();
-        self.scaleout.try_boundary_p2p(&flows)
+        self.scaleout.try_boundary_p2p_memo(&flows, self.phase_memo.as_ref())
     }
 
     // -------------------------------------------------------- iteration
@@ -975,7 +1010,7 @@ impl<'w> Simulator<'w> {
                     ));
                 }
             }
-            let t = self.scaleout.try_boundary_p2p(&flows)?;
+            let t = self.scaleout.try_boundary_p2p_memo(&flows, self.phase_memo.as_ref())?;
             tail.serial_comm(CommType::Pp, Resource::Egress, 2.0 * mb as f64 * t);
         }
         let dp_wafer_groups = self.span.dp_wafer_groups(wafers);
@@ -995,13 +1030,16 @@ impl<'w> Simulator<'w> {
             // busy interval; every other mode prices the one-shot
             // reduction fully exposed.
             let wafer_grad = w.params_bytes() / pp_factor as f64;
-            let serial_time =
-                self.scaleout.try_subgroup_allreduce(&dp_wafer_groups, wafer_grad)?;
+            let serial_time = self
+                .scaleout
+                .try_subgroup_allreduce_memo(&dp_wafer_groups, wafer_grad, self.phase_memo.as_ref())?;
             let buckets = if self.overlap == OverlapMode::Full {
                 let n = best_groups.max(1);
-                let chunk = self
-                    .scaleout
-                    .try_subgroup_allreduce(&dp_wafer_groups, wafer_grad / n as f64)?;
+                let chunk = self.scaleout.try_subgroup_allreduce_memo(
+                    &dp_wafer_groups,
+                    wafer_grad / n as f64,
+                    self.phase_memo.as_ref(),
+                )?;
                 vec![Bucket::single(Resource::Egress, chunk); n]
             } else {
                 Vec::new()

@@ -83,6 +83,7 @@ use super::pointcache::PointCache;
 use super::stagegraph::PipeSchedule;
 use super::timeline::OverlapMode;
 use super::workload::Workload;
+use crate::fabric::colltable::CollStats;
 use crate::fabric::egress::EgressTopo;
 use crate::fabric::scaleout::{DEFAULT_EGRESS_BW, DEFAULT_XWAFER_LATENCY};
 use crate::runtime::json::Json;
@@ -312,9 +313,16 @@ pub struct SweepConfig {
     /// Per-worker payload for the effective-bandwidth microbenchmark.
     pub bench_bytes: f64,
     /// Worker threads for point evaluation; 0 = auto (one per available
-    /// core). The `FRED_SWEEP_THREADS` environment variable overrides
-    /// either setting (see [`resolve_threads`]).
+    /// core). The deprecated `FRED_SWEEP_THREADS` environment variable
+    /// is honored only when no explicit count is requested (see
+    /// [`resolve_threads`]).
     pub threads: usize,
+    /// Memoize fluid-priced phase times in a shared collective-time
+    /// table ([`crate::fabric::colltable`]) reused within a point,
+    /// across points, and across worker threads (`--phase-cache`,
+    /// default on). Hits replay the exact solver `f64`, so `off` is
+    /// byte-identical — this knob trades memory for wall-clock only.
+    pub phase_cache: bool,
 }
 
 impl Default for SweepConfig {
@@ -339,22 +347,25 @@ impl Default for SweepConfig {
             max_strategies: 12,
             bench_bytes: 100e6,
             threads: 0,
+            phase_cache: true,
         }
     }
 }
 
-/// Effective worker-thread count for a sweep: the `FRED_SWEEP_THREADS`
-/// environment variable (when set to a positive integer) overrides
-/// everything, then an explicit `requested >= 1`, then one thread per
-/// available core. Thread count never changes sweep *output* — only
-/// wall-clock time.
+/// Effective worker-thread count for a sweep: an explicit
+/// `requested >= 1` (the `--threads` flag) wins, then the deprecated
+/// `FRED_SWEEP_THREADS` environment variable (when set to a positive
+/// integer), then one thread per available core. Thread count never
+/// changes sweep *output* — only wall-clock time.
 ///
 /// `FRED_SWEEP_THREADS` is deprecated in favor of `--threads` on both
-/// `fred sweep` and `fred search`: reading it emits a one-time stderr
-/// warning this release, and the override will be removed in the next.
-/// It still wins over `requested` until then so existing wrappers keep
-/// their semantics for one release.
+/// `fred sweep` and `fred search`: it is consulted only when no
+/// explicit count is requested, reading it emits a one-time stderr
+/// warning, and the variable will be removed in the next release.
 pub fn resolve_threads(requested: usize) -> usize {
+    if requested >= 1 {
+        return requested;
+    }
     if let Ok(v) = std::env::var("FRED_SWEEP_THREADS") {
         if let Ok(n) = v.trim().parse::<usize>() {
             if n >= 1 {
@@ -362,16 +373,14 @@ pub fn resolve_threads(requested: usize) -> usize {
                 DEPRECATED.call_once(|| {
                     eprintln!(
                         "warning: FRED_SWEEP_THREADS is deprecated; pass --threads to \
-                         `fred sweep` / `fred search` instead (the env var still takes \
-                         precedence this release and will be removed in the next)"
+                         `fred sweep` / `fred search` instead (an explicit --threads \
+                         now takes precedence, and the env var will be removed in the \
+                         next release)"
                     );
                 });
                 return n;
             }
         }
-    }
-    if requested >= 1 {
-        return requested;
     }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
@@ -574,6 +583,10 @@ pub struct SweepStats {
     pub cache_misses: usize,
     /// Points actually priced by [`eval_specs`] this run.
     pub priced: usize,
+    /// Hit/miss counters of the shared collective-time table
+    /// ([`crate::fabric::colltable`]); `None` when the phase cache is
+    /// off. Purely informational — the table never changes output.
+    pub phase: Option<CollStats>,
 }
 
 /// A completed sweep plus its executor statistics.
@@ -655,6 +668,7 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &mut SweepOptions) -> SweepRun {
         }
         slots[i] = Some(point);
     }
+    stats.phase = evaluator.phase_stats();
     let mut points: Vec<SweepPoint> =
         slots.into_iter().map(|s| s.expect("every slot filled")).collect();
     rank(&mut points);

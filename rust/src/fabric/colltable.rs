@@ -1,0 +1,545 @@
+//! Shared collective-time tables: memoized exact fluid-solver results.
+//!
+//! Every sweep/search point prices dozens of collective phases through
+//! the max-min-fair progressive-filling solver
+//! ([`FluidSim`](super::fluid::FluidSim)) — yet across the schedule ×
+//! overlap × microbatch × span axes most of those phases are *identical*
+//! (same fabric, same group pattern, same bytes) and were re-solved from
+//! scratch each time. [`CollTable`] is a thread-safe map from a
+//! canonical fingerprint of the solver's full input to the exact `f64`
+//! it produced, shared by every pricing entry point (the on-wafer phase
+//! pricer, the egress fabrics' collective/p2p methods, `ScaleOut`'s
+//! hierarchical rounds, and the simulator) and across the sweep
+//! executor's work-stealing workers — the LIBRA (arXiv 2109.11762) /
+//! WATOS (arXiv 2512.12279) style reusable collective-cost model.
+//!
+//! **Why exact-key replay is byte-identical by construction.** The
+//! solver is a deterministic pure function of (link graph, transfer
+//! set): a hit replays the bit pattern a miss computed for the *same*
+//! canonical inputs, so documents render identically with the table on
+//! or off (`--phase-cache on|off`, ci.sh `cmp` gates). The only
+//! canonicalization beyond identity is *order*: the outer group list of
+//! a collective round and the flow list of a p2p round are sorted into
+//! key order, which is sound because progressive filling is exactly
+//! permutation-invariant — within each bottleneck round all saturated
+//! users subtract the identical fair share (same-value f64 subtractions
+//! commute), the bottleneck link is selected by iterating links in
+//! *network* order (unaffected by transfer order), and the `dt = min` /
+//! `makespan = max` folds are order-invariant over the same multiset.
+//! Member order *within* a group is preserved verbatim: planners route
+//! ring successors by member position, so `[0,1,2]` and `[0,2,1]` are
+//! genuinely different collectives.
+//!
+//! Keying discipline: a fingerprint covers *everything* the priced time
+//! depends on — the fabric identity ([`Fabric::ident`] /
+//! [`EgressFabric::ident`], which must encode every constructor
+//! parameter, plus a digest of the link graph itself), the collective
+//! kind, the canonicalized pattern, and the payload's exact bit
+//! pattern. Only `Ok` results are stored; errors re-solve so a typed
+//! [`FluidError`] keeps its original message.
+
+use super::egress::{onwafer_phase_time, EgressFabric, P2pFlow};
+use super::fluid::FluidError;
+use super::topology::{CollectiveKind, Fabric, NpuId};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Lock shards (power of two): keys spread uniformly, so contention on
+/// the read-mostly map stays negligible at any worker count.
+const SHARDS: usize = 16;
+
+/// Streaming 128-bit FNV-1a — the same constants as
+/// `coordinator::pointcache::fnv1a128`, in incremental form so keys are
+/// built without intermediate allocations.
+#[derive(Debug, Clone, Copy)]
+struct Fnv128(u128);
+
+impl Fnv128 {
+    const OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+    const PRIME: u128 = 0x0000000001000000000000000000013b;
+
+    fn new() -> Self {
+        Self(Self::OFFSET)
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u128;
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    fn write_u8(&mut self, v: u8) {
+        self.write(&[v]);
+    }
+
+    fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    fn write_u128(&mut self, v: u128) {
+        self.write(&v.to_le_bytes());
+    }
+
+    fn finish(self) -> u128 {
+        self.0
+    }
+}
+
+/// Which pricing tier a lookup came from — the per-tier hit/miss
+/// breakdown surfaced on stderr next to the point-cache stats.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollTier {
+    /// On-wafer collective rounds ([`onwafer_phase_time_memo`]).
+    OnWafer = 0,
+    /// Cross-wafer egress collectives (fleet-wide and subgroup
+    /// All-Reduces).
+    Egress = 1,
+    /// Cross-wafer point-to-point stage flows.
+    P2p = 2,
+}
+
+/// Snapshot of a table's hit/miss counters, per tier.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CollStats {
+    /// Lookups answered from the table, indexed by [`CollTier`].
+    pub hits: [u64; 3],
+    /// Lookups that fell through to a fresh fluid solve.
+    pub misses: [u64; 3],
+}
+
+impl CollStats {
+    /// Total hits across all tiers.
+    pub fn total_hits(&self) -> u64 {
+        self.hits.iter().sum()
+    }
+
+    /// Total misses across all tiers.
+    pub fn total_misses(&self) -> u64 {
+        self.misses.iter().sum()
+    }
+
+    /// Hit fraction in `[0, 1]` (0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.total_hits() + self.total_misses();
+        if total == 0 {
+            0.0
+        } else {
+            self.total_hits() as f64 / total as f64
+        }
+    }
+}
+
+/// The shared, thread-safe collective-time table: a sharded read-mostly
+/// map from canonical fingerprint to the exact priced `f64`, plus
+/// per-tier hit/miss counters. One table hangs off the evaluator (next
+/// to the per-(kind, wafer) fabric prototypes) and is shared within a
+/// point, across points, and across work-stealing workers.
+#[derive(Debug)]
+pub struct CollTable {
+    shards: Vec<RwLock<HashMap<u128, f64>>>,
+    hits: [AtomicU64; 3],
+    misses: [AtomicU64; 3],
+}
+
+impl Default for CollTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CollTable {
+    /// An empty table.
+    pub fn new() -> Self {
+        Self {
+            shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            hits: Default::default(),
+            misses: Default::default(),
+        }
+    }
+
+    fn shard(&self, key: u128) -> &RwLock<HashMap<u128, f64>> {
+        &self.shards[(key as usize) & (SHARDS - 1)]
+    }
+
+    /// The stored time for `key`, counting the lookup under `tier`.
+    pub fn lookup(&self, tier: CollTier, key: u128) -> Option<f64> {
+        let got = self.shard(key).read().expect("colltable lock").get(&key).copied();
+        match got {
+            Some(v) => {
+                self.hits[tier as usize].fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            None => {
+                self.misses[tier as usize].fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Store a freshly solved time. Two workers racing on the same key
+    /// insert the same bit pattern (the solver is deterministic), so
+    /// last-write-wins is harmless.
+    pub fn insert(&self, key: u128, value: f64) {
+        self.shard(key).write().expect("colltable lock").insert(key, value);
+    }
+
+    /// Number of distinct solved phases stored.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().expect("colltable lock").len()).sum()
+    }
+
+    /// True when nothing is stored.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot the hit/miss counters.
+    pub fn stats(&self) -> CollStats {
+        let mut s = CollStats::default();
+        for i in 0..3 {
+            s.hits[i] = self.hits[i].load(Ordering::Relaxed);
+            s.misses[i] = self.misses[i].load(Ordering::Relaxed);
+        }
+        s
+    }
+}
+
+/// A per-simulator handle on a shared table: the fabric and egress
+/// fingerprints are computed once when the handle is attached (hashing
+/// link graphs per phase call would eat the win), then every phase key
+/// is a few FNV rounds over the pattern and payload.
+#[derive(Debug, Clone)]
+pub struct CollHandle {
+    table: Arc<CollTable>,
+    onwafer_fp: u128,
+    egress_fp: u128,
+}
+
+impl CollHandle {
+    /// Bind `table` to one (on-wafer fabric, egress fabric) pair.
+    pub fn new(table: Arc<CollTable>, fabric: &dyn Fabric, egress: &dyn EgressFabric) -> Self {
+        let onwafer_fp = fabric_fingerprint(fabric);
+        let egress_fp = egress_fingerprint(egress);
+        Self { table, onwafer_fp, egress_fp }
+    }
+
+    /// The shared table.
+    pub fn table(&self) -> &CollTable {
+        &self.table
+    }
+
+    /// Re-derive a handle over the same shared table against a different
+    /// (on-wafer fabric, egress fabric) pair — the builder-order seam:
+    /// a simulator that swaps its scale-out after the table is attached
+    /// rebinds instead of silently keying against the stale fabric.
+    pub fn rebind(&self, fabric: &dyn Fabric, egress: &dyn EgressFabric) -> Self {
+        Self::new(Arc::clone(&self.table), fabric, egress)
+    }
+
+    /// Fingerprint of the bound on-wafer fabric.
+    pub fn onwafer_fp(&self) -> u128 {
+        self.onwafer_fp
+    }
+
+    /// Fingerprint of the bound egress fabric.
+    pub fn egress_fp(&self) -> u128 {
+        self.egress_fp
+    }
+
+    /// Replay `key` or solve it with `compute` and store the `Ok`
+    /// result. Errors are never stored: a degenerate pattern re-solves
+    /// so its typed error keeps the original message.
+    pub fn memo(
+        &self,
+        tier: CollTier,
+        key: u128,
+        compute: impl FnOnce() -> Result<f64, FluidError>,
+    ) -> Result<f64, FluidError> {
+        if let Some(v) = self.table.lookup(tier, key) {
+            return Ok(v);
+        }
+        let v = compute()?;
+        self.table.insert(key, v);
+        Ok(v)
+    }
+}
+
+/// Fingerprint of an on-wafer fabric: its [`Fabric::ident`] string
+/// (every constructor parameter) plus a digest of the actual link graph
+/// — names are structural (`"n3->L1_0"`), so this second layer catches
+/// any identity an `ident` implementation forgets to encode.
+pub fn fabric_fingerprint(fabric: &dyn Fabric) -> u128 {
+    let mut h = Fnv128::new();
+    h.write(b"fabric|");
+    h.write(fabric.ident().as_bytes());
+    for link in fabric.sim().network().links() {
+        h.write_u8(0xfe);
+        h.write(link.name.as_bytes());
+        h.write_u64(link.capacity.to_bits());
+    }
+    h.finish()
+}
+
+/// Fingerprint of an egress fabric (its [`EgressFabric::ident`]).
+pub fn egress_fingerprint(egress: &dyn EgressFabric) -> u128 {
+    let mut h = Fnv128::new();
+    h.write(b"egress|");
+    h.write(egress.ident().as_bytes());
+    h.finish()
+}
+
+/// Stable tag per collective kind (part of the on-disk-free key format;
+/// reordering the enum must not silently change keys).
+fn kind_tag(kind: CollectiveKind) -> u8 {
+    match kind {
+        CollectiveKind::AllReduce => 1,
+        CollectiveKind::ReduceScatter => 2,
+        CollectiveKind::AllGather => 3,
+        CollectiveKind::Reduce => 4,
+        CollectiveKind::Multicast => 5,
+        CollectiveKind::AllToAll => 6,
+        CollectiveKind::Unicast => 7,
+    }
+}
+
+/// Digest of one group, member order preserved (planners route by
+/// member position — inner order is real identity, see module docs).
+fn group_digest(group: &[NpuId]) -> u128 {
+    let mut h = Fnv128::new();
+    for &m in group {
+        h.write_u64(m as u64);
+    }
+    h.finish()
+}
+
+/// Canonical key of one concurrent on-wafer collective round: groups of
+/// size ≥ 2 (smaller ones are free and filtered identically by the
+/// pricer), outer list sorted by digest (exact permutation-invariance
+/// of the solver, see module docs), inner member order preserved.
+pub fn onwafer_key(
+    fabric_fp: u128,
+    kind: CollectiveKind,
+    groups: &[Vec<NpuId>],
+    bytes: f64,
+) -> u128 {
+    let mut digests: Vec<u128> =
+        groups.iter().filter(|g| g.len() > 1).map(|g| group_digest(g)).collect();
+    digests.sort_unstable();
+    let mut h = Fnv128::new();
+    h.write_u8(1);
+    h.write_u128(fabric_fp);
+    h.write_u8(kind_tag(kind));
+    h.write_u64(bytes.to_bits());
+    for d in digests {
+        h.write_u128(d);
+    }
+    h.finish()
+}
+
+/// Canonical key of the fleet-wide egress All-Reduce.
+pub fn allreduce_key(egress_fp: u128, wafer_bytes: f64) -> u128 {
+    let mut h = Fnv128::new();
+    h.write_u8(2);
+    h.write_u128(egress_fp);
+    h.write_u64(wafer_bytes.to_bits());
+    h.finish()
+}
+
+/// Canonical key of a concurrent subgroup All-Reduce round: multi-member
+/// wafer groups only, outer list sorted by digest, ring order within a
+/// group preserved.
+pub fn subgroup_key(egress_fp: u128, subgroups: &[Vec<usize>], wafer_bytes: f64) -> u128 {
+    let mut digests: Vec<u128> =
+        subgroups.iter().filter(|g| g.len() > 1).map(|g| group_digest(g)).collect();
+    digests.sort_unstable();
+    let mut h = Fnv128::new();
+    h.write_u8(3);
+    h.write_u128(egress_fp);
+    h.write_u64(wafer_bytes.to_bits());
+    for d in digests {
+        h.write_u128(d);
+    }
+    h.finish()
+}
+
+/// Canonical key of a concurrent p2p round: effective flows only
+/// (self-flows and empty payloads are free and skipped identically by
+/// the pricer), sorted by (src, dst, payload bits).
+pub fn p2p_key(egress_fp: u128, flows: &[P2pFlow]) -> u128 {
+    let mut recs: Vec<(u64, u64, u64)> = flows
+        .iter()
+        .filter(|f| f.bytes > 0.0 && f.src != f.dst)
+        .map(|f| (f.src as u64, f.dst as u64, f.bytes.to_bits()))
+        .collect();
+    recs.sort_unstable();
+    let mut h = Fnv128::new();
+    h.write_u8(4);
+    h.write_u128(egress_fp);
+    for (s, d, b) in recs {
+        h.write_u64(s);
+        h.write_u64(d);
+        h.write_u64(b);
+    }
+    h.finish()
+}
+
+/// Memoizing form of [`onwafer_phase_time`]: replay the exact time for
+/// an identical (fabric, kind, pattern, bytes) round, solve and store
+/// otherwise. `memo: None` is the plain pricer — the `--phase-cache
+/// off` path, byte-identical by construction.
+pub fn onwafer_phase_time_memo(
+    fabric: &dyn Fabric,
+    kind: CollectiveKind,
+    groups: &[Vec<NpuId>],
+    bytes: f64,
+    memo: Option<&CollHandle>,
+) -> Result<f64, FluidError> {
+    let Some(m) = memo else {
+        return onwafer_phase_time(fabric, kind, groups, bytes);
+    };
+    // Free rounds take the pricer's early-outs directly; table traffic
+    // for structurally-zero phases would only dilute the stats.
+    if bytes <= 0.0 || !groups.iter().any(|g| g.len() > 1) {
+        return onwafer_phase_time(fabric, kind, groups, bytes);
+    }
+    let key = onwafer_key(m.onwafer_fp, kind, groups, bytes);
+    m.memo(CollTier::OnWafer, key, || onwafer_phase_time(fabric, kind, groups, bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::egress::EgressTopo;
+    use crate::fabric::mesh::Mesh2D;
+
+    #[test]
+    fn fnv_streaming_matches_the_pointcache_hash() {
+        // The streaming hasher must agree with the one-shot reference so
+        // the two fingerprint families share one hash identity.
+        let mut h = Fnv128::new();
+        h.write(b"abc|123");
+        assert_eq!(
+            h.finish(),
+            crate::coordinator::pointcache::fnv1a128(b"abc|123")
+        );
+        assert_eq!(Fnv128::new().finish(), crate::coordinator::pointcache::fnv1a128(b""));
+    }
+
+    #[test]
+    fn lookup_and_insert_roundtrip_with_stats() {
+        let t = CollTable::new();
+        let k = onwafer_key(7, CollectiveKind::AllReduce, &[vec![0, 1]], 1e6);
+        assert_eq!(t.lookup(CollTier::OnWafer, k), None);
+        t.insert(k, 0.125);
+        assert_eq!(t.lookup(CollTier::OnWafer, k), Some(0.125));
+        let s = t.stats();
+        assert_eq!(s.hits, [1, 0, 0]);
+        assert_eq!(s.misses, [1, 0, 0]);
+        assert_eq!(t.len(), 1);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn outer_permutation_is_invariant_inner_is_not() {
+        let a = vec![vec![0usize, 1, 2], vec![3, 4, 5]];
+        let b = vec![vec![3usize, 4, 5], vec![0, 1, 2]];
+        let c = vec![vec![0usize, 2, 1], vec![3, 4, 5]];
+        let k = |g: &[Vec<usize>]| onwafer_key(1, CollectiveKind::AllReduce, g, 1e6);
+        assert_eq!(k(&a), k(&b), "outer group order is canonicalized away");
+        assert_ne!(k(&a), k(&c), "inner member order is identity (ring routing)");
+    }
+
+    #[test]
+    fn singleton_groups_do_not_perturb_keys() {
+        // The pricer filters groups of size < 2; keys must too, so a
+        // pattern that differs only in free singletons replays the same
+        // solve.
+        let with = vec![vec![0usize, 1], vec![7]];
+        let without = vec![vec![0usize, 1]];
+        assert_eq!(
+            onwafer_key(1, CollectiveKind::AllGather, &with, 1e6),
+            onwafer_key(1, CollectiveKind::AllGather, &without, 1e6),
+        );
+    }
+
+    #[test]
+    fn keys_separate_kind_bytes_and_fabric() {
+        let g = vec![vec![0usize, 1, 2]];
+        let base = onwafer_key(1, CollectiveKind::AllReduce, &g, 1e6);
+        assert_ne!(base, onwafer_key(1, CollectiveKind::ReduceScatter, &g, 1e6));
+        assert_ne!(base, onwafer_key(1, CollectiveKind::AllReduce, &g, 2e6));
+        assert_ne!(base, onwafer_key(2, CollectiveKind::AllReduce, &g, 1e6));
+    }
+
+    #[test]
+    fn p2p_keys_canonicalize_order_and_free_flows() {
+        let a = vec![P2pFlow::new(0, 1, 1e6), P2pFlow::new(2, 3, 2e6)];
+        let b = vec![
+            P2pFlow::new(2, 3, 2e6),
+            P2pFlow::new(0, 1, 1e6),
+            P2pFlow::new(1, 1, 5e6), // self-flow: free, skipped by the pricer
+            P2pFlow::new(0, 2, 0.0), // empty payload: likewise
+        ];
+        assert_eq!(p2p_key(9, &a), p2p_key(9, &b));
+        let c = vec![P2pFlow::new(0, 1, 1e6), P2pFlow::new(2, 3, 3e6)];
+        assert_ne!(p2p_key(9, &a), p2p_key(9, &c));
+    }
+
+    #[test]
+    fn mesh_orientation_and_latency_change_the_fabric_fingerprint() {
+        // 5x4 and 4x5 meshes have identical link-count/capacity
+        // multisets but different routing; hop latency lives in plan
+        // serial latency, not the link graph. Both must still separate.
+        let a = fabric_fingerprint(&Mesh2D::new(5, 4, 1e12, 1e11, 20e-9));
+        let b = fabric_fingerprint(&Mesh2D::new(4, 5, 1e12, 1e11, 20e-9));
+        let c = fabric_fingerprint(&Mesh2D::new(5, 4, 1e12, 1e11, 40e-9));
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn egress_fingerprints_separate_topo_shape_and_knobs() {
+        let ring = EgressTopo::Ring.build(4, 1e12, 1e-6);
+        let tree = EgressTopo::Tree.build(4, 1e12, 1e-6);
+        let slow = EgressTopo::Ring.build(4, 1e12, 2e-6);
+        let wide = EgressTopo::Ring.build(8, 1e12, 1e-6);
+        let base = egress_fingerprint(ring.as_ref());
+        assert_ne!(base, egress_fingerprint(tree.as_ref()));
+        assert_ne!(base, egress_fingerprint(slow.as_ref()));
+        assert_ne!(base, egress_fingerprint(wide.as_ref()));
+    }
+
+    #[test]
+    fn memo_replays_the_exact_bits() {
+        let fabric = Mesh2D::paper_baseline();
+        let scale = crate::fabric::scaleout::ScaleOut::single();
+        let handle =
+            CollHandle::new(Arc::new(CollTable::new()), &fabric, scale.fabric());
+        let groups = vec![(0..10usize).collect::<Vec<_>>()];
+        let cold = onwafer_phase_time_memo(
+            &fabric,
+            CollectiveKind::AllReduce,
+            &groups,
+            64e6,
+            Some(&handle),
+        )
+        .unwrap();
+        let warm = onwafer_phase_time_memo(
+            &fabric,
+            CollectiveKind::AllReduce,
+            &groups,
+            64e6,
+            Some(&handle),
+        )
+        .unwrap();
+        let plain =
+            onwafer_phase_time(&fabric, CollectiveKind::AllReduce, &groups, 64e6).unwrap();
+        assert_eq!(cold.to_bits(), plain.to_bits());
+        assert_eq!(warm.to_bits(), plain.to_bits());
+        let s = handle.table().stats();
+        assert_eq!(s.hits[CollTier::OnWafer as usize], 1);
+        assert_eq!(s.misses[CollTier::OnWafer as usize], 1);
+    }
+}

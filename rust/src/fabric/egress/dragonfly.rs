@@ -204,6 +204,19 @@ impl EgressFabric for Dragonfly {
         self.latency
     }
 
+    fn ident(&self) -> String {
+        // group_size is derived from the wafer count today, but it is
+        // routing identity — encode it so a future shaped constructor
+        // cannot silently collide in the collective-time tables.
+        format!(
+            "dragonfly|w{}|bw{:016x}|lat{:016x}|g{}",
+            self.wafers,
+            self.egress_bw.to_bits(),
+            self.latency.to_bits(),
+            self.group_size
+        )
+    }
+
     fn try_allreduce(&self, wafer_bytes: f64) -> Result<f64, FluidError> {
         if self.wafers <= 1 || wafer_bytes <= 0.0 {
             return Ok(0.0);

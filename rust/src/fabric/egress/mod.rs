@@ -56,6 +56,7 @@ pub use dragonfly::Dragonfly;
 pub use ring::Ring;
 pub use tree::SwitchedTree;
 
+use super::colltable::{allreduce_key, p2p_key, subgroup_key, CollHandle, CollTier};
 use super::fluid::{FluidError, FluidSim, LinkId, Transfer};
 use super::topology::{CollectiveKind, Fabric, NpuId, Plan};
 use crate::util::units::GBPS;
@@ -161,6 +162,23 @@ pub trait EgressFabric: std::fmt::Debug + Send + Sync {
         self.wafers() <= 1
     }
 
+    /// Canonical identity string for the collective-time tables
+    /// ([`super::colltable`]). The default covers the trait-level
+    /// operating point (topology family, fleet size, egress bandwidth,
+    /// hop latency); implementations with extra shape parameters (tree
+    /// radix / oversubscription, dragonfly group size) **must** override
+    /// it to append them, or differently-shaped fleets would replay each
+    /// other's times.
+    fn ident(&self) -> String {
+        format!(
+            "{}|w{}|bw{:016x}|lat{:016x}",
+            self.topo().name(),
+            self.wafers(),
+            self.egress_bw().to_bits(),
+            self.latency().to_bits()
+        )
+    }
+
     /// Time for the cross-wafer All-Reduce on `wafer_bytes` distinct
     /// reduced bytes held per wafer, priced over the link graph. Zero for
     /// a single wafer or non-positive payload.
@@ -217,6 +235,62 @@ pub trait EgressFabric: std::fmt::Debug + Send + Sync {
             total += self.try_concurrent_p2p(&flows)?;
         }
         Ok(total)
+    }
+
+    /// Memoizing form of [`Self::try_allreduce`]: replay the exact time
+    /// for an identical (fabric identity, payload) pair from the shared
+    /// collective-time table, solve and store otherwise. `memo: None`
+    /// is the plain method — the `--phase-cache off` path.
+    fn try_allreduce_memo(
+        &self,
+        wafer_bytes: f64,
+        memo: Option<&CollHandle>,
+    ) -> Result<f64, FluidError> {
+        let Some(m) = memo else { return self.try_allreduce(wafer_bytes) };
+        if self.is_single() || wafer_bytes <= 0.0 {
+            return self.try_allreduce(wafer_bytes);
+        }
+        let key = allreduce_key(m.egress_fp(), wafer_bytes);
+        m.memo(CollTier::Egress, key, || self.try_allreduce(wafer_bytes))
+    }
+
+    /// Memoizing form of [`Self::try_concurrent_p2p`] (flows are
+    /// canonicalized — free flows dropped, order sorted away — exactly
+    /// as the pricer treats them).
+    fn try_concurrent_p2p_memo(
+        &self,
+        flows: &[P2pFlow],
+        memo: Option<&CollHandle>,
+    ) -> Result<f64, FluidError> {
+        let Some(m) = memo else { return self.try_concurrent_p2p(flows) };
+        if !flows.iter().any(|f| f.bytes > 0.0 && f.src != f.dst) {
+            return self.try_concurrent_p2p(flows);
+        }
+        let key = p2p_key(m.egress_fp(), flows);
+        m.memo(CollTier::P2p, key, || self.try_concurrent_p2p(flows))
+    }
+
+    /// Memoizing form of [`Self::try_subgroup_allreduce`]. The whole
+    /// round is one table entry (coarser than memoizing its internal
+    /// ring steps — one lookup replays all `2·(k-1)` serialized p2p
+    /// rounds).
+    fn try_subgroup_allreduce_memo(
+        &self,
+        subgroups: &[Vec<usize>],
+        wafer_bytes: f64,
+        memo: Option<&CollHandle>,
+    ) -> Result<f64, FluidError> {
+        let Some(m) = memo else {
+            return self.try_subgroup_allreduce(subgroups, wafer_bytes);
+        };
+        if wafer_bytes <= 0.0 || self.is_single() || !subgroups.iter().any(|g| g.len() > 1)
+        {
+            return self.try_subgroup_allreduce(subgroups, wafer_bytes);
+        }
+        let key = subgroup_key(m.egress_fp(), subgroups, wafer_bytes);
+        m.memo(CollTier::Egress, key, || {
+            self.try_subgroup_allreduce(subgroups, wafer_bytes)
+        })
     }
 
     /// Clone into a boxed trait object (egress fabrics are immutable

@@ -147,6 +147,17 @@ impl EgressFabric for SwitchedTree {
         self.latency
     }
 
+    fn ident(&self) -> String {
+        format!(
+            "tree|w{}|bw{:016x}|lat{:016x}|radix{}|oversub{:016x}",
+            self.wafers,
+            self.egress_bw.to_bits(),
+            self.latency.to_bits(),
+            self.radix,
+            self.oversub.to_bits()
+        )
+    }
+
     fn try_allreduce(&self, wafer_bytes: f64) -> Result<f64, FluidError> {
         if self.wafers <= 1 || wafer_bytes <= 0.0 {
             return Ok(0.0);

@@ -506,6 +506,20 @@ impl Fabric for FredFabric {
         self.variant.name().to_string()
     }
 
+    fn ident(&self) -> String {
+        format!(
+            "fred|{}|{}x{}|io{}|npu{:016x}|iobw{:016x}|trunk{:016x}|hop{:016x}",
+            self.variant.name(),
+            self.groups.len(),
+            self.groups.first().map_or(0, Vec::len),
+            self.io.len(),
+            self.npu_bw.to_bits(),
+            self.io_bw.to_bits(),
+            self.trunk_bw.to_bits(),
+            self.hop_latency.to_bits()
+        )
+    }
+
     fn npu_count(&self) -> usize {
         self.npu_l1.len()
     }

@@ -521,6 +521,17 @@ impl Fabric for Mesh2D {
         format!("2D-Mesh {}x{}", self.rows, self.cols)
     }
 
+    fn ident(&self) -> String {
+        format!(
+            "mesh|{}x{}|link{:016x}|io{:016x}|hop{:016x}",
+            self.rows,
+            self.cols,
+            self.link_bw.to_bits(),
+            self.io_bw.to_bits(),
+            self.hop_latency.to_bits()
+        )
+    }
+
     fn npu_count(&self) -> usize {
         self.rows * self.cols
     }

@@ -23,9 +23,14 @@
 //!   [`egress`] fabric with hierarchical collectives (reduce-scatter
 //!   on-wafer → all-reduce across wafers → all-gather on-wafer) and
 //!   cross-wafer pipeline-boundary transfers.
+//! * [`colltable`] — shared collective-time tables memoizing exact
+//!   fluid-solver results (keyed on fabric identity + canonical pattern
+//!   + payload bits) within a point, across points, and across sweep
+//!   workers.
 //! * [`topology`] — the `Fabric` trait the coordinator schedules against.
 
 pub mod collectives;
+pub mod colltable;
 pub mod egress;
 pub mod fluid;
 pub mod fred;
@@ -33,6 +38,7 @@ pub mod mesh;
 pub mod scaleout;
 pub mod topology;
 
+pub use colltable::{CollHandle, CollStats, CollTable, CollTier};
 pub use egress::{EgressFabric, EgressTopo, P2pFlow};
 pub use fluid::{FluidError, FluidSim, Link, LinkId, Network, Transfer};
 pub use scaleout::ScaleOut;

@@ -28,7 +28,8 @@
 //! monotonicity in the egress bandwidth and the ring fabric's bit-exact
 //! match to PR 2's analytic formula.
 
-use super::egress::{onwafer_phase_time, EgressFabric, EgressTopo, P2pFlow};
+use super::colltable::{onwafer_phase_time_memo, CollHandle};
+use super::egress::{EgressFabric, EgressTopo, P2pFlow};
 use super::fluid::FluidError;
 use super::topology::{CollectiveKind, Fabric, NpuId};
 
@@ -116,14 +117,34 @@ impl ScaleOut {
 
     /// Fallible form of [`Self::cross_allreduce_time`].
     pub fn try_cross_allreduce(&self, wafer_bytes: f64) -> Result<f64, FluidError> {
-        self.fabric.try_allreduce(wafer_bytes)
+        self.try_cross_allreduce_memo(wafer_bytes, None)
+    }
+
+    /// [`Self::try_cross_allreduce`] through the shared collective-time
+    /// table ([`super::colltable`]); `None` prices directly.
+    pub fn try_cross_allreduce_memo(
+        &self,
+        wafer_bytes: f64,
+        memo: Option<&CollHandle>,
+    ) -> Result<f64, FluidError> {
+        self.fabric.try_allreduce_memo(wafer_bytes, memo)
     }
 
     /// Completion time of the slowest of `flows` (cross-wafer
     /// point-to-point stage transfers) running concurrently over the
     /// egress link graph.
     pub fn try_boundary_p2p(&self, flows: &[P2pFlow]) -> Result<f64, FluidError> {
-        self.fabric.try_concurrent_p2p(flows)
+        self.try_boundary_p2p_memo(flows, None)
+    }
+
+    /// [`Self::try_boundary_p2p`] through the shared collective-time
+    /// table; `None` prices directly.
+    pub fn try_boundary_p2p_memo(
+        &self,
+        flows: &[P2pFlow],
+        memo: Option<&CollHandle>,
+    ) -> Result<f64, FluidError> {
+        self.fabric.try_concurrent_p2p_memo(flows, memo)
     }
 
     /// Concurrent All-Reduces over disjoint `wafer_groups` (the mixed
@@ -135,7 +156,18 @@ impl ScaleOut {
         wafer_groups: &[Vec<usize>],
         wafer_bytes: f64,
     ) -> Result<f64, FluidError> {
-        self.fabric.try_subgroup_allreduce(wafer_groups, wafer_bytes)
+        self.try_subgroup_allreduce_memo(wafer_groups, wafer_bytes, None)
+    }
+
+    /// [`Self::try_subgroup_allreduce`] through the shared
+    /// collective-time table; `None` prices directly.
+    pub fn try_subgroup_allreduce_memo(
+        &self,
+        wafer_groups: &[Vec<usize>],
+        wafer_bytes: f64,
+        memo: Option<&CollHandle>,
+    ) -> Result<f64, FluidError> {
+        self.fabric.try_subgroup_allreduce_memo(wafer_groups, wafer_bytes, memo)
     }
 
     /// Hierarchical All-Reduce over concurrent on-wafer `groups` (each a
@@ -143,7 +175,7 @@ impl ScaleOut {
     /// of the fleet) with `bytes` per member: on-wafer Reduce-Scatter,
     /// cross-wafer All-Reduce on the `groups.len() · bytes` distinct
     /// reduced bytes each wafer then holds, on-wafer All-Gather. The
-    /// on-wafer phases go through [`onwafer_phase_time`], the single
+    /// on-wafer phases go through [`super::egress::onwafer_phase_time`], the single
     /// shared implementation the simulator's phase pricing also uses.
     ///
     /// With `wafers == 1` this plans a plain on-wafer All-Reduce instead,
@@ -156,6 +188,21 @@ impl ScaleOut {
     ) -> Result<f64, FluidError> {
         let all: Vec<usize> = (0..self.wafers()).collect();
         self.hierarchical_allreduce_grouped(fabric, groups, bytes, &[all])
+    }
+
+    /// [`Self::hierarchical_allreduce`] through the shared
+    /// collective-time table; `None` prices directly.
+    pub fn hierarchical_allreduce_memo(
+        &self,
+        fabric: &dyn Fabric,
+        groups: &[Vec<NpuId>],
+        bytes: f64,
+        memo: Option<&CollHandle>,
+    ) -> Result<f64, FluidError> {
+        let all: Vec<usize> = (0..self.wafers()).collect();
+        Ok(self
+            .hierarchical_allreduce_grouped_phases_memo(fabric, groups, bytes, &[all], memo)?
+            .total())
     }
 
     /// [`Self::hierarchical_allreduce`] with an explicit cross-wafer
@@ -196,16 +243,36 @@ impl ScaleOut {
         bytes: f64,
         wafer_groups: &[Vec<usize>],
     ) -> Result<HierRound, FluidError> {
+        self.hierarchical_allreduce_grouped_phases_memo(fabric, groups, bytes, wafer_groups, None)
+    }
+
+    /// [`Self::hierarchical_allreduce_grouped_phases`] through the shared
+    /// collective-time table: each of the three phases (on-wafer RS,
+    /// cross-wafer All-Reduce, on-wafer AG) is memoized independently, so
+    /// schedules that share the on-wafer group structure but differ in
+    /// the cross-wafer layout (or vice versa) still reuse the common
+    /// solves. `None` prices directly.
+    pub fn hierarchical_allreduce_grouped_phases_memo(
+        &self,
+        fabric: &dyn Fabric,
+        groups: &[Vec<NpuId>],
+        bytes: f64,
+        wafer_groups: &[Vec<usize>],
+        memo: Option<&CollHandle>,
+    ) -> Result<HierRound, FluidError> {
         if bytes <= 0.0 || groups.is_empty() {
             return Ok(HierRound::fused(0.0));
         }
         if self.is_single() || !wafer_groups.iter().any(|g| g.len() > 1) {
-            let ar = onwafer_phase_time(fabric, CollectiveKind::AllReduce, groups, bytes)?;
+            let ar =
+                onwafer_phase_time_memo(fabric, CollectiveKind::AllReduce, groups, bytes, memo)?;
             return Ok(HierRound::fused(ar));
         }
-        let rs = onwafer_phase_time(fabric, CollectiveKind::ReduceScatter, groups, bytes)?;
-        let ag = onwafer_phase_time(fabric, CollectiveKind::AllGather, groups, bytes)?;
-        let cross = self.try_subgroup_allreduce(wafer_groups, groups.len() as f64 * bytes)?;
+        let rs =
+            onwafer_phase_time_memo(fabric, CollectiveKind::ReduceScatter, groups, bytes, memo)?;
+        let ag = onwafer_phase_time_memo(fabric, CollectiveKind::AllGather, groups, bytes, memo)?;
+        let cross =
+            self.try_subgroup_allreduce_memo(wafer_groups, groups.len() as f64 * bytes, memo)?;
         Ok(HierRound { rs, cross, ag, fused: false })
     }
 }

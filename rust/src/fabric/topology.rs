@@ -117,6 +117,15 @@ pub trait Fabric: Send + Sync {
     /// Short name for reports ("2D-Mesh", "FRED-C", ...).
     fn name(&self) -> String;
 
+    /// Canonical identity string for the collective-time tables
+    /// ([`super::colltable`]): must encode **every** constructor
+    /// parameter that affects planning or link capacities (shape,
+    /// per-tier bandwidths, hop latency), so two fabrics share memoized
+    /// phase times only when they would price every collective
+    /// identically. Display names are not enough — a 5×4 and a 4×5 mesh
+    /// share link-capacity multisets but route differently.
+    fn ident(&self) -> String;
+
     /// Number of NPUs on the wafer.
     fn npu_count(&self) -> usize;
 

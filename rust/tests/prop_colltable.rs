@@ -1,0 +1,291 @@
+//! Property/invariant wall for the collective-time table (`--phase-cache`):
+//! the memoized sweep must render byte-identical documents to the
+//! unmemoized one at any thread count, the canonical keys must be exactly
+//! as coarse as the fluid solver's real identity (permutation-invariant
+//! over concurrent groups, sensitive to everything else), and the solver
+//! itself must behave like the pure function the exact-key replay assumes.
+//!
+//! Why exact-key replay is sound: a table hit replays a previously solved
+//! f64 for a key that hashes *every* input the solver reads — the fabric
+//! identity (constructor params + the link graph), the collective kind,
+//! the canonicalized group pattern, and the payload's exact bit pattern
+//! (`f64::to_bits`). The solver is deterministic and reads nothing else,
+//! so the replayed value is the value a fresh solve would produce, bit
+//! for bit. The only coarsening the key performs — sorting the *outer*
+//! list of concurrent groups/flows — is exactly the invariance the
+//! max-min-fair solver has (fair shares per bottleneck round don't
+//! depend on user order; see `fabric/colltable.rs` module docs). The
+//! tests below pin each half of that argument.
+
+use fred::coordinator::config::FabricKind;
+use fred::coordinator::parallelism::WaferSpan;
+use fred::coordinator::stagegraph::PipeSchedule;
+use fred::coordinator::sweep::{run_sweep_with, SweepConfig, SweepOptions, WaferDims};
+use fred::coordinator::workload;
+use fred::fabric::colltable::{
+    allreduce_key, egress_fingerprint, fabric_fingerprint, onwafer_key, p2p_key, subgroup_key,
+};
+use fred::fabric::egress::{P2pFlow, Ring, SwitchedTree};
+use fred::fabric::mesh::Mesh2D;
+use fred::fabric::{CollectiveKind, FluidSim, Network, Transfer};
+use fred::util::prop::check;
+
+// ------------------------------------------------------------------
+// 1. The headline contract: `--phase-cache off` is byte-identical.
+
+/// Memo-on vs memo-off over a multi-schedule multi-wafer cross-product
+/// (the densest phase-reuse shape: schedules share per-round collectives,
+/// wafer axes exercise the egress and p2p tiers) renders the same
+/// document byte for byte — at 1 worker and at 4, where the table is
+/// shared across work-stealing threads. Racing inserts are benign
+/// because both writers computed the same bits for the same key.
+#[test]
+fn phase_cache_off_is_byte_identical_at_threads_1_and_4() {
+    let mut cfg = SweepConfig {
+        workloads: vec![workload::transformer_17b()],
+        wafers: vec![WaferDims::PAPER],
+        fabrics: vec![FabricKind::FredD],
+        strategies: None,
+        max_strategies: 4,
+        bench_bytes: 100e6,
+        ..SweepConfig::default()
+    };
+    cfg.wafer_counts = vec![1, 2];
+    cfg.wafer_spans = vec![WaferSpan::Dp, WaferSpan::Pp];
+    cfg.schedules = vec![PipeSchedule::GPipe, PipeSchedule::OneF1B];
+    for threads in [1usize, 4] {
+        cfg.threads = threads;
+        let mut on_cfg = cfg.clone();
+        on_cfg.phase_cache = true;
+        let mut off_cfg = cfg.clone();
+        off_cfg.phase_cache = false;
+        let on = run_sweep_with(&on_cfg, &mut SweepOptions::default());
+        let off = run_sweep_with(&off_cfg, &mut SweepOptions::default());
+        assert_eq!(
+            on.report.to_json().render(),
+            off.report.to_json().render(),
+            "threads={threads}: --phase-cache on/off must render identical documents"
+        );
+        assert!(
+            off.stats.phase.is_none(),
+            "threads={threads}: phase_cache=false must not build a table"
+        );
+        let phase = on.stats.phase.expect("memoized run records stats");
+        assert!(
+            phase.total_hits() > 0,
+            "threads={threads}: a multi-schedule sweep must reuse phase solves \
+             (got {phase:?})"
+        );
+        assert!(
+            phase.total_misses() > 0,
+            "threads={threads}: every distinct phase is solved exactly once \
+             (got {phase:?})"
+        );
+    }
+}
+
+// ------------------------------------------------------------------
+// 2. Key canonicalization: invariant where the solver is, sensitive
+//    everywhere else.
+
+/// Outer group order is *not* identity (max-min fairness doesn't care
+/// which concurrent collective is listed first), inner member order *is*
+/// (planners route ring successors by position) — and every scalar knob
+/// in the key (bytes bits, kind, fabric) separates.
+#[test]
+fn onwafer_key_is_permutation_invariant_and_otherwise_sensitive() {
+    let mesh = Mesh2D::new(4, 5, 1e12, 0.5e12, 10e-9);
+    let fp = fabric_fingerprint(&mesh);
+    let groups: Vec<Vec<usize>> = vec![vec![0, 1, 2], vec![5, 6, 7], vec![10, 11]];
+    let base = onwafer_key(fp, CollectiveKind::AllReduce, &groups, 1e6);
+
+    // Permuting the outer list of concurrent groups: same key.
+    let shuffled: Vec<Vec<usize>> = vec![vec![10, 11], vec![0, 1, 2], vec![5, 6, 7]];
+    assert_eq!(
+        base,
+        onwafer_key(fp, CollectiveKind::AllReduce, &shuffled, 1e6),
+        "outer group order must canonicalize away"
+    );
+
+    // Singleton groups are free and filtered — adding one changes nothing.
+    let with_singleton: Vec<Vec<usize>> =
+        vec![vec![3], vec![0, 1, 2], vec![5, 6, 7], vec![10, 11]];
+    assert_eq!(
+        base,
+        onwafer_key(fp, CollectiveKind::AllReduce, &with_singleton, 1e6),
+        "free singleton groups must not perturb the key"
+    );
+
+    // Inner member order is real identity (ring step routing).
+    let reordered: Vec<Vec<usize>> = vec![vec![2, 1, 0], vec![5, 6, 7], vec![10, 11]];
+    assert_ne!(
+        base,
+        onwafer_key(fp, CollectiveKind::AllReduce, &reordered, 1e6),
+        "inner member order must stay in the key"
+    );
+
+    // Bytes separate down to the bit pattern.
+    assert_ne!(base, onwafer_key(fp, CollectiveKind::AllReduce, &groups, 2e6));
+    assert_ne!(
+        base,
+        onwafer_key(fp, CollectiveKind::AllReduce, &groups, f64::from_bits(1e6f64.to_bits() + 1)),
+        "adjacent f64 bit patterns must key separately"
+    );
+
+    // Kind and fabric identity separate.
+    assert_ne!(base, onwafer_key(fp, CollectiveKind::ReduceScatter, &groups, 1e6));
+    let other = Mesh2D::new(4, 5, 1e12, 0.5e12, 20e-9);
+    assert_ne!(
+        base,
+        onwafer_key(fabric_fingerprint(&other), CollectiveKind::AllReduce, &groups, 1e6),
+        "a latency knob must change the fabric fingerprint"
+    );
+}
+
+/// The fabric/egress fingerprints encode every pricing knob: bandwidth,
+/// latency, shape. Two independently constructed but identical fabrics
+/// collide (that's the cross-point reuse), any knob tweak separates.
+#[test]
+fn fingerprints_separate_latency_and_bandwidth_knobs() {
+    let mesh = Mesh2D::new(4, 5, 1e12, 0.5e12, 10e-9);
+    assert_eq!(
+        fabric_fingerprint(&mesh),
+        fabric_fingerprint(&Mesh2D::new(4, 5, 1e12, 0.5e12, 10e-9)),
+        "identical construction must share a fingerprint (cross-point reuse)"
+    );
+    for other in [
+        Mesh2D::new(4, 5, 2e12, 0.5e12, 10e-9), // link bandwidth
+        Mesh2D::new(4, 5, 1e12, 0.6e12, 10e-9), // io bandwidth
+        Mesh2D::new(4, 5, 1e12, 0.5e12, 11e-9), // hop latency
+        Mesh2D::new(5, 4, 1e12, 0.5e12, 10e-9), // shape
+    ] {
+        assert_ne!(fabric_fingerprint(&mesh), fabric_fingerprint(&other));
+    }
+
+    let ring = Ring::new(4, 1.5e12, 1e-6);
+    assert_eq!(egress_fingerprint(&ring), egress_fingerprint(&Ring::new(4, 1.5e12, 1e-6)));
+    for other in [
+        Ring::new(4, 1.5e12, 2e-6), // latency knob
+        Ring::new(4, 3.0e12, 1e-6), // bandwidth knob
+        Ring::new(8, 1.5e12, 1e-6), // fleet size
+    ] {
+        let (a, b) = (egress_fingerprint(&ring), egress_fingerprint(&other));
+        assert_ne!(a, b, "ring knob must separate egress fingerprints");
+        assert_ne!(
+            allreduce_key(a, 1e9),
+            allreduce_key(b, 1e9),
+            "and therefore the All-Reduce keys"
+        );
+    }
+    // Topology family separates even at equal scalar knobs, and the
+    // tree's shape parameters are part of its identity.
+    let tree = SwitchedTree::new(4, 1.5e12, 1e-6);
+    assert_ne!(egress_fingerprint(&ring), egress_fingerprint(&tree));
+    let reshaped = SwitchedTree::with_shape(4, 1.5e12, 1e-6, 2, 2.0);
+    assert_ne!(egress_fingerprint(&tree), egress_fingerprint(&reshaped));
+}
+
+/// P2p rounds canonicalize like on-wafer rounds: flow list order sorts
+/// away, structurally-free flows (zero bytes, self loops) filter away,
+/// payload bits and endpoints stay.
+#[test]
+fn p2p_and_subgroup_keys_canonicalize_free_traffic() {
+    let fp = egress_fingerprint(&Ring::new(4, 1.5e12, 1e-6));
+    let flows =
+        vec![P2pFlow::new(0, 1, 1e6), P2pFlow::new(2, 3, 2e6), P2pFlow::new(3, 0, 5e5)];
+    let base = p2p_key(fp, &flows);
+    let shuffled =
+        vec![P2pFlow::new(3, 0, 5e5), P2pFlow::new(0, 1, 1e6), P2pFlow::new(2, 3, 2e6)];
+    assert_eq!(base, p2p_key(fp, &shuffled), "flow order must sort away");
+    let with_free = vec![
+        P2pFlow::new(0, 1, 1e6),
+        P2pFlow::new(1, 1, 7e6), // self loop: free
+        P2pFlow::new(2, 3, 2e6),
+        P2pFlow::new(1, 2, 0.0), // empty payload: free
+        P2pFlow::new(3, 0, 5e5),
+    ];
+    assert_eq!(base, p2p_key(fp, &with_free), "free flows must filter away");
+    let heavier =
+        vec![P2pFlow::new(0, 1, 1e6), P2pFlow::new(2, 3, 3e6), P2pFlow::new(3, 0, 5e5)];
+    assert_ne!(base, p2p_key(fp, &heavier));
+
+    let sub = subgroup_key(fp, &[vec![0, 2], vec![1, 3]], 1e9);
+    assert_eq!(
+        sub,
+        subgroup_key(fp, &[vec![1, 3], vec![0, 2]], 1e9),
+        "subgroup outer order must canonicalize away"
+    );
+    assert_eq!(
+        sub,
+        subgroup_key(fp, &[vec![0, 2], vec![1, 3], vec![2]], 1e9),
+        "singleton wafer groups are free"
+    );
+    assert_ne!(sub, subgroup_key(fp, &[vec![2, 0], vec![1, 3]], 1e9), "ring order matters");
+    assert_ne!(sub, subgroup_key(fp, &[vec![0, 2], vec![1, 3]], 2e9));
+}
+
+// ------------------------------------------------------------------
+// 3. The solver side of the soundness argument.
+
+/// The fluid solver is a pure function with the homogeneity the key
+/// format assumes: re-running an identical transfer set reproduces the
+/// makespan bit for bit (what a table hit replays), and scaling every
+/// payload by `k` scales the makespan by exactly `k` — rates depend
+/// only on the link-share structure, never on absolute byte counts, so
+/// hashing the exact payload bits neither over- nor under-merges.
+#[test]
+fn fluid_solver_replays_exactly_and_scales_linearly_in_bytes() {
+    check(
+        "fluid-scale-invariance",
+        0xC011,
+        64,
+        |rng| {
+            // A 4-link network with 2-5 transfers over random link
+            // subsets and payloads: enough to produce shared bottlenecks
+            // and multi-round progressive filling.
+            let n_transfers = rng.range(2, 6);
+            let transfers: Vec<(Vec<usize>, f64)> = (0..n_transfers)
+                .map(|_| {
+                    let n_links = rng.range(1, 4);
+                    let links = (0..n_links).map(|_| rng.range(0, 4)).collect();
+                    (links, 1e5 + rng.next_f64() * 1e8)
+                })
+                .collect();
+            let k = 0.25 + rng.next_f64() * 8.0;
+            (transfers, k)
+        },
+        |(specs, k)| {
+            let mut net = Network::new();
+            let links: Vec<_> =
+                (0..4).map(|i| net.add_link(format!("l{i}"), 1e12 * (i + 1) as f64)).collect();
+            let sim = FluidSim::new(net);
+            let build = |scale: f64| -> Vec<Transfer> {
+                specs
+                    .iter()
+                    .enumerate()
+                    .map(|(plan, (ls, bytes))| {
+                        Transfer::new(ls.iter().map(|&l| links[l]).collect(), bytes * scale, plan)
+                    })
+                    .collect()
+            };
+            let a = sim.try_run(&build(1.0)).map_err(|e| e.to_string())?;
+            let replay = sim.try_run(&build(1.0)).map_err(|e| e.to_string())?;
+            if a.makespan.to_bits() != replay.makespan.to_bits() {
+                return Err(format!(
+                    "identical inputs must solve to identical bits: {} vs {}",
+                    a.makespan, replay.makespan
+                ));
+            }
+            let scaled = sim.try_run(&build(*k)).map_err(|e| e.to_string())?;
+            let expect = a.makespan * k;
+            let rel = (scaled.makespan - expect).abs() / expect.max(1e-300);
+            if rel > 1e-9 {
+                return Err(format!(
+                    "makespan must scale linearly: {} * {k} = {expect}, got {} (rel {rel:e})",
+                    a.makespan, scaled.makespan
+                ));
+            }
+            Ok(())
+        },
+    );
+}

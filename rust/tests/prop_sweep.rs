@@ -156,8 +156,8 @@ fn infeasible_strategies_are_skipped_not_fatal() {
 fn thread_count_never_changes_sweep_output() {
     // The determinism contract of the sharded executor: any thread count
     // yields the same rendered JSON, including across the multi-wafer
-    // scale-out axis. (FRED_SWEEP_THREADS, if set, forces all runs to
-    // the same count — the assertion still holds.)
+    // scale-out axis. (Each run pins `threads` explicitly, which takes
+    // precedence over the deprecated FRED_SWEEP_THREADS env var.)
     let mut cfg = small_cfg(vec![FabricKind::Baseline, FabricKind::FredD], 5);
     cfg.wafer_counts = vec![1, 2, 4];
     let mut renders = Vec::new();

@@ -193,9 +193,9 @@ fn sweep_cli_rejects_bad_input_with_usage_errors() {
     }
 }
 
-/// Raw stdout bytes of a `fred sweep` invocation (asserting success),
-/// with any extra environment applied.
-fn run_sweep_stdout(args: &[&str], envs: &[(&str, &str)]) -> Vec<u8> {
+/// Raw (stdout, stderr) of a `fred sweep` invocation (asserting
+/// success), with any extra environment applied.
+fn run_sweep_output(args: &[&str], envs: &[(&str, &str)]) -> (Vec<u8>, String) {
     let mut cmd = Command::new(env!("CARGO_BIN_EXE_fred"));
     cmd.arg("sweep").args(args);
     for (k, v) in envs {
@@ -207,14 +207,21 @@ fn run_sweep_stdout(args: &[&str], envs: &[(&str, &str)]) -> Vec<u8> {
         "sweep failed: {}",
         String::from_utf8_lossy(&out.stderr)
     );
-    out.stdout
+    (out.stdout, String::from_utf8_lossy(&out.stderr).into_owned())
+}
+
+/// Stdout-only convenience over [`run_sweep_output`].
+fn run_sweep_stdout(args: &[&str], envs: &[(&str, &str)]) -> Vec<u8> {
+    run_sweep_output(args, envs).0
 }
 
 #[test]
 fn threaded_sweep_is_byte_identical_to_single_thread() {
     // The determinism wall: the same multi-wafer sweep forced onto one
-    // thread (either via --threads 1 or the FRED_SWEEP_THREADS override)
-    // must produce byte-identical JSON to a many-thread run.
+    // thread must produce byte-identical JSON to a many-thread run —
+    // and the `--threads`-beats-`FRED_SWEEP_THREADS` precedence is
+    // observable through the deprecation warning, which fires only when
+    // the env var is actually consulted (flag absent).
     let args = [
         "--models",
         "resnet152",
@@ -232,12 +239,27 @@ fn threaded_sweep_is_byte_identical_to_single_thread() {
         v.push(n);
         v
     };
-    let single = run_sweep_stdout(&with_threads("1"), &[("FRED_SWEEP_THREADS", "1")]);
+    let single = run_sweep_stdout(&with_threads("1"), &[]);
     let threaded = run_sweep_stdout(&with_threads("4"), &[]);
     assert_eq!(single, threaded, "--threads must not change output bytes");
-    // Env override wins over the flag and still matches.
-    let env_forced = run_sweep_stdout(&with_threads("8"), &[("FRED_SWEEP_THREADS", "1")]);
-    assert_eq!(single, env_forced, "FRED_SWEEP_THREADS=1 must force the same bytes");
+    // An explicit --threads takes precedence over the deprecated env
+    // var: output still matches (thread count never changes bytes), and
+    // because the env is never consulted no deprecation warning appears.
+    let (flag_wins, stderr) =
+        run_sweep_output(&with_threads("8"), &[("FRED_SWEEP_THREADS", "1")]);
+    assert_eq!(single, flag_wins, "--threads 8 with env set must match the same bytes");
+    assert!(
+        !stderr.contains("FRED_SWEEP_THREADS is deprecated"),
+        "an explicit --threads must silence the env deprecation warning:\n{stderr}"
+    );
+    // Without the flag the env is still honored — with the one-time
+    // deprecation warning on stderr.
+    let (env_only, stderr) = run_sweep_output(&args, &[("FRED_SWEEP_THREADS", "1")]);
+    assert_eq!(single, env_only, "FRED_SWEEP_THREADS=1 without --threads must match");
+    assert!(
+        stderr.contains("FRED_SWEEP_THREADS is deprecated"),
+        "honoring the env var must warn:\n{stderr}"
+    );
 }
 
 #[test]
